@@ -1,0 +1,80 @@
+//! Using the public API with a *custom* SoC description: define your own
+//! vector-unit configuration (as a hardware team would for a design-space
+//! study), tune a layer on it, and inspect the chosen schedule + traces.
+//!
+//! ```sh
+//! cargo run --release --example custom_soc
+//! ```
+
+use rvv_tune::codegen::Scenario;
+use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::isa::InstrGroup;
+use rvv_tune::sim::{cache::CacheParams, SocConfig};
+use rvv_tune::tir::{DType, Op, Requant};
+
+fn main() {
+    // A hypothetical embedded SoC: VLEN=512, narrow 64-bit datapath, tiny
+    // 8 kB L1 / 128 kB L2, 50 MHz — nothing like the built-in presets.
+    let soc = SocConfig {
+        name: "custom-emb-512".to_string(),
+        vlen: 512,
+        clock_mhz: 50.0,
+        dlen: 64,
+        mem_width: 64,
+        issue_overhead: 1.5,
+        vsetvl_cost: 2.0,
+        reduction_base: 6.0,
+        slide_base: 2.0,
+        scalar_ipc: 0.7,
+        mem_overlap: 0.0,
+        strided_elems_per_cycle: 0.5,
+        cache: CacheParams {
+            line_bytes: 32,
+            l1_kb: 8,
+            l1_ways: 4,
+            l2_kb: 128,
+            l2_ways: 8,
+            l2_penalty: 10.0,
+            mem_penalty: 60.0,
+        },
+    };
+
+    // A BERT-tiny attention projection layer, int8.
+    let op = Op::Matmul {
+        m: 64,
+        n: 128,
+        k: 128,
+        dtype: DType::I8,
+        requant: Some(Requant::default_for_tests()),
+    };
+
+    let mut session = Session::new(soc, SessionOptions::default());
+    let outcome = session.tune(&op, 100).expect("tunable");
+    println!("custom SoC best schedule: {}", outcome.best.schedule.describe());
+    println!(
+        "latency: {:.1} us @ 50 MHz ({} cycles)",
+        session.soc.cycles_to_us(outcome.best.cycles),
+        outcome.best.cycles
+    );
+
+    // Trace inspection: where do the dynamic instructions go?
+    let r = session
+        .measure(&op, &Scenario::Ours(outcome.best.schedule.clone()))
+        .unwrap();
+    println!("\ninstruction trace:");
+    for g in InstrGroup::ALL {
+        let n = r.result.trace.get(g);
+        if n > 0 {
+            println!("  {:<10} {:>9} ({:.1}% of vector)", g.name(), n, r.result.trace.vector_share(g) * 100.0);
+        }
+    }
+    println!("code size: {} B", r.code_size_bytes);
+
+    // Compare against the fixed-schedule library on this unusual SoC.
+    let mu = session.measure(&op, &Scenario::MuRiscvNn).unwrap();
+    println!(
+        "\nmuRISCV-NN on the same SoC: {:.1} us  (tuned is {:.2}x faster)",
+        session.soc.cycles_to_us(mu.result.cycles),
+        mu.result.cycles / r.result.cycles
+    );
+}

@@ -1,0 +1,50 @@
+//! Quickstart: tune one QNN matmul on the simulated Saturn SoC and compare
+//! against every baseline of the paper.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use rvv_tune::codegen::Scenario;
+use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::sim::SocConfig;
+use rvv_tune::tir::DType;
+use rvv_tune::workloads::matmul;
+
+fn main() {
+    // A 128x128x128 int8 matmul with QNN requantization (paper §IV-A).
+    let op = matmul::matmul(128, DType::I8);
+    let soc = SocConfig::saturn(1024);
+    println!("workload: {op}   target: {} ({} MHz)", soc.name, soc.clock_mhz);
+
+    // The session owns the cost model (JAX/Pallas MLP via PJRT when
+    // `make artifacts` has run; heuristic otherwise), the tuning database,
+    // and the parallel measurement pool.
+    let mut session = Session::new(soc, SessionOptions::default());
+    println!("cost model: {}", session.model_kind());
+
+    // Tune with the paper's single-operator budget (100 trials).
+    let outcome = session.tune(&op, 100).expect("matmul is tunable");
+    println!(
+        "tuned in {} trials -> best schedule {}  ({} cycles)",
+        outcome.trials_measured,
+        outcome.best.schedule.describe(),
+        outcome.best.cycles,
+    );
+
+    // Compare all scenarios.
+    let ours = Scenario::Ours(outcome.best.schedule.clone());
+    println!("\n{:<16} {:>12} {:>10} {:>9}", "scenario", "cycles", "lat(us)", "speedup");
+    let base = session.measure(&op, &Scenario::ScalarOs).unwrap().result.cycles;
+    for sc in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn, ours] {
+        if let Some(r) = session.measure(&op, &sc) {
+            println!(
+                "{:<16} {:>12.0} {:>10.1} {:>8.2}x",
+                sc.name(),
+                r.result.cycles,
+                session.soc.cycles_to_us(r.result.cycles),
+                base / r.result.cycles
+            );
+        }
+    }
+}

@@ -1,0 +1,10 @@
+"""Build-time compile package (L1 Pallas kernels + L2 jax model + AOT).
+
+x64 must be enabled before any jax op: the QNN requantization oracle
+multiplies int32 accumulators by fixed-point multipliers (products up to
+~2^43), matching the rust simulator's exact i64 arithmetic.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,161 @@
+"""AOT lowering: every jax/pallas computation -> HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids, while `HloModuleProto::from_text_file` reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run `make artifacts` (or `python -m compile.aot --out ../artifacts`); rust
+loads the results via the manifest. Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import vmatmul
+
+# The paper's Algorithm-1 tile exported standalone: VL=256, J=32
+# (the VLEN=1024 f32 configuration).
+TILE_VL = 256
+TILE_J = 32
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(dtype):
+    return jnp.dtype(dtype).name
+
+
+def artifact_list():
+    """(name, fn, example_args) for every artifact."""
+    f32 = jnp.float32
+    d = model.FEATURE_DIM
+    h = model.HIDDEN
+    params_specs = [
+        _spec((d, h), f32),
+        _spec((h,), f32),
+        _spec((h, h), f32),
+        _spec((h,), f32),
+        _spec((h, 1), f32),
+        _spec((1,), f32),
+    ]
+    mom_specs = list(params_specs)
+    v = model.VAL_SIZE
+    i8, i32 = jnp.int8, jnp.int32
+
+    def fn_tuple(f):
+        # lower with tupled output so the rust side can to_tuple() uniformly
+        def wrapped(*args):
+            out = f(*args)
+            return out if isinstance(out, tuple) else (out,)
+
+        return wrapped
+
+    return [
+        (
+            "costmodel_init",
+            fn_tuple(model.init_params),
+            [_spec((), jnp.int32)],
+        ),
+        (
+            "costmodel_fwd",
+            fn_tuple(model.forward),
+            params_specs + [_spec((model.SCORE_BATCH, d), f32)],
+        ),
+        (
+            "costmodel_train",
+            fn_tuple(model.train_step),
+            params_specs
+            + mom_specs
+            + [_spec((model.TRAIN_BATCH, d), f32), _spec((model.TRAIN_BATCH,), f32)],
+        ),
+        (
+            "qmatmul_i8",
+            fn_tuple(model.qmatmul_i8),
+            [
+                _spec((v, v), i8),
+                _spec((v, v), i8),
+                _spec((v, v), i32),
+                _spec((), i32),
+                _spec((), i32),
+                _spec((), i32),
+            ],
+        ),
+        (
+            "matmul_f32",
+            fn_tuple(model.matmul_f32),
+            [_spec((v, v), f32)] * 3,
+        ),
+        (
+            "matmul_f16",
+            fn_tuple(model.matmul_f16),
+            [_spec((v, v), jnp.float16)] * 3,
+        ),
+        (
+            "vmatmul_tile_f32",
+            fn_tuple(lambda a, b, c: vmatmul.vmatmul(a, b, c, blk_k=64)),
+            [_spec((TILE_VL,), f32), _spec((TILE_J, TILE_VL), f32), _spec((TILE_J,), f32)],
+        ),
+        (
+            "vmacc_tile_f32",
+            fn_tuple(lambda a, b, c: vmatmul.vmacc(a, b, c, blk=64)),
+            [_spec((TILE_VL,), f32)] * 3,
+        ),
+    ]
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"feature_dim": model.FEATURE_DIM, "score_batch": model.SCORE_BATCH,
+                "train_batch": model.TRAIN_BATCH, "hidden": model.HIDDEN,
+                "val_size": model.VAL_SIZE, "tile_vl": TILE_VL, "tile_j": TILE_J,
+                "artifacts": []}
+    for name, fn, specs in artifact_list():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in specs
+                ],
+                "outputs": [
+                    {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                    for s in out_specs
+                ],
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

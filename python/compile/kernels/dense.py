@@ -1,0 +1,46 @@
+"""Pallas fused dense layer — the compute hot-spot of the cost model (L1).
+
+The cost model scores whole candidate populations per PJRT call, so its
+forward pass is batched (B=512). The dense kernel tiles the batch dimension
+into VMEM-sized blocks; weights are small (<=64x64) and stay resident per
+grid step. Fusing bias + ReLU into the kernel avoids two extra HBM round
+trips per layer.
+
+VMEM footprint per grid step (f32): blk_m*(IN + OUT) + IN*OUT + OUT floats;
+at blk_m=64, IN=OUT=64 that is ~36 KiB — comfortably under a TPU core's
+VMEM, leaving room for double buffering (see EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(relu, x_ref, w_ref, b_ref, o_ref):
+    y = x_ref[...] @ w_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(y, 0.0) if relu else y
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "blk_m"))
+def dense(x, w, b, *, relu=False, blk_m=64):
+    """relu?(x[B,IN] @ w[IN,OUT] + b[OUT]) with batch tiling."""
+    bsz, d_in = x.shape
+    d_in_w, d_out = w.shape
+    assert d_in == d_in_w and b.shape == (d_out,)
+    blk_m = min(blk_m, bsz)
+    assert bsz % blk_m == 0, "blk_m must divide batch"
+    grid = (bsz // blk_m,)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_m, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk_m, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, d_out), x.dtype),
+        interpret=True,
+    )(x, w, b)

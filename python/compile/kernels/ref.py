@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels and the QNN numerics.
+
+These are the single source of truth for correctness:
+
+* pytest checks every Pallas kernel against its oracle here;
+* the rust simulator's functional mode is validated against the AOT-lowered
+  versions of these graphs through PJRT (see rust/tests/integration_runtime.rs);
+* `requant` is the exact formula implemented by `sim::machine::requant_i64`.
+"""
+
+import jax.numpy as jnp
+
+
+def requant(acc, mult, shift, zp):
+    """QNN requantization: saturate(rounding_rshift(acc * mult, shift) + zp).
+
+    acc: int32 accumulator values; mult/shift/zp: python ints or i32 scalars.
+    Matches rust `sim::requant_i64` bit-for-bit.
+    """
+    prod = acc.astype(jnp.int64) * jnp.asarray(mult, jnp.int64)
+    rounded = (prod + (jnp.int64(1) << (jnp.asarray(shift, jnp.int64) - 1))) >> jnp.asarray(
+        shift, jnp.int64
+    )
+    out = rounded + jnp.asarray(zp, jnp.int64)
+    return jnp.clip(out, -128, 127).astype(jnp.int8)
+
+
+def vmatmul_ref(a, b, c):
+    """Algorithm 1 oracle: C[J] += B[J, VL] @ A[VL] (float or int32 accum)."""
+    if a.dtype == jnp.int8:
+        return c + b.astype(jnp.int32) @ a.astype(jnp.int32)
+    return c + b @ a
+
+
+def vmacc_ref(a, b, c):
+    """Algorithm 2 oracle: C[VL] += A[VL] * B[VL]."""
+    if a.dtype == jnp.int8:
+        return c + a.astype(jnp.int32) * b.astype(jnp.int32)
+    return c + a * b
+
+
+def dense_ref(x, w, b, relu):
+    """Dense layer oracle: relu?(x @ w + b)."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def mlp_ref(params, x):
+    """Cost-model MLP oracle (see model.py for the parameter layout)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = dense_ref(x, w1, b1, relu=True)
+    h = dense_ref(h, w2, b2, relu=True)
+    return dense_ref(h, w3, b3, relu=False)[:, 0]
+
+
+def qmatmul_ref(a, bt, d, mult, shift, zp):
+    """Paper §IV-A QNN matmul: requant(A[m,k] @ Bt[n,k].T + D[m,n]).
+
+    Bt is in weights layout [n, k] (the convention every rust codegen uses).
+    """
+    acc = a.astype(jnp.int32) @ bt.astype(jnp.int32).T + d
+    return requant(acc, mult, shift, zp)
+
+
+def matmul_f32_ref(a, bt, d):
+    """float matmul with bias: A[m,k] @ Bt[n,k].T + D."""
+    return a @ bt.T + d

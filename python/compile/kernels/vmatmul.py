@@ -1,0 +1,83 @@
+"""Pallas kernels for the paper's two tensor intrinsics (L1).
+
+Hardware adaptation (DESIGN.md §1): the paper's RVV insight — keep partial
+results in the vector register file, store once per output tile — maps to
+TPU/Pallas as *VMEM-resident accumulation across the reduction grid*:
+
+* `vmatmul` (Algorithm 1): the output tile C[J] lives in the same output
+  block for every k-step of the grid (BlockSpec index_map pins it), so the
+  accumulator never round-trips to HBM until the kernel finishes — the
+  VMEM analogue of the `vslideup` register accumulation;
+* the VL/LMUL chunking of the RVV implementation becomes the `blk_k`
+  HBM->VMEM schedule of the BlockSpec.
+
+All kernels run with `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower to plain HLO and are AOT-exported by aot.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmatmul_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One k-step: o[J] (+)= b[J, blk_k] @ a[blk_k], seeded with c at step 0."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += b_ref[...] @ a_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k",))
+def vmatmul(a, b, c, *, blk_k=None):
+    """Algorithm 1 as a Pallas kernel: C[J] += B[J, VL] @ A[VL] (f32).
+
+    `blk_k` is the VMEM chunk of the reduction dimension (defaults to the
+    whole VL — one grid step).
+    """
+    (vl,) = a.shape
+    j, vl_b = b.shape
+    assert vl == vl_b and c.shape == (j,)
+    blk_k = blk_k or vl
+    assert vl % blk_k == 0, "blk_k must divide VL"
+    grid = (vl // blk_k,)
+    return pl.pallas_call(
+        _vmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_k,), lambda k: (k,)),
+            pl.BlockSpec((j, blk_k), lambda k: (0, k)),
+            pl.BlockSpec((j,), lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((j,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((j,), c.dtype),
+        interpret=True,
+    )(a, b, c)
+
+
+def _vmacc_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] + a_ref[...] * b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def vmacc(a, b, c, *, blk=None):
+    """Algorithm 2 as a Pallas kernel: C[VL] += A[VL] * B[VL]."""
+    (n,) = a.shape
+    assert b.shape == (n,) and c.shape == (n,)
+    blk = blk or n
+    assert n % blk == 0, "blk must divide length"
+    grid = (n // blk,)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        _vmacc_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), c.dtype),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,110 @@
+"""L2: the tuner's learned cost model + the numerics oracles, as jax graphs.
+
+The cost model replaces MetaSchedule's XGBoost regressor (DESIGN.md §2):
+an MLP over FEATURE_DIM static schedule features predicting normalized
+log-throughput. It is trained *online from rust* during tuning: both the
+batched forward pass (candidate scoring) and the SGD-with-momentum training
+step are AOT-lowered to HLO and executed through PJRT — python never runs
+at tuning time.
+
+Parameter layout (flat tuple, in this order everywhere):
+    w1[FEATURE_DIM, HIDDEN], b1[HIDDEN],
+    w2[HIDDEN, HIDDEN],      b2[HIDDEN],
+    w3[HIDDEN, 1],           b3[1]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as dense_kernel
+from .kernels import ref
+
+FEATURE_DIM = 32
+HIDDEN = 64
+SCORE_BATCH = 512  # candidates scored per PJRT call
+TRAIN_BATCH = 64  # measured records per training step
+LEARNING_RATE = 3e-3
+MOMENTUM = 0.9
+GRAD_CLIP = 5.0  # global-norm clip keeps online SGD stable
+
+PARAM_SHAPES = [
+    (FEATURE_DIM, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, 1),
+    (1,),
+]
+
+
+def init_params(seed):
+    """He-initialized parameters + zeroed momentum from an i32 seed scalar."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in PARAM_SHAPES:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            scale = jnp.sqrt(2.0 / shape[0])
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    moms = [jnp.zeros(s, jnp.float32) for s in PARAM_SHAPES]
+    return tuple(params) + tuple(moms)
+
+
+def forward(w1, b1, w2, b2, w3, b3, x):
+    """Batched scoring pass — built on the Pallas dense kernel (L1)."""
+    h = dense_kernel.dense(x, w1, b1, relu=True)
+    h = dense_kernel.dense(h, w2, b2, relu=True)
+    out = dense_kernel.dense(h, w3, b3, relu=False)
+    return out[:, 0]
+
+
+def _loss(params, x, y):
+    pred = ref.mlp_ref(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def train_step(w1, b1, w2, b2, w3, b3, m1, m2, m3, m4, m5, m6, x, y):
+    """One SGD+momentum step on MSE; returns new params, new momenta, loss.
+
+    Gradients flow through the pure-jnp oracle (identical math to the
+    Pallas forward — test_model.py asserts this), because autodiff through
+    interpret-mode pallas_call is not supported by the pinned jax.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    moms = (m1, m2, m3, m4, m5, m6)
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    # Global-norm gradient clipping (divergence during online updates would
+    # poison every subsequent scoring round).
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    new_params = []
+    new_moms = []
+    for p, m, g in zip(params, moms, grads):
+        m_new = MOMENTUM * m + g * scale
+        new_moms.append(m_new)
+        new_params.append(p - LEARNING_RATE * m_new)
+    return tuple(new_params) + tuple(new_moms) + (loss,)
+
+
+# ---------------------------------------------------------------------------
+# Numerics oracles for the rust simulator (fixed 64^3 validation shapes).
+# ---------------------------------------------------------------------------
+
+VAL_SIZE = 64
+
+
+def qmatmul_i8(a, bt, d, mult, shift, zp):
+    """QNN int8 matmul oracle (paper §IV-A), weights layout Bt[n,k]."""
+    return ref.qmatmul_ref(a, bt, d, mult, shift, zp)
+
+
+def matmul_f32(a, bt, d):
+    return ref.matmul_f32_ref(a, bt, d)
+
+
+def matmul_f16(a, bt, d):
+    """f16 matmul with f16 accumulation (mirrors the RVV vfmul/vfredusum
+    path the simulator models)."""
+    return (a @ bt.T + d).astype(jnp.float16)

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and block sizes; fixed seeds keep runs fast and
+deterministic in CI.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import dense, ref, vmatmul
+
+
+def rand(rng, shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vl_blocks=st.integers(1, 8),
+    blk_k=st.sampled_from([16, 32, 64]),
+    j=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vmatmul_matches_ref(vl_blocks, blk_k, j, seed):
+    vl = vl_blocks * blk_k
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (vl,))
+    b = rand(rng, (j, vl))
+    c = rand(rng, (j,))
+    got = vmatmul.vmatmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), blk_k=blk_k)
+    want = ref.vmatmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 8),
+    blk=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vmacc_matches_ref(blocks, blk, seed):
+    n = blocks * blk
+    rng = np.random.default_rng(seed)
+    a, b, c = (rand(rng, (n,)) for _ in range(3))
+    got = vmatmul.vmacc(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), blk=blk)
+    want = ref.vmacc_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_blocks=st.integers(1, 8),
+    blk_m=st.sampled_from([16, 64]),
+    d_in=st.sampled_from([8, 32]),
+    d_out=st.sampled_from([1, 16, 64]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m_blocks, blk_m, d_in, d_out, relu, seed):
+    bsz = m_blocks * blk_m
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (bsz, d_in))
+    w = rand(rng, (d_in, d_out), scale=0.3)
+    b = rand(rng, (d_out,))
+    got = dense.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu, blk_m=blk_m)
+    want = ref.dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_relu_clamps_negative():
+    x = jnp.asarray([[-10.0, 10.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = dense.dense(x, w, b, relu=True, blk_m=1)
+    assert float(out[0, 0]) == 0.0 and float(out[0, 1]) == 10.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    acc=st.integers(-(2**20), 2**20),
+    mult=st.integers(1, 2**20),
+    shift=st.integers(1, 30),
+    zp=st.integers(-64, 64),
+)
+def test_requant_matches_rust_formula(acc, mult, shift, zp):
+    """ref.requant must equal the integer formula in sim::requant_i64."""
+    got = int(ref.requant(jnp.asarray([acc], jnp.int32), mult, shift, zp)[0])
+    prod = acc * mult
+    rounded = (prod + (1 << (shift - 1))) >> shift
+    want = max(-128, min(127, rounded + zp))
+    assert got == want
+
+
+def test_vmatmul_int8_oracle_is_exact():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-128, 128, 64, dtype=np.int8)
+    b = rng.integers(-128, 128, (8, 64), dtype=np.int8)
+    c = rng.integers(-1000, 1000, 8, dtype=np.int32)
+    want = c.astype(np.int64) + (b.astype(np.int64) @ a.astype(np.int64))
+    got = ref.vmatmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int64), want)
+
+
+def test_vmatmul_rejects_bad_block():
+    a = jnp.zeros(10, jnp.float32)
+    b = jnp.zeros((4, 10), jnp.float32)
+    c = jnp.zeros(4, jnp.float32)
+    with pytest.raises(AssertionError):
+        vmatmul.vmatmul(a, b, c, blk_k=4)

@@ -1,0 +1,96 @@
+"""L2 cost model: pallas fwd == jnp oracle; training converges; oracles sane."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(seed=0):
+    out = model.init_params(seed)
+    return out[:6], out[6:]
+
+
+def test_init_shapes_and_determinism():
+    p1 = model.init_params(42)
+    p2 = model.init_params(42)
+    p3 = model.init_params(43)
+    assert len(p1) == 12
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(p1, p3))
+    for p, shape in zip(p1[:6], model.PARAM_SHAPES):
+        assert p.shape == shape
+    # momenta start at zero
+    assert all(float(jnp.abs(m).max()) == 0.0 for m in p1[6:])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pallas_forward_matches_oracle(seed):
+    params, _ = make_params(seed % 1000)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((model.SCORE_BATCH, model.FEATURE_DIM)).astype(np.float32)
+    got = model.forward(*params, jnp.asarray(x))
+    want = ref.mlp_ref(params, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_reduces_loss():
+    params, moms = make_params(7)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((model.TRAIN_BATCH, model.FEATURE_DIM)).astype(np.float32)
+    # learnable target: linear function of the features
+    w_true = rng.standard_normal(model.FEATURE_DIM).astype(np.float32) * 0.3
+    y = (x @ w_true).astype(np.float32)
+    state = list(params) + list(moms)
+    losses = []
+    for _ in range(60):
+        out = model.train_step(*state, jnp.asarray(x), jnp.asarray(y))
+        state = list(out[:12])
+        losses.append(float(out[12]))
+    assert losses[-1] < losses[0] * 0.5, f"no convergence: {losses[0]} -> {losses[-1]}"
+
+
+def test_train_step_preserves_shapes():
+    params, moms = make_params(1)
+    x = jnp.zeros((model.TRAIN_BATCH, model.FEATURE_DIM), jnp.float32)
+    y = jnp.zeros((model.TRAIN_BATCH,), jnp.float32)
+    out = model.train_step(*params, *moms, x, y)
+    assert len(out) == 13
+    for got, want in zip(out[:6], model.PARAM_SHAPES):
+        assert got.shape == want
+
+
+def test_qmatmul_oracle_against_numpy():
+    rng = np.random.default_rng(11)
+    v = model.VAL_SIZE
+    a = rng.integers(-128, 128, (v, v), dtype=np.int8)
+    bt = rng.integers(-128, 128, (v, v), dtype=np.int8)
+    d = rng.integers(-1000, 1000, (v, v), dtype=np.int32)
+    mult, shift, zp = 1 << 14, 22, 3
+    got = np.asarray(model.qmatmul_i8(jnp.asarray(a), jnp.asarray(bt), jnp.asarray(d), mult, shift, zp))
+    acc = a.astype(np.int64) @ bt.astype(np.int64).T + d
+    rounded = (acc * mult + (1 << (shift - 1))) >> shift
+    want = np.clip(rounded + zp, -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_oracles_float():
+    rng = np.random.default_rng(5)
+    v = model.VAL_SIZE
+    a = rng.standard_normal((v, v)).astype(np.float32)
+    bt = rng.standard_normal((v, v)).astype(np.float32)
+    d = rng.standard_normal((v, v)).astype(np.float32)
+    got = np.asarray(model.matmul_f32(jnp.asarray(a), jnp.asarray(bt), jnp.asarray(d)))
+    np.testing.assert_allclose(got, a @ bt.T + d, rtol=1e-4, atol=1e-4)
+    got16 = np.asarray(
+        model.matmul_f16(
+            jnp.asarray(a, jnp.float16), jnp.asarray(bt, jnp.float16), jnp.asarray(d, jnp.float16)
+        )
+    )
+    assert got16.dtype == np.float16
+    np.testing.assert_allclose(got16.astype(np.float32), a @ bt.T + d, rtol=0.1, atol=1.0)

@@ -1,0 +1,41 @@
+//! Shared scaffolding for the figure benches.
+//!
+//! Each `cargo bench` target regenerates one paper figure (quick sweep —
+//! full sweeps run via `rvv-tune figures`) and micro-benchmarks the
+//! measurement primitive that figure exercises, using the in-tree harness
+//! (`util::bench`, the offline replacement for criterion).
+
+use rvv_tune::report::figures::FigOpts;
+
+// Each bench target compiles this module independently; not every target
+// uses every helper.
+
+
+#[allow(dead_code)]
+pub fn fig_opts() -> FigOpts {
+    FigOpts {
+        quick: true,
+        use_mlp: false, // benches must not depend on `make artifacts`
+        workers: 4,
+        out_dir: std::path::PathBuf::from("report/bench"),
+        ..Default::default()
+    }
+}
+
+/// Time one timing-mode simulation of (op, scenario).
+#[allow(dead_code)]
+pub fn bench_measure(
+    name: &str,
+    op: &rvv_tune::tir::Op,
+    scenario: &rvv_tune::codegen::Scenario,
+    vlen: u32,
+) {
+    use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+    let soc = SocConfig::saturn(vlen);
+    let program = rvv_tune::codegen::generate(op, scenario, vlen).expect("supported");
+    rvv_tune::util::bench::bench(name, rvv_tune::util::bench::quick(), || {
+        let mut bufs = BufStore::timing(&program);
+        let r = execute(&soc, &program, &mut bufs, Mode::Timing, true);
+        rvv_tune::util::bench::black_box(r.cycles);
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench target regenerating paper figure 8 (quick sweep) and
+//! timing its measurement primitive. Full sweep: `rvv-tune figures`.
+
+mod common;
+
+fn main() {
+    let opts = common::fig_opts();
+    rvv_tune::util::bench::section("fig8_vlen_models: regenerate figure (quick)");
+    let t0 = std::time::Instant::now();
+    rvv_tune::report::figures::fig8(&opts);
+    println!("figure regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+
+    rvv_tune::util::bench::section("fig8_vlen_models: measurement primitive");
+    let op = rvv_tune::workloads::matmul::matmul(64, rvv_tune::tir::DType::I8);
+    common::bench_measure("sim-timing 64^3 int8 muriscv-nn", &op, &rvv_tune::codegen::Scenario::MuRiscvNn, 1024);
+}

@@ -1,0 +1,122 @@
+//! Performance benches for the tuning hot path (EXPERIMENTS.md §Perf):
+//!
+//! 1. simulator timing-mode measurement throughput (the paper's 9-12 s
+//!    compile+flash+measure step, replaced by our simulated measurement);
+//! 2. candidate generation: sampling + codegen + feature extraction;
+//! 3. cost-model scoring/training through PJRT (when artifacts exist);
+//! 4. end-to-end tuning iteration rate (serial and parallel pool).
+
+mod common;
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::coordinator::MeasurePool;
+use rvv_tune::intrinsics::Registry;
+use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+use rvv_tune::tir::DType;
+use rvv_tune::tune::{
+    self, Database, HeuristicCostModel, Measurer, SearchConfig, SearchSpace, SerialMeasurer,
+};
+use rvv_tune::util::bench::{bench, black_box, quick, section, BenchOpts};
+use rvv_tune::util::Pcg;
+use rvv_tune::workloads::matmul;
+
+fn main() {
+    let soc = SocConfig::saturn(1024);
+    let registry = Registry::build(1024);
+
+    section("L3: simulator measurement throughput");
+    for size in [64usize, 128, 256] {
+        let op = matmul::matmul(size, DType::I8);
+        common::bench_measure(
+            &format!("sim-timing {size}^3 int8 (tuned-style schedule)"),
+            &op,
+            &Scenario::AutovecGcc,
+            1024,
+        );
+    }
+
+    section("L3: candidate generation (sample + codegen + features)");
+    let op = matmul::matmul(128, DType::I8);
+    let space = SearchSpace::new(&op, &registry);
+    let mut rng = Pcg::seeded(1);
+    bench("sample+emit+features 128^3", BenchOpts::default(), || {
+        let s = space.sample(&mut rng);
+        let p = codegen::ours::emit(&op, &s, 1024);
+        let f = tune::features::extract(&op, &s, &p, &soc);
+        black_box(f);
+    });
+
+    section("L3: parallel vs serial measurement (one search round, k=16)");
+    let mut programs = Vec::new();
+    let mut rng2 = Pcg::seeded(2);
+    for _ in 0..16 {
+        let s = space.sample(&mut rng2);
+        programs.push(codegen::ours::emit(&op, &s, 1024));
+    }
+    bench("serial 16 candidates 128^3", quick(), || {
+        black_box(SerialMeasurer.measure(&soc, &programs));
+    });
+    let pool = MeasurePool::default_pool();
+    bench(
+        &format!("pool({} workers) 16 candidates 128^3", pool.workers()),
+        quick(),
+        || {
+            black_box(pool.measure(&soc, &programs));
+        },
+    );
+
+    section("L2/L1: PJRT cost model (requires `make artifacts`)");
+    match rvv_tune::tune::MlpCostModel::from_artifacts(7) {
+        Ok(mut model) => {
+            use rvv_tune::tune::CostModel;
+            let feats: Vec<Vec<f32>> = (0..512)
+                .map(|i| (0..32).map(|j| ((i * 31 + j) % 17) as f32 * 0.1).collect())
+                .collect();
+            bench("mlp score 512 candidates (1 PJRT call)", quick(), || {
+                black_box(model.score(&feats));
+            });
+            let labels: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
+            bench("mlp update (64 records, 4 epochs)", quick(), || {
+                model.update(&feats[..64], &labels);
+            });
+        }
+        Err(e) => println!("skipped (artifacts unavailable: {e})"),
+    }
+
+    section("end-to-end: full tuning runs (trials/s is the headline)");
+    for (size, trials) in [(64usize, 64usize), (128, 64)] {
+        let op = matmul::matmul(size, DType::I8);
+        let t0 = std::time::Instant::now();
+        let mut db = Database::new();
+        let mut model = HeuristicCostModel;
+        let out = tune::tune_op(
+            &op,
+            &soc,
+            &registry,
+            &mut model,
+            &pool,
+            &mut db,
+            &SearchConfig { trials, seed: 3, ..Default::default() },
+        )
+        .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "tune {size}^3 int8: {} trials in {dt:.2}s = {:.0} trials/s (paper testbed ~0.1/s); best {} cycles",
+            out.trials_measured,
+            out.trials_measured as f64 / dt,
+            out.best.cycles
+        );
+    }
+
+    // keep `execute`'s functional path exercised under bench too
+    section("functional vs timing mode overhead");
+    let p = codegen::generate(&matmul::matmul(64, DType::I8), &Scenario::MuRiscvNn, 1024).unwrap();
+    bench("functional 64^3", quick(), || {
+        let mut bufs = BufStore::functional(&p);
+        black_box(execute(&soc, &p, &mut bufs, Mode::Functional, true).cycles);
+    });
+    bench("timing     64^3", quick(), || {
+        let mut bufs = BufStore::timing(&p);
+        black_box(execute(&soc, &p, &mut bufs, Mode::Timing, true).cycles);
+    });
+}

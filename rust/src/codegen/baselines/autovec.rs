@@ -1,0 +1,321 @@
+//! Compiler autovectorization baselines: GCC 14 `-O3` (FPGA experiments)
+//! and LLVM 19 (BPI-F3 experiments).
+//!
+//! Both vectorize the *innermost* loop only, with no register blocking or
+//! cross-iteration reuse — the reuse-blind behaviour the paper (and Adit &
+//! Sampson [6]) attribute to loop autovectorizers. Flavour differences
+//! mirror the real compilers:
+//!
+//! * GCC: LMUL=1 chunks, scalar requantization tail (the saturating
+//!   fixed-point chain defeats its vectorizer);
+//! * LLVM: LMUL=2 chunks, interleave factor 2 on the reduction loop, and
+//!   a vectorized requantization epilogue.
+
+use crate::isa::{Lmul, VBinOp};
+use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram};
+use crate::tir::{DType, Op};
+
+use super::super::{declare_buffers, ours};
+
+/// Which compiler's vectorizer to model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    Gcc,
+    Llvm,
+}
+
+impl Flavor {
+    fn lmul(self) -> Lmul {
+        match self {
+            Flavor::Gcc => Lmul::M1,
+            Flavor::Llvm => Lmul::M2,
+        }
+    }
+
+    fn interleave(self) -> u32 {
+        match self {
+            Flavor::Gcc => 1,
+            Flavor::Llvm => 2,
+        }
+    }
+}
+
+/// Emit the autovectorized program for `op`.
+pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
+    let mut p = VProgram::new(format!("autovec-{:?}-{}", flavor, op.key()));
+    let bufs = declare_buffers(&mut p, op);
+    match *op {
+        Op::Matmul { m, n, k, dtype, requant } => {
+            let sew = dtype.sew();
+            let acc_sew = dtype.accumulator().sew();
+            let float = dtype.is_float();
+            let widen = dtype == DType::I8;
+            // Loop vectorizers choose the VF from the *widest* type in the
+            // loop; the int8 dot product accumulates in int32, so VF is
+            // 4x smaller than the element VLMAX (one reason autovec loses
+            // to widening-aware hand kernels on int8 — paper §IV-A).
+            let vlmax = vlen * flavor.lmul().factor() / acc_sew.bits();
+            let chunk = vlmax.min(k as u32);
+            let k_full = k / chunk as usize;
+            let k_tail = (k % chunk as usize) as u32;
+            let zero = if float { ScalarSrc::F(0.0) } else { ScalarSrc::I(0) };
+
+            let mv = p.fresh_var();
+            let nv = p.fresh_var();
+            let kv = p.fresh_var();
+
+            let mut body: Vec<Node> = Vec::new();
+            // vacc = 0 (chunk-long accumulator, LMUL-limited)
+            body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul: flavor.lmul(), float }));
+            body.push(Node::Inst(Inst::VSplat { vd: 8, value: zero, vl_override: None }));
+            if k_full > 0 {
+                let a_addr = AddrExpr::var(mv, k as i64).plus(kv, chunk as i64);
+                let b_addr = AddrExpr::var(nv, k as i64).plus(kv, chunk as i64);
+                body.push(Node::Loop(LoopNode {
+                    var: kv,
+                    extent: k_full as u32,
+                    unroll: flavor.interleave(),
+                    body: vec![
+                        Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, a_addr) }),
+                        Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.b, b_addr) }),
+                        Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }),
+                    ],
+                }));
+            }
+            if k_tail > 0 {
+                let off = (k_full as i64) * chunk as i64;
+                body.push(Node::Inst(Inst::VSetVl { vl: k_tail, sew, lmul: flavor.lmul(), float }));
+                body.push(Node::Inst(Inst::VLoad {
+                    vd: 0,
+                    mem: MemRef::unit(bufs.a, AddrExpr::var(mv, k as i64).offset(off)),
+                }));
+                body.push(Node::Inst(Inst::VLoad {
+                    vd: 4,
+                    mem: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64).offset(off)),
+                }));
+                body.push(Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }));
+                // restore full-chunk VL for the reduction below
+                body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul: flavor.lmul(), float }));
+            }
+            // Horizontal reduction + bias accumulate + store (one element).
+            body.push(Node::Inst(Inst::VSplat { vd: 12, value: zero, vl_override: Some(1) }));
+            body.push(Node::Inst(Inst::VRedSum { vd: 12, vs: 8, acc: 12 }));
+            let c_addr = AddrExpr::var(mv, n as i64).plus(nv, 1);
+            body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: acc_sew, lmul: Lmul::M1, float }));
+            body.push(Node::Inst(Inst::VLoad { vd: 13, mem: MemRef::unit(bufs.acc, c_addr.clone()) }));
+            body.push(Node::Inst(Inst::VBin { op: VBinOp::Add, vd: 12, vs1: 12, vs2: 13, widen: false }));
+            body.push(Node::Inst(Inst::VStore { vs: 12, mem: MemRef::unit(bufs.acc, c_addr) }));
+
+            let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body });
+            p.body.push(Node::Loop(LoopNode {
+                var: mv,
+                extent: m as u32,
+                unroll: 1,
+                body: vec![n_loop],
+            }));
+
+            if let Some(rq) = requant {
+                match flavor {
+                    // GCC: the saturating requant chain stays scalar.
+                    Flavor::Gcc => p.body.push(Node::Inst(Inst::SRequantRun {
+                        dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
+                        src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                        len: (m * n) as u32,
+                        mult: rq.mult,
+                        shift: rq.shift,
+                        zp: rq.zp,
+                    })),
+                    // LLVM vectorizes the epilogue.
+                    Flavor::Llvm => ours::emit_requant_epilogue(
+                        &mut p,
+                        bufs.acc,
+                        bufs.out.unwrap(),
+                        m,
+                        n,
+                        rq,
+                        vlen,
+                    ),
+                }
+            }
+        }
+        Op::DwConv { spatial, channels, taps, dtype, requant } => {
+            // The vectorizer handles the innermost channel loop; it does
+            // not hoist the accumulator across taps (store per tap).
+            let sew = dtype.sew();
+            let acc_sew = dtype.accumulator().sew();
+            let float = dtype.is_float();
+            let widen = dtype == DType::I8;
+            let vlmax = vlen * flavor.lmul().factor() / acc_sew.bits();
+            let vl = vlmax.min(channels as u32);
+            let c_full = channels / vl as usize;
+            let c_tail = (channels % vl as usize) as u32;
+
+            let sv = p.fresh_var();
+            let tv = p.fresh_var();
+            let mut t_body: Vec<Node> = Vec::new();
+            let emit_chunk = |t_body: &mut Vec<Node>, c_base: AddrExpr, vl_cur: u32| {
+                let x_addr = AddrExpr::var(sv, (taps * channels) as i64)
+                    .plus(tv, channels as i64)
+                    .plus_expr(&c_base);
+                let w_addr = AddrExpr::var(tv, channels as i64).plus_expr(&c_base);
+                let y_addr = AddrExpr::var(sv, channels as i64).plus_expr(&c_base);
+                t_body.push(Node::Inst(Inst::VSetVl {
+                    vl: vl_cur,
+                    sew: acc_sew,
+                    lmul: flavor.lmul(),
+                    float,
+                }));
+                t_body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.acc, y_addr.clone()) }));
+                t_body.push(Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: flavor.lmul(), float }));
+                t_body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, x_addr) }));
+                t_body.push(Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.b, w_addr) }));
+                t_body.push(Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }));
+                t_body.push(Node::Inst(Inst::VSetVl {
+                    vl: vl_cur,
+                    sew: acc_sew,
+                    lmul: flavor.lmul(),
+                    float,
+                }));
+                t_body.push(Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(bufs.acc, y_addr) }));
+            };
+            if c_full > 0 {
+                let cv = p.fresh_var();
+                let mut inner = Vec::new();
+                emit_chunk(&mut inner, AddrExpr::var(cv, vl as i64), vl);
+                t_body.push(Node::Loop(LoopNode {
+                    var: cv,
+                    extent: c_full as u32,
+                    unroll: 1,
+                    body: inner,
+                }));
+            }
+            if c_tail > 0 {
+                emit_chunk(&mut t_body, AddrExpr::constant(c_full as i64 * vl as i64), c_tail);
+            }
+            let t_loop = Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body: t_body });
+            p.body.push(Node::Loop(LoopNode {
+                var: sv,
+                extent: spatial as u32,
+                unroll: 1,
+                body: vec![t_loop],
+            }));
+            if let Some(rq) = requant {
+                match flavor {
+                    Flavor::Gcc => p.body.push(Node::Inst(Inst::SRequantRun {
+                        dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
+                        src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                        len: (spatial * channels) as u32,
+                        mult: rq.mult,
+                        shift: rq.shift,
+                        zp: rq.zp,
+                    })),
+                    Flavor::Llvm => ours::emit_requant_epilogue(
+                        &mut p,
+                        bufs.acc,
+                        bufs.out.unwrap(),
+                        spatial,
+                        channels,
+                        rq,
+                        vlen,
+                    ),
+                }
+            }
+        }
+        Op::Eltwise { len, dtype } => {
+            let sew = dtype.sew();
+            let float = dtype.is_float();
+            let vlmax = vlen * flavor.lmul().factor() / sew.bits();
+            let vl = vlmax.min(len as u32);
+            let full = len / vl as usize;
+            let tail = (len % vl as usize) as u32;
+            let emit_chunk = |p: &mut VProgram, base: AddrExpr, vl_cur: u32| -> Vec<Node> {
+                let _ = p;
+                vec![
+                    Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: flavor.lmul(), float }),
+                    Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, base.clone()) }),
+                    Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.b, base.clone()) }),
+                    Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.acc, base.clone()) }),
+                    Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen: false }),
+                    Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(bufs.acc, base) }),
+                ]
+            };
+            if full > 0 {
+                let cv = p.fresh_var();
+                let body = emit_chunk(&mut p, AddrExpr::var(cv, vl as i64), vl);
+                p.body.push(Node::Loop(LoopNode {
+                    var: cv,
+                    extent: full as u32,
+                    unroll: flavor.interleave(),
+                    body,
+                }));
+            }
+            if tail > 0 {
+                let nodes = emit_chunk(&mut p, AddrExpr::constant(full as i64 * vl as i64), tail);
+                p.body.extend(nodes);
+            }
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{execute, BufStore, Mode, SocConfig};
+    use crate::tir::Requant;
+
+    fn run_i8(m: usize, n: usize, k: usize, flavor: Flavor, vlen: u32) -> (Vec<i8>, Vec<i8>) {
+        let rq = Requant { mult: 1 << 17, shift: 19, zp: 1 };
+        let op = Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rq) };
+        let p = emit(&op, vlen, flavor);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..m * k).map(|i| ((i * 41) % 255) as i8).collect();
+        let bv: Vec<i8> = (0..n * k).map(|i| ((i * 29) % 251) as i8).collect();
+        let dv: Vec<i32> = (0..m * n).map(|i| (i as i32 * 7) % 61 - 30).collect();
+        bufs.set_i8(0, &av);
+        bufs.set_i8(1, &bv);
+        bufs.set_i32(2, &dv);
+        execute(&SocConfig::saturn(vlen), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_i8(3).to_vec();
+        let mut want = vec![0i8; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let acc: i64 = (0..k)
+                    .map(|kk| av[i * k + kk] as i64 * bv[j * k + kk] as i64)
+                    .sum::<i64>()
+                    + dv[i * n + j] as i64;
+                want[i * n + j] = crate::sim::requant_i64(acc, rq.mult, rq.shift, rq.zp) as i8;
+            }
+        }
+        (got, want)
+    }
+
+    #[test]
+    fn gcc_and_llvm_matmul_exact() {
+        for flavor in [Flavor::Gcc, Flavor::Llvm] {
+            let (got, want) = run_i8(6, 10, 50, flavor, 256);
+            assert_eq!(got, want, "{flavor:?}");
+        }
+    }
+
+    #[test]
+    fn llvm_faster_than_gcc_on_int8() {
+        // LMUL=2 + vectorized epilogue should beat LMUL=1 + scalar requant.
+        let op = Op::square_matmul(64, DType::I8);
+        let cycles = |flavor| {
+            let p = emit(&op, 256, flavor);
+            let mut bufs = BufStore::timing(&p);
+            execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Timing, true).cycles
+        };
+        assert!(cycles(Flavor::Llvm) < cycles(Flavor::Gcc));
+    }
+
+    #[test]
+    fn autovec_uses_vector_unit() {
+        let op = Op::square_matmul(32, DType::F32);
+        let p = emit(&op, 256, Flavor::Gcc);
+        let mut bufs = BufStore::timing(&p);
+        let r = execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Timing, true);
+        assert!(r.trace.vector_total() > 0);
+    }
+}

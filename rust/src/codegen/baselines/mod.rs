@@ -1,0 +1,8 @@
+//! The paper's comparison scenarios, re-implemented at the schedule level:
+//! unvectorized `-Os` code, GCC/LLVM loop autovectorization, and the
+//! muRISCV-NN hand-written kernel library.
+
+pub mod autovec;
+pub mod muriscvnn;
+pub mod pext;
+pub mod scalar;

@@ -1,0 +1,142 @@
+//! "Non tuned" baseline: the C code TVM generates, compiled with `-Os` —
+//! plain scalar loops, no vector instructions (paper §IV).
+
+use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, VProgram};
+use crate::tir::Op;
+
+use super::super::declare_buffers;
+
+/// Emit the scalar program for `op`.
+pub fn emit(op: &Op) -> VProgram {
+    let mut p = VProgram::new(format!("scalar-{}", op.key()));
+    let bufs = declare_buffers(&mut p, op);
+    match *op {
+        Op::Matmul { m, n, k, dtype, requant } => {
+            let mv = p.fresh_var();
+            let nv = p.fresh_var();
+            // for m { for n { acc[m,n] += dot(A[m,:], B[n,:]) } }
+            let inner = vec![Node::Inst(Inst::SDotRun {
+                acc: MemRef::unit(bufs.acc, AddrExpr::var(mv, n as i64).plus(nv, 1)),
+                a: MemRef::unit(bufs.a, AddrExpr::var(mv, k as i64)),
+                b: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64)),
+                len: k as u32,
+                dtype,
+            })];
+            let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body: inner });
+            p.body.push(Node::Loop(LoopNode {
+                var: mv,
+                extent: m as u32,
+                unroll: 1,
+                body: vec![n_loop],
+            }));
+            if let Some(rq) = requant {
+                p.body.push(Node::Inst(Inst::SRequantRun {
+                    dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
+                    src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                    len: (m * n) as u32,
+                    mult: rq.mult,
+                    shift: rq.shift,
+                    zp: rq.zp,
+                }));
+            }
+        }
+        Op::DwConv { spatial, channels, taps, dtype, requant } => {
+            let sv = p.fresh_var();
+            let tv = p.fresh_var();
+            let inner = vec![Node::Inst(Inst::SAxpyRun {
+                y: MemRef::unit(bufs.acc, AddrExpr::var(sv, channels as i64)),
+                a: MemRef::unit(
+                    bufs.a,
+                    AddrExpr::var(sv, (taps * channels) as i64).plus(tv, channels as i64),
+                ),
+                b: MemRef::unit(bufs.b, AddrExpr::var(tv, channels as i64)),
+                len: channels as u32,
+                dtype,
+            })];
+            let t_loop =
+                Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body: inner });
+            p.body.push(Node::Loop(LoopNode {
+                var: sv,
+                extent: spatial as u32,
+                unroll: 1,
+                body: vec![t_loop],
+            }));
+            if let Some(rq) = requant {
+                p.body.push(Node::Inst(Inst::SRequantRun {
+                    dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
+                    src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                    len: (spatial * channels) as u32,
+                    mult: rq.mult,
+                    shift: rq.shift,
+                    zp: rq.zp,
+                }));
+            }
+        }
+        Op::Eltwise { len, dtype } => {
+            p.body.push(Node::Inst(Inst::SAxpyRun {
+                y: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                a: MemRef::unit(bufs.a, AddrExpr::constant(0)),
+                b: MemRef::unit(bufs.b, AddrExpr::constant(0)),
+                len: len as u32,
+                dtype,
+            }));
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{execute, BufStore, Mode, SocConfig};
+    use crate::tir::{DType, Requant};
+
+    #[test]
+    fn scalar_matmul_i8_matches_reference() {
+        let (m, n, k) = (5usize, 7usize, 23usize);
+        let rq = Requant { mult: 1 << 16, shift: 18, zp: -2 };
+        let op = Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rq) };
+        let p = emit(&op);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..m * k).map(|i| ((i * 31) % 255) as i8).collect();
+        let bv: Vec<i8> = (0..n * k).map(|i| ((i * 17) % 249) as i8).collect();
+        let dv: Vec<i32> = (0..m * n).map(|i| (i as i32 * 13) % 101 - 50).collect();
+        bufs.set_i8(0, &av);
+        bufs.set_i8(1, &bv);
+        bufs.set_i32(2, &dv);
+        let r = execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        assert_eq!(r.trace.vector_total(), 0, "scalar baseline must not vectorize");
+        let got = bufs.get_i8(3);
+        for i in 0..m {
+            for j in 0..n {
+                let acc: i64 = (0..k)
+                    .map(|kk| av[i * k + kk] as i64 * bv[j * k + kk] as i64)
+                    .sum::<i64>()
+                    + dv[i * n + j] as i64;
+                let want = crate::sim::requant_i64(acc, rq.mult, rq.shift, rq.zp) as i8;
+                assert_eq!(got[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dwconv_f32() {
+        let (s, c, t) = (4usize, 10usize, 9usize);
+        let op = Op::DwConv { spatial: s, channels: c, taps: t, dtype: DType::F32, requant: None };
+        let p = emit(&op);
+        let mut bufs = BufStore::functional(&p);
+        let xv: Vec<f32> = (0..s * t * c).map(|i| (i % 9) as f32 * 0.5).collect();
+        let wv: Vec<f32> = (0..t * c).map(|i| (i % 5) as f32 * 0.2 - 0.4).collect();
+        bufs.set_f32(0, &xv);
+        bufs.set_f32(1, &wv);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_f32(2);
+        for si in 0..s {
+            for ci in 0..c {
+                let want: f32 =
+                    (0..t).map(|ti| xv[si * t * c + ti * c + ci] * wv[ti * c + ci]).sum();
+                assert!((got[si * c + ci] - want).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Code generation: scheduled operators -> executable `VProgram`s.
+//!
+//! One generator per measurement scenario of the paper's evaluation:
+//!
+//! * [`ours`] — the paper's contribution: Algorithm-1/2 tensor intrinsics
+//!   driven by a sampled [`Schedule`].
+//! * [`baselines::scalar`] — GCC `-Os`, no vector instructions.
+//! * [`baselines::autovec`] — GCC 14 `-O3` / LLVM 19 loop autovectorization.
+//! * [`baselines::muriscvnn`] — the muRISCV-NN hand-written kernel library.
+//!
+//! All generators share one buffer convention per operator so that outputs
+//! can be compared bit-for-bit (int8) across scenarios and against the JAX
+//! oracles:
+//!
+//! ```text
+//! Matmul:  buf0 A[m,k]   buf1 B[n,k] (weights layout, pre-packed)
+//!          buf2 ACC[m,n] (i32 for int8, else dtype; pre-filled with bias D)
+//!          buf3 OUT[m,n] i8 (requantized result; int8 ops only)
+//! DwConv:  buf0 X[spatial,taps,ch]  buf1 W[taps,ch]
+//!          buf2 ACC[spatial,ch]     buf3 OUT i8 (int8 only)
+//! Eltwise: buf0 a  buf1 b  buf2 y (y += a*b)
+//! ```
+
+pub mod baselines;
+pub mod ours;
+
+use crate::sim::{BufId, VProgram};
+use crate::tir::{DType, Op, Schedule};
+
+/// A measurement scenario of the paper's evaluation section.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scenario {
+    /// "Non tuned": plain generated C, `-Os`, no vector unit.
+    ScalarOs,
+    /// "Non tuned (-O3)": GCC 14 autovectorization.
+    AutovecGcc,
+    /// "Non tuned (v)": LLVM 19 autovectorization (BPI-F3 experiments).
+    AutovecLlvm,
+    /// The muRISCV-NN kernel library (int8 only).
+    MuRiscvNn,
+    /// Packed-SIMD (RISC-V P extension) kernels (int8 only) — the paper's
+    /// §V future-work target, included as an extension study.
+    PackedSimd,
+    /// Our tuned tensor intrinsics with a concrete schedule.
+    Ours(Schedule),
+}
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::ScalarOs => "non-tuned",
+            Scenario::AutovecGcc => "non-tuned-O3",
+            Scenario::AutovecLlvm => "non-tuned-v",
+            Scenario::MuRiscvNn => "muriscv-nn",
+            Scenario::PackedSimd => "packed-simd",
+            Scenario::Ours(_) => "ours",
+        }
+    }
+}
+
+/// Buffer ids of a generated program (OUT is None for float ops).
+#[derive(Clone, Copy, Debug)]
+pub struct ProgramBufs {
+    pub a: BufId,
+    pub b: BufId,
+    pub acc: BufId,
+    pub out: Option<BufId>,
+}
+
+/// Declare the conventional buffers for `op` into `p`.
+pub fn declare_buffers(p: &mut VProgram, op: &Op) -> ProgramBufs {
+    match op {
+        Op::Matmul { m, n, k, dtype, requant } => {
+            let a = p.add_buffer("A", *dtype, m * k);
+            let b = p.add_buffer("B", *dtype, n * k);
+            let acc = p.add_buffer("ACC", dtype.accumulator(), m * n);
+            let out = requant.map(|_| p.add_buffer("OUT", DType::I8, m * n));
+            ProgramBufs { a, b, acc, out }
+        }
+        Op::DwConv { spatial, channels, taps, dtype, requant } => {
+            let a = p.add_buffer("X", *dtype, spatial * taps * channels);
+            let b = p.add_buffer("W", *dtype, taps * channels);
+            let acc = p.add_buffer("ACC", dtype.accumulator(), spatial * channels);
+            let out = requant.map(|_| p.add_buffer("OUT", DType::I8, spatial * channels));
+            ProgramBufs { a, b, acc, out }
+        }
+        Op::Eltwise { len, dtype } => {
+            let a = p.add_buffer("a", *dtype, *len);
+            let b = p.add_buffer("b", *dtype, *len);
+            let acc = p.add_buffer("y", *dtype, *len);
+            ProgramBufs { a, b, acc, out: None }
+        }
+    }
+}
+
+/// Generate the program for `op` under `scenario` on a SoC with `vlen`.
+/// Returns `None` when the scenario does not support the operator
+/// (muRISCV-NN has no float kernels).
+pub fn generate(op: &Op, scenario: &Scenario, vlen: u32) -> Option<VProgram> {
+    match scenario {
+        Scenario::ScalarOs => Some(baselines::scalar::emit(op)),
+        Scenario::AutovecGcc => Some(baselines::autovec::emit(op, vlen, baselines::autovec::Flavor::Gcc)),
+        Scenario::AutovecLlvm => {
+            Some(baselines::autovec::emit(op, vlen, baselines::autovec::Flavor::Llvm))
+        }
+        Scenario::MuRiscvNn => baselines::muriscvnn::emit(op, vlen),
+        Scenario::PackedSimd => baselines::pext::emit(op),
+        Scenario::Ours(schedule) => Some(ours::emit(op, schedule, vlen)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::Requant;
+
+    #[test]
+    fn buffer_convention_matmul_i8() {
+        let op = Op::Matmul { m: 4, n: 8, k: 16, dtype: DType::I8, requant: Some(Requant::default_for_tests()) };
+        let mut p = VProgram::new("t");
+        let bufs = declare_buffers(&mut p, &op);
+        assert_eq!(p.buffers[bufs.a].len, 64);
+        assert_eq!(p.buffers[bufs.b].len, 128);
+        assert_eq!(p.buffers[bufs.acc].dtype, DType::I32);
+        assert_eq!(p.buffers[bufs.out.unwrap()].dtype, DType::I8);
+    }
+
+    #[test]
+    fn buffer_convention_float_has_no_out() {
+        let op = Op::square_matmul(8, DType::F32);
+        let mut p = VProgram::new("t");
+        let bufs = declare_buffers(&mut p, &op);
+        assert!(bufs.out.is_none());
+        assert_eq!(p.buffers[bufs.acc].dtype, DType::F32);
+    }
+}

@@ -1,0 +1,794 @@
+//! Code generation for the paper's tensor intrinsics (Algorithms 1 and 2),
+//! driven by a sampled [`Schedule`].
+//!
+//! The matmul emitter reproduces Algorithm 1 faithfully:
+//!
+//! * the A-row chunk is loaded **once** per (row, k-chunk) and reused
+//!   across the J output columns (line 3);
+//! * each column j does `vmv.s.x` (zero) + `vle` + widening `vmul` +
+//!   `vredsum` (lines 7–13);
+//! * the reduction result is merged into the output register with
+//!   `vmv` + `vslideup` (lines 15–18) — **no store** until the whole
+//!   J-wide tile is done, which is why tuned schedules keep the vector
+//!   store share below 1 % (paper Figure 5);
+//! * the accumulated tile is added to C and stored once (lines 20–22).
+//!
+//! Remainder handling: RVV's dynamic VL lets the same implementation run
+//! tail chunks with a smaller `vsetvl`; we peel tail regions exactly like
+//! the generated C does.
+
+use crate::isa::{Lmul, Sew};
+use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram};
+use crate::tir::{
+    DType, DwConvSchedule, EltwiseSchedule, LoopOrder, MatmulSchedule, Op, Requant, Schedule,
+};
+
+use super::{declare_buffers, ProgramBufs};
+
+/// Code-size model for the tensorized path. TVM emits each *tensor
+/// intrinsic variant* as one standalone C function shared by every call
+/// site, plus a thin per-layer loop nest (calls + requant epilogue) — so
+/// binaries grow per distinct variant and per layer, not per unrolled
+/// loop body (the paper's ~90 % reduction and the anomaly-detection
+/// inversion both follow from this split).
+pub const INTRINSIC_FN_BYTES: u64 = 360;
+pub const LAYER_GLUE_BYTES: u64 = 224;
+
+/// Deduplication key of the intrinsic variant a schedule instantiates.
+pub fn variant_key(op: &Op, schedule: &Schedule) -> String {
+    let d = op.dtype().name();
+    match schedule {
+        Schedule::Matmul(s) => format!("vmatmul-{}-vl{}-j{}-u{}", d, s.intrin.vl, s.intrin.j, s.unroll),
+        Schedule::DwConv(s) => format!("vmacc-dw-{}-vl{}-h{}", d, s.vl, s.unroll_taps),
+        Schedule::Eltwise(s) => format!("vmacc-ew-{}-vl{}-u{}", d, s.vl, s.unroll),
+    }
+}
+
+/// Emit the program for `op` under `schedule` (panics on a kind mismatch —
+/// the sampler always produces matching schedules).
+pub fn emit(op: &Op, schedule: &Schedule, vlen: u32) -> VProgram {
+    match (op, schedule) {
+        (Op::Matmul { m, n, k, dtype, requant }, Schedule::Matmul(s)) => {
+            emit_matmul(*m, *n, *k, *dtype, *requant, s, vlen)
+        }
+        (Op::DwConv { spatial, channels, taps, dtype, requant }, Schedule::DwConv(s)) => {
+            emit_dwconv(*spatial, *channels, *taps, *dtype, *requant, s, vlen)
+        }
+        (Op::Eltwise { len, dtype }, Schedule::Eltwise(s)) => emit_eltwise(*len, *dtype, s),
+        (op, s) => panic!("schedule kind mismatch: {op} vs {}", s.describe()),
+    }
+}
+
+struct MatmulCtx<'a> {
+    bufs: ProgramBufs,
+    /// Buffer providing the "A row" operand (B when transposed).
+    a_buf: crate::sim::BufId,
+    /// Buffer providing the "B[J,VL]" operand (A when transposed).
+    b_buf: crate::sim::BufId,
+    /// Original n (C row pitch).
+    n_cols: usize,
+    k_total: usize,
+    /// Element stride between the J lanes of a C tile (n when transposed).
+    c_stride: i64,
+    dtype: DType,
+    sched: &'a MatmulSchedule,
+}
+
+impl MatmulCtx<'_> {
+    fn sew(&self) -> Sew {
+        self.dtype.sew()
+    }
+
+    fn acc_sew(&self) -> Sew {
+        self.dtype.accumulator().sew()
+    }
+
+    fn is_float(&self) -> bool {
+        self.dtype.is_float()
+    }
+
+    fn widen(&self) -> bool {
+        self.dtype == DType::I8
+    }
+
+    /// Base address of the C tile for (row, n_base); lanes are spaced by
+    /// `c_stride`.
+    fn c_base(&self, row: &AddrExpr, n_base: &AddrExpr) -> AddrExpr {
+        if self.c_stride == 1 {
+            row.clone().scaled(self.n_cols as i64).plus_expr(n_base)
+        } else {
+            n_base.clone().scaled(self.n_cols as i64).plus_expr(row)
+        }
+    }
+}
+
+/// One Algorithm-1 intrinsic call: A[row, kb..kb+vl] x B[nb..nb+j, kb..]
+/// accumulated into ACC[row, nb..nb+j].
+fn intrinsic_call(
+    p: &mut VProgram,
+    ctx: &MatmulCtx,
+    row: &AddrExpr,
+    n_base: &AddrExpr,
+    j_count: u32,
+    k_base: &AddrExpr,
+    vl: u32,
+) -> Vec<Node> {
+    let lmul = Lmul::from_factor(ctx.sched.intrin.lmul);
+    let k = ctx.k_total as i64;
+    let mut nodes = Vec::new();
+    // Configure for element loads + load the A chunk once (Alg. 1 line 3).
+    nodes.push(Node::Inst(Inst::VSetVl { vl, sew: ctx.sew(), lmul, float: ctx.is_float() }));
+    let a_addr = row.clone().scaled(k).plus_expr(k_base);
+    nodes.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(ctx.a_buf, a_addr) }));
+    let zero = if ctx.is_float() { ScalarSrc::F(0.0) } else { ScalarSrc::I(0) };
+
+    if j_count == 1 {
+        // The J=1 intrinsic variant (paper §III, footnote 2): the single
+        // reduction result IS the output tile — no out_vec, no vslideup
+        // (Alg. 1 line 16 is a plain vmv when j == 0).
+        let b_addr = n_base.clone().scaled(k).plus_expr(k_base);
+        nodes.push(Node::Inst(Inst::VSplat { vd: 24, value: zero, vl_override: Some(1) }));
+        nodes.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(ctx.b_buf, b_addr) }));
+        nodes.push(Node::Inst(Inst::VBin {
+            op: crate::isa::VBinOp::Mul,
+            vd: 16,
+            vs1: 0,
+            vs2: 8,
+            widen: ctx.widen(),
+        }));
+        nodes.push(Node::Inst(Inst::VRedSum { vd: 25, vs: 16, acc: 24 }));
+        let c_addr = ctx.c_base(row, n_base);
+        nodes.push(Node::Inst(Inst::VSetVl {
+            vl: 1,
+            sew: ctx.acc_sew(),
+            lmul: Lmul::M1,
+            float: ctx.is_float(),
+        }));
+        nodes.push(Node::Inst(Inst::VLoad { vd: 26, mem: MemRef::unit(ctx.bufs.acc, c_addr.clone()) }));
+        nodes.push(Node::Inst(Inst::VBin {
+            op: crate::isa::VBinOp::Add,
+            vd: 25,
+            vs1: 25,
+            vs2: 26,
+            widen: false,
+        }));
+        nodes.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(ctx.bufs.acc, c_addr) }));
+        return nodes;
+    }
+
+    // out_vec = zeros(J)
+    nodes.push(Node::Inst(Inst::VSplat { vd: 25, value: zero, vl_override: Some(j_count) }));
+
+    let jv = p.fresh_var();
+    // B[(n_base + j) * k + k_base]
+    let b_addr = n_base.clone().scaled(k).plus_expr(&AddrExpr::var(jv, k)).plus_expr(k_base);
+    let body = vec![
+        // Re-establish element config (the slide below switches it).
+        Node::Inst(Inst::VSetVl { vl, sew: ctx.sew(), lmul, float: ctx.is_float() }),
+        Node::Inst(Inst::VSplat { vd: 24, value: zero, vl_override: Some(1) }),
+        Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(ctx.b_buf, b_addr) }),
+        Node::Inst(Inst::VBin {
+            op: crate::isa::VBinOp::Mul,
+            vd: 16,
+            vs1: 0,
+            vs2: 8,
+            widen: ctx.widen(),
+        }),
+        Node::Inst(Inst::VRedSum { vd: 24, vs: 16, acc: 24 }),
+        // Merge into the output register (Alg. 1 lines 15-18).
+        Node::Inst(Inst::VSetVl {
+            vl: j_count,
+            sew: ctx.acc_sew(),
+            lmul: Lmul::M1,
+            float: ctx.is_float(),
+        }),
+        Node::Inst(Inst::VSlideInsert { vd: 25, vs: 24, pos: AddrExpr::var(jv, 1) }),
+    ];
+    nodes.push(Node::Loop(LoopNode {
+        var: jv,
+        extent: j_count,
+        unroll: ctx.sched.unroll.max(1).min(j_count.max(1)),
+        body,
+    }));
+
+    // Accumulate with C and store the tile once (Alg. 1 lines 20-22).
+    let c_addr = ctx.c_base(row, n_base);
+    let c_mem = MemRef::strided(ctx.bufs.acc, c_addr, ctx.c_stride);
+    nodes.push(Node::Inst(Inst::VSetVl {
+        vl: j_count,
+        sew: ctx.acc_sew(),
+        lmul: Lmul::M1,
+        float: ctx.is_float(),
+    }));
+    nodes.push(Node::Inst(Inst::VLoad { vd: 26, mem: c_mem.clone() }));
+    nodes.push(Node::Inst(Inst::VBin {
+        op: crate::isa::VBinOp::Add,
+        vd: 25,
+        vs1: 25,
+        vs2: 26,
+        widen: false,
+    }));
+    nodes.push(Node::Inst(Inst::VStore { vs: 25, mem: c_mem }));
+    nodes
+}
+
+/// The three tiled axes of the matmul loop nest.
+#[derive(Clone, Copy, PartialEq)]
+enum Axis {
+    M,
+    N,
+    K,
+}
+
+fn order_axes(order: LoopOrder) -> [Axis; 3] {
+    match order {
+        LoopOrder::MNK => [Axis::M, Axis::N, Axis::K],
+        LoopOrder::NMK => [Axis::N, Axis::M, Axis::K],
+        LoopOrder::NKM => [Axis::N, Axis::K, Axis::M],
+        LoopOrder::KMN => [Axis::K, Axis::M, Axis::N],
+    }
+}
+
+fn emit_matmul(
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype: DType,
+    requant: Option<Requant>,
+    sched: &MatmulSchedule,
+    vlen: u32,
+) -> VProgram {
+    let mut p = VProgram::new(format!("ours-matmul-{m}x{n}x{k}-{}", dtype.name()));
+    let bufs = declare_buffers(&mut p, &Op::Matmul { m, n, k, dtype, requant });
+    // Transposed tensorization swaps the roles of m and n (and of A and B).
+    let (m_e, n_e) = if sched.transpose { (n, m) } else { (m, n) };
+    let ctx = MatmulCtx {
+        bufs,
+        a_buf: if sched.transpose { bufs.b } else { bufs.a },
+        b_buf: if sched.transpose { bufs.a } else { bufs.b },
+        n_cols: n,
+        k_total: k,
+        c_stride: if sched.transpose { n as i64 } else { 1 },
+        dtype,
+        sched,
+    };
+
+    let vl = sched.intrin.vl.min(k as u32);
+    let j = sched.intrin.j.min(n_e as u32);
+    let k_full = k / vl as usize;
+    let k_tail = (k % vl as usize) as u32;
+    let n_full = n_e / j as usize;
+    let n_tail = (n_e % j as usize) as u32;
+    let mi = sched.mi.max(1).min(m_e as u32);
+    debug_assert_eq!(m_e % mi as usize, 0, "mi must divide the row extent");
+    let m_outer = m_e / mi as usize;
+
+    // Recursive emission over the loop order with tail peeling on N and K.
+    fn gen(
+        p: &mut VProgram,
+        ctx: &MatmulCtx,
+        axes: &[Axis],
+        row: AddrExpr,
+        n_base: AddrExpr,
+        j_count: u32,
+        k_base: AddrExpr,
+        vl_cur: u32,
+        dims: (usize, u32, usize, u32, usize, u32, u32), // m_outer, mi, n_full, n_tail, k_full, k_tail, vl
+    ) -> Vec<Node> {
+        let (m_outer, mi, n_full, n_tail, k_full, k_tail, vl) = dims;
+        match axes.split_first() {
+            None => intrinsic_call(p, ctx, &row, &n_base, j_count, &k_base, vl_cur),
+            Some((Axis::M, rest)) => {
+                let mo = p.fresh_var();
+                let mi_v = p.fresh_var();
+                let inner_row = AddrExpr::var(mo, mi as i64).plus(mi_v, 1);
+                let inner =
+                    gen(p, ctx, rest, inner_row, n_base, j_count, k_base, vl_cur, dims);
+                let mi_loop = Node::Loop(LoopNode {
+                    var: mi_v,
+                    extent: mi,
+                    unroll: ctx.sched.unroll.max(1).min(mi.max(1)),
+                    body: inner,
+                });
+                vec![Node::Loop(LoopNode {
+                    var: mo,
+                    extent: m_outer as u32,
+                    unroll: 1,
+                    body: vec![mi_loop],
+                })]
+            }
+            Some((Axis::N, rest)) => {
+                let mut nodes = Vec::new();
+                if n_full > 0 {
+                    let no = p.fresh_var();
+                    let base = AddrExpr::var(no, j_count as i64);
+                    let inner = gen(
+                        p,
+                        ctx,
+                        rest,
+                        row.clone(),
+                        base,
+                        j_count,
+                        k_base.clone(),
+                        vl_cur,
+                        dims,
+                    );
+                    nodes.push(Node::Loop(LoopNode {
+                        var: no,
+                        extent: n_full as u32,
+                        unroll: 1,
+                        body: inner,
+                    }));
+                }
+                if n_tail > 0 {
+                    let base = AddrExpr::constant(n_full as i64 * j_count as i64);
+                    nodes.extend(gen(p, ctx, rest, row, base, n_tail, k_base, vl_cur, dims));
+                }
+                nodes
+            }
+            Some((Axis::K, rest)) => {
+                let mut nodes = Vec::new();
+                if k_full > 0 {
+                    let ko = p.fresh_var();
+                    let base = AddrExpr::var(ko, vl as i64);
+                    let inner = gen(
+                        p,
+                        ctx,
+                        rest,
+                        row.clone(),
+                        n_base.clone(),
+                        j_count,
+                        base,
+                        vl,
+                        dims,
+                    );
+                    nodes.push(Node::Loop(LoopNode {
+                        var: ko,
+                        extent: k_full as u32,
+                        unroll: 1,
+                        body: inner,
+                    }));
+                }
+                if k_tail > 0 {
+                    let base = AddrExpr::constant(k_full as i64 * vl as i64);
+                    nodes.extend(gen(p, ctx, rest, row, n_base, j_count, base, k_tail, dims));
+                }
+                nodes
+            }
+        }
+    }
+
+    let axes = order_axes(sched.order);
+    let body = gen(
+        &mut p,
+        &ctx,
+        &axes,
+        AddrExpr::constant(0),
+        AddrExpr::constant(0),
+        j,
+        AddrExpr::constant(0),
+        vl,
+        (m_outer, mi, n_full, n_tail, k_full, k_tail, vl),
+    );
+    p.body = body;
+
+    if let Some(rq) = requant {
+        emit_requant_epilogue(&mut p, ctx.bufs.acc, ctx.bufs.out.unwrap(), m, n, rq, vlen);
+    }
+    p
+}
+
+/// Vectorized requantization pass ACC (i32) -> OUT (i8), row by row.
+pub fn emit_requant_epilogue(
+    p: &mut VProgram,
+    acc: crate::sim::BufId,
+    out: crate::sim::BufId,
+    rows: usize,
+    cols: usize,
+    rq: Requant,
+    vlen: u32,
+) {
+    let vlmax32 = vlen * 8 / 32;
+    let chunk = vlmax32.min(cols as u32);
+    let full = cols / chunk as usize;
+    let tail = (cols % chunk as usize) as u32;
+    let rv = p.fresh_var();
+    let mut body = Vec::new();
+    let emit_chunk = |p: &mut VProgram, body: &mut Vec<Node>, base: AddrExpr, vl: u32| {
+        let _ = p;
+        body.push(Node::Inst(Inst::VSetVl { vl, sew: Sew::E32, lmul: Lmul::M8, float: false }));
+        body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(acc, base.clone()) }));
+        body.push(Node::Inst(Inst::VRequant {
+            vd: 8,
+            vs: 0,
+            mult: rq.mult,
+            shift: rq.shift,
+            zp: rq.zp,
+        }));
+        body.push(Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(out, base) }));
+    };
+    if full > 0 {
+        let cv = p.fresh_var();
+        let base = AddrExpr::var(rv, cols as i64).plus(cv, chunk as i64);
+        let mut inner = Vec::new();
+        emit_chunk(p, &mut inner, base, chunk);
+        body.push(Node::Loop(LoopNode { var: cv, extent: full as u32, unroll: 1, body: inner }));
+    }
+    if tail > 0 {
+        let base = AddrExpr::var(rv, cols as i64).offset(full as i64 * chunk as i64);
+        emit_chunk(p, &mut body, base, tail);
+    }
+    p.body
+        .push(Node::Loop(LoopNode { var: rv, extent: rows as u32, unroll: 1, body }));
+}
+
+fn emit_dwconv(
+    spatial: usize,
+    channels: usize,
+    taps: usize,
+    dtype: DType,
+    requant: Option<Requant>,
+    sched: &DwConvSchedule,
+    vlen: u32,
+) -> VProgram {
+    let mut p = VProgram::new(format!("ours-dwconv-{spatial}x{channels}x{taps}-{}", dtype.name()));
+    let bufs =
+        declare_buffers(&mut p, &Op::DwConv { spatial, channels, taps, dtype, requant });
+    let sew = dtype.sew();
+    let acc_sew = dtype.accumulator().sew();
+    let float = dtype.is_float();
+    let widen = dtype == DType::I8;
+    // VL is accumulator-bounded (the ACC tile lives at acc SEW in LMUL=8).
+    let vl_acc_max = vlen * 8 / dtype.accumulator().sew().bits();
+    let vl = sched.vl.min(channels as u32).min(vl_acc_max);
+    let c_full = channels / vl as usize;
+    let c_tail = (channels % vl as usize) as u32;
+
+    let sv = p.fresh_var();
+
+    // One channel chunk at spatial position sv: ACC tile stays in a vector
+    // register across all taps (the tuned hoisting Algorithm 2 enables),
+    // or is loaded/stored per tap when `unroll_taps` is false (the literal
+    // Algorithm-2 composition the library uses).
+    let emit_chunk = |p: &mut VProgram, c_base: AddrExpr, vl_cur: u32| -> Vec<Node> {
+        let tv = p.fresh_var();
+        let x_addr = AddrExpr::var(sv, (taps * channels) as i64)
+            .plus(tv, channels as i64)
+            .plus_expr(&c_base);
+        let w_addr = AddrExpr::var(tv, channels as i64).plus_expr(&c_base);
+        let y_addr = AddrExpr::var(sv, channels as i64).plus_expr(&c_base);
+        let load_y = Node::Inst(Inst::VLoad { vd: 16, mem: MemRef::unit(bufs.acc, y_addr.clone()) });
+        let store_y = Node::Inst(Inst::VStore { vs: 16, mem: MemRef::unit(bufs.acc, y_addr) });
+        let set_acc =
+            Node::Inst(Inst::VSetVl { vl: vl_cur, sew: acc_sew, lmul: Lmul::M8, float });
+        let set_elem = Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: Lmul::M8, float });
+        let tap_body = |with_acc_io: bool| {
+            let mut b = Vec::new();
+            if with_acc_io {
+                b.push(set_acc.clone());
+                b.push(load_y.clone());
+            }
+            b.push(set_elem.clone());
+            b.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, x_addr.clone()) }));
+            b.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.b, w_addr.clone()) }));
+            b.push(Node::Inst(Inst::VMacc { vd: 16, vs1: 0, vs2: 8, widen }));
+            if with_acc_io {
+                b.push(set_acc.clone());
+                b.push(store_y.clone());
+            }
+            b
+        };
+        if sched.unroll_taps {
+            // Hoisted: load ACC once, run all taps, store once.
+            let tap_loop = Node::Loop(LoopNode {
+                var: tv,
+                extent: taps as u32,
+                unroll: taps as u32,
+                body: tap_body(false),
+            });
+            vec![set_acc.clone(), load_y, tap_loop, set_acc, store_y]
+        } else {
+            let body = tap_body(true);
+            vec![Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body })]
+        }
+    };
+
+    let mut s_body = Vec::new();
+    if c_full > 0 {
+        let cv = p.fresh_var();
+        let chunk = emit_chunk(&mut p, AddrExpr::var(cv, vl as i64), vl);
+        s_body.push(Node::Loop(LoopNode { var: cv, extent: c_full as u32, unroll: 1, body: chunk }));
+    }
+    if c_tail > 0 {
+        let base = AddrExpr::constant(c_full as i64 * vl as i64);
+        s_body.extend(emit_chunk(&mut p, base, c_tail));
+    }
+    p.body.push(Node::Loop(LoopNode { var: sv, extent: spatial as u32, unroll: 1, body: s_body }));
+
+    if let Some(rq) = requant {
+        emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), spatial, channels, rq, vlen);
+    }
+    p
+}
+
+fn emit_eltwise(len: usize, dtype: DType, sched: &EltwiseSchedule) -> VProgram {
+    let mut p = VProgram::new(format!("ours-eltwise-{len}-{}", dtype.name()));
+    let bufs = declare_buffers(&mut p, &Op::Eltwise { len, dtype });
+    let sew = dtype.sew();
+    let float = dtype.is_float();
+    let vl = sched.vl.min(len as u32);
+    let full = len / vl as usize;
+    let tail = (len % vl as usize) as u32;
+
+    let emit_chunk = |base: AddrExpr, vl_cur: u32| -> Vec<Node> {
+        vec![
+            Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: Lmul::M8, float }),
+            Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, base.clone()) }),
+            Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.b, base.clone()) }),
+            Node::Inst(Inst::VLoad { vd: 16, mem: MemRef::unit(bufs.acc, base.clone()) }),
+            Node::Inst(Inst::VMacc { vd: 16, vs1: 0, vs2: 8, widen: false }),
+            Node::Inst(Inst::VStore { vs: 16, mem: MemRef::unit(bufs.acc, base) }),
+        ]
+    };
+    if full > 0 {
+        let cv = p.fresh_var();
+        let body = emit_chunk(AddrExpr::var(cv, vl as i64), vl);
+        p.body.push(Node::Loop(LoopNode {
+            var: cv,
+            extent: full as u32,
+            unroll: sched.unroll.max(1),
+            body,
+        }));
+    }
+    if tail > 0 {
+        let base = AddrExpr::constant(full as i64 * vl as i64);
+        p.body.extend(emit_chunk(base, tail));
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{execute, BufStore, Mode, SocConfig};
+    use crate::tir::IntrinChoice;
+
+    fn mm_sched(vl: u32, j: u32, order: LoopOrder, mi: u32) -> Schedule {
+        Schedule::Matmul(MatmulSchedule {
+            intrin: IntrinChoice { vl, j, lmul: 8 },
+            mi,
+            order,
+            unroll: 1,
+            transpose: false,
+        })
+    }
+
+    /// Reference QNN matmul in plain rust.
+    fn ref_qnn_matmul(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[i8],
+        b: &[i8],
+        d: &[i32],
+        rq: Requant,
+    ) -> Vec<i8> {
+        let mut out = vec![0i8; m * n];
+        for i in 0..m {
+            for jj in 0..n {
+                let mut acc = d[i * n + jj] as i64;
+                for kk in 0..k {
+                    acc += a[i * k + kk] as i64 * b[jj * k + kk] as i64;
+                }
+                out[i * n + jj] =
+                    crate::sim::requant_i64(acc, rq.mult, rq.shift, rq.zp) as i8;
+            }
+        }
+        out
+    }
+
+    fn run_i8_matmul(m: usize, n: usize, k: usize, sched: &Schedule, vlen: u32) -> (Vec<i8>, Vec<i8>) {
+        let rq = Requant { mult: 1 << 18, shift: 20, zp: 3 };
+        let op = Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rq) };
+        let p = emit(&op, sched, vlen);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..m * k).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+        let bv: Vec<i8> = (0..n * k).map(|i| ((i * 23 + 5) % 253) as i8).collect();
+        let dv: Vec<i32> = (0..m * n).map(|i| (i as i32 % 97) - 48).collect();
+        bufs.set_i8(0, &av);
+        bufs.set_i8(1, &bv);
+        bufs.set_i32(2, &dv);
+        let soc = SocConfig::saturn(vlen);
+        execute(&soc, &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_i8(3).to_vec();
+        let want = ref_qnn_matmul(m, n, k, &av, &bv, &dv, rq);
+        (got, want)
+    }
+
+    #[test]
+    fn alg1_i8_exact_all_orders() {
+        for order in LoopOrder::ALL {
+            let sched = mm_sched(16, 8, order, 2);
+            let (got, want) = run_i8_matmul(8, 16, 32, &sched, 256);
+            assert_eq!(got, want, "order {}", order.name());
+        }
+    }
+
+    #[test]
+    fn alg1_transposed_mapping_is_exact() {
+        // Narrow-n layer: the transposed mapping tiles J along m.
+        for order in LoopOrder::ALL {
+            let sched = Schedule::Matmul(MatmulSchedule {
+                intrin: IntrinChoice { vl: 16, j: 8, lmul: 8 },
+                mi: 2,
+                order,
+                unroll: 1,
+                transpose: true,
+            });
+            let (got, want) = run_i8_matmul(24, 6, 32, &sched, 256);
+            assert_eq!(got, want, "order {}", order.name());
+        }
+    }
+
+    #[test]
+    fn transposed_mapping_beats_j1_on_narrow_n() {
+        // ResNet8-like layer: m large, n=16 < J=32 at VLEN=1024.
+        let op = Op::Matmul { m: 256, n: 16, k: 144, dtype: DType::I8, requant: Some(Requant::default_for_tests()) };
+        let run = |sched: &Schedule| {
+            let p = emit(&op, sched, 1024);
+            let mut bufs = BufStore::timing(&p);
+            execute(&SocConfig::saturn(1024), &p, &mut bufs, Mode::Timing, true).cycles
+        };
+        let j1 = Schedule::Matmul(MatmulSchedule {
+            intrin: IntrinChoice { vl: 144, j: 1, lmul: 8 },
+            mi: 4,
+            order: LoopOrder::NMK,
+            unroll: 2,
+            transpose: false,
+        });
+        let transposed = Schedule::Matmul(MatmulSchedule {
+            intrin: IntrinChoice { vl: 144, j: 32, lmul: 8 },
+            mi: 4,
+            order: LoopOrder::NMK,
+            unroll: 2,
+            transpose: true,
+        });
+        assert!(run(&transposed) < run(&j1), "transposed must win on narrow n");
+    }
+
+    #[test]
+    fn alg1_i8_with_tails() {
+        // k=40 not divisible by vl=16; n=10 not divisible by j=4.
+        let sched = mm_sched(16, 4, LoopOrder::NMK, 1);
+        let (got, want) = run_i8_matmul(3, 10, 40, &sched, 256);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn alg1_j1_variant() {
+        let sched = mm_sched(16, 1, LoopOrder::MNK, 1);
+        let (got, want) = run_i8_matmul(4, 16, 16, &sched, 1024);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn alg1_f32_close_to_reference() {
+        let (m, n, k) = (4usize, 8usize, 32usize);
+        let op = Op::Matmul { m, n, k, dtype: DType::F32, requant: None };
+        let sched = mm_sched(32, 8, LoopOrder::NMK, 2);
+        let p = emit(&op, &sched, 256);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<f32> = (0..m * k).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
+        let bv: Vec<f32> = (0..n * k).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+        let dv: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.01).collect();
+        bufs.set_f32(0, &av);
+        bufs.set_f32(1, &bv);
+        bufs.set_f32(2, &dv);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_f32(2);
+        for i in 0..m {
+            for jj in 0..n {
+                let want: f32 = (0..k).map(|kk| av[i * k + kk] * bv[jj * k + kk]).sum::<f32>()
+                    + dv[i * n + jj];
+                let g = got[i * n + jj];
+                assert!((g - want).abs() < 1e-3, "({i},{jj}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn store_share_below_one_percent_for_big_matmul() {
+        // Paper Fig. 5: tuned schedules keep vector stores < 1 %.
+        let op = Op::square_matmul(128, DType::I8);
+        let sched = mm_sched(128, 32, LoopOrder::NMK, 4);
+        let p = emit(&op, &sched, 1024);
+        let mut bufs = BufStore::timing(&p);
+        let r = execute(&SocConfig::saturn(1024), &p, &mut bufs, Mode::Timing, true);
+        assert!(
+            r.trace.store_share() < 0.01,
+            "store share {}",
+            r.trace.store_share()
+        );
+    }
+
+    #[test]
+    fn dwconv_matches_scalar_reference() {
+        let (s, c, t) = (6usize, 24usize, 9usize);
+        let op = Op::DwConv { spatial: s, channels: c, taps: t, dtype: DType::I8, requant: None };
+        for hoist in [true, false] {
+            let sched = Schedule::DwConv(DwConvSchedule { vl: 16, unroll_taps: hoist });
+            let p = emit(&op, &sched, 256);
+            let mut bufs = BufStore::functional(&p);
+            let xv: Vec<i8> = (0..s * t * c).map(|i| ((i * 7) % 251) as i8).collect();
+            let wv: Vec<i8> = (0..t * c).map(|i| ((i * 3) % 250) as i8).collect();
+            bufs.set_i8(0, &xv);
+            bufs.set_i8(1, &wv);
+            execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+            let got = bufs.get_i32(2);
+            for si in 0..s {
+                for ci in 0..c {
+                    let want: i64 = (0..t)
+                        .map(|ti| {
+                            xv[si * t * c + ti * c + ci] as i64 * wv[ti * c + ci] as i64
+                        })
+                        .sum();
+                    assert_eq!(got[si * c + ci] as i64, want, "s={si} c={ci} hoist={hoist}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_hoisting_reduces_stores() {
+        let op = Op::DwConv { spatial: 16, channels: 64, taps: 9, dtype: DType::I8, requant: None };
+        let run = |hoist| {
+            let sched = Schedule::DwConv(DwConvSchedule { vl: 64, unroll_taps: hoist });
+            let p = emit(&op, &sched, 256);
+            let mut bufs = BufStore::timing(&p);
+            execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Timing, true)
+        };
+        let hoisted = run(true);
+        let literal = run(false);
+        assert!(hoisted.trace.store_share() < literal.trace.store_share());
+        assert!(hoisted.cycles < literal.cycles);
+    }
+
+    #[test]
+    fn eltwise_matches_reference_with_tail() {
+        let len = 100usize;
+        let op = Op::Eltwise { len, dtype: DType::F32 };
+        let sched = Schedule::Eltwise(EltwiseSchedule { vl: 16, unroll: 2 });
+        let p = emit(&op, &sched, 256);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
+        let bv: Vec<f32> = (0..len).map(|i| 1.0 - i as f32 * 0.01).collect();
+        let yv: Vec<f32> = (0..len).map(|i| i as f32).collect();
+        bufs.set_f32(0, &av);
+        bufs.set_f32(1, &bv);
+        bufs.set_f32(2, &yv);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_f32(2);
+        for i in 0..len {
+            let want = yv[i] + av[i] * bv[i];
+            assert!((got[i] - want).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn f16_matmul_runs_and_is_finite() {
+        let op = Op::Matmul { m: 4, n: 8, k: 16, dtype: DType::F16, requant: None };
+        let sched = mm_sched(16, 8, LoopOrder::MNK, 1);
+        let p = emit(&op, &sched, 256);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<f32> = (0..4 * 16).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect();
+        let bv: Vec<f32> = (0..8 * 16).map(|i| (i % 5) as f32 * 0.125).collect();
+        bufs.set_f16_from_f32(0, &av);
+        bufs.set_f16_from_f32(1, &bv);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_f16_as_f32(2);
+        assert!(got.iter().all(|x| x.is_finite()));
+        // Coarse check against f32 reference (f16 rounding tolerance).
+        let want: f32 = (0..16).map(|kk| av[kk] * bv[kk]).sum();
+        assert!((got[0] - want).abs() < 0.1, "{} vs {want}", got[0]);
+    }
+}

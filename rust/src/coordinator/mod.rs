@@ -1,0 +1,16 @@
+//! The measurement coordinator: a leader/worker pool mirroring the paper's
+//! tuning loop (leader = MetaSchedule process owning the database and the
+//! cost model; workers = the compile→flash→measure pipeline, here the
+//! simulator).
+//!
+//! On the paper's testbed one measurement takes 9–12 s (compile + flash +
+//! run); our substitute executes the candidate on the simulated SoC in
+//! milliseconds, and the pool runs candidates of one round in parallel
+//! worker threads — the structure (batched dispatch, result collection,
+//! centralized learning) is the same.
+
+mod pool;
+mod session;
+
+pub use pool::MeasurePool;
+pub use session::{ScenarioResult, Session, SessionOptions};

@@ -1,0 +1,94 @@
+//! Worker pool: parallel candidate measurement over std::thread::scope.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, VProgram};
+use crate::tune::Measurer;
+
+/// A fixed-size measurement worker pool.
+pub struct MeasurePool {
+    workers: usize,
+}
+
+impl MeasurePool {
+    pub fn new(workers: usize) -> MeasurePool {
+        MeasurePool { workers: workers.max(1) }
+    }
+
+    /// One pool sized to the host.
+    pub fn default_pool() -> MeasurePool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        MeasurePool::new(n.min(16))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl Measurer for MeasurePool {
+    fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
+        if programs.len() <= 1 || self.workers == 1 {
+            return crate::tune::SerialMeasurer.measure(soc, programs);
+        }
+        let results: Vec<Mutex<Option<ExecResult>>> =
+            programs.iter().map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(programs.len()) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= programs.len() {
+                        break;
+                    }
+                    let p = &programs[i];
+                    let mut bufs = BufStore::timing(p);
+                    let r = execute(soc, p, &mut bufs, Mode::Timing, true);
+                    *results[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker dropped a job"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{self, Scenario};
+    use crate::tir::{DType, Op};
+    use crate::tune::SerialMeasurer;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let soc = SocConfig::saturn(256);
+        let programs: Vec<VProgram> = [16usize, 24, 32, 48, 64]
+            .iter()
+            .map(|&s| {
+                codegen::generate(&Op::square_matmul(s, DType::I8), &Scenario::AutovecGcc, 256)
+                    .unwrap()
+            })
+            .collect();
+        let serial = SerialMeasurer.measure(&soc, &programs);
+        let parallel = MeasurePool::new(4).measure(&soc, &programs);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.cycles, p.cycles, "simulation must be deterministic across threads");
+            assert_eq!(s.trace, p.trace);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job() {
+        let soc = SocConfig::saturn(256);
+        let pool = MeasurePool::new(8);
+        assert!(pool.measure(&soc, &[]).is_empty());
+        let p = codegen::generate(&Op::square_matmul(16, DType::I8), &Scenario::ScalarOs, 256)
+            .unwrap();
+        assert_eq!(pool.measure(&soc, &[p]).len(), 1);
+    }
+}

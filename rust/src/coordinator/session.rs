@@ -1,0 +1,337 @@
+//! The tuning session: the leader process that owns the database and the
+//! cost model, runs tuning tasks, and measures baseline scenarios.
+
+use crate::codegen::{self, Scenario};
+use crate::intrinsics::Registry;
+use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig};
+use crate::tir::{DType, Op};
+use crate::tune::{
+    allocate_trials, extract_tasks, tune_op, CostModel, Database, HeuristicCostModel,
+    MlpCostModel, SearchConfig, TuneOutcome,
+};
+
+use super::pool::MeasurePool;
+
+/// Session construction options.
+#[derive(Clone, Debug)]
+pub struct SessionOptions {
+    pub seed: u64,
+    /// Use the PJRT MLP cost model when artifacts are available.
+    pub use_mlp: bool,
+    pub workers: usize,
+    /// Trials per single-operator tuning run (paper: 100).
+    pub trials_per_op: usize,
+    /// Registry ablation switches (DESIGN.md §4).
+    pub vl_ladder: bool,
+    pub j_one: bool,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            seed: 42,
+            use_mlp: true,
+            workers: MeasurePool::default_pool().workers(),
+            trials_per_op: 100,
+            vl_ladder: true,
+            j_one: true,
+        }
+    }
+}
+
+/// One scenario measurement (used by the figure harnesses).
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub scenario_name: String,
+    pub result: ExecResult,
+    pub code_size_bytes: u64,
+}
+
+/// The leader: cost model + database + worker pool for one SoC.
+pub struct Session {
+    pub soc: SocConfig,
+    pub registry: Registry,
+    pub db: Database,
+    pub pool: MeasurePool,
+    pub opts: SessionOptions,
+    model: Box<dyn CostModel>,
+    model_kind: &'static str,
+}
+
+impl Session {
+    /// Build a session; falls back to the heuristic cost model when the
+    /// PJRT artifacts are missing (e.g. before `make artifacts`).
+    pub fn new(soc: SocConfig, opts: SessionOptions) -> Session {
+        let registry = Registry::build_with(soc.vlen, opts.vl_ladder, opts.j_one);
+        let model: Box<dyn CostModel> = if opts.use_mlp {
+            match MlpCostModel::from_artifacts(opts.seed as i32) {
+                Ok(m) => Box::new(m),
+                Err(e) => {
+                    eprintln!("note: PJRT cost model unavailable ({e}); using heuristic");
+                    Box::new(HeuristicCostModel)
+                }
+            }
+        } else {
+            Box::new(HeuristicCostModel)
+        };
+        let model_kind = model.name();
+        Session {
+            registry,
+            db: Database::new(),
+            pool: MeasurePool::new(opts.workers),
+            model,
+            model_kind,
+            soc,
+            opts,
+        }
+    }
+
+    /// Replace the cost model (ablations).
+    pub fn with_model(mut self, model: Box<dyn CostModel>) -> Session {
+        self.model_kind = model.name();
+        self.model = model;
+        self
+    }
+
+    pub fn model_kind(&self) -> &'static str {
+        self.model_kind
+    }
+
+    /// Tune one operator with an explicit trial budget.
+    pub fn tune(&mut self, op: &Op, trials: usize) -> Option<TuneOutcome> {
+        let config = SearchConfig {
+            trials,
+            seed: self.opts.seed ^ fxhash(&op.key()),
+            ..Default::default()
+        };
+        tune_op(
+            op,
+            &self.soc,
+            &self.registry,
+            self.model.as_mut(),
+            &self.pool,
+            &mut self.db,
+            &config,
+        )
+    }
+
+    /// The scenario "ours" resolves to for `op`: the tuned schedule, or the
+    /// compiler's autovectorization when no intrinsic matches (TVM keeps
+    /// non-tensorizable blocks on the default codegen path).
+    pub fn ours_scenario(&mut self, op: &Op, trials: usize) -> Scenario {
+        if let Some(best) = self.db.best(&op.key(), &self.soc.name.clone()) {
+            return Scenario::Ours(best.schedule.clone());
+        }
+        match self.tune(op, trials) {
+            Some(outcome) => Scenario::Ours(outcome.best.schedule),
+            None => self.fallback_scenario(),
+        }
+    }
+
+    /// Compiler fallback flavour for this SoC (GCC on the FPGA targets,
+    /// LLVM on the BPI-F3 — the paper's toolchains).
+    pub fn fallback_scenario(&self) -> Scenario {
+        if self.soc.name.starts_with("bpi") {
+            Scenario::AutovecLlvm
+        } else {
+            Scenario::AutovecGcc
+        }
+    }
+
+    /// Measure one (op, scenario). Returns None when the scenario does not
+    /// support the op (muRISCV-NN on floats).
+    pub fn measure(&self, op: &Op, scenario: &Scenario) -> Option<ScenarioResult> {
+        let program = codegen::generate(op, scenario, self.soc.vlen)?;
+        let mut bufs = BufStore::timing(&program);
+        let result = execute(&self.soc, &program, &mut bufs, Mode::Timing, true);
+        let code_size_bytes = match scenario {
+            Scenario::MuRiscvNn => {
+                codegen::baselines::muriscvnn::library_fn_bytes(op)
+                    + codegen::baselines::muriscvnn::CALL_GLUE_BYTES
+            }
+            Scenario::Ours(s) => {
+                // one intrinsic function + the layer's loop-nest glue
+                let _ = codegen::ours::variant_key(op, s);
+                codegen::ours::INTRINSIC_FN_BYTES + codegen::ours::LAYER_GLUE_BYTES
+            }
+            _ => program.code_size_bytes(),
+        };
+        Some(ScenarioResult { scenario_name: scenario.name().to_string(), result, code_size_bytes })
+    }
+
+    /// Tune a whole network: extract tasks, allocate the budget (paper:
+    /// 200 trials, min 10 per layer), tune each task. Returns per-task
+    /// outcomes keyed by op key.
+    pub fn tune_network(
+        &mut self,
+        layers: &[Op],
+        total_trials: usize,
+        min_per_task: usize,
+    ) -> Vec<(String, Option<TuneOutcome>)> {
+        let tasks = extract_tasks(layers);
+        let alloc = allocate_trials(&tasks, total_trials, min_per_task);
+        tasks
+            .iter()
+            .zip(alloc)
+            .map(|(t, trials)| (t.op.key(), self.tune(&t.op, trials)))
+            .collect()
+    }
+
+    /// End-to-end network latency + aggregate trace under one scenario.
+    /// Per-layer results are summed (the runtime executes layers serially,
+    /// as the TVM runtimes the paper uses do). Returns None if any layer
+    /// is unsupported by the scenario.
+    pub fn measure_network(&mut self, layers: &[Op], scenario_of: &mut dyn FnMut(&mut Session, &Op) -> Scenario)
+        -> Option<NetworkResult> {
+        // Split borrows: collect scenarios first.
+        let mut per_layer: Vec<(Op, Scenario)> = Vec::with_capacity(layers.len());
+        for op in layers {
+            let sc = scenario_of(self, op);
+            per_layer.push((op.clone(), sc));
+        }
+        let mut cycles = 0.0;
+        let mut trace = crate::sim::TraceCounts::default();
+        let mut code_size: u64 = 0;
+        let mut library_fns: std::collections::BTreeMap<&'static str, u64> = Default::default();
+        let mut intrinsic_fns: std::collections::BTreeSet<String> = Default::default();
+        for (op, sc) in &per_layer {
+            let r = self.measure(op, sc)?;
+            cycles += r.result.cycles;
+            trace.merge(&r.result.trace);
+            match sc {
+                Scenario::MuRiscvNn => {
+                    // Library functions are shared across layers of the
+                    // same kind: count each function once + glue per call.
+                    let kind = match op {
+                        Op::Matmul { m, .. } if *m > 1 => "conv",
+                        Op::Matmul { .. } => "fc",
+                        Op::DwConv { .. } => "dwconv",
+                        Op::Eltwise { .. } => "eltwise",
+                    };
+                    library_fns
+                        .entry(kind)
+                        .or_insert_with(|| codegen::baselines::muriscvnn::library_fn_bytes(op));
+                    code_size += codegen::baselines::muriscvnn::CALL_GLUE_BYTES;
+                }
+                Scenario::Ours(s) => {
+                    // Tensorized layers: each distinct intrinsic variant is
+                    // one shared function; every layer adds loop-nest glue
+                    // (TVM emits one PrimFunc per layer). The all-FC
+                    // anomaly-detection network inverts here: many glue
+                    // nests + several variants vs one small library fn.
+                    intrinsic_fns.insert(codegen::ours::variant_key(op, s));
+                    code_size += codegen::ours::LAYER_GLUE_BYTES;
+                }
+                _ => {
+                    // Inline (non-tensorized) code: counted per layer.
+                    let program = codegen::generate(op, sc, self.soc.vlen)?;
+                    code_size += program.code_size_bytes();
+                }
+            }
+        }
+        code_size += library_fns.values().sum::<u64>();
+        code_size += intrinsic_fns.len() as u64 * codegen::ours::INTRINSIC_FN_BYTES;
+        Some(NetworkResult { cycles, trace, code_size_bytes: code_size })
+    }
+
+    /// Validation helper: a default QNN op for smoke tests.
+    pub fn example_op() -> Op {
+        Op::square_matmul(64, DType::I8)
+    }
+}
+
+/// Aggregate result of a whole-network measurement.
+#[derive(Clone, Debug)]
+pub struct NetworkResult {
+    pub cycles: f64,
+    pub trace: crate::sim::TraceCounts,
+    pub code_size_bytes: u64,
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heuristic_session(vlen: u32) -> Session {
+        let opts = SessionOptions { use_mlp: false, workers: 2, ..Default::default() };
+        Session::new(SocConfig::saturn(vlen), opts)
+    }
+
+    #[test]
+    fn tuned_beats_all_baselines_on_int8_matmul() {
+        let mut s = heuristic_session(1024);
+        let op = Op::square_matmul(64, DType::I8);
+        let ours = s.ours_scenario(&op, 40);
+        let ours_cycles = s.measure(&op, &ours).unwrap().result.cycles;
+        for baseline in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn] {
+            let b = s.measure(&op, &baseline).unwrap().result.cycles;
+            assert!(
+                ours_cycles < b,
+                "{}: ours {ours_cycles} vs {} {b}",
+                op.key(),
+                baseline.name()
+            );
+        }
+    }
+
+    #[test]
+    fn network_tuning_allocates_all_tasks() {
+        let mut s = heuristic_session(256);
+        let layers = vec![
+            Op::square_matmul(32, DType::I8),
+            Op::square_matmul(32, DType::I8),
+            Op::square_matmul(16, DType::I8),
+        ];
+        let outcomes = s.tune_network(&layers, 30, 5);
+        assert_eq!(outcomes.len(), 2); // deduped
+        assert!(outcomes.iter().all(|(_, o)| o.is_some()));
+    }
+
+    #[test]
+    fn measure_network_sums_layers() {
+        let mut s = heuristic_session(256);
+        let layers =
+            vec![Op::square_matmul(32, DType::I8), Op::square_matmul(16, DType::I8)];
+        let r = s
+            .measure_network(&layers, &mut |_s, _op| Scenario::ScalarOs)
+            .unwrap();
+        let lone: f64 = layers
+            .iter()
+            .map(|op| s.measure(op, &Scenario::ScalarOs).unwrap().result.cycles)
+            .sum();
+        assert!((r.cycles - lone).abs() < 1e-6);
+        assert!(r.code_size_bytes > 0);
+    }
+
+    #[test]
+    fn muriscvnn_network_counts_library_once() {
+        let mut s = heuristic_session(256);
+        let layers =
+            vec![Op::square_matmul(32, DType::I8), Op::square_matmul(16, DType::I8)];
+        let r = s
+            .measure_network(&layers, &mut |_s, _op| Scenario::MuRiscvNn)
+            .unwrap();
+        let fn_size = codegen::baselines::muriscvnn::library_fn_bytes(&layers[0]);
+        // One shared function + 2 glue sites, NOT 2x the function.
+        assert!(r.code_size_bytes < 2 * fn_size);
+        assert!(r.code_size_bytes >= fn_size);
+    }
+
+    #[test]
+    fn bpi_fallback_is_llvm() {
+        let s = Session::new(
+            SocConfig::bpi_f3(),
+            SessionOptions { use_mlp: false, ..Default::default() },
+        );
+        assert_eq!(s.fallback_scenario(), Scenario::AutovecLlvm);
+    }
+}

@@ -1,0 +1,252 @@
+//! Tensor-intrinsic registry (paper §III).
+//!
+//! The paper registers *multiple versions* of each RVV tensor intrinsic
+//! into MetaSchedule because intrinsic definitions must have static
+//! shapes: starting from `VL = VLMAX` (Equation 1, with LMUL = 8) and
+//! halving down to `VL = 4`, plus two output-tile widths `J = VLEN/32`
+//! (a full 32-bit accumulator register) and `J = 1` (for very small
+//! workloads). The sampler picks among the variants that *match* the
+//! operator being tuned; this module reproduces that registry and the
+//! matching rule.
+
+use crate::isa::{Lmul, Sew};
+use crate::tir::{DType, IntrinChoice, Op};
+
+/// Minimum VL registered; the paper found vectors shorter than 4 elements
+/// not worth offloading to the vector unit.
+pub const MIN_VL: u32 = 4;
+
+/// One registered tensor-intrinsic variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Intrinsic {
+    /// Which algorithm this implements.
+    pub kind: IntrinKind,
+    /// Static vector length of the definition.
+    pub vl: u32,
+    /// Output tile width (Algorithm 1 only; 1 for Algorithm 2).
+    pub j: u32,
+    /// Register-group multiplier of the implementation.
+    pub lmul: Lmul,
+    /// Element dtype the definition was instantiated for.
+    pub dtype: DType,
+}
+
+/// The two intrinsics of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntrinKind {
+    /// Algorithm 1: vector-matrix multiply with register-resident
+    /// accumulation (fully connected / conv-as-GEMM / attention).
+    VMatmul,
+    /// Algorithm 2: elementwise multiply-accumulate (depthwise conv etc).
+    VMacc,
+}
+
+impl Intrinsic {
+    pub fn choice(&self) -> IntrinChoice {
+        IntrinChoice { vl: self.vl, j: self.j, lmul: self.lmul.factor() }
+    }
+}
+
+/// The registry of intrinsic variants for one SoC (VLEN) — what
+/// `tvm.tir.TensorIntrin.register` calls would have installed.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub vlen: u32,
+    pub intrinsics: Vec<Intrinsic>,
+}
+
+impl Registry {
+    /// Build the full VL-ladder registry for a given VLEN, mirroring §III:
+    /// LMUL = 8, VL from VLMAX halving to 4, J ∈ {VLEN/32, 1}.
+    pub fn build(vlen: u32) -> Registry {
+        Self::build_with(vlen, true, true)
+    }
+
+    /// Configurable construction for the ablation studies:
+    /// `vl_ladder = false` registers only VL = VLMAX;
+    /// `j_one = false` drops the J = 1 variants.
+    pub fn build_with(vlen: u32, vl_ladder: bool, j_one: bool) -> Registry {
+        let mut intrinsics = Vec::new();
+        let lmul = Lmul::M8;
+        for dtype in [DType::I8, DType::F16, DType::F32] {
+            let sew = dtype.sew();
+            let vlmax = vlen * lmul.factor() / sew.bits();
+            // Algorithm 2 keeps a full-width accumulator register group, so
+            // its VL is bounded by the accumulator SEW (int8 accumulates in
+            // int32 -> VF is 4x smaller than the element VLMAX).
+            let vlmax_acc = vlen * lmul.factor() / dtype.accumulator().sew().bits();
+            let j_full = vlen / 32;
+            let mut vl = vlmax;
+            while vl >= MIN_VL {
+                for j in [j_full, 1] {
+                    if j == 1 && !j_one {
+                        continue;
+                    }
+                    intrinsics.push(Intrinsic {
+                        kind: IntrinKind::VMatmul,
+                        vl,
+                        j,
+                        lmul,
+                        dtype,
+                    });
+                }
+                if vl <= vlmax_acc {
+                    intrinsics.push(Intrinsic { kind: IntrinKind::VMacc, vl, j: 1, lmul, dtype });
+                }
+                if !vl_ladder {
+                    break;
+                }
+                vl /= 2;
+            }
+        }
+        Registry { vlen, intrinsics }
+    }
+
+    /// All Algorithm-1 variants that *match* a matmul: VL must not exceed
+    /// the reduction extent k (a definition larger than the operation can
+    /// never be pattern-matched) and J must not exceed n, with matching
+    /// dtypes. Mirrors MetaSchedule's definition-matching of §III; our
+    /// *implementations* additionally handle remainder chunks with a
+    /// smaller `vsetvl` (RVV's dynamic VL), so divisibility is not
+    /// required — the VL ladder still matters because remainder chunks
+    /// waste occupancy.
+    pub fn matmul_candidates(&self, op: &Op) -> Vec<Intrinsic> {
+        let (n, k, dtype) = match op {
+            Op::Matmul { n, k, dtype, .. } => (*n, *k, *dtype),
+            _ => return vec![],
+        };
+        self.matmul_candidates_for(n, k, dtype)
+    }
+
+    /// Matching against explicit effective dimensions (the transposed
+    /// tensorization swaps m and n before matching).
+    pub fn matmul_candidates_for(&self, n_eff: usize, k: usize, dtype: DType) -> Vec<Intrinsic> {
+        self.intrinsics
+            .iter()
+            .filter(|i| {
+                i.kind == IntrinKind::VMatmul
+                    && i.dtype == dtype
+                    && (i.vl as usize) <= k
+                    && (i.j as usize) <= n_eff
+            })
+            .copied()
+            .collect()
+    }
+
+    /// All Algorithm-2 variants matching an elementwise/dwconv channel loop.
+    pub fn vmacc_candidates(&self, len: usize, dtype: DType) -> Vec<Intrinsic> {
+        self.intrinsics
+            .iter()
+            .filter(|i| {
+                i.kind == IntrinKind::VMacc && i.dtype == dtype && (i.vl as usize) <= len
+            })
+            .copied()
+            .collect()
+    }
+
+    /// VLMAX for a dtype at the registry's VLEN with LMUL = 8 (Equation 1).
+    pub fn vlmax(&self, dtype: DType) -> u32 {
+        self.vlen * 8 / dtype.sew().bits()
+    }
+}
+
+/// SEW helper for tests and codegen.
+pub fn sew_of(dtype: DType) -> Sew {
+    dtype.sew()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_halves_to_four() {
+        let reg = Registry::build(1024);
+        // int8: VLMAX = 1024*8/8 = 1024 -> ladder 1024,512,...,4 = 9 levels
+        let vls: Vec<u32> = reg
+            .intrinsics
+            .iter()
+            .filter(|i| i.kind == IntrinKind::VMatmul && i.dtype == DType::I8 && i.j != 1)
+            .map(|i| i.vl)
+            .collect();
+        assert_eq!(vls, vec![1024, 512, 256, 128, 64, 32, 16, 8, 4]);
+    }
+
+    #[test]
+    fn j_variants_follow_vlen() {
+        let reg = Registry::build(1024);
+        let js: std::collections::BTreeSet<u32> = reg
+            .intrinsics
+            .iter()
+            .filter(|i| i.kind == IntrinKind::VMatmul)
+            .map(|i| i.j)
+            .collect();
+        assert_eq!(js, [1u32, 32].into_iter().collect());
+        let reg256 = Registry::build(256);
+        assert!(reg256
+            .intrinsics
+            .iter()
+            .filter(|i| i.kind == IntrinKind::VMatmul)
+            .all(|i| i.j == 8 || i.j == 1));
+    }
+
+    #[test]
+    fn matching_respects_shape() {
+        let reg = Registry::build(1024);
+        // 16x16x16 int8: VLMAX=1024 >> 16, only VL in {4,8,16} match; J=32
+        // doesn't divide n=16, so only J=1 variants match (the footnote-2
+        // case of the paper).
+        let op = Op::square_matmul(16, DType::I8);
+        let c = reg.matmul_candidates(&op);
+        assert!(!c.is_empty());
+        assert!(c.iter().all(|i| i.vl <= 16 && i.j == 1));
+
+        // 512^3: VL up to 512 matches; both J variants match.
+        let big = Op::square_matmul(512, DType::I8);
+        let cb = reg.matmul_candidates(&big);
+        assert!(cb.iter().any(|i| i.vl == 512 && i.j == 32));
+        assert!(cb.iter().all(|i| i.vl <= 512));
+    }
+
+    #[test]
+    fn float_dtypes_registered() {
+        let reg = Registry::build(256);
+        // f32: VLMAX = 256*8/32 = 64
+        assert_eq!(reg.vlmax(DType::F32), 64);
+        let op = Op::square_matmul(64, DType::F32);
+        let c = reg.matmul_candidates(&op);
+        assert!(c.iter().any(|i| i.vl == 64));
+        assert!(c.iter().all(|i| i.dtype == DType::F32));
+    }
+
+    #[test]
+    fn ablation_registries() {
+        let no_ladder = Registry::build_with(1024, false, true);
+        let vls: std::collections::BTreeSet<u32> = no_ladder
+            .intrinsics
+            .iter()
+            .filter(|i| i.dtype == DType::I8 && i.kind == IntrinKind::VMatmul)
+            .map(|i| i.vl)
+            .collect();
+        assert_eq!(vls.len(), 1, "only VLMAX registered");
+
+        let no_j1 = Registry::build_with(1024, true, false);
+        assert!(no_j1
+            .intrinsics
+            .iter()
+            .filter(|i| i.kind == IntrinKind::VMatmul)
+            .all(|i| i.j != 1));
+        // The size-16 matmul now has NO matching Algorithm-1 intrinsic.
+        let op = Op::square_matmul(16, DType::I8);
+        assert!(no_j1.matmul_candidates(&op).is_empty());
+    }
+
+    #[test]
+    fn vmacc_matching() {
+        let reg = Registry::build(256);
+        let c = reg.vmacc_candidates(128, DType::I8);
+        assert!(!c.is_empty());
+        assert!(c.iter().all(|i| i.vl as usize <= 128));
+        assert!(reg.vmacc_candidates(3, DType::I8).is_empty());
+    }
+}

@@ -1,0 +1,32 @@
+//! Static code-size model (the binary-footprint axis of Figures 5 and 9).
+//!
+//! RVV instructions are always 32-bit. Scalar RV64GC code is a mix of 16-bit
+//! compressed and 32-bit instructions; empirically ~60 % of the instructions
+//! in GCC-generated loop bodies compress, giving ≈2.8 bytes/instruction.
+//! Loop bookkeeping (init / increment / compare / branch) contributes a
+//! fixed number of static instructions per loop.
+
+/// Bytes of one vector instruction in the binary.
+pub fn vector_instr_bytes() -> u64 {
+    4
+}
+
+/// Average bytes of one scalar instruction (RV64GC with compression).
+pub fn scalar_instr_bytes() -> f64 {
+    2.8
+}
+
+/// Static scalar instructions emitted per loop in the binary
+/// (induction-variable init, add, compare, branch).
+pub const LOOP_OVERHEAD_STATIC_INSTRS: u64 = 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sane_sizes() {
+        assert_eq!(vector_instr_bytes(), 4);
+        assert!(scalar_instr_bytes() > 2.0 && scalar_instr_bytes() < 4.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! RISC-V Vector Extension (RVV 1.0) machine model.
+//!
+//! This module captures the ISA-level concepts of the paper's §II/§III:
+//! `VLEN` (hardware register width), `SEW` (selected element width), `LMUL`
+//! (register-group multiplier), the resulting `VLMAX` (Equation 1 of the
+//! paper), instruction opcodes with their trace groups (Figures 5/9), and a
+//! static code-size model (the binary-footprint comparison of Figures 5/9).
+
+mod code_size;
+mod vconfig;
+mod vopcode;
+
+pub use code_size::{scalar_instr_bytes, vector_instr_bytes, LOOP_OVERHEAD_STATIC_INSTRS};
+pub use vconfig::{vlmax, Lmul, Sew, VectorConfig};
+pub use vopcode::{InstrGroup, VBinOp};

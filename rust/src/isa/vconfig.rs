@@ -1,0 +1,142 @@
+//! SEW / LMUL / VLEN / VLMAX relationships (paper Figure 2, Equation 1).
+
+/// Selected element width — set at runtime via `vsetvli`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sew {
+    E8,
+    E16,
+    E32,
+    E64,
+}
+
+impl Sew {
+    pub fn bits(self) -> u32 {
+        match self {
+            Sew::E8 => 8,
+            Sew::E16 => 16,
+            Sew::E32 => 32,
+            Sew::E64 => 64,
+        }
+    }
+
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    /// The widened element width (vwmul/vwmacc destination).
+    pub fn widen(self) -> Sew {
+        match self {
+            Sew::E8 => Sew::E16,
+            Sew::E16 => Sew::E32,
+            Sew::E32 => Sew::E64,
+            Sew::E64 => panic!("cannot widen e64"),
+        }
+    }
+}
+
+/// Vector register group multiplier (integer values only; fractional LMUL is
+/// not used by any schedule in this system).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Lmul {
+    M1,
+    M2,
+    M4,
+    M8,
+}
+
+impl Lmul {
+    pub fn factor(self) -> u32 {
+        match self {
+            Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 4,
+            Lmul::M8 => 8,
+        }
+    }
+
+    pub fn from_factor(f: u32) -> Lmul {
+        match f {
+            1 => Lmul::M1,
+            2 => Lmul::M2,
+            4 => Lmul::M4,
+            8 => Lmul::M8,
+            other => panic!("invalid LMUL factor {other}"),
+        }
+    }
+
+    /// Number of architectural registers consumed by one group.
+    pub fn regs(self) -> u32 {
+        self.factor()
+    }
+}
+
+/// The dynamic vector configuration established by a `vsetvli`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VectorConfig {
+    /// Hardware register width in bits (fixed per SoC).
+    pub vlen: u32,
+    pub sew: Sew,
+    pub lmul: Lmul,
+    /// Active vector length (elements); must be <= vlmax().
+    pub vl: u32,
+}
+
+impl VectorConfig {
+    pub fn new(vlen: u32, sew: Sew, lmul: Lmul, vl: u32) -> VectorConfig {
+        let cfg = VectorConfig { vlen, sew, lmul, vl };
+        assert!(
+            vl <= cfg.vlmax(),
+            "VL {} exceeds VLMAX {} (vlen={} sew={} lmul={})",
+            vl,
+            cfg.vlmax(),
+            vlen,
+            sew.bits(),
+            lmul.factor()
+        );
+        cfg
+    }
+
+    /// Equation (1) of the paper: VLMAX = VLEN * LMUL / SEW.
+    pub fn vlmax(&self) -> u32 {
+        self.vlen * self.lmul.factor() / self.sew.bits()
+    }
+}
+
+/// VLMAX for a (vlen, sew, lmul) triple without constructing a config.
+pub fn vlmax(vlen: u32, sew: Sew, lmul: Lmul) -> u32 {
+    vlen * lmul.factor() / sew.bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equation_one_examples() {
+        // Paper examples: VLEN=1024, SEW=8, LMUL=8 -> 1024 elements.
+        assert_eq!(vlmax(1024, Sew::E8, Lmul::M8), 1024);
+        assert_eq!(vlmax(1024, Sew::E32, Lmul::M8), 256);
+        assert_eq!(vlmax(256, Sew::E8, Lmul::M8), 256);
+        assert_eq!(vlmax(256, Sew::E32, Lmul::M1), 8);
+        assert_eq!(vlmax(512, Sew::E16, Lmul::M4), 128);
+    }
+
+    #[test]
+    fn config_enforces_vlmax() {
+        let cfg = VectorConfig::new(256, Sew::E8, Lmul::M8, 256);
+        assert_eq!(cfg.vlmax(), 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds VLMAX")]
+    fn config_rejects_oversized_vl() {
+        VectorConfig::new(256, Sew::E32, Lmul::M1, 9);
+    }
+
+    #[test]
+    fn widening() {
+        assert_eq!(Sew::E8.widen(), Sew::E16);
+        assert_eq!(Sew::E16.widen(), Sew::E32);
+        assert_eq!(Sew::E8.bytes(), 1);
+    }
+}

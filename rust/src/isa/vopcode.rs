@@ -1,0 +1,85 @@
+//! Instruction classification for trace analysis (paper Figures 5 and 9).
+
+/// The instruction groups used by the paper's QEMU-trace analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InstrGroup {
+    /// Vector loads (vle / vlse).
+    Load,
+    /// Vector stores (vse / vsse).
+    Store,
+    /// vsetvl / vsetvli configuration instructions.
+    Config,
+    /// Multiplies, multiply-accumulates, adds (vmul/vmacc/vwmul/vadd/...).
+    MultAdd,
+    /// Reductions (vredsum et al.).
+    Reduction,
+    /// Register moves and slides (vmv, vslideup/vslidedown).
+    Move,
+    /// Everything else (shifts, narrowing clips, mask ops...).
+    Other,
+    /// Scalar (non-vector) instructions — loop bookkeeping, scalar ALU,
+    /// scalar memory. Tracked so "total instruction count" can be reported.
+    Scalar,
+}
+
+impl InstrGroup {
+    pub const ALL: [InstrGroup; 8] = [
+        InstrGroup::Load,
+        InstrGroup::Store,
+        InstrGroup::Config,
+        InstrGroup::MultAdd,
+        InstrGroup::Reduction,
+        InstrGroup::Move,
+        InstrGroup::Other,
+        InstrGroup::Scalar,
+    ];
+
+    pub fn is_vector(self) -> bool {
+        !matches!(self, InstrGroup::Scalar)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            InstrGroup::Load => "load",
+            InstrGroup::Store => "store",
+            InstrGroup::Config => "config",
+            InstrGroup::MultAdd => "mult_add",
+            InstrGroup::Reduction => "reduction",
+            InstrGroup::Move => "move",
+            InstrGroup::Other => "other",
+            InstrGroup::Scalar => "scalar",
+        }
+    }
+}
+
+/// Element-wise binary vector operations (vv or vx forms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VBinOp {
+    Mul,
+    Add,
+    Sub,
+    Max,
+    Min,
+}
+
+impl VBinOp {
+    pub fn group(self) -> InstrGroup {
+        match self {
+            VBinOp::Mul | VBinOp::Add | VBinOp::Sub => InstrGroup::MultAdd,
+            VBinOp::Max | VBinOp::Min => InstrGroup::Other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping() {
+        assert_eq!(VBinOp::Mul.group(), InstrGroup::MultAdd);
+        assert_eq!(VBinOp::Max.group(), InstrGroup::Other);
+        assert!(InstrGroup::Load.is_vector());
+        assert!(!InstrGroup::Scalar.is_vector());
+    }
+}

@@ -1,0 +1,30 @@
+//! # rvv-tune
+//!
+//! Reproduction of *"Tensor Program Optimization for the RISC-V Vector
+//! Extension Using Probabilistic Programs"* (Peccia et al., 2025) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the MetaSchedule-style probabilistic schedule
+//!   tuner ([`tune`]), the simulated RVV SoC measurement substrate
+//!   ([`sim`]), the tensor-program IR and code generators including all
+//!   paper baselines ([`tir`], [`codegen`], [`intrinsics`]), workloads
+//!   ([`workloads`]), trace analysis and figure harnesses ([`report`]),
+//!   and the leader/worker measurement coordinator ([`coordinator`]).
+//! * **L2/L1 (python, build-time only)** — the learned cost model (JAX MLP
+//!   with a Pallas dense kernel) and the numerics oracles, AOT-lowered to
+//!   HLO text in `artifacts/` and executed from rust via PJRT
+//!   ([`runtime`]).
+//!
+//! See DESIGN.md for the substitution table and the experiment index.
+
+pub mod codegen;
+pub mod coordinator;
+pub mod intrinsics;
+pub mod isa;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tir;
+pub mod tune;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,6 @@
+//! rvv-tune CLI — see `print_help` for subcommands.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(rvv_tune::report::cli::run(args));
+}

@@ -1,0 +1,440 @@
+//! The `rvv-tune` command-line interface.
+//!
+//! ```text
+//! rvv-tune figures  [--quick] [--out report] [--only fig3,fig5] [--no-mlp]
+//! rvv-tune figure   --id fig3 [--quick] [--out report]
+//! rvv-tune ablation --id vl-ladder|j-variant|cost-model [--quick]
+//! rvv-tune tune     --workload matmul:128:int8 | model:bert-tiny:int8
+//!                   [--soc saturn-1024] [--trials 100] [--db db.json] [--no-mlp]
+//! rvv-tune simulate --workload matmul:64:int8 --scenario muriscv-nn
+//!                   [--soc saturn-1024] [--trace]
+//! rvv-tune models   [--dtype int8]
+//! rvv-tune info
+//! ```
+
+use std::path::PathBuf;
+
+use crate::codegen::Scenario;
+use crate::coordinator::{Session, SessionOptions};
+use crate::isa::InstrGroup;
+use crate::sim::SocConfig;
+use crate::tir::{DType, Op};
+use crate::util::cli::Args;
+use crate::workloads::{matmul, models};
+
+use super::figures::{self, FigOpts};
+use super::table::{fnum, pct, Table};
+
+const FLAGS: [&str; 4] = ["quick", "trace", "no-mlp", "help"];
+
+/// Entry point; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let args = Args::parse(argv, &FLAGS);
+    if args.flag("help") || args.subcommand.is_none() {
+        print_help();
+        return 0;
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "figures" => cmd_figures(&args),
+        "figure" => cmd_figure(&args),
+        "export" => cmd_export(&args),
+        "converge" => cmd_converge(&args),
+        "ablation" => cmd_ablation(&args),
+        "tune" => cmd_tune(&args),
+        "simulate" => cmd_simulate(&args),
+        "models" => cmd_models(&args),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown subcommand `{other}`");
+            print_help();
+            2
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "rvv-tune — tensor program optimization for RVV using probabilistic programs
+
+USAGE: rvv-tune <subcommand> [options]
+
+  figures   regenerate every paper figure (CSV under --out, default report/)
+  figure    one figure: --id fig3..fig10 | pext (P-extension study)
+  export    tune + print the generated kernel: --workload matmul:64:int8
+  converge  tuning convergence curve CSV: --workload ... [--trials N]
+  ablation  design-choice ablations: --id vl-ladder | j-variant | cost-model
+  tune      tune one workload: --workload matmul:SIZE:DTYPE | model:NAME:DTYPE
+  simulate  measure one scenario: --scenario non-tuned|non-tuned-O3|non-tuned-v|muriscv-nn|packed-simd
+  models    list the network zoo
+  info      artifact/runtime status
+
+COMMON OPTIONS
+  --soc saturn-256|saturn-512|saturn-1024|bpi-f3     (default saturn-1024)
+  --trials N        tuning budget        --quick     reduced sweep
+  --seed N          PRNG seed            --no-mlp    heuristic cost model
+  --out DIR         report directory     --workers N measurement threads"
+    );
+}
+
+fn fig_opts(args: &Args) -> FigOpts {
+    FigOpts {
+        quick: args.flag("quick"),
+        seed: args.get_u64("seed", 42),
+        use_mlp: !args.flag("no-mlp"),
+        workers: args.get_usize("workers", 0),
+        out_dir: PathBuf::from(args.get_or("out", "report")),
+    }
+}
+
+fn parse_workload(spec: &str) -> Result<(String, Vec<Op>, usize), String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        ["matmul", size, dtype] => {
+            let size: usize = size.parse().map_err(|_| format!("bad size {size}"))?;
+            let dtype = DType::parse(dtype).ok_or(format!("bad dtype {dtype}"))?;
+            Ok((format!("matmul-{size}-{dtype}"), vec![matmul::matmul(size, dtype)], 100))
+        }
+        ["model", name, dtype] => {
+            let dtype = DType::parse(dtype).ok_or(format!("bad dtype {dtype}"))?;
+            let m = models::by_name(name, dtype).ok_or(format!("unknown model {name}"))?;
+            Ok((m.name.clone(), m.layers, m.default_trials))
+        }
+        _ => Err(format!("bad workload spec `{spec}` (matmul:SIZE:DTYPE or model:NAME:DTYPE)")),
+    }
+}
+
+fn parse_scenario(name: &str) -> Option<Scenario> {
+    match name {
+        "non-tuned" | "scalar" => Some(Scenario::ScalarOs),
+        "non-tuned-O3" | "autovec-gcc" => Some(Scenario::AutovecGcc),
+        "non-tuned-v" | "autovec-llvm" => Some(Scenario::AutovecLlvm),
+        "muriscv-nn" => Some(Scenario::MuRiscvNn),
+        "packed-simd" | "pext" => Some(Scenario::PackedSimd),
+        _ => None,
+    }
+}
+
+fn session_from(args: &Args) -> Result<Session, String> {
+    let soc_name = args.get_or("soc", "saturn-1024");
+    let soc = SocConfig::by_name(soc_name).ok_or(format!("unknown soc {soc_name}"))?;
+    let mut opts = SessionOptions {
+        seed: args.get_u64("seed", 42),
+        use_mlp: !args.flag("no-mlp"),
+        ..Default::default()
+    };
+    let workers = args.get_usize("workers", 0);
+    if workers > 0 {
+        opts.workers = workers;
+    }
+    Ok(Session::new(soc, opts))
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let opts = fig_opts(args);
+    let only: Option<Vec<String>> =
+        args.get("only").map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    let ids = ["fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10"];
+    for id in ids {
+        if only.as_ref().map(|o| !o.iter().any(|x| x == id)).unwrap_or(false) {
+            continue;
+        }
+        run_figure(id, &opts);
+    }
+    println!("CSV output written to {}", opts.out_dir.display());
+    0
+}
+
+fn run_figure(id: &str, opts: &FigOpts) -> bool {
+    match id {
+        "fig3" => figures::fig3(opts),
+        "fig4" => figures::fig4(opts),
+        "fig5" => figures::fig5(opts),
+        "fig6" => figures::fig6(opts),
+        "fig7" => figures::fig7(opts),
+        "fig8" => figures::fig8(opts),
+        "fig9" => figures::fig9(opts),
+        "fig10" => figures::fig10(opts),
+        "pext" => figures::ext_pext(opts),
+        _ => return false,
+    };
+    true
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let opts = fig_opts(args);
+    let id = args.get_or("id", "");
+    if !run_figure(id, &opts) {
+        eprintln!("unknown figure id `{id}` (fig3..fig10)");
+        return 2;
+    }
+    0
+}
+
+fn cmd_ablation(args: &Args) -> i32 {
+    let opts = fig_opts(args);
+    figures::ablation(&opts, args.get_or("id", "vl-ladder"));
+    0
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    let spec = match args.get("workload") {
+        Some(s) => s,
+        None => {
+            eprintln!("--workload required");
+            return 2;
+        }
+    };
+    let (name, layers, default_trials) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut session = match session_from(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trials = args.get_usize("trials", default_trials);
+    println!(
+        "tuning {name} on {} ({} layers, cost model: {}, {} trials)",
+        session.soc.name,
+        layers.len(),
+        session.model_kind(),
+        trials
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = session.tune_network(&layers, trials, 10.min(trials));
+    let mut t = Table::new(
+        format!("tuning results: {name} on {}", session.soc.name),
+        &["task", "trials", "best_cycles", "best_latency_us", "schedule"],
+    );
+    for (key, outcome) in &outcomes {
+        match outcome {
+            Some(o) => t.row(vec![
+                key.clone(),
+                o.trials_measured.to_string(),
+                fnum(o.best.cycles),
+                fnum(session.soc.cycles_to_us(o.best.cycles)),
+                o.best.schedule.describe(),
+            ]),
+            None => t.row(vec![
+                key.clone(),
+                "0".into(),
+                "-".into(),
+                "-".into(),
+                "fallback (no matching intrinsic)".into(),
+            ]),
+        }
+    }
+    t.print();
+    let measured: usize =
+        outcomes.iter().filter_map(|(_, o)| o.as_ref().map(|o| o.trials_measured)).sum();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "measured {measured} candidates in {dt:.1}s ({:.1} candidates/s; the paper's testbed: ~0.1/s)",
+        measured as f64 / dt.max(1e-9)
+    );
+    if let Some(db_path) = args.get("db") {
+        if let Err(e) = session.db.save(&PathBuf::from(db_path)) {
+            eprintln!("db save failed: {e}");
+            return 1;
+        }
+        println!("database saved to {db_path}");
+    }
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let spec = args.get_or("workload", "matmul:64:int8");
+    let (name, layers, _) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut session = match session_from(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let sc_name = args.get_or("scenario", "non-tuned");
+    let scenario = match parse_scenario(sc_name) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown scenario `{sc_name}`");
+            return 2;
+        }
+    };
+    let Some(r) = session.measure_network(&layers, &mut |_, _| scenario.clone()) else {
+        eprintln!("scenario {sc_name} does not support this workload (float + muriscv-nn?)");
+        return 1;
+    };
+    println!(
+        "{name} under {sc_name} on {}: {} cycles = {} us @ {} MHz, code {} B",
+        session.soc.name,
+        fnum(r.cycles),
+        fnum(session.soc.cycles_to_us(r.cycles)),
+        session.soc.clock_mhz,
+        r.code_size_bytes
+    );
+    if args.flag("trace") {
+        let mut t = Table::new("instruction trace", &["group", "count", "vector_share"]);
+        for g in InstrGroup::ALL {
+            t.row(vec![
+                g.name().into(),
+                r.trace.get(g).to_string(),
+                if g.is_vector() { pct(r.trace.vector_share(g)) } else { "-".into() },
+            ]);
+        }
+        t.row(vec!["TOTAL".into(), r.trace.total().to_string(), "".into()]);
+        t.print();
+    }
+    0
+}
+
+fn cmd_export(args: &Args) -> i32 {
+    let spec = args.get_or("workload", "matmul:64:int8");
+    let (name, layers, _) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut session = match session_from(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trials = args.get_usize("trials", 64);
+    for op in crate::tune::extract_tasks(&layers).iter().map(|t| t.op.clone()) {
+        let sc = session.ours_scenario(&op, trials);
+        let Some(program) = crate::codegen::generate(&op, &sc, session.soc.vlen) else {
+            continue;
+        };
+        println!("// ===== {name} / {} via {} =====", op.key(), sc.name());
+        if let Scenario::Ours(s) = &sc {
+            println!("// schedule: {}", s.describe());
+        }
+        println!("{}", program.pretty());
+    }
+    0
+}
+
+fn cmd_converge(args: &Args) -> i32 {
+    let spec = args.get_or("workload", "matmul:128:int8");
+    let (name, layers, default_trials) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if layers.len() != 1 {
+        eprintln!("converge expects a single-operator workload (matmul:SIZE:DTYPE)");
+        return 2;
+    }
+    let mut session = match session_from(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trials = args.get_usize("trials", default_trials);
+    let Some(outcome) = session.tune(&layers[0], trials) else {
+        eprintln!("workload is not tunable");
+        return 1;
+    };
+    let mut t = Table::new(
+        format!("convergence: {name} ({} trials, best-so-far per round)", outcome.trials_measured),
+        &["round", "best_cycles"],
+    );
+    for (i, c) in outcome.history.iter().enumerate() {
+        t.row(vec![i.to_string(), fnum(*c)]);
+    }
+    t.print();
+    let out_dir = PathBuf::from(args.get_or("out", "report"));
+    if let Err(e) = t.save_csv(&out_dir, &format!("converge_{name}")) {
+        eprintln!("csv save failed: {e}");
+    }
+    0
+}
+
+fn cmd_models(args: &Args) -> i32 {
+    let dtype = DType::parse(args.get_or("dtype", "int8")).unwrap_or(DType::I8);
+    let mut t = Table::new(
+        format!("model zoo ({dtype})"),
+        &["model", "layers", "distinct_tasks", "MACs", "default_trials"],
+    );
+    for name in models::BPI_MODELS {
+        let m = models::by_name(name, dtype).unwrap();
+        t.row(vec![
+            m.name.clone(),
+            m.layers.len().to_string(),
+            m.distinct_tasks().to_string(),
+            format!("{:.2e}", m.total_macs() as f64),
+            m.default_trials.to_string(),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_info() -> i32 {
+    let dir = crate::runtime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match crate::runtime::Engine::load(&dir) {
+        Ok(e) => {
+            println!("PJRT platform: {}", e.platform());
+            println!("artifacts: {:?}", e.artifact_names());
+            println!(
+                "cost model: feature_dim={} score_batch={} train_batch={} hidden={}",
+                e.meta.feature_dim, e.meta.score_batch, e.meta.train_batch, e.meta.hidden
+            );
+            0
+        }
+        Err(e) => {
+            println!("engine unavailable: {e}");
+            println!("run `make artifacts` first; tuning falls back to the heuristic model");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_parsing() {
+        let (name, ops, trials) = parse_workload("matmul:64:int8").unwrap();
+        assert!(name.contains("64"));
+        assert_eq!(ops.len(), 1);
+        assert_eq!(trials, 100);
+        let (name, ops, trials) = parse_workload("model:bert-tiny:float32").unwrap();
+        assert_eq!(name, "bert-tiny");
+        assert!(ops.len() > 10);
+        assert_eq!(trials, 200);
+        assert!(parse_workload("bogus").is_err());
+        assert!(parse_workload("matmul:xx:int8").is_err());
+        assert!(parse_workload("model:nope:int8").is_err());
+    }
+
+    #[test]
+    fn scenario_parsing() {
+        assert_eq!(parse_scenario("muriscv-nn"), Some(Scenario::MuRiscvNn));
+        assert_eq!(parse_scenario("non-tuned-v"), Some(Scenario::AutovecLlvm));
+        assert_eq!(parse_scenario("pext"), Some(Scenario::PackedSimd));
+        assert!(parse_scenario("zzz").is_none());
+    }
+}

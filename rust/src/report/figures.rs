@@ -1,0 +1,676 @@
+//! Figure harnesses: regenerate every figure of the paper's evaluation
+//! (Figures 3-10) plus the §III design-choice ablations.
+//!
+//! Each harness prints the table(s) and writes CSVs under the report dir.
+//! `quick` mode shrinks sizes/trials so the whole set runs in minutes;
+//! full mode uses the paper's budgets (100 trials per matmul, 200 per
+//! network, 400 for MobileLLM).
+//!
+//! Improvement convention (matches the paper's "X% faster"):
+//! `improvement = baseline_latency / ours_latency - 1`.
+
+use std::path::PathBuf;
+
+use crate::codegen::Scenario;
+use crate::coordinator::{Session, SessionOptions};
+use crate::isa::InstrGroup;
+use crate::sim::SocConfig;
+use crate::tir::{DType, Op};
+use crate::util::stats;
+use crate::workloads::{matmul, models};
+
+use super::table::{fnum, pct, Table};
+
+/// Harness options.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    pub quick: bool,
+    pub seed: u64,
+    pub use_mlp: bool,
+    pub workers: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            quick: false,
+            seed: 42,
+            use_mlp: true,
+            workers: 0, // 0 = auto
+            out_dir: PathBuf::from("report"),
+        }
+    }
+}
+
+impl FigOpts {
+    fn session(&self, soc: SocConfig) -> Session {
+        let mut opts = SessionOptions {
+            seed: self.seed,
+            use_mlp: self.use_mlp,
+            ..Default::default()
+        };
+        if self.workers > 0 {
+            opts.workers = self.workers;
+        }
+        Session::new(soc, opts)
+    }
+
+    fn matmul_trials(&self) -> usize {
+        if self.quick { 24 } else { 100 }
+    }
+
+    fn network_trials(&self, default: usize) -> usize {
+        if self.quick { 24 } else { default }
+    }
+
+    fn min_per_task(&self) -> usize {
+        if self.quick { 2 } else { 10 }
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        if self.quick { vec![16, 64, 128] } else { matmul::SIZES.to_vec() }
+    }
+
+    fn dtypes(&self) -> Vec<DType> {
+        if self.quick { vec![DType::I8, DType::F32] } else { matmul::DTYPES.to_vec() }
+    }
+
+    fn model_names(&self, for_bpi: bool) -> Vec<&'static str> {
+        if self.quick {
+            if for_bpi {
+                vec!["anomaly-detection", "keyword-spotting", "bert-tiny"]
+            } else {
+                vec!["anomaly-detection", "keyword-spotting", "image-classification"]
+            }
+        } else if for_bpi {
+            models::BPI_MODELS.to_vec()
+        } else {
+            models::SATURN_MODELS.to_vec()
+        }
+    }
+
+    fn save(&self, t: &Table, name: &str) {
+        if let Err(e) = t.save_csv(&self.out_dir, name) {
+            eprintln!("warning: could not save {name}.csv: {e}");
+        }
+        t.print();
+    }
+}
+
+fn measure_cycles(s: &Session, op: &Op, sc: &Scenario) -> Option<f64> {
+    s.measure(op, sc).map(|r| r.result.cycles)
+}
+
+/// Figure 3: matmul suite on the Saturn Vector Unit (VLEN=1024), speedup
+/// over the non-tuned baseline.
+pub fn fig3(opts: &FigOpts) -> Table {
+    let mut s = opts.session(SocConfig::saturn(1024));
+    let mut t = Table::new(
+        "Fig 3: matmuls on Saturn VLEN=1024 (speedup vs non-tuned)",
+        &["dtype", "size", "non-tuned", "O3(gcc)", "muriscv-nn", "ours", "sp(O3)", "sp(mu)", "sp(ours)"],
+    );
+    let mut impr_vs_gcc = Vec::new();
+    let mut impr_vs_mu = Vec::new();
+    for dtype in opts.dtypes() {
+        for size in opts.sizes() {
+            let op = matmul::matmul(size, dtype);
+            let base = measure_cycles(&s, &op, &Scenario::ScalarOs).unwrap();
+            let o3 = measure_cycles(&s, &op, &Scenario::AutovecGcc).unwrap();
+            let mu = measure_cycles(&s, &op, &Scenario::MuRiscvNn);
+            let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+            let ours = measure_cycles(&s, &op, &ours_sc).unwrap();
+            impr_vs_gcc.push(o3 / ours - 1.0);
+            if let Some(mu) = mu {
+                impr_vs_mu.push(mu / ours - 1.0);
+            }
+            t.row(vec![
+                dtype.name().into(),
+                size.to_string(),
+                fnum(base),
+                fnum(o3),
+                mu.map(fnum).unwrap_or_else(|| "-".into()),
+                fnum(ours),
+                fnum(base / o3),
+                mu.map(|m| fnum(base / m)).unwrap_or_else(|| "-".into()),
+                fnum(base / ours),
+            ]);
+        }
+    }
+    println!(
+        "Fig3 summary: ours vs GCC-autovec mean improvement {}; vs muRISCV-NN {} (paper: 84% / 50%)",
+        pct(stats::mean(&impr_vs_gcc)),
+        pct(stats::mean(&impr_vs_mu)),
+    );
+    opts.save(&t, "fig3_matmul_saturn");
+    t
+}
+
+/// Figure 4: impact of VLEN on matmul latency (int8), each target
+/// normalized to its own VLEN=256 latency.
+pub fn fig4(opts: &FigOpts) -> Table {
+    let vlens = [256u32, 512, 1024];
+    let mut t = Table::new(
+        "Fig 4: VLEN impact on int8 matmuls (speedup vs same target @256)",
+        &["size", "target", "vlen", "cycles", "speedup_vs_256"],
+    );
+    for size in opts.sizes() {
+        let op = matmul::matmul(size, DType::I8);
+        for target in ["muriscv-nn", "ours"] {
+            let mut base256 = None;
+            for vlen in vlens {
+                let mut s = opts.session(SocConfig::saturn(vlen));
+                let sc = if target == "ours" {
+                    s.ours_scenario(&op, opts.matmul_trials())
+                } else {
+                    Scenario::MuRiscvNn
+                };
+                let cycles = measure_cycles(&s, &op, &sc).unwrap();
+                let base = *base256.get_or_insert(cycles);
+                t.row(vec![
+                    size.to_string(),
+                    target.into(),
+                    vlen.to_string(),
+                    fnum(cycles),
+                    fnum(base / cycles),
+                ]);
+            }
+        }
+    }
+    opts.save(&t, "fig4_vlen_matmul");
+    t
+}
+
+fn trace_row(
+    t: &mut Table,
+    label: &str,
+    target: &str,
+    r: &crate::sim::ExecResult,
+    code_bytes: u64,
+) {
+    t.row(vec![
+        label.into(),
+        target.into(),
+        r.trace.total().to_string(),
+        r.trace.vector_total().to_string(),
+        pct(r.trace.vector_share(InstrGroup::Load)),
+        pct(r.trace.store_share()),
+        pct(r.trace.vector_share(InstrGroup::Config)),
+        pct(r.trace.vector_share(InstrGroup::MultAdd)),
+        pct(r.trace.vector_share(InstrGroup::Reduction)),
+        pct(r.trace.vector_share(InstrGroup::Move)),
+        code_bytes.to_string(),
+    ]);
+}
+
+const TRACE_HEADERS: [&str; 11] = [
+    "workload", "target", "instrs", "vec_instrs", "load%", "store%", "config%", "multadd%",
+    "red%", "move%", "code_bytes",
+];
+
+/// Figure 5: instruction traces + code size, int8 matmuls, VLEN=1024.
+pub fn fig5(opts: &FigOpts) -> Table {
+    let mut s = opts.session(SocConfig::saturn(1024));
+    let mut t = Table::new("Fig 5: instruction traces, int8 matmuls, VLEN=1024", &TRACE_HEADERS);
+    for size in opts.sizes() {
+        let op = matmul::matmul(size, DType::I8);
+        let mu = s.measure(&op, &Scenario::MuRiscvNn).unwrap();
+        trace_row(&mut t, &format!("mm{size}"), "muriscv-nn", &mu.result, mu.code_size_bytes);
+        let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+        let ours = s.measure(&op, &ours_sc).unwrap();
+        trace_row(&mut t, &format!("mm{size}"), "ours", &ours.result, ours.code_size_bytes);
+        println!(
+            "mm{size}: code size reduction {} (paper: ~90%), ours store share {}",
+            pct(1.0 - ours.code_size_bytes as f64 / mu.code_size_bytes as f64),
+            pct(ours.result.trace.store_share()),
+        );
+    }
+    opts.save(&t, "fig5_traces_matmul");
+    t
+}
+
+/// Figure 6: matmuls on the Banana Pi BPI-F3 (VLEN=256, LLVM toolchain).
+pub fn fig6(opts: &FigOpts) -> Table {
+    let mut s = opts.session(SocConfig::bpi_f3());
+    let mut t = Table::new(
+        "Fig 6: matmuls on BPI-F3 (speedup vs non-tuned LLVM)",
+        &["dtype", "size", "non-tuned", "non-tuned(v)", "ours", "sp(v)", "sp(ours)"],
+    );
+    let mut impr = Vec::new();
+    for dtype in opts.dtypes() {
+        for size in opts.sizes() {
+            let op = matmul::matmul(size, dtype);
+            let base = measure_cycles(&s, &op, &Scenario::ScalarOs).unwrap();
+            let av = measure_cycles(&s, &op, &Scenario::AutovecLlvm).unwrap();
+            let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+            let ours = measure_cycles(&s, &op, &ours_sc).unwrap();
+            impr.push(av / ours - 1.0);
+            t.row(vec![
+                dtype.name().into(),
+                size.to_string(),
+                fnum(base),
+                fnum(av),
+                fnum(ours),
+                fnum(base / av),
+                fnum(base / ours),
+            ]);
+        }
+    }
+    println!(
+        "Fig6 summary: ours vs LLVM-autovec mean improvement {} (paper: 50%)",
+        pct(stats::mean(&impr))
+    );
+    opts.save(&t, "fig6_bpi_matmul");
+    t
+}
+
+/// Tune a model's tasks, then return ("ours") network cycles + the
+/// baselines requested.
+fn run_model(
+    s: &mut Session,
+    model: &models::Model,
+    trials: usize,
+    min_per_task: usize,
+) -> f64 {
+    s.tune_network(&model.layers, trials, min_per_task);
+    let fallback_trials = min_per_task.max(2);
+    let r = s
+        .measure_network(&model.layers, &mut |s, op| s.ours_scenario(op, fallback_trials))
+        .expect("ours network");
+    r.cycles
+}
+
+/// Figure 7: complete models on Saturn VLEN=1024, improvement vs non-tuned.
+pub fn fig7(opts: &FigOpts) -> Table {
+    let mut t = Table::new(
+        "Fig 7: models on Saturn VLEN=1024 (improvement vs non-tuned)",
+        &["model", "dtype", "non-tuned", "O3(gcc)", "muriscv-nn", "ours", "imp(O3)", "imp(mu)"],
+    );
+    let mut impr_gcc = Vec::new();
+    let mut impr_mu = Vec::new();
+    let dtypes: &[DType] =
+        if opts.quick { &[DType::I8] } else { &[DType::I8, DType::F32] };
+    for name in opts.model_names(false) {
+        for &dtype in dtypes {
+            let model = models::by_name(name, dtype).unwrap();
+            let mut s = opts.session(SocConfig::saturn(1024));
+            let base = s
+                .measure_network(&model.layers, &mut |_, _| Scenario::ScalarOs)
+                .unwrap()
+                .cycles;
+            let o3 = s
+                .measure_network(&model.layers, &mut |_, _| Scenario::AutovecGcc)
+                .unwrap()
+                .cycles;
+            let mu = s
+                .measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+                .map(|r| r.cycles);
+            let ours = run_model(
+                &mut s,
+                &model,
+                opts.network_trials(model.default_trials),
+                opts.min_per_task(),
+            );
+            impr_gcc.push(o3 / ours - 1.0);
+            if let Some(mu) = mu {
+                impr_mu.push(mu / ours - 1.0);
+            }
+            t.row(vec![
+                name.into(),
+                dtype.name().into(),
+                fnum(base),
+                fnum(o3),
+                mu.map(fnum).unwrap_or_else(|| "-".into()),
+                fnum(ours),
+                pct(o3 / ours - 1.0),
+                mu.map(|m| pct(m / ours - 1.0)).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    println!(
+        "Fig7 summary: ours vs GCC-autovec mean improvement {}; vs muRISCV-NN {} (paper: 46% / 29%)",
+        pct(stats::mean(&impr_gcc)),
+        pct(stats::mean(&impr_mu)),
+    );
+    opts.save(&t, "fig7_models_saturn");
+    t
+}
+
+/// Figure 8: impact of VLEN on complete models (int8).
+pub fn fig8(opts: &FigOpts) -> Table {
+    let vlens = [256u32, 512, 1024];
+    let mut t = Table::new(
+        "Fig 8: VLEN impact on int8 models (speedup vs same target @256)",
+        &["model", "target", "vlen", "cycles", "speedup_vs_256"],
+    );
+    let names: Vec<&str> = if opts.quick {
+        vec!["keyword-spotting", "anomaly-detection"]
+    } else {
+        opts.model_names(false)
+    };
+    for name in names {
+        let model = models::by_name(name, DType::I8).unwrap();
+        for target in ["muriscv-nn", "ours"] {
+            let mut base256 = None;
+            for vlen in vlens {
+                let mut s = opts.session(SocConfig::saturn(vlen));
+                let cycles = if target == "ours" {
+                    run_model(
+                        &mut s,
+                        &model,
+                        opts.network_trials(model.default_trials),
+                        opts.min_per_task(),
+                    )
+                } else {
+                    s.measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+                        .unwrap()
+                        .cycles
+                };
+                let base = *base256.get_or_insert(cycles);
+                t.row(vec![
+                    name.into(),
+                    target.into(),
+                    vlen.to_string(),
+                    fnum(cycles),
+                    fnum(base / cycles),
+                ]);
+            }
+        }
+    }
+    opts.save(&t, "fig8_vlen_models");
+    t
+}
+
+/// Figure 9: traces + code size for complete models (int8, VLEN=1024).
+pub fn fig9(opts: &FigOpts) -> Table {
+    let mut t = Table::new("Fig 9: instruction traces, int8 models, VLEN=1024", &TRACE_HEADERS);
+    let mut names = opts.model_names(false);
+    if !names.contains(&"anomaly-detection") {
+        names.push("anomaly-detection"); // the code-size inversion case
+    }
+    for name in names {
+        let model = models::by_name(name, DType::I8).unwrap();
+        let mut s = opts.session(SocConfig::saturn(1024));
+        let mu = s
+            .measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+            .unwrap();
+        s.tune_network(
+            &model.layers,
+            opts.network_trials(model.default_trials),
+            opts.min_per_task(),
+        );
+        let fallback = opts.min_per_task().max(2);
+        let ours = s
+            .measure_network(&model.layers, &mut |s, op| s.ours_scenario(op, fallback))
+            .unwrap();
+        t.row(vec![
+            name.into(),
+            "muriscv-nn".into(),
+            mu.trace.total().to_string(),
+            mu.trace.vector_total().to_string(),
+            pct(mu.trace.vector_share(InstrGroup::Load)),
+            pct(mu.trace.store_share()),
+            pct(mu.trace.vector_share(InstrGroup::Config)),
+            pct(mu.trace.vector_share(InstrGroup::MultAdd)),
+            pct(mu.trace.vector_share(InstrGroup::Reduction)),
+            pct(mu.trace.vector_share(InstrGroup::Move)),
+            mu.code_size_bytes.to_string(),
+        ]);
+        t.row(vec![
+            name.into(),
+            "ours".into(),
+            ours.trace.total().to_string(),
+            ours.trace.vector_total().to_string(),
+            pct(ours.trace.vector_share(InstrGroup::Load)),
+            pct(ours.trace.store_share()),
+            pct(ours.trace.vector_share(InstrGroup::Config)),
+            pct(ours.trace.vector_share(InstrGroup::MultAdd)),
+            pct(ours.trace.vector_share(InstrGroup::Reduction)),
+            pct(ours.trace.vector_share(InstrGroup::Move)),
+            ours.code_size_bytes.to_string(),
+        ]);
+        println!(
+            "{name}: code size ours/mu = {:.2}x ({})",
+            ours.code_size_bytes as f64 / mu.code_size_bytes as f64,
+            if ours.code_size_bytes > mu.code_size_bytes {
+                "inversion — per-layer specialization"
+            } else {
+                "reduction"
+            }
+        );
+    }
+    opts.save(&t, "fig9_traces_models");
+    t
+}
+
+/// Figure 10: complete models on the BPI-F3 (incl. MobileLLM-125M).
+pub fn fig10(opts: &FigOpts) -> Table {
+    let mut t = Table::new(
+        "Fig 10: models on BPI-F3 (improvement vs non-tuned LLVM)",
+        &["model", "dtype", "non-tuned", "non-tuned(v)", "ours", "imp(v)"],
+    );
+    let mut impr = Vec::new();
+    for name in opts.model_names(true) {
+        let model = models::by_name(name, DType::I8).unwrap();
+        let mut s = opts.session(SocConfig::bpi_f3());
+        let base = s
+            .measure_network(&model.layers, &mut |_, _| Scenario::ScalarOs)
+            .unwrap()
+            .cycles;
+        let av = s
+            .measure_network(&model.layers, &mut |_, _| Scenario::AutovecLlvm)
+            .unwrap()
+            .cycles;
+        let ours = run_model(
+            &mut s,
+            &model,
+            opts.network_trials(model.default_trials),
+            opts.min_per_task(),
+        );
+        impr.push(av / ours - 1.0);
+        t.row(vec![
+            name.into(),
+            "int8".into(),
+            fnum(base),
+            fnum(av),
+            fnum(ours),
+            pct(av / ours - 1.0),
+        ]);
+    }
+    println!(
+        "Fig10 summary: ours vs LLVM-autovec mean improvement {} (paper: 35%)",
+        pct(stats::mean(&impr))
+    );
+    opts.save(&t, "fig10_bpi_models");
+    t
+}
+
+/// §III ablations: VL ladder, J=1 variant, cost-model guidance.
+pub fn ablation(opts: &FigOpts, id: &str) -> Table {
+    match id {
+        "vl-ladder" => {
+            let mut t = Table::new(
+                "Ablation: VL ladder vs VLMAX-only registry (int8, VLEN=1024)",
+                &["size", "ladder_cycles", "vlmax_only_cycles", "ladder_gain"],
+            );
+            for size in opts.sizes() {
+                let op = matmul::matmul(size, DType::I8);
+                let run = |vl_ladder: bool| {
+                    let mut so = SessionOptions {
+                        seed: opts.seed,
+                        use_mlp: opts.use_mlp,
+                        vl_ladder,
+                        ..Default::default()
+                    };
+                    if opts.workers > 0 {
+                        so.workers = opts.workers;
+                    }
+                    let mut s = Session::new(SocConfig::saturn(1024), so);
+                    let sc = s.ours_scenario(&op, opts.matmul_trials());
+                    measure_cycles(&s, &op, &sc).unwrap()
+                };
+                let ladder = run(true);
+                let vlmax_only = run(false);
+                t.row(vec![
+                    size.to_string(),
+                    fnum(ladder),
+                    fnum(vlmax_only),
+                    fnum(vlmax_only / ladder),
+                ]);
+            }
+            opts.save(&t, "ablation_vl_ladder");
+            t
+        }
+        "j-variant" => {
+            let mut t = Table::new(
+                "Ablation: J in {VLEN/32, 1} vs J=VLEN/32 only (int8, VLEN=1024)",
+                &["size", "with_j1_cycles", "without_j1_cycles", "j1_gain"],
+            );
+            for size in [16usize, 32, 64] {
+                let op = matmul::matmul(size, DType::I8);
+                let run = |j_one: bool| {
+                    let mut so = SessionOptions {
+                        seed: opts.seed,
+                        use_mlp: opts.use_mlp,
+                        j_one,
+                        ..Default::default()
+                    };
+                    if opts.workers > 0 {
+                        so.workers = opts.workers;
+                    }
+                    let mut s = Session::new(SocConfig::saturn(1024), so);
+                    let sc = s.ours_scenario(&op, opts.matmul_trials());
+                    measure_cycles(&s, &op, &sc).unwrap()
+                };
+                let with_j1 = run(true);
+                let without = run(false);
+                t.row(vec![
+                    size.to_string(),
+                    fnum(with_j1),
+                    fnum(without),
+                    fnum(without / with_j1),
+                ]);
+            }
+            opts.save(&t, "ablation_j_variant");
+            t
+        }
+        "cost-model" => {
+            use crate::tune::{RandomCostModel};
+            let mut t = Table::new(
+                "Ablation: cost model guidance at a fixed trial budget",
+                &["model", "best_cycles"],
+            );
+            let op = matmul::matmul(128, DType::I8);
+            let budget = if opts.quick { 16 } else { 48 };
+            // mlp (or heuristic fallback)
+            let mut s = opts.session(SocConfig::saturn(1024));
+            let kind = s.model_kind();
+            let sc = s.ours_scenario(&op, budget);
+            t.row(vec![kind.into(), fnum(measure_cycles(&s, &op, &sc).unwrap())]);
+            // heuristic
+            let mut so = SessionOptions { seed: opts.seed, use_mlp: false, ..Default::default() };
+            if opts.workers > 0 {
+                so.workers = opts.workers;
+            }
+            let mut s2 = Session::new(SocConfig::saturn(1024), so.clone());
+            let sc2 = s2.ours_scenario(&op, budget);
+            t.row(vec!["heuristic".into(), fnum(measure_cycles(&s2, &op, &sc2).unwrap())]);
+            // random
+            let mut s3 = Session::new(SocConfig::saturn(1024), so)
+                .with_model(Box::new(RandomCostModel(crate::util::Pcg::seeded(opts.seed))));
+            let sc3 = s3.ours_scenario(&op, budget);
+            t.row(vec!["random".into(), fnum(measure_cycles(&s3, &op, &sc3).unwrap())]);
+            opts.save(&t, "ablation_cost_model");
+            t
+        }
+        other => {
+            let mut t = Table::new(format!("unknown ablation {other}"), &["error"]);
+            t.row(vec![format!("unknown ablation id {other}; use vl-ladder | j-variant | cost-model")]);
+            t
+        }
+    }
+}
+
+/// Extension study (paper §V future work): Packed-SIMD (P extension)
+/// kernels vs scalar, autovectorization, muRISCV-NN, and tuned RVV.
+pub fn ext_pext(opts: &FigOpts) -> Table {
+    let mut s = opts.session(SocConfig::saturn(1024));
+    let mut t = Table::new(
+        "Extension study: Packed SIMD (P ext) vs RVV (int8, speedup vs non-tuned)",
+        &["size", "non-tuned", "packed-simd", "muriscv-nn", "ours", "sp(pext)", "sp(mu)", "sp(ours)"],
+    );
+    for size in opts.sizes() {
+        let op = matmul::matmul(size, DType::I8);
+        let base = measure_cycles(&s, &op, &Scenario::ScalarOs).unwrap();
+        let pext = measure_cycles(&s, &op, &Scenario::PackedSimd).unwrap();
+        let mu = measure_cycles(&s, &op, &Scenario::MuRiscvNn).unwrap();
+        let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+        let ours = measure_cycles(&s, &op, &ours_sc).unwrap();
+        t.row(vec![
+            size.to_string(),
+            fnum(base),
+            fnum(pext),
+            fnum(mu),
+            fnum(ours),
+            fnum(base / pext),
+            fnum(base / mu),
+            fnum(base / ours),
+        ]);
+    }
+    opts.save(&t, "ext_pext");
+    t
+}
+
+/// Run every figure (the `figures` CLI subcommand / `make figures`).
+pub fn all_figures(opts: &FigOpts) -> Vec<Table> {
+    vec![
+        fig3(opts),
+        fig4(opts),
+        fig5(opts),
+        fig6(opts),
+        fig7(opts),
+        fig8(opts),
+        fig9(opts),
+        fig10(opts),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> FigOpts {
+        FigOpts {
+            quick: true,
+            use_mlp: false,
+            workers: 2,
+            out_dir: std::env::temp_dir().join("rvv-tune-fig-test"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig3_quick_produces_rows_and_wins() {
+        let t = fig3(&tiny_opts());
+        assert!(!t.rows.is_empty());
+        // "ours" speedup (last col) must beat O3 speedup on every row.
+        for row in &t.rows {
+            let sp_o3: f64 = row[6].parse().unwrap();
+            let sp_ours: f64 = row[8].parse().unwrap();
+            assert!(sp_ours >= sp_o3, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn ablation_vl_ladder_quick() {
+        let mut o = tiny_opts();
+        o.quick = true;
+        let t = ablation(&o, "vl-ladder");
+        assert_eq!(t.rows.len(), o.sizes().len());
+        // For small sizes, the ladder must not lose to VLMAX-only.
+        for row in &t.rows {
+            let gain: f64 = row[3].parse().unwrap();
+            assert!(gain >= 0.95, "ladder should not lose: {row:?}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Reporting: figure harnesses (one per paper figure), result tables, CSV
+//! output, and the command-line interface.
+
+pub mod cli;
+pub mod figures;
+pub mod table;
+
+pub use figures::{all_figures, FigOpts};
+pub use table::Table;

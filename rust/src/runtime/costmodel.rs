@@ -1,0 +1,84 @@
+//! The learned cost model's runtime state: parameter literals held in rust,
+//! updated by the AOT-compiled `costmodel_train` step and queried by
+//! `costmodel_fwd` — MetaSchedule's XGBoost replaced by an L2/L1 MLP.
+
+use anyhow::{bail, Result};
+
+use super::engine::Engine;
+use super::literal::{lit_f32, scalar_f32, to_vec_f32};
+
+/// Parameters + momenta of the MLP, as device-ready literals.
+pub struct MlpRuntime {
+    /// 12 literals: 6 parameters then 6 momentum slots.
+    state: Vec<xla::Literal>,
+    pub feature_dim: usize,
+    pub score_batch: usize,
+    pub train_batch: usize,
+}
+
+impl MlpRuntime {
+    /// Initialize parameters on-device via the `costmodel_init` artifact.
+    pub fn new(engine: &Engine, seed: i32) -> Result<MlpRuntime> {
+        let outs = engine.execute("costmodel_init", &[xla::Literal::scalar(seed)])?;
+        if outs.len() != 12 {
+            bail!("costmodel_init returned {} outputs, expected 12", outs.len());
+        }
+        Ok(MlpRuntime {
+            state: outs,
+            feature_dim: engine.meta.feature_dim,
+            score_batch: engine.meta.score_batch,
+            train_batch: engine.meta.train_batch,
+        })
+    }
+
+    /// Score candidates (any count — padded/chunked to the AOT batch).
+    /// Returns one score per input feature vector.
+    pub fn score(&self, engine: &Engine, feats: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let mut scores = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(self.score_batch) {
+            let mut x = vec![0f32; self.score_batch * self.feature_dim];
+            for (i, f) in chunk.iter().enumerate() {
+                if f.len() != self.feature_dim {
+                    bail!("feature dim {} != {}", f.len(), self.feature_dim);
+                }
+                x[i * self.feature_dim..(i + 1) * self.feature_dim].copy_from_slice(f);
+            }
+            let mut inputs: Vec<xla::Literal> =
+                self.state[..6].iter().map(|l| (*l).clone()).collect();
+            inputs.push(lit_f32(&x, &[self.score_batch, self.feature_dim])?);
+            let outs = engine.execute("costmodel_fwd", &inputs)?;
+            let all = to_vec_f32(&outs[0])?;
+            scores.extend_from_slice(&all[..chunk.len()]);
+        }
+        Ok(scores)
+    }
+
+    /// One SGD step on a batch (padded by cycling when short). Returns loss.
+    pub fn train_step(
+        &mut self,
+        engine: &Engine,
+        feats: &[Vec<f32>],
+        labels: &[f32],
+    ) -> Result<f32> {
+        assert_eq!(feats.len(), labels.len());
+        if feats.is_empty() {
+            return Ok(0.0);
+        }
+        let b = self.train_batch;
+        let mut x = vec![0f32; b * self.feature_dim];
+        let mut y = vec![0f32; b];
+        for i in 0..b {
+            let src = i % feats.len();
+            x[i * self.feature_dim..(i + 1) * self.feature_dim].copy_from_slice(&feats[src]);
+            y[i] = labels[src];
+        }
+        let mut inputs: Vec<xla::Literal> = self.state.iter().map(|l| (*l).clone()).collect();
+        inputs.push(lit_f32(&x, &[b, self.feature_dim])?);
+        inputs.push(lit_f32(&y, &[b])?);
+        let mut outs = engine.execute("costmodel_train", &inputs)?;
+        let loss = scalar_f32(&outs[12])?;
+        outs.truncate(12);
+        self.state = outs;
+        Ok(loss)
+    }
+}

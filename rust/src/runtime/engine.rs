@@ -1,0 +1,190 @@
+//! The artifact engine: manifest parsing, HLO-text compilation, execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Tensor spec from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Manifest-level constants shared with python (model.py).
+#[derive(Clone, Debug)]
+pub struct ManifestMeta {
+    pub feature_dim: usize,
+    pub score_batch: usize,
+    pub train_batch: usize,
+    pub hidden: usize,
+    pub val_size: usize,
+    pub tile_vl: usize,
+    pub tile_j: usize,
+}
+
+/// The PJRT engine: one compiled executable per artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts: HashMap<String, ArtifactInfo>,
+    pub meta: ManifestMeta,
+}
+
+/// Default artifacts directory: `$RVV_TUNE_ARTIFACTS` or `<repo>/artifacts`
+/// (resolved relative to the crate root so tests work from any cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("RVV_TUNE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when `make artifacts` has produced a manifest.
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("specs not an array"))?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                shape: s
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: s
+                    .get("dtype")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("missing dtype"))?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Engine {
+    /// Load the manifest and compile every artifact on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let meta = ManifestMeta {
+            feature_dim: get("feature_dim")?,
+            score_batch: get("score_batch")?,
+            train_batch: get("train_batch")?,
+            hidden: get("hidden")?,
+            val_size: get("val_size")?,
+            tile_vl: get("tile_vl")?,
+            tile_j: get("tile_j")?,
+        };
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        let mut artifacts = HashMap::new();
+        for entry in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let info = ArtifactInfo {
+                name: name.clone(),
+                file: file.clone(),
+                inputs: parse_specs(entry.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: parse_specs(entry.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+            };
+            let path = dir.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+            execs.insert(name.clone(), exe);
+            artifacts.insert(name, info);
+        }
+        Ok(Engine { client, execs, artifacts, meta })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Execute an artifact; returns the flattened output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name} (run `make artifacts`?)"))?;
+        if let Some(info) = self.artifacts.get(name) {
+            if info.inputs.len() != inputs.len() {
+                bail!("{name}: expected {} inputs, got {}", info.inputs.len(), inputs.len());
+            }
+        }
+        let result = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("{name}: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("{name} sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        tuple.to_tuple().map_err(|e| anyhow!("{name} untuple: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // (serial-safe: read-only check of the default path shape)
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || std::env::var("RVV_TUNE_ARTIFACTS").is_ok());
+    }
+
+    #[test]
+    fn parse_specs_roundtrip() {
+        let j = Json::parse(r#"[{"shape":[512,32],"dtype":"float32"}]"#).unwrap();
+        let specs = parse_specs(&j).unwrap();
+        assert_eq!(specs[0].shape, vec![512, 32]);
+        assert_eq!(specs[0].dtype, "float32");
+    }
+}

@@ -1,0 +1,61 @@
+//! Conversion helpers between rust slices and `xla::Literal`s.
+//!
+//! The published `xla` crate only implements `NativeType` (typed
+//! constructors) for {i32, i64, u32, u64, f32, f64}; i8/f16 tensors go
+//! through the untyped-bytes constructor + `convert`.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal, PrimitiveType};
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("i32 literal: {e:?}"))
+}
+
+pub fn lit_i8(data: &[i8], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S8, dims, bytes)
+        .map_err(|e| anyhow!("i8 literal: {e:?}"))
+}
+
+/// f16 input built from f32 values (rounded by XLA's convert).
+pub fn lit_f16_from_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let f32_lit = lit_f32(data, dims)?;
+    f32_lit.convert(PrimitiveType::F16).map_err(|e| anyhow!("convert to f16: {e:?}"))
+}
+
+pub fn lit_scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}
+
+pub fn to_vec_i8(lit: &Literal) -> Result<Vec<i8>> {
+    lit.to_vec::<i8>().map_err(|e| anyhow!("to_vec i8: {e:?}"))
+}
+
+/// Read an f16 literal back as f32 values.
+pub fn f16_to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    let converted = lit.convert(PrimitiveType::F32).map_err(|e| anyhow!("convert: {e:?}"))?;
+    to_vec_f32(&converted)
+}
+
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar f32: {e:?}"))
+}

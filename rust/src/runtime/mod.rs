@@ -1,0 +1,14 @@
+//! PJRT runtime bridge: loads the AOT artifacts (`artifacts/*.hlo.txt`)
+//! produced by `make artifacts` and executes them on the PJRT CPU client.
+//!
+//! This is the only place python-authored computation enters the rust
+//! process — as compiled XLA executables, never as python. The tuning hot
+//! path calls [`engine::Engine::execute`] for cost-model scoring/training;
+//! the validation tests call it for the numerics oracles.
+
+pub mod costmodel;
+pub mod engine;
+pub mod literal;
+
+pub use costmodel::MlpRuntime;
+pub use engine::{artifacts_dir, Engine};

@@ -1,0 +1,475 @@
+//! Timing-mode program compiler.
+//!
+//! Tuning measurements only need cycles + trace + cache behaviour, and
+//! every `vsetvl` in emitted programs has constant operands — so the
+//! vector configuration at each instruction is statically known. This pass
+//! walks the loop tree once, tracking the config symbolically, folds every
+//! run of non-memory instructions into a single precomputed node (cycles +
+//! trace deltas), and leaves only memory operations (which need the cache)
+//! to be evaluated per iteration.
+//!
+//! Loop bodies that change the config are compiled twice: once for the
+//! first iteration (entry config) and once for the steady state (the
+//! body's own exit config — constant because `vsetvl` operands are).
+//! Results are bit-identical to the interpreter; the property suite
+//! asserts `Functional` (interpreter) == `Timing` (this path).
+
+use crate::isa::{InstrGroup, VectorConfig};
+
+use super::cache::Cache;
+use super::soc::SocConfig;
+use super::trace::TraceCounts;
+use super::vecunit;
+use super::vprogram::{AddrExpr, BufId, Inst, LoopNode, Node, VProgram};
+
+/// A memory-touching stream of a compiled node.
+#[derive(Clone, Debug)]
+struct Stream {
+    buf: BufId,
+    addr: AddrExpr,
+    /// Element stride; 1 = unit (line-level probing).
+    stride: i64,
+    len: u32,
+}
+
+#[derive(Clone, Debug)]
+enum CNode {
+    /// A fused run of data-independent instructions.
+    Static { cycles: f64, trace: [u64; 8] },
+    /// One vector memory op: static cost precomputed, cache evaluated live.
+    Mem { base_cost: f64, group: InstrGroup, stream: Stream },
+    /// A scalar macro node: static cost + several streams.
+    Run { cycles: f64, trace: [u64; 8], streams: Vec<Stream> },
+    Loop {
+        var: usize,
+        extent: u32,
+        book_instrs: u64,
+        book_cycles: f64,
+        iter0: CBlock,
+        /// Body for iterations 1.. when the config at entry differs.
+        steady: Option<CBlock>,
+    },
+}
+
+/// A compiled sequence.
+#[derive(Clone, Debug, Default)]
+pub struct CBlock {
+    nodes: Vec<CNode>,
+}
+
+/// Compile-time machine state.
+#[derive(Clone, Copy, PartialEq)]
+struct CState {
+    cfg: Option<VectorConfig>,
+}
+
+struct Compiler<'a> {
+    soc: &'a SocConfig,
+    esize: Vec<u32>,
+}
+
+/// Compiled program + element sizes for address scaling.
+pub struct CompiledProgram {
+    root: CBlock,
+    esize: Vec<u32>,
+    n_vars: usize,
+}
+
+/// Compile `program` for timing execution on `soc`.
+pub fn compile(program: &VProgram, soc: &SocConfig) -> CompiledProgram {
+    let mut c = Compiler {
+        soc,
+        esize: program.buffers.iter().map(|b| b.dtype.bytes() as u32).collect(),
+    };
+    let mut state = CState { cfg: None };
+    let root = c.block(&program.body, &mut state);
+    CompiledProgram { root, esize: c.esize.clone(), n_vars: program.n_vars }
+}
+
+impl Compiler<'_> {
+    fn block(&mut self, nodes: &[Node], state: &mut CState) -> CBlock {
+        let mut out = CBlock::default();
+        let mut acc_cycles = 0.0;
+        let mut acc_trace = [0u64; 8];
+        let flush =
+            |out: &mut CBlock, acc_cycles: &mut f64, acc_trace: &mut [u64; 8]| {
+                if *acc_cycles != 0.0 || acc_trace.iter().any(|&x| x != 0) {
+                    out.nodes.push(CNode::Static { cycles: *acc_cycles, trace: *acc_trace });
+                    *acc_cycles = 0.0;
+                    *acc_trace = [0; 8];
+                }
+            };
+        for node in nodes {
+            match node {
+                Node::Loop(l) => {
+                    flush(&mut out, &mut acc_cycles, &mut acc_trace);
+                    if l.extent == 0 {
+                        continue;
+                    }
+                    out.nodes.push(self.compile_loop(l, state));
+                }
+                Node::Inst(inst) => {
+                    self.compile_inst(inst, state, &mut out, &mut acc_cycles, &mut acc_trace)
+                }
+            }
+        }
+        flush(&mut out, &mut acc_cycles, &mut acc_trace);
+        out
+    }
+
+    fn compile_loop(&mut self, l: &LoopNode, state: &mut CState) -> CNode {
+        let entry = *state;
+        let mut s0 = entry;
+        let iter0 = self.block(&l.body, &mut s0);
+        let (steady, exit_state) = if s0 == entry {
+            (None, s0)
+        } else {
+            // Steady state: body entered with its own exit config. The exit
+            // config of a body is determined by its last vsetvl (constant),
+            // so one more compilation reaches the fixed point.
+            let mut s1 = s0;
+            let b1 = self.block(&l.body, &mut s1);
+            debug_assert!(s1 == s0, "config must reach a fixed point");
+            (Some(b1), s1)
+        };
+        *state = exit_state;
+        let book = 2 + (3 * l.extent as u64 + l.unroll as u64 - 1) / l.unroll as u64;
+        CNode::Loop {
+            var: l.var,
+            extent: l.extent,
+            book_instrs: book,
+            book_cycles: vecunit::scalar_cost(self.soc, book as u32),
+            iter0,
+            steady,
+        }
+    }
+
+    fn cfg(state: &CState) -> &VectorConfig {
+        state.cfg.as_ref().expect("vector instruction before any vsetvl")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn compile_inst(
+        &mut self,
+        inst: &Inst,
+        state: &mut CState,
+        out: &mut CBlock,
+        acc_cycles: &mut f64,
+        acc_trace: &mut [u64; 8],
+    ) {
+        let soc = self.soc;
+        let stat = |cycles: f64, group: InstrGroup, n: u64, acc_cycles: &mut f64, acc_trace: &mut [u64; 8]| {
+            *acc_cycles += cycles;
+            acc_trace[group as usize] += n;
+        };
+        match inst {
+            Inst::VSetVl { vl, sew, lmul, float } => {
+                let _ = float;
+                state.cfg = Some(VectorConfig::new(soc.vlen, *sew, *lmul, *vl));
+                stat(soc.vsetvl_cost, InstrGroup::Config, 1, acc_cycles, acc_trace);
+            }
+            Inst::VLoad { mem, .. } | Inst::VStore { mem, .. } => {
+                let cfg = Self::cfg(state);
+                let vl = cfg.vl;
+                let base_cost = if mem.stride == 1 {
+                    vecunit::unit_mem_cost(soc, vl, cfg.sew)
+                } else {
+                    vecunit::strided_mem_cost(soc, vl)
+                };
+                let group = if matches!(inst, Inst::VLoad { .. }) {
+                    InstrGroup::Load
+                } else {
+                    InstrGroup::Store
+                };
+                // flush static run before a live node
+                if *acc_cycles != 0.0 || acc_trace.iter().any(|&x| x != 0) {
+                    out.nodes.push(CNode::Static { cycles: *acc_cycles, trace: *acc_trace });
+                    *acc_cycles = 0.0;
+                    *acc_trace = [0; 8];
+                }
+                out.nodes.push(CNode::Mem {
+                    base_cost,
+                    group,
+                    stream: Stream {
+                        buf: mem.buf,
+                        addr: mem.addr.clone(),
+                        stride: mem.stride,
+                        len: vl,
+                    },
+                });
+            }
+            Inst::VBin { op, widen, .. } => {
+                let cfg = Self::cfg(state);
+                stat(vecunit::arith_cost(soc, cfg, *widen), op.group(), 1, acc_cycles, acc_trace);
+            }
+            Inst::VBinScalar { op, .. } => {
+                let cfg = Self::cfg(state);
+                stat(vecunit::arith_cost(soc, cfg, false), op.group(), 1, acc_cycles, acc_trace);
+            }
+            Inst::VMacc { widen, .. } => {
+                let cfg = Self::cfg(state);
+                stat(
+                    vecunit::arith_cost(soc, cfg, *widen),
+                    InstrGroup::MultAdd,
+                    1,
+                    acc_cycles,
+                    acc_trace,
+                );
+            }
+            Inst::VRedSum { .. } => {
+                let cfg = Self::cfg(state);
+                stat(
+                    vecunit::reduction_cost(soc, cfg),
+                    InstrGroup::Reduction,
+                    1,
+                    acc_cycles,
+                    acc_trace,
+                );
+            }
+            Inst::VSlideInsert { .. } => {
+                let cfg = Self::cfg(state);
+                stat(
+                    vecunit::slide_cost(soc, cfg) + 1.0,
+                    InstrGroup::Move,
+                    2,
+                    acc_cycles,
+                    acc_trace,
+                );
+            }
+            Inst::VSplat { vl_override, .. } => {
+                let cfg = Self::cfg(state);
+                let vl = vl_override.unwrap_or(cfg.vl);
+                stat(vecunit::splat_cost(soc, cfg, vl), InstrGroup::Move, 1, acc_cycles, acc_trace);
+            }
+            Inst::VMv { .. } => {
+                let cfg = Self::cfg(state);
+                stat(
+                    soc.issue_overhead + vecunit::chime(cfg.vl, cfg.sew, soc.dlen),
+                    InstrGroup::Move,
+                    1,
+                    acc_cycles,
+                    acc_trace,
+                );
+            }
+            Inst::VRequant { .. } => {
+                let cfg = Self::cfg(state);
+                let c = 4.0 * vecunit::arith_cost(soc, cfg, false);
+                *acc_cycles += c;
+                acc_trace[InstrGroup::MultAdd as usize] += 2;
+                acc_trace[InstrGroup::Other as usize] += 2;
+            }
+            Inst::SOps { count } => {
+                stat(
+                    vecunit::scalar_cost(soc, *count),
+                    InstrGroup::Scalar,
+                    *count as u64,
+                    acc_cycles,
+                    acc_trace,
+                );
+            }
+            Inst::SDotRun { acc, a, b, len, .. } => {
+                self.run_node(out, acc_cycles, acc_trace, 6, *len, vec![
+                    Stream { buf: a.buf, addr: a.addr.clone(), stride: a.stride, len: *len },
+                    Stream { buf: b.buf, addr: b.addr.clone(), stride: b.stride, len: *len },
+                    Stream { buf: acc.buf, addr: acc.addr.clone(), stride: acc.stride, len: 1 },
+                ]);
+            }
+            Inst::SAxpyRun { y, a, b, len, .. } => {
+                self.run_node(out, acc_cycles, acc_trace, 7, *len, vec![
+                    Stream { buf: a.buf, addr: a.addr.clone(), stride: a.stride, len: *len },
+                    Stream { buf: b.buf, addr: b.addr.clone(), stride: b.stride, len: *len },
+                    Stream { buf: y.buf, addr: y.addr.clone(), stride: y.stride, len: *len },
+                ]);
+            }
+            Inst::SRequantRun { dst, src, len, .. } => {
+                self.run_node(out, acc_cycles, acc_trace, 7, *len, vec![
+                    Stream { buf: src.buf, addr: src.addr.clone(), stride: src.stride, len: *len },
+                    Stream { buf: dst.buf, addr: dst.addr.clone(), stride: dst.stride, len: *len },
+                ]);
+            }
+            Inst::SCopyRun { dst, src, len, .. } => {
+                self.run_node(out, acc_cycles, acc_trace, 4, *len, vec![
+                    Stream { buf: src.buf, addr: src.addr.clone(), stride: src.stride, len: *len },
+                    Stream { buf: dst.buf, addr: dst.addr.clone(), stride: dst.stride, len: *len },
+                ]);
+            }
+            Inst::SAddRun { dst, src, len, .. } => {
+                self.run_node(out, acc_cycles, acc_trace, 5, *len, vec![
+                    Stream { buf: src.buf, addr: src.addr.clone(), stride: src.stride, len: *len },
+                    Stream { buf: dst.buf, addr: dst.addr.clone(), stride: dst.stride, len: *len },
+                ]);
+            }
+            Inst::PDotRun { acc, a, b, len, lanes } => {
+                let groups = (*len as u64).div_ceil(*lanes as u64) as u32;
+                self.run_node(out, acc_cycles, acc_trace, 4, groups, vec![
+                    Stream { buf: a.buf, addr: a.addr.clone(), stride: a.stride, len: *len },
+                    Stream { buf: b.buf, addr: b.addr.clone(), stride: b.stride, len: *len },
+                    Stream { buf: acc.buf, addr: acc.addr.clone(), stride: acc.stride, len: 1 },
+                ]);
+            }
+            Inst::PAxpyRun { y, a, b, len, lanes } => {
+                let groups = (*len as u64).div_ceil(*lanes as u64) as u32;
+                self.run_node(out, acc_cycles, acc_trace, 7, groups, vec![
+                    Stream { buf: a.buf, addr: a.addr.clone(), stride: a.stride, len: *len },
+                    Stream { buf: b.buf, addr: b.addr.clone(), stride: b.stride, len: *len },
+                    Stream { buf: y.buf, addr: y.addr.clone(), stride: y.stride, len: *len },
+                ]);
+            }
+        }
+    }
+
+    fn run_node(
+        &mut self,
+        out: &mut CBlock,
+        acc_cycles: &mut f64,
+        acc_trace: &mut [u64; 8],
+        instrs_per_elem: u32,
+        len: u32,
+        streams: Vec<Stream>,
+    ) {
+        if *acc_cycles != 0.0 || acc_trace.iter().any(|&x| x != 0) {
+            out.nodes.push(CNode::Static { cycles: *acc_cycles, trace: *acc_trace });
+            *acc_cycles = 0.0;
+            *acc_trace = [0; 8];
+        }
+        let n = len as u64 * instrs_per_elem as u64;
+        let mut trace = [0u64; 8];
+        trace[InstrGroup::Scalar as usize] = n;
+        out.nodes.push(CNode::Run {
+            cycles: n as f64 / self.soc.scalar_ipc,
+            trace,
+            streams,
+        });
+    }
+}
+
+/// Execute a compiled program. Returns (cycles, trace).
+pub fn run(
+    prog: &CompiledProgram,
+    soc: &SocConfig,
+    cache: &mut Cache,
+    bases: &[u64],
+    buf_lens: &[usize],
+) -> (f64, TraceCounts) {
+    let mut vars = vec![0i64; prog.n_vars];
+    let mut cycles = 0.0;
+    let mut trace = [0u64; 8];
+    run_block(&prog.root, prog, soc, cache, bases, buf_lens, &mut vars, &mut cycles, &mut trace);
+    let mut tc = TraceCounts::default();
+    for (i, g) in InstrGroup::ALL.iter().enumerate() {
+        tc.add(*g, trace[i]);
+    }
+    (cycles, tc)
+}
+
+#[inline]
+fn touch_stream(
+    s: &Stream,
+    prog: &CompiledProgram,
+    soc: &SocConfig,
+    cache: &mut Cache,
+    bases: &[u64],
+    buf_lens: &[usize],
+    vars: &[i64],
+) -> f64 {
+    let esize = prog.esize[s.buf] as u64;
+    let first = s.addr.eval(vars);
+    let last = first + (s.len as i64 - 1).max(0) * s.stride;
+    let (lo, hi) = if s.stride >= 0 { (first, last) } else { (last, first) };
+    assert!(
+        lo >= 0 && hi < buf_lens[s.buf] as i64,
+        "access out of bounds: buf={} first={first} last={last} len={}",
+        s.buf,
+        buf_lens[s.buf]
+    );
+    let start = bases[s.buf] + first as u64 * esize;
+    let raw = if s.stride == 1 {
+        cache.access_range(start, s.len as u64 * esize)
+    } else {
+        let mut raw = 0.0;
+        let step = s.stride * esize as i64;
+        let mut addr = start as i64;
+        for _ in 0..s.len {
+            raw += cache.access(addr as u64);
+            addr += step;
+        }
+        raw
+    };
+    vecunit::miss_cost(soc, raw)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_block(
+    block: &CBlock,
+    prog: &CompiledProgram,
+    soc: &SocConfig,
+    cache: &mut Cache,
+    bases: &[u64],
+    buf_lens: &[usize],
+    vars: &mut [i64],
+    cycles: &mut f64,
+    trace: &mut [u64; 8],
+) {
+    for node in &block.nodes {
+        match node {
+            CNode::Static { cycles: c, trace: t } => {
+                *cycles += c;
+                for i in 0..8 {
+                    trace[i] += t[i];
+                }
+            }
+            CNode::Mem { base_cost, group, stream } => {
+                *cycles += base_cost
+                    + touch_stream(stream, prog, soc, cache, bases, buf_lens, vars);
+                trace[*group as usize] += 1;
+            }
+            CNode::Run { cycles: c, trace: t, streams } => {
+                *cycles += c;
+                for i in 0..8 {
+                    trace[i] += t[i];
+                }
+                for s in streams {
+                    *cycles += touch_stream(s, prog, soc, cache, bases, buf_lens, vars);
+                }
+            }
+            CNode::Loop { var, extent, book_instrs, book_cycles, iter0, steady } => {
+                trace[InstrGroup::Scalar as usize] += book_instrs;
+                *cycles += book_cycles;
+                vars[*var] = 0;
+                run_block(iter0, prog, soc, cache, bases, buf_lens, vars, cycles, trace);
+                let body = steady.as_ref().unwrap_or(iter0);
+                for i in 1..*extent {
+                    vars[*var] = i as i64;
+                    run_block(body, prog, soc, cache, bases, buf_lens, vars, cycles, trace);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::codegen::{self, Scenario};
+    use crate::sim::{execute, BufStore, Mode, SocConfig};
+    use crate::tir::{DType, Op};
+
+    /// The compiled timing path must agree with the interpreter exactly
+    /// for every scenario (this is also covered across random shapes by
+    /// prop_invariants P2, since `execute` routes Timing through here).
+    #[test]
+    fn compiled_matches_interpreter_cycles() {
+        let soc = SocConfig::saturn(1024);
+        for scenario in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn] {
+            let op = Op::square_matmul(48, DType::I8);
+            let p = codegen::generate(&op, &scenario, soc.vlen).unwrap();
+            // functional = interpreter; timing = compiled
+            let mut fb = BufStore::functional(&p);
+            let rf = execute(&soc, &p, &mut fb, Mode::Functional, true);
+            let mut tb = BufStore::timing(&p);
+            let rt = execute(&soc, &p, &mut tb, Mode::Timing, true);
+            assert_eq!(rf.cycles, rt.cycles, "{}", scenario.name());
+            assert_eq!(rf.trace, rt.trace, "{}", scenario.name());
+            assert_eq!(rf.cache, rt.cache, "{}", scenario.name());
+        }
+    }
+}

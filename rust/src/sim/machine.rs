@@ -1,0 +1,1048 @@
+//! The VProgram interpreter: functional + cycle-approximate execution.
+//!
+//! Two modes share one code path for addressing and cycle accounting, so
+//! `Timing` (used for tuning measurements) and `Functional` (used for
+//! numerics validation against the JAX/Pallas oracles) produce *identical*
+//! cycle counts by construction — cost never depends on data values.
+
+use crate::isa::{InstrGroup, Lmul, Sew, VBinOp, VectorConfig};
+use crate::tir::DType;
+use crate::util::f16;
+
+use super::cache::{Cache, CacheStats};
+use super::soc::SocConfig;
+use super::trace::TraceCounts;
+use super::vecunit;
+use super::vprogram::{BufId, Inst, MemRef, Node, ScalarSrc, VProgram};
+
+/// Execution mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Full numerics on real buffers + cycle accounting.
+    Functional,
+    /// Address stream + cycle accounting only (~10x faster).
+    Timing,
+}
+
+/// Typed buffer contents for functional execution.
+#[derive(Clone, Debug)]
+pub enum BufData {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    F16(Vec<u16>),
+    F32(Vec<f32>),
+    /// Timing mode: no data, only a length.
+    Absent(usize),
+}
+
+impl BufData {
+    pub fn zeros(dtype: DType, len: usize) -> BufData {
+        match dtype {
+            DType::I8 => BufData::I8(vec![0; len]),
+            DType::I32 => BufData::I32(vec![0; len]),
+            DType::F16 => BufData::F16(vec![0; len]),
+            DType::F32 => BufData::F32(vec![0.0; len]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            BufData::I8(v) => v.len(),
+            BufData::I32(v) => v.len(),
+            BufData::F16(v) => v.len(),
+            BufData::F32(v) => v.len(),
+            BufData::Absent(n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    fn read_i(&self, idx: usize) -> i64 {
+        match self {
+            BufData::I8(v) => v[idx] as i64,
+            BufData::I32(v) => v[idx] as i64,
+            _ => panic!("integer read from float/absent buffer"),
+        }
+    }
+
+    #[inline]
+    fn read_f(&self, idx: usize) -> f64 {
+        match self {
+            BufData::F16(v) => f16::f16_bits_to_f32(v[idx]) as f64,
+            BufData::F32(v) => v[idx] as f64,
+            _ => panic!("float read from int/absent buffer"),
+        }
+    }
+
+    #[inline]
+    fn write_i(&mut self, idx: usize, x: i64) {
+        match self {
+            BufData::I8(v) => v[idx] = x.clamp(i8::MIN as i64, i8::MAX as i64) as i8,
+            BufData::I32(v) => v[idx] = x.clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+            _ => panic!("integer write to float/absent buffer"),
+        }
+    }
+
+    #[inline]
+    fn write_f(&mut self, idx: usize, x: f64) {
+        match self {
+            BufData::F16(v) => v[idx] = f16::f32_to_f16_bits(x as f32),
+            BufData::F32(v) => v[idx] = x as f32,
+            _ => panic!("float write to int/absent buffer"),
+        }
+    }
+
+    fn is_float(&self) -> bool {
+        matches!(self, BufData::F16(_) | BufData::F32(_))
+    }
+}
+
+/// The buffers of one program execution.
+#[derive(Clone, Debug)]
+pub struct BufStore {
+    pub bufs: Vec<BufData>,
+}
+
+impl BufStore {
+    /// Zero-initialized functional store matching the program's declarations.
+    pub fn functional(program: &VProgram) -> BufStore {
+        BufStore {
+            bufs: program
+                .buffers
+                .iter()
+                .map(|b| BufData::zeros(b.dtype, b.len))
+                .collect(),
+        }
+    }
+
+    /// Data-free store for timing-only runs.
+    pub fn timing(program: &VProgram) -> BufStore {
+        BufStore {
+            bufs: program.buffers.iter().map(|b| BufData::Absent(b.len)).collect(),
+        }
+    }
+
+    pub fn set_i8(&mut self, buf: BufId, data: &[i8]) {
+        if let BufData::I8(v) = &mut self.bufs[buf] {
+            v[..data.len()].copy_from_slice(data);
+        } else {
+            panic!("set_i8 on non-i8 buffer");
+        }
+    }
+
+    pub fn set_i32(&mut self, buf: BufId, data: &[i32]) {
+        if let BufData::I32(v) = &mut self.bufs[buf] {
+            v[..data.len()].copy_from_slice(data);
+        } else {
+            panic!("set_i32 on non-i32 buffer");
+        }
+    }
+
+    pub fn set_f32(&mut self, buf: BufId, data: &[f32]) {
+        if let BufData::F32(v) = &mut self.bufs[buf] {
+            v[..data.len()].copy_from_slice(data);
+        } else {
+            panic!("set_f32 on non-f32 buffer");
+        }
+    }
+
+    pub fn set_f16_from_f32(&mut self, buf: BufId, data: &[f32]) {
+        if let BufData::F16(v) = &mut self.bufs[buf] {
+            for (d, &x) in v.iter_mut().zip(data) {
+                *d = f16::f32_to_f16_bits(x);
+            }
+        } else {
+            panic!("set_f16 on non-f16 buffer");
+        }
+    }
+
+    pub fn get_i8(&self, buf: BufId) -> &[i8] {
+        match &self.bufs[buf] {
+            BufData::I8(v) => v,
+            _ => panic!("get_i8 on non-i8 buffer"),
+        }
+    }
+
+    pub fn get_i32(&self, buf: BufId) -> &[i32] {
+        match &self.bufs[buf] {
+            BufData::I32(v) => v,
+            _ => panic!("get_i32 on non-i32 buffer"),
+        }
+    }
+
+    pub fn get_f32(&self, buf: BufId) -> &[f32] {
+        match &self.bufs[buf] {
+            BufData::F32(v) => v,
+            _ => panic!("get_f32 on non-f32 buffer"),
+        }
+    }
+
+    pub fn get_f16_as_f32(&self, buf: BufId) -> Vec<f32> {
+        match &self.bufs[buf] {
+            BufData::F16(v) => v.iter().map(|&h| f16::f16_bits_to_f32(h)).collect(),
+            _ => panic!("get_f16 on non-f16 buffer"),
+        }
+    }
+}
+
+/// Result of one execution.
+#[derive(Clone, Debug)]
+pub struct ExecResult {
+    pub cycles: f64,
+    pub trace: TraceCounts,
+    pub cache: CacheStats,
+}
+
+impl ExecResult {
+    pub fn latency_us(&self, soc: &SocConfig) -> f64 {
+        soc.cycles_to_us(self.cycles)
+    }
+}
+
+/// Vector register contents (functional mode).
+#[derive(Clone, Debug)]
+enum VecVal {
+    I(Vec<i64>),
+    F(Vec<f64>),
+    Empty,
+}
+
+impl VecVal {
+    fn as_i(&self) -> &[i64] {
+        match self {
+            VecVal::I(v) => v,
+            _ => panic!("expected integer register"),
+        }
+    }
+
+    fn as_f(&self) -> &[f64] {
+        match self {
+            VecVal::F(v) => v,
+            _ => panic!("expected float register"),
+        }
+    }
+}
+
+struct Machine<'a> {
+    soc: &'a SocConfig,
+    mode: Mode,
+    cache: Cache,
+    cfg: VectorConfig,
+    float: bool,
+    regs: Vec<VecVal>,
+    vars: Vec<i64>,
+    /// Byte base address of each buffer in the flat simulated address space.
+    bases: Vec<u64>,
+    buf_lens: Vec<usize>,
+    dtypes: Vec<DType>,
+    cycles: f64,
+    trace: TraceCounts,
+}
+
+/// Execute `program` over `bufs` on `soc`.
+///
+/// `warm` pre-installs every buffer in L2 (the steady state MetaSchedule
+/// measures: weights/activations resident from previous runs, L1 cold).
+pub fn execute(
+    soc: &SocConfig,
+    program: &VProgram,
+    bufs: &mut BufStore,
+    mode: Mode,
+    warm: bool,
+) -> ExecResult {
+    assert_eq!(bufs.bufs.len(), program.buffers.len(), "buffer store mismatch");
+    for (decl, data) in program.buffers.iter().zip(&bufs.bufs) {
+        assert_eq!(decl.len, data.len(), "buffer {} length mismatch", decl.name);
+    }
+
+    // Assign flat addresses (64-byte aligned, contiguous).
+    let mut bases = Vec::with_capacity(program.buffers.len());
+    let mut next: u64 = 0x1000;
+    for decl in &program.buffers {
+        bases.push(next);
+        let bytes = (decl.len * decl.dtype.bytes()) as u64;
+        next = (next + bytes + 63) & !63;
+    }
+
+    let mut cache = Cache::new(soc.cache);
+    if warm {
+        for (decl, &base) in program.buffers.iter().zip(&bases) {
+            cache.warm_l2(base, (decl.len * decl.dtype.bytes()) as u64);
+        }
+    }
+
+    // Timing-only runs go through the compiled fast path (bit-identical to
+    // the interpreter; see sim::compiled).
+    if mode == Mode::Timing {
+        let buf_lens: Vec<usize> = program.buffers.iter().map(|b| b.len).collect();
+        let compiled = super::compiled::compile(program, soc);
+        let (cycles, trace) =
+            super::compiled::run(&compiled, soc, &mut cache, &bases, &buf_lens);
+        return ExecResult { cycles, trace, cache: cache.stats };
+    }
+
+    let mut m = Machine {
+        soc,
+        mode,
+        cache,
+        cfg: VectorConfig::new(soc.vlen, Sew::E8, Lmul::M1, 0),
+        float: false,
+        regs: (0..32).map(|_| VecVal::Empty).collect(),
+        vars: vec![0; program.n_vars],
+        bases,
+        buf_lens: program.buffers.iter().map(|b| b.len).collect(),
+        dtypes: program.buffers.iter().map(|b| b.dtype).collect(),
+        cycles: 0.0,
+        trace: TraceCounts::default(),
+    };
+    m.run_nodes(&program.body, bufs);
+
+    ExecResult { cycles: m.cycles, trace: m.trace, cache: m.cache.stats }
+}
+
+impl<'a> Machine<'a> {
+    fn run_nodes(&mut self, nodes: &[Node], bufs: &mut BufStore) {
+        for node in nodes {
+            match node {
+                Node::Inst(inst) => self.exec_inst(inst, bufs),
+                Node::Loop(l) => {
+                    // Loop bookkeeping: ~3 scalar instructions per iteration,
+                    // divided by the unroll factor, plus 2 for setup.
+                    let book = 2 + (3 * l.extent as u64 + l.unroll as u64 - 1) / l.unroll as u64;
+                    self.trace.add(InstrGroup::Scalar, book);
+                    self.cycles += vecunit::scalar_cost(self.soc, book as u32);
+                    for i in 0..l.extent {
+                        self.vars[l.var] = i as i64;
+                        self.run_nodes(&l.body, bufs);
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn elem_addr(&self, mem: &MemRef, elem_idx: i64) -> (usize, u64) {
+        let idx = mem.addr.eval(&self.vars) + elem_idx * mem.stride;
+        debug_assert!(idx >= 0, "negative element index");
+        let idx = idx as usize;
+        let esize = self.dtypes[mem.buf].bytes() as u64;
+        (idx, self.bases[mem.buf] + idx as u64 * esize)
+    }
+
+    /// Charge cache penalties for a vector memory access of `vl` elements,
+    /// with a fused bounds check (first + last lane inside the buffer).
+    fn mem_penalty(&mut self, mem: &MemRef, vl: u32) -> f64 {
+        let esize = self.dtypes[mem.buf].bytes() as u64;
+        let first = mem.addr.eval(&self.vars);
+        let last = first + (vl as i64 - 1).max(0) * mem.stride;
+        let len = self.buf_lens[mem.buf] as i64;
+        let (lo, hi) = if mem.stride >= 0 { (first, last) } else { (last, first) };
+        assert!(
+            lo >= 0 && hi < len,
+            "vector access out of bounds: buf={} first={first} last={last} len={len}",
+            mem.buf
+        );
+        let start_addr = self.bases[mem.buf] + first as u64 * esize;
+        if mem.stride == 1 {
+            let raw = self.cache.access_range(start_addr, vl as u64 * esize);
+            vecunit::miss_cost(self.soc, raw)
+        } else {
+            let mut raw = 0.0;
+            let stride_bytes = mem.stride * esize as i64;
+            let mut addr = start_addr as i64;
+            for _ in 0..vl {
+                raw += self.cache.access(addr as u64);
+                addr += stride_bytes;
+            }
+            vecunit::miss_cost(self.soc, raw)
+        }
+    }
+
+    fn exec_inst(&mut self, inst: &Inst, bufs: &mut BufStore) {
+        match inst {
+            Inst::VSetVl { vl, sew, lmul, float } => {
+                self.cfg = VectorConfig::new(self.soc.vlen, *sew, *lmul, *vl);
+                self.float = *float;
+                self.cycles += self.soc.vsetvl_cost;
+                self.trace.add(InstrGroup::Config, 1);
+            }
+            Inst::VLoad { vd, mem } => {
+                let vl = self.cfg.vl;
+                let cost = if mem.stride == 1 {
+                    vecunit::unit_mem_cost(self.soc, vl, self.cfg.sew)
+                } else {
+                    vecunit::strided_mem_cost(self.soc, vl)
+                };
+                self.cycles += cost + self.mem_penalty(mem, vl);
+                self.trace.add(InstrGroup::Load, 1);
+                if self.mode == Mode::Functional {
+                    let data = &bufs.bufs[mem.buf];
+                    let val = if data.is_float() {
+                        VecVal::F(
+                            (0..vl as i64)
+                                .map(|i| data.read_f(self.elem_addr(mem, i).0))
+                                .collect(),
+                        )
+                    } else {
+                        VecVal::I(
+                            (0..vl as i64)
+                                .map(|i| data.read_i(self.elem_addr(mem, i).0))
+                                .collect(),
+                        )
+                    };
+                    self.regs[*vd as usize] = val;
+                }
+            }
+            Inst::VStore { vs, mem } => {
+                let vl = self.cfg.vl;
+                let cost = if mem.stride == 1 {
+                    vecunit::unit_mem_cost(self.soc, vl, self.cfg.sew)
+                } else {
+                    vecunit::strided_mem_cost(self.soc, vl)
+                };
+                self.cycles += cost + self.mem_penalty(mem, vl);
+                self.trace.add(InstrGroup::Store, 1);
+                if self.mode == Mode::Functional {
+                    let val = std::mem::replace(&mut self.regs[*vs as usize], VecVal::Empty);
+                    {
+                        let data = &mut bufs.bufs[mem.buf];
+                        match &val {
+                            VecVal::F(v) => {
+                                for (i, &x) in v.iter().take(vl as usize).enumerate() {
+                                    let idx = (mem.addr.eval(&self.vars)
+                                        + i as i64 * mem.stride)
+                                        as usize;
+                                    data.write_f(idx, x);
+                                }
+                            }
+                            VecVal::I(v) => {
+                                for (i, &x) in v.iter().take(vl as usize).enumerate() {
+                                    let idx = (mem.addr.eval(&self.vars)
+                                        + i as i64 * mem.stride)
+                                        as usize;
+                                    data.write_i(idx, x);
+                                }
+                            }
+                            VecVal::Empty => panic!("store of empty register v{vs}"),
+                        }
+                    }
+                    self.regs[*vs as usize] = val;
+                }
+            }
+            Inst::VBin { op, vd, vs1, vs2, widen } => {
+                self.cycles += vecunit::arith_cost(self.soc, &self.cfg, *widen);
+                self.trace.add(op.group(), 1);
+                if self.mode == Mode::Functional {
+                    let vl = self.cfg.vl as usize;
+                    let val = if self.float {
+                        let a = self.regs[*vs1 as usize].as_f();
+                        let b = self.regs[*vs2 as usize].as_f();
+                        VecVal::F(
+                            (0..vl)
+                                .map(|i| self.round_f(apply_f(*op, a[i], b[i])))
+                                .collect(),
+                        )
+                    } else {
+                        let a = self.regs[*vs1 as usize].as_i();
+                        let b = self.regs[*vs2 as usize].as_i();
+                        VecVal::I((0..vl).map(|i| apply_i(*op, a[i], b[i])).collect())
+                    };
+                    self.regs[*vd as usize] = val;
+                }
+            }
+            Inst::VBinScalar { op, vd, vs1, imm } => {
+                self.cycles += vecunit::arith_cost(self.soc, &self.cfg, false);
+                self.trace.add(op.group(), 1);
+                if self.mode == Mode::Functional {
+                    let vl = self.cfg.vl as usize;
+                    let val = if self.float {
+                        let a = self.regs[*vs1 as usize].as_f();
+                        let s = match imm {
+                            ScalarSrc::F(f) => *f,
+                            ScalarSrc::I(i) => *i as f64,
+                        };
+                        VecVal::F((0..vl).map(|i| self.round_f(apply_f(*op, a[i], s))).collect())
+                    } else {
+                        let a = self.regs[*vs1 as usize].as_i();
+                        let s = match imm {
+                            ScalarSrc::I(i) => *i,
+                            ScalarSrc::F(_) => panic!("float imm in int op"),
+                        };
+                        VecVal::I((0..vl).map(|i| apply_i(*op, a[i], s)).collect())
+                    };
+                    self.regs[*vd as usize] = val;
+                }
+            }
+            Inst::VMacc { vd, vs1, vs2, widen } => {
+                self.cycles += vecunit::arith_cost(self.soc, &self.cfg, *widen);
+                self.trace.add(InstrGroup::MultAdd, 1);
+                if self.mode == Mode::Functional {
+                    let vl = self.cfg.vl as usize;
+                    if self.float {
+                        let a: Vec<f64> = self.regs[*vs1 as usize].as_f().to_vec();
+                        let b: Vec<f64> = self.regs[*vs2 as usize].as_f().to_vec();
+                        let d = match &mut self.regs[*vd as usize] {
+                            VecVal::F(v) => v,
+                            _ => panic!("vmacc into non-float register"),
+                        };
+                        let round = make_round_f(self.float, self.cfg.sew);
+                        for i in 0..vl {
+                            // FMA semantics: single rounding of a*b+c.
+                            d[i] = round(a[i] * b[i] + d[i]);
+                        }
+                    } else {
+                        let a: Vec<i64> = self.regs[*vs1 as usize].as_i().to_vec();
+                        let b: Vec<i64> = self.regs[*vs2 as usize].as_i().to_vec();
+                        let d = match &mut self.regs[*vd as usize] {
+                            VecVal::I(v) => v,
+                            _ => panic!("vmacc into non-int register"),
+                        };
+                        for i in 0..vl {
+                            d[i] += a[i] * b[i];
+                        }
+                    }
+                }
+            }
+            Inst::VRedSum { vd, vs, acc } => {
+                self.cycles += vecunit::reduction_cost(self.soc, &self.cfg);
+                self.trace.add(InstrGroup::Reduction, 1);
+                if self.mode == Mode::Functional {
+                    let vl = self.cfg.vl as usize;
+                    let val = if self.float {
+                        let xs = self.regs[*vs as usize].as_f();
+                        let a0 = self.regs[*acc as usize].as_f()[0];
+                        // f32 sequential accumulation (matches XLA reduce).
+                        let mut s = a0 as f32;
+                        for &x in xs.iter().take(vl) {
+                            s += x as f32;
+                        }
+                        VecVal::F(vec![self.round_f(s as f64)])
+                    } else {
+                        let xs = self.regs[*vs as usize].as_i();
+                        let a0 = self.regs[*acc as usize].as_i()[0];
+                        VecVal::I(vec![a0 + xs.iter().take(vl).sum::<i64>()])
+                    };
+                    self.regs[*vd as usize] = val;
+                }
+            }
+            Inst::VSlideInsert { vd, vs, pos } => {
+                self.cycles += vecunit::slide_cost(self.soc, &self.cfg) + 1.0;
+                self.trace.add(InstrGroup::Move, 2);
+                if self.mode == Mode::Functional {
+                    let p = pos.eval(&self.vars) as usize;
+                    let src_scalar = match &self.regs[*vs as usize] {
+                        VecVal::I(v) => ScalarSrc::I(v[0]),
+                        VecVal::F(v) => ScalarSrc::F(v[0]),
+                        VecVal::Empty => panic!("slide from empty register"),
+                    };
+                    match (&mut self.regs[*vd as usize], src_scalar) {
+                        (VecVal::I(v), ScalarSrc::I(x)) => {
+                            assert!(p < v.len(), "slide insert out of range");
+                            v[p] = x;
+                        }
+                        (VecVal::F(v), ScalarSrc::F(x)) => {
+                            assert!(p < v.len(), "slide insert out of range");
+                            v[p] = x;
+                        }
+                        _ => panic!("slide type mismatch"),
+                    }
+                }
+            }
+            Inst::VSplat { vd, value, vl_override } => {
+                let vl = vl_override.unwrap_or(self.cfg.vl);
+                self.cycles += vecunit::splat_cost(self.soc, &self.cfg, vl);
+                self.trace.add(InstrGroup::Move, 1);
+                if self.mode == Mode::Functional {
+                    self.regs[*vd as usize] = match value {
+                        ScalarSrc::I(x) => VecVal::I(vec![*x; vl as usize]),
+                        ScalarSrc::F(x) => VecVal::F(vec![*x; vl as usize]),
+                    };
+                }
+            }
+            Inst::VMv { vd, vs } => {
+                self.cycles +=
+                    self.soc.issue_overhead + vecunit::chime(self.cfg.vl, self.cfg.sew, self.soc.dlen);
+                self.trace.add(InstrGroup::Move, 1);
+                if self.mode == Mode::Functional {
+                    self.regs[*vd as usize] = self.regs[*vs as usize].clone();
+                }
+            }
+            Inst::VRequant { vd, vs, mult, shift, zp } => {
+                // vmulh + vssra + vadd + vnclip
+                self.cycles += 4.0 * vecunit::arith_cost(self.soc, &self.cfg, false);
+                self.trace.add(InstrGroup::MultAdd, 2);
+                self.trace.add(InstrGroup::Other, 2);
+                if self.mode == Mode::Functional {
+                    let xs = self.regs[*vs as usize].as_i();
+                    let out: Vec<i64> = xs
+                        .iter()
+                        .map(|&x| requant_i64(x, *mult, *shift, *zp))
+                        .collect();
+                    self.regs[*vd as usize] = VecVal::I(out);
+                }
+            }
+            Inst::SOps { count } => {
+                self.cycles += vecunit::scalar_cost(self.soc, *count);
+                self.trace.add(InstrGroup::Scalar, *count as u64);
+            }
+            Inst::SDotRun { acc, a, b, len, dtype } => {
+                self.scalar_run_cost(*len, 6);
+                self.stream_touch(a, *len);
+                self.stream_touch(b, *len);
+                self.touch_one(acc);
+                if self.mode == Mode::Functional {
+                    let n = *len as i64;
+                    if dtype.is_float() {
+                        let mut s = 0f32;
+                        for i in 0..n {
+                            let av = bufs.bufs[a.buf].read_f(self.elem_addr(a, i).0) as f32;
+                            let bv = bufs.bufs[b.buf].read_f(self.elem_addr(b, i).0) as f32;
+                            s = self.round_f((s + av * bv) as f64) as f32;
+                        }
+                        let (idx, _) = self.elem_addr(acc, 0);
+                        let cur = bufs.bufs[acc.buf].read_f(idx);
+                        let v = self.round_f(cur + s as f64);
+                        bufs.bufs[acc.buf].write_f(idx, v);
+                    } else {
+                        let mut s = 0i64;
+                        for i in 0..n {
+                            let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
+                            let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
+                            s += av * bv;
+                        }
+                        let (idx, _) = self.elem_addr(acc, 0);
+                        let cur = bufs.bufs[acc.buf].read_i(idx);
+                        bufs.bufs[acc.buf].write_i(idx, cur + s);
+                    }
+                }
+            }
+            Inst::SAxpyRun { y, a, b, len, dtype } => {
+                self.scalar_run_cost(*len, 7);
+                self.stream_touch(a, *len);
+                self.stream_touch(b, *len);
+                self.stream_touch(y, *len);
+                if self.mode == Mode::Functional {
+                    for i in 0..*len as i64 {
+                        if dtype.is_float() {
+                            let av = bufs.bufs[a.buf].read_f(self.elem_addr(a, i).0);
+                            let bv = bufs.bufs[b.buf].read_f(self.elem_addr(b, i).0);
+                            let (yi, _) = self.elem_addr(y, i);
+                            let cur = bufs.bufs[y.buf].read_f(yi);
+                            let v = self.round_f(cur + self.round_f(av * bv));
+                            bufs.bufs[y.buf].write_f(yi, v);
+                        } else {
+                            let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
+                            let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
+                            let (yi, _) = self.elem_addr(y, i);
+                            let cur = bufs.bufs[y.buf].read_i(yi);
+                            bufs.bufs[y.buf].write_i(yi, cur + av * bv);
+                        }
+                    }
+                }
+            }
+            Inst::SRequantRun { dst, src, len, mult, shift, zp } => {
+                self.scalar_run_cost(*len, 7);
+                self.stream_touch(src, *len);
+                self.stream_touch(dst, *len);
+                if self.mode == Mode::Functional {
+                    for i in 0..*len as i64 {
+                        let x = bufs.bufs[src.buf].read_i(self.elem_addr(src, i).0);
+                        let (di, _) = self.elem_addr(dst, i);
+                        bufs.bufs[dst.buf].write_i(di, requant_i64(x, *mult, *shift, *zp));
+                    }
+                }
+            }
+            Inst::SCopyRun { dst, src, len, dtype } => {
+                self.scalar_run_cost(*len, 4);
+                self.stream_touch(src, *len);
+                self.stream_touch(dst, *len);
+                if self.mode == Mode::Functional {
+                    for i in 0..*len as i64 {
+                        let (di, _) = self.elem_addr(dst, i);
+                        if dtype.is_float() {
+                            let x = bufs.bufs[src.buf].read_f(self.elem_addr(src, i).0);
+                            bufs.bufs[dst.buf].write_f(di, x);
+                        } else {
+                            let x = bufs.bufs[src.buf].read_i(self.elem_addr(src, i).0);
+                            bufs.bufs[dst.buf].write_i(di, x);
+                        }
+                    }
+                }
+            }
+            Inst::PDotRun { acc, a, b, len, lanes } => {
+                // groups of `lanes` int8 elements: 2 packed loads + smaqa
+                // + address bookkeeping per group.
+                let groups = (*len as u64).div_ceil(*lanes as u64);
+                self.trace.add(InstrGroup::Scalar, groups * 4);
+                self.cycles += groups as f64 * 4.0 / self.soc.scalar_ipc;
+                self.stream_touch(a, *len);
+                self.stream_touch(b, *len);
+                self.touch_one(acc);
+                if self.mode == Mode::Functional {
+                    let mut s = 0i64;
+                    for i in 0..*len as i64 {
+                        let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
+                        let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
+                        s += av * bv;
+                    }
+                    let (idx, _) = self.elem_addr(acc, 0);
+                    let cur = bufs.bufs[acc.buf].read_i(idx);
+                    bufs.bufs[acc.buf].write_i(idx, cur + s);
+                }
+            }
+            Inst::PAxpyRun { y, a, b, len, lanes } => {
+                let groups = (*len as u64).div_ceil(*lanes as u64);
+                self.trace.add(InstrGroup::Scalar, groups * 7);
+                self.cycles += groups as f64 * 7.0 / self.soc.scalar_ipc;
+                self.stream_touch(a, *len);
+                self.stream_touch(b, *len);
+                self.stream_touch(y, *len);
+                if self.mode == Mode::Functional {
+                    for i in 0..*len as i64 {
+                        let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
+                        let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
+                        let (yi, _) = self.elem_addr(y, i);
+                        let cur = bufs.bufs[y.buf].read_i(yi);
+                        bufs.bufs[y.buf].write_i(yi, cur + av * bv);
+                    }
+                }
+            }
+            Inst::SAddRun { dst, src, len, dtype } => {
+                self.scalar_run_cost(*len, 5);
+                self.stream_touch(src, *len);
+                self.stream_touch(dst, *len);
+                if self.mode == Mode::Functional {
+                    for i in 0..*len as i64 {
+                        let (di, _) = self.elem_addr(dst, i);
+                        if dtype.is_float() {
+                            let x = bufs.bufs[src.buf].read_f(self.elem_addr(src, i).0);
+                            let cur = bufs.bufs[dst.buf].read_f(di);
+                            bufs.bufs[dst.buf].write_f(di, self.round_f(cur + x));
+                        } else {
+                            let x = bufs.bufs[src.buf].read_i(self.elem_addr(src, i).0);
+                            let cur = bufs.bufs[dst.buf].read_i(di);
+                            bufs.bufs[dst.buf].write_i(di, cur + x);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cycle + trace cost of a scalar macro loop (`instrs_per_elem`
+    /// instructions per element).
+    fn scalar_run_cost(&mut self, len: u32, instrs_per_elem: u32) {
+        let n = len as u64 * instrs_per_elem as u64;
+        self.trace.add(InstrGroup::Scalar, n);
+        self.cycles += n as f64 / self.soc.scalar_ipc;
+    }
+
+    /// Cache-touch an element stream (scalar loop accesses).
+    fn stream_touch(&mut self, mem: &MemRef, len: u32) {
+        let esize = self.dtypes[mem.buf].bytes() as u64;
+        if mem.stride == 1 {
+            let (_, addr) = self.elem_addr(mem, 0);
+            let raw = self.cache.access_range(addr, len as u64 * esize);
+            self.cycles += vecunit::miss_cost(self.soc, raw);
+        } else {
+            let mut raw = 0.0;
+            for i in 0..len as i64 {
+                let (_, addr) = self.elem_addr(mem, i);
+                raw += self.cache.access(addr);
+            }
+            self.cycles += vecunit::miss_cost(self.soc, raw);
+        }
+    }
+
+    fn touch_one(&mut self, mem: &MemRef) {
+        let (_, addr) = self.elem_addr(mem, 0);
+        let raw = self.cache.access(addr);
+        self.cycles += vecunit::miss_cost(self.soc, raw);
+    }
+
+    /// Round a float arithmetic result to the precision of the current SEW.
+    #[inline]
+    fn round_f(&self, x: f64) -> f64 {
+        match self.cfg.sew {
+            Sew::E16 => f16::f16_round(x as f32) as f64,
+            _ => (x as f32) as f64,
+        }
+    }
+}
+
+fn make_round_f(_float: bool, sew: Sew) -> impl Fn(f64) -> f64 {
+    move |x| match sew {
+        Sew::E16 => f16::f16_round(x as f32) as f64,
+        _ => (x as f32) as f64,
+    }
+}
+
+#[inline]
+fn apply_i(op: VBinOp, a: i64, b: i64) -> i64 {
+    match op {
+        VBinOp::Mul => a * b,
+        VBinOp::Add => a + b,
+        VBinOp::Sub => a - b,
+        VBinOp::Max => a.max(b),
+        VBinOp::Min => a.min(b),
+    }
+}
+
+#[inline]
+fn apply_f(op: VBinOp, a: f64, b: f64) -> f64 {
+    match op {
+        VBinOp::Mul => a * b,
+        VBinOp::Add => a + b,
+        VBinOp::Sub => a - b,
+        VBinOp::Max => a.max(b),
+        VBinOp::Min => a.min(b),
+    }
+}
+
+/// QNN requantization: saturate(rounding_rshift(x * mult, shift) + zp) to i8
+/// range. Matches `ref.py::requant` and `model.py` exactly.
+#[inline]
+pub fn requant_i64(x: i64, mult: i32, shift: u32, zp: i32) -> i64 {
+    let prod = x * mult as i64;
+    let rounded = (prod + (1i64 << (shift - 1))) >> shift;
+    (rounded + zp as i64).clamp(-128, 127)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::vprogram::{AddrExpr, LoopNode};
+
+    fn soc() -> SocConfig {
+        SocConfig::saturn(256)
+    }
+
+    /// C[j] += sum_i A[i]*B[j*len+i] as a hand-built VProgram using the
+    /// Algorithm-1 idiom, checked against a plain rust reference.
+    fn alg1_program(j_count: u32, vl: u32) -> VProgram {
+        let mut p = VProgram::new("alg1-test");
+        let a = p.add_buffer("A", DType::I8, vl as usize);
+        let b = p.add_buffer("B", DType::I8, (j_count * vl) as usize);
+        let c = p.add_buffer("C", DType::I32, j_count as usize);
+        let j = p.fresh_var();
+        p.body.push(Node::Inst(Inst::VSetVl {
+            vl,
+            sew: Sew::E8,
+            lmul: Lmul::M4,
+            float: false,
+        }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
+        // out_vec = zeros(J) at SEW=32
+        p.body.push(Node::Inst(Inst::VSplat {
+            vd: 25,
+            value: ScalarSrc::I(0),
+            vl_override: Some(j_count),
+        }));
+        p.body.push(Node::Loop(LoopNode {
+            var: j,
+            extent: j_count,
+            unroll: 1,
+            body: vec![
+                Node::Inst(Inst::VSplat { vd: 24, value: ScalarSrc::I(0), vl_override: Some(1) }),
+                Node::Inst(Inst::VLoad {
+                    vd: 8,
+                    mem: MemRef::unit(b, AddrExpr::var(j, vl as i64)),
+                }),
+                Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 16, vs1: 0, vs2: 8, widen: true }),
+                Node::Inst(Inst::VRedSum { vd: 24, vs: 16, acc: 24 }),
+                Node::Inst(Inst::VSlideInsert { vd: 25, vs: 24, pos: AddrExpr::var(j, 1) }),
+            ],
+        }));
+        // C += out_vec at SEW=32, VL=J
+        p.body.push(Node::Inst(Inst::VSetVl {
+            vl: j_count,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            float: false,
+        }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 26, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VBin { op: VBinOp::Add, vd: 25, vs1: 25, vs2: 26, widen: false }));
+        p.body.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        p
+    }
+
+    #[test]
+    fn alg1_numerics_match_reference() {
+        let (jn, vl) = (8u32, 64u32);
+        let p = alg1_program(jn, vl);
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..vl as i64).map(|i| ((i * 7 % 127) - 63) as i8).collect();
+        let bv: Vec<i8> = (0..(jn * vl) as i64).map(|i| ((i * 5 % 251) - 125) as i8).collect();
+        let cv: Vec<i32> = (0..jn as i64).map(|i| (i * 1000) as i32).collect();
+        bufs.set_i8(0, &av);
+        bufs.set_i8(1, &bv);
+        bufs.set_i32(2, &cv);
+        let r = execute(&soc(), &p, &mut bufs, Mode::Functional, true);
+        assert!(r.cycles > 0.0);
+        let got = bufs.get_i32(2);
+        for j in 0..jn as usize {
+            let expect: i64 = (0..vl as usize)
+                .map(|i| av[i] as i64 * bv[j * vl as usize + i] as i64)
+                .sum::<i64>()
+                + cv[j] as i64;
+            assert_eq!(got[j] as i64, expect, "output {j}");
+        }
+    }
+
+    #[test]
+    fn timing_and_functional_cycles_agree() {
+        let p = alg1_program(8, 64);
+        let mut fb = BufStore::functional(&p);
+        let rf = execute(&soc(), &p, &mut fb, Mode::Functional, true);
+        let mut tb = BufStore::timing(&p);
+        let rt = execute(&soc(), &p, &mut tb, Mode::Timing, true);
+        assert_eq!(rf.cycles, rt.cycles);
+        assert_eq!(rf.trace, rt.trace);
+        assert_eq!(rf.cache, rt.cache);
+    }
+
+    #[test]
+    fn trace_counts_are_plausible() {
+        let (jn, vl) = (8u32, 64u32);
+        let p = alg1_program(jn, vl);
+        let mut bufs = BufStore::timing(&p);
+        let r = execute(&soc(), &p, &mut bufs, Mode::Timing, true);
+        // Loads: 1 (A) + J (B rows) + 1 (C) ; stores: 1
+        assert_eq!(r.trace.get(InstrGroup::Load), 2 + jn as u64);
+        assert_eq!(r.trace.get(InstrGroup::Store), 1);
+        assert_eq!(r.trace.get(InstrGroup::Reduction), jn as u64);
+        assert_eq!(r.trace.get(InstrGroup::Config), 2);
+        assert!(r.trace.store_share() < 0.05);
+    }
+
+    #[test]
+    fn requant_formula() {
+        // mult=2^14 (i.e. scale 0.5 at shift 15), zp=1
+        assert_eq!(requant_i64(100, 1 << 14, 15, 1), 51);
+        assert_eq!(requant_i64(-100, 1 << 14, 15, 1), -49);
+        // saturation
+        assert_eq!(requant_i64(100000, 1 << 14, 10, 0), 127);
+        assert_eq!(requant_i64(-100000, 1 << 14, 10, 0), -128);
+    }
+
+    #[test]
+    fn requant_macro_applies_elementwise() {
+        let mut p = VProgram::new("rq");
+        let src = p.add_buffer("src", DType::I32, 8);
+        let dst = p.add_buffer("dst", DType::I8, 8);
+        p.body.push(Node::Inst(Inst::VSetVl { vl: 8, sew: Sew::E32, lmul: Lmul::M1, float: false }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(src, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VRequant { vd: 1, vs: 0, mult: 1 << 20, shift: 21, zp: 3 }));
+        p.body.push(Node::Inst(Inst::VStore { vs: 1, mem: MemRef::unit(dst, AddrExpr::constant(0)) }));
+        let mut bufs = BufStore::functional(&p);
+        bufs.set_i32(src, &[0, 2, -2, 200, -200, 300, 100000, -100000]);
+        execute(&soc(), &p, &mut bufs, Mode::Functional, false);
+        let out = bufs.get_i8(dst);
+        assert_eq!(out[0], 3);
+        assert_eq!(out[1], 4);
+        assert_eq!(out[2], 2);
+        assert_eq!(out[3], 103);
+        assert_eq!(out[6], 127); // saturated
+        assert_eq!(out[7], -128);
+    }
+
+    #[test]
+    fn float_f32_matmul_row() {
+        let vl = 16u32;
+        let mut p = VProgram::new("f32row");
+        let a = p.add_buffer("A", DType::F32, vl as usize);
+        let b = p.add_buffer("B", DType::F32, vl as usize);
+        let c = p.add_buffer("C", DType::F32, 1);
+        p.body.push(Node::Inst(Inst::VSetVl { vl, sew: Sew::E32, lmul: Lmul::M8, float: true }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(b, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 16, vs1: 0, vs2: 8, widen: false }));
+        p.body.push(Node::Inst(Inst::VSplat { vd: 24, value: ScalarSrc::F(0.0), vl_override: Some(1) }));
+        p.body.push(Node::Inst(Inst::VRedSum { vd: 25, vs: 16, acc: 24 }));
+        p.body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: Sew::E32, lmul: Lmul::M1, float: true }));
+        p.body.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<f32> = (0..vl).map(|i| i as f32 * 0.25).collect();
+        let bv: Vec<f32> = (0..vl).map(|i| 1.0 - i as f32 * 0.1).collect();
+        bufs.set_f32(a, &av);
+        bufs.set_f32(b, &bv);
+        execute(&soc(), &p, &mut bufs, Mode::Functional, false);
+        let expect: f32 = av.iter().zip(&bv).map(|(x, y)| x * y).sum();
+        let got = bufs.get_f32(c)[0];
+        assert!((got - expect).abs() < 1e-4, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn scalar_dot_run_matches_reference() {
+        let n = 100u32;
+        let mut p = VProgram::new("sdot");
+        let a = p.add_buffer("a", DType::I8, n as usize);
+        let b = p.add_buffer("b", DType::I8, n as usize * 2); // strided source
+        let c = p.add_buffer("c", DType::I32, 1);
+        p.body.push(Node::Inst(Inst::SDotRun {
+            acc: MemRef::unit(c, AddrExpr::constant(0)),
+            a: MemRef::unit(a, AddrExpr::constant(0)),
+            b: MemRef::strided(b, AddrExpr::constant(0), 2),
+            len: n,
+            dtype: DType::I8,
+        }));
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..n as i64).map(|i| (i % 11) as i8 - 5).collect();
+        let bv: Vec<i8> = (0..2 * n as i64).map(|i| (i % 13) as i8 - 6).collect();
+        bufs.set_i8(a, &av);
+        bufs.set_i8(b, &bv);
+        bufs.set_i32(c, &[7]);
+        let r = execute(&soc(), &p, &mut bufs, Mode::Functional, false);
+        let expect: i64 =
+            7 + (0..n as usize).map(|i| av[i] as i64 * bv[2 * i] as i64).sum::<i64>();
+        assert_eq!(bufs.get_i32(c)[0] as i64, expect);
+        assert_eq!(r.trace.vector_total(), 0);
+        assert!(r.trace.get(InstrGroup::Scalar) >= 6 * n as u64);
+    }
+
+    #[test]
+    fn f16_rounding_applied() {
+        let mut p = VProgram::new("f16");
+        let a = p.add_buffer("a", DType::F16, 4);
+        let b = p.add_buffer("b", DType::F16, 4);
+        let c = p.add_buffer("c", DType::F16, 4);
+        p.body.push(Node::Inst(Inst::VSetVl { vl: 4, sew: Sew::E16, lmul: Lmul::M1, float: true }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 1, mem: MemRef::unit(b, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 2, vs1: 0, vs2: 1, widen: false }));
+        p.body.push(Node::Inst(Inst::VStore { vs: 2, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        let mut bufs = BufStore::functional(&p);
+        bufs.set_f16_from_f32(a, &[1.1, 2.3, 0.007, 1000.0]);
+        bufs.set_f16_from_f32(b, &[3.7, 0.9, 123.0, 99.0]);
+        execute(&soc(), &p, &mut bufs, Mode::Functional, false);
+        let got = bufs.get_f16_as_f32(c);
+        for (i, (&x, &y)) in [1.1f32, 2.3, 0.007, 1000.0].iter().zip(&[3.7f32, 0.9, 123.0, 99.0]).enumerate() {
+            let expect = f16::f16_round(f16::f16_round(x) * f16::f16_round(y));
+            assert_eq!(got[i], expect, "lane {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_vector_access_panics() {
+        let mut p = VProgram::new("oob");
+        let a = p.add_buffer("a", DType::I8, 8);
+        p.body.push(Node::Inst(Inst::VSetVl { vl: 16, sew: Sew::E8, lmul: Lmul::M1, float: false }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
+        let mut bufs = BufStore::functional(&p);
+        execute(&soc(), &p, &mut bufs, Mode::Functional, false);
+    }
+
+    #[test]
+    fn warm_run_is_faster_than_cold() {
+        let p = alg1_program(8, 128);
+        let mut b1 = BufStore::timing(&p);
+        let cold = execute(&soc(), &p, &mut b1, Mode::Timing, false);
+        let mut b2 = BufStore::timing(&p);
+        let warm = execute(&soc(), &p, &mut b2, Mode::Timing, true);
+        assert!(warm.cycles < cold.cycles);
+    }
+}

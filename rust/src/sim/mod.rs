@@ -1,0 +1,19 @@
+//! The simulated measurement substrate: a functional + cycle-approximate
+//! model of RISC-V SoCs with RVV 1.0 vector units.
+//!
+//! This replaces the paper's FPGA-implemented Rocket+Saturn SoCs and the
+//! Banana Pi BPI-F3 board (see DESIGN.md §2 for the substitution argument).
+
+pub mod cache;
+pub mod compiled;
+pub mod machine;
+pub mod soc;
+pub mod trace;
+pub mod vecunit;
+pub mod vprogram;
+
+pub use cache::{Cache, CacheParams, CacheStats};
+pub use machine::{execute, requant_i64, BufData, BufStore, ExecResult, Mode};
+pub use soc::SocConfig;
+pub use trace::TraceCounts;
+pub use vprogram::{AddrExpr, BufId, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram, VarId};

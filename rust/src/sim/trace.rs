@@ -1,0 +1,97 @@
+//! Dynamic instruction-trace accounting.
+//!
+//! Replaces the paper's QEMU TCG-plugin traces (Figures 5 and 9): every
+//! dynamic instruction the machine executes is counted under its
+//! `InstrGroup`; the analysis side then reports absolute counts, the
+//! vector/scalar split, and per-group shares of vector instructions.
+
+use crate::isa::InstrGroup;
+
+/// Per-group dynamic instruction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    counts: [u64; 8],
+}
+
+impl TraceCounts {
+    #[inline]
+    pub fn add(&mut self, group: InstrGroup, n: u64) {
+        self.counts[group as usize] += n;
+    }
+
+    pub fn get(&self, group: InstrGroup) -> u64 {
+        self.counts[group as usize]
+    }
+
+    /// Total dynamic instructions (vector + scalar).
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Total dynamic *vector* instructions.
+    pub fn vector_total(&self) -> u64 {
+        InstrGroup::ALL
+            .iter()
+            .filter(|g| g.is_vector())
+            .map(|&g| self.get(g))
+            .sum()
+    }
+
+    /// Share of `group` among vector instructions (0..1).
+    pub fn vector_share(&self, group: InstrGroup) -> f64 {
+        let v = self.vector_total();
+        if v == 0 {
+            0.0
+        } else {
+            self.get(group) as f64 / v as f64
+        }
+    }
+
+    /// The paper's headline trace metric: vector-store share.
+    pub fn store_share(&self) -> f64 {
+        self.vector_share(InstrGroup::Store)
+    }
+
+    pub fn merge(&mut self, other: &TraceCounts) {
+        for i in 0..self.counts.len() {
+            self.counts[i] += other.counts[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_shares() {
+        let mut t = TraceCounts::default();
+        t.add(InstrGroup::Load, 80);
+        t.add(InstrGroup::Store, 10);
+        t.add(InstrGroup::MultAdd, 110);
+        t.add(InstrGroup::Scalar, 300);
+        assert_eq!(t.total(), 500);
+        assert_eq!(t.vector_total(), 200);
+        assert!((t.store_share() - 0.05).abs() < 1e-12);
+        assert!((t.vector_share(InstrGroup::Load) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_has_zero_shares() {
+        let t = TraceCounts::default();
+        assert_eq!(t.store_share(), 0.0);
+        assert_eq!(t.total(), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = TraceCounts::default();
+        a.add(InstrGroup::Load, 5);
+        let mut b = TraceCounts::default();
+        b.add(InstrGroup::Load, 7);
+        b.add(InstrGroup::Config, 1);
+        a.merge(&b);
+        assert_eq!(a.get(InstrGroup::Load), 12);
+        assert_eq!(a.get(InstrGroup::Config), 1);
+    }
+}

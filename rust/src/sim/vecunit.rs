@@ -1,0 +1,148 @@
+//! Per-instruction cycle cost model for the vector unit.
+//!
+//! A "chime" (occupancy) model in the style of decoupled vector machines:
+//! an instruction occupies the datapath for `ceil(VL·SEW / DLEN)` cycles,
+//! plus a dispatch/sequencing overhead, plus op-specific latencies
+//! (reduction trees, slides). Memory instructions are charged on the
+//! memory port width; cache-miss penalties are added by the machine, which
+//! owns the cache model. Cost never depends on data values, so timing-only
+//! and functional execution produce identical cycle counts.
+
+use crate::isa::{Sew, VectorConfig};
+
+use super::soc::SocConfig;
+
+/// Occupancy of `vl` elements of `sew` bits on a `width`-bit datapath.
+#[inline]
+pub fn chime(vl: u32, sew: Sew, width: u32) -> f64 {
+    ((vl as u64 * sew.bits() as u64 + width as u64 - 1) / width as u64) as f64
+}
+
+/// Cost of a vector arithmetic instruction (vadd/vmul/vmacc/...).
+/// `widen` doubles the effective destination SEW.
+#[inline]
+pub fn arith_cost(soc: &SocConfig, cfg: &VectorConfig, widen: bool) -> f64 {
+    let sew = if widen { cfg.sew.widen() } else { cfg.sew };
+    soc.issue_overhead + chime(cfg.vl, sew, soc.dlen)
+}
+
+/// Cost of a reduction (vredsum / vwredsum / vfredusum): stream the source
+/// through the lanes, then a lane-tree of depth log2(lanes), plus a fixed
+/// drain/writeback latency.
+#[inline]
+pub fn reduction_cost(soc: &SocConfig, cfg: &VectorConfig) -> f64 {
+    let lanes = (soc.dlen / cfg.sew.bits()).max(1);
+    // lanes is a power of two; integer log2 avoids libm on the hot path
+    let tree_depth = (u64::BITS - 1 - (lanes as u64).leading_zeros()) as f64;
+    soc.issue_overhead
+        + chime(cfg.vl, cfg.sew, soc.dlen)
+        + tree_depth
+        + soc.reduction_base
+}
+
+/// Cost of a unit-stride vector load/store of `vl` elements, excluding
+/// cache penalties (added by the machine).
+#[inline]
+pub fn unit_mem_cost(soc: &SocConfig, vl: u32, sew: Sew) -> f64 {
+    soc.issue_overhead + chime(vl, sew, soc.mem_width)
+}
+
+/// Cost of a strided vector load/store (one address per element).
+#[inline]
+pub fn strided_mem_cost(soc: &SocConfig, vl: u32) -> f64 {
+    soc.issue_overhead + vl as f64 / soc.strided_elems_per_cycle
+}
+
+/// Cost of a slide / scalar-insert pair (vmv.x.s + vslideup).
+#[inline]
+pub fn slide_cost(soc: &SocConfig, cfg: &VectorConfig) -> f64 {
+    soc.issue_overhead + chime(cfg.vl, cfg.sew, soc.dlen) + soc.slide_base
+}
+
+/// Cost of a splat (vmv.v.x / vmv.v.i / vmv.s.x). Tail-agnostic splats
+/// write the whole register group, so a full-length splat pays the group
+/// occupancy even when VL is small; `vmv.s.x` (vl=1) is cheap.
+#[inline]
+pub fn splat_cost(soc: &SocConfig, cfg: &VectorConfig, vl: u32) -> f64 {
+    if vl <= 1 {
+        soc.issue_overhead + 1.0
+    } else {
+        soc.issue_overhead + chime(vl, cfg.sew, soc.dlen)
+    }
+}
+
+/// Cost of `count` scalar bookkeeping instructions.
+#[inline]
+pub fn scalar_cost(soc: &SocConfig, count: u32) -> f64 {
+    count as f64 / soc.scalar_ipc
+}
+
+/// Scale a cache-miss penalty by the core's ability to hide it.
+#[inline]
+pub fn miss_cost(soc: &SocConfig, raw_penalty: f64) -> f64 {
+    raw_penalty * (1.0 - soc.mem_overlap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Lmul;
+
+    fn cfg(vlen: u32, sew: Sew, vl: u32) -> VectorConfig {
+        VectorConfig::new(vlen, sew, Lmul::M8, vl)
+    }
+
+    #[test]
+    fn chime_rounds_up() {
+        assert_eq!(chime(16, Sew::E8, 128), 1.0);
+        assert_eq!(chime(17, Sew::E8, 128), 2.0);
+        assert_eq!(chime(256, Sew::E32, 128), 64.0);
+        assert_eq!(chime(0, Sew::E8, 128), 0.0);
+    }
+
+    #[test]
+    fn longer_vectors_cost_more_but_amortize_issue() {
+        let soc = SocConfig::saturn(1024);
+        let short = arith_cost(&soc, &cfg(1024, Sew::E8, 64), false);
+        let long = arith_cost(&soc, &cfg(1024, Sew::E8, 1024), false);
+        assert!(long > short);
+        // Cost per element must drop with longer VL (issue amortization).
+        assert!(long / 1024.0 < short / 64.0);
+    }
+
+    #[test]
+    fn widening_doubles_occupancy() {
+        let soc = SocConfig::saturn(256);
+        let narrow = arith_cost(&soc, &cfg(256, Sew::E8, 256), false);
+        let wide = arith_cost(&soc, &cfg(256, Sew::E8, 256), true);
+        assert!((wide - narrow - chime(256, Sew::E8, soc.dlen)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduction_pays_tree_latency() {
+        let soc = SocConfig::saturn(256);
+        let c = cfg(256, Sew::E32, 8);
+        assert!(reduction_cost(&soc, &c) > arith_cost(&soc, &c, false));
+    }
+
+    #[test]
+    fn strided_much_slower_than_unit() {
+        let soc = SocConfig::saturn(256);
+        assert!(strided_mem_cost(&soc, 256) > 4.0 * unit_mem_cost(&soc, 256, Sew::E8));
+    }
+
+    #[test]
+    fn ooo_hides_misses() {
+        let saturn = SocConfig::saturn(256);
+        let bpi = SocConfig::bpi_f3();
+        assert_eq!(miss_cost(&saturn, 100.0), 100.0);
+        assert!(miss_cost(&bpi, 100.0) < 50.0);
+    }
+
+    #[test]
+    fn scalar_ipc_scales() {
+        let saturn = SocConfig::saturn(256);
+        let bpi = SocConfig::bpi_f3();
+        assert!(scalar_cost(&bpi, 8) < scalar_cost(&saturn, 8));
+    }
+}

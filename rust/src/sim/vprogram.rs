@@ -1,0 +1,437 @@
+//! The executable program representation ("VProgram").
+//!
+//! Code generators lower a scheduled tensor operation into this small
+//! loop-tree IR; the simulator interprets it. Design goals:
+//!
+//! * **Loop-tree, not flat trace** — a 512x512x512 matmul stays a few dozen
+//!   nodes; the interpreter walks iterations, so measurement cost scales
+//!   with *dynamic* instructions but memory stays O(program).
+//! * **Affine addressing** — every memory operand is `base + Σ coeff·loopvar`
+//!   (elements), which is exactly what TVM-generated C computes with
+//!   strength-reduced pointers.
+//! * **Macro "run" nodes** — per-element scalar inner loops (the `-Os`
+//!   baseline, requantization tails, im2col packing) are collapsed into
+//!   single nodes the interpreter executes in a tight native loop, keeping
+//!   the measurement of unvectorized baselines tractable.
+
+use crate::isa::{Lmul, Sew, VBinOp};
+use crate::tir::DType;
+
+/// Index of a loop variable within a `VProgram`.
+pub type VarId = usize;
+/// Index of a buffer declaration within a `VProgram`.
+pub type BufId = usize;
+
+/// Element offset expression: `base + Σ coeffs[i].1 * vars[coeffs[i].0]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AddrExpr {
+    pub base: i64,
+    pub coeffs: Vec<(VarId, i64)>,
+}
+
+impl AddrExpr {
+    pub fn constant(base: i64) -> AddrExpr {
+        AddrExpr { base, coeffs: vec![] }
+    }
+
+    pub fn var(v: VarId, scale: i64) -> AddrExpr {
+        AddrExpr { base: 0, coeffs: vec![(v, scale)] }
+    }
+
+    pub fn plus(mut self, v: VarId, scale: i64) -> AddrExpr {
+        if scale != 0 {
+            self.coeffs.push((v, scale));
+        }
+        self
+    }
+
+    pub fn offset(mut self, delta: i64) -> AddrExpr {
+        self.base += delta;
+        self
+    }
+
+    /// Multiply the whole expression by a constant.
+    pub fn scaled(mut self, factor: i64) -> AddrExpr {
+        self.base *= factor;
+        for c in &mut self.coeffs {
+            c.1 *= factor;
+        }
+        self
+    }
+
+    /// Add another affine expression.
+    pub fn plus_expr(mut self, other: &AddrExpr) -> AddrExpr {
+        self.base += other.base;
+        self.coeffs.extend(other.coeffs.iter().copied());
+        self
+    }
+
+    /// Evaluate with the given loop-variable values.
+    #[inline]
+    pub fn eval(&self, vars: &[i64]) -> i64 {
+        let mut x = self.base;
+        for &(v, c) in &self.coeffs {
+            x += c * vars[v];
+        }
+        x
+    }
+}
+
+/// A memory operand: element offset into a buffer, with an element stride
+/// between consecutive vector lanes (1 = unit stride -> vle/vse, else
+/// strided vlse/vsse).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemRef {
+    pub buf: BufId,
+    pub addr: AddrExpr,
+    pub stride: i64,
+}
+
+impl MemRef {
+    pub fn unit(buf: BufId, addr: AddrExpr) -> MemRef {
+        MemRef { buf, addr, stride: 1 }
+    }
+
+    pub fn strided(buf: BufId, addr: AddrExpr, stride: i64) -> MemRef {
+        MemRef { buf, addr, stride }
+    }
+}
+
+/// Scalar immediate operand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScalarSrc {
+    I(i64),
+    F(f64),
+}
+
+/// One instruction (or macro-instruction) of the simulated machine.
+#[derive(Clone, Debug)]
+pub enum Inst {
+    /// `vsetvli` — establish (vl, sew, lmul); `float` selects FP semantics
+    /// for subsequent arithmetic.
+    VSetVl { vl: u32, sew: Sew, lmul: Lmul, float: bool },
+    /// Vector load into `vd` (unit or strided by `mem.stride`).
+    VLoad { vd: u8, mem: MemRef },
+    /// Vector store from `vs`.
+    VStore { vs: u8, mem: MemRef },
+    /// `vd = vs1 op vs2` elementwise; `widen` doubles the destination SEW
+    /// (vwmul/vwadd) with exact integer semantics.
+    VBin { op: VBinOp, vd: u8, vs1: u8, vs2: u8, widen: bool },
+    /// `vd = vs1 op imm` (vx/vi form).
+    VBinScalar { op: VBinOp, vd: u8, vs1: u8, imm: ScalarSrc },
+    /// `vd += vs1 * vs2` (vmacc / vfmacc); `widen` = vwmacc.
+    VMacc { vd: u8, vs1: u8, vs2: u8, widen: bool },
+    /// `vd[0] = reduce_sum(vs[0..vl]) + acc[0]` (vredsum / vwredsum /
+    /// vfredusum). Destination is a single element.
+    VRedSum { vd: u8, vs: u8, acc: u8 },
+    /// `vd[pos] = vs[0]` — the paper's Algorithm-1 accumulation idiom
+    /// (vslideup of a vmv'd scalar). Counts as 2 dynamic instructions.
+    VSlideInsert { vd: u8, vs: u8, pos: AddrExpr },
+    /// Splat a scalar (vmv.v.x / vmv.v.i); `vl_override = Some(1)` models
+    /// vmv.s.x writing only element 0.
+    VSplat { vd: u8, value: ScalarSrc, vl_override: Option<u32> },
+    /// Whole-register move `vd = vs` (vmv.v.v).
+    VMv { vd: u8, vs: u8 },
+    /// QNN requantization macro: `vd[i] = sat8(rrshift(vs[i]*mult, shift)
+    /// + zp)` — lowered on hardware as vmulh+vssra+vadd+vnclip, so it
+    /// counts as 4 dynamic instructions (2 MultAdd + 2 Other).
+    VRequant { vd: u8, vs: u8, mult: i32, shift: u32, zp: i32 },
+    /// Plain scalar bookkeeping instructions (address arithmetic etc).
+    SOps { count: u32 },
+    /// Macro: scalar dot product `acc[0] += Σ a[i]*b[i]` over `len`
+    /// elements (the innermost loop of the -Os baseline). Executes as
+    /// `len` iterations of {2 loads, mul, add, loop overhead}.
+    SDotRun { acc: MemRef, a: MemRef, b: MemRef, len: u32, dtype: DType },
+    /// Macro: scalar elementwise `y[i] += a[i]*b[i]` over `len` elements.
+    SAxpyRun { y: MemRef, a: MemRef, b: MemRef, len: u32, dtype: DType },
+    /// Macro: scalar requantize `dst[i] = sat8(rrshift(src[i]*mult, shift)
+    /// + zp)` over `len` int32 elements.
+    SRequantRun { dst: MemRef, src: MemRef, len: u32, mult: i32, shift: u32, zp: i32 },
+    /// Macro: scalar copy of `len` elements (im2col / packing loops).
+    SCopyRun { dst: MemRef, src: MemRef, len: u32, dtype: DType },
+    /// Macro: scalar accumulate-add `dst[i] += src[i]` over `len` elements
+    /// (bias add tails).
+    SAddRun { dst: MemRef, src: MemRef, len: u32, dtype: DType },
+    /// Macro: Packed-SIMD dot product (RISC-V P extension, e.g. `smaqa`):
+    /// `acc[0] += Σ a[i]*b[i]`, processing `lanes` int8 elements per GPR
+    /// instruction (2 packed loads + 1 SIMD MAC per group). These are
+    /// *scalar-ISA* instructions — they count in the Scalar trace group,
+    /// exactly as a QEMU trace would classify them.
+    PDotRun { acc: MemRef, a: MemRef, b: MemRef, len: u32, lanes: u32 },
+    /// Macro: Packed-SIMD elementwise MAC (`kmda`/`smul8` style):
+    /// `y[i] += a[i]*b[i]` with `lanes` elements per instruction group
+    /// (3 packed loads + mul + add + packed store per group).
+    PAxpyRun { y: MemRef, a: MemRef, b: MemRef, len: u32, lanes: u32 },
+}
+
+impl Inst {
+    /// Dynamic instruction count this node contributes per execution.
+    pub fn dyn_instrs(&self) -> u64 {
+        match self {
+            Inst::VSlideInsert { .. } => 2, // vmv.x.s + vslideup (modeled pair)
+            Inst::VRequant { .. } => 4,
+            Inst::SOps { count } => *count as u64,
+            // run nodes: loads+mul+add+bookkeeping per element, see machine
+            Inst::SDotRun { len, .. } => *len as u64 * 6,
+            Inst::SAxpyRun { len, .. } => *len as u64 * 7,
+            Inst::SRequantRun { len, .. } => *len as u64 * 7,
+            Inst::SCopyRun { len, .. } => *len as u64 * 4,
+            Inst::SAddRun { len, .. } => *len as u64 * 5,
+            Inst::PDotRun { len, lanes, .. } => (*len as u64).div_ceil(*lanes as u64) * 4,
+            Inst::PAxpyRun { len, lanes, .. } => (*len as u64).div_ceil(*lanes as u64) * 7,
+            _ => 1,
+        }
+    }
+
+    /// Static instruction count (code-size contribution in the binary).
+    pub fn static_instrs(&self) -> u64 {
+        match self {
+            Inst::VSlideInsert { .. } => 2,
+            Inst::VRequant { .. } => 4,
+            Inst::SOps { count } => *count as u64,
+            // a scalar inner loop is ~6 static instructions + loop overhead
+            Inst::SDotRun { .. } => 6 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            Inst::SAxpyRun { .. } => 7 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            Inst::SRequantRun { .. } => 7 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            Inst::SCopyRun { .. } => 4 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            Inst::SAddRun { .. } => 5 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            Inst::PDotRun { .. } => 4 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            Inst::PAxpyRun { .. } => 7 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS,
+            _ => 1,
+        }
+    }
+
+    pub fn is_vector(&self) -> bool {
+        matches!(
+            self,
+            Inst::VSetVl { .. }
+                | Inst::VLoad { .. }
+                | Inst::VStore { .. }
+                | Inst::VBin { .. }
+                | Inst::VBinScalar { .. }
+                | Inst::VMacc { .. }
+                | Inst::VRedSum { .. }
+                | Inst::VSlideInsert { .. }
+                | Inst::VSplat { .. }
+                | Inst::VMv { .. }
+                | Inst::VRequant { .. }
+        )
+    }
+}
+
+/// A node of the loop tree.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Inst(Inst),
+    Loop(LoopNode),
+}
+
+/// A counted loop. `unroll > 1` means the binary contains `unroll` copies
+/// of the body (bigger code, less bookkeeping); the extent is still the
+/// full trip count.
+#[derive(Clone, Debug)]
+pub struct LoopNode {
+    pub var: VarId,
+    pub extent: u32,
+    pub unroll: u32,
+    pub body: Vec<Node>,
+}
+
+/// Buffer declaration: the simulator allocates/addresses these.
+#[derive(Clone, Debug)]
+pub struct BufferDecl {
+    pub name: String,
+    pub dtype: DType,
+    pub len: usize,
+}
+
+/// A complete lowered tensor program.
+#[derive(Clone, Debug)]
+pub struct VProgram {
+    pub name: String,
+    pub buffers: Vec<BufferDecl>,
+    pub n_vars: usize,
+    pub body: Vec<Node>,
+}
+
+impl VProgram {
+    pub fn new(name: impl Into<String>) -> VProgram {
+        VProgram { name: name.into(), buffers: vec![], n_vars: 0, body: vec![] }
+    }
+
+    pub fn add_buffer(&mut self, name: impl Into<String>, dtype: DType, len: usize) -> BufId {
+        self.buffers.push(BufferDecl { name: name.into(), dtype, len });
+        self.buffers.len() - 1
+    }
+
+    pub fn fresh_var(&mut self) -> VarId {
+        self.n_vars += 1;
+        self.n_vars - 1
+    }
+
+    /// Static instruction count of the generated kernel body
+    /// (code-size model input).
+    pub fn static_instrs(&self) -> (u64, u64) {
+        fn walk(nodes: &[Node]) -> (u64, u64) {
+            let (mut vec_i, mut scalar_i) = (0u64, 0u64);
+            for n in nodes {
+                match n {
+                    Node::Inst(i) => {
+                        if i.is_vector() {
+                            vec_i += i.static_instrs();
+                        } else {
+                            scalar_i += i.static_instrs();
+                        }
+                    }
+                    Node::Loop(l) => {
+                        let (v, s) = walk(&l.body);
+                        vec_i += v * l.unroll as u64;
+                        scalar_i +=
+                            s * l.unroll as u64 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS;
+                    }
+                }
+            }
+            (vec_i, scalar_i)
+        }
+        walk(&self.body)
+    }
+
+    /// Code size in bytes of the kernel in the final binary.
+    pub fn code_size_bytes(&self) -> u64 {
+        let (v, s) = self.static_instrs();
+        v * crate::isa::vector_instr_bytes() + (s as f64 * crate::isa::scalar_instr_bytes()) as u64
+    }
+
+    /// Render a readable C-like listing of the program (for `rvv-tune
+    /// export`, debugging, and documentation).
+    pub fn pretty(&self) -> String {
+        let mut out = format!("// {}\n", self.name);
+        for (i, b) in self.buffers.iter().enumerate() {
+            out.push_str(&format!("// buf{} {}: {}[{}]\n", i, b.name, b.dtype, b.len));
+        }
+        fn addr(e: &AddrExpr, bufname: &str) -> String {
+            let mut parts = Vec::new();
+            if e.base != 0 || e.coeffs.is_empty() {
+                parts.push(e.base.to_string());
+            }
+            for &(v, c) in &e.coeffs {
+                parts.push(if c == 1 { format!("i{v}") } else { format!("i{v}*{c}") });
+            }
+            format!("{bufname}[{}]", parts.join(" + "))
+        }
+        fn mem(m: &MemRef, p: &VProgram) -> String {
+            let base = addr(&m.addr, &p.buffers[m.buf].name);
+            if m.stride == 1 { base } else { format!("{base} stride {}", m.stride) }
+        }
+        fn walk(nodes: &[Node], p: &VProgram, depth: usize, out: &mut String) {
+            let pad = "  ".repeat(depth);
+            for n in nodes {
+                match n {
+                    Node::Loop(l) => {
+                        let u = if l.unroll > 1 { format!("  // unroll {}", l.unroll) } else { String::new() };
+                        out.push_str(&format!("{pad}for (i{} = 0; i{} < {}; i{}++) {{{u}\n", l.var, l.var, l.extent, l.var));
+                        walk(&l.body, p, depth + 1, out);
+                        out.push_str(&format!("{pad}}}\n"));
+                    }
+                    Node::Inst(inst) => {
+                        let line = match inst {
+                            Inst::VSetVl { vl, sew, lmul, .. } => format!("vsetvli vl={vl}, e{}, m{}", sew.bits(), lmul.factor()),
+                            Inst::VLoad { vd, mem: m } => format!("v{vd} = vle {}", mem(m, p)),
+                            Inst::VStore { vs, mem: m } => format!("vse v{vs} -> {}", mem(m, p)),
+                            Inst::VBin { op, vd, vs1, vs2, widen } => format!("v{vd} = {}v{:?}(v{vs1}, v{vs2})", if *widen { "vw" } else { "v" }, op).to_lowercase(),
+                            Inst::VBinScalar { op, vd, vs1, .. } => format!("v{vd} = v{:?}.vx(v{vs1}, imm)", op).to_lowercase(),
+                            Inst::VMacc { vd, vs1, vs2, widen } => format!("v{vd} += {}v{vs1} * v{vs2}", if *widen { "(widen) " } else { "" }),
+                            Inst::VRedSum { vd, vs, acc } => format!("v{vd}[0] = vredsum(v{vs}) + v{acc}[0]"),
+                            Inst::VSlideInsert { vd, vs, pos } => {
+                                let idx = addr(pos, "").replace(['[', ']'], "");
+                                format!("v{vd}[{idx}] = v{vs}[0]  // vmv.x.s + vslideup")
+                            }
+                            Inst::VSplat { vd, .. } => format!("v{vd} = vmv.v.i 0"),
+                            Inst::VMv { vd, vs } => format!("v{vd} = v{vs}"),
+                            Inst::VRequant { vd, vs, mult, shift, zp } => format!("v{vd} = requant(v{vs}, mult={mult}, shift={shift}, zp={zp})  // vmulh+vssra+vadd+vnclip"),
+                            Inst::SOps { count } => format!("// {count} scalar ops"),
+                            Inst::SDotRun { acc, a, b, len, .. } => format!("{} += dot({}, {}, len={len})  // scalar", mem(acc, p), mem(a, p), mem(b, p)),
+                            Inst::SAxpyRun { y, a, b, len, .. } => format!("{} += {} * {} (len={len})  // scalar", mem(y, p), mem(a, p), mem(b, p)),
+                            Inst::SRequantRun { dst, src, len, .. } => format!("{} = requant({}, len={len})  // scalar", mem(dst, p), mem(src, p)),
+                            Inst::SCopyRun { dst, src, len, .. } => format!("{} = copy({}, len={len})", mem(dst, p), mem(src, p)),
+                            Inst::SAddRun { dst, src, len, .. } => format!("{} += {} (len={len})", mem(dst, p), mem(src, p)),
+                            Inst::PDotRun { acc, a, b, len, lanes } => format!("{} += smaqa-dot({}, {}, len={len}, lanes={lanes})  // P-ext", mem(acc, p), mem(a, p), mem(b, p)),
+                            Inst::PAxpyRun { y, a, b, len, lanes } => format!("{} += {} * {} (len={len}, lanes={lanes})  // P-ext", mem(y, p), mem(a, p), mem(b, p)),
+                        };
+                        out.push_str(&format!("{pad}{line}\n"));
+                    }
+                }
+            }
+        }
+        walk(&self.body, self, 0, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_expr_eval() {
+        let e = AddrExpr::var(0, 8).plus(1, 1).offset(100);
+        assert_eq!(e.eval(&[3, 5]), 100 + 24 + 5);
+        assert_eq!(AddrExpr::constant(7).eval(&[]), 7);
+    }
+
+    #[test]
+    fn addr_expr_drops_zero_scale() {
+        let e = AddrExpr::constant(0).plus(0, 0);
+        assert!(e.coeffs.is_empty());
+    }
+
+    #[test]
+    fn static_instr_counting() {
+        let mut p = VProgram::new("t");
+        let v = p.fresh_var();
+        p.body.push(Node::Loop(LoopNode {
+            var: v,
+            extent: 10,
+            unroll: 2,
+            body: vec![
+                Node::Inst(Inst::VLoad {
+                    vd: 0,
+                    mem: MemRef::unit(0, AddrExpr::constant(0)),
+                }),
+                Node::Inst(Inst::SOps { count: 3 }),
+            ],
+        }));
+        let (vec_i, scalar_i) = p.static_instrs();
+        assert_eq!(vec_i, 2); // unrolled twice
+        assert_eq!(scalar_i, 3 * 2 + crate::isa::LOOP_OVERHEAD_STATIC_INSTRS);
+        assert!(p.code_size_bytes() > 0);
+    }
+
+    #[test]
+    fn pretty_renders_loops_and_instrs() {
+        let mut p = VProgram::new("demo");
+        let b = p.add_buffer("X", DType::I8, 64);
+        let v = p.fresh_var();
+        p.body.push(Node::Loop(LoopNode {
+            var: v,
+            extent: 4,
+            unroll: 2,
+            body: vec![Node::Inst(Inst::VLoad {
+                vd: 3,
+                mem: MemRef::unit(b, AddrExpr::var(v, 16)),
+            })],
+        }));
+        let text = p.pretty();
+        assert!(text.contains("for (i0 = 0; i0 < 4; i0++)"), "{text}");
+        assert!(text.contains("unroll 2"), "{text}");
+        assert!(text.contains("v3 = vle X[i0*16]"), "{text}");
+        assert!(text.contains("int8[64]"), "{text}");
+    }
+
+    #[test]
+    fn requant_counts_four() {
+        let i = Inst::VRequant { vd: 0, vs: 1, mult: 1, shift: 1, zp: 0 };
+        assert_eq!(i.dyn_instrs(), 4);
+        assert!(i.is_vector());
+    }
+}

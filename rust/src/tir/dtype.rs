@@ -1,0 +1,99 @@
+//! Tensor element types supported by the system (the paper targets int8
+//! quantized, float16, and float32 workloads; int32 appears as the
+//! accumulator / bias type of the QNN convention).
+
+use crate::isa::Sew;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    I8,
+    I32,
+    F16,
+    F32,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 | DType::F32 => 4,
+            DType::F16 => 2,
+        }
+    }
+
+    pub fn sew(self) -> Sew {
+        match self {
+            DType::I8 => Sew::E8,
+            DType::F16 => Sew::E16,
+            DType::I32 | DType::F32 => Sew::E32,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F16 | DType::F32)
+    }
+
+    /// Accumulator type of a dot product over this element type
+    /// (QNN convention: i8 x i8 accumulates in i32; floats accumulate in
+    /// their own width — f16 accumulation mirrors the RVV widening FMA
+    /// being unavailable on the evaluated cores).
+    pub fn accumulator(self) -> DType {
+        match self {
+            DType::I8 => DType::I32,
+            other => other,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I8 => "int8",
+            DType::I32 => "int32",
+            DType::F16 => "float16",
+            DType::F32 => "float32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "int8" | "i8" => Some(DType::I8),
+            "int32" | "i32" => Some(DType::I32),
+            "float16" | "f16" | "fp16" => Some(DType::F16),
+            "float32" | "f32" | "fp32" => Some(DType::F32),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_sew() {
+        assert_eq!(DType::I8.bytes(), 1);
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::F32.sew(), Sew::E32);
+        assert_eq!(DType::I8.sew(), Sew::E8);
+    }
+
+    #[test]
+    fn accumulators() {
+        assert_eq!(DType::I8.accumulator(), DType::I32);
+        assert_eq!(DType::F32.accumulator(), DType::F32);
+        assert_eq!(DType::F16.accumulator(), DType::F16);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in [DType::I8, DType::I32, DType::F16, DType::F32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("bf16"), None);
+    }
+}

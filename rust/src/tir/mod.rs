@@ -1,0 +1,11 @@
+//! Tensor-program IR: dtypes, operator descriptions, and schedules.
+
+mod dtype;
+mod op;
+mod schedule;
+
+pub use dtype::DType;
+pub use op::{Op, Requant};
+pub use schedule::{
+    DwConvSchedule, EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule, Schedule,
+};

@@ -1,0 +1,133 @@
+//! Tensor operator descriptions — the unit of tuning.
+//!
+//! Network layers (workloads::models) lower onto these three primitives the
+//! same way muRISCV-NN / CMSIS-NN do: convolutions via im2col to GEMM,
+//! depthwise convolutions to channel-vectorized multiply-accumulate
+//! (the paper's Algorithm 2 target), everything dense to `Matmul`.
+
+use super::dtype::DType;
+
+/// QNN requantization parameters (paper §IV-A: int8 matmuls accumulate in
+/// int32, add an int32 bias, then requantize back to int8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    /// Fixed-point multiplier.
+    pub mult: i32,
+    /// Rounding right-shift amount (> 0).
+    pub shift: u32,
+    /// Output zero point.
+    pub zp: i32,
+}
+
+impl Requant {
+    /// A representative configuration used across tests and workloads
+    /// (scale ≈ mult / 2^shift).
+    pub fn default_for_tests() -> Requant {
+        Requant { mult: 1 << 14, shift: 22, zp: 0 }
+    }
+}
+
+/// One tunable tensor operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// `C[m,n] = requant(A[m,k] x B[k,n] + D[m,n])`. B is stored in weights
+    /// layout `[n,k]` (pre-packed at compile time, as muRISCV-NN assumes).
+    /// int8 ops carry `requant`; float ops set it to None.
+    Matmul {
+        m: usize,
+        n: usize,
+        k: usize,
+        dtype: DType,
+        requant: Option<Requant>,
+    },
+    /// Depthwise convolution, flattened: for each of `spatial` output
+    /// positions, accumulate `taps` multiply-adds over `channels` lanes.
+    /// This is the layer class the paper maps to Algorithm 2.
+    DwConv {
+        spatial: usize,
+        channels: usize,
+        taps: usize,
+        dtype: DType,
+        requant: Option<Requant>,
+    },
+    /// Elementwise multiply-accumulate `y[i] += a[i] * b[i]`.
+    Eltwise { len: usize, dtype: DType },
+}
+
+impl Op {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Op::Matmul { dtype, .. } | Op::DwConv { dtype, .. } | Op::Eltwise { dtype, .. } => {
+                *dtype
+            }
+        }
+    }
+
+    /// Multiply-accumulate count (work metric for throughput reporting).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Op::Matmul { m, n, k, .. } => (*m * *n * *k) as u64,
+            Op::DwConv { spatial, channels, taps, .. } => (*spatial * *channels * *taps) as u64,
+            Op::Eltwise { len, .. } => *len as u64,
+        }
+    }
+
+    /// Canonical identity used to deduplicate tuning tasks: layers with the
+    /// same shape+dtype share one tuned schedule (as TVM does).
+    pub fn key(&self) -> String {
+        match self {
+            Op::Matmul { m, n, k, dtype, requant } => {
+                format!("matmul-{m}x{n}x{k}-{}-rq{}", dtype.name(), requant.is_some() as u8)
+            }
+            Op::DwConv { spatial, channels, taps, dtype, requant } => format!(
+                "dwconv-{spatial}x{channels}x{taps}-{}-rq{}",
+                dtype.name(),
+                requant.is_some() as u8
+            ),
+            Op::Eltwise { len, dtype } => format!("eltwise-{len}-{}", dtype.name()),
+        }
+    }
+
+    /// A square QNN matmul like the paper's §IV-A benchmark.
+    pub fn square_matmul(size: usize, dtype: DType) -> Op {
+        let requant = match dtype {
+            DType::I8 => Some(Requant::default_for_tests()),
+            _ => None,
+        };
+        Op::Matmul { m: size, n: size, k: size, dtype, requant }
+    }
+}
+
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_and_keys() {
+        let op = Op::square_matmul(64, DType::I8);
+        assert_eq!(op.macs(), 64 * 64 * 64);
+        assert_eq!(op.key(), "matmul-64x64x64-int8-rq1");
+        let f = Op::square_matmul(64, DType::F32);
+        assert_eq!(f.key(), "matmul-64x64x64-float32-rq0");
+    }
+
+    #[test]
+    fn same_shape_same_key() {
+        let a = Op::Matmul { m: 1, n: 128, k: 640, dtype: DType::I8, requant: Some(Requant::default_for_tests()) };
+        let b = Op::Matmul { m: 1, n: 128, k: 640, dtype: DType::I8, requant: Some(Requant { mult: 99, shift: 9, zp: 1 }) };
+        // requant parameter values don't change the *schedule* space
+        assert_eq!(a.key(), b.key());
+    }
+
+    #[test]
+    fn dwconv_macs() {
+        let op = Op::DwConv { spatial: 100, channels: 32, taps: 9, dtype: DType::I8, requant: None };
+        assert_eq!(op.macs(), 100 * 32 * 9);
+    }
+}

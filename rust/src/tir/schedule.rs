@@ -1,0 +1,207 @@
+//! Schedule decisions — the output of the probabilistic sampler and the
+//! input of the code generator.
+//!
+//! A `Schedule` is the small vector of decisions MetaSchedule samples for
+//! one operator: which tensor intrinsic variant to use (VL ladder + J
+//! variant, paper §III), how to tile each loop, the outer-loop order, and
+//! the unroll factor. Everything here is plain data so schedules can be
+//! mutated (evolutionary search), hashed (dedup), and serialized
+//! (database).
+
+use crate::util::Json;
+
+/// The tensor-intrinsic variant chosen for the inner computation
+/// (one entry of the registry in `intrinsics/`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct IntrinChoice {
+    /// Static vector length of the intrinsic *definition*.
+    pub vl: u32,
+    /// Output-tile width J (paper: VLEN/32, or 1 for tiny workloads).
+    pub j: u32,
+    /// LMUL used by the implementation (the paper fixes LMUL=8; ablations
+    /// may use smaller).
+    pub lmul: u32,
+}
+
+/// Order of the outer loops of a tiled matmul. `m` iterates rows, `n`
+/// iterates J-wide output tiles, `k` iterates VL-wide reduction chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoopOrder {
+    /// m outer, n middle, k inner — A-row stationary.
+    MNK,
+    /// n outer, m middle, k inner — B-tile stationary (B rows reused
+    /// across consecutive m).
+    NMK,
+    /// n outer, k middle, m inner — B-chunk stationary with C streaming.
+    NKM,
+    /// k outer, m middle, n inner — reduction-outer (C revisited per chunk).
+    KMN,
+}
+
+impl LoopOrder {
+    pub const ALL: [LoopOrder; 4] = [LoopOrder::MNK, LoopOrder::NMK, LoopOrder::NKM, LoopOrder::KMN];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LoopOrder::MNK => "mnk",
+            LoopOrder::NMK => "nmk",
+            LoopOrder::NKM => "nkm",
+            LoopOrder::KMN => "kmn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LoopOrder> {
+        LoopOrder::ALL.into_iter().find(|o| o.name() == s)
+    }
+}
+
+/// Schedule for a matmul (the paper's Algorithm-1 target).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatmulSchedule {
+    pub intrin: IntrinChoice,
+    /// Inner row-block size (m is split into m/mi x mi; mi is unroll-able).
+    pub mi: u32,
+    pub order: LoopOrder,
+    /// Unroll factor applied to the innermost structural loop.
+    pub unroll: u32,
+    /// Tensorize the transposed problem C^T = B x A^T: the J-wide output
+    /// tile runs along m instead of n (the profitable mapping when n < J,
+    /// e.g. narrow conv-as-GEMM layers). The output tile is then accessed
+    /// with stride n (vlse/vsse).
+    pub transpose: bool,
+}
+
+/// Schedule for a depthwise convolution (Algorithm-2 target): channels are
+/// chunked by VL; taps may be unrolled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DwConvSchedule {
+    pub vl: u32,
+    pub unroll_taps: bool,
+}
+
+/// Schedule for elementwise multiply-accumulate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EltwiseSchedule {
+    pub vl: u32,
+    pub unroll: u32,
+}
+
+/// A complete schedule for one operator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Matmul(MatmulSchedule),
+    DwConv(DwConvSchedule),
+    Eltwise(EltwiseSchedule),
+}
+
+impl Schedule {
+    /// Compact human-readable form (database / report key).
+    pub fn describe(&self) -> String {
+        match self {
+            Schedule::Matmul(s) => format!(
+                "mm[vl={} j={} lmul={} mi={} order={} unroll={}{}]",
+                s.intrin.vl,
+                s.intrin.j,
+                s.intrin.lmul,
+                s.mi,
+                s.order.name(),
+                s.unroll,
+                if s.transpose { " T" } else { "" }
+            ),
+            Schedule::DwConv(s) => format!("dw[vl={} unroll_taps={}]", s.vl, s.unroll_taps),
+            Schedule::Eltwise(s) => format!("ew[vl={} unroll={}]", s.vl, s.unroll),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Schedule::Matmul(s) => Json::obj(vec![
+                ("kind", Json::str("matmul")),
+                ("vl", Json::num(s.intrin.vl as f64)),
+                ("j", Json::num(s.intrin.j as f64)),
+                ("lmul", Json::num(s.intrin.lmul as f64)),
+                ("mi", Json::num(s.mi as f64)),
+                ("order", Json::str(s.order.name())),
+                ("unroll", Json::num(s.unroll as f64)),
+                ("transpose", Json::Bool(s.transpose)),
+            ]),
+            Schedule::DwConv(s) => Json::obj(vec![
+                ("kind", Json::str("dwconv")),
+                ("vl", Json::num(s.vl as f64)),
+                ("unroll_taps", Json::Bool(s.unroll_taps)),
+            ]),
+            Schedule::Eltwise(s) => Json::obj(vec![
+                ("kind", Json::str("eltwise")),
+                ("vl", Json::num(s.vl as f64)),
+                ("unroll", Json::num(s.unroll as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<Schedule> {
+        match j.get("kind")?.as_str()? {
+            "matmul" => Some(Schedule::Matmul(MatmulSchedule {
+                intrin: IntrinChoice {
+                    vl: j.get("vl")?.as_u64()? as u32,
+                    j: j.get("j")?.as_u64()? as u32,
+                    lmul: j.get("lmul")?.as_u64()? as u32,
+                },
+                mi: j.get("mi")?.as_u64()? as u32,
+                order: LoopOrder::parse(j.get("order")?.as_str()?)?,
+                unroll: j.get("unroll")?.as_u64()? as u32,
+                transpose: j.get("transpose").and_then(|b| b.as_bool()).unwrap_or(false),
+            })),
+            "dwconv" => Some(Schedule::DwConv(DwConvSchedule {
+                vl: j.get("vl")?.as_u64()? as u32,
+                unroll_taps: j.get("unroll_taps")?.as_bool()?,
+            })),
+            "eltwise" => Some(Schedule::Eltwise(EltwiseSchedule {
+                vl: j.get("vl")?.as_u64()? as u32,
+                unroll: j.get("unroll")?.as_u64()? as u32,
+            })),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matmul() -> Schedule {
+        Schedule::Matmul(MatmulSchedule {
+            intrin: IntrinChoice { vl: 256, j: 32, lmul: 8 },
+            mi: 4,
+            order: LoopOrder::NMK,
+            unroll: 2,
+            transpose: true,
+        })
+    }
+
+    #[test]
+    fn json_roundtrip_matmul() {
+        let s = sample_matmul();
+        assert_eq!(Schedule::from_json(&s.to_json()), Some(s));
+    }
+
+    #[test]
+    fn json_roundtrip_dwconv_eltwise() {
+        let d = Schedule::DwConv(DwConvSchedule { vl: 128, unroll_taps: true });
+        assert_eq!(Schedule::from_json(&d.to_json()), Some(d));
+        let e = Schedule::Eltwise(EltwiseSchedule { vl: 64, unroll: 4 });
+        assert_eq!(Schedule::from_json(&e.to_json()), Some(e));
+    }
+
+    #[test]
+    fn loop_order_parse() {
+        for o in LoopOrder::ALL {
+            assert_eq!(LoopOrder::parse(o.name()), Some(o));
+        }
+        assert_eq!(LoopOrder::parse("zzz"), None);
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        assert!(sample_matmul().describe().contains("vl=256"));
+    }
+}

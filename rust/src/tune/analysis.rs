@@ -1,0 +1,214 @@
+//! Static program analysis: exact dynamic-instruction counts without
+//! execution.
+//!
+//! Walking the loop tree with extent multipliers gives the same per-group
+//! counts the simulator would produce, in O(program) instead of
+//! O(dynamic instructions). The cost model's *features* come from here;
+//! its *labels* come from real (simulated) measurements.
+
+use crate::isa::InstrGroup;
+use crate::sim::{Inst, Node, VProgram};
+
+/// Aggregate static profile of a program.
+#[derive(Clone, Debug, Default)]
+pub struct StaticProfile {
+    /// Dynamic instruction count per group (same indexing as TraceCounts).
+    pub groups: [f64; 8],
+    /// Approximate bytes moved by vector/scalar memory operations.
+    pub bytes_loaded: f64,
+    pub bytes_stored: f64,
+    /// Dynamic count of vector instructions weighted by their VL at the
+    /// time of issue (a proxy for useful lanes).
+    pub vl_weighted_ops: f64,
+    /// Dynamic vsetvl transitions.
+    pub config_switches: f64,
+}
+
+impl StaticProfile {
+    pub fn total(&self) -> f64 {
+        self.groups.iter().sum()
+    }
+
+    pub fn vector_total(&self) -> f64 {
+        InstrGroup::ALL
+            .iter()
+            .filter(|g| g.is_vector())
+            .map(|&g| self.groups[g as usize])
+            .sum()
+    }
+
+    pub fn get(&self, g: InstrGroup) -> f64 {
+        self.groups[g as usize]
+    }
+}
+
+struct Walker<'a> {
+    program: &'a VProgram,
+    profile: StaticProfile,
+    /// Current VL (from the most recent VSetVl on this path).
+    vl: f64,
+    elem_bytes_by_buf: Vec<f64>,
+}
+
+/// Compute the static profile of `program`.
+pub fn static_profile(program: &VProgram) -> StaticProfile {
+    let mut w = Walker {
+        program,
+        profile: StaticProfile::default(),
+        vl: 0.0,
+        elem_bytes_by_buf: program.buffers.iter().map(|b| b.dtype.bytes() as f64).collect(),
+    };
+    w.walk(&program.body, 1.0);
+    w.profile
+}
+
+impl Walker<'_> {
+    fn add(&mut self, g: InstrGroup, n: f64) {
+        self.profile.groups[g as usize] += n;
+    }
+
+    fn walk(&mut self, nodes: &[Node], mult: f64) {
+        for node in nodes {
+            match node {
+                Node::Loop(l) => {
+                    let book = 2.0 + (3.0 * l.extent as f64 / l.unroll as f64).ceil();
+                    self.add(InstrGroup::Scalar, book * mult);
+                    self.walk(&l.body, mult * l.extent as f64);
+                }
+                Node::Inst(inst) => self.visit(inst, mult),
+            }
+        }
+    }
+
+    fn visit(&mut self, inst: &Inst, mult: f64) {
+        let _ = self.program;
+        match inst {
+            Inst::VSetVl { vl, .. } => {
+                self.vl = *vl as f64;
+                self.add(InstrGroup::Config, mult);
+                self.profile.config_switches += mult;
+            }
+            Inst::VLoad { mem, .. } => {
+                self.add(InstrGroup::Load, mult);
+                self.profile.bytes_loaded += mult * self.vl * self.elem_bytes_by_buf[mem.buf];
+                self.profile.vl_weighted_ops += mult * self.vl;
+            }
+            Inst::VStore { mem, .. } => {
+                self.add(InstrGroup::Store, mult);
+                self.profile.bytes_stored += mult * self.vl * self.elem_bytes_by_buf[mem.buf];
+                self.profile.vl_weighted_ops += mult * self.vl;
+            }
+            Inst::VBin { op, .. } => {
+                self.add(op.group(), mult);
+                self.profile.vl_weighted_ops += mult * self.vl;
+            }
+            Inst::VBinScalar { op, .. } => {
+                self.add(op.group(), mult);
+                self.profile.vl_weighted_ops += mult * self.vl;
+            }
+            Inst::VMacc { .. } => {
+                self.add(InstrGroup::MultAdd, mult);
+                self.profile.vl_weighted_ops += mult * self.vl;
+            }
+            Inst::VRedSum { .. } => {
+                self.add(InstrGroup::Reduction, mult);
+                self.profile.vl_weighted_ops += mult * self.vl;
+            }
+            Inst::VSlideInsert { .. } => self.add(InstrGroup::Move, 2.0 * mult),
+            Inst::VSplat { .. } | Inst::VMv { .. } => self.add(InstrGroup::Move, mult),
+            Inst::VRequant { .. } => {
+                self.add(InstrGroup::MultAdd, 2.0 * mult);
+                self.add(InstrGroup::Other, 2.0 * mult);
+                self.profile.vl_weighted_ops += 4.0 * mult * self.vl;
+            }
+            Inst::SOps { count } => self.add(InstrGroup::Scalar, *count as f64 * mult),
+            Inst::SDotRun { len, a, b, .. } => {
+                self.add(InstrGroup::Scalar, 6.0 * *len as f64 * mult);
+                let bytes = *len as f64
+                    * (self.elem_bytes_by_buf[a.buf] + self.elem_bytes_by_buf[b.buf]);
+                self.profile.bytes_loaded += mult * bytes;
+            }
+            Inst::SAxpyRun { len, y, a, b, .. } => {
+                self.add(InstrGroup::Scalar, 7.0 * *len as f64 * mult);
+                self.profile.bytes_loaded += mult
+                    * *len as f64
+                    * (self.elem_bytes_by_buf[a.buf]
+                        + self.elem_bytes_by_buf[b.buf]
+                        + self.elem_bytes_by_buf[y.buf]);
+                self.profile.bytes_stored += mult * *len as f64 * self.elem_bytes_by_buf[y.buf];
+            }
+            Inst::SRequantRun { len, dst, src, .. } => {
+                self.add(InstrGroup::Scalar, 7.0 * *len as f64 * mult);
+                self.profile.bytes_loaded += mult * *len as f64 * self.elem_bytes_by_buf[src.buf];
+                self.profile.bytes_stored += mult * *len as f64 * self.elem_bytes_by_buf[dst.buf];
+            }
+            Inst::SCopyRun { len, dst, src, .. } => {
+                self.add(InstrGroup::Scalar, 4.0 * *len as f64 * mult);
+                self.profile.bytes_loaded += mult * *len as f64 * self.elem_bytes_by_buf[src.buf];
+                self.profile.bytes_stored += mult * *len as f64 * self.elem_bytes_by_buf[dst.buf];
+            }
+            Inst::SAddRun { len, dst, src, .. } => {
+                self.add(InstrGroup::Scalar, 5.0 * *len as f64 * mult);
+                self.profile.bytes_loaded += mult * *len as f64 * self.elem_bytes_by_buf[src.buf];
+                self.profile.bytes_stored += mult * *len as f64 * self.elem_bytes_by_buf[dst.buf];
+            }
+            Inst::PDotRun { len, lanes, a, b, .. } => {
+                let groups = (*len as f64 / *lanes as f64).ceil();
+                self.add(InstrGroup::Scalar, 4.0 * groups * mult);
+                self.profile.bytes_loaded += mult
+                    * *len as f64
+                    * (self.elem_bytes_by_buf[a.buf] + self.elem_bytes_by_buf[b.buf]);
+            }
+            Inst::PAxpyRun { len, lanes, y, a, b } => {
+                let groups = (*len as f64 / *lanes as f64).ceil();
+                self.add(InstrGroup::Scalar, 7.0 * groups * mult);
+                self.profile.bytes_loaded += mult
+                    * *len as f64
+                    * (self.elem_bytes_by_buf[a.buf]
+                        + self.elem_bytes_by_buf[b.buf]
+                        + self.elem_bytes_by_buf[y.buf]);
+                self.profile.bytes_stored += mult * *len as f64 * self.elem_bytes_by_buf[y.buf];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{self, Scenario};
+    use crate::sim::{execute, BufStore, Mode, SocConfig};
+    use crate::tir::{DType, Op};
+
+    /// The static profile must match the simulator's dynamic trace exactly
+    /// for the vector groups (scalar bookkeeping is loop-level identical).
+    #[test]
+    fn static_profile_matches_dynamic_trace() {
+        let op = Op::square_matmul(32, DType::I8);
+        for scenario in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn] {
+            let p = codegen::generate(&op, &scenario, 256).unwrap();
+            let sp = static_profile(&p);
+            let mut bufs = BufStore::timing(&p);
+            let r = execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Timing, true);
+            for g in InstrGroup::ALL {
+                assert_eq!(
+                    sp.get(g) as u64,
+                    r.trace.get(g),
+                    "group {:?} in {}",
+                    g,
+                    scenario.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_positive_for_vector_code() {
+        let op = Op::square_matmul(16, DType::F32);
+        let p = codegen::generate(&op, &Scenario::AutovecGcc, 256).unwrap();
+        let sp = static_profile(&p);
+        assert!(sp.bytes_loaded > 0.0);
+        assert!(sp.bytes_stored > 0.0);
+        assert!(sp.vector_total() > 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Cost models that guide the evolutionary search.
+//!
+//! * [`MlpCostModel`] — the paper-faithful configuration: the L2/L1 JAX +
+//!   Pallas MLP, AOT-compiled, scored/trained through PJRT with a replay
+//!   buffer of measured records (MetaSchedule's XGBoost role).
+//! * [`HeuristicCostModel`] — analytic fallback (no learning) used when
+//!   artifacts are absent and in the cost-model ablation.
+//!
+//! Scores are "higher is better"; labels are log-throughput, z-normalized
+//! over the replay buffer so the regression target is well-scaled.
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, MlpRuntime};
+use crate::util::Pcg;
+
+/// Interface the search uses.
+pub trait CostModel {
+    /// Higher = predicted faster.
+    fn score(&mut self, feats: &[Vec<f32>]) -> Vec<f64>;
+    /// Feed measured (features, log-throughput) pairs and refit.
+    fn update(&mut self, feats: &[Vec<f32>], log_throughput: &[f64]);
+    fn name(&self) -> &'static str;
+}
+
+/// Analytic model: weighted static-profile proxy. The weights mirror the
+/// simulator's cost structure (stores and config switches are expensive,
+/// long vectors amortize issue) without measuring anything.
+pub struct HeuristicCostModel;
+
+impl CostModel for HeuristicCostModel {
+    fn score(&mut self, feats: &[Vec<f32>]) -> Vec<f64> {
+        feats
+            .iter()
+            .map(|f| {
+                // features: 16 load, 17 store, 18 config, 19 multadd,
+                // 20 reduction, 21 move, 22 scalar, 23 total (per-MAC logs)
+                let cost = 1.0 * f[16] as f64
+                    + 1.8 * f[17] as f64
+                    + 0.8 * f[18] as f64
+                    + 1.0 * f[19] as f64
+                    + 1.3 * f[20] as f64
+                    + 0.6 * f[21] as f64
+                    + 1.1 * f[22] as f64
+                    + 2.0 * f[27] as f64; // L1 overflow pressure
+                -cost
+            })
+            .collect()
+    }
+
+    fn update(&mut self, _feats: &[Vec<f32>], _labels: &[f64]) {}
+
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+}
+
+/// Purely random scores — the ablation lower bound.
+pub struct RandomCostModel(pub Pcg);
+
+impl CostModel for RandomCostModel {
+    fn score(&mut self, feats: &[Vec<f32>]) -> Vec<f64> {
+        feats.iter().map(|_| self.0.f64()).collect()
+    }
+
+    fn update(&mut self, _feats: &[Vec<f32>], _labels: &[f64]) {}
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// The learned model, running on PJRT.
+pub struct MlpCostModel {
+    engine: Engine,
+    mlp: MlpRuntime,
+    /// Replay buffer of measured records.
+    buf_feats: Vec<Vec<f32>>,
+    buf_labels: Vec<f64>,
+    /// Label normalization state.
+    mean: f64,
+    std: f64,
+    epochs_per_update: usize,
+    rng: Pcg,
+}
+
+impl MlpCostModel {
+    pub fn new(engine: Engine, seed: i32) -> Result<MlpCostModel> {
+        let mlp = MlpRuntime::new(&engine, seed)?;
+        Ok(MlpCostModel {
+            engine,
+            mlp,
+            buf_feats: Vec::new(),
+            buf_labels: Vec::new(),
+            mean: 0.0,
+            std: 1.0,
+            epochs_per_update: 4,
+            rng: Pcg::new(seed as u64, 77),
+        })
+    }
+
+    /// Load the default artifacts and build the model (convenience).
+    pub fn from_artifacts(seed: i32) -> Result<MlpCostModel> {
+        let engine = Engine::load(&crate::runtime::artifacts_dir())?;
+        Self::new(engine, seed)
+    }
+
+    fn renormalize(&mut self) {
+        let n = self.buf_labels.len() as f64;
+        if n < 2.0 {
+            return;
+        }
+        self.mean = self.buf_labels.iter().sum::<f64>() / n;
+        let var = self.buf_labels.iter().map(|x| (x - self.mean).powi(2)).sum::<f64>() / n;
+        self.std = var.sqrt().max(1e-6);
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.buf_labels.len()
+    }
+}
+
+impl CostModel for MlpCostModel {
+    fn score(&mut self, feats: &[Vec<f32>]) -> Vec<f64> {
+        match self.mlp.score(&self.engine, feats) {
+            Ok(s) => s.into_iter().map(|x| x as f64).collect(),
+            Err(e) => {
+                // A scoring failure must not kill a tuning session.
+                eprintln!("costmodel scoring failed ({e}); falling back to zeros");
+                vec![0.0; feats.len()]
+            }
+        }
+    }
+
+    fn update(&mut self, feats: &[Vec<f32>], log_throughput: &[f64]) {
+        self.buf_feats.extend_from_slice(feats);
+        self.buf_labels.extend_from_slice(log_throughput);
+        self.renormalize();
+        let n = self.buf_feats.len();
+        if n == 0 {
+            return;
+        }
+        let labels_norm: Vec<f32> =
+            self.buf_labels.iter().map(|y| ((y - self.mean) / self.std) as f32).collect();
+        let batch = self.mlp.train_batch;
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..self.epochs_per_update {
+            self.rng.shuffle(&mut order);
+            for chunk in order.chunks(batch) {
+                let xs: Vec<Vec<f32>> = chunk.iter().map(|&i| self.buf_feats[i].clone()).collect();
+                let ys: Vec<f32> = chunk.iter().map(|&i| labels_norm[i]).collect();
+                if let Err(e) = self.mlp.train_step(&self.engine, &xs, &ys) {
+                    eprintln!("costmodel train step failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mlp-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heuristic_prefers_fewer_stores() {
+        let mut m = HeuristicCostModel;
+        let mut light = vec![0f32; 32];
+        let mut heavy = vec![0f32; 32];
+        light[17] = 1.0;
+        heavy[17] = 5.0;
+        let s = m.score(&[light, heavy]);
+        assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn random_model_is_deterministic_per_seed() {
+        let f = vec![vec![0f32; 32]; 4];
+        let mut a = RandomCostModel(Pcg::seeded(5));
+        let mut b = RandomCostModel(Pcg::seeded(5));
+        assert_eq!(a.score(&f), b.score(&f));
+    }
+}

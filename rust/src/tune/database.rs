@@ -1,0 +1,186 @@
+//! The tuning database: every measured candidate, with JSON persistence
+//! (MetaSchedule's tuning-records database).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tir::Schedule;
+use crate::util::Json;
+
+/// One measured candidate.
+#[derive(Clone, Debug)]
+pub struct TuneRecord {
+    pub op_key: String,
+    pub soc: String,
+    pub schedule: Schedule,
+    pub cycles: f64,
+    pub macs: u64,
+    pub trial: usize,
+}
+
+impl TuneRecord {
+    pub fn throughput(&self) -> f64 {
+        self.macs as f64 / self.cycles.max(1.0)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(&self.op_key)),
+            ("soc", Json::str(&self.soc)),
+            ("schedule", self.schedule.to_json()),
+            ("cycles", Json::Num(self.cycles)),
+            ("macs", Json::num(self.macs as f64)),
+            ("trial", Json::num(self.trial as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<TuneRecord> {
+        Some(TuneRecord {
+            op_key: j.get("op")?.as_str()?.to_string(),
+            soc: j.get("soc")?.as_str()?.to_string(),
+            schedule: Schedule::from_json(j.get("schedule")?)?,
+            cycles: j.get("cycles")?.as_f64()?,
+            macs: j.get("macs")?.as_u64()?,
+            trial: j.get("trial")?.as_usize()?,
+        })
+    }
+}
+
+/// In-memory database with (op, soc)-keyed best lookup.
+#[derive(Default)]
+pub struct Database {
+    records: Vec<TuneRecord>,
+    best: BTreeMap<(String, String), usize>,
+}
+
+impl Database {
+    pub fn new() -> Database {
+        Database::default()
+    }
+
+    pub fn add(&mut self, rec: TuneRecord) {
+        let key = (rec.op_key.clone(), rec.soc.clone());
+        let idx = self.records.len();
+        match self.best.get(&key) {
+            Some(&b) if self.records[b].cycles <= rec.cycles => {}
+            _ => {
+                self.best.insert(key, idx);
+            }
+        }
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[TuneRecord] {
+        &self.records
+    }
+
+    /// Best record for an (op, soc) pair.
+    pub fn best(&self, op_key: &str, soc: &str) -> Option<&TuneRecord> {
+        self.best
+            .get(&(op_key.to_string(), soc.to_string()))
+            .map(|&i| &self.records[i])
+    }
+
+    /// Has this exact schedule already been measured for (op, soc)?
+    pub fn contains(&self, op_key: &str, soc: &str, schedule: &Schedule) -> bool {
+        self.records
+            .iter()
+            .any(|r| r.op_key == op_key && r.soc == soc && &r.schedule == schedule)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let arr = Json::Arr(self.records.iter().map(|r| r.to_json()).collect());
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, arr.to_pretty()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Database> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("db parse: {e}"))?;
+        let mut db = Database::new();
+        for item in j.as_arr().ok_or_else(|| anyhow!("db not an array"))? {
+            let rec = TuneRecord::from_json(item).ok_or_else(|| anyhow!("bad record"))?;
+            db.add(rec);
+        }
+        Ok(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule};
+
+    fn rec(op: &str, cycles: f64, trial: usize) -> TuneRecord {
+        TuneRecord {
+            op_key: op.to_string(),
+            soc: "saturn-256".to_string(),
+            schedule: Schedule::Matmul(MatmulSchedule {
+                intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
+                mi: trial as u32 % 4 + 1,
+                order: LoopOrder::NMK,
+                unroll: 1,
+                transpose: false,
+            }),
+            cycles,
+            macs: 1000,
+            trial,
+        }
+    }
+
+    #[test]
+    fn best_tracks_minimum_cycles() {
+        let mut db = Database::new();
+        db.add(rec("a", 500.0, 0));
+        db.add(rec("a", 300.0, 1));
+        db.add(rec("a", 400.0, 2));
+        db.add(rec("b", 100.0, 0));
+        assert_eq!(db.best("a", "saturn-256").unwrap().cycles, 300.0);
+        assert_eq!(db.best("b", "saturn-256").unwrap().cycles, 100.0);
+        assert!(db.best("a", "bpi-f3").is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut db = Database::new();
+        db.add(rec("x", 123.5, 0));
+        db.add(TuneRecord {
+            op_key: "e".into(),
+            soc: "bpi-f3".into(),
+            schedule: Schedule::Eltwise(EltwiseSchedule { vl: 32, unroll: 2 }),
+            cycles: 9.0,
+            macs: 64,
+            trial: 3,
+        });
+        let dir = std::env::temp_dir().join("rvv-tune-test-db");
+        let path = dir.join("db.json");
+        db.save(&path).unwrap();
+        let back = Database::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.best("x", "saturn-256").unwrap().cycles, 123.5);
+        assert_eq!(back.best("e", "bpi-f3").unwrap().macs, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn contains_detects_duplicates() {
+        let mut db = Database::new();
+        let r = rec("a", 10.0, 1);
+        let s = r.schedule.clone();
+        db.add(r);
+        assert!(db.contains("a", "saturn-256", &s));
+        assert!(!db.contains("a", "bpi-f3", &s));
+    }
+}

@@ -1,0 +1,181 @@
+//! Feature extraction: (operator, schedule, SoC) -> 32-dim vector for the
+//! learned cost model. Must stay in lockstep with FEATURE_DIM in
+//! python/compile/model.py.
+
+use crate::isa::InstrGroup;
+use crate::sim::{SocConfig, VProgram};
+use crate::tir::{LoopOrder, Op, Schedule};
+
+use super::analysis::{static_profile, StaticProfile};
+
+/// Must equal model.FEATURE_DIM (checked against the manifest at runtime).
+pub const FEATURE_DIM: usize = 32;
+
+fn log2p(x: f64) -> f32 {
+    (x.max(0.0) + 1.0).log2() as f32
+}
+
+/// Extract the feature vector for one candidate.
+pub fn extract(op: &Op, schedule: &Schedule, program: &VProgram, soc: &SocConfig) -> Vec<f32> {
+    let sp: StaticProfile = static_profile(program);
+    let macs = op.macs() as f64;
+    let mut f = vec![0f32; FEATURE_DIM];
+
+    // --- operator shape (0..7)
+    match op {
+        Op::Matmul { m, n, k, .. } => {
+            f[0] = 1.0;
+            f[3] = log2p(*m as f64);
+            f[4] = log2p(*n as f64);
+            f[5] = log2p(*k as f64);
+        }
+        Op::DwConv { spatial, channels, taps, .. } => {
+            f[1] = 1.0;
+            f[3] = log2p(*spatial as f64);
+            f[4] = log2p(*channels as f64);
+            f[5] = log2p(*taps as f64);
+        }
+        Op::Eltwise { len, .. } => {
+            f[2] = 1.0;
+            f[3] = log2p(*len as f64);
+        }
+    }
+    f[6] = log2p(macs);
+    f[7] = if op.dtype().is_float() { 1.0 } else { 0.0 };
+
+    // --- schedule decisions (8..15)
+    match schedule {
+        Schedule::Matmul(s) => {
+            f[8] = log2p(s.intrin.vl as f64);
+            f[9] = log2p(s.intrin.j as f64);
+            f[10] = s.intrin.lmul as f32;
+            f[11] = log2p(s.mi as f64);
+            f[12] = match s.order {
+                LoopOrder::MNK => 0.0,
+                LoopOrder::NMK => 1.0,
+                LoopOrder::NKM => 2.0,
+                LoopOrder::KMN => 3.0,
+            } + if s.transpose { 4.0 } else { 0.0 };
+            f[13] = log2p(s.unroll as f64);
+        }
+        Schedule::DwConv(s) => {
+            f[8] = log2p(s.vl as f64);
+            f[13] = if s.unroll_taps { 1.0 } else { 0.0 };
+        }
+        Schedule::Eltwise(s) => {
+            f[8] = log2p(s.vl as f64);
+            f[13] = log2p(s.unroll as f64);
+        }
+    }
+    // VL utilization vs the SoC's VLMAX at LMUL=8.
+    let vlmax = (soc.vlen * 8 / op.dtype().sew().bits()) as f64;
+    let vl = match schedule {
+        Schedule::Matmul(s) => s.intrin.vl as f64,
+        Schedule::DwConv(s) => s.vl as f64,
+        Schedule::Eltwise(s) => s.vl as f64,
+    };
+    f[14] = (vl / vlmax) as f32;
+    f[15] = log2p(soc.vlen as f64);
+
+    // --- static instruction mix, normalized per MAC (16..24)
+    let per_mac = |x: f64| log2p(x / macs.max(1.0) * 1024.0);
+    f[16] = per_mac(sp.get(InstrGroup::Load));
+    f[17] = per_mac(sp.get(InstrGroup::Store));
+    f[18] = per_mac(sp.get(InstrGroup::Config));
+    f[19] = per_mac(sp.get(InstrGroup::MultAdd));
+    f[20] = per_mac(sp.get(InstrGroup::Reduction));
+    f[21] = per_mac(sp.get(InstrGroup::Move));
+    f[22] = per_mac(sp.get(InstrGroup::Scalar));
+    f[23] = per_mac(sp.total());
+    f[24] = per_mac(sp.vl_weighted_ops / 8.0);
+
+    // --- memory behaviour (25..30)
+    f[25] = per_mac(sp.bytes_loaded);
+    f[26] = per_mac(sp.bytes_stored);
+    let l1_bytes = (soc.cache.l1_kb * 1024) as f64;
+    let l2_bytes = (soc.cache.l2_kb * 1024) as f64;
+    // Inner working set: one A chunk + J rows of B + the output tile.
+    let ws = match (op, schedule) {
+        (Op::Matmul { .. }, Schedule::Matmul(s)) => {
+            let eb = op.dtype().bytes() as f64;
+            s.intrin.vl as f64 * eb * (1.0 + s.intrin.j as f64) + s.intrin.j as f64 * 4.0
+        }
+        (Op::DwConv { channels, .. }, Schedule::DwConv(s)) => {
+            (s.vl.min(*channels as u32) as f64) * op.dtype().bytes() as f64 * 3.0
+        }
+        (Op::Eltwise { .. }, Schedule::Eltwise(s)) => {
+            s.vl as f64 * op.dtype().bytes() as f64 * 3.0
+        }
+        _ => 0.0,
+    };
+    f[27] = (ws / l1_bytes).min(8.0) as f32;
+    // Total tensor footprint pressure on L2.
+    let footprint: f64 = program
+        .buffers
+        .iter()
+        .map(|b| (b.len * b.dtype.bytes()) as f64)
+        .sum();
+    f[28] = (footprint / l2_bytes).min(16.0) as f32;
+    f[29] = log2p(footprint);
+    f[30] = (sp.config_switches / sp.vector_total().max(1.0)) as f32;
+    f[31] = log2p(program.code_size_bytes() as f64);
+    // Scale to roughly unit magnitude — keeps the MLP's SGD stable
+    // (log2-based features reach ~30 for billion-MAC layers).
+    for x in &mut f {
+        *x *= 0.125;
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{self, Scenario};
+    use crate::tir::{DType, IntrinChoice, MatmulSchedule};
+
+    fn sched(vl: u32, j: u32) -> Schedule {
+        Schedule::Matmul(MatmulSchedule {
+            intrin: IntrinChoice { vl, j, lmul: 8 },
+            mi: 1,
+            order: LoopOrder::NMK,
+            unroll: 1,
+            transpose: false,
+        })
+    }
+
+    #[test]
+    fn feature_vector_has_fixed_dim_and_is_finite() {
+        let op = Op::square_matmul(64, DType::I8);
+        let s = sched(64, 32);
+        let p = codegen::generate(&op, &Scenario::Ours(s.clone()), 1024).unwrap();
+        let f = extract(&op, &s, &p, &SocConfig::saturn(1024));
+        assert_eq!(f.len(), FEATURE_DIM);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn different_schedules_have_different_features() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let s1 = sched(64, 32);
+        let s2 = sched(16, 1);
+        let p1 = codegen::generate(&op, &Scenario::Ours(s1.clone()), 1024).unwrap();
+        let p2 = codegen::generate(&op, &Scenario::Ours(s2.clone()), 1024).unwrap();
+        assert_ne!(extract(&op, &s1, &p1, &soc), extract(&op, &s2, &p2, &soc));
+    }
+
+    #[test]
+    fn store_feature_tracks_store_share() {
+        // A store-heavy J=1 schedule must have a larger store feature than
+        // the J=32 tile schedule.
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let tile = sched(64, 32);
+        let j1 = sched(64, 1);
+        let pt = codegen::generate(&op, &Scenario::Ours(tile.clone()), 1024).unwrap();
+        let p1 = codegen::generate(&op, &Scenario::Ours(j1.clone()), 1024).unwrap();
+        let ft = extract(&op, &tile, &pt, &soc);
+        let f1 = extract(&op, &j1, &p1, &soc);
+        assert!(f1[17] > ft[17], "store feature {} vs {}", f1[17], ft[17]);
+    }
+}

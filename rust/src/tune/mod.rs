@@ -1,0 +1,24 @@
+//! The MetaSchedule-style probabilistic tuner — the paper's contribution.
+//!
+//! Pipeline per operator (§II/§III): [`space`] samples schedule decisions
+//! (intrinsic VL/J variants from the [`crate::intrinsics`] registry, tile
+//! sizes, loop order, unroll) -> [`features`]/[`analysis`] produce static
+//! descriptors -> [`costmodel`] ranks candidates (JAX/Pallas MLP via PJRT)
+//! -> [`search`] measures the top-k on the simulated SoC and refits ->
+//! [`database`] records everything. [`task`] splits a network into tuning
+//! tasks with the paper's budget policy.
+
+pub mod analysis;
+pub mod costmodel;
+pub mod database;
+pub mod features;
+pub mod search;
+pub mod space;
+pub mod task;
+
+pub use costmodel::{CostModel, HeuristicCostModel, MlpCostModel, RandomCostModel};
+pub use database::{Database, TuneRecord};
+pub use features::FEATURE_DIM;
+pub use search::{tune_op, Measurer, SearchConfig, SerialMeasurer, TuneOutcome};
+pub use space::SearchSpace;
+pub use task::{allocate_trials, extract_tasks, TuneTask};

@@ -1,0 +1,272 @@
+//! The probabilistic schedule space: sampling and mutation.
+//!
+//! This is the "probabilistic program" of the paper's title — each
+//! schedule decision (intrinsic variant from the VL ladder, J variant,
+//! row-block size, loop order, unroll) is a random variable; the sampler
+//! draws candidates and the evolutionary search mutates one decision at a
+//! time, exactly like MetaSchedule's sample-perfect-tile + mutator stack.
+
+use crate::intrinsics::Registry;
+use crate::tir::{
+    DwConvSchedule, EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule, Op, Schedule,
+};
+use crate::util::Pcg;
+
+/// The search space for one operator on one SoC.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub op: Op,
+    pub vlen: u32,
+    /// Matching intrinsic variants (Algorithm 1) for the direct mapping.
+    matmul_intrinsics: Vec<IntrinChoice>,
+    /// Matching variants for the transposed mapping (J tiles along m).
+    matmul_intrinsics_t: Vec<IntrinChoice>,
+    vmacc_vls: Vec<u32>,
+    mi_divisors: Vec<u32>,
+    mi_divisors_t: Vec<u32>,
+}
+
+const UNROLLS: [u32; 4] = [1, 2, 4, 8];
+
+fn divisors_up_to(n: usize, cap: u32) -> Vec<u32> {
+    (1..=cap.min(n as u32)).filter(|d| n % *d as usize == 0).collect()
+}
+
+impl SearchSpace {
+    pub fn new(op: &Op, registry: &Registry) -> SearchSpace {
+        let (matmul_intrinsics, matmul_intrinsics_t) = match op {
+            Op::Matmul { m, n, k, dtype, .. } => (
+                registry
+                    .matmul_candidates_for(*n, *k, *dtype)
+                    .iter()
+                    .map(|i| i.choice())
+                    .collect(),
+                registry
+                    .matmul_candidates_for(*m, *k, *dtype)
+                    .iter()
+                    .map(|i| i.choice())
+                    .collect(),
+            ),
+            _ => (vec![], vec![]),
+        };
+        let vmacc_vls = match op {
+            Op::DwConv { channels, dtype, .. } => registry
+                .vmacc_candidates(*channels, *dtype)
+                .iter()
+                .map(|i| i.vl)
+                .collect(),
+            Op::Eltwise { len, dtype } => {
+                registry.vmacc_candidates(*len, *dtype).iter().map(|i| i.vl).collect()
+            }
+            _ => vec![],
+        };
+        let (mi_divisors, mi_divisors_t) = match op {
+            Op::Matmul { m, n, .. } => (divisors_up_to(*m, 16), divisors_up_to(*n, 16)),
+            _ => (vec![1], vec![1]),
+        };
+        SearchSpace {
+            op: op.clone(),
+            vlen: registry.vlen,
+            matmul_intrinsics,
+            matmul_intrinsics_t,
+            vmacc_vls,
+            mi_divisors,
+            mi_divisors_t,
+        }
+    }
+
+    /// True when at least one intrinsic variant matches the operator.
+    pub fn is_tunable(&self) -> bool {
+        match self.op {
+            Op::Matmul { .. } => {
+                !self.matmul_intrinsics.is_empty() || !self.matmul_intrinsics_t.is_empty()
+            }
+            _ => !self.vmacc_vls.is_empty(),
+        }
+    }
+
+    fn sample_matmul(&self, rng: &mut Pcg, transpose: bool) -> Schedule {
+        let (intrinsics, divisors) = if transpose {
+            (&self.matmul_intrinsics_t, &self.mi_divisors_t)
+        } else {
+            (&self.matmul_intrinsics, &self.mi_divisors)
+        };
+        Schedule::Matmul(MatmulSchedule {
+            intrin: *rng.choose(intrinsics),
+            mi: *rng.choose(divisors),
+            order: *rng.choose(&LoopOrder::ALL),
+            unroll: *rng.choose(&UNROLLS),
+            transpose,
+        })
+    }
+
+    fn pick_transpose(&self, rng: &mut Pcg) -> bool {
+        match (self.matmul_intrinsics.is_empty(), self.matmul_intrinsics_t.is_empty()) {
+            (false, false) => rng.chance(0.5),
+            (false, true) => false,
+            (true, false) => true,
+            (true, true) => unreachable!("untunable space sampled"),
+        }
+    }
+
+    /// Draw one random schedule.
+    pub fn sample(&self, rng: &mut Pcg) -> Schedule {
+        match &self.op {
+            Op::Matmul { .. } => {
+                let transpose = self.pick_transpose(rng);
+                self.sample_matmul(rng, transpose)
+            }
+            Op::DwConv { .. } => Schedule::DwConv(DwConvSchedule {
+                vl: *rng.choose(&self.vmacc_vls),
+                unroll_taps: rng.chance(0.5),
+            }),
+            Op::Eltwise { .. } => Schedule::Eltwise(EltwiseSchedule {
+                vl: *rng.choose(&self.vmacc_vls),
+                unroll: *rng.choose(&UNROLLS),
+            }),
+        }
+    }
+
+    /// Mutate exactly one decision of `s`.
+    pub fn mutate(&self, s: &Schedule, rng: &mut Pcg) -> Schedule {
+        match s {
+            Schedule::Matmul(m) => {
+                let (intrinsics, divisors) = if m.transpose {
+                    (&self.matmul_intrinsics_t, &self.mi_divisors_t)
+                } else {
+                    (&self.matmul_intrinsics, &self.mi_divisors)
+                };
+                let mut m = m.clone();
+                match rng.below(5) {
+                    0 => m.intrin = *rng.choose(intrinsics),
+                    1 => m.mi = *rng.choose(divisors),
+                    2 => m.order = *rng.choose(&LoopOrder::ALL),
+                    3 => m.unroll = *rng.choose(&UNROLLS),
+                    _ => {
+                        // Flip the mapping: resample transpose-dependent
+                        // decisions so the mutant stays valid.
+                        let t = self.pick_transpose(rng);
+                        if t != m.transpose {
+                            return self.sample_matmul(rng, t);
+                        }
+                    }
+                }
+                Schedule::Matmul(m)
+            }
+            Schedule::DwConv(d) => {
+                let mut d = d.clone();
+                if rng.chance(0.5) {
+                    d.vl = *rng.choose(&self.vmacc_vls);
+                } else {
+                    d.unroll_taps = !d.unroll_taps;
+                }
+                Schedule::DwConv(d)
+            }
+            Schedule::Eltwise(e) => {
+                let mut e = e.clone();
+                if rng.chance(0.5) {
+                    e.vl = *rng.choose(&self.vmacc_vls);
+                } else {
+                    e.unroll = *rng.choose(&UNROLLS);
+                }
+                Schedule::Eltwise(e)
+            }
+        }
+    }
+
+    /// Size bound of the discrete space (for reporting).
+    pub fn cardinality(&self) -> usize {
+        match self.op {
+            Op::Matmul { .. } => {
+                (self.matmul_intrinsics.len() * self.mi_divisors.len()
+                    + self.matmul_intrinsics_t.len() * self.mi_divisors_t.len())
+                    * LoopOrder::ALL.len()
+                    * UNROLLS.len()
+            }
+            Op::DwConv { .. } => self.vmacc_vls.len() * 2,
+            Op::Eltwise { .. } => self.vmacc_vls.len() * UNROLLS.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::DType;
+
+    #[test]
+    fn samples_are_valid_and_varied() {
+        let op = Op::square_matmul(128, DType::I8);
+        let reg = Registry::build(1024);
+        let space = SearchSpace::new(&op, &reg);
+        assert!(space.is_tunable());
+        let mut rng = Pcg::seeded(1);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            let s = space.sample(&mut rng);
+            if let Schedule::Matmul(m) = &s {
+                assert!(m.intrin.vl <= 128);
+                assert!(128 % m.mi as usize == 0);
+                seen.insert(s.describe());
+                let _ = m.transpose;
+            } else {
+                panic!("wrong kind");
+            }
+        }
+        assert!(seen.len() > 10, "only {} distinct samples", seen.len());
+    }
+
+    #[test]
+    fn mutation_changes_at_most_one_decision() {
+        let op = Op::square_matmul(64, DType::F32);
+        let reg = Registry::build(256);
+        let space = SearchSpace::new(&op, &reg);
+        let mut rng = Pcg::seeded(3);
+        let base = space.sample(&mut rng);
+        for _ in 0..32 {
+            let mutant = space.mutate(&base, &mut rng);
+            if let (Schedule::Matmul(a), Schedule::Matmul(b)) = (&base, &mutant) {
+                if a.transpose != b.transpose {
+                    continue; // mapping flip resamples dependent decisions
+                }
+                let diffs = [
+                    a.intrin != b.intrin,
+                    a.mi != b.mi,
+                    a.order != b.order,
+                    a.unroll != b.unroll,
+                ]
+                .iter()
+                .filter(|&&d| d)
+                .count();
+                assert!(diffs <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_and_eltwise_spaces() {
+        let reg = Registry::build(256);
+        let dw = Op::DwConv { spatial: 10, channels: 64, taps: 9, dtype: DType::I8, requant: None };
+        let space = SearchSpace::new(&dw, &reg);
+        assert!(space.is_tunable());
+        assert!(space.cardinality() >= 4);
+        let ew = Op::Eltwise { len: 256, dtype: DType::F32 };
+        let sp2 = SearchSpace::new(&ew, &reg);
+        assert!(sp2.is_tunable());
+        let mut rng = Pcg::seeded(9);
+        for _ in 0..8 {
+            match sp2.sample(&mut rng) {
+                Schedule::Eltwise(e) => assert!(e.vl <= 256),
+                _ => panic!("wrong kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn untunable_when_no_intrinsic_matches() {
+        // 3-channel dwconv: below MIN_VL, no Algorithm-2 variant matches.
+        let reg = Registry::build(256);
+        let dw = Op::DwConv { spatial: 4, channels: 3, taps: 9, dtype: DType::I8, requant: None };
+        assert!(!SearchSpace::new(&dw, &reg).is_tunable());
+    }
+}

@@ -1,0 +1,121 @@
+//! Network-level tuning tasks: layer deduplication and trial allocation.
+//!
+//! TVM extracts one tuning task per distinct tensor-operation shape; the
+//! paper gives each network 200 trials (400 for MobileLLM, "at least 10
+//! schedule candidates per layer"). We allocate the budget proportionally
+//! to each task's share of total work, with a floor.
+
+use std::collections::BTreeMap;
+
+use crate::tir::Op;
+
+/// One tuning task: a distinct operator shape and how often it appears.
+#[derive(Clone, Debug)]
+pub struct TuneTask {
+    pub op: Op,
+    /// Occurrences of this exact shape in the network.
+    pub count: usize,
+}
+
+impl TuneTask {
+    /// Total work this task represents in the network.
+    pub fn weight(&self) -> f64 {
+        (self.op.macs() * self.count as u64) as f64
+    }
+}
+
+/// Deduplicate a layer list into tasks (same op key -> one task).
+pub fn extract_tasks(layers: &[Op]) -> Vec<TuneTask> {
+    let mut by_key: BTreeMap<String, TuneTask> = BTreeMap::new();
+    for op in layers {
+        by_key
+            .entry(op.key())
+            .and_modify(|t| t.count += 1)
+            .or_insert_with(|| TuneTask { op: op.clone(), count: 1 });
+    }
+    by_key.into_values().collect()
+}
+
+/// Allocate `total` trials across tasks proportionally to weight, with at
+/// least `min_per_task` each (the paper's "at least 10 candidates per
+/// layer"). If the floor alone exceeds the budget, every task gets the
+/// floor (the budget grows, as the paper did for MobileLLM: 200 -> 400).
+pub fn allocate_trials(tasks: &[TuneTask], total: usize, min_per_task: usize) -> Vec<usize> {
+    if tasks.is_empty() {
+        return vec![];
+    }
+    let floor_total = min_per_task * tasks.len();
+    let spare = total.saturating_sub(floor_total);
+    let weight_sum: f64 = tasks.iter().map(|t| t.weight()).sum();
+    let mut alloc: Vec<usize> = tasks
+        .iter()
+        .map(|t| {
+            let share = if weight_sum > 0.0 { t.weight() / weight_sum } else { 1.0 / tasks.len() as f64 };
+            min_per_task + (share * spare as f64).floor() as usize
+        })
+        .collect();
+    // Distribute rounding leftovers to the heaviest tasks.
+    let assigned: usize = alloc.iter().sum();
+    if assigned < total && spare > 0 {
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        order.sort_by(|&a, &b| tasks[b].weight().partial_cmp(&tasks[a].weight()).unwrap());
+        let mut left = total - assigned;
+        for &i in order.iter().cycle().take(left.min(1000) * 1) {
+            if left == 0 {
+                break;
+            }
+            alloc[i] += 1;
+            left -= 1;
+        }
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::DType;
+
+    #[test]
+    fn dedup_counts_repeats() {
+        let layers = vec![
+            Op::square_matmul(64, DType::I8),
+            Op::square_matmul(64, DType::I8),
+            Op::square_matmul(128, DType::I8),
+        ];
+        let tasks = extract_tasks(&layers);
+        assert_eq!(tasks.len(), 2);
+        let t64 = tasks.iter().find(|t| t.op.key().contains("64x")).unwrap();
+        assert_eq!(t64.count, 2);
+    }
+
+    #[test]
+    fn allocation_respects_floor_and_total() {
+        let tasks = vec![
+            TuneTask { op: Op::square_matmul(256, DType::I8), count: 1 },
+            TuneTask { op: Op::square_matmul(16, DType::I8), count: 1 },
+        ];
+        let alloc = allocate_trials(&tasks, 200, 10);
+        assert_eq!(alloc.len(), 2);
+        assert!(alloc.iter().all(|&a| a >= 10));
+        assert_eq!(alloc.iter().sum::<usize>(), 200);
+        // The big matmul dominates the budget.
+        assert!(alloc[0] > alloc[1] * 5 || alloc[1] > alloc[0] * 5);
+    }
+
+    #[test]
+    fn floor_dominates_when_budget_is_small() {
+        let tasks: Vec<TuneTask> = (1..=30)
+            .map(|i| TuneTask { op: Op::square_matmul(i * 8, DType::I8), count: 1 })
+            .collect();
+        let alloc = allocate_trials(&tasks, 200, 10);
+        assert!(alloc.iter().all(|&a| a >= 10));
+        assert!(alloc.iter().sum::<usize>() >= 300, "floor grows the budget like the paper's LLM case");
+    }
+
+    #[test]
+    fn empty_tasks() {
+        assert!(allocate_trials(&[], 100, 10).is_empty());
+        assert!(extract_tasks(&[]).is_empty());
+    }
+}

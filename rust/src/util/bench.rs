@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (offline replacement for criterion).
+//!
+//! `cargo bench` targets in `rust/benches/` are plain binaries
+//! (`harness = false`) that call into this module. Each measurement does a
+//! warmup phase, then samples wall-clock time over batched iterations and
+//! reports mean / median / p95 in adaptive units.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Re-export of `std::hint::black_box` so benches don't need the import.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Minimum warmup wall time.
+    pub warmup: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Target wall time per sample (iterations are batched to reach it).
+    pub sample_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            sample_time: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Quick profile for heavy end-to-end benches.
+pub fn quick() -> BenchOpts {
+    BenchOpts { warmup: Duration::from_millis(50), samples: 5, sample_time: Duration::from_millis(20) }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.3} s ", ns / 1e9)
+    }
+}
+
+/// Time `f` and print a criterion-style line. Returns the stats.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    // Warmup + calibration: how many iterations fit in one sample window?
+    let warm_start = Instant::now();
+    let mut iters: u64 = 0;
+    while warm_start.elapsed() < opts.warmup {
+        f();
+        iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+    let batch = ((opts.sample_time.as_nanos() as f64 / per_iter.max(1.0)).ceil() as u64).max(1);
+
+    let mut samples_ns = Vec::with_capacity(opts.samples);
+    for _ in 0..opts.samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples_ns.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+
+    let result = BenchResult {
+        name: name.to_string(),
+        mean_ns: stats::mean(&samples_ns),
+        median_ns: stats::median(&samples_ns),
+        p95_ns: stats::percentile(&samples_ns, 95.0),
+        iters_per_sample: batch,
+    };
+    println!(
+        "bench {:<44} mean {}  median {}  p95 {}  ({} it/sample)",
+        result.name,
+        fmt_ns(result.mean_ns),
+        fmt_ns(result.median_ns),
+        fmt_ns(result.p95_ns),
+        result.iters_per_sample
+    );
+    result
+}
+
+/// Print a section header so bench output groups visibly per figure.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            sample_time: Duration::from_millis(2),
+        };
+        let r = bench("noop-ish", opts, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns > 0.0);
+        assert!(r.p95_ns >= r.median_ns * 0.5);
+    }
+}

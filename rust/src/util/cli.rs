@@ -1,0 +1,113 @@
+//! Tiny command-line argument parser (offline replacement for clap).
+//!
+//! Grammar: `rvv-tune <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (program name excluded).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        args.flags.push(name.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        args.options.insert(name.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str], flags: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse(
+            &["tune", "--workload", "matmul:128:int8", "--trials", "100", "--quick", "extra"],
+            &["quick"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("tune"));
+        assert_eq!(a.get("workload"), Some("matmul:128:int8"));
+        assert_eq!(a.get_usize("trials", 0), 100);
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse(&["figure", "--id=fig3"], &[]);
+        assert_eq!(a.get("id"), Some("fig3"));
+        assert_eq!(a.get_or("soc", "saturn-1024"), "saturn-1024");
+        assert_eq!(a.get_usize("trials", 64), 64);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["run", "--verbose"], &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["run", "--trace", "--out", "x.json"], &[]);
+        assert!(a.flag("trace"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+}

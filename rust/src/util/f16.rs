@@ -1,0 +1,135 @@
+//! IEEE 754 binary16 conversion (offline replacement for the `half` crate).
+//!
+//! The simulator stores f16 tensor data as raw 16-bit words and rounds every
+//! arithmetic result through binary16 so that its numerics match the JAX f16
+//! reference graphs bit-for-bit (up to the usual non-associativity caveats).
+
+/// Convert an f32 to binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return sign | 0x7c00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+
+    // Re-bias: f32 exp-127, f16 exp-15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. Keep 10 fraction bits, round-to-nearest-even on bit 13.
+        let exp16 = (unbiased + 15) as u32;
+        let mut out = (exp16 << 10) | (frac >> 13);
+        let round_bits = frac & 0x1fff;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (out & 1) != 0) {
+            out += 1; // may carry into exponent; that is correct rounding
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16.
+        let frac32 = frac | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mut out = frac32 >> shift;
+        let rem = frac32 & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (out & 1) != 0) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // underflow to zero
+}
+
+/// Convert binary16 bits to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = match (exp, frac) {
+        (0, 0) => sign,
+        (0, f) => {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut f = f;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            // value = (f/2^10) * 2^(e-13), so the f32 exponent is e + 114.
+            let exp32 = (e + 114) as u32;
+            sign | (exp32 << 23) | ((f & 0x3ff) << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, f) => sign | 0x7f80_0000 | (f << 13),
+        (e, f) => sign | ((e + 127 - 15) << 23) | (f << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through binary16 precision.
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for &(v, bits) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff), // f16 max
+        ] {
+            assert_eq!(f32_to_f16_bits(v), bits, "encode {v}");
+            assert_eq!(f16_bits_to_f32(bits), v, "decode {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf_and_nan() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let min_sub = f16_bits_to_f32(0x0001);
+        assert!(min_sub > 0.0 && min_sub < 1e-7);
+        assert_eq!(f32_to_f16_bits(min_sub), 0x0001);
+        // Below half of the smallest subnormal rounds to zero.
+        assert_eq!(f32_to_f16_bits(min_sub / 4.0), 0x0000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16; ties-to-even -> 1.0
+        let x = 1.0f32 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3c00);
+        // 1 + 3*2^-11 is between; rounds up to even 0x3c02
+        let y = 1.0f32 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(y), 0x3c02);
+    }
+
+    #[test]
+    fn roundtrip_all_finite_f16() {
+        for h in 0u16..=0xffff {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "bits {h:#x} value {f}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Small in-tree replacements for crates that are unavailable in the
+//! offline build image (rand, serde/serde_json, clap, criterion, half).
+//!
+//! Everything in here is deliberately minimal but fully tested: the tuner
+//! only needs a seedable PRNG, a JSON reader/writer for its database and
+//! reports, a flag parser for the CLI, a micro-benchmark harness, IEEE
+//! half-precision conversion for the f16 workloads, and summary statistics.
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prng;
+pub mod stats;
+
+pub use f16::{f16_bits_to_f32, f32_to_f16_bits, f16_round};
+pub use json::Json;
+pub use prng::Pcg;

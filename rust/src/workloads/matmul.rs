@@ -1,0 +1,57 @@
+//! The matmul benchmark suite of §IV-A: square QNN/float matmuls across
+//! sizes and dtypes.
+
+use crate::tir::{DType, Op, Requant};
+
+/// Square sizes evaluated in Figures 3-6.
+pub const SIZES: [usize; 6] = [16, 32, 64, 128, 256, 512];
+
+/// Dtypes evaluated (int8 with QNN requant, float16, float32).
+pub const DTYPES: [DType; 3] = [DType::I8, DType::F16, DType::F32];
+
+/// The QNN requant parameters used across the suite (scale ~= 2^-8; any
+/// fixed choice works — schedules are dtype/shape-driven, not value-driven).
+pub fn suite_requant() -> Requant {
+    Requant { mult: 1 << 14, shift: 22, zp: 0 }
+}
+
+/// One suite entry.
+pub fn matmul(size: usize, dtype: DType) -> Op {
+    let requant = (dtype == DType::I8).then(suite_requant);
+    Op::Matmul { m: size, n: size, k: size, dtype, requant }
+}
+
+/// The full (size x dtype) grid.
+pub fn full_suite() -> Vec<Op> {
+    let mut ops = Vec::new();
+    for dtype in DTYPES {
+        for size in SIZES {
+            ops.push(matmul(size, dtype));
+        }
+    }
+    ops
+}
+
+/// A reduced grid for quick runs / benches.
+pub fn quick_suite() -> Vec<Op> {
+    vec![matmul(16, DType::I8), matmul(64, DType::I8), matmul(64, DType::F32)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_covers_grid() {
+        let suite = full_suite();
+        assert_eq!(suite.len(), SIZES.len() * DTYPES.len());
+        assert!(suite
+            .iter()
+            .filter(|op| op.dtype() == DType::I8)
+            .all(|op| matches!(op, Op::Matmul { requant: Some(_), .. })));
+        assert!(suite
+            .iter()
+            .filter(|op| op.dtype().is_float())
+            .all(|op| matches!(op, Op::Matmul { requant: None, .. })));
+    }
+}

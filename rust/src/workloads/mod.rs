@@ -1,0 +1,7 @@
+//! Workloads: the §IV-A matmul suite and the §IV-B network zoo.
+
+pub mod matmul;
+pub mod models;
+
+pub use matmul::{full_suite, quick_suite};
+pub use models::{by_name, Model, BPI_MODELS, SATURN_MODELS};

@@ -1,0 +1,406 @@
+//! The network zoo of §IV-B: per-layer operator tables for the nine
+//! evaluated workloads, lowered the way muRISCV-NN / CMSIS-NN lower them —
+//! convolutions via im2col to GEMM, depthwise convolutions to the
+//! Algorithm-2 channel loop, residual adds to elementwise ops.
+//!
+//! MLPerf-Tiny reference models: anomaly-detection (FC autoencoder),
+//! keyword-spotting (DS-CNN), image-classification (ResNet8),
+//! visual-wake-words (MobileNetV1-0.25). Plus MobileNetV2, ResNet18,
+//! BERT-tiny (seq 64), the DCGAN generator, and MobileLLM-125M (seq 64,
+//! BPI-F3 only — §IV-B footnote 3).
+
+use crate::tir::{DType, Op, Requant};
+
+use super::matmul::suite_requant;
+
+/// A named workload: ordered layer list (duplicates = repeated layers).
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Op>,
+    /// MetaSchedule trial budget the paper assigns (200; 400 for the LLM).
+    pub default_trials: usize,
+}
+
+impl Model {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn distinct_tasks(&self) -> usize {
+        crate::tune::extract_tasks(&self.layers).len()
+    }
+}
+
+struct B {
+    dtype: DType,
+    layers: Vec<Op>,
+}
+
+impl B {
+    fn new(dtype: DType) -> B {
+        B { dtype, layers: vec![] }
+    }
+
+    fn rq(&self) -> Option<Requant> {
+        (self.dtype == DType::I8).then(suite_requant)
+    }
+
+    /// Fully connected layer (batch 1): out = W[out,in] . x[in].
+    fn fc(&mut self, out: usize, inp: usize) {
+        let requant = self.rq();
+        self.layers.push(Op::Matmul { m: 1, n: out, k: inp, dtype: self.dtype, requant });
+    }
+
+    /// Conv2d via im2col: m = output spatial, k = cin*kh*kw, n = cout.
+    fn conv(&mut self, spatial_out: usize, cin: usize, ksize: usize, cout: usize) {
+        let requant = self.rq();
+        self.layers.push(Op::Matmul {
+            m: spatial_out,
+            n: cout,
+            k: cin * ksize * ksize,
+            dtype: self.dtype,
+            requant,
+        });
+    }
+
+    /// Generic matmul (attention etc).
+    fn mm(&mut self, m: usize, n: usize, k: usize) {
+        let requant = self.rq();
+        self.layers.push(Op::Matmul { m, n, k, dtype: self.dtype, requant });
+    }
+
+    /// Depthwise 3x3 (or kxk) block.
+    fn dw(&mut self, spatial_out: usize, channels: usize, ksize: usize) {
+        let requant = self.rq();
+        self.layers.push(Op::DwConv {
+            spatial: spatial_out,
+            channels,
+            taps: ksize * ksize,
+            dtype: self.dtype,
+            requant,
+        });
+    }
+
+    /// Residual/elementwise op.
+    fn add(&mut self, len: usize) {
+        self.layers.push(Op::Eltwise { len, dtype: self.dtype });
+    }
+
+    fn build(self, name: &str, trials: usize) -> Model {
+        Model { name: name.to_string(), layers: self.layers, default_trials: trials }
+    }
+}
+
+/// MLPerf-Tiny anomaly detection: 640-128x4-8-128x4-640 FC autoencoder.
+pub fn anomaly_detection(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.fc(128, 640);
+    for _ in 0..3 {
+        b.fc(128, 128);
+    }
+    b.fc(8, 128);
+    b.fc(128, 8);
+    for _ in 0..3 {
+        b.fc(128, 128);
+    }
+    b.fc(640, 128);
+    b.build("anomaly-detection", 200)
+}
+
+/// MLPerf-Tiny keyword spotting: DS-CNN (input 49x10x1).
+pub fn keyword_spotting(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    let sp = 25 * 5; // conv1 output 25x5, 64 channels
+    b.mm(sp, 64, 40); // conv1 10x4 kernel on 1 channel: k = 40
+    for _ in 0..4 {
+        b.dw(sp, 64, 3);
+        b.mm(sp, 64, 64); // pointwise
+    }
+    b.fc(12, 64);
+    b.build("keyword-spotting", 200)
+}
+
+/// MLPerf-Tiny image classification: ResNet8 on CIFAR-10 (32x32x3).
+pub fn image_classification(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.conv(1024, 3, 3, 16); // 32x32
+    // stack 1 (16ch, 32x32)
+    b.conv(1024, 16, 3, 16);
+    b.conv(1024, 16, 3, 16);
+    b.add(1024 * 16);
+    // stack 2 (32ch, 16x16)
+    b.conv(256, 16, 3, 32);
+    b.conv(256, 32, 3, 32);
+    b.conv(256, 16, 1, 32); // 1x1 shortcut
+    b.add(256 * 32);
+    // stack 3 (64ch, 8x8)
+    b.conv(64, 32, 3, 64);
+    b.conv(64, 64, 3, 64);
+    b.conv(64, 32, 1, 64);
+    b.add(64 * 64);
+    b.fc(10, 64);
+    b.build("image-classification", 200)
+}
+
+/// MLPerf-Tiny visual wake words: MobileNetV1 alpha=0.25 (96x96x3).
+pub fn visual_wake_words(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.conv(48 * 48, 3, 3, 8);
+    // (spatial_in, cin, cout, stride)
+    let cfg: [(usize, usize, usize, usize); 13] = [
+        (48, 8, 16, 1),
+        (48, 16, 32, 2),
+        (24, 32, 32, 1),
+        (24, 32, 64, 2),
+        (12, 64, 64, 1),
+        (12, 64, 128, 2),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 256, 2),
+        (3, 256, 256, 1),
+    ];
+    for (sp_in, cin, cout, stride) in cfg {
+        let sp_out = sp_in / stride;
+        b.dw(sp_out * sp_out, cin, 3);
+        b.mm(sp_out * sp_out, cout, cin); // pointwise
+    }
+    b.fc(2, 256);
+    b.build("visual-wake-words", 200)
+}
+
+/// MobileNetV2 (224x224x3, width 1.0).
+pub fn mobilenet_v2(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.conv(112 * 112, 3, 3, 32);
+    // inverted residual blocks: (expansion t, cout, repeats, stride)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32usize;
+    let mut sp = 112usize;
+    for (t, cout, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let sp_out = sp / stride;
+            let hidden = cin * t;
+            if t != 1 {
+                b.mm(sp * sp, hidden, cin); // expand 1x1
+            }
+            b.dw(sp_out * sp_out, hidden, 3);
+            b.mm(sp_out * sp_out, cout, hidden); // project 1x1
+            if stride == 1 && cin == cout {
+                b.add(sp_out * sp_out * cout);
+            }
+            cin = cout;
+            sp = sp_out;
+        }
+    }
+    b.mm(sp * sp, 1280, 320);
+    b.fc(1000, 1280);
+    b.build("mobilenet-v2", 200)
+}
+
+/// ResNet18 (224x224x3).
+pub fn resnet18(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.conv(112 * 112, 3, 7, 64);
+    // (spatial, cin, cout) per stage; 2 basic blocks each.
+    let stages: [(usize, usize, usize); 4] =
+        [(56, 64, 64), (28, 64, 128), (14, 128, 256), (7, 256, 512)];
+    for (i, (sp, cin, cout)) in stages.into_iter().enumerate() {
+        let spatial = sp * sp;
+        // block 1 (possibly downsampling)
+        b.conv(spatial, cin, 3, cout);
+        b.conv(spatial, cout, 3, cout);
+        if i > 0 {
+            b.conv(spatial, cin, 1, cout); // 1x1 projection shortcut
+        }
+        b.add(spatial * cout);
+        // block 2
+        b.conv(spatial, cout, 3, cout);
+        b.conv(spatial, cout, 3, cout);
+        b.add(spatial * cout);
+    }
+    b.fc(1000, 512);
+    b.build("resnet18", 200)
+}
+
+/// BERT-tiny (2 layers, hidden 128, 2 heads, seq 64).
+pub fn bert_tiny(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    let (seq, h, heads) = (64usize, 128usize, 2usize);
+    let dh = h / heads; // 64
+    for _ in 0..2 {
+        for _ in 0..3 {
+            b.mm(seq, h, h); // Q, K, V projections
+        }
+        for _ in 0..heads {
+            b.mm(seq, seq, dh); // attention scores
+            b.mm(seq, dh, seq); // context
+        }
+        b.mm(seq, h, h); // output projection
+        b.add(seq * h); // residual
+        b.mm(seq, 4 * h, h); // FFN up
+        b.mm(seq, h, 4 * h); // FFN down
+        b.add(seq * h);
+    }
+    b.fc(2, h); // classifier
+    b.build("bert-tiny", 200)
+}
+
+/// DCGAN generator (z=100 -> 64x64x3).
+pub fn dcgan(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.fc(4 * 4 * 512, 100); // project + reshape
+    // Transposed convs modeled as their im2col-equivalent GEMMs.
+    b.mm(8 * 8, 256, 512 * 9);
+    b.mm(16 * 16, 128, 256 * 9);
+    b.mm(32 * 32, 64, 128 * 9);
+    b.mm(64 * 64, 3, 64 * 9);
+    b.build("dcgan", 200)
+}
+
+/// MobileLLM-125M (30 layers, dim 576, 9 heads / 3 KV heads, seq 64).
+/// Tuned only on the BPI-F3 (paper footnote 3: memory).
+pub fn mobilellm_125m(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    let (seq, dim, heads, kv_dim, ffn) = (64usize, 576usize, 9usize, 192usize, 1536usize);
+    let dh = dim / heads; // 64
+    for _ in 0..30 {
+        b.mm(seq, dim, dim); // Q
+        b.mm(seq, kv_dim, dim); // K (grouped-query)
+        b.mm(seq, kv_dim, dim); // V
+        for _ in 0..heads {
+            b.mm(seq, seq, dh); // scores
+            b.mm(seq, dh, seq); // context
+        }
+        b.mm(seq, dim, dim); // O
+        b.add(seq * dim);
+        b.mm(seq, ffn, dim); // gate
+        b.mm(seq, ffn, dim); // up
+        b.add(seq * ffn); // swiglu elementwise
+        b.mm(seq, dim, ffn); // down
+        b.add(seq * dim);
+    }
+    b.mm(1, 32000, dim); // LM head (one generated token)
+    b.build("mobilellm-125m", 400)
+}
+
+/// The Saturn-FPGA model set of Figure 7 (everything except the LLM).
+pub const SATURN_MODELS: [&str; 8] = [
+    "anomaly-detection",
+    "keyword-spotting",
+    "image-classification",
+    "visual-wake-words",
+    "mobilenet-v2",
+    "resnet18",
+    "bert-tiny",
+    "dcgan",
+];
+
+/// The BPI-F3 model set of Figure 10 (adds MobileLLM).
+pub const BPI_MODELS: [&str; 9] = [
+    "anomaly-detection",
+    "keyword-spotting",
+    "image-classification",
+    "visual-wake-words",
+    "mobilenet-v2",
+    "resnet18",
+    "bert-tiny",
+    "dcgan",
+    "mobilellm-125m",
+];
+
+/// Look a model up by name.
+pub fn by_name(name: &str, dtype: DType) -> Option<Model> {
+    Some(match name {
+        "anomaly-detection" => anomaly_detection(dtype),
+        "keyword-spotting" => keyword_spotting(dtype),
+        "image-classification" => image_classification(dtype),
+        "visual-wake-words" => visual_wake_words(dtype),
+        "mobilenet-v2" => mobilenet_v2(dtype),
+        "resnet18" => resnet18(dtype),
+        "bert-tiny" => bert_tiny(dtype),
+        "dcgan" => dcgan(dtype),
+        "mobilellm-125m" => mobilellm_125m(dtype),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_resolve() {
+        for name in BPI_MODELS {
+            let m = by_name(name, DType::I8).unwrap();
+            assert!(!m.layers.is_empty(), "{name}");
+            assert!(m.total_macs() > 0, "{name}");
+        }
+        assert!(by_name("nonexistent", DType::I8).is_none());
+    }
+
+    #[test]
+    fn mac_counts_are_plausible() {
+        // Published MAC counts (approx): ResNet18 ~1.8G, MobileNetV2 ~300M,
+        // DS-CNN ~2.7M, ResNet8 ~12.5M.
+        let r18 = resnet18(DType::I8).total_macs();
+        assert!((1.5e9..2.3e9).contains(&(r18 as f64)), "resnet18 {r18}");
+        let mnv2 = mobilenet_v2(DType::I8).total_macs();
+        assert!((2.5e8..4.5e8).contains(&(mnv2 as f64)), "mobilenet-v2 {mnv2}");
+        let kws = keyword_spotting(DType::I8).total_macs();
+        assert!((2.0e6..6.0e6).contains(&(kws as f64)), "kws {kws}");
+        let ic = image_classification(DType::I8).total_macs();
+        assert!((8.0e6..3.0e7).contains(&(ic as f64)), "resnet8 {ic}");
+    }
+
+    #[test]
+    fn anomaly_detection_is_all_fc() {
+        let m = anomaly_detection(DType::I8);
+        assert!(m
+            .layers
+            .iter()
+            .all(|l| matches!(l, Op::Matmul { m: 1, .. })));
+        assert_eq!(m.layers.len(), 10);
+        // All-FC with shared shapes: few distinct tasks (the Figure-9
+        // code-size exception depends on this).
+        assert!(m.distinct_tasks() <= 5);
+    }
+
+    #[test]
+    fn llm_dedups_to_few_tasks() {
+        let m = mobilellm_125m(DType::I8);
+        // 30 identical layers -> the distinct task count stays small.
+        assert!(m.distinct_tasks() < 12, "{}", m.distinct_tasks());
+        assert_eq!(m.default_trials, 400);
+    }
+
+    #[test]
+    fn int8_layers_carry_requant() {
+        for name in SATURN_MODELS {
+            let m = by_name(name, DType::I8).unwrap();
+            for l in &m.layers {
+                if let Op::Matmul { requant, .. } = l {
+                    assert!(requant.is_some(), "{name}: {l}");
+                }
+            }
+            let f = by_name(name, DType::F32).unwrap();
+            for l in &f.layers {
+                if let Op::Matmul { requant, .. } = l {
+                    assert!(requant.is_none());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: codegen -> simulator across all scenarios, operators, and
+//! dtypes — consistency of the measurement pipeline the figures rely on.
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::isa::InstrGroup;
+use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+use rvv_tune::tir::{DType, Op, Requant};
+use rvv_tune::workloads::{matmul, models};
+
+fn scenarios() -> Vec<Scenario> {
+    vec![Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm, Scenario::MuRiscvNn]
+}
+
+#[test]
+fn every_scenario_runs_on_every_matmul_suite_entry() {
+    let soc = SocConfig::saturn(256);
+    for op in matmul::full_suite() {
+        for sc in scenarios() {
+            let Some(p) = codegen::generate(&op, &sc, soc.vlen) else {
+                assert_eq!(sc, Scenario::MuRiscvNn, "only muriscv-nn may skip");
+                assert!(op.dtype().is_float());
+                continue;
+            };
+            let mut bufs = BufStore::timing(&p);
+            let r = execute(&soc, &p, &mut bufs, Mode::Timing, true);
+            assert!(r.cycles > 0.0, "{} {}", op.key(), sc.name());
+            assert!(r.trace.total() > 0);
+        }
+    }
+}
+
+#[test]
+fn vectorized_scenarios_beat_scalar_everywhere() {
+    let soc = SocConfig::saturn(512);
+    for op in [matmul::matmul(64, DType::I8), matmul::matmul(256, DType::F32)] {
+        let cycles = |sc: &Scenario| {
+            let p = codegen::generate(&op, sc, soc.vlen).unwrap();
+            let mut bufs = BufStore::timing(&p);
+            execute(&soc, &p, &mut bufs, Mode::Timing, true).cycles
+        };
+        let scalar = cycles(&Scenario::ScalarOs);
+        assert!(cycles(&Scenario::AutovecGcc) < scalar, "{}", op.key());
+        assert!(cycles(&Scenario::AutovecLlvm) < scalar, "{}", op.key());
+    }
+}
+
+#[test]
+fn every_model_layer_is_measurable_under_all_scenarios() {
+    let soc = SocConfig::saturn(1024);
+    for name in models::SATURN_MODELS {
+        let model = models::by_name(name, DType::I8).unwrap();
+        for op in &model.layers {
+            for sc in scenarios() {
+                let Some(p) = codegen::generate(op, &sc, soc.vlen) else {
+                    panic!("{name}/{}: scenario {} must support int8", op.key(), sc.name());
+                };
+                let mut bufs = BufStore::timing(&p);
+                let r = execute(&soc, &p, &mut bufs, Mode::Timing, true);
+                assert!(r.cycles > 0.0, "{name} {} {}", op.key(), sc.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn muriscvnn_is_store_heavier_than_autovec_epilogue_free_path() {
+    // The Figure-5 structural claim at the pipeline level.
+    let soc = SocConfig::saturn(1024);
+    let op = matmul::matmul(128, DType::I8);
+    let share = |sc: &Scenario| {
+        let p = codegen::generate(&op, sc, soc.vlen).unwrap();
+        let mut bufs = BufStore::timing(&p);
+        execute(&soc, &p, &mut bufs, Mode::Timing, true).trace.store_share()
+    };
+    assert!(share(&Scenario::MuRiscvNn) > 0.02);
+}
+
+#[test]
+fn session_network_measurement_is_deterministic() {
+    let model = models::by_name("keyword-spotting", DType::I8).unwrap();
+    let run = || {
+        let mut s = Session::new(
+            SocConfig::saturn(256),
+            SessionOptions { use_mlp: false, workers: 4, ..Default::default() },
+        );
+        s.measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+            .unwrap()
+            .cycles
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn bpi_f3_is_faster_in_wall_clock_but_comparable_in_cycles_per_mac() {
+    // Sanity of the second SoC model: 16x clock + OoO should make wall
+    // time much lower than the 100 MHz FPGA for the same workload.
+    let op = matmul::matmul(128, DType::I8);
+    let lat = |soc: &SocConfig| {
+        let p = codegen::generate(&op, &Scenario::AutovecLlvm, soc.vlen).unwrap();
+        let mut bufs = BufStore::timing(&p);
+        let r = execute(soc, &p, &mut bufs, Mode::Timing, true);
+        soc.cycles_to_us(r.cycles)
+    };
+    let saturn = lat(&SocConfig::saturn(256));
+    let bpi = lat(&SocConfig::bpi_f3());
+    assert!(bpi < saturn / 4.0, "bpi {bpi}us vs saturn {saturn}us");
+}
+
+#[test]
+fn functional_outputs_identical_across_vector_scenarios_random_shapes() {
+    // int8 bit-exactness across all code generators on awkward shapes.
+    let soc = SocConfig::saturn(256);
+    let rq = Requant { mult: (1 << 16) + 12345, shift: 21, zp: -7 };
+    for (m, n, k) in [(3usize, 5usize, 17usize), (9, 33, 70), (2, 31, 96)] {
+        let op = Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rq) };
+        let mut reference: Option<Vec<i8>> = None;
+        for sc in scenarios() {
+            let p = codegen::generate(&op, &sc, soc.vlen).unwrap();
+            let mut bufs = BufStore::functional(&p);
+            let av: Vec<i8> = (0..m * k).map(|i| ((i * 73 + 7) % 255) as i8).collect();
+            let bv: Vec<i8> = (0..n * k).map(|i| ((i * 57 + 3) % 251) as i8).collect();
+            let dv: Vec<i32> = (0..m * n).map(|i| (i as i32 * 97) % 1001 - 500).collect();
+            bufs.set_i8(0, &av);
+            bufs.set_i8(1, &bv);
+            bufs.set_i32(2, &dv);
+            execute(&soc, &p, &mut bufs, Mode::Functional, true);
+            let out = bufs.get_i8(3).to_vec();
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => {
+                    assert_eq!(&out, r, "{m}x{n}x{k} scenario {}", sc.name())
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_groups_cover_all_vector_instructions() {
+    let soc = SocConfig::saturn(256);
+    let op = matmul::matmul(64, DType::I8);
+    let p = codegen::generate(&op, &Scenario::MuRiscvNn, soc.vlen).unwrap();
+    let mut bufs = BufStore::timing(&p);
+    let r = execute(&soc, &p, &mut bufs, Mode::Timing, true);
+    let sum: u64 = InstrGroup::ALL
+        .iter()
+        .filter(|g| g.is_vector())
+        .map(|&g| r.trace.get(g))
+        .sum();
+    assert_eq!(sum, r.trace.vector_total());
+    assert!(r.trace.get(InstrGroup::Config) > 0);
+    assert!(r.trace.get(InstrGroup::Reduction) > 0);
+}

@@ -1,0 +1,219 @@
+//! Integration: the PJRT runtime executing the AOT artifacts, and the
+//! simulator's numerics validated against the JAX/Pallas oracles.
+//!
+//! These tests need `make artifacts`; they are skipped (with a note) when
+//! the manifest is absent so `cargo test` stays green pre-build.
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::runtime::{self, engine::artifacts_available, Engine, MlpRuntime};
+use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+use rvv_tune::tir::{DType, IntrinChoice, LoopOrder, MatmulSchedule, Op, Requant, Schedule};
+use rvv_tune::util::Pcg;
+
+fn engine() -> Option<Engine> {
+    let dir = runtime::artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(e) = engine() else { return };
+    for name in [
+        "costmodel_init",
+        "costmodel_fwd",
+        "costmodel_train",
+        "qmatmul_i8",
+        "matmul_f32",
+        "matmul_f16",
+        "vmatmul_tile_f32",
+        "vmacc_tile_f32",
+    ] {
+        assert!(e.artifact(name).is_some(), "missing {name}");
+    }
+    assert_eq!(e.meta.feature_dim, rvv_tune::tune::FEATURE_DIM);
+}
+
+#[test]
+fn costmodel_roundtrip_scores_and_trains() {
+    let Some(e) = engine() else { return };
+    let mut mlp = MlpRuntime::new(&e, 7).expect("init");
+    let mut rng = Pcg::seeded(3);
+    let feats: Vec<Vec<f32>> = (0..100)
+        .map(|_| (0..e.meta.feature_dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let s0 = mlp.score(&e, &feats).expect("score");
+    assert_eq!(s0.len(), 100);
+    assert!(s0.iter().all(|x| x.is_finite()));
+
+    // Train towards a simple target; loss must drop.
+    let labels: Vec<f32> = feats.iter().map(|f| f[0] - 0.5 * f[1]).collect();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..40 {
+        last = mlp.train_step(&e, &feats[..64], &labels[..64]).expect("train");
+        first.get_or_insert(last);
+    }
+    assert!(
+        last < first.unwrap() * 0.7,
+        "loss did not drop: {} -> {last}",
+        first.unwrap()
+    );
+
+    // Scores should have changed after training.
+    let s1 = mlp.score(&e, &feats).expect("score");
+    assert!(s0.iter().zip(&s1).any(|(a, b)| (a - b).abs() > 1e-6));
+}
+
+#[test]
+fn simulator_int8_matches_jax_oracle_via_pjrt() {
+    let Some(e) = engine() else { return };
+    let v = e.meta.val_size;
+    let mut rng = Pcg::seeded(11);
+    let a: Vec<i8> = (0..v * v).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+    let bt: Vec<i8> = (0..v * v).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+    let d: Vec<i32> = (0..v * v).map(|_| (rng.below(2001) as i64 - 1000) as i32).collect();
+    let rq = Requant { mult: 1 << 14, shift: 22, zp: 3 };
+
+    // JAX oracle through PJRT.
+    let outs = e
+        .execute(
+            "qmatmul_i8",
+            &[
+                runtime::literal::lit_i8(&a, &[v, v]).unwrap(),
+                runtime::literal::lit_i8(&bt, &[v, v]).unwrap(),
+                runtime::literal::lit_i32(&d, &[v, v]).unwrap(),
+                xla::Literal::scalar(rq.mult),
+                xla::Literal::scalar(rq.shift as i32),
+                xla::Literal::scalar(rq.zp),
+            ],
+        )
+        .expect("qmatmul exec");
+    let oracle = runtime::literal::to_vec_i8(&outs[0]).unwrap();
+
+    // Simulator: every scenario must produce the identical int8 output.
+    let op = Op::Matmul { m: v, n: v, k: v, dtype: DType::I8, requant: Some(rq) };
+    let sched = Schedule::Matmul(MatmulSchedule {
+        intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
+        mi: 2,
+        order: LoopOrder::NMK,
+        unroll: 2,
+        transpose: false,
+    });
+    for scenario in [
+        Scenario::ScalarOs,
+        Scenario::AutovecGcc,
+        Scenario::AutovecLlvm,
+        Scenario::MuRiscvNn,
+        Scenario::Ours(sched.clone()),
+    ] {
+        let p = codegen::generate(&op, &scenario, 256).unwrap();
+        let mut bufs = BufStore::functional(&p);
+        bufs.set_i8(0, &a);
+        bufs.set_i8(1, &bt);
+        bufs.set_i32(2, &d);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        assert_eq!(
+            bufs.get_i8(3),
+            &oracle[..],
+            "scenario {} diverges from the JAX oracle",
+            scenario.name()
+        );
+    }
+}
+
+#[test]
+fn simulator_f32_matches_jax_oracle_via_pjrt() {
+    let Some(e) = engine() else { return };
+    let v = e.meta.val_size;
+    let mut rng = Pcg::seeded(5);
+    let a: Vec<f32> = (0..v * v).map(|_| rng.normal() as f32).collect();
+    let bt: Vec<f32> = (0..v * v).map(|_| rng.normal() as f32).collect();
+    let d: Vec<f32> = (0..v * v).map(|_| rng.normal() as f32).collect();
+    let outs = e
+        .execute(
+            "matmul_f32",
+            &[
+                runtime::literal::lit_f32(&a, &[v, v]).unwrap(),
+                runtime::literal::lit_f32(&bt, &[v, v]).unwrap(),
+                runtime::literal::lit_f32(&d, &[v, v]).unwrap(),
+            ],
+        )
+        .expect("matmul_f32");
+    let oracle = runtime::literal::to_vec_f32(&outs[0]).unwrap();
+
+    let op = Op::Matmul { m: v, n: v, k: v, dtype: DType::F32, requant: None };
+    let sched = Schedule::Matmul(MatmulSchedule {
+        intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
+        mi: 1,
+        order: LoopOrder::MNK,
+        unroll: 1,
+        transpose: false,
+    });
+    let p = codegen::generate(&op, &Scenario::Ours(sched), 256).unwrap();
+    let mut bufs = BufStore::functional(&p);
+    bufs.set_f32(0, &a);
+    bufs.set_f32(1, &bt);
+    bufs.set_f32(2, &d);
+    execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+    let got = bufs.get_f32(2);
+    for (i, (g, o)) in got.iter().zip(&oracle).enumerate() {
+        assert!(
+            (g - o).abs() < 1e-2 + o.abs() * 1e-3,
+            "f32 divergence at {i}: {g} vs {o}"
+        );
+    }
+}
+
+#[test]
+fn pallas_vmatmul_tile_runs_under_rust_runtime() {
+    let Some(e) = engine() else { return };
+    let vl = e.meta.tile_vl;
+    let j = e.meta.tile_j;
+    let mut rng = Pcg::seeded(9);
+    let a: Vec<f32> = (0..vl).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..j * vl).map(|_| rng.normal() as f32).collect();
+    let c: Vec<f32> = (0..j).map(|_| rng.normal() as f32).collect();
+    let outs = e
+        .execute(
+            "vmatmul_tile_f32",
+            &[
+                runtime::literal::lit_f32(&a, &[vl]).unwrap(),
+                runtime::literal::lit_f32(&b, &[j, vl]).unwrap(),
+                runtime::literal::lit_f32(&c, &[j]).unwrap(),
+            ],
+        )
+        .expect("vmatmul tile");
+    let got = runtime::literal::to_vec_f32(&outs[0]).unwrap();
+    for jj in 0..j {
+        let want: f32 = c[jj] + (0..vl).map(|kk| b[jj * vl + kk] * a[kk]).sum::<f32>();
+        assert!((got[jj] - want).abs() < 1e-2, "tile output {jj}: {} vs {want}", got[jj]);
+    }
+}
+
+#[test]
+fn mlp_cost_model_end_to_end_in_search() {
+    let Some(_) = engine() else { return };
+    use rvv_tune::intrinsics::Registry;
+    use rvv_tune::tune::{tune_op, Database, MlpCostModel, SearchConfig, SerialMeasurer};
+    let op = Op::square_matmul(64, DType::I8);
+    let soc = SocConfig::saturn(256);
+    let registry = Registry::build(256);
+    let mut model = MlpCostModel::from_artifacts(1).expect("mlp model");
+    let mut db = Database::new();
+    let out = tune_op(
+        &op,
+        &soc,
+        &registry,
+        &mut model,
+        &SerialMeasurer,
+        &mut db,
+        &SearchConfig { trials: 32, ..Default::default() },
+    )
+    .expect("tunable");
+    assert!(out.best.cycles > 0.0);
+    assert!(model.replay_len() >= 32);
+}

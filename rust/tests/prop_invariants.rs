@@ -1,0 +1,238 @@
+//! Property-based tests (in-tree randomized harness over seeded PCG — the
+//! offline image has no proptest): core invariants of the simulator, the
+//! code generators, and the tuner, swept over random shapes and schedules.
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::intrinsics::Registry;
+use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+use rvv_tune::tir::{DType, Op, Requant, Schedule};
+use rvv_tune::tune::{analysis, SearchSpace};
+use rvv_tune::util::Pcg;
+
+const CASES: usize = 40;
+
+fn random_matmul(rng: &mut Pcg) -> Op {
+    let m = rng.range_inclusive(1, 48) as usize;
+    let n = rng.range_inclusive(1, 48) as usize;
+    let k = rng.range_inclusive(4, 96) as usize;
+    let dtype = *rng.choose(&[DType::I8, DType::F32, DType::F16]);
+    let requant = (dtype == DType::I8).then(|| Requant {
+        mult: (1 << 14) + rng.below(1 << 14) as i32,
+        shift: 18 + rng.below(6) as u32,
+        zp: rng.range_inclusive(-20, 20) as i32,
+    });
+    Op::Matmul { m, n, k, dtype, requant }
+}
+
+fn random_soc(rng: &mut Pcg) -> SocConfig {
+    if rng.chance(0.25) {
+        SocConfig::bpi_f3()
+    } else {
+        SocConfig::saturn(*rng.choose(&[256u32, 512, 1024]))
+    }
+}
+
+/// Reference i8 QNN matmul.
+fn ref_i8(op: &Op, a: &[i8], b: &[i8], d: &[i32]) -> Vec<i8> {
+    let Op::Matmul { m, n, k, requant, .. } = op else { unreachable!() };
+    let rq = requant.unwrap();
+    let mut out = vec![0i8; m * n];
+    for i in 0..*m {
+        for j in 0..*n {
+            let acc: i64 = (0..*k)
+                .map(|kk| a[i * k + kk] as i64 * b[j * k + kk] as i64)
+                .sum::<i64>()
+                + d[i * n + j] as i64;
+            out[i * n + j] = rvv_tune::sim::requant_i64(acc, rq.mult, rq.shift, rq.zp) as i8;
+        }
+    }
+    out
+}
+
+/// P1: for any random int8 matmul and any sampled schedule, the emitted
+/// program computes exactly the reference QNN result.
+#[test]
+fn prop_sampled_schedules_are_functionally_exact() {
+    let mut rng = Pcg::seeded(0xA11CE);
+    let mut tested = 0;
+    for _ in 0..CASES {
+        let mut op = random_matmul(&mut rng);
+        if let Op::Matmul { dtype, requant, .. } = &mut op {
+            *dtype = DType::I8; // exactness property is int8-only
+            if requant.is_none() {
+                *requant = Some(Requant::default_for_tests());
+            }
+        }
+        let soc = random_soc(&mut rng);
+        let registry = Registry::build(soc.vlen);
+        let space = SearchSpace::new(&op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        let sched = space.sample(&mut rng);
+        let p = codegen::ours::emit(&op, &sched, soc.vlen);
+        let (m, n, k) = match op {
+            Op::Matmul { m, n, k, .. } => (m, n, k),
+            _ => unreachable!(),
+        };
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..m * k).map(|_| rng.range_inclusive(-128, 127) as i8).collect();
+        let bv: Vec<i8> = (0..n * k).map(|_| rng.range_inclusive(-128, 127) as i8).collect();
+        let dv: Vec<i32> =
+            (0..m * n).map(|_| rng.range_inclusive(-2000, 2000) as i32).collect();
+        bufs.set_i8(0, &av);
+        bufs.set_i8(1, &bv);
+        bufs.set_i32(2, &dv);
+        execute(&soc, &p, &mut bufs, Mode::Functional, true);
+        assert_eq!(
+            bufs.get_i8(3),
+            &ref_i8(&op, &av, &bv, &dv)[..],
+            "shape {m}x{n}x{k} on {} schedule {}",
+            soc.name,
+            sched.describe()
+        );
+        tested += 1;
+    }
+    assert!(tested >= CASES / 2, "too few tunable cases: {tested}");
+}
+
+/// P2: timing mode and functional mode agree on cycles, trace, and cache
+/// stats for any program (cost is data-independent by construction).
+#[test]
+fn prop_timing_equals_functional_cycles() {
+    let mut rng = Pcg::seeded(0xBEEF);
+    for _ in 0..CASES {
+        let op = random_matmul(&mut rng);
+        let soc = random_soc(&mut rng);
+        let sc = rng.choose(&[Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm]).clone();
+        let p = codegen::generate(&op, &sc, soc.vlen).unwrap();
+        let warm = rng.chance(0.5);
+        let mut fb = BufStore::functional(&p);
+        let rf = execute(&soc, &p, &mut fb, Mode::Functional, warm);
+        let mut tb = BufStore::timing(&p);
+        let rt = execute(&soc, &p, &mut tb, Mode::Timing, warm);
+        assert_eq!(rf.cycles, rt.cycles, "{} {}", op.key(), sc.name());
+        assert_eq!(rf.trace, rt.trace);
+        assert_eq!(rf.cache, rt.cache);
+    }
+}
+
+/// P3: the static profile equals the dynamic trace for every group, for
+/// any scenario and shape.
+#[test]
+fn prop_static_profile_matches_dynamic_trace() {
+    let mut rng = Pcg::seeded(0xCAFE);
+    for _ in 0..CASES {
+        let op = random_matmul(&mut rng);
+        let soc = random_soc(&mut rng);
+        let scenario: Scenario = if op.dtype() == DType::I8 && rng.chance(0.3) {
+            Scenario::MuRiscvNn
+        } else {
+            rng.choose(&[Scenario::ScalarOs, Scenario::AutovecGcc]).clone()
+        };
+        let Some(p) = codegen::generate(&op, &scenario, soc.vlen) else { continue };
+        let sp = analysis::static_profile(&p);
+        let mut bufs = BufStore::timing(&p);
+        let r = execute(&soc, &p, &mut bufs, Mode::Timing, true);
+        for g in rvv_tune::isa::InstrGroup::ALL {
+            assert_eq!(
+                sp.get(g) as u64,
+                r.trace.get(g),
+                "group {g:?} for {} under {}",
+                op.key(),
+                scenario.name()
+            );
+        }
+    }
+}
+
+/// P4: schedules survive a JSON round trip through the database format.
+#[test]
+fn prop_schedule_json_roundtrip() {
+    let mut rng = Pcg::seeded(0xD00D);
+    for _ in 0..CASES * 4 {
+        let op = random_matmul(&mut rng);
+        let registry = Registry::build(*rng.choose(&[256u32, 512, 1024]));
+        let space = SearchSpace::new(&op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        let s = space.sample(&mut rng);
+        let back = Schedule::from_json(&s.to_json()).expect("roundtrip");
+        assert_eq!(s, back);
+    }
+}
+
+/// P5: warming the L2 never makes execution slower; larger caches never
+/// hurt (monotonicity of the memory hierarchy model).
+#[test]
+fn prop_cache_monotonicity() {
+    let mut rng = Pcg::seeded(0xF00D);
+    for _ in 0..CASES / 2 {
+        let op = random_matmul(&mut rng);
+        let soc = SocConfig::saturn(256);
+        let p = codegen::generate(&op, &Scenario::AutovecGcc, soc.vlen).unwrap();
+        let mut b1 = BufStore::timing(&p);
+        let cold = execute(&soc, &p, &mut b1, Mode::Timing, false);
+        let mut b2 = BufStore::timing(&p);
+        let warm = execute(&soc, &p, &mut b2, Mode::Timing, true);
+        assert!(warm.cycles <= cold.cycles, "{}", op.key());
+
+        let mut big = soc.clone();
+        big.cache.l2_kb *= 4;
+        let mut b3 = BufStore::timing(&p);
+        let bigger = execute(&big, &p, &mut b3, Mode::Timing, false);
+        assert!(bigger.cycles <= cold.cycles * 1.0001, "{}", op.key());
+    }
+}
+
+/// P6: mutation always yields a schedule that is still inside the space
+/// (valid intrinsic variant, valid divisors).
+#[test]
+fn prop_mutation_stays_in_space() {
+    let mut rng = Pcg::seeded(0x5EED);
+    for _ in 0..CASES {
+        let op = random_matmul(&mut rng);
+        let registry = Registry::build(1024);
+        let space = SearchSpace::new(&op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        let mut s = space.sample(&mut rng);
+        for _ in 0..16 {
+            s = space.mutate(&s, &mut rng);
+            if let (Schedule::Matmul(ms), Op::Matmul { m, n, k, .. }) = (&s, &op) {
+                let rows = if ms.transpose { *n } else { *m };
+                let cols = if ms.transpose { *m } else { *n };
+                assert!(ms.intrin.vl as usize <= *k);
+                assert!(ms.intrin.j as usize <= cols);
+                assert_eq!(rows % ms.mi as usize, 0);
+            }
+            // Emitted program must at least build and run in timing mode.
+            let p = codegen::ours::emit(&op, &s, 1024);
+            let mut bufs = BufStore::timing(&p);
+            let r = execute(&SocConfig::saturn(1024), &p, &mut bufs, Mode::Timing, true);
+            assert!(r.cycles > 0.0);
+        }
+    }
+}
+
+/// P7: the dynamic instruction total is invariant across SoCs (the ISA
+/// stream depends on VLEN, not on the microarchitecture parameters).
+#[test]
+fn prop_trace_depends_only_on_vlen() {
+    let mut rng = Pcg::seeded(0x7EA);
+    for _ in 0..CASES / 2 {
+        let op = random_matmul(&mut rng);
+        let p = codegen::generate(&op, &Scenario::AutovecGcc, 256).unwrap();
+        let mut saturn = SocConfig::saturn(256);
+        saturn.cache.l2_kb = 64; // very different microarchitecture
+        saturn.issue_overhead = 9.0;
+        let bpi = SocConfig::bpi_f3(); // also VLEN=256
+        let mut b1 = BufStore::timing(&p);
+        let r1 = execute(&saturn, &p, &mut b1, Mode::Timing, true);
+        let mut b2 = BufStore::timing(&p);
+        let r2 = execute(&bpi, &p, &mut b2, Mode::Timing, true);
+        assert_eq!(r1.trace, r2.trace, "{}", op.key());
+    }
+}
