@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI: tier-1 build + tests, then a quick perf smoke of the tuning hot path.
+# Leaves machine-readable bench output in rust/BENCH_perf_hotpath.json
+# (see EXPERIMENTS.md §Perf).
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== perf smoke: BENCH_QUICK=1 perf_hotpath =="
+BENCH_QUICK=1 cargo bench --bench perf_hotpath
+
+echo "CI OK — perf record: $(pwd)/BENCH_perf_hotpath.json"

@@ -4,9 +4,12 @@
 //!    compile+flash+measure step, replaced by our simulated measurement);
 //! 2. candidate generation: sampling + codegen + feature extraction;
 //! 3. cost-model scoring/training through PJRT (when artifacts exist);
-//! 4. end-to-end tuning iteration rate (serial and parallel pool).
-
-mod common;
+//! 4. end-to-end tuning iteration rate, serial vs the persistent pipelined
+//!    pool (the headline trials/s number).
+//!
+//! Results land in `BENCH_perf_hotpath.json` (see util::bench::BenchReport)
+//! so the perf trajectory is tracked across PRs. `BENCH_QUICK=1` shrinks
+//! everything to a CI smoke run.
 
 use rvv_tune::codegen::{self, Scenario};
 use rvv_tune::coordinator::MeasurePool;
@@ -16,35 +19,70 @@ use rvv_tune::tir::DType;
 use rvv_tune::tune::{
     self, Database, HeuristicCostModel, Measurer, SearchConfig, SearchSpace, SerialMeasurer,
 };
-use rvv_tune::util::bench::{bench, black_box, quick, section, BenchOpts};
+use rvv_tune::util::bench::{
+    bench, black_box, opts, quick_mode, quick_opts, section, BenchReport,
+};
 use rvv_tune::util::Pcg;
 use rvv_tune::workloads::matmul;
+
+/// One full tuning run; returns trials/s and best cycles.
+fn tune_rate(
+    size: usize,
+    trials: usize,
+    soc: &SocConfig,
+    registry: &Registry,
+    measurer: &dyn Measurer,
+) -> (f64, usize, f64) {
+    let op = matmul::matmul(size, DType::I8);
+    let t0 = std::time::Instant::now();
+    let mut db = Database::new();
+    let mut model = HeuristicCostModel;
+    let out = tune::tune_op(
+        &op,
+        soc,
+        registry,
+        &mut model,
+        measurer,
+        &mut db,
+        &SearchConfig { trials, seed: 3, ..Default::default() },
+    )
+    .unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    (out.trials_measured as f64 / dt.max(1e-9), out.trials_measured, out.best.cycles)
+}
 
 fn main() {
     let soc = SocConfig::saturn(1024);
     let registry = Registry::build(1024);
+    let mut report = BenchReport::new("perf_hotpath");
+    let sim_sizes: &[usize] = if quick_mode() { &[64, 128] } else { &[64, 128, 256] };
 
     section("L3: simulator measurement throughput");
-    for size in [64usize, 128, 256] {
+    for &size in sim_sizes {
         let op = matmul::matmul(size, DType::I8);
-        common::bench_measure(
+        let program = codegen::generate(&op, &Scenario::AutovecGcc, 1024).expect("supported");
+        let r = bench(
             &format!("sim-timing {size}^3 int8 (tuned-style schedule)"),
-            &op,
-            &Scenario::AutovecGcc,
-            1024,
+            quick_opts(),
+            || {
+                let mut bufs = BufStore::timing(&program);
+                black_box(execute(&soc, &program, &mut bufs, Mode::Timing, true).cycles);
+            },
         );
+        report.add(&r);
     }
 
     section("L3: candidate generation (sample + codegen + features)");
     let op = matmul::matmul(128, DType::I8);
     let space = SearchSpace::new(&op, &registry);
     let mut rng = Pcg::seeded(1);
-    bench("sample+emit+features 128^3", BenchOpts::default(), || {
+    let r = bench("sample+emit+features 128^3", opts(), || {
         let s = space.sample(&mut rng);
         let p = codegen::ours::emit(&op, &s, 1024);
         let f = tune::features::extract(&op, &s, &p, &soc);
         black_box(f);
     });
+    report.add(&r);
 
     section("L3: parallel vs serial measurement (one search round, k=16)");
     let mut programs = Vec::new();
@@ -53,17 +91,24 @@ fn main() {
         let s = space.sample(&mut rng2);
         programs.push(codegen::ours::emit(&op, &s, 1024));
     }
-    bench("serial 16 candidates 128^3", quick(), || {
+    let r_serial = bench("serial 16 candidates 128^3", quick_opts(), || {
         black_box(SerialMeasurer.measure(&soc, &programs));
     });
+    report.add(&r_serial);
     let pool = MeasurePool::default_pool();
-    bench(
+    // Arc the programs once outside the timed region (as tune_op does), so
+    // the metric measures dispatch+simulation, not leader-side deep clones.
+    let arcs: Vec<std::sync::Arc<rvv_tune::sim::VProgram>> =
+        programs.iter().cloned().map(std::sync::Arc::new).collect();
+    let r_pool = bench(
         &format!("pool({} workers) 16 candidates 128^3", pool.workers()),
-        quick(),
+        quick_opts(),
         || {
-            black_box(pool.measure(&soc, &programs));
+            black_box(pool.begin_measure(&soc, arcs.clone()).wait());
         },
     );
+    report.add(&r_pool);
+    report.metric("measure_round_pool_speedup", r_serial.mean_ns / r_pool.mean_ns);
 
     section("L2/L1: PJRT cost model (requires `make artifacts`)");
     match rvv_tune::tune::MlpCostModel::from_artifacts(7) {
@@ -72,51 +117,54 @@ fn main() {
             let feats: Vec<Vec<f32>> = (0..512)
                 .map(|i| (0..32).map(|j| ((i * 31 + j) % 17) as f32 * 0.1).collect())
                 .collect();
-            bench("mlp score 512 candidates (1 PJRT call)", quick(), || {
+            let r = bench("mlp score 512 candidates (1 PJRT call)", quick_opts(), || {
                 black_box(model.score(&feats));
             });
+            report.add(&r);
             let labels: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
-            bench("mlp update (64 records, 4 epochs)", quick(), || {
+            let r = bench("mlp update (64 records, 4 epochs)", quick_opts(), || {
                 model.update(&feats[..64], &labels);
             });
+            report.add(&r);
         }
         Err(e) => println!("skipped (artifacts unavailable: {e})"),
     }
 
-    section("end-to-end: full tuning runs (trials/s is the headline)");
-    for (size, trials) in [(64usize, 64usize), (128, 64)] {
-        let op = matmul::matmul(size, DType::I8);
-        let t0 = std::time::Instant::now();
-        let mut db = Database::new();
-        let mut model = HeuristicCostModel;
-        let out = tune::tune_op(
-            &op,
-            &soc,
-            &registry,
-            &mut model,
-            &pool,
-            &mut db,
-            &SearchConfig { trials, seed: 3, ..Default::default() },
-        )
-        .unwrap();
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "tune {size}^3 int8: {} trials in {dt:.2}s = {:.0} trials/s (paper testbed ~0.1/s); best {} cycles",
-            out.trials_measured,
-            out.trials_measured as f64 / dt,
-            out.best.cycles
+    section("end-to-end: full tuning runs, serial vs pool (trials/s is the headline)");
+    let e2e: &[(usize, usize)] =
+        if quick_mode() { &[(64, 24)] } else { &[(64, 64), (128, 64)] };
+    for &(size, trials) in e2e {
+        let (serial_rate, _, serial_best) =
+            tune_rate(size, trials, &soc, &registry, &SerialMeasurer);
+        let (pool_rate, measured, pool_best) = tune_rate(size, trials, &soc, &registry, &pool);
+        assert_eq!(
+            serial_best, pool_best,
+            "pipelined pool must be bit-identical to serial tuning"
         );
+        println!(
+            "tune {size}^3 int8: {measured} trials  serial {serial_rate:.0}/s  \
+             pool({}) {pool_rate:.0}/s  = {:.2}x  (paper testbed ~0.1/s); best {pool_best} cycles",
+            pool.workers(),
+            pool_rate / serial_rate
+        );
+        report.metric(format!("tune_{size}_serial_trials_per_s"), serial_rate);
+        report.metric(format!("tune_{size}_pool_trials_per_s"), pool_rate);
+        report.metric(format!("tune_{size}_pool_speedup"), pool_rate / serial_rate);
     }
 
     // keep `execute`'s functional path exercised under bench too
     section("functional vs timing mode overhead");
     let p = codegen::generate(&matmul::matmul(64, DType::I8), &Scenario::MuRiscvNn, 1024).unwrap();
-    bench("functional 64^3", quick(), || {
+    let r = bench("functional 64^3", quick_opts(), || {
         let mut bufs = BufStore::functional(&p);
         black_box(execute(&soc, &p, &mut bufs, Mode::Functional, true).cycles);
     });
-    bench("timing     64^3", quick(), || {
+    report.add(&r);
+    let r = bench("timing     64^3", quick_opts(), || {
         let mut bufs = BufStore::timing(&p);
         black_box(execute(&soc, &p, &mut bufs, Mode::Timing, true).cycles);
     });
+    report.add(&r);
+
+    report.write().expect("writing BENCH_perf_hotpath.json");
 }

@@ -5,9 +5,13 @@
 //!
 //! On the paper's testbed one measurement takes 9–12 s (compile + flash +
 //! run); our substitute executes the candidate on the simulated SoC in
-//! milliseconds, and the pool runs candidates of one round in parallel
-//! worker threads — the structure (batched dispatch, result collection,
-//! centralized learning) is the same.
+//! milliseconds, so the throughput ceiling moved into the tuning pipeline
+//! itself. The pool therefore keeps **persistent workers** that run the
+//! whole per-candidate chain (codegen → feature extraction → timing-mode
+//! measurement), and the search loop pipelines rounds so preparation of
+//! round N+1 overlaps measurement of round N (see `tune::search`) — the
+//! leader/worker structure (batched dispatch, result collection,
+//! centralized learning) is the same as MetaSchedule's.
 
 mod pool;
 mod session;

@@ -1,58 +1,277 @@
-//! Worker pool: parallel candidate measurement over std::thread::scope.
+//! Persistent worker pool: the parallel measurement/preparation backend of
+//! the pipelined tuning engine.
+//!
+//! The old pool spawned a fresh `thread::scope` per round and parked one
+//! `Mutex<Option<ExecResult>>` per result; workers only executed
+//! measurements, so codegen + feature extraction serialized on the leader.
+//! This pool keeps **long-lived workers** draining a shared job queue, and
+//! workers run the *whole per-candidate chain*: a `Prepare` job is
+//! `codegen::ours::emit` + `features::extract`, a `Measure` job is a
+//! timing-mode `execute`. Batches rendezvous through an indexed sink, so
+//! results are position-stable and bit-identical to serial execution no
+//! matter how many workers race (the simulator itself is deterministic and
+//! shares no state between candidates).
+//!
+//! While a leader blocks on a ticket it also steals jobs from the queue
+//! (`wait_collect`), so a waiting leader contributes a worker's worth of
+//! throughput instead of idling — and the pool makes progress even if all
+//! workers are busy with another batch.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
-use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, VProgram};
-use crate::tune::Measurer;
+use crate::sim::{ExecResult, SocConfig, VProgram};
+use crate::tir::{Op, Schedule};
+use crate::tune::search::measure_one;
+use crate::tune::{MeasureTicket, Measurer, Prepared, PrepareTicket};
 
-/// A fixed-size measurement worker pool.
+/// Context shared by every prepare job of one batch.
+struct PrepareCtx {
+    op: Op,
+    soc: SocConfig,
+}
+
+/// One unit of worker work.
+enum Job {
+    /// Emit + feature-extract one candidate schedule.
+    Prepare { idx: usize, schedule: Schedule, ctx: Arc<PrepareCtx>, out: Arc<BatchSink<Prepared>> },
+    /// Timing-mode measure one emitted program.
+    Measure { idx: usize, program: Arc<VProgram>, soc: Arc<SocConfig>, out: Arc<BatchSink<ExecResult>> },
+}
+
+impl Job {
+    /// Execute the job. A panic inside the payload (e.g. a simulator
+    /// bounds assert on a malformed candidate) poisons the batch sink
+    /// instead of killing the worker, and is re-raised on the leader at
+    /// the rendezvous — matching the old scoped-thread pool, where a
+    /// worker panic propagated on scope join.
+    fn run(self) {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        match self {
+            Job::Prepare { idx, schedule, ctx, out } => {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    Prepared::build(&ctx.op, &schedule, &ctx.soc)
+                }));
+                match r {
+                    Ok(v) => out.put(idx, v),
+                    Err(payload) => out.poison(payload),
+                }
+            }
+            Job::Measure { idx, program, soc, out } => {
+                let r = catch_unwind(AssertUnwindSafe(|| measure_one(&soc, &program)));
+                match r {
+                    Ok(v) => out.put(idx, v),
+                    Err(payload) => out.poison(payload),
+                }
+            }
+        }
+    }
+}
+
+/// Index-addressed result collector for one batch.
+struct BatchSink<T> {
+    state: Mutex<SinkState<T>>,
+    done: Condvar,
+}
+
+struct SinkState<T> {
+    slots: Vec<Option<T>>,
+    filled: usize,
+    /// Payload of the first job panic of this batch, re-raised on the
+    /// leader at the rendezvous.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl<T> BatchSink<T> {
+    fn new(n: usize) -> Arc<BatchSink<T>> {
+        Arc::new(BatchSink {
+            state: Mutex::new(SinkState {
+                slots: (0..n).map(|_| None).collect(),
+                filled: 0,
+                panic: None,
+            }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn put(&self, idx: usize, value: T) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.slots[idx].is_none(), "slot {idx} filled twice");
+        st.slots[idx] = Some(value);
+        st.filled += 1;
+        if st.filled == st.slots.len() {
+            self.done.notify_all();
+        }
+    }
+
+    fn poison(&self, payload: Box<dyn std::any::Any + Send>) {
+        let mut st = self.state.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+        self.done.notify_all();
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    ready: Condvar,
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.ready.wait(st).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j.run(),
+            // The queue is drained before shutdown is honoured, so no
+            // submitted batch is ever abandoned.
+            None => return,
+        }
+    }
+}
+
+/// Block until `sink` is complete, stealing queued jobs meanwhile.
+/// Re-raises the first panic of any job in the batch.
+fn wait_collect<T>(shared: &PoolShared, sink: &BatchSink<T>) -> Vec<T> {
+    loop {
+        let job = shared.state.lock().unwrap().queue.pop_front();
+        if let Some(j) = job {
+            j.run();
+            continue;
+        }
+        let mut st = sink.state.lock().unwrap();
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+        if st.filled == st.slots.len() {
+            return st.slots.iter_mut().map(|s| s.take().expect("incomplete batch")).collect();
+        }
+        // Workers are finishing the last in-flight jobs. The short timeout
+        // re-polls the queue in case another leader submitted more work
+        // between our pop and this wait.
+        let _ = sink.done.wait_timeout(st, Duration::from_millis(1)).unwrap();
+    }
+}
+
+/// A fixed-size pool of persistent measurement/preparation workers.
 pub struct MeasurePool {
     workers: usize,
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl MeasurePool {
     pub fn new(workers: usize) -> MeasurePool {
-        MeasurePool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        MeasurePool { workers, shared, handles }
+    }
+
+    /// Worker count a default pool would use on this host (no threads are
+    /// spawned).
+    pub fn default_workers() -> usize {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        n.min(16)
     }
 
     /// One pool sized to the host.
     pub fn default_pool() -> MeasurePool {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        MeasurePool::new(n.min(16))
+        MeasurePool::new(MeasurePool::default_workers())
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
+
+    fn submit(&self, jobs: Vec<Job>) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.extend(jobs);
+        drop(st);
+        self.shared.ready.notify_all();
+    }
+}
+
+impl Drop for MeasurePool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 impl Measurer for MeasurePool {
     fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
-        if programs.len() <= 1 || self.workers == 1 {
+        if programs.len() <= 1 {
             return crate::tune::SerialMeasurer.measure(soc, programs);
         }
-        let results: Vec<Mutex<Option<ExecResult>>> =
-            programs.iter().map(|_| Mutex::new(None)).collect();
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(programs.len()) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= programs.len() {
-                        break;
-                    }
-                    let p = &programs[i];
-                    let mut bufs = BufStore::timing(p);
-                    let r = execute(soc, p, &mut bufs, Mode::Timing, true);
-                    *results[i].lock().unwrap() = Some(r);
-                });
-            }
-        });
-        results
+        self.begin_measure(soc, programs.iter().map(|p| Arc::new(p.clone())).collect())
+            .wait()
+    }
+
+    fn begin_prepare(&self, op: &Op, soc: &SocConfig, schedules: &[Schedule]) -> PrepareTicket {
+        let sink = BatchSink::new(schedules.len());
+        let ctx = Arc::new(PrepareCtx { op: op.clone(), soc: soc.clone() });
+        let jobs = schedules
+            .iter()
+            .enumerate()
+            .map(|(idx, s)| Job::Prepare {
+                idx,
+                schedule: s.clone(),
+                ctx: Arc::clone(&ctx),
+                out: Arc::clone(&sink),
+            })
+            .collect();
+        self.submit(jobs);
+        let shared = Arc::clone(&self.shared);
+        PrepareTicket::Pending(Box::new(move || wait_collect(&shared, &sink)))
+    }
+
+    fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
+        let sink = BatchSink::new(programs.len());
+        let soc = Arc::new(soc.clone());
+        let jobs = programs
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("worker dropped a job"))
-            .collect()
+            .enumerate()
+            .map(|(idx, program)| Job::Measure {
+                idx,
+                program,
+                soc: Arc::clone(&soc),
+                out: Arc::clone(&sink),
+            })
+            .collect();
+        self.submit(jobs);
+        let shared = Arc::clone(&self.shared);
+        MeasureTicket::Pending(Box::new(move || wait_collect(&shared, &sink)))
     }
 }
 
@@ -60,25 +279,41 @@ impl Measurer for MeasurePool {
 mod tests {
     use super::*;
     use crate::codegen::{self, Scenario};
+    use crate::intrinsics::Registry;
     use crate::tir::{DType, Op};
-    use crate::tune::SerialMeasurer;
+    use crate::tune::costmodel::HeuristicCostModel;
+    use crate::tune::{tune_op, Database, SearchConfig, SearchSpace, SerialMeasurer};
+    use crate::util::Pcg;
 
-    #[test]
-    fn parallel_matches_serial() {
-        let soc = SocConfig::saturn(256);
-        let programs: Vec<VProgram> = [16usize, 24, 32, 48, 64]
+    fn programs(sizes: &[usize]) -> Vec<VProgram> {
+        sizes
             .iter()
             .map(|&s| {
                 codegen::generate(&Op::square_matmul(s, DType::I8), &Scenario::AutovecGcc, 256)
                     .unwrap()
             })
-            .collect();
-        let serial = SerialMeasurer.measure(&soc, &programs);
-        let parallel = MeasurePool::new(4).measure(&soc, &programs);
-        assert_eq!(serial.len(), parallel.len());
-        for (s, p) in serial.iter().zip(&parallel) {
-            assert_eq!(s.cycles, p.cycles, "simulation must be deterministic across threads");
-            assert_eq!(s.trace, p.trace);
+            .collect()
+    }
+
+    /// The persistent pool must stay bit-identical to serial measurement
+    /// across repeated rounds on the same (reused) workers.
+    #[test]
+    fn parallel_matches_serial() {
+        let soc = SocConfig::saturn(256);
+        let pool = MeasurePool::new(4);
+        for round in 0..3 {
+            let programs = programs(&[16usize, 24, 32, 48, 64]);
+            let serial = SerialMeasurer.measure(&soc, &programs);
+            let parallel = pool.measure(&soc, &programs);
+            assert_eq!(serial.len(), parallel.len());
+            for (s, p) in serial.iter().zip(&parallel) {
+                assert_eq!(
+                    s.cycles, p.cycles,
+                    "round {round}: simulation must be deterministic across threads"
+                );
+                assert_eq!(s.trace, p.trace, "round {round}");
+                assert_eq!(s.cache, p.cache, "round {round}");
+            }
         }
     }
 
@@ -90,5 +325,102 @@ mod tests {
         let p = codegen::generate(&Op::square_matmul(16, DType::I8), &Scenario::ScalarOs, 256)
             .unwrap();
         assert_eq!(pool.measure(&soc, &[p]).len(), 1);
+    }
+
+    /// Worker-side prepare (emit + features) must equal the serial path.
+    #[test]
+    fn prepare_matches_inline() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let registry = Registry::build(1024);
+        let space = SearchSpace::new(&op, &registry);
+        let mut rng = Pcg::seeded(21);
+        let schedules: Vec<_> = (0..12).map(|_| space.sample(&mut rng)).collect();
+        let pool = MeasurePool::new(3);
+        let pooled = pool.begin_prepare(&op, &soc, &schedules).wait();
+        let serial = SerialMeasurer.begin_prepare(&op, &soc, &schedules).wait();
+        assert_eq!(pooled.len(), serial.len());
+        for (a, b) in pooled.iter().zip(&serial) {
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.program.code_size_bytes(), b.program.code_size_bytes());
+        }
+    }
+
+    /// Tickets may be joined out of submission order: the leader steals
+    /// whatever is still queued, so neither wait deadlocks.
+    #[test]
+    fn out_of_order_ticket_joins() {
+        let op = Op::square_matmul(48, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let space = SearchSpace::new(&op, &registry);
+        let mut rng = Pcg::seeded(4);
+        let schedules: Vec<_> = (0..8).map(|_| space.sample(&mut rng)).collect();
+        let pool = MeasurePool::new(2);
+        let prep = pool.begin_prepare(&op, &soc, &schedules);
+        let to_measure: Vec<Arc<VProgram>> =
+            programs(&[16, 24, 32]).into_iter().map(Arc::new).collect();
+        let meas = pool.begin_measure(&soc, to_measure.clone());
+        // Join the later batch first.
+        let results = meas.wait();
+        assert_eq!(results.len(), 3);
+        let prepared = prep.wait();
+        assert_eq!(prepared.len(), 8);
+        let serial = SerialMeasurer
+            .begin_measure(&soc, to_measure)
+            .wait();
+        for (a, b) in results.iter().zip(&serial) {
+            assert_eq!(a.cycles, b.cycles);
+        }
+    }
+
+    /// A panic inside a worker job (malformed candidate tripping a
+    /// simulator assert) must propagate to the leader at the rendezvous,
+    /// not deadlock the batch.
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn worker_panic_propagates_to_leader() {
+        use crate::isa::{Lmul, Sew};
+        use crate::sim::{AddrExpr, Inst, MemRef, Node};
+        let mut p = VProgram::new("oob");
+        let a = p.add_buffer("a", DType::I8, 8);
+        p.body.push(Node::Inst(Inst::VSetVl {
+            vl: 16,
+            sew: Sew::E8,
+            lmul: Lmul::M1,
+            float: false,
+        }));
+        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
+        let soc = SocConfig::saturn(256);
+        let pool = MeasurePool::new(2);
+        let _ = pool.measure(&soc, &[p.clone(), p]);
+    }
+
+    /// End-to-end determinism of the pipelined engine: tuning over the
+    /// persistent pool is bit-identical to tuning over the serial
+    /// measurer, regardless of worker count.
+    #[test]
+    fn pipelined_pool_matches_serial() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let registry = Registry::build(1024);
+        let config = SearchConfig { trials: 40, seed: 9, ..Default::default() };
+        let run = |measurer: &dyn crate::tune::Measurer| {
+            let mut model = HeuristicCostModel;
+            let mut db = Database::new();
+            let out =
+                tune_op(&op, &soc, &registry, &mut model, measurer, &mut db, &config).unwrap();
+            let cycles: Vec<f64> = db.records().iter().map(|r| r.cycles).collect();
+            (out.best.cycles, out.best.schedule.clone(), out.history.clone(), cycles)
+        };
+        let serial = run(&SerialMeasurer);
+        for workers in [1usize, 4] {
+            let pool = MeasurePool::new(workers);
+            let pooled = run(&pool);
+            assert_eq!(serial.0, pooled.0, "{workers} workers: best cycles");
+            assert_eq!(serial.1, pooled.1, "{workers} workers: best schedule");
+            assert_eq!(serial.2, pooled.2, "{workers} workers: history");
+            assert_eq!(serial.3, pooled.3, "{workers} workers: full record stream");
+        }
     }
 }

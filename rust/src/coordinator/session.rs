@@ -31,7 +31,7 @@ impl Default for SessionOptions {
         SessionOptions {
             seed: 42,
             use_mlp: true,
-            workers: MeasurePool::default_pool().workers(),
+            workers: MeasurePool::default_workers(),
             trials_per_op: 100,
             vl_ladder: true,
             j_one: true,

@@ -5,10 +5,29 @@
 //! process — as compiled XLA executables, never as python. The tuning hot
 //! path calls [`engine::Engine::execute`] for cost-model scoring/training;
 //! the validation tests call it for the numerics oracles.
+//!
+//! The real engine needs the `xla` crate (PJRT bindings), which is not on
+//! crates.io and cannot resolve in the offline build image — so it is
+//! gated behind the `pjrt` cargo feature, and the dependency itself is
+//! deliberately undeclared (even optional dependencies must resolve).
+//! Enabling the feature therefore requires BOTH adding an `xla`
+//! dependency entry pointing at a local/vendored xla-rs checkout (see the
+//! note in Cargo.toml) AND building with `--features pjrt`. Without the
+//! feature a [`stub`] with the same public surface is compiled instead:
+//! `Engine::load` fails cleanly and every caller falls back to the
+//! heuristic cost model.
 
+#[cfg(feature = "pjrt")]
 pub mod costmodel;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{costmodel, engine};
 
 pub use costmodel::MlpRuntime;
 pub use engine::{artifacts_dir, Engine};

@@ -1,0 +1,119 @@
+//! Compile-time stub for the PJRT runtime, used when the `pjrt` cargo
+//! feature is off (the default — the offline build image has no XLA
+//! toolchain, so the `xla` dependency cannot resolve).
+//!
+//! Mirrors the public surface the rest of the crate touches: every
+//! constructor fails cleanly with an explanatory error, so `Session` and
+//! `MlpCostModel::from_artifacts` fall back to the heuristic cost model
+//! exactly as they do when `make artifacts` has not run. The PJRT-backed
+//! integration tests (`tests/integration_runtime.rs`) are gated out of the
+//! build via `required-features = ["pjrt"]` in Cargo.toml.
+
+pub mod engine {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    /// Tensor spec from the manifest.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct TensorSpec {
+        pub shape: Vec<usize>,
+        pub dtype: String,
+    }
+
+    /// One AOT artifact entry.
+    #[derive(Clone, Debug)]
+    pub struct ArtifactInfo {
+        pub name: String,
+        pub file: String,
+        pub inputs: Vec<TensorSpec>,
+        pub outputs: Vec<TensorSpec>,
+    }
+
+    /// Manifest-level constants shared with python (model.py).
+    #[derive(Clone, Debug)]
+    pub struct ManifestMeta {
+        pub feature_dim: usize,
+        pub score_batch: usize,
+        pub train_batch: usize,
+        pub hidden: usize,
+        pub val_size: usize,
+        pub tile_vl: usize,
+        pub tile_j: usize,
+    }
+
+    /// Default artifacts directory: `$RVV_TUNE_ARTIFACTS` or
+    /// `<repo>/artifacts` (resolved relative to the crate root so tests
+    /// work from any cwd).
+    pub fn artifacts_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("RVV_TUNE_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// True when `make artifacts` has produced a manifest.
+    pub fn artifacts_available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// The PJRT engine (stub: never constructible).
+    pub struct Engine {
+        pub meta: ManifestMeta,
+        _private: (),
+    }
+
+    impl Engine {
+        pub fn load(dir: &Path) -> Result<Engine> {
+            let _ = dir;
+            bail!(
+                "built without the `pjrt` cargo feature: PJRT/XLA unavailable \
+                 in this image; tuning uses the heuristic cost model"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("stub Engine cannot be constructed")
+        }
+
+        pub fn artifact(&self, _name: &str) -> Option<&ArtifactInfo> {
+            unreachable!("stub Engine cannot be constructed")
+        }
+
+        pub fn artifact_names(&self) -> Vec<&str> {
+            unreachable!("stub Engine cannot be constructed")
+        }
+    }
+}
+
+pub mod costmodel {
+    use anyhow::{bail, Result};
+
+    use super::engine::Engine;
+
+    /// Parameters + momenta of the MLP (stub: never constructible).
+    pub struct MlpRuntime {
+        pub feature_dim: usize,
+        pub score_batch: usize,
+        pub train_batch: usize,
+    }
+
+    impl MlpRuntime {
+        pub fn new(_engine: &Engine, _seed: i32) -> Result<MlpRuntime> {
+            bail!("built without the `pjrt` cargo feature")
+        }
+
+        pub fn score(&self, _engine: &Engine, _feats: &[Vec<f32>]) -> Result<Vec<f32>> {
+            unreachable!("stub MlpRuntime cannot be constructed")
+        }
+
+        pub fn train_step(
+            &mut self,
+            _engine: &Engine,
+            _feats: &[Vec<f32>],
+            _labels: &[f32],
+        ) -> Result<f32> {
+            unreachable!("stub MlpRuntime cannot be constructed")
+        }
+    }
+}

@@ -383,17 +383,13 @@ fn touch_stream(
         buf_lens[s.buf]
     );
     let start = bases[s.buf] + first as u64 * esize;
+    // Unit-stride streams probe once per line via `access_range`; all other
+    // strides take the coalesced line-run path (`probe_run`), bit-identical
+    // to per-element probing but with one tag lookup per line-run.
     let raw = if s.stride == 1 {
         cache.access_range(start, s.len as u64 * esize)
     } else {
-        let mut raw = 0.0;
-        let step = s.stride * esize as i64;
-        let mut addr = start as i64;
-        for _ in 0..s.len {
-            raw += cache.access(addr as u64);
-            addr += step;
-        }
-        raw
+        cache.probe_run(start, s.stride * esize as i64, s.len as u64)
     };
     vecunit::miss_cost(soc, raw)
 }

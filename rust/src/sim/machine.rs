@@ -346,19 +346,14 @@ impl<'a> Machine<'a> {
             mem.buf
         );
         let start_addr = self.bases[mem.buf] + first as u64 * esize;
-        if mem.stride == 1 {
-            let raw = self.cache.access_range(start_addr, vl as u64 * esize);
-            vecunit::miss_cost(self.soc, raw)
+        let raw = if mem.stride == 1 {
+            self.cache.access_range(start_addr, vl as u64 * esize)
         } else {
-            let mut raw = 0.0;
-            let stride_bytes = mem.stride * esize as i64;
-            let mut addr = start_addr as i64;
-            for _ in 0..vl {
-                raw += self.cache.access(addr as u64);
-                addr += stride_bytes;
-            }
-            vecunit::miss_cost(self.soc, raw)
-        }
+            // Coalesced line-run probing — bit-identical to the old
+            // per-element loop (see Cache::probe_run).
+            self.cache.probe_run(start_addr, mem.stride * esize as i64, vl as u64)
+        };
+        vecunit::miss_cost(self.soc, raw)
     }
 
     fn exec_inst(&mut self, inst: &Inst, bufs: &mut BufStore) {
@@ -742,19 +737,17 @@ impl<'a> Machine<'a> {
 
     /// Cache-touch an element stream (scalar loop accesses).
     fn stream_touch(&mut self, mem: &MemRef, len: u32) {
-        let esize = self.dtypes[mem.buf].bytes() as u64;
-        if mem.stride == 1 {
-            let (_, addr) = self.elem_addr(mem, 0);
-            let raw = self.cache.access_range(addr, len as u64 * esize);
-            self.cycles += vecunit::miss_cost(self.soc, raw);
-        } else {
-            let mut raw = 0.0;
-            for i in 0..len as i64 {
-                let (_, addr) = self.elem_addr(mem, i);
-                raw += self.cache.access(addr);
-            }
-            self.cycles += vecunit::miss_cost(self.soc, raw);
+        if len == 0 {
+            return;
         }
+        let esize = self.dtypes[mem.buf].bytes() as u64;
+        let (_, addr) = self.elem_addr(mem, 0);
+        let raw = if mem.stride == 1 {
+            self.cache.access_range(addr, len as u64 * esize)
+        } else {
+            self.cache.probe_run(addr, mem.stride * esize as i64, len as u64)
+        };
+        self.cycles += vecunit::miss_cost(self.soc, raw);
     }
 
     fn touch_one(&mut self, mem: &MemRef) {

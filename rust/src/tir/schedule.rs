@@ -10,6 +10,18 @@
 
 use crate::util::Json;
 
+/// FNV-1a mix of one 64-bit word into a running hash.
+#[inline]
+fn fnv1a_mix(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
 /// The tensor-intrinsic variant chosen for the inner computation
 /// (one entry of the registry in `intrinsics/`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -113,6 +125,37 @@ impl Schedule {
         }
     }
 
+    /// Structural 64-bit hash over the decision fields — the tuner's dedup
+    /// key. Replaces string-keyed `describe()` sets and linear
+    /// `Database::contains` scans on the search hot path: one u64 per
+    /// candidate, no allocation. Schedules compare equal iff their hashes
+    /// were computed from the same decisions (modulo the usual 2^-64
+    /// collision odds, harmless for dedup).
+    pub fn struct_hash(&self) -> u64 {
+        match self {
+            Schedule::Matmul(s) => {
+                let mut h = fnv1a_mix(FNV_OFFSET, 1);
+                h = fnv1a_mix(h, s.intrin.vl as u64);
+                h = fnv1a_mix(h, s.intrin.j as u64);
+                h = fnv1a_mix(h, s.intrin.lmul as u64);
+                h = fnv1a_mix(h, s.mi as u64);
+                h = fnv1a_mix(h, s.order as u64);
+                h = fnv1a_mix(h, s.unroll as u64);
+                fnv1a_mix(h, s.transpose as u64)
+            }
+            Schedule::DwConv(s) => {
+                let mut h = fnv1a_mix(FNV_OFFSET, 2);
+                h = fnv1a_mix(h, s.vl as u64);
+                fnv1a_mix(h, s.unroll_taps as u64)
+            }
+            Schedule::Eltwise(s) => {
+                let mut h = fnv1a_mix(FNV_OFFSET, 3);
+                h = fnv1a_mix(h, s.vl as u64);
+                fnv1a_mix(h, s.unroll as u64)
+            }
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             Schedule::Matmul(s) => Json::obj(vec![
@@ -203,5 +246,41 @@ mod tests {
     #[test]
     fn describe_is_compact() {
         assert!(sample_matmul().describe().contains("vl=256"));
+    }
+
+    #[test]
+    fn struct_hash_distinguishes_decisions() {
+        let base = sample_matmul();
+        assert_eq!(base.struct_hash(), sample_matmul().struct_hash());
+        let mut variants = Vec::new();
+        if let Schedule::Matmul(m) = &base {
+            let muts: [fn(&mut MatmulSchedule); 7] = [
+                |m| m.intrin.vl = 128,
+                |m| m.intrin.j = 16,
+                |m| m.intrin.lmul = 4,
+                |m| m.mi = 8,
+                |m| m.order = LoopOrder::KMN,
+                |m| m.unroll = 4,
+                |m| m.transpose = false,
+            ];
+            for (i, f) in muts.iter().enumerate() {
+                let mut v = m.clone();
+                f(&mut v);
+                let h = Schedule::Matmul(v).struct_hash();
+                assert_ne!(h, base.struct_hash(), "mutation {i} must change the hash");
+                variants.push(h);
+            }
+        }
+        variants.sort_unstable();
+        variants.dedup();
+        assert_eq!(variants.len(), 7, "all single-field variants distinct");
+    }
+
+    #[test]
+    fn struct_hash_distinguishes_kinds() {
+        // Same raw numbers under different schedule kinds must not collide.
+        let dw = Schedule::DwConv(DwConvSchedule { vl: 64, unroll_taps: false });
+        let ew = Schedule::Eltwise(EltwiseSchedule { vl: 64, unroll: 0 });
+        assert_ne!(dw.struct_hash(), ew.struct_hash());
     }
 }

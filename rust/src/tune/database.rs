@@ -92,6 +92,10 @@ impl Database {
     }
 
     /// Has this exact schedule already been measured for (op, soc)?
+    ///
+    /// Linear scan — fine for offline queries (reports, CLI inspection).
+    /// The search hot path does NOT use this: `tune_op` dedups via a
+    /// `Schedule::struct_hash` set seeded from `records()`.
     pub fn contains(&self, op_key: &str, soc: &str, schedule: &Schedule) -> bool {
         self.records
             .iter()

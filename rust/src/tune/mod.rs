@@ -19,6 +19,9 @@ pub mod task;
 pub use costmodel::{CostModel, HeuristicCostModel, MlpCostModel, RandomCostModel};
 pub use database::{Database, TuneRecord};
 pub use features::FEATURE_DIM;
-pub use search::{tune_op, Measurer, SearchConfig, SerialMeasurer, TuneOutcome};
+pub use search::{
+    tune_op, MeasureTicket, Measurer, Prepared, PrepareTicket, SearchConfig, SerialMeasurer,
+    TuneOutcome,
+};
 pub use space::SearchSpace;
 pub use task::{allocate_trials, extract_tasks, TuneTask};

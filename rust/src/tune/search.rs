@@ -2,6 +2,24 @@
 //! loop (§II of the paper): sample/mutate candidates, rank them with the
 //! cost model, *measure* only the top-k on the target, feed measurements
 //! back into the model, repeat until the trial budget is spent.
+//!
+//! The loop is a **one-round software pipeline** over an asynchronous
+//! [`Measurer`]: candidate generation + preparation (codegen + feature
+//! extraction) for round N+1 is submitted *before* the leader blocks on
+//! round N's measurements, so a parallel backend (the coordinator's
+//! persistent [`crate::coordinator::MeasurePool`]) overlaps the two hot
+//! sections instead of running them serially on the leader thread. The
+//! pipeline is deterministic: every schedule decision is drawn from the
+//! leader's PRNG and results rendezvous by index, so any backend — serial
+//! or N workers — produces bit-identical outcomes (asserted by
+//! `pipelined_pool_matches_serial` in `coordinator::pool`). The only
+//! semantic difference from a fully serial loop is that mutation parents
+//! for round N+1 come from the elite set as of round N-1 (round N is still
+//! in flight when N+1 is generated) — standard asynchronous evolutionary
+//! search.
+
+use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::codegen;
 use crate::sim::{ExecResult, SocConfig, VProgram};
@@ -13,24 +31,93 @@ use super::database::{Database, TuneRecord};
 use super::features;
 use super::space::SearchSpace;
 
-/// Measurement backend (serial here; the coordinator provides a parallel
-/// leader/worker pool).
-pub trait Measurer {
-    fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult>;
+/// One candidate after the prepare stage: emitted program + cost-model
+/// features. The program is `Arc`-shared so the measure stage never clones
+/// program bodies (they are moved to workers by reference count).
+pub struct Prepared {
+    pub program: Arc<VProgram>,
+    pub features: Vec<f32>,
 }
 
-/// Single-threaded measurer.
+impl Prepared {
+    /// The canonical per-candidate prepare chain (emit + feature
+    /// extraction). Every backend — the serial default and the pool's
+    /// workers — MUST go through this one definition: the engine's
+    /// bit-identical serial/pool guarantee depends on it.
+    pub fn build(op: &Op, schedule: &Schedule, soc: &SocConfig) -> Prepared {
+        let program = codegen::ours::emit(op, schedule, soc.vlen);
+        let features = features::extract(op, schedule, &program, soc);
+        Prepared { program: Arc::new(program), features }
+    }
+}
+
+/// The canonical single-candidate timing measurement (same contract as
+/// [`Prepared::build`]: all backends share this definition).
+pub fn measure_one(soc: &SocConfig, program: &VProgram) -> ExecResult {
+    let mut bufs = crate::sim::BufStore::timing(program);
+    crate::sim::execute(soc, program, &mut bufs, crate::sim::Mode::Timing, true)
+}
+
+/// Handle for an in-flight prepare batch. `Ready` is the synchronous
+/// backend; `Pending` joins a parallel backend at the rendezvous.
+pub enum PrepareTicket {
+    Ready(Vec<Prepared>),
+    Pending(Box<dyn FnOnce() -> Vec<Prepared> + Send>),
+}
+
+impl PrepareTicket {
+    /// Block until the batch is complete (index order preserved).
+    pub fn wait(self) -> Vec<Prepared> {
+        match self {
+            PrepareTicket::Ready(v) => v,
+            PrepareTicket::Pending(join) => join(),
+        }
+    }
+}
+
+/// Handle for an in-flight measurement batch.
+pub enum MeasureTicket {
+    Ready(Vec<ExecResult>),
+    Pending(Box<dyn FnOnce() -> Vec<ExecResult> + Send>),
+}
+
+impl MeasureTicket {
+    /// Block until the batch is complete (index order preserved).
+    pub fn wait(self) -> Vec<ExecResult> {
+        match self {
+            MeasureTicket::Ready(v) => v,
+            MeasureTicket::Pending(join) => join(),
+        }
+    }
+}
+
+/// Measurement backend. The `begin_*` pair is the pipelined API used by
+/// [`tune_op`]; the default implementations run everything eagerly on the
+/// caller's thread, so a plain backend only has to provide `measure`.
+/// The coordinator's persistent pool overrides both to fan candidates out
+/// to long-lived workers and returns `Pending` tickets.
+pub trait Measurer {
+    /// Batch-measure programs in timing mode (synchronous compatibility
+    /// API, used by the figure harnesses and benches).
+    fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult>;
+
+    /// Start codegen + feature extraction for a batch of schedules.
+    fn begin_prepare(&self, op: &Op, soc: &SocConfig, schedules: &[Schedule]) -> PrepareTicket {
+        PrepareTicket::Ready(schedules.iter().map(|s| Prepared::build(op, s, soc)).collect())
+    }
+
+    /// Start timing-mode measurement of already-emitted programs.
+    fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
+        MeasureTicket::Ready(programs.iter().map(|p| measure_one(soc, p)).collect())
+    }
+}
+
+/// Single-threaded measurer (the default `begin_*` path).
 pub struct SerialMeasurer;
 
 impl Measurer for SerialMeasurer {
     fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
-        programs
-            .iter()
-            .map(|p| {
-                let mut bufs = crate::sim::BufStore::timing(p);
-                crate::sim::execute(soc, p, &mut bufs, crate::sim::Mode::Timing, true)
-            })
-            .collect()
+        programs.iter().map(|p| measure_one(soc, p)).collect()
     }
 }
 
@@ -78,9 +165,24 @@ pub struct TuneOutcome {
     pub history: Vec<f64>,
 }
 
+/// One measured round still in flight while the next round is generated.
+struct InFlight {
+    ticket: MeasureTicket,
+    schedules: Vec<Schedule>,
+    feats: Vec<Vec<f32>>,
+}
+
 /// Tune `op` on `soc`. Returns None when no intrinsic variant matches the
 /// operator (the caller falls back to the compiler's vectorization, as
 /// TVM does for non-tensorizable blocks).
+///
+/// Per pipeline stage (one loop iteration = one round):
+/// 1. generate round N's candidates (dedup on [`Schedule::struct_hash`])
+///    and submit their prepare jobs — these overlap round N-1's
+///    measurements on a parallel backend;
+/// 2. drain round N-1's measurements, record them, refit the model;
+/// 3. rendezvous on round N's prepared features, `score()` the batch once,
+///    pick the epsilon-greedy top-k, submit their measurements.
 pub fn tune_op(
     op: &Op,
     soc: &SocConfig,
@@ -97,49 +199,90 @@ pub fn tune_op(
     let mut rng = Pcg::seeded(config.seed);
     let op_key = op.key();
     let mut measured = 0usize;
+    let mut queued = 0usize;
     let mut elites: Vec<(Schedule, f64)> = Vec::new();
     let mut history = Vec::new();
+    // Every schedule ever selected for measurement, as structural hashes —
+    // replaces the string-keyed `describe()` set and the linear
+    // `Database::contains` scan per candidate. Seeded from prior records so
+    // a reused database still dedups across tuning runs.
+    let mut taken: HashSet<u64> = db
+        .records()
+        .iter()
+        .filter(|r| r.op_key == op_key && r.soc == soc.name)
+        .map(|r| r.schedule.struct_hash())
+        .collect();
+    let mut inflight: Option<InFlight> = None;
 
-    while measured < config.trials {
-        // --- candidate generation
-        let mut cands: Vec<Schedule> = Vec::new();
-        let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
-        let mut attempts = 0;
-        while cands.len() < config.population && attempts < config.population * 8 {
-            attempts += 1;
-            let s = if !elites.is_empty() && rng.chance(config.mutation_prob) {
-                let parent = &elites[rng.below(elites.len() as u64) as usize].0;
-                space.mutate(parent, &mut rng)
-            } else {
-                space.sample(&mut rng)
-            };
-            let d = s.describe();
-            if seen.contains(&d) || db.contains(&op_key, &soc.name, &s) {
-                continue;
+    loop {
+        // --- stage 1: generate candidates, kick off prepare (overlaps the
+        // in-flight measurements of the previous round)
+        let round = if queued < config.trials {
+            let mut cands: Vec<Schedule> = Vec::new();
+            let mut round_seen: HashSet<u64> = HashSet::new();
+            let mut attempts = 0;
+            while cands.len() < config.population && attempts < config.population * 8 {
+                attempts += 1;
+                let s = if !elites.is_empty() && rng.chance(config.mutation_prob) {
+                    let parent = &elites[rng.below(elites.len() as u64) as usize].0;
+                    space.mutate(parent, &mut rng)
+                } else {
+                    space.sample(&mut rng)
+                };
+                let h = s.struct_hash();
+                if taken.contains(&h) || !round_seen.insert(h) {
+                    continue;
+                }
+                cands.push(s);
             }
-            seen.insert(d);
-            cands.push(s);
-        }
-        if cands.is_empty() {
-            break; // space exhausted
+            if cands.is_empty() {
+                None // space exhausted
+            } else {
+                let ticket = measurer.begin_prepare(op, soc, &cands);
+                Some((cands, ticket))
+            }
+        } else {
+            None // budget spent
+        };
+
+        // --- stage 2: drain the previous round's measurements; learn
+        if let Some(fl) = inflight.take() {
+            let results = fl.ticket.wait();
+            let mut upd_feats = Vec::with_capacity(results.len());
+            let mut upd_labels = Vec::with_capacity(results.len());
+            for ((schedule, feat), res) in
+                fl.schedules.into_iter().zip(fl.feats).zip(&results)
+            {
+                db.add(TuneRecord {
+                    op_key: op_key.clone(),
+                    soc: soc.name.clone(),
+                    schedule: schedule.clone(),
+                    cycles: res.cycles,
+                    macs: op.macs(),
+                    trial: measured,
+                });
+                measured += 1;
+                upd_feats.push(feat);
+                upd_labels.push((op.macs() as f64 / res.cycles.max(1.0)).ln());
+                elites.push((schedule, res.cycles));
+            }
+            elites.sort_by(|a, b| a.1.total_cmp(&b.1));
+            elites.truncate(config.elites);
+            model.update(&upd_feats, &upd_labels);
+            history.push(elites[0].1);
         }
 
-        // --- build programs + features, rank with the cost model
-        let programs: Vec<VProgram> = cands
-            .iter()
-            .map(|s| codegen::ours::emit(op, s, soc.vlen))
-            .collect();
-        let feats: Vec<Vec<f32>> = cands
-            .iter()
-            .zip(&programs)
-            .map(|(s, p)| features::extract(op, s, p, soc))
-            .collect();
+        // --- stage 3: score rendezvous, choose top-k, kick off measurement
+        let Some((cands, pticket)) = round else { break };
+        let mut prepared = pticket.wait();
+        let mut feats: Vec<Vec<f32>> =
+            prepared.iter_mut().map(|p| std::mem::take(&mut p.features)).collect();
         let scores = model.score(&feats);
         let mut order: Vec<usize> = (0..cands.len()).collect();
         order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
         let k = config
             .measure_per_round
-            .min(config.trials - measured)
+            .min(config.trials - queued)
             .min(order.len());
         // Epsilon-greedy batch: mostly the model's top ranks, plus a few
         // random picks from the remainder so a mislearned model cannot
@@ -150,33 +293,20 @@ pub fn tune_op(
         rng.shuffle(&mut rest);
         chosen.extend(rest.into_iter().take(k - k_greedy));
 
-        // --- measure the top-k
-        let to_measure: Vec<VProgram> =
-            chosen.iter().map(|&i| programs[i].clone()).collect();
-        let results = measurer.measure(soc, &to_measure);
-
-        // --- record + learn
-        let mut upd_feats = Vec::with_capacity(k);
-        let mut upd_labels = Vec::with_capacity(k);
-        for (&i, res) in chosen.iter().zip(&results) {
-            let rec = TuneRecord {
-                op_key: op_key.clone(),
-                soc: soc.name.clone(),
-                schedule: cands[i].clone(),
-                cycles: res.cycles,
-                macs: op.macs(),
-                trial: measured,
-            };
-            measured += 1;
-            upd_feats.push(feats[i].clone());
-            upd_labels.push((op.macs() as f64 / res.cycles.max(1.0)).ln());
-            elites.push((cands[i].clone(), res.cycles));
-            db.add(rec);
+        for &i in &chosen {
+            taken.insert(cands[i].struct_hash());
         }
-        elites.sort_by(|a, b| a.1.total_cmp(&b.1));
-        elites.truncate(config.elites);
-        model.update(&upd_feats, &upd_labels);
-        history.push(elites[0].1);
+        let programs: Vec<Arc<VProgram>> =
+            chosen.iter().map(|&i| Arc::clone(&prepared[i].program)).collect();
+        let ticket = measurer.begin_measure(soc, programs);
+        queued += chosen.len();
+        inflight = Some(InFlight {
+            ticket,
+            schedules: chosen.iter().map(|&i| cands[i].clone()).collect(),
+            // `feats` is dead after this point; move the chosen vectors out
+            // (indices in `chosen` are distinct).
+            feats: chosen.iter().map(|&i| std::mem::take(&mut feats[i])).collect(),
+        });
     }
 
     db.best(&op_key, &soc.name).map(|best| TuneOutcome {
@@ -224,6 +354,44 @@ mod tests {
         let b = run(32, 7);
         assert_eq!(a.best.cycles, b.best.cycles);
         assert_eq!(a.best.schedule, b.best.schedule);
+        assert_eq!(a.history, b.history);
+    }
+
+    #[test]
+    fn never_measures_a_schedule_twice() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        let config = SearchConfig { trials: 48, seed: 11, ..Default::default() };
+        tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
+        let mut hashes: Vec<u64> =
+            db.records().iter().map(|r| r.schedule.struct_hash()).collect();
+        let n = hashes.len();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), n, "duplicate schedule measured");
+    }
+
+    #[test]
+    fn reused_database_is_not_remeasured() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        let config = SearchConfig { trials: 16, seed: 5, ..Default::default() };
+        tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
+        // Second run over the same database: the previously measured
+        // schedules are excluded via their structural hashes.
+        tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
+        let mut hashes: Vec<u64> =
+            db.records().iter().map(|r| r.schedule.struct_hash()).collect();
+        let n = hashes.len();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), n, "second run re-measured a known schedule");
     }
 
     #[test]

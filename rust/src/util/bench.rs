@@ -5,9 +5,12 @@
 //! warmup phase, then samples wall-clock time over batched iterations and
 //! reports mean / median / p95 in adaptive units.
 
+use std::collections::BTreeMap;
 use std::hint::black_box as std_black_box;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// Re-export of `std::hint::black_box` so benches don't need the import.
@@ -39,6 +42,28 @@ impl Default for BenchOpts {
 /// Quick profile for heavy end-to-end benches.
 pub fn quick() -> BenchOpts {
     BenchOpts { warmup: Duration::from_millis(50), samples: 5, sample_time: Duration::from_millis(20) }
+}
+
+/// Smoke profile for CI: a few milliseconds per measurement, just enough
+/// to catch order-of-magnitude regressions and exercise the code paths.
+pub fn smoke() -> BenchOpts {
+    BenchOpts { warmup: Duration::from_millis(10), samples: 3, sample_time: Duration::from_millis(5) }
+}
+
+/// True when `BENCH_QUICK` is set (and not "0") — CI smoke mode. Benches
+/// should shrink their workloads and use [`smoke`]-sized opts.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Default opts honouring [`quick_mode`].
+pub fn opts() -> BenchOpts {
+    if quick_mode() { smoke() } else { BenchOpts::default() }
+}
+
+/// [`quick`] opts honouring [`quick_mode`].
+pub fn quick_opts() -> BenchOpts {
+    if quick_mode() { smoke() } else { quick() }
 }
 
 /// Result of one benchmark.
@@ -113,6 +138,77 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable collector for one bench target: accumulates
+/// [`BenchResult`]s plus free-form scalar metrics (e.g. trials/s,
+/// speedup ratios) and writes `BENCH_<name>.json`, so the perf trajectory
+/// is tracked across PRs (EXPERIMENTS.md §Perf).
+pub struct BenchReport {
+    name: String,
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(name: impl Into<String>) -> BenchReport {
+        BenchReport { name: name.into(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record a harness measurement.
+    pub fn add(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    /// Record a derived scalar (higher-level than a single timing).
+    pub fn metric(&mut self, key: impl Into<String>, value: f64) {
+        self.metrics.push((key.into(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(&self.name)),
+            ("quick", Json::Bool(quick_mode())),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(&r.name)),
+                                ("mean_ns", Json::Num(r.mean_ns)),
+                                ("median_ns", Json::Num(r.median_ns)),
+                                ("p95_ns", Json::Num(r.p95_ns)),
+                                ("iters_per_sample", Json::num(r.iters_per_sample as f64)),
+                                ("throughput_per_sec", Json::Num(r.throughput_per_sec())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect::<BTreeMap<String, Json>>(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_JSON_DIR` (default: the
+    /// working directory, i.e. `rust/` under `cargo bench`). Returns the
+    /// path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_pretty())?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +230,31 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.median_ns > 0.0);
         assert!(r.p95_ns >= r.median_ns * 0.5);
+    }
+
+    #[test]
+    fn report_serializes_results_and_metrics() {
+        let mut rep = BenchReport::new("unit");
+        rep.add(&BenchResult {
+            name: "x".into(),
+            mean_ns: 1000.0,
+            median_ns: 900.0,
+            p95_ns: 1500.0,
+            iters_per_sample: 7,
+        });
+        rep.metric("speedup", 2.5);
+        let j = rep.to_json();
+        assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("unit"));
+        let results = j.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("mean_ns").and_then(|n| n.as_f64()), Some(1000.0));
+        assert!(results[0].get("throughput_per_sec").and_then(|n| n.as_f64()).unwrap() > 0.0);
+        assert_eq!(
+            j.get("metrics").and_then(|m| m.get("speedup")).and_then(|n| n.as_f64()),
+            Some(2.5)
+        );
+        // Round-trips through the in-tree parser.
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get("bench").and_then(|b| b.as_str()), Some("unit"));
     }
 }
