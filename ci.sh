@@ -11,6 +11,13 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== lint: cargo clippy --all-targets -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy component not installed in this toolchain; lint skipped"
+fi
+
 echo "== perf smoke: BENCH_QUICK=1 perf_hotpath =="
 BENCH_QUICK=1 cargo bench --bench perf_hotpath
 

@@ -7,7 +7,7 @@
 //! ```
 
 use rvv_tune::codegen::Scenario;
-use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::coordinator::{MeasureRequest, ServiceOptions, Target, TuneRequest, TuneService};
 use rvv_tune::isa::InstrGroup;
 use rvv_tune::sim::{cache::CacheParams, SocConfig};
 use rvv_tune::tir::{DType, Op, Requant};
@@ -48,33 +48,40 @@ fn main() {
         requant: Some(Requant::default_for_tests()),
     };
 
-    let mut session = Session::new(soc, SessionOptions::default());
-    let outcome = session.tune(&op, 100).expect("tunable");
+    // The registry is built for the custom VLEN automatically.
+    let service = TuneService::new(Target::new(soc), ServiceOptions::default());
+    let report = service.tune(&TuneRequest::new(op.clone(), 100));
+    let outcome = report.outcome.as_ref().expect("tunable");
     println!("custom SoC best schedule: {}", outcome.best.schedule.describe());
     println!(
         "latency: {:.1} us @ 50 MHz ({} cycles)",
-        session.soc.cycles_to_us(outcome.best.cycles),
+        service.soc().cycles_to_us(outcome.best.cycles),
         outcome.best.cycles
     );
 
     // Trace inspection: where do the dynamic instructions go?
-    let r = session
-        .measure(&op, &Scenario::Ours(outcome.best.schedule.clone()))
+    let r = service
+        .measure(&MeasureRequest::new(op.clone(), report.scenario.clone()))
         .unwrap();
     println!("\ninstruction trace:");
     for g in InstrGroup::ALL {
         let n = r.result.trace.get(g);
         if n > 0 {
-            println!("  {:<10} {:>9} ({:.1}% of vector)", g.name(), n, r.result.trace.vector_share(g) * 100.0);
+            println!(
+                "  {:<10} {:>9} ({:.1}% of vector)",
+                g.name(),
+                n,
+                r.result.trace.vector_share(g) * 100.0
+            );
         }
     }
     println!("code size: {} B", r.code_size_bytes);
 
     // Compare against the fixed-schedule library on this unusual SoC.
-    let mu = session.measure(&op, &Scenario::MuRiscvNn).unwrap();
+    let mu = service.measure(&MeasureRequest::new(op, Scenario::MuRiscvNn)).unwrap();
     println!(
         "\nmuRISCV-NN on the same SoC: {:.1} us  (tuned is {:.2}x faster)",
-        session.soc.cycles_to_us(mu.result.cycles),
+        service.soc().cycles_to_us(mu.result.cycles),
         mu.result.cycles / r.result.cycles
     );
 }

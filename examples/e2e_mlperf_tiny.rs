@@ -9,6 +9,9 @@
 //! * L3: probabilistic schedule sampling + evolutionary search + the
 //!   simulated RVV SoC measurement substrate (parallel worker pool).
 //!
+//! The four networks run concurrently, one `TuneService` each (the
+//! share-by-`&self` API makes the fan-out a plain `thread::scope`).
+//!
 //! Reports the paper's headline metric — mean latency improvement vs the
 //! GCC autovectorization and vs muRISCV-NN — plus per-network latency and
 //! the tuning cost. Results are recorded in EXPERIMENTS.md.
@@ -20,7 +23,9 @@
 use std::time::Instant;
 
 use rvv_tune::codegen::Scenario;
-use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::coordinator::{
+    Fixed, MeasurePool, ServiceOptions, Target, TuneService, TunedWithFallback,
+};
 use rvv_tune::sim::SocConfig;
 use rvv_tune::tir::DType;
 use rvv_tune::util::stats;
@@ -29,62 +34,92 @@ use rvv_tune::workloads::models;
 const MLPERF_TINY: [&str; 4] =
     ["anomaly-detection", "keyword-spotting", "image-classification", "visual-wake-words"];
 
+struct NetworkRun {
+    name: &'static str,
+    base: f64,
+    o3: f64,
+    mu: f64,
+    ours: f64,
+    candidates: usize,
+}
+
+fn run_network(name: &'static str, quick: bool, workers: usize) -> NetworkRun {
+    let model = models::by_name(name, DType::I8).unwrap();
+    let service = TuneService::new(
+        Target::new(SocConfig::saturn(1024)),
+        ServiceOptions { workers, ..Default::default() },
+    );
+
+    // Baselines.
+    let base = service
+        .measure_network(&model.layers, &Fixed(Scenario::ScalarOs))
+        .unwrap()
+        .cycles;
+    let o3 = service
+        .measure_network(&model.layers, &Fixed(Scenario::AutovecGcc))
+        .unwrap()
+        .cycles;
+    let mu = service
+        .measure_network(&model.layers, &Fixed(Scenario::MuRiscvNn))
+        .unwrap()
+        .cycles;
+
+    // Ours: tune every distinct layer shape, then run the network with
+    // the best schedules (TunedWithFallback reuses the database bests).
+    let trials = if quick { 30 } else { model.default_trials };
+    let min_per = if quick { 3 } else { 10 };
+    let outcomes = service.tune_network(&model.layers, trials, min_per);
+    let candidates = outcomes
+        .iter()
+        .filter_map(|(_, o)| o.as_ref().map(|o| o.trials_measured))
+        .sum::<usize>();
+    let ours = service
+        .measure_network(&model.layers, &TunedWithFallback { trials: min_per })
+        .unwrap()
+        .cycles;
+    NetworkRun { name, base, o3, mu, ours, candidates }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let mut impr_gcc = Vec::new();
-    let mut impr_mu = Vec::new();
-    let mut total_candidates = 0usize;
     let wall = Instant::now();
 
-    println!("MLPerf-Tiny end-to-end on saturn-1024 (int8, {} budgets)\n", if quick { "quick" } else { "paper" });
+    println!(
+        "MLPerf-Tiny end-to-end on saturn-1024 (int8, {} budgets, 4 networks in parallel)\n",
+        if quick { "quick" } else { "paper" }
+    );
     println!(
         "{:<22} {:>12} {:>12} {:>12} {:>12} {:>9} {:>9}",
         "network", "non-tuned", "O3(gcc)", "muriscv-nn", "ours", "imp(O3)", "imp(mu)"
     );
 
-    for name in MLPERF_TINY {
-        let model = models::by_name(name, DType::I8).unwrap();
-        let mut session = Session::new(SocConfig::saturn(1024), SessionOptions::default());
-
-        // Baselines.
-        let base = session
-            .measure_network(&model.layers, &mut |_, _| Scenario::ScalarOs)
-            .unwrap()
-            .cycles;
-        let o3 = session
-            .measure_network(&model.layers, &mut |_, _| Scenario::AutovecGcc)
-            .unwrap()
-            .cycles;
-        let mu = session
-            .measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
-            .unwrap()
-            .cycles;
-
-        // Ours: tune every distinct layer shape, then run the network with
-        // the best schedules.
-        let trials = if quick { 30 } else { model.default_trials };
-        let min_per = if quick { 3 } else { 10 };
-        let outcomes = session.tune_network(&model.layers, trials, min_per);
-        total_candidates += outcomes
+    // One service per network, all four running concurrently; split the
+    // host's worker budget across them.
+    let workers = (MeasurePool::default_workers() / MLPERF_TINY.len()).max(1);
+    let runs: Vec<NetworkRun> = std::thread::scope(|scope| {
+        let handles: Vec<_> = MLPERF_TINY
             .iter()
-            .filter_map(|(_, o)| o.as_ref().map(|o| o.trials_measured))
-            .sum::<usize>();
-        let ours = session
-            .measure_network(&model.layers, &mut |s, op| s.ours_scenario(op, min_per))
-            .unwrap()
-            .cycles;
+            .map(|&name| scope.spawn(move || run_network(name, quick, workers)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
 
-        impr_gcc.push(o3 / ours - 1.0);
-        impr_mu.push(mu / ours - 1.0);
+    let mut impr_gcc = Vec::new();
+    let mut impr_mu = Vec::new();
+    let mut total_candidates = 0usize;
+    for r in &runs {
+        impr_gcc.push(r.o3 / r.ours - 1.0);
+        impr_mu.push(r.mu / r.ours - 1.0);
+        total_candidates += r.candidates;
         println!(
             "{:<22} {:>12.0} {:>12.0} {:>12.0} {:>12.0} {:>8.1}% {:>8.1}%",
-            name,
-            base,
-            o3,
-            mu,
-            ours,
-            (o3 / ours - 1.0) * 100.0,
-            (mu / ours - 1.0) * 100.0
+            r.name,
+            r.base,
+            r.o3,
+            r.mu,
+            r.ours,
+            (r.o3 / r.ours - 1.0) * 100.0,
+            (r.mu / r.ours - 1.0) * 100.0
         );
     }
 

@@ -6,7 +6,7 @@
 //! ```
 
 use rvv_tune::codegen::Scenario;
-use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::coordinator::{MeasureRequest, ServiceOptions, Target, TuneRequest, TuneService};
 use rvv_tune::sim::SocConfig;
 use rvv_tune::tir::DType;
 use rvv_tune::workloads::matmul;
@@ -14,17 +14,27 @@ use rvv_tune::workloads::matmul;
 fn main() {
     // A 128x128x128 int8 matmul with QNN requantization (paper §IV-A).
     let op = matmul::matmul(128, DType::I8);
-    let soc = SocConfig::saturn(1024);
-    println!("workload: {op}   target: {} ({} MHz)", soc.name, soc.clock_mhz);
 
-    // The session owns the cost model (JAX/Pallas MLP via PJRT when
-    // `make artifacts` has run; heuristic otherwise), the tuning database,
-    // and the parallel measurement pool.
-    let mut session = Session::new(soc, SessionOptions::default());
-    println!("cost model: {}", session.model_kind());
+    // The target is immutable: the SoC description plus the intrinsic
+    // registry built for its VLEN and the toolchain fallback.
+    let target = Target::new(SocConfig::saturn(1024));
+    println!(
+        "workload: {op}   target: {} ({} MHz)",
+        target.soc.name, target.soc.clock_mhz
+    );
 
-    // Tune with the paper's single-operator budget (100 trials).
-    let outcome = session.tune(&op, 100).expect("matmul is tunable");
+    // The service owns the cost model (JAX/Pallas MLP via PJRT when
+    // `make artifacts` has run; heuristic otherwise), the sharded tuning
+    // database, and the parallel measurement pool. Every method takes
+    // `&self`, so one service can serve many threads concurrently.
+    let service = TuneService::new(target, ServiceOptions::default());
+    println!("cost model: {}", service.model_kind());
+
+    // Tune with the paper's single-operator budget (100 trials): a typed
+    // TuneRequest comes back as a TuneReport carrying the outcome and the
+    // scenario it resolves to.
+    let report = service.tune(&TuneRequest::new(op.clone(), 100));
+    let outcome = report.outcome.expect("matmul is tunable");
     println!(
         "tuned in {} trials -> best schedule {}  ({} cycles)",
         outcome.trials_measured,
@@ -32,17 +42,20 @@ fn main() {
         outcome.best.cycles,
     );
 
-    // Compare all scenarios.
-    let ours = Scenario::Ours(outcome.best.schedule.clone());
+    // Compare all scenarios (MeasureRequest -> Measurement).
     println!("\n{:<16} {:>12} {:>10} {:>9}", "scenario", "cycles", "lat(us)", "speedup");
-    let base = session.measure(&op, &Scenario::ScalarOs).unwrap().result.cycles;
-    for sc in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn, ours] {
-        if let Some(r) = session.measure(&op, &sc) {
+    let base = service
+        .measure(&MeasureRequest::new(op.clone(), Scenario::ScalarOs))
+        .unwrap()
+        .result
+        .cycles;
+    for sc in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn, report.scenario] {
+        if let Some(r) = service.measure(&MeasureRequest::new(op.clone(), sc)) {
             println!(
                 "{:<16} {:>12.0} {:>10.1} {:>8.2}x",
-                sc.name(),
+                r.scenario_name,
                 r.result.cycles,
-                session.soc.cycles_to_us(r.result.cycles),
+                service.soc().cycles_to_us(r.result.cycles),
                 base / r.result.cycles
             );
         }

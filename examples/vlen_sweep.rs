@@ -1,15 +1,22 @@
 //! VLEN sweep (Figures 4/8 in miniature): why hand-written kernels degrade
 //! as the vector unit grows, and how tuning mitigates it.
 //!
+//! Each VLEN configuration is one immutable `Target` with its own
+//! `TuneService`. The sweep runs the three services from scoped threads —
+//! multi-SoC sweeps are embarrassingly parallel now that tuning no longer
+//! threads a `&mut` god-object.
+//!
 //! ```sh
 //! cargo run --release --example vlen_sweep [-- size]
 //! ```
 
 use rvv_tune::codegen::Scenario;
-use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::coordinator::{MeasurePool, MeasureRequest, ServiceOptions, Target, TuneService};
 use rvv_tune::sim::SocConfig;
 use rvv_tune::tir::DType;
 use rvv_tune::workloads::matmul;
+
+const VLENS: [u32; 3] = [256, 512, 1024];
 
 fn main() {
     let size: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(128);
@@ -17,19 +24,38 @@ fn main() {
     println!("int8 {size}^3 matmul across Saturn VLEN configurations\n");
     println!("{:<12} {:>6} {:>12} {:>14}", "target", "vlen", "cycles", "vs same @256");
 
+    // Split the host's worker budget across the concurrent services.
+    let workers = (MeasurePool::default_workers() / VLENS.len()).max(1);
     for target in ["muriscv-nn", "ours"] {
-        let mut base = None;
-        for vlen in [256u32, 512, 1024] {
-            let mut session =
-                Session::new(SocConfig::saturn(vlen), SessionOptions::default());
-            let scenario = if target == "ours" {
-                session.ours_scenario(&op, 100)
-            } else {
-                Scenario::MuRiscvNn
-            };
-            let cycles = session.measure(&op, &scenario).unwrap().result.cycles;
-            let b = *base.get_or_insert(cycles);
-            println!("{:<12} {:>6} {:>12.0} {:>13.3}x", target, vlen, cycles, b / cycles);
+        // One service per VLEN configuration, swept in parallel.
+        let cycles: Vec<f64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = VLENS
+                .iter()
+                .map(|&vlen| {
+                    let op = op.clone();
+                    scope.spawn(move || {
+                        let service = TuneService::new(
+                            Target::new(SocConfig::saturn(vlen)),
+                            ServiceOptions { workers, ..Default::default() },
+                        );
+                        let scenario = if target == "ours" {
+                            service.tuned_scenario(&op, 100)
+                        } else {
+                            Scenario::MuRiscvNn
+                        };
+                        service
+                            .measure(&MeasureRequest::new(op, scenario))
+                            .unwrap()
+                            .result
+                            .cycles
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let base = cycles[0];
+        for (vlen, c) in VLENS.iter().zip(&cycles) {
+            println!("{:<12} {:>6} {:>12.0} {:>13.3}x", target, vlen, c, base / c);
         }
         println!();
     }

@@ -38,6 +38,19 @@ pub fn library_fn_bytes(op: &Op) -> u64 {
     }
 }
 
+/// Library function an op resolves to — the sharing key for code-size
+/// accounting: layers of the same kind call the *same* library object, so
+/// a network binary contains each function once no matter how many layers
+/// use it (see [`crate::codegen::CodeSizeModel`]).
+pub fn library_fn_kind(op: &Op) -> &'static str {
+    match op {
+        Op::Matmul { m, .. } if *m > 1 => "conv",
+        Op::Matmul { .. } => "fc",
+        Op::DwConv { .. } => "dwconv",
+        Op::Eltwise { .. } => "eltwise",
+    }
+}
+
 /// Per-call-site glue (argument setup + call) in the generated C.
 pub const CALL_GLUE_BYTES: u64 = 96;
 

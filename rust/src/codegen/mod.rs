@@ -23,6 +23,9 @@
 
 pub mod baselines;
 pub mod ours;
+pub mod size;
+
+pub use size::CodeSizeModel;
 
 use crate::sim::{BufId, VProgram};
 use crate::tir::{DType, Op, Schedule};

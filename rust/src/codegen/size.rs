@@ -1,0 +1,128 @@
+//! Unified code-size accounting across scenarios.
+//!
+//! The binary-size structure differs per scenario (this split is what
+//! produces the paper's Figure-5 ~90 % reduction *and* the Figure-9
+//! anomaly-detection inversion):
+//!
+//! * **muRISCV-NN** — layers call shared library functions: one function
+//!   per kernel kind for the whole binary, plus per-call glue.
+//! * **Ours (tensorized)** — TVM emits each distinct tensor-intrinsic
+//!   variant as one standalone function shared by all call sites, plus a
+//!   thin per-layer loop nest (calls + requant epilogue).
+//! * **Everything else** — inline (non-tensorized) code, counted per layer.
+//!
+//! [`CodeSizeModel`] owns this accounting in one place: feed it one layer
+//! at a time (a whole network, or a single op for standalone measurement)
+//! and read the deduplicated total at the end. The coordinator used to
+//! duplicate these match arms in `measure` and `measure_network`; both now
+//! delegate here.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::tir::Op;
+
+use super::{baselines::muriscvnn, ours, Scenario};
+
+/// Accumulates binary size over a sequence of (op, scenario) layers, with
+/// shared-function dedup across layers.
+#[derive(Default)]
+pub struct CodeSizeModel {
+    /// muRISCV-NN library objects linked, by kernel kind (each counted
+    /// once, whatever the number of call sites).
+    library_fns: BTreeMap<&'static str, u64>,
+    /// Distinct tensor-intrinsic variants emitted (each one standalone
+    /// function shared by every layer that instantiates it).
+    intrinsic_fns: BTreeSet<String>,
+    /// Per-layer bytes: call/loop-nest glue and inline code.
+    layer_bytes: u64,
+}
+
+impl CodeSizeModel {
+    pub fn new() -> CodeSizeModel {
+        CodeSizeModel::default()
+    }
+
+    /// Account one layer. `program_bytes` is the emitted program's size,
+    /// used only for inline (non-library, non-tensorized) scenarios.
+    pub fn add_layer(&mut self, op: &Op, scenario: &Scenario, program_bytes: u64) {
+        match scenario {
+            Scenario::MuRiscvNn => {
+                self.library_fns
+                    .entry(muriscvnn::library_fn_kind(op))
+                    .or_insert_with(|| muriscvnn::library_fn_bytes(op));
+                self.layer_bytes += muriscvnn::CALL_GLUE_BYTES;
+            }
+            Scenario::Ours(schedule) => {
+                self.intrinsic_fns.insert(ours::variant_key(op, schedule));
+                self.layer_bytes += ours::LAYER_GLUE_BYTES;
+            }
+            _ => self.layer_bytes += program_bytes,
+        }
+    }
+
+    /// Total binary size so far: shared functions once, glue/inline per
+    /// layer.
+    pub fn total(&self) -> u64 {
+        self.layer_bytes
+            + self.library_fns.values().sum::<u64>()
+            + self.intrinsic_fns.len() as u64 * ours::INTRINSIC_FN_BYTES
+    }
+
+    /// Size of a standalone single-layer binary — what a single-op
+    /// measurement reports.
+    pub fn standalone(op: &Op, scenario: &Scenario, program_bytes: u64) -> u64 {
+        let mut m = CodeSizeModel::new();
+        m.add_layer(op, scenario, program_bytes);
+        m.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{DType, Schedule, EltwiseSchedule};
+
+    fn mm(size: usize) -> Op {
+        Op::square_matmul(size, DType::I8)
+    }
+
+    #[test]
+    fn muriscvnn_library_counted_once_across_layers() {
+        let mut m = CodeSizeModel::new();
+        m.add_layer(&mm(32), &Scenario::MuRiscvNn, 0);
+        m.add_layer(&mm(16), &Scenario::MuRiscvNn, 0);
+        let fn_size = muriscvnn::library_fn_bytes(&mm(32));
+        assert_eq!(m.total(), fn_size + 2 * muriscvnn::CALL_GLUE_BYTES);
+    }
+
+    #[test]
+    fn ours_distinct_variants_accumulate_but_repeats_share() {
+        let a = Schedule::Eltwise(EltwiseSchedule { vl: 32, unroll: 1 });
+        let b = Schedule::Eltwise(EltwiseSchedule { vl: 64, unroll: 1 });
+        let op = Op::Eltwise { len: 128, dtype: DType::I8 };
+        let mut m = CodeSizeModel::new();
+        m.add_layer(&op, &Scenario::Ours(a.clone()), 0);
+        m.add_layer(&op, &Scenario::Ours(a), 0);
+        m.add_layer(&op, &Scenario::Ours(b), 0);
+        // 2 distinct variants + 3 glue nests.
+        assert_eq!(m.total(), 2 * ours::INTRINSIC_FN_BYTES + 3 * ours::LAYER_GLUE_BYTES);
+    }
+
+    #[test]
+    fn inline_scenarios_count_program_bytes_per_layer() {
+        let mut m = CodeSizeModel::new();
+        m.add_layer(&mm(32), &Scenario::ScalarOs, 700);
+        m.add_layer(&mm(16), &Scenario::AutovecGcc, 500);
+        assert_eq!(m.total(), 1200);
+    }
+
+    #[test]
+    fn standalone_matches_single_layer_model() {
+        let op = mm(64);
+        assert_eq!(
+            CodeSizeModel::standalone(&op, &Scenario::MuRiscvNn, 0),
+            muriscvnn::library_fn_bytes(&op) + muriscvnn::CALL_GLUE_BYTES
+        );
+        assert_eq!(CodeSizeModel::standalone(&op, &Scenario::ScalarOs, 123), 123);
+    }
+}

@@ -1,20 +1,47 @@
-//! The measurement coordinator: a leader/worker pool mirroring the paper's
-//! tuning loop (leader = MetaSchedule process owning the database and the
-//! cost model; workers = the compile→flash→measure pipeline, here the
-//! simulator).
+//! The measurement coordinator: a shareable tuning *service* over a
+//! leader/worker measurement pool, mirroring the paper's tuning loop
+//! (leader = MetaSchedule process owning the database and the cost model;
+//! workers = the compile→flash→measure pipeline, here the simulator).
 //!
-//! On the paper's testbed one measurement takes 9–12 s (compile + flash +
-//! run); our substitute executes the candidate on the simulated SoC in
-//! milliseconds, so the throughput ceiling moved into the tuning pipeline
-//! itself. The pool therefore keeps **persistent workers** that run the
-//! whole per-candidate chain (codegen → feature extraction → timing-mode
-//! measurement), and the search loop pipelines rounds so preparation of
-//! round N+1 overlaps measurement of round N (see `tune::search`) — the
-//! leader/worker structure (batched dispatch, result collection,
-//! centralized learning) is the same as MetaSchedule's.
+//! The surface is layered (no mutable god-object):
+//!
+//! * [`Target`] — immutable: the SoC configuration, the intrinsic
+//!   [`crate::intrinsics::Registry`] built for its VLEN, and the
+//!   toolchain fallback scenario.
+//! * [`TuneService`] — the coordinator. All methods take `&self`, so one
+//!   service can serve concurrent requests from many threads: typed
+//!   [`TuneRequest`] → [`TuneReport`] and [`MeasureRequest`] →
+//!   [`Measurement`] exchanges against a sharded
+//!   [`crate::tune::SharedDatabase`], with per-request cost-model state.
+//!   Request results are bit-identical to a serial run: each request's
+//!   search seed depends only on the service seed and the operator key,
+//!   and requests for the *same* operator serialize on a per-op in-flight
+//!   lock (so they behave like back-to-back serial calls — no duplicate
+//!   records, no interleaving-dependent outcomes). See
+//!   `concurrent_service_matches_serial` and
+//!   `concurrent_same_op_requests_match_serial` in
+//!   `tests/integration_tuner.rs`.
+//! * [`ScenarioPolicy`] — how network measurements pick each layer's code
+//!   generator: [`Fixed`] for baseline sweeps, [`TunedWithFallback`] for
+//!   "ours", or any user impl.
+//! * [`MeasurePool`] — the persistent worker pool. On the paper's testbed
+//!   one measurement takes 9–12 s (compile + flash + run); our substitute
+//!   executes candidates on the simulated SoC in milliseconds, so the
+//!   throughput ceiling moved into the tuning pipeline itself. Workers
+//!   run the whole per-candidate chain (codegen → feature extraction →
+//!   timing-mode measurement) and the search loop pipelines rounds so
+//!   preparation of round N+1 overlaps measurement of round N (see
+//!   `tune::search`) — the leader/worker structure (batched dispatch,
+//!   result collection, centralized learning) is the same as
+//!   MetaSchedule's.
 
+mod policy;
 mod pool;
-mod session;
+mod service;
 
+pub use policy::{Fixed, ScenarioPolicy, TunedWithFallback};
 pub use pool::MeasurePool;
-pub use session::{ScenarioResult, Session, SessionOptions};
+pub use service::{
+    MeasureRequest, Measurement, ModelFactory, NetworkMeasurement, ServiceOptions, Target,
+    TuneReport, TuneRequest, TuneService,
+};

@@ -1,0 +1,92 @@
+//! Scenario policies: how a network measurement decides which code
+//! generator each layer runs under.
+//!
+//! The old `Session::measure_network` took a
+//! `&mut dyn FnMut(&mut Session, &Op) -> Scenario` closure, which forced
+//! every caller to thread the mutable god-object through. A policy is the
+//! first-class replacement: a small strategy object consulted per layer
+//! with only `&TuneService`. The two built-ins cover every harness in the
+//! repo; user code implements the trait for anything fancier (per-layer
+//! mixed deployments, schedule pinning, A/B splits, ...).
+
+use crate::codegen::Scenario;
+use crate::tir::Op;
+
+use super::service::TuneService;
+
+/// Picks the scenario a layer is measured under.
+pub trait ScenarioPolicy {
+    fn scenario_for(&self, service: &TuneService, op: &Op) -> Scenario;
+}
+
+/// Every layer runs the same fixed scenario (the baseline sweeps).
+pub struct Fixed(pub Scenario);
+
+impl ScenarioPolicy for Fixed {
+    fn scenario_for(&self, _service: &TuneService, _op: &Op) -> Scenario {
+        self.0.clone()
+    }
+}
+
+/// Every layer runs its tuned schedule: the database best when one
+/// exists, else tune now with `trials` as the budget, else the target's
+/// compiler fallback (TVM's default path for non-tensorizable blocks).
+pub struct TunedWithFallback {
+    pub trials: usize,
+}
+
+impl ScenarioPolicy for TunedWithFallback {
+    fn scenario_for(&self, service: &TuneService, op: &Op) -> Scenario {
+        service.tuned_scenario(op, self.trials)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ServiceOptions, Target};
+    use crate::sim::SocConfig;
+    use crate::tir::DType;
+
+    #[test]
+    fn fixed_policy_ignores_the_op() {
+        let service = TuneService::new(
+            Target::new(SocConfig::saturn(256)),
+            ServiceOptions { use_mlp: false, workers: 1, ..Default::default() },
+        );
+        let p = Fixed(Scenario::ScalarOs);
+        assert_eq!(
+            p.scenario_for(&service, &Op::square_matmul(16, DType::I8)),
+            Scenario::ScalarOs
+        );
+        assert_eq!(
+            p.scenario_for(&service, &Op::Eltwise { len: 64, dtype: DType::F32 }),
+            Scenario::ScalarOs
+        );
+    }
+
+    /// User-defined policies are plain trait impls: mix scenarios by
+    /// layer kind.
+    #[test]
+    fn custom_policy_mixes_scenarios() {
+        struct LibraryForConvs;
+        impl ScenarioPolicy for LibraryForConvs {
+            fn scenario_for(&self, service: &TuneService, op: &Op) -> Scenario {
+                match op {
+                    Op::Matmul { .. } => Scenario::MuRiscvNn,
+                    _ => service.target().fallback_scenario(),
+                }
+            }
+        }
+        let service = TuneService::new(
+            Target::new(SocConfig::saturn(256)),
+            ServiceOptions { use_mlp: false, workers: 1, ..Default::default() },
+        );
+        let layers = [
+            Op::square_matmul(16, DType::I8),
+            Op::Eltwise { len: 64, dtype: DType::I8 },
+        ];
+        let r = service.measure_network(&layers, &LibraryForConvs).unwrap();
+        assert!(r.cycles > 0.0);
+    }
+}

@@ -1,0 +1,502 @@
+//! The tuning service: a share-by-`&self` coordinator that serves typed
+//! measurement and tuning requests against one sharded database and one
+//! persistent worker pool.
+//!
+//! Layering (replaces the old mutable `Session` god-object):
+//!
+//! * [`Target`] — immutable description of what we compile *for*: the SoC
+//!   configuration, the intrinsic registry built for its VLEN, and the
+//!   toolchain fallback scenario.
+//! * [`TuneService`] — the shareable coordinator. Every method takes
+//!   `&self`; N threads may submit [`TuneRequest`]s / [`MeasureRequest`]s
+//!   against one service concurrently. Tuning state that must be mutable
+//!   (the cost model) is created per request, and the record store is a
+//!   [`SharedDatabase`] sharded by operator key, so requests for disjoint
+//!   operators never contend; requests for the *same* operator serialize
+//!   on a per-op in-flight lock. Results are bit-identical to a serial
+//!   run (each request's search seed depends only on the service seed and
+//!   the operator key).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::codegen::{self, CodeSizeModel, Scenario};
+use crate::intrinsics::Registry;
+use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, TraceCounts};
+use crate::tir::Op;
+use crate::tune::{
+    allocate_trials, extract_tasks, tune_op, CostModel, Database, HeuristicCostModel,
+    MlpCostModel, SearchConfig, SharedDatabase, TuneOutcome, TuneRecord,
+};
+use crate::util::fnv1a_str;
+
+use super::policy::ScenarioPolicy;
+use super::pool::MeasurePool;
+
+/// What we tune *for*: SoC + the intrinsic registry matching its VLEN +
+/// the compiler fallback. Immutable once built; cheap to share.
+#[derive(Clone, Debug)]
+pub struct Target {
+    pub soc: SocConfig,
+    pub registry: Registry,
+}
+
+impl Target {
+    /// Full registry (VL ladder + J=1 variants) for this SoC.
+    pub fn new(soc: SocConfig) -> Target {
+        Target::with_registry(soc, true, true)
+    }
+
+    /// Registry ablation switches (DESIGN.md §4): `vl_ladder = false`
+    /// registers only VL = VLMAX; `j_one = false` drops the J=1 variants.
+    pub fn with_registry(soc: SocConfig, vl_ladder: bool, j_one: bool) -> Target {
+        let registry = Registry::build_with(soc.vlen, vl_ladder, j_one);
+        Target { soc, registry }
+    }
+
+    /// Compiler fallback flavour for this SoC (GCC on the FPGA targets,
+    /// LLVM on the BPI-F3 — the paper's toolchains).
+    pub fn fallback_scenario(&self) -> Scenario {
+        if self.soc.name.starts_with("bpi") {
+            Scenario::AutovecLlvm
+        } else {
+            Scenario::AutovecGcc
+        }
+    }
+}
+
+/// Service construction options.
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    pub seed: u64,
+    /// Use the PJRT MLP cost model when artifacts are available.
+    pub use_mlp: bool,
+    pub workers: usize,
+    /// Shards of the service database (concurrent requests for different
+    /// operators lock different shards).
+    pub db_shards: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions {
+            seed: 42,
+            use_mlp: true,
+            workers: MeasurePool::default_workers(),
+            db_shards: SharedDatabase::DEFAULT_SHARDS,
+        }
+    }
+}
+
+/// Request: measure one (op, scenario) pair in timing mode.
+#[derive(Clone, Debug)]
+pub struct MeasureRequest {
+    pub op: Op,
+    pub scenario: Scenario,
+}
+
+impl MeasureRequest {
+    pub fn new(op: Op, scenario: Scenario) -> MeasureRequest {
+        MeasureRequest { op, scenario }
+    }
+}
+
+/// Response to a [`MeasureRequest`].
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub scenario_name: String,
+    pub result: ExecResult,
+    /// Standalone binary size of this one layer under this scenario
+    /// (unified accounting: [`CodeSizeModel`]).
+    pub code_size_bytes: u64,
+}
+
+/// Request: tune one operator with an explicit trial budget.
+#[derive(Clone, Debug)]
+pub struct TuneRequest {
+    pub op: Op,
+    pub trials: usize,
+}
+
+impl TuneRequest {
+    pub fn new(op: Op, trials: usize) -> TuneRequest {
+        TuneRequest { op, trials }
+    }
+}
+
+/// Response to a [`TuneRequest`].
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub op_key: String,
+    /// `None` when no intrinsic variant matches the operator (the
+    /// scenario then falls back to the compiler's vectorization, as TVM
+    /// keeps non-tensorizable blocks on the default codegen path).
+    pub outcome: Option<TuneOutcome>,
+    /// The scenario this request resolved to: the tuned schedule, or the
+    /// target's compiler fallback.
+    pub scenario: Scenario,
+}
+
+impl TuneReport {
+    pub fn best(&self) -> Option<&TuneRecord> {
+        self.outcome.as_ref().map(|o| &o.best)
+    }
+}
+
+/// Aggregate result of a whole-network measurement.
+#[derive(Clone, Debug)]
+pub struct NetworkMeasurement {
+    pub cycles: f64,
+    pub trace: TraceCounts,
+    pub code_size_bytes: u64,
+}
+
+/// Per-request cost-model constructor: called with the request's search
+/// seed. Requests get private model state, so concurrent tuning needs no
+/// lock around learning and stays deterministic.
+pub type ModelFactory = Box<dyn Fn(u64) -> Box<dyn CostModel> + Send + Sync>;
+
+/// The shareable tuning/measurement coordinator for one [`Target`].
+pub struct TuneService {
+    target: Target,
+    db: SharedDatabase,
+    pool: MeasurePool,
+    opts: ServiceOptions,
+    model_factory: ModelFactory,
+    model_kind: &'static str,
+    /// Per-operator in-flight locks: concurrent tuning requests for the
+    /// *same* operator serialize (checkout→tune→commit is atomic per op),
+    /// so they behave exactly like back-to-back serial requests — no
+    /// duplicate records, no interleaving-dependent results. Requests for
+    /// different operators never touch each other's lock.
+    tune_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+}
+
+impl TuneService {
+    /// Build a service; falls back to the heuristic cost model when the
+    /// PJRT artifacts are missing (e.g. before `make artifacts`).
+    pub fn new(target: Target, opts: ServiceOptions) -> TuneService {
+        // Probe artifact availability once at construction (an Engine load,
+        // not a full model build) so the fallback note prints once. The MLP
+        // model itself is constructed per request — private state keeps
+        // concurrent requests independent and deterministic, at the cost of
+        // one artifact load per tuning request when PJRT is enabled.
+        let (model_kind, model_factory): (&'static str, ModelFactory) = if opts.use_mlp {
+            match crate::runtime::Engine::load(&crate::runtime::artifacts_dir()) {
+                Ok(_) => (
+                    "mlp-pjrt",
+                    Box::new(|seed: u64| match MlpCostModel::from_artifacts(seed as i32) {
+                        Ok(m) => Box::new(m) as Box<dyn CostModel>,
+                        Err(e) => {
+                            // Artifacts vanished since construction: note the
+                            // divergence so reports are not mislabelled.
+                            eprintln!(
+                                "note: PJRT cost model unavailable for this request \
+                                 ({e}); falling back to heuristic"
+                            );
+                            Box::new(HeuristicCostModel)
+                        }
+                    }),
+                ),
+                Err(e) => {
+                    eprintln!("note: PJRT cost model unavailable ({e}); using heuristic");
+                    ("heuristic", Box::new(|_seed: u64| Box::new(HeuristicCostModel) as Box<dyn CostModel>))
+                }
+            }
+        } else {
+            ("heuristic", Box::new(|_seed: u64| Box::new(HeuristicCostModel) as Box<dyn CostModel>))
+        };
+        TuneService {
+            db: SharedDatabase::new(opts.db_shards),
+            pool: MeasurePool::new(opts.workers),
+            model_factory,
+            model_kind,
+            target,
+            opts,
+            tune_locks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Replace the cost model with a per-request factory (ablations).
+    pub fn with_model_factory(mut self, kind: &'static str, factory: ModelFactory) -> TuneService {
+        self.model_kind = kind;
+        self.model_factory = factory;
+        self
+    }
+
+    pub fn model_kind(&self) -> &'static str {
+        self.model_kind
+    }
+
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    pub fn soc(&self) -> &SocConfig {
+        &self.target.soc
+    }
+
+    /// The service's record store (snapshot it for persistence/reports).
+    pub fn db(&self) -> &SharedDatabase {
+        &self.db
+    }
+
+    /// Serve one tuning request. The search seed is derived from the
+    /// service seed and the operator key only, so results do not depend on
+    /// which thread runs the request or in what order requests arrive.
+    pub fn tune(&self, req: &TuneRequest) -> TuneReport {
+        let outcome = self.tune_with_budget(&req.op, req.trials);
+        let scenario = match &outcome {
+            Some(o) => Scenario::Ours(o.best.schedule.clone()),
+            None => self.target.fallback_scenario(),
+        };
+        TuneReport { op_key: req.op.key(), outcome, scenario }
+    }
+
+    /// The per-operator in-flight lock (created on first use).
+    fn op_lock(&self, op_key: &str) -> Arc<Mutex<()>> {
+        let mut locks = self.tune_locks.lock().unwrap();
+        locks.entry(op_key.to_string()).or_default().clone()
+    }
+
+    /// Serialize same-op requests: checkout→tune→commit must be atomic per
+    /// operator or two racing requests would both start from the same
+    /// checkout and commit duplicate records. Different operators use
+    /// different locks and proceed fully in parallel.
+    fn tune_with_budget(&self, op: &Op, trials: usize) -> Option<TuneOutcome> {
+        let lock = self.op_lock(&op.key());
+        let _in_flight = lock.lock().unwrap();
+        self.tune_locked(op, trials)
+    }
+
+    /// The tuning run proper; the caller must hold the op's in-flight lock.
+    fn tune_locked(&self, op: &Op, trials: usize) -> Option<TuneOutcome> {
+        let op_key = op.key();
+        let config = SearchConfig {
+            trials,
+            seed: self.opts.seed ^ fnv1a_str(&op_key),
+            ..Default::default()
+        };
+        let mut model = (self.model_factory)(config.seed);
+        // Tune against a private checkout; no shard lock is held across a
+        // measurement.
+        let mut local: Database = self.db.checkout(&op_key, &self.target.soc.name);
+        let seeded = local.len();
+        let outcome = tune_op(
+            op,
+            &self.target.soc,
+            &self.target.registry,
+            model.as_mut(),
+            &self.pool,
+            &mut local,
+            &config,
+        );
+        self.db.commit(&local, seeded);
+        outcome
+    }
+
+    /// The scenario "ours" resolves to for `op`: the best already-tuned
+    /// schedule if the database has one, otherwise tune now with `trials`
+    /// as the budget, otherwise the compiler fallback.
+    pub fn tuned_scenario(&self, op: &Op, trials: usize) -> Scenario {
+        let op_key = op.key();
+        if let Some(best) = self.db.best(&op_key, &self.target.soc.name) {
+            return Scenario::Ours(best.schedule);
+        }
+        // Untuned so far: take the op's in-flight lock and re-check, so a
+        // request that raced with another tuner of the same op reuses its
+        // result (as a serial second call would) instead of re-tuning.
+        let lock = self.op_lock(&op_key);
+        let _in_flight = lock.lock().unwrap();
+        if let Some(best) = self.db.best(&op_key, &self.target.soc.name) {
+            return Scenario::Ours(best.schedule);
+        }
+        match self.tune_locked(op, trials) {
+            Some(outcome) => Scenario::Ours(outcome.best.schedule),
+            None => self.target.fallback_scenario(),
+        }
+    }
+
+    /// Generate + execute one (op, scenario) in timing mode, returning the
+    /// raw result and the emitted program's size.
+    fn execute_scenario(&self, op: &Op, scenario: &Scenario) -> Option<(ExecResult, u64)> {
+        let program = codegen::generate(op, scenario, self.target.soc.vlen)?;
+        let mut bufs = BufStore::timing(&program);
+        let result = execute(&self.target.soc, &program, &mut bufs, Mode::Timing, true);
+        let program_bytes = program.code_size_bytes();
+        Some((result, program_bytes))
+    }
+
+    /// Serve one measurement request. Returns None when the scenario does
+    /// not support the op (muRISCV-NN on floats).
+    pub fn measure(&self, req: &MeasureRequest) -> Option<Measurement> {
+        let (result, program_bytes) = self.execute_scenario(&req.op, &req.scenario)?;
+        Some(Measurement {
+            scenario_name: req.scenario.name().to_string(),
+            result,
+            code_size_bytes: CodeSizeModel::standalone(&req.op, &req.scenario, program_bytes),
+        })
+    }
+
+    /// Tune a whole network: extract tasks, allocate the budget (paper:
+    /// 200 trials, min 10 per layer), tune each task. Returns per-task
+    /// outcomes keyed by op key.
+    pub fn tune_network(
+        &self,
+        layers: &[Op],
+        total_trials: usize,
+        min_per_task: usize,
+    ) -> Vec<(String, Option<TuneOutcome>)> {
+        let tasks = extract_tasks(layers);
+        let alloc = allocate_trials(&tasks, total_trials, min_per_task);
+        tasks
+            .iter()
+            .zip(alloc)
+            .map(|(t, trials)| (t.op.key(), self.tune_with_budget(&t.op, trials)))
+            .collect()
+    }
+
+    /// End-to-end network latency + aggregate trace under the scenarios a
+    /// [`ScenarioPolicy`] picks per layer. Per-layer results are summed
+    /// (the runtime executes layers serially, as the TVM runtimes the
+    /// paper uses do); code size uses the shared-function dedup of
+    /// [`CodeSizeModel`]. Returns None if any layer is unsupported by its
+    /// scenario.
+    pub fn measure_network(
+        &self,
+        layers: &[Op],
+        policy: &dyn ScenarioPolicy,
+    ) -> Option<NetworkMeasurement> {
+        let mut cycles = 0.0;
+        let mut trace = TraceCounts::default();
+        let mut size = CodeSizeModel::new();
+        for op in layers {
+            let scenario = policy.scenario_for(self, op);
+            let (r, program_bytes) = self.execute_scenario(op, &scenario)?;
+            cycles += r.cycles;
+            trace.merge(&r.trace);
+            size.add_layer(op, &scenario, program_bytes);
+        }
+        Some(NetworkMeasurement { cycles, trace, code_size_bytes: size.total() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{Fixed, TunedWithFallback};
+    use crate::tir::DType;
+
+    fn heuristic_service(vlen: u32) -> TuneService {
+        let opts = ServiceOptions { use_mlp: false, workers: 2, ..Default::default() };
+        TuneService::new(Target::new(SocConfig::saturn(vlen)), opts)
+    }
+
+    #[test]
+    fn tuned_beats_all_baselines_on_int8_matmul() {
+        let s = heuristic_service(1024);
+        let op = Op::square_matmul(64, DType::I8);
+        let ours = s.tuned_scenario(&op, 40);
+        let ours_cycles =
+            s.measure(&MeasureRequest::new(op.clone(), ours)).unwrap().result.cycles;
+        for baseline in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn] {
+            let b = s
+                .measure(&MeasureRequest::new(op.clone(), baseline.clone()))
+                .unwrap()
+                .result
+                .cycles;
+            assert!(
+                ours_cycles < b,
+                "{}: ours {ours_cycles} vs {} {b}",
+                op.key(),
+                baseline.name()
+            );
+        }
+    }
+
+    #[test]
+    fn tune_report_carries_resolved_scenario() {
+        let s = heuristic_service(256);
+        let report = s.tune(&TuneRequest::new(Op::square_matmul(32, DType::I8), 16));
+        assert!(report.outcome.is_some());
+        assert!(matches!(report.scenario, Scenario::Ours(_)));
+        assert!(report.op_key.contains("32"));
+        // An untunable op resolves to the fallback.
+        let dw = Op::DwConv { spatial: 2, channels: 3, taps: 9, dtype: DType::I8, requant: None };
+        let report = s.tune(&TuneRequest::new(dw, 8));
+        assert!(report.outcome.is_none());
+        assert_eq!(report.scenario, Scenario::AutovecGcc);
+    }
+
+    #[test]
+    fn network_tuning_allocates_all_tasks() {
+        let s = heuristic_service(256);
+        let layers = vec![
+            Op::square_matmul(32, DType::I8),
+            Op::square_matmul(32, DType::I8),
+            Op::square_matmul(16, DType::I8),
+        ];
+        let outcomes = s.tune_network(&layers, 30, 5);
+        assert_eq!(outcomes.len(), 2); // deduped
+        assert!(outcomes.iter().all(|(_, o)| o.is_some()));
+    }
+
+    #[test]
+    fn measure_network_sums_layers() {
+        let s = heuristic_service(256);
+        let layers =
+            vec![Op::square_matmul(32, DType::I8), Op::square_matmul(16, DType::I8)];
+        let r = s.measure_network(&layers, &Fixed(Scenario::ScalarOs)).unwrap();
+        let lone: f64 = layers
+            .iter()
+            .map(|op| {
+                s.measure(&MeasureRequest::new(op.clone(), Scenario::ScalarOs))
+                    .unwrap()
+                    .result
+                    .cycles
+            })
+            .sum();
+        assert!((r.cycles - lone).abs() < 1e-6);
+        assert!(r.code_size_bytes > 0);
+    }
+
+    #[test]
+    fn muriscvnn_network_counts_library_once() {
+        let s = heuristic_service(256);
+        let layers =
+            vec![Op::square_matmul(32, DType::I8), Op::square_matmul(16, DType::I8)];
+        let r = s.measure_network(&layers, &Fixed(Scenario::MuRiscvNn)).unwrap();
+        let fn_size = codegen::baselines::muriscvnn::library_fn_bytes(&layers[0]);
+        // One shared function + 2 glue sites, NOT 2x the function.
+        assert!(r.code_size_bytes < 2 * fn_size);
+        assert!(r.code_size_bytes >= fn_size);
+    }
+
+    #[test]
+    fn tuned_policy_reuses_database_schedules() {
+        let s = heuristic_service(256);
+        let layers = vec![Op::square_matmul(32, DType::I8)];
+        s.tune_network(&layers, 12, 4);
+        let after_tuning = s.db().len();
+        let r = s.measure_network(&layers, &TunedWithFallback { trials: 4 }).unwrap();
+        assert!(r.cycles > 0.0);
+        // The policy must have used the stored best, not re-tuned.
+        assert_eq!(s.db().len(), after_tuning);
+    }
+
+    #[test]
+    fn bpi_fallback_is_llvm() {
+        let t = Target::new(SocConfig::bpi_f3());
+        assert_eq!(t.fallback_scenario(), Scenario::AutovecLlvm);
+        let saturn = Target::new(SocConfig::saturn(256));
+        assert_eq!(saturn.fallback_scenario(), Scenario::AutovecGcc);
+    }
+
+    #[test]
+    fn service_is_share_by_ref() {
+        // Compile-time property check: a TuneService can be shared across
+        // scoped threads by `&self`.
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<TuneService>();
+    }
+}

@@ -15,7 +15,7 @@
 use std::path::PathBuf;
 
 use crate::codegen::Scenario;
-use crate::coordinator::{Session, SessionOptions};
+use crate::coordinator::{Fixed, ServiceOptions, Target, TuneRequest, TuneService};
 use crate::isa::InstrGroup;
 use crate::sim::SocConfig;
 use crate::tir::{DType, Op};
@@ -114,10 +114,10 @@ fn parse_scenario(name: &str) -> Option<Scenario> {
     }
 }
 
-fn session_from(args: &Args) -> Result<Session, String> {
+fn service_from(args: &Args) -> Result<TuneService, String> {
     let soc_name = args.get_or("soc", "saturn-1024");
     let soc = SocConfig::by_name(soc_name).ok_or(format!("unknown soc {soc_name}"))?;
-    let mut opts = SessionOptions {
+    let mut opts = ServiceOptions {
         seed: args.get_u64("seed", 42),
         use_mlp: !args.flag("no-mlp"),
         ..Default::default()
@@ -126,7 +126,7 @@ fn session_from(args: &Args) -> Result<Session, String> {
     if workers > 0 {
         opts.workers = workers;
     }
-    Ok(Session::new(soc, opts))
+    Ok(TuneService::new(Target::new(soc), opts))
 }
 
 fn cmd_figures(args: &Args) -> i32 {
@@ -191,7 +191,7 @@ fn cmd_tune(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut session = match session_from(args) {
+    let service = match service_from(args) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -201,15 +201,15 @@ fn cmd_tune(args: &Args) -> i32 {
     let trials = args.get_usize("trials", default_trials);
     println!(
         "tuning {name} on {} ({} layers, cost model: {}, {} trials)",
-        session.soc.name,
+        service.soc().name,
         layers.len(),
-        session.model_kind(),
+        service.model_kind(),
         trials
     );
     let t0 = std::time::Instant::now();
-    let outcomes = session.tune_network(&layers, trials, 10.min(trials));
+    let outcomes = service.tune_network(&layers, trials, 10.min(trials));
     let mut t = Table::new(
-        format!("tuning results: {name} on {}", session.soc.name),
+        format!("tuning results: {name} on {}", service.soc().name),
         &["task", "trials", "best_cycles", "best_latency_us", "schedule"],
     );
     for (key, outcome) in &outcomes {
@@ -218,7 +218,7 @@ fn cmd_tune(args: &Args) -> i32 {
                 key.clone(),
                 o.trials_measured.to_string(),
                 fnum(o.best.cycles),
-                fnum(session.soc.cycles_to_us(o.best.cycles)),
+                fnum(service.soc().cycles_to_us(o.best.cycles)),
                 o.best.schedule.describe(),
             ]),
             None => t.row(vec![
@@ -239,7 +239,7 @@ fn cmd_tune(args: &Args) -> i32 {
         measured as f64 / dt.max(1e-9)
     );
     if let Some(db_path) = args.get("db") {
-        if let Err(e) = session.db.save(&PathBuf::from(db_path)) {
+        if let Err(e) = service.db().save(&PathBuf::from(db_path)) {
             eprintln!("db save failed: {e}");
             return 1;
         }
@@ -257,7 +257,7 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut session = match session_from(args) {
+    let service = match service_from(args) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -272,16 +272,16 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 2;
         }
     };
-    let Some(r) = session.measure_network(&layers, &mut |_, _| scenario.clone()) else {
+    let Some(r) = service.measure_network(&layers, &Fixed(scenario)) else {
         eprintln!("scenario {sc_name} does not support this workload (float + muriscv-nn?)");
         return 1;
     };
     println!(
         "{name} under {sc_name} on {}: {} cycles = {} us @ {} MHz, code {} B",
-        session.soc.name,
+        service.soc().name,
         fnum(r.cycles),
-        fnum(session.soc.cycles_to_us(r.cycles)),
-        session.soc.clock_mhz,
+        fnum(service.soc().cycles_to_us(r.cycles)),
+        service.soc().clock_mhz,
         r.code_size_bytes
     );
     if args.flag("trace") {
@@ -308,7 +308,7 @@ fn cmd_export(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut session = match session_from(args) {
+    let service = match service_from(args) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -317,8 +317,8 @@ fn cmd_export(args: &Args) -> i32 {
     };
     let trials = args.get_usize("trials", 64);
     for op in crate::tune::extract_tasks(&layers).iter().map(|t| t.op.clone()) {
-        let sc = session.ours_scenario(&op, trials);
-        let Some(program) = crate::codegen::generate(&op, &sc, session.soc.vlen) else {
+        let sc = service.tuned_scenario(&op, trials);
+        let Some(program) = crate::codegen::generate(&op, &sc, service.soc().vlen) else {
             continue;
         };
         println!("// ===== {name} / {} via {} =====", op.key(), sc.name());
@@ -343,7 +343,7 @@ fn cmd_converge(args: &Args) -> i32 {
         eprintln!("converge expects a single-operator workload (matmul:SIZE:DTYPE)");
         return 2;
     }
-    let mut session = match session_from(args) {
+    let service = match service_from(args) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -351,7 +351,8 @@ fn cmd_converge(args: &Args) -> i32 {
         }
     };
     let trials = args.get_usize("trials", default_trials);
-    let Some(outcome) = session.tune(&layers[0], trials) else {
+    let report = service.tune(&TuneRequest::new(layers[0].clone(), trials));
+    let Some(outcome) = report.outcome else {
         eprintln!("workload is not tunable");
         return 1;
     };

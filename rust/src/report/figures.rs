@@ -12,7 +12,9 @@
 use std::path::PathBuf;
 
 use crate::codegen::Scenario;
-use crate::coordinator::{Session, SessionOptions};
+use crate::coordinator::{
+    Fixed, MeasureRequest, ServiceOptions, Target, TuneService, TunedWithFallback,
+};
 use crate::isa::InstrGroup;
 use crate::sim::SocConfig;
 use crate::tir::{DType, Op};
@@ -44,8 +46,8 @@ impl Default for FigOpts {
 }
 
 impl FigOpts {
-    fn session(&self, soc: SocConfig) -> Session {
-        let mut opts = SessionOptions {
+    fn service_opts(&self) -> ServiceOptions {
+        let mut opts = ServiceOptions {
             seed: self.seed,
             use_mlp: self.use_mlp,
             ..Default::default()
@@ -53,7 +55,11 @@ impl FigOpts {
         if self.workers > 0 {
             opts.workers = self.workers;
         }
-        Session::new(soc, opts)
+        opts
+    }
+
+    fn service(&self, soc: SocConfig) -> TuneService {
+        TuneService::new(Target::new(soc), self.service_opts())
     }
 
     fn matmul_trials(&self) -> usize {
@@ -98,14 +104,14 @@ impl FigOpts {
     }
 }
 
-fn measure_cycles(s: &Session, op: &Op, sc: &Scenario) -> Option<f64> {
-    s.measure(op, sc).map(|r| r.result.cycles)
+fn measure_cycles(s: &TuneService, op: &Op, sc: &Scenario) -> Option<f64> {
+    s.measure(&MeasureRequest::new(op.clone(), sc.clone())).map(|r| r.result.cycles)
 }
 
 /// Figure 3: matmul suite on the Saturn Vector Unit (VLEN=1024), speedup
 /// over the non-tuned baseline.
 pub fn fig3(opts: &FigOpts) -> Table {
-    let mut s = opts.session(SocConfig::saturn(1024));
+    let s = opts.service(SocConfig::saturn(1024));
     let mut t = Table::new(
         "Fig 3: matmuls on Saturn VLEN=1024 (speedup vs non-tuned)",
         &["dtype", "size", "non-tuned", "O3(gcc)", "muriscv-nn", "ours", "sp(O3)", "sp(mu)", "sp(ours)"],
@@ -118,7 +124,7 @@ pub fn fig3(opts: &FigOpts) -> Table {
             let base = measure_cycles(&s, &op, &Scenario::ScalarOs).unwrap();
             let o3 = measure_cycles(&s, &op, &Scenario::AutovecGcc).unwrap();
             let mu = measure_cycles(&s, &op, &Scenario::MuRiscvNn);
-            let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+            let ours_sc = s.tuned_scenario(&op, opts.matmul_trials());
             let ours = measure_cycles(&s, &op, &ours_sc).unwrap();
             impr_vs_gcc.push(o3 / ours - 1.0);
             if let Some(mu) = mu {
@@ -159,9 +165,9 @@ pub fn fig4(opts: &FigOpts) -> Table {
         for target in ["muriscv-nn", "ours"] {
             let mut base256 = None;
             for vlen in vlens {
-                let mut s = opts.session(SocConfig::saturn(vlen));
+                let s = opts.service(SocConfig::saturn(vlen));
                 let sc = if target == "ours" {
-                    s.ours_scenario(&op, opts.matmul_trials())
+                    s.tuned_scenario(&op, opts.matmul_trials())
                 } else {
                     Scenario::MuRiscvNn
                 };
@@ -210,14 +216,14 @@ const TRACE_HEADERS: [&str; 11] = [
 
 /// Figure 5: instruction traces + code size, int8 matmuls, VLEN=1024.
 pub fn fig5(opts: &FigOpts) -> Table {
-    let mut s = opts.session(SocConfig::saturn(1024));
+    let s = opts.service(SocConfig::saturn(1024));
     let mut t = Table::new("Fig 5: instruction traces, int8 matmuls, VLEN=1024", &TRACE_HEADERS);
     for size in opts.sizes() {
         let op = matmul::matmul(size, DType::I8);
-        let mu = s.measure(&op, &Scenario::MuRiscvNn).unwrap();
+        let mu = s.measure(&MeasureRequest::new(op.clone(), Scenario::MuRiscvNn)).unwrap();
         trace_row(&mut t, &format!("mm{size}"), "muriscv-nn", &mu.result, mu.code_size_bytes);
-        let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
-        let ours = s.measure(&op, &ours_sc).unwrap();
+        let ours_sc = s.tuned_scenario(&op, opts.matmul_trials());
+        let ours = s.measure(&MeasureRequest::new(op.clone(), ours_sc)).unwrap();
         trace_row(&mut t, &format!("mm{size}"), "ours", &ours.result, ours.code_size_bytes);
         println!(
             "mm{size}: code size reduction {} (paper: ~90%), ours store share {}",
@@ -231,7 +237,7 @@ pub fn fig5(opts: &FigOpts) -> Table {
 
 /// Figure 6: matmuls on the Banana Pi BPI-F3 (VLEN=256, LLVM toolchain).
 pub fn fig6(opts: &FigOpts) -> Table {
-    let mut s = opts.session(SocConfig::bpi_f3());
+    let s = opts.service(SocConfig::bpi_f3());
     let mut t = Table::new(
         "Fig 6: matmuls on BPI-F3 (speedup vs non-tuned LLVM)",
         &["dtype", "size", "non-tuned", "non-tuned(v)", "ours", "sp(v)", "sp(ours)"],
@@ -242,7 +248,7 @@ pub fn fig6(opts: &FigOpts) -> Table {
             let op = matmul::matmul(size, dtype);
             let base = measure_cycles(&s, &op, &Scenario::ScalarOs).unwrap();
             let av = measure_cycles(&s, &op, &Scenario::AutovecLlvm).unwrap();
-            let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+            let ours_sc = s.tuned_scenario(&op, opts.matmul_trials());
             let ours = measure_cycles(&s, &op, &ours_sc).unwrap();
             impr.push(av / ours - 1.0);
             t.row(vec![
@@ -267,7 +273,7 @@ pub fn fig6(opts: &FigOpts) -> Table {
 /// Tune a model's tasks, then return ("ours") network cycles + the
 /// baselines requested.
 fn run_model(
-    s: &mut Session,
+    s: &TuneService,
     model: &models::Model,
     trials: usize,
     min_per_task: usize,
@@ -275,7 +281,7 @@ fn run_model(
     s.tune_network(&model.layers, trials, min_per_task);
     let fallback_trials = min_per_task.max(2);
     let r = s
-        .measure_network(&model.layers, &mut |s, op| s.ours_scenario(op, fallback_trials))
+        .measure_network(&model.layers, &TunedWithFallback { trials: fallback_trials })
         .expect("ours network");
     r.cycles
 }
@@ -293,20 +299,20 @@ pub fn fig7(opts: &FigOpts) -> Table {
     for name in opts.model_names(false) {
         for &dtype in dtypes {
             let model = models::by_name(name, dtype).unwrap();
-            let mut s = opts.session(SocConfig::saturn(1024));
+            let s = opts.service(SocConfig::saturn(1024));
             let base = s
-                .measure_network(&model.layers, &mut |_, _| Scenario::ScalarOs)
+                .measure_network(&model.layers, &Fixed(Scenario::ScalarOs))
                 .unwrap()
                 .cycles;
             let o3 = s
-                .measure_network(&model.layers, &mut |_, _| Scenario::AutovecGcc)
+                .measure_network(&model.layers, &Fixed(Scenario::AutovecGcc))
                 .unwrap()
                 .cycles;
             let mu = s
-                .measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+                .measure_network(&model.layers, &Fixed(Scenario::MuRiscvNn))
                 .map(|r| r.cycles);
             let ours = run_model(
-                &mut s,
+                &s,
                 &model,
                 opts.network_trials(model.default_trials),
                 opts.min_per_task(),
@@ -353,16 +359,16 @@ pub fn fig8(opts: &FigOpts) -> Table {
         for target in ["muriscv-nn", "ours"] {
             let mut base256 = None;
             for vlen in vlens {
-                let mut s = opts.session(SocConfig::saturn(vlen));
+                let s = opts.service(SocConfig::saturn(vlen));
                 let cycles = if target == "ours" {
                     run_model(
-                        &mut s,
+                        &s,
                         &model,
                         opts.network_trials(model.default_trials),
                         opts.min_per_task(),
                     )
                 } else {
-                    s.measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+                    s.measure_network(&model.layers, &Fixed(Scenario::MuRiscvNn))
                         .unwrap()
                         .cycles
                 };
@@ -390,9 +396,9 @@ pub fn fig9(opts: &FigOpts) -> Table {
     }
     for name in names {
         let model = models::by_name(name, DType::I8).unwrap();
-        let mut s = opts.session(SocConfig::saturn(1024));
+        let s = opts.service(SocConfig::saturn(1024));
         let mu = s
-            .measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+            .measure_network(&model.layers, &Fixed(Scenario::MuRiscvNn))
             .unwrap();
         s.tune_network(
             &model.layers,
@@ -401,7 +407,7 @@ pub fn fig9(opts: &FigOpts) -> Table {
         );
         let fallback = opts.min_per_task().max(2);
         let ours = s
-            .measure_network(&model.layers, &mut |s, op| s.ours_scenario(op, fallback))
+            .measure_network(&model.layers, &TunedWithFallback { trials: fallback })
             .unwrap();
         t.row(vec![
             name.into(),
@@ -452,17 +458,17 @@ pub fn fig10(opts: &FigOpts) -> Table {
     let mut impr = Vec::new();
     for name in opts.model_names(true) {
         let model = models::by_name(name, DType::I8).unwrap();
-        let mut s = opts.session(SocConfig::bpi_f3());
+        let s = opts.service(SocConfig::bpi_f3());
         let base = s
-            .measure_network(&model.layers, &mut |_, _| Scenario::ScalarOs)
+            .measure_network(&model.layers, &Fixed(Scenario::ScalarOs))
             .unwrap()
             .cycles;
         let av = s
-            .measure_network(&model.layers, &mut |_, _| Scenario::AutovecLlvm)
+            .measure_network(&model.layers, &Fixed(Scenario::AutovecLlvm))
             .unwrap()
             .cycles;
         let ours = run_model(
-            &mut s,
+            &s,
             &model,
             opts.network_trials(model.default_trials),
             opts.min_per_task(),
@@ -496,17 +502,9 @@ pub fn ablation(opts: &FigOpts, id: &str) -> Table {
             for size in opts.sizes() {
                 let op = matmul::matmul(size, DType::I8);
                 let run = |vl_ladder: bool| {
-                    let mut so = SessionOptions {
-                        seed: opts.seed,
-                        use_mlp: opts.use_mlp,
-                        vl_ladder,
-                        ..Default::default()
-                    };
-                    if opts.workers > 0 {
-                        so.workers = opts.workers;
-                    }
-                    let mut s = Session::new(SocConfig::saturn(1024), so);
-                    let sc = s.ours_scenario(&op, opts.matmul_trials());
+                    let target = Target::with_registry(SocConfig::saturn(1024), vl_ladder, true);
+                    let s = TuneService::new(target, opts.service_opts());
+                    let sc = s.tuned_scenario(&op, opts.matmul_trials());
                     measure_cycles(&s, &op, &sc).unwrap()
                 };
                 let ladder = run(true);
@@ -529,17 +527,9 @@ pub fn ablation(opts: &FigOpts, id: &str) -> Table {
             for size in [16usize, 32, 64] {
                 let op = matmul::matmul(size, DType::I8);
                 let run = |j_one: bool| {
-                    let mut so = SessionOptions {
-                        seed: opts.seed,
-                        use_mlp: opts.use_mlp,
-                        j_one,
-                        ..Default::default()
-                    };
-                    if opts.workers > 0 {
-                        so.workers = opts.workers;
-                    }
-                    let mut s = Session::new(SocConfig::saturn(1024), so);
-                    let sc = s.ours_scenario(&op, opts.matmul_trials());
+                    let target = Target::with_registry(SocConfig::saturn(1024), true, j_one);
+                    let s = TuneService::new(target, opts.service_opts());
+                    let sc = s.tuned_scenario(&op, opts.matmul_trials());
                     measure_cycles(&s, &op, &sc).unwrap()
                 };
                 let with_j1 = run(true);
@@ -555,7 +545,7 @@ pub fn ablation(opts: &FigOpts, id: &str) -> Table {
             t
         }
         "cost-model" => {
-            use crate::tune::{RandomCostModel};
+            use crate::tune::{CostModel, RandomCostModel};
             let mut t = Table::new(
                 "Ablation: cost model guidance at a fixed trial budget",
                 &["model", "best_cycles"],
@@ -563,22 +553,26 @@ pub fn ablation(opts: &FigOpts, id: &str) -> Table {
             let op = matmul::matmul(128, DType::I8);
             let budget = if opts.quick { 16 } else { 48 };
             // mlp (or heuristic fallback)
-            let mut s = opts.session(SocConfig::saturn(1024));
+            let s = opts.service(SocConfig::saturn(1024));
             let kind = s.model_kind();
-            let sc = s.ours_scenario(&op, budget);
+            let sc = s.tuned_scenario(&op, budget);
             t.row(vec![kind.into(), fnum(measure_cycles(&s, &op, &sc).unwrap())]);
             // heuristic
-            let mut so = SessionOptions { seed: opts.seed, use_mlp: false, ..Default::default() };
-            if opts.workers > 0 {
-                so.workers = opts.workers;
-            }
-            let mut s2 = Session::new(SocConfig::saturn(1024), so.clone());
-            let sc2 = s2.ours_scenario(&op, budget);
+            let mut so = opts.service_opts();
+            so.use_mlp = false;
+            let s2 = TuneService::new(Target::new(SocConfig::saturn(1024)), so.clone());
+            let sc2 = s2.tuned_scenario(&op, budget);
             t.row(vec!["heuristic".into(), fnum(measure_cycles(&s2, &op, &sc2).unwrap())]);
             // random
-            let mut s3 = Session::new(SocConfig::saturn(1024), so)
-                .with_model(Box::new(RandomCostModel(crate::util::Pcg::seeded(opts.seed))));
-            let sc3 = s3.ours_scenario(&op, budget);
+            let s3 = TuneService::new(Target::new(SocConfig::saturn(1024)), so)
+                .with_model_factory(
+                    "random",
+                    Box::new(|seed: u64| {
+                        Box::new(RandomCostModel(crate::util::Pcg::seeded(seed)))
+                            as Box<dyn CostModel>
+                    }),
+                );
+            let sc3 = s3.tuned_scenario(&op, budget);
             t.row(vec!["random".into(), fnum(measure_cycles(&s3, &op, &sc3).unwrap())]);
             opts.save(&t, "ablation_cost_model");
             t
@@ -594,7 +588,7 @@ pub fn ablation(opts: &FigOpts, id: &str) -> Table {
 /// Extension study (paper §V future work): Packed-SIMD (P extension)
 /// kernels vs scalar, autovectorization, muRISCV-NN, and tuned RVV.
 pub fn ext_pext(opts: &FigOpts) -> Table {
-    let mut s = opts.session(SocConfig::saturn(1024));
+    let s = opts.service(SocConfig::saturn(1024));
     let mut t = Table::new(
         "Extension study: Packed SIMD (P ext) vs RVV (int8, speedup vs non-tuned)",
         &["size", "non-tuned", "packed-simd", "muriscv-nn", "ours", "sp(pext)", "sp(mu)", "sp(ours)"],
@@ -604,7 +598,7 @@ pub fn ext_pext(opts: &FigOpts) -> Table {
         let base = measure_cycles(&s, &op, &Scenario::ScalarOs).unwrap();
         let pext = measure_cycles(&s, &op, &Scenario::PackedSimd).unwrap();
         let mu = measure_cycles(&s, &op, &Scenario::MuRiscvNn).unwrap();
-        let ours_sc = s.ours_scenario(&op, opts.matmul_trials());
+        let ours_sc = s.tuned_scenario(&op, opts.matmul_trials());
         let ours = measure_cycles(&s, &op, &ours_sc).unwrap();
         t.row(vec![
             size.to_string(),

@@ -3,7 +3,7 @@
 //! toolchain, so the `xla` dependency cannot resolve).
 //!
 //! Mirrors the public surface the rest of the crate touches: every
-//! constructor fails cleanly with an explanatory error, so `Session` and
+//! constructor fails cleanly with an explanatory error, so `TuneService` and
 //! `MlpCostModel::from_artifacts` fall back to the heuristic cost model
 //! exactly as they do when `make artifacts` has not run. The PJRT-backed
 //! integration tests (`tests/integration_runtime.rs`) are gated out of the

@@ -8,19 +8,8 @@
 //! mutated (evolutionary search), hashed (dedup), and serialized
 //! (database).
 
+use crate::util::hash::{fnv1a_mix, FNV_OFFSET};
 use crate::util::Json;
-
-/// FNV-1a mix of one 64-bit word into a running hash.
-#[inline]
-fn fnv1a_mix(mut h: u64, v: u64) -> u64 {
-    for b in v.to_le_bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
-const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 
 /// The tensor-intrinsic variant chosen for the inner computation
 /// (one entry of the registry in `intrinsics/`).

@@ -1,13 +1,25 @@
 //! The tuning database: every measured candidate, with JSON persistence
 //! (MetaSchedule's tuning-records database).
+//!
+//! Two flavours:
+//!
+//! * [`Database`] — the plain single-owner store the search loop writes
+//!   into (one tuning run, one `&mut`).
+//! * [`SharedDatabase`] — the service-level store: records sharded by
+//!   operator key across independently locked [`Database`] shards, so
+//!   concurrent `TuneService` requests for different operators never
+//!   contend on one global lock. Tuning runs work on a checked-out local
+//!   `Database` and commit their delta back, keeping shard critical
+//!   sections short.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::tir::Schedule;
-use crate::util::Json;
+use crate::util::{fnv1a_str, Json};
 
 /// One measured candidate.
 #[derive(Clone, Debug)]
@@ -52,7 +64,10 @@ impl TuneRecord {
 #[derive(Default)]
 pub struct Database {
     records: Vec<TuneRecord>,
-    best: BTreeMap<(String, String), usize>,
+    /// op key -> soc name -> index of the best record. Nested so lookups
+    /// borrow `&str` keys instead of allocating a `(String, String)` pair
+    /// per query (the tuned-scenario hot path queries this per layer).
+    best: BTreeMap<String, BTreeMap<String, usize>>,
 }
 
 impl Database {
@@ -61,12 +76,12 @@ impl Database {
     }
 
     pub fn add(&mut self, rec: TuneRecord) {
-        let key = (rec.op_key.clone(), rec.soc.clone());
         let idx = self.records.len();
-        match self.best.get(&key) {
+        let by_soc = self.best.entry(rec.op_key.clone()).or_default();
+        match by_soc.get(&rec.soc) {
             Some(&b) if self.records[b].cycles <= rec.cycles => {}
             _ => {
-                self.best.insert(key, idx);
+                by_soc.insert(rec.soc.clone(), idx);
             }
         }
         self.records.push(rec);
@@ -84,11 +99,9 @@ impl Database {
         &self.records
     }
 
-    /// Best record for an (op, soc) pair.
+    /// Best record for an (op, soc) pair. Allocation-free lookup.
     pub fn best(&self, op_key: &str, soc: &str) -> Option<&TuneRecord> {
-        self.best
-            .get(&(op_key.to_string(), soc.to_string()))
-            .map(|&i| &self.records[i])
+        self.best.get(op_key)?.get(soc).map(|&i| &self.records[i])
     }
 
     /// Has this exact schedule already been measured for (op, soc)?
@@ -119,6 +132,115 @@ impl Database {
             db.add(rec);
         }
         Ok(db)
+    }
+}
+
+/// Thread-safe record store for the service layer: records are sharded by
+/// operator key, each shard behind its own lock. Requests touching
+/// different operators proceed in parallel; a tuning run checks out the
+/// relevant records, tunes against a private [`Database`], and commits the
+/// delta — so no shard lock is held across a measurement.
+pub struct SharedDatabase {
+    shards: Vec<Mutex<Database>>,
+}
+
+impl SharedDatabase {
+    /// Default shard count: enough to make same-shard collisions between a
+    /// handful of concurrent requests unlikely, cheap enough to snapshot.
+    pub const DEFAULT_SHARDS: usize = 16;
+
+    pub fn new(shards: usize) -> SharedDatabase {
+        let shards = shards.max(1);
+        SharedDatabase { shards: (0..shards).map(|_| Mutex::new(Database::new())).collect() }
+    }
+
+    /// Wrap an existing (e.g. loaded) database, distributing its records.
+    pub fn from_database(db: Database, shards: usize) -> SharedDatabase {
+        let shared = SharedDatabase::new(shards);
+        for rec in db.records {
+            shared.add(rec);
+        }
+        shared
+    }
+
+    fn shard(&self, op_key: &str) -> &Mutex<Database> {
+        let i = (fnv1a_str(op_key) as usize) % self.shards.len();
+        &self.shards[i]
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Insert one record (takes the owning shard's lock briefly).
+    pub fn add(&self, rec: TuneRecord) {
+        self.shard(&rec.op_key).lock().unwrap().add(rec);
+    }
+
+    /// Cloned best record for an (op, soc) pair.
+    pub fn best(&self, op_key: &str, soc: &str) -> Option<TuneRecord> {
+        self.shard(op_key).lock().unwrap().best(op_key, soc).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+    }
+
+    /// Check out a private database seeded with every record already
+    /// measured for `(op_key, soc)` — the search loop dedups against these
+    /// — releasing the shard lock before any tuning work starts.
+    pub fn checkout(&self, op_key: &str, soc: &str) -> Database {
+        let shard = self.shard(op_key).lock().unwrap();
+        let mut local = Database::new();
+        for rec in shard.records().iter().filter(|r| r.op_key == op_key && r.soc == soc) {
+            local.add(rec.clone());
+        }
+        local
+    }
+
+    /// Commit the records a tuning run appended to its checked-out
+    /// database: `local.records()[seeded..]`, where `seeded` is
+    /// `local.len()` as returned by `checkout` (the pre-seeded prefix,
+    /// which must not be re-inserted).
+    ///
+    /// The delta is committed atomically per operator — the owning shard's
+    /// lock is held across each operator's whole run of records — so
+    /// concurrent `best`/`snapshot` readers see none or all of a tuning
+    /// run, never a torn prefix.
+    pub fn commit(&self, local: &Database, seeded: usize) {
+        let delta = &local.records()[seeded..];
+        let mut i = 0;
+        while i < delta.len() {
+            let key = &delta[i].op_key;
+            let mut shard = self.shard(key).lock().unwrap();
+            while i < delta.len() && &delta[i].op_key == key {
+                shard.add(delta[i].clone());
+                i += 1;
+            }
+        }
+    }
+
+    /// Merged copy of every shard (shard-major, insertion order within a
+    /// shard) — for persistence and offline reports. Per-(op, soc) best
+    /// lookups on the snapshot agree with [`SharedDatabase::best`] because
+    /// ties keep the earliest record within each op's (single-shard)
+    /// stream.
+    pub fn snapshot(&self) -> Database {
+        let mut merged = Database::new();
+        for shard in &self.shards {
+            for rec in shard.lock().unwrap().records() {
+                merged.add(rec.clone());
+            }
+        }
+        merged
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.snapshot().save(path)
     }
 }
 
@@ -186,5 +308,51 @@ mod tests {
         db.add(r);
         assert!(db.contains("a", "saturn-256", &s));
         assert!(!db.contains("a", "bpi-f3", &s));
+    }
+
+    #[test]
+    fn shared_checkout_commit_roundtrip() {
+        let shared = SharedDatabase::new(4);
+        shared.add(rec("a", 500.0, 0));
+        shared.add(rec("b", 50.0, 0));
+        // Checkout sees only (op, soc)-matching records.
+        let local = shared.checkout("a", "saturn-256");
+        assert_eq!(local.len(), 1);
+        assert!(shared.checkout("a", "bpi-f3").is_empty());
+        // A tuning run appends to its private copy, then commits the delta.
+        let seeded = local.len();
+        let mut local = local;
+        local.add(rec("a", 300.0, 1));
+        local.add(rec("a", 400.0, 2));
+        shared.commit(&local, seeded);
+        assert_eq!(shared.len(), 4);
+        assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 300.0);
+        assert_eq!(shared.best("b", "saturn-256").unwrap().cycles, 50.0);
+    }
+
+    #[test]
+    fn shared_snapshot_preserves_bests() {
+        let shared = SharedDatabase::new(3);
+        for (op, cycles) in [("a", 500.0), ("a", 300.0), ("b", 100.0), ("c", 9.0)] {
+            shared.add(rec(op, cycles, 0));
+        }
+        let snap = shared.snapshot();
+        assert_eq!(snap.len(), 4);
+        for op in ["a", "b", "c"] {
+            assert_eq!(
+                snap.best(op, "saturn-256").unwrap().cycles,
+                shared.best(op, "saturn-256").unwrap().cycles
+            );
+        }
+    }
+
+    #[test]
+    fn shared_from_database_redistributes() {
+        let mut db = Database::new();
+        db.add(rec("x", 10.0, 0));
+        db.add(rec("y", 20.0, 0));
+        let shared = SharedDatabase::from_database(db, 8);
+        assert_eq!(shared.len(), 2);
+        assert_eq!(shared.best("y", "saturn-256").unwrap().cycles, 20.0);
     }
 }

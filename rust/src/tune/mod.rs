@@ -17,7 +17,7 @@ pub mod space;
 pub mod task;
 
 pub use costmodel::{CostModel, HeuristicCostModel, MlpCostModel, RandomCostModel};
-pub use database::{Database, TuneRecord};
+pub use database::{Database, SharedDatabase, TuneRecord};
 pub use features::FEATURE_DIM;
 pub use search::{
     tune_op, MeasureTicket, Measurer, Prepared, PrepareTicket, SearchConfig, SerialMeasurer,

@@ -60,7 +60,7 @@ pub fn allocate_trials(tasks: &[TuneTask], total: usize, min_per_task: usize) ->
         let mut order: Vec<usize> = (0..tasks.len()).collect();
         order.sort_by(|&a, &b| tasks[b].weight().partial_cmp(&tasks[a].weight()).unwrap());
         let mut left = total - assigned;
-        for &i in order.iter().cycle().take(left.min(1000) * 1) {
+        for &i in order.iter().cycle().take(left.min(1000)) {
             if left == 0 {
                 break;
             }

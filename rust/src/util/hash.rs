@@ -1,0 +1,60 @@
+//! The crate's one FNV-1a implementation.
+//!
+//! Both the schedule dedup key (`tir::Schedule::struct_hash`) and the
+//! per-operator tuning seeds (`coordinator::TuneService`) need a tiny,
+//! deterministic, dependency-free 64-bit hash. They used to hand-roll the
+//! same primes independently; this module is now the single home of the
+//! constants and the mixing steps.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Mix one byte into a running FNV-1a hash.
+#[inline]
+pub fn fnv1a_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// Mix one 64-bit word (little-endian byte order) into a running hash.
+#[inline]
+pub fn fnv1a_mix(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = fnv1a_byte(h, b);
+    }
+    h
+}
+
+/// Hash a whole string from the offset basis.
+#[inline]
+pub fn fnv1a_str(s: &str) -> u64 {
+    s.bytes().fold(FNV_OFFSET, fnv1a_byte)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn str_hash_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a_str(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_str("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_str("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn mix_is_order_sensitive() {
+        let a = fnv1a_mix(fnv1a_mix(FNV_OFFSET, 1), 2);
+        let b = fnv1a_mix(fnv1a_mix(FNV_OFFSET, 2), 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix_equals_bytewise_feed() {
+        let v: u64 = 0x0123456789abcdef;
+        let bytewise = v.to_le_bytes().iter().fold(FNV_OFFSET, |h, &b| fnv1a_byte(h, b));
+        assert_eq!(fnv1a_mix(FNV_OFFSET, v), bytewise);
+    }
+}

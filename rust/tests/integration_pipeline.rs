@@ -2,7 +2,7 @@
 //! dtypes — consistency of the measurement pipeline the figures rely on.
 
 use rvv_tune::codegen::{self, Scenario};
-use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::coordinator::{Fixed, ServiceOptions, Target, TuneService};
 use rvv_tune::isa::InstrGroup;
 use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
 use rvv_tune::tir::{DType, Op, Requant};
@@ -77,14 +77,14 @@ fn muriscvnn_is_store_heavier_than_autovec_epilogue_free_path() {
 }
 
 #[test]
-fn session_network_measurement_is_deterministic() {
+fn service_network_measurement_is_deterministic() {
     let model = models::by_name("keyword-spotting", DType::I8).unwrap();
     let run = || {
-        let mut s = Session::new(
-            SocConfig::saturn(256),
-            SessionOptions { use_mlp: false, workers: 4, ..Default::default() },
+        let s = TuneService::new(
+            Target::new(SocConfig::saturn(256)),
+            ServiceOptions { use_mlp: false, workers: 4, ..Default::default() },
         );
-        s.measure_network(&model.layers, &mut |_, _| Scenario::MuRiscvNn)
+        s.measure_network(&model.layers, &Fixed(Scenario::MuRiscvNn))
             .unwrap()
             .cycles
     };

@@ -1,27 +1,35 @@
-//! Integration: the tuning stack end-to-end (session, task allocation,
-//! database persistence, ablation registries, fallbacks).
+//! Integration: the tuning stack end-to-end (service, task allocation,
+//! database persistence, ablation registries, fallbacks, and the
+//! concurrent-request determinism guarantee).
 
 use rvv_tune::codegen::Scenario;
-use rvv_tune::coordinator::{Session, SessionOptions};
+use rvv_tune::coordinator::{
+    Fixed, MeasureRequest, ServiceOptions, Target, TuneRequest, TuneService, TunedWithFallback,
+};
 use rvv_tune::sim::SocConfig;
 use rvv_tune::tir::{DType, Op};
 use rvv_tune::tune::Database;
 use rvv_tune::workloads::{matmul, models};
 
-fn session(vlen: u32) -> Session {
-    Session::new(
-        SocConfig::saturn(vlen),
-        SessionOptions { use_mlp: false, workers: 4, ..Default::default() },
+fn service(vlen: u32) -> TuneService {
+    TuneService::new(
+        Target::new(SocConfig::saturn(vlen)),
+        ServiceOptions { use_mlp: false, workers: 4, ..Default::default() },
     )
+}
+
+fn tune_one(s: &TuneService, op: &Op, trials: usize) -> rvv_tune::tune::TuneOutcome {
+    s.tune(&TuneRequest::new(op.clone(), trials)).outcome.expect("tunable")
 }
 
 #[test]
 fn tuning_improves_over_first_round_median() {
-    let mut s = session(1024);
+    let s = service(1024);
     let op = matmul::matmul(128, DType::I8);
-    let out = s.tune(&op, 64).unwrap();
+    let out = tune_one(&s, &op, 64);
     // The best must be at least as good as the measured median.
-    let mut cycles: Vec<f64> = s.db.records().iter().map(|r| r.cycles).collect();
+    let snapshot = s.db().snapshot();
+    let mut cycles: Vec<f64> = snapshot.records().iter().map(|r| r.cycles).collect();
     cycles.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median = cycles[cycles.len() / 2];
     assert!(out.best.cycles <= median);
@@ -32,11 +40,11 @@ fn tuning_improves_over_first_round_median() {
 fn tune_is_deterministic_per_seed_and_differs_across_seeds() {
     let op = matmul::matmul(64, DType::I8);
     let run = |seed: u64| {
-        let mut s = Session::new(
-            SocConfig::saturn(256),
-            SessionOptions { use_mlp: false, seed, workers: 1, ..Default::default() },
+        let s = TuneService::new(
+            Target::new(SocConfig::saturn(256)),
+            ServiceOptions { use_mlp: false, seed, workers: 1, ..Default::default() },
         );
-        let o = s.tune(&op, 32).unwrap();
+        let o = tune_one(&s, &op, 32);
         (o.best.cycles, o.best.schedule.describe())
     };
     assert_eq!(run(7), run(7));
@@ -45,17 +53,121 @@ fn tune_is_deterministic_per_seed_and_differs_across_seeds() {
     let _ = run(8);
 }
 
+/// The tentpole guarantee of the service API: N threads sharing one
+/// `TuneService` and tuning disjoint operators produce bit-identical
+/// outcomes and a consistent database versus the same requests served
+/// serially (each request's seed depends only on the service seed and the
+/// operator key, never on thread interleaving).
 #[test]
-fn database_roundtrip_through_session() {
-    let mut s = session(256);
+fn concurrent_service_matches_serial() {
+    let ops: Vec<Op> = [16usize, 32, 48, 64, 96]
+        .iter()
+        .map(|&s| Op::square_matmul(s, DType::I8))
+        .collect();
+    let opts = ServiceOptions { use_mlp: false, workers: 2, ..Default::default() };
+
+    // Serial reference: one request after another.
+    let serial = TuneService::new(Target::new(SocConfig::saturn(256)), opts.clone());
+    let serial_outcomes: Vec<_> =
+        ops.iter().map(|op| tune_one(&serial, op, 24)).collect();
+
+    // Concurrent run: every request from its own thread, one shared service.
+    let shared = TuneService::new(Target::new(SocConfig::saturn(256)), opts);
+    let concurrent_outcomes: Vec<_> = std::thread::scope(|scope| {
+        let svc = &shared;
+        let handles: Vec<_> = ops
+            .iter()
+            .map(|op| {
+                let op = op.clone();
+                scope.spawn(move || tune_one(svc, &op, 24))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (op, (a, b)) in ops.iter().zip(serial_outcomes.iter().zip(&concurrent_outcomes)) {
+        assert_eq!(a.best.cycles, b.best.cycles, "{}: best cycles", op.key());
+        assert_eq!(a.best.schedule, b.best.schedule, "{}: best schedule", op.key());
+        assert_eq!(a.history, b.history, "{}: convergence history", op.key());
+        assert_eq!(a.trials_measured, b.trials_measured, "{}: trials", op.key());
+    }
+
+    // Consistent database: the same records per operator, independent of
+    // shard interleaving (order within one op's stream is preserved by the
+    // trial counter).
+    let canonical = |db: &Database| {
+        let mut v: Vec<(String, usize, u64, f64)> = db
+            .records()
+            .iter()
+            .map(|r| (r.op_key.clone(), r.trial, r.schedule.struct_hash(), r.cycles))
+            .collect();
+        v.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        v
+    };
+    assert_eq!(
+        canonical(&serial.db().snapshot()),
+        canonical(&shared.db().snapshot()),
+        "serial and concurrent databases must hold identical records"
+    );
+}
+
+/// Same-op requests serialize on the per-operator in-flight lock: K
+/// concurrent tune requests for one operator must leave the database in
+/// exactly the state K back-to-back serial requests leave it in (each run
+/// dedups against its predecessors' records — never duplicates them).
+#[test]
+fn concurrent_same_op_requests_match_serial() {
+    let op = Op::square_matmul(32, DType::I8);
+    let opts = ServiceOptions { use_mlp: false, workers: 2, ..Default::default() };
+    let runs = 3usize;
+
+    let serial = TuneService::new(Target::new(SocConfig::saturn(256)), opts.clone());
+    for _ in 0..runs {
+        tune_one(&serial, &op, 8);
+    }
+
+    let shared = TuneService::new(Target::new(SocConfig::saturn(256)), opts);
+    std::thread::scope(|scope| {
+        let svc = &shared;
+        let handles: Vec<_> = (0..runs)
+            .map(|_| {
+                let op = op.clone();
+                scope.spawn(move || tune_one(svc, &op, 8))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let canonical = |db: &Database| {
+        let mut v: Vec<u64> =
+            db.records().iter().map(|r| r.schedule.struct_hash()).collect();
+        v.sort_unstable();
+        v
+    };
+    let serial_hashes = canonical(&serial.db().snapshot());
+    let shared_hashes = canonical(&shared.db().snapshot());
+    // No duplicates in either run...
+    let mut dedup = shared_hashes.clone();
+    dedup.dedup();
+    assert_eq!(dedup.len(), shared_hashes.len(), "concurrent run measured a schedule twice");
+    // ...and the same set of measured schedules overall.
+    assert_eq!(serial_hashes, shared_hashes);
+    assert_eq!(serial.db().len(), shared.db().len());
+}
+
+#[test]
+fn database_roundtrip_through_service() {
+    let s = service(256);
     let op = matmul::matmul(32, DType::I8);
-    s.tune(&op, 16).unwrap();
+    tune_one(&s, &op, 16);
     let dir = std::env::temp_dir().join("rvv-tune-int-db");
-    let path = dir.join("session.json");
-    s.db.save(&path).unwrap();
+    let path = dir.join("service.json");
+    s.db().save(&path).unwrap();
     let loaded = Database::load(&path).unwrap();
-    assert_eq!(loaded.len(), s.db.len());
-    let best_orig = s.db.best(&op.key(), "saturn-256").unwrap();
+    assert_eq!(loaded.len(), s.db().len());
+    let best_orig = s.db().best(&op.key(), "saturn-256").unwrap();
     let best_back = loaded.best(&op.key(), "saturn-256").unwrap();
     assert_eq!(best_orig.cycles, best_back.cycles);
     assert_eq!(best_orig.schedule, best_back.schedule);
@@ -64,7 +176,7 @@ fn database_roundtrip_through_session() {
 
 #[test]
 fn network_budget_allocation_respects_paper_floor() {
-    let mut s = session(256);
+    let s = service(256);
     let model = models::by_name("keyword-spotting", DType::I8).unwrap();
     let outcomes = s.tune_network(&model.layers, 60, 5);
     assert_eq!(outcomes.len(), model.distinct_tasks());
@@ -75,17 +187,17 @@ fn network_budget_allocation_respects_paper_floor() {
 }
 
 #[test]
-fn ours_scenario_falls_back_when_untunable() {
-    let mut s = session(256);
+fn tuned_scenario_falls_back_when_untunable() {
+    let s = service(256);
     // channels=3 < MIN_VL: no Algorithm-2 variant matches.
     let op = Op::DwConv { spatial: 4, channels: 3, taps: 9, dtype: DType::I8, requant: None };
-    let sc = s.ours_scenario(&op, 8);
+    let sc = s.tuned_scenario(&op, 8);
     assert_eq!(sc, Scenario::AutovecGcc, "saturn fallback is the GCC flavour");
-    let mut b = Session::new(
-        SocConfig::bpi_f3(),
-        SessionOptions { use_mlp: false, ..Default::default() },
+    let b = TuneService::new(
+        Target::new(SocConfig::bpi_f3()),
+        ServiceOptions { use_mlp: false, ..Default::default() },
     );
-    assert_eq!(b.ours_scenario(&op, 8), Scenario::AutovecLlvm);
+    assert_eq!(b.tuned_scenario(&op, 8), Scenario::AutovecLlvm);
 }
 
 #[test]
@@ -94,12 +206,12 @@ fn vl_ladder_ablation_hurts_small_matmuls() {
     // lose coverage. The tuned result must never be better without it.
     let op = matmul::matmul(32, DType::I8);
     let best = |vl_ladder: bool| {
-        let mut s = Session::new(
-            SocConfig::saturn(1024),
-            SessionOptions { use_mlp: false, vl_ladder, workers: 2, ..Default::default() },
+        let s = TuneService::new(
+            Target::with_registry(SocConfig::saturn(1024), vl_ladder, true),
+            ServiceOptions { use_mlp: false, workers: 2, ..Default::default() },
         );
-        let sc = s.ours_scenario(&op, 32);
-        s.measure(&op, &sc).unwrap().result.cycles
+        let sc = s.tuned_scenario(&op, 32);
+        s.measure(&MeasureRequest::new(op.clone(), sc)).unwrap().result.cycles
     };
     let with = best(true);
     let without = best(false);
@@ -113,12 +225,12 @@ fn j_one_ablation_loses_the_size16_case() {
     // must not *improve* it.
     let op = matmul::matmul(16, DType::I8);
     let best = |j_one: bool| {
-        let mut s = Session::new(
-            SocConfig::saturn(1024),
-            SessionOptions { use_mlp: false, j_one, workers: 2, ..Default::default() },
+        let s = TuneService::new(
+            Target::with_registry(SocConfig::saturn(1024), true, j_one),
+            ServiceOptions { use_mlp: false, workers: 2, ..Default::default() },
         );
-        let sc = s.ours_scenario(&op, 32);
-        s.measure(&op, &sc).unwrap().result.cycles
+        let sc = s.tuned_scenario(&op, 32);
+        s.measure(&MeasureRequest::new(op.clone(), sc)).unwrap().result.cycles
     };
     assert!(best(true) <= best(false) * 1.02);
 }
@@ -127,16 +239,16 @@ fn j_one_ablation_loses_the_size16_case() {
 fn full_network_tuned_beats_all_baselines_with_paper_budget() {
     // keyword-spotting at the paper's budget on VLEN=1024 — the Figure-7
     // headline, end to end.
-    let mut s = session(1024);
+    let s = service(1024);
     let model = models::by_name("keyword-spotting", DType::I8).unwrap();
     s.tune_network(&model.layers, 200, 10);
     let ours = s
-        .measure_network(&model.layers, &mut |s, op| s.ours_scenario(op, 5))
+        .measure_network(&model.layers, &TunedWithFallback { trials: 5 })
         .unwrap()
         .cycles;
     for baseline in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn] {
         let b = s
-            .measure_network(&model.layers, &mut |_, _| baseline.clone())
+            .measure_network(&model.layers, &Fixed(baseline.clone()))
             .unwrap()
             .cycles;
         assert!(ours < b, "ours {ours} vs {} {b}", baseline.name());
