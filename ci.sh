@@ -11,6 +11,22 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== lint: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+  # Advisory until the pre-existing tree is reformatted in one sweep: the
+  # seed code predates the check and is not yet rustfmt-clean, so drift is
+  # reported (for review) without failing CI. Flip to a hard failure by
+  # exporting CI_STRICT_FMT=1 once `cargo fmt` has been run tree-wide.
+  if ! cargo fmt --check; then
+    if [ "${CI_STRICT_FMT:-0}" = "1" ]; then
+      echo "fmt check failed (CI_STRICT_FMT=1)"; exit 1
+    fi
+    echo "warning: rustfmt drift detected (advisory; see diff above)"
+  fi
+else
+  echo "rustfmt component not installed in this toolchain; fmt check skipped"
+fi
+
 echo "== lint: cargo clippy --all-targets -- -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

@@ -24,7 +24,7 @@ use std::time::Instant;
 
 use rvv_tune::codegen::Scenario;
 use rvv_tune::coordinator::{
-    Fixed, MeasurePool, ServiceOptions, Target, TuneService, TunedWithFallback,
+    Fixed, MeasurePool, SchedulerKind, ServiceOptions, Target, TuneService, TunedWithFallback,
 };
 use rvv_tune::sim::SocConfig;
 use rvv_tune::tir::DType;
@@ -41,13 +41,19 @@ struct NetworkRun {
     mu: f64,
     ours: f64,
     candidates: usize,
+    /// First and last point of the gradient scheduler's convergence curve
+    /// (estimated network cycles).
+    converge: Option<(f64, f64)>,
 }
 
 fn run_network(name: &'static str, quick: bool, workers: usize) -> NetworkRun {
     let model = models::by_name(name, DType::I8).unwrap();
+    // The gradient task scheduler spends the network budget where the
+    // expected end-to-end improvement is largest (MetaSchedule-style),
+    // instead of the static up-front split.
     let service = TuneService::new(
         Target::new(SocConfig::saturn(1024)),
-        ServiceOptions { workers, ..Default::default() },
+        ServiceOptions { workers, scheduler: SchedulerKind::Gradient, ..Default::default() },
     );
 
     // Baselines.
@@ -68,16 +74,17 @@ fn run_network(name: &'static str, quick: bool, workers: usize) -> NetworkRun {
     // the best schedules (TunedWithFallback reuses the database bests).
     let trials = if quick { 30 } else { model.default_trials };
     let min_per = if quick { 3 } else { 10 };
-    let outcomes = service.tune_network(&model.layers, trials, min_per);
-    let candidates = outcomes
-        .iter()
-        .filter_map(|(_, o)| o.as_ref().map(|o| o.trials_measured))
-        .sum::<usize>();
+    let report = service.tune_network(&model.layers, trials, min_per);
+    let candidates = report.trials_measured;
+    let converge = match (report.convergence.first(), report.convergence.last()) {
+        (Some(&first), Some(&last)) => Some((first, last)),
+        _ => None,
+    };
     let ours = service
         .measure_network(&model.layers, &TunedWithFallback { trials: min_per })
         .unwrap()
         .cycles;
-    NetworkRun { name, base, o3, mu, ours, candidates }
+    NetworkRun { name, base, o3, mu, ours, candidates, converge }
 }
 
 fn main() {
@@ -121,6 +128,20 @@ fn main() {
             (r.o3 / r.ours - 1.0) * 100.0,
             (r.mu / r.ours - 1.0) * 100.0
         );
+    }
+
+    println!("\nscheduler convergence (gradient, est. network cycles over the run):");
+    for r in &runs {
+        match r.converge {
+            Some((first, last)) => println!(
+                "  {:<22} {:>12.0} -> {:>12.0} ({:.1}% within the tuning run)",
+                r.name,
+                first,
+                last,
+                (first / last.max(1e-9) - 1.0) * 100.0
+            ),
+            None => println!("  {:<22} (no tunable tasks)", r.name),
+        }
     }
 
     let dt = wall.elapsed().as_secs_f64();

@@ -42,6 +42,9 @@ mod service;
 pub use policy::{Fixed, ScenarioPolicy, TunedWithFallback};
 pub use pool::MeasurePool;
 pub use service::{
-    MeasureRequest, Measurement, ModelFactory, NetworkMeasurement, ServiceOptions, Target,
-    TuneReport, TuneRequest, TuneService,
+    MeasureRequest, Measurement, ModelFactory, NetworkMeasurement, NetworkTuneReport,
+    ServiceOptions, Target, TuneReport, TuneRequest, TuneService,
 };
+// The scheduler selection lives in `tune`; re-exported here because it is
+// set through `ServiceOptions`.
+pub use crate::tune::SchedulerKind;

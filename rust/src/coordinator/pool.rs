@@ -423,4 +423,63 @@ mod tests {
             assert_eq!(serial.3, pooled.3, "{workers} workers: full record stream");
         }
     }
+
+    /// The network scheduler interleaves rounds from *different* operators
+    /// through one shared pool: while op A's round N measures, op B's
+    /// round is prepared on the same workers. Two resumable tuners stepped
+    /// alternately must produce exactly the outcomes each produces when
+    /// run alone over the serial measurer — per-op state is fully
+    /// isolated and batches rendezvous independently.
+    #[test]
+    fn interleaved_op_tuners_match_isolated_runs() {
+        use crate::tune::{OpTuner, RoundOutcome};
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let ops = [Op::square_matmul(32, DType::I8), Op::square_matmul(48, DType::I8)];
+        let config = |op: &Op| SearchConfig {
+            trials: 24,
+            seed: crate::util::fnv1a_str(&op.key()),
+            ..Default::default()
+        };
+
+        let solo: Vec<(f64, Vec<f64>)> = ops
+            .iter()
+            .map(|op| {
+                let mut model = HeuristicCostModel;
+                let mut db = Database::new();
+                let out = tune_op(
+                    op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config(op),
+                )
+                .unwrap();
+                (out.best.cycles, out.history)
+            })
+            .collect();
+
+        let pool = MeasurePool::new(3);
+        let mut models = [HeuristicCostModel, HeuristicCostModel];
+        let mut dbs = [Database::new(), Database::new()];
+        let mut tuners: Vec<Option<OpTuner<'_>>> = ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| OpTuner::new(op, &soc, &registry, &pool, &dbs[i], config(op)))
+            .collect();
+        loop {
+            let mut progressed = false;
+            for i in 0..tuners.len() {
+                if let Some(t) = tuners[i].as_mut() {
+                    if t.step_round(&mut models[i], &mut dbs[i]) == RoundOutcome::Progressed {
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        for (i, slot) in tuners.iter_mut().enumerate() {
+            let out = slot.take().unwrap().finish(&mut models[i], &mut dbs[i]).unwrap();
+            assert_eq!(out.best.cycles, solo[i].0, "op {i}: best cycles");
+            assert_eq!(out.history, solo[i].1, "op {i}: history");
+        }
+    }
 }

@@ -25,8 +25,9 @@ use crate::intrinsics::Registry;
 use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, TraceCounts};
 use crate::tir::Op;
 use crate::tune::{
-    allocate_trials, extract_tasks, tune_op, CostModel, Database, HeuristicCostModel,
-    MlpCostModel, SearchConfig, SharedDatabase, TuneOutcome, TuneRecord,
+    extract_tasks, tune_op, CostModel, Database, HeuristicCostModel, MlpCostModel, OpTuner,
+    RoundOutcome, SchedulerKind, SearchConfig, SharedDatabase, TaskScheduler, TaskView,
+    TuneOutcome, TuneRecord, TuneTask,
 };
 use crate::util::fnv1a_str;
 
@@ -75,6 +76,12 @@ pub struct ServiceOptions {
     /// Shards of the service database (concurrent requests for different
     /// operators lock different shards).
     pub db_shards: usize,
+    /// How `tune_network` spends the shared trial budget across tasks.
+    /// [`SchedulerKind::Gradient`] (the default) reallocates rounds toward
+    /// the tasks with the best expected end-to-end improvement;
+    /// [`SchedulerKind::Static`] is the up-front proportional split kept
+    /// as the ablation baseline.
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for ServiceOptions {
@@ -84,6 +91,7 @@ impl Default for ServiceOptions {
             use_mlp: true,
             workers: MeasurePool::default_workers(),
             db_shards: SharedDatabase::DEFAULT_SHARDS,
+            scheduler: SchedulerKind::Gradient,
         }
     }
 }
@@ -149,6 +157,73 @@ pub struct NetworkMeasurement {
     pub cycles: f64,
     pub trace: TraceCounts,
     pub code_size_bytes: u64,
+}
+
+/// Result of a whole-network tuning run ([`TuneService::tune_network`]).
+#[derive(Clone, Debug)]
+pub struct NetworkTuneReport {
+    /// Which task scheduler spent the budget.
+    pub scheduler: &'static str,
+    /// Per-task outcomes, keyed by op key (task order). `None` = no
+    /// intrinsic variant matches the operator (that layer falls back to
+    /// the compiler's vectorization).
+    pub outcomes: Vec<(String, Option<TuneOutcome>)>,
+    /// The per-network convergence curve: estimated end-to-end network
+    /// cycles (Σ occurrences × best cycles over the tunable tasks) after
+    /// each scheduled round, starting from the first round at which every
+    /// tunable task has a measured best. Monotone non-increasing — bests
+    /// only improve.
+    pub convergence: Vec<f64>,
+    /// Total candidates measured across all tasks.
+    pub trials_measured: usize,
+}
+
+impl NetworkTuneReport {
+    /// Final point of the convergence curve, if any round produced one.
+    pub fn final_estimate(&self) -> Option<f64> {
+        self.convergence.last().copied()
+    }
+}
+
+/// Per-task state the network driver threads between scheduler picks: the
+/// resumable tuner plus everything it does not own — the cost model, the
+/// checked-out database, and the commit watermark.
+struct TaskRun<'a> {
+    task: &'a TuneTask,
+    key: String,
+    tunable: bool,
+    done: bool,
+    cap: usize,
+    /// `local.records()[..committed]` has already been committed to the
+    /// shared database (including the checked-out seed prefix).
+    committed: usize,
+    local: Database,
+    model: Box<dyn CostModel>,
+    tuner: Option<OpTuner<'a>>,
+}
+
+/// Append one convergence point: Σ occurrences × best cycles over the
+/// tunable tasks, but only once *every* tunable task has a best (before
+/// that a new task's first measurement would grow the sum and break
+/// monotonicity).
+fn push_convergence(curve: &mut Vec<f64>, runs: &[TaskRun<'_>], soc: &str) {
+    let mut total = 0.0;
+    let mut any = false;
+    for r in runs {
+        if !r.tunable {
+            continue;
+        }
+        match r.local.best(&r.key, soc) {
+            Some(best) => {
+                total += best.cycles * r.task.count as f64;
+                any = true;
+            }
+            None => return,
+        }
+    }
+    if any {
+        curve.push(total);
+    }
 }
 
 /// Per-request cost-model constructor: called with the request's search
@@ -338,22 +413,163 @@ impl TuneService {
         })
     }
 
-    /// Tune a whole network: extract tasks, allocate the budget (paper:
-    /// 200 trials, min 10 per layer), tune each task. Returns per-task
-    /// outcomes keyed by op key.
+    /// Tune a whole network under one shared trial budget (paper: 200
+    /// trials, min 10 per layer), spending it with the scheduler selected
+    /// in [`ServiceOptions::scheduler`].
     pub fn tune_network(
         &self,
         layers: &[Op],
         total_trials: usize,
         min_per_task: usize,
-    ) -> Vec<(String, Option<TuneOutcome>)> {
+    ) -> NetworkTuneReport {
+        let mut sched = self.opts.scheduler.make();
+        self.tune_network_with(layers, total_trials, min_per_task, sched.as_mut())
+    }
+
+    /// [`TuneService::tune_network`] with an explicit scheduler (the
+    /// static-vs-gradient ablation drives both through here).
+    ///
+    /// The driver owns one resumable [`OpTuner`] per task and advances
+    /// whichever the scheduler picks by one round, so rounds from
+    /// different operators interleave through the shared worker pool
+    /// (preparation of one op's round overlaps measurement of another's).
+    /// Each task's delta is committed to the shared database as its
+    /// rounds drain — concurrent `best` readers see tuned schedules
+    /// appear mid-run — and every scheduling decision is a function of
+    /// deterministic tuner state only, so the result is bit-identical for
+    /// any worker count.
+    pub fn tune_network_with(
+        &self,
+        layers: &[Op],
+        total_trials: usize,
+        min_per_task: usize,
+        sched: &mut dyn TaskScheduler,
+    ) -> NetworkTuneReport {
+        let soc_name = self.target.soc.name.clone();
         let tasks = extract_tasks(layers);
-        let alloc = allocate_trials(&tasks, total_trials, min_per_task);
-        tasks
+        let plan = sched.plan(&tasks, total_trials, min_per_task);
+        // Hard contract check (zip below would silently drop trailing
+        // tasks): a plan must cap every task exactly once.
+        assert_eq!(
+            plan.caps.len(),
+            tasks.len(),
+            "scheduler `{}` planned {} caps for {} tasks",
+            sched.name(),
+            plan.caps.len(),
+            tasks.len()
+        );
+
+        // Hold every task's in-flight lock for the whole run: rounds of
+        // all tasks interleave, so same-op requests must serialize against
+        // the full network run, not one task's slice. `extract_tasks`
+        // returns tasks sorted by op key, so any two network runs acquire
+        // in the same global order (no deadlock), and single-op requests
+        // take exactly one of these locks.
+        let locks: Vec<Arc<Mutex<()>>> =
+            tasks.iter().map(|t| self.op_lock(&t.op.key())).collect();
+        let _guards: Vec<_> = locks.iter().map(|l| l.lock().unwrap()).collect();
+
+        let mut runs: Vec<TaskRun<'_>> = tasks
             .iter()
-            .zip(alloc)
-            .map(|(t, trials)| (t.op.key(), self.tune_with_budget(&t.op, trials)))
-            .collect()
+            .zip(&plan.caps)
+            .map(|(t, &cap)| {
+                let key = t.op.key();
+                let config = SearchConfig {
+                    trials: cap,
+                    seed: self.opts.seed ^ fnv1a_str(&key),
+                    ..Default::default()
+                };
+                let model = (self.model_factory)(config.seed);
+                let local = self.db.checkout(&key, &soc_name);
+                let committed = local.len();
+                let tuner = OpTuner::new(
+                    &t.op,
+                    &self.target.soc,
+                    &self.target.registry,
+                    &self.pool,
+                    &local,
+                    config,
+                );
+                let tunable = tuner.is_some();
+                TaskRun {
+                    task: t,
+                    key,
+                    tunable,
+                    done: !tunable,
+                    cap,
+                    committed,
+                    local,
+                    model,
+                    tuner,
+                }
+            })
+            .collect();
+
+        let mut remaining = plan.total;
+        let mut convergence: Vec<f64> = Vec::new();
+        // Strikes against a scheduler that violates its contract by
+        // picking finished tasks: such picks are skipped so the other
+        // tasks keep tuning, but a scheduler that only produces bad picks
+        // must not spin forever.
+        let mut bad_picks = 0usize;
+        while remaining > 0 && bad_picks <= runs.len() {
+            let views: Vec<TaskView<'_>> = runs
+                .iter()
+                .map(|r| TaskView {
+                    weight: r.task.weight(),
+                    best_cycles: r.local.best(&r.key, &soc_name).map(|b| b.cycles),
+                    history: r.tuner.as_ref().map(|t| t.history()).unwrap_or(&[]),
+                    queued: r.tuner.as_ref().map(|t| t.queued()).unwrap_or(0),
+                    cap: r.cap,
+                    min_trials: min_per_task.min(r.cap),
+                    done: r.done,
+                })
+                .collect();
+            let Some(pick) = sched.next_task(&views) else { break };
+            let r = &mut runs[pick.task];
+            if r.done || r.tuner.is_none() {
+                // Contract violation (picked a finished or untunable
+                // task): skip the pick so the live tasks keep tuning.
+                bad_picks += 1;
+                continue;
+            }
+            bad_picks = 0;
+            let tuner = r.tuner.as_mut().expect("checked above");
+            let before = tuner.queued();
+            // Clamp the budget to what is globally left; the round cap is
+            // the scheduler's grant for this round only.
+            tuner.set_trial_cap(r.cap.min(before + remaining));
+            tuner.set_round_cap(pick.round_trials);
+            let outcome = tuner.step_round(r.model.as_mut(), &mut r.local);
+            remaining -= tuner.queued() - before;
+            if outcome == RoundOutcome::Done {
+                r.done = true;
+            }
+            // Publish this round's drained measurements right away.
+            self.db.commit(&r.local, r.committed);
+            r.committed = r.local.len();
+            push_convergence(&mut convergence, &runs, &soc_name);
+        }
+
+        // Budget spent (or the scheduler stopped): drain every in-flight
+        // round, commit the tails, and collect the outcomes.
+        let mut outcomes = Vec::with_capacity(runs.len());
+        let mut trials_measured = 0usize;
+        for r in &mut runs {
+            let outcome = match r.tuner.take() {
+                Some(tuner) => tuner.finish(r.model.as_mut(), &mut r.local),
+                None => None,
+            };
+            self.db.commit(&r.local, r.committed);
+            r.committed = r.local.len();
+            if let Some(o) = &outcome {
+                trials_measured += o.trials_measured;
+            }
+            outcomes.push((r.key.clone(), outcome));
+        }
+        push_convergence(&mut convergence, &runs, &soc_name);
+
+        NetworkTuneReport { scheduler: sched.name(), outcomes, convergence, trials_measured }
     }
 
     /// End-to-end network latency + aggregate trace under the scenarios a
@@ -436,9 +652,48 @@ mod tests {
             Op::square_matmul(32, DType::I8),
             Op::square_matmul(16, DType::I8),
         ];
-        let outcomes = s.tune_network(&layers, 30, 5);
-        assert_eq!(outcomes.len(), 2); // deduped
-        assert!(outcomes.iter().all(|(_, o)| o.is_some()));
+        let report = s.tune_network(&layers, 30, 5);
+        assert_eq!(report.outcomes.len(), 2); // deduped
+        assert!(report.outcomes.iter().all(|(_, o)| o.is_some()));
+        assert_eq!(report.scheduler, "gradient");
+        assert!(report.trials_measured > 0 && report.trials_measured <= 30);
+        // Both distinct tasks hit the paper's per-layer floor.
+        for (key, o) in &report.outcomes {
+            assert!(o.as_ref().unwrap().trials_measured >= 5, "{key}");
+        }
+    }
+
+    #[test]
+    fn network_tuning_with_static_scheduler_matches_legacy_path() {
+        // The static scheduler must reproduce the pre-scheduler behavior:
+        // per-task budgets from `allocate_trials`, tasks run to completion
+        // in task order — i.e. exactly what back-to-back `tune` requests
+        // with those budgets produce.
+        let layers =
+            vec![Op::square_matmul(32, DType::I8), Op::square_matmul(16, DType::I8)];
+        let opts = ServiceOptions {
+            use_mlp: false,
+            workers: 2,
+            scheduler: SchedulerKind::Static,
+            ..Default::default()
+        };
+        let s = TuneService::new(Target::new(SocConfig::saturn(256)), opts.clone());
+        let report = s.tune_network(&layers, 24, 4);
+        assert_eq!(report.scheduler, "static");
+
+        let tasks = crate::tune::extract_tasks(&layers);
+        let alloc = crate::tune::allocate_trials(&tasks, 24, 4);
+        let legacy = TuneService::new(Target::new(SocConfig::saturn(256)), opts);
+        for (t, trials) in tasks.iter().zip(alloc) {
+            legacy.tune(&TuneRequest::new(t.op.clone(), trials));
+        }
+        for (key, o) in &report.outcomes {
+            let o = o.as_ref().unwrap();
+            let l = legacy.db().best(key, "saturn-256").unwrap();
+            assert_eq!(o.best.cycles, l.cycles, "{key}");
+            assert_eq!(o.best.schedule, l.schedule, "{key}");
+        }
+        assert_eq!(s.db().len(), legacy.db().len());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use std::path::PathBuf;
 
 use crate::codegen::Scenario;
-use crate::coordinator::{Fixed, ServiceOptions, Target, TuneRequest, TuneService};
+use crate::coordinator::{Fixed, SchedulerKind, ServiceOptions, Target, TuneRequest, TuneService};
 use crate::isa::InstrGroup;
 use crate::sim::SocConfig;
 use crate::tir::{DType, Op};
@@ -72,7 +72,8 @@ COMMON OPTIONS
   --soc saturn-256|saturn-512|saturn-1024|bpi-f3     (default saturn-1024)
   --trials N        tuning budget        --quick     reduced sweep
   --seed N          PRNG seed            --no-mlp    heuristic cost model
-  --out DIR         report directory     --workers N measurement threads"
+  --out DIR         report directory     --workers N measurement threads
+  --scheduler gradient|static   network trial scheduler (default gradient)"
     );
 }
 
@@ -125,6 +126,10 @@ fn service_from(args: &Args) -> Result<TuneService, String> {
     let workers = args.get_usize("workers", 0);
     if workers > 0 {
         opts.workers = workers;
+    }
+    if let Some(s) = args.get("scheduler") {
+        opts.scheduler = SchedulerKind::parse(s)
+            .ok_or(format!("unknown scheduler `{s}` (gradient|static)"))?;
     }
     Ok(TuneService::new(Target::new(soc), opts))
 }
@@ -207,12 +212,16 @@ fn cmd_tune(args: &Args) -> i32 {
         trials
     );
     let t0 = std::time::Instant::now();
-    let outcomes = service.tune_network(&layers, trials, 10.min(trials));
+    let report = service.tune_network(&layers, trials, 10.min(trials));
     let mut t = Table::new(
-        format!("tuning results: {name} on {}", service.soc().name),
+        format!(
+            "tuning results: {name} on {} ({} scheduler)",
+            service.soc().name,
+            report.scheduler
+        ),
         &["task", "trials", "best_cycles", "best_latency_us", "schedule"],
     );
-    for (key, outcome) in &outcomes {
+    for (key, outcome) in &report.outcomes {
         match outcome {
             Some(o) => t.row(vec![
                 key.clone(),
@@ -231,8 +240,22 @@ fn cmd_tune(args: &Args) -> i32 {
         }
     }
     t.print();
-    let measured: usize =
-        outcomes.iter().filter_map(|(_, o)| o.as_ref().map(|o| o.trials_measured)).sum();
+    // The per-network convergence curve (estimated end-to-end cycles after
+    // each scheduled round), subsampled to a screenful.
+    if report.convergence.len() >= 2 {
+        let mut c = Table::new(
+            "network convergence (est. network cycles after each scheduled round)",
+            &["round", "est_network_cycles"],
+        );
+        let step = report.convergence.len().div_ceil(16);
+        for (i, v) in report.convergence.iter().enumerate() {
+            if i % step == 0 || i == report.convergence.len() - 1 {
+                c.row(vec![i.to_string(), fnum(*v)]);
+            }
+        }
+        c.print();
+    }
+    let measured = report.trials_measured;
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "measured {measured} candidates in {dt:.1}s ({:.1} candidates/s; the paper's testbed: ~0.1/s)",

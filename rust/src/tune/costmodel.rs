@@ -70,6 +70,30 @@ impl CostModel for RandomCostModel {
     }
 }
 
+/// Replay window of [`MlpCostModel`]: `update` keeps (and retrains over)
+/// only the most recent `REPLAY_WINDOW` measured records, and label
+/// normalization is computed over the same window.
+///
+/// Without the cap every update retrained `epochs_per_update` epochs over
+/// the *entire* accumulated buffer, making cost-model time quadratic in
+/// trials over a long service lifetime. 2048 records is ≥10 paper-budget
+/// tuning runs (200 trials per network), so any single run — and the
+/// per-request models the service builds — never hits the cap; only a
+/// deliberately long-lived model forgets its oldest measurements.
+pub const REPLAY_WINDOW: usize = 2048;
+
+/// Drop the oldest entries so at most `window` (feature, label) pairs
+/// remain. Factored out of [`MlpCostModel::update`] so the windowing is
+/// testable without the PJRT engine.
+fn truncate_replay(feats: &mut Vec<Vec<f32>>, labels: &mut Vec<f64>, window: usize) {
+    debug_assert_eq!(feats.len(), labels.len());
+    if labels.len() > window {
+        let cut = labels.len() - window;
+        feats.drain(..cut);
+        labels.drain(..cut);
+    }
+}
+
 /// The learned model, running on PJRT.
 pub struct MlpCostModel {
     engine: Engine,
@@ -135,6 +159,7 @@ impl CostModel for MlpCostModel {
     fn update(&mut self, feats: &[Vec<f32>], log_throughput: &[f64]) {
         self.buf_feats.extend_from_slice(feats);
         self.buf_labels.extend_from_slice(log_throughput);
+        truncate_replay(&mut self.buf_feats, &mut self.buf_labels, REPLAY_WINDOW);
         self.renormalize();
         let n = self.buf_feats.len();
         if n == 0 {
@@ -183,5 +208,17 @@ mod tests {
         let mut a = RandomCostModel(Pcg::seeded(5));
         let mut b = RandomCostModel(Pcg::seeded(5));
         assert_eq!(a.score(&f), b.score(&f));
+    }
+
+    #[test]
+    fn replay_window_keeps_the_most_recent_records() {
+        let mut feats: Vec<Vec<f32>> = (0..10).map(|i| vec![i as f32]).collect();
+        let mut labels: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        truncate_replay(&mut feats, &mut labels, 4);
+        assert_eq!(labels, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(feats, vec![vec![6.0], vec![7.0], vec![8.0], vec![9.0]]);
+        // Under the window: untouched.
+        truncate_replay(&mut feats, &mut labels, 4);
+        assert_eq!(labels.len(), 4);
     }
 }

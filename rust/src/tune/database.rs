@@ -117,8 +117,15 @@ impl Database {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         let arr = Json::Arr(self.records.iter().map(|r| r.to_json()).collect());
+        // `parent()` yields Some("") for bare file names — nothing to
+        // create there, but a real parent that cannot be created must
+        // fail loudly (the silent `.ok()` here used to turn a bad
+        // `--out` directory into an unrelated write error).
         if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent).ok();
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
         }
         std::fs::write(path, arr.to_pretty()).with_context(|| format!("writing {path:?}"))
     }
@@ -207,19 +214,24 @@ impl SharedDatabase {
     /// `local.len()` as returned by `checkout` (the pre-seeded prefix,
     /// which must not be re-inserted).
     ///
-    /// The delta is committed atomically per operator — the owning shard's
-    /// lock is held across each operator's whole run of records — so
-    /// concurrent `best`/`snapshot` readers see none or all of a tuning
-    /// run, never a torn prefix.
+    /// The delta is committed atomically per operator: the delta is
+    /// grouped by op key *up front* (keeping each operator's in-delta
+    /// order) and the owning shard's lock is held across each operator's
+    /// whole group, so concurrent `best`/`snapshot` readers see none or
+    /// all of an operator's records, never a torn prefix. Grouping by
+    /// consecutive runs instead would split an interleaved delta like
+    /// [A, B, A] — the normal shape once network tuning interleaves
+    /// rounds from different ops — into multiple lock sections per op.
     pub fn commit(&self, local: &Database, seeded: usize) {
         let delta = &local.records()[seeded..];
-        let mut i = 0;
-        while i < delta.len() {
-            let key = &delta[i].op_key;
+        let mut by_key: BTreeMap<&str, Vec<&TuneRecord>> = BTreeMap::new();
+        for rec in delta {
+            by_key.entry(&rec.op_key).or_default().push(rec);
+        }
+        for (key, recs) in by_key {
             let mut shard = self.shard(key).lock().unwrap();
-            while i < delta.len() && &delta[i].op_key == key {
-                shard.add(delta[i].clone());
-                i += 1;
+            for rec in recs {
+                shard.add(rec.clone());
             }
         }
     }
@@ -328,6 +340,79 @@ mod tests {
         assert_eq!(shared.len(), 4);
         assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 300.0);
         assert_eq!(shared.best("b", "saturn-256").unwrap().cycles, 50.0);
+    }
+
+    #[test]
+    fn commit_interleaved_delta_groups_by_op() {
+        let shared = SharedDatabase::new(4);
+        let mut local = Database::new();
+        local.add(rec("a", 10.0, 0));
+        local.add(rec("b", 20.0, 0));
+        local.add(rec("a", 5.0, 1));
+        shared.commit(&local, 0);
+        assert_eq!(shared.len(), 3);
+        assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 5.0);
+        assert_eq!(shared.best("b", "saturn-256").unwrap().cycles, 20.0);
+    }
+
+    /// Regression for the torn-commit bug: `commit` claimed per-operator
+    /// atomicity but grouped the delta by *consecutive* op-key runs, so a
+    /// fully interleaved delta ([A, B, A, B, ...] — the shape network
+    /// tuning produces once rounds from different ops interleave) took and
+    /// released the shard lock once per record, and a concurrent reader
+    /// could observe a torn per-op prefix. With the fixed up-front
+    /// grouping, every snapshot sees each operator's records all-or-
+    /// nothing.
+    #[test]
+    fn commit_interleaved_delta_is_atomic_per_op() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        const N: usize = 400;
+        // One shard: the reader's snapshot serializes with every commit
+        // lock section, maximizing its chances of catching a torn state.
+        let shared = SharedDatabase::new(1);
+        let mut local = Database::new();
+        for t in 0..N {
+            local.add(rec("a", 1000.0 + t as f64, t));
+            local.add(rec("b", 2000.0 + t as f64, t));
+        }
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let shared = &shared;
+            let done = &done;
+            let reader = scope.spawn(move || loop {
+                let finished = done.load(Ordering::Acquire);
+                let snap = shared.snapshot();
+                let a = snap.records().iter().filter(|r| r.op_key == "a").count();
+                let b = snap.records().iter().filter(|r| r.op_key == "b").count();
+                assert!(a == 0 || a == N, "torn commit: saw {a}/{N} records of op a");
+                assert!(b == 0 || b == N, "torn commit: saw {b}/{N} records of op b");
+                if finished {
+                    break;
+                }
+                std::thread::yield_now();
+            });
+            shared.commit(&local, 0);
+            done.store(true, Ordering::Release);
+            reader.join().unwrap();
+        });
+        assert_eq!(shared.len(), 2 * N);
+        assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 1000.0);
+        assert_eq!(shared.best("b", "saturn-256").unwrap().cycles, 2000.0);
+    }
+
+    #[test]
+    fn save_propagates_unwritable_directory_errors() {
+        let db = Database::new();
+        // A parent that exists as a *file* cannot be created as a
+        // directory: the old `.ok()` swallowed this and failed later with
+        // a misleading write error.
+        let dir = std::env::temp_dir().join("rvv-tune-save-err");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blocker = dir.join("not-a-dir");
+        std::fs::write(&blocker, b"x").unwrap();
+        let err = db.save(&blocker.join("sub").join("db.json")).unwrap_err();
+        assert!(format!("{err:#}").contains("creating"), "unexpected error: {err:#}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

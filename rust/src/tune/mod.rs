@@ -6,12 +6,15 @@
 //! descriptors -> [`costmodel`] ranks candidates (JAX/Pallas MLP via PJRT)
 //! -> [`search`] measures the top-k on the simulated SoC and refits ->
 //! [`database`] records everything. [`task`] splits a network into tuning
-//! tasks with the paper's budget policy.
+//! tasks with the paper's budget policy, and [`scheduler`] decides how a
+//! network's shared trial budget flows between those tasks round by round
+//! (static ablation split vs MetaSchedule-style gradient reallocation).
 
 pub mod analysis;
 pub mod costmodel;
 pub mod database;
 pub mod features;
+pub mod scheduler;
 pub mod search;
 pub mod space;
 pub mod task;
@@ -19,9 +22,12 @@ pub mod task;
 pub use costmodel::{CostModel, HeuristicCostModel, MlpCostModel, RandomCostModel};
 pub use database::{Database, SharedDatabase, TuneRecord};
 pub use features::FEATURE_DIM;
+pub use scheduler::{
+    GradientScheduler, Pick, Plan, SchedulerKind, StaticAllocation, TaskScheduler, TaskView,
+};
 pub use search::{
-    tune_op, MeasureTicket, Measurer, Prepared, PrepareTicket, SearchConfig, SerialMeasurer,
-    TuneOutcome,
+    tune_op, MeasureTicket, Measurer, OpTuner, Prepared, PrepareTicket, RoundOutcome,
+    SearchConfig, SerialMeasurer, TuneOutcome,
 };
 pub use space::SearchSpace;
-pub use task::{allocate_trials, extract_tasks, TuneTask};
+pub use task::{allocate_trials, extract_tasks, floor_budget, TuneTask};

@@ -1,0 +1,405 @@
+//! Network-level task scheduling: how a shared trial budget is spent
+//! across a network's tuning tasks.
+//!
+//! The paper tunes whole networks under one global budget ("200 trials
+//! per network, at least 10 candidates per layer") with TVM MetaSchedule,
+//! whose task scheduler *dynamically* steers trials toward the tasks with
+//! the best expected end-to-end improvement. This module provides that
+//! policy layer for the resumable [`crate::tune::OpTuner`]s the service
+//! drives:
+//!
+//! * [`StaticAllocation`] — the ablation baseline: split the budget up
+//!   front with [`allocate_trials`] (proportional to task weight, with
+//!   the paper's per-layer floor) and run each task to completion in
+//!   order.
+//! * [`GradientScheduler`] — MetaSchedule-style dynamic reallocation:
+//!   each round goes to the task with the largest predicted network
+//!   latency gain (task weight × current best cycles × recent
+//!   improvement slope), after a breadth-first warm-up that brings every
+//!   task to the per-layer floor.
+//!
+//! Schedulers only *decide*; the driver (`TuneService::tune_network`)
+//! owns the tuners, the budget accounting, and the database commits, so
+//! every decision is a pure function of deterministic tuner state and
+//! results are bit-identical for any worker count.
+
+use super::task::{allocate_trials, floor_budget, TuneTask};
+
+/// Which network task scheduler a [`crate::coordinator::TuneService`]
+/// uses for `tune_network`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Up-front proportional split, tasks run to completion serially —
+    /// today's behavior, kept as the ablation baseline.
+    Static,
+    /// Dynamic per-round reallocation by predicted end-to-end gain.
+    Gradient,
+}
+
+impl SchedulerKind {
+    /// Instantiate the scheduler with its default hyper-parameters.
+    pub fn make(self) -> Box<dyn TaskScheduler> {
+        match self {
+            SchedulerKind::Static => Box::new(StaticAllocation),
+            SchedulerKind::Gradient => Box::new(GradientScheduler::default()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "static" => Some(SchedulerKind::Static),
+            "gradient" => Some(SchedulerKind::Gradient),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Static => "static",
+            SchedulerKind::Gradient => "gradient",
+        }
+    }
+}
+
+/// The budget plan a scheduler commits to before the first round.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Per-task trial caps (same order as the task list). A task never
+    /// receives more trials than its cap.
+    pub caps: Vec<usize>,
+    /// Global trial budget for the whole network run. May exceed the
+    /// requested total when the per-layer floor dominates (the paper grew
+    /// 200 → 400 for MobileLLM the same way).
+    pub total: usize,
+}
+
+/// One scheduling decision: which task advances next, and how many trials
+/// its next round may submit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pick {
+    /// Index into the task list.
+    pub task: usize,
+    /// Cap on the trials the granted round may submit (`usize::MAX` for a
+    /// full `measure_per_round` batch). The candidate pool the trials are
+    /// picked from is NOT shrunk by this cap.
+    pub round_trials: usize,
+}
+
+/// Read-only per-task state a scheduler decides from.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskView<'a> {
+    /// Task weight: MACs × occurrences in the network.
+    pub weight: f64,
+    /// Best cycles recorded for this task so far (including records the
+    /// run was seeded with), if any.
+    pub best_cycles: Option<f64>,
+    /// Best cycles after each drained round of this run.
+    pub history: &'a [f64],
+    /// Trials submitted so far (including the in-flight round).
+    pub queued: usize,
+    /// This task's per-task cap from the [`Plan`].
+    pub cap: usize,
+    /// The per-layer floor ("at least 10 candidates per layer").
+    pub min_trials: usize,
+    /// Budget or schedule space exhausted — never pick this task again.
+    pub done: bool,
+}
+
+/// Decides which task's tuner advances next. Implementations must be
+/// deterministic functions of the views (plus their own deterministic
+/// state): the bit-identical-across-worker-counts guarantee of
+/// `tune_network` rests on it.
+pub trait TaskScheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Commit to per-task caps and the global budget before the run.
+    fn plan(&mut self, tasks: &[TuneTask], total_trials: usize, min_per_task: usize) -> Plan;
+
+    /// Pick the next task to advance by one round, or None to stop early
+    /// (remaining budget is forfeited). Must only pick live tasks
+    /// (`!done`); the driver stops once every task is done or the global
+    /// budget is spent.
+    fn next_task(&mut self, views: &[TaskView<'_>]) -> Option<Pick>;
+}
+
+/// Today's behavior as a scheduler: split the budget up front
+/// (proportional to weight, floor per task) and run each task to
+/// completion, in task order.
+pub struct StaticAllocation;
+
+impl TaskScheduler for StaticAllocation {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn plan(&mut self, tasks: &[TuneTask], total_trials: usize, min_per_task: usize) -> Plan {
+        let caps = allocate_trials(tasks, total_trials, min_per_task);
+        let total = caps.iter().sum();
+        Plan { caps, total }
+    }
+
+    fn next_task(&mut self, views: &[TaskView<'_>]) -> Option<Pick> {
+        views
+            .iter()
+            .position(|v| !v.done)
+            .map(|task| Pick { task, round_trials: usize::MAX })
+    }
+}
+
+/// MetaSchedule-style gradient scheduler: after a breadth-first warm-up
+/// to the per-layer floor, every round goes to the task with the largest
+/// predicted end-to-end gain
+///
+/// ```text
+/// gain(task) = weight × best_cycles × slope
+/// slope      = mean relative improvement per round over the last
+///              `window` rounds of the task's convergence history
+/// ```
+///
+/// i.e. how many network cycles the next round is expected to shave off
+/// if the task keeps improving at its recent rate. Between warm-up and
+/// the greedy phase sits a probe phase: tasks whose warm-up round is
+/// still in flight (empty history — the tuners are one-round pipelines)
+/// are stepped with 1-trial rounds to drain their first measurements
+/// before any full batch is committed blind. Tasks with history too
+/// short for a slope use `default_slope` (an optimistic prior, so
+/// freshly probed tasks get at least one greedy round before being
+/// judged). When every live task has gone flat, the tail of the budget
+/// is spread weight-proportionally — the static rule — instead of being
+/// dumped on one task.
+pub struct GradientScheduler {
+    /// Rounds of history the improvement slope is measured over.
+    pub window: usize,
+    /// Assumed relative improvement per round before a task has enough
+    /// history to measure one.
+    pub default_slope: f64,
+}
+
+impl Default for GradientScheduler {
+    fn default() -> Self {
+        GradientScheduler { window: 3, default_slope: 0.05 }
+    }
+}
+
+impl GradientScheduler {
+    /// Predicted network-cycle gain of giving `v` one more round.
+    fn gain(&self, v: &TaskView<'_>) -> f64 {
+        let Some(best) = v.best_cycles else {
+            // Warmed up yet nothing measured (can only happen when the
+            // space is smaller than the floor): explore it first.
+            return f64::INFINITY;
+        };
+        let slope = if v.history.len() >= 2 {
+            let w = self.window.min(v.history.len() - 1);
+            let prev = v.history[v.history.len() - 1 - w];
+            let cur = v.history[v.history.len() - 1];
+            if prev > 0.0 { (((prev - cur) / prev) / w as f64).max(0.0) } else { 0.0 }
+        } else {
+            self.default_slope
+        };
+        v.weight * best * slope
+    }
+}
+
+impl TaskScheduler for GradientScheduler {
+    fn name(&self) -> &'static str {
+        "gradient"
+    }
+
+    fn plan(&mut self, tasks: &[TuneTask], total_trials: usize, min_per_task: usize) -> Plan {
+        // No fixed per-task split: any task may spend up to the whole
+        // budget; the driver's global counter enforces the total. The
+        // floor grows the budget exactly as `allocate_trials` does.
+        let total = floor_budget(tasks, total_trials, min_per_task);
+        Plan { caps: vec![total; tasks.len()], total }
+    }
+
+    fn next_task(&mut self, views: &[TaskView<'_>]) -> Option<Pick> {
+        // Warm-up: bring every task to the per-layer floor first,
+        // breadth-first (least-queued task next, ties to the lowest
+        // index), so the floor is spread across tasks before any greedy
+        // spending.
+        let warm = views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !v.done && v.queued < v.min_trials)
+            .min_by(|x, y| x.1.queued.cmp(&y.1.queued).then(x.0.cmp(&y.0)));
+        if let Some((task, v)) = warm {
+            return Some(Pick { task, round_trials: v.min_trials - v.queued });
+        }
+        // Probe: a warmed-up task with an empty history has its first
+        // round still in flight — there is nothing to estimate a gradient
+        // from. Grant a 1-trial round: stepping the tuner drains the
+        // in-flight measurements (revealing the task's first best) at the
+        // cost of one trial, instead of committing a full blind batch.
+        let probe = views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !v.done && v.history.is_empty())
+            .min_by(|x, y| x.1.queued.cmp(&y.1.queued).then(x.0.cmp(&y.0)));
+        if let Some((task, _)) = probe {
+            return Some(Pick { task, round_trials: 1 });
+        }
+        // Steady state: the task with the largest predicted gain.
+        let live = views.iter().enumerate().filter(|(_, v)| !v.done);
+        let (task, gain) = live
+            .clone()
+            .map(|(i, v)| (i, self.gain(v)))
+            .max_by(|x, y| x.1.total_cmp(&y.1).then(y.0.cmp(&x.0)))?;
+        if gain > 0.0 {
+            return Some(Pick { task, round_trials: usize::MAX });
+        }
+        // Every live task is flat: no measurable signal anywhere. Spread
+        // the tail weight-proportionally (most underfunded-by-weight task
+        // first) so the leftover budget is spent like the static rule
+        // rather than dumped on a single task.
+        let (task, _) = live
+            .map(|(i, v)| (i, v.weight / (v.queued + 1) as f64))
+            .max_by(|x, y| x.1.total_cmp(&y.1).then(y.0.cmp(&x.0)))?;
+        Some(Pick { task, round_trials: usize::MAX })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{DType, Op};
+
+    fn tasks() -> Vec<TuneTask> {
+        vec![
+            TuneTask { op: Op::square_matmul(128, DType::I8), count: 2 },
+            TuneTask { op: Op::square_matmul(32, DType::I8), count: 1 },
+        ]
+    }
+
+    fn view(weight: f64, best: Option<f64>, history: &[f64], queued: usize) -> TaskView<'_> {
+        TaskView {
+            weight,
+            best_cycles: best,
+            history,
+            queued,
+            cap: 1000,
+            min_trials: 10,
+            done: false,
+        }
+    }
+
+    #[test]
+    fn static_plan_matches_allocate_trials() {
+        let t = tasks();
+        let mut s = StaticAllocation;
+        let plan = s.plan(&t, 100, 10);
+        assert_eq!(plan.caps, allocate_trials(&t, 100, 10));
+        assert_eq!(plan.total, plan.caps.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn static_runs_tasks_in_order_to_completion() {
+        let mut s = StaticAllocation;
+        let h: [f64; 0] = [];
+        let mut views = [view(10.0, None, &h, 0), view(1.0, None, &h, 0)];
+        assert_eq!(s.next_task(&views).unwrap().task, 0);
+        views[0].done = true;
+        assert_eq!(s.next_task(&views).unwrap().task, 1);
+        views[1].done = true;
+        assert!(s.next_task(&views).is_none());
+    }
+
+    #[test]
+    fn gradient_plan_grows_budget_to_the_floor() {
+        let t = tasks();
+        let mut g = GradientScheduler::default();
+        assert_eq!(g.plan(&t, 100, 10).total, 100);
+        assert_eq!(g.plan(&t, 12, 10).total, 20, "floor 2×10 dominates a 12-trial budget");
+        assert_eq!(g.plan(&t, 100, 10).caps, vec![100, 100]);
+    }
+
+    #[test]
+    fn gradient_warms_up_breadth_first_to_the_floor() {
+        let mut g = GradientScheduler::default();
+        let h: [f64; 0] = [];
+        let views = [view(10.0, None, &h, 4), view(1.0, None, &h, 0)];
+        let pick = g.next_task(&views).unwrap();
+        assert_eq!(pick.task, 1, "least-queued task warms up first");
+        assert_eq!(pick.round_trials, 10);
+        let views = [view(10.0, None, &h, 4), view(1.0, None, &h, 4)];
+        assert_eq!(g.next_task(&views).unwrap().task, 0, "ties go to the lowest index");
+    }
+
+    #[test]
+    fn gradient_probes_in_flight_tasks_with_one_trial_rounds() {
+        let mut g = GradientScheduler::default();
+        let h: [f64; 0] = [];
+        let drained = [900.0];
+        // Both warmed up (queued >= floor); task 0's first round has
+        // drained, task 1's is still in flight (no history).
+        let views = [
+            view(100.0, Some(900.0), &drained, 10),
+            view(1.0, None, &h, 10),
+        ];
+        let pick = g.next_task(&views).unwrap();
+        assert_eq!(pick.task, 1, "in-flight task is probed before greedy spending");
+        assert_eq!(pick.round_trials, 1);
+    }
+
+    #[test]
+    fn gradient_prefers_the_task_with_the_largest_predicted_gain() {
+        let mut g = GradientScheduler::default();
+        // Task 0: heavy but flat. Task 1: light but still improving fast.
+        let flat = [1000.0, 1000.0, 1000.0, 1000.0];
+        let improving = [900.0, 700.0, 500.0, 400.0];
+        let views = [
+            view(100.0, Some(1000.0), &flat, 32),
+            view(10.0, Some(400.0), &improving, 32),
+        ];
+        assert_eq!(g.next_task(&views).unwrap().task, 1);
+        // Flip: the improving task is also the heavy one.
+        let views = [
+            view(100.0, Some(400.0), &improving, 32),
+            view(10.0, Some(1000.0), &flat, 32),
+        ];
+        assert_eq!(g.next_task(&views).unwrap().task, 0);
+    }
+
+    #[test]
+    fn gradient_spreads_the_tail_when_everything_is_flat() {
+        let mut g = GradientScheduler::default();
+        let flat = [1000.0, 1000.0, 1000.0, 1000.0];
+        // Task 0 is 10x the weight but already has 10x the trials of task
+        // 1: per-weight funding is equal, so the lighter task's smaller
+        // denominator wins the next round; over many rounds this
+        // approximates the weight-proportional static split.
+        let views = [
+            view(100.0, Some(500.0), &flat, 200),
+            view(10.0, Some(500.0), &flat, 10),
+        ];
+        let pick = g.next_task(&views).unwrap();
+        assert_eq!(pick.task, 1);
+        // All flat and equal: deterministic tie-break to the lowest index.
+        let views = [
+            view(10.0, Some(500.0), &flat, 50),
+            view(10.0, Some(500.0), &flat, 50),
+        ];
+        assert_eq!(g.next_task(&views).unwrap().task, 0);
+    }
+
+    #[test]
+    fn gradient_skips_done_tasks() {
+        let mut g = GradientScheduler::default();
+        let h: [f64; 0] = [];
+        let mut views = [view(10.0, None, &h, 0), view(1.0, None, &h, 0)];
+        views[0].done = true;
+        assert_eq!(g.next_task(&views).unwrap().task, 1);
+        views[1].done = true;
+        assert!(g.next_task(&views).is_none());
+    }
+
+    #[test]
+    fn scheduler_kind_parses_and_names() {
+        assert_eq!(SchedulerKind::parse("static"), Some(SchedulerKind::Static));
+        assert_eq!(SchedulerKind::parse("gradient"), Some(SchedulerKind::Gradient));
+        assert_eq!(SchedulerKind::parse("zorp"), None);
+        assert_eq!(SchedulerKind::Static.make().name(), "static");
+        assert_eq!(SchedulerKind::Gradient.make().name(), "gradient");
+    }
+}

@@ -172,17 +172,280 @@ struct InFlight {
     feats: Vec<Vec<f32>>,
 }
 
-/// Tune `op` on `soc`. Returns None when no intrinsic variant matches the
+/// What one [`OpTuner::step_round`] call did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// A new round was generated and its measurements submitted; the
+    /// previous round (if any) was drained into the database.
+    Progressed,
+    /// Budget or space exhausted. The final in-flight round has been
+    /// drained; further calls are no-ops that return `Done` again.
+    Done,
+}
+
+/// A resumable per-operator tuning run — the state machine behind
+/// [`tune_op`].
+///
+/// The tuner owns everything one operator's search needs between rounds:
+/// its PRNG, the elite set, the structural-hash dedup set, the in-flight
+/// measurement tickets, and the trial counters. The cost model and the
+/// (checked-out) database stay with the caller and are passed into each
+/// [`OpTuner::step_round`], so a network scheduler can hold many tuners
+/// and interleave their rounds through one shared [`Measurer`] — round
+/// N+1 of one operator overlaps round N of another on the worker pool —
+/// while per-operator results stay bit-identical to a run-to-completion
+/// loop (all schedule decisions come from the tuner's own PRNG and
+/// batches rendezvous by index).
+pub struct OpTuner<'a> {
+    op: &'a Op,
+    soc: &'a SocConfig,
+    measurer: &'a dyn Measurer,
+    space: SearchSpace,
+    config: SearchConfig,
+    rng: Pcg,
+    op_key: String,
+    measured: usize,
+    queued: usize,
+    /// Cap on trials submitted by the *next* round only — the network
+    /// scheduler's warm-up knob. Does not affect candidate generation,
+    /// which scales off the remaining `config.trials` budget.
+    round_cap: usize,
+    elites: Vec<(Schedule, f64)>,
+    history: Vec<f64>,
+    taken: HashSet<u64>,
+    inflight: Option<InFlight>,
+}
+
+impl<'a> OpTuner<'a> {
+    /// Build a tuner for `op` on `soc`. Returns None when no intrinsic
+    /// variant matches the operator (the caller falls back to the
+    /// compiler's vectorization, as TVM does for non-tensorizable blocks).
+    ///
+    /// The dedup set is seeded from `db`'s existing `(op, soc)` records —
+    /// every schedule ever selected for measurement, as structural hashes
+    /// (replaces the string-keyed `describe()` set and the linear
+    /// `Database::contains` scan per candidate) — so a reused database is
+    /// never re-measured.
+    pub fn new(
+        op: &'a Op,
+        soc: &'a SocConfig,
+        registry: &crate::intrinsics::Registry,
+        measurer: &'a dyn Measurer,
+        db: &Database,
+        config: SearchConfig,
+    ) -> Option<OpTuner<'a>> {
+        let space = SearchSpace::new(op, registry);
+        if !space.is_tunable() {
+            return None;
+        }
+        let rng = Pcg::seeded(config.seed);
+        let op_key = op.key();
+        let taken: HashSet<u64> = db
+            .records()
+            .iter()
+            .filter(|r| r.op_key == op_key && r.soc == soc.name)
+            .map(|r| r.schedule.struct_hash())
+            .collect();
+        Some(OpTuner {
+            op,
+            soc,
+            measurer,
+            space,
+            config,
+            rng,
+            op_key,
+            measured: 0,
+            queued: 0,
+            round_cap: usize::MAX,
+            elites: Vec::new(),
+            history: Vec::new(),
+            taken,
+            inflight: None,
+        })
+    }
+
+    pub fn op_key(&self) -> &str {
+        &self.op_key
+    }
+
+    /// Trials submitted for measurement so far (includes the in-flight
+    /// round).
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Trials measured and recorded so far (excludes the in-flight round).
+    pub fn measured(&self) -> usize {
+        self.measured
+    }
+
+    /// Best cycles after each drained round (the convergence curve so far).
+    pub fn history(&self) -> &[f64] {
+        &self.history
+    }
+
+    /// Best cycles measured by this run so far (ignores records the
+    /// database was seeded with).
+    pub fn best_cycles(&self) -> Option<f64> {
+        self.elites.first().map(|e| e.1)
+    }
+
+    /// Adjust the total trial budget mid-run (the network scheduler clamps
+    /// it to the global budget before each round). Never goes below the
+    /// trials already queued.
+    pub fn set_trial_cap(&mut self, trials: usize) {
+        self.config.trials = trials.max(self.queued);
+    }
+
+    /// Cap the number of trials the next round may submit (the scheduler's
+    /// warm-up floor grants small rounds without shrinking the candidate
+    /// pool those trials are picked from). Clamped to at least 1.
+    pub fn set_round_cap(&mut self, trials: usize) {
+        self.round_cap = trials.max(1);
+    }
+
+    /// Advance the pipeline by one round:
+    /// 1. generate round N's candidates (dedup on
+    ///    [`Schedule::struct_hash`]) and submit their prepare jobs — these
+    ///    overlap round N-1's measurements on a parallel backend;
+    /// 2. drain round N-1's measurements into `db`, refit `model`;
+    /// 3. rendezvous on round N's prepared features, `score()` the batch
+    ///    once, pick the epsilon-greedy top-k, submit their measurements.
+    pub fn step_round(&mut self, model: &mut dyn CostModel, db: &mut Database) -> RoundOutcome {
+        // --- stage 1: generate candidates, kick off prepare (overlaps the
+        // in-flight measurements of the previous round)
+        let round = if self.queued < self.config.trials {
+            let remaining = self.config.trials - self.queued;
+            // Final-round scaling: when fewer trials remain than a full
+            // measurement batch, generating (and emitting + feature-
+            // extracting) a whole `population` is wasted codegen — only
+            // `remaining` candidates can be measured. Shrink the pool
+            // proportionally, keeping the population : measure_per_round
+            // oversampling ratio so the cost-model ranking still has
+            // slack to choose from. Full rounds are untouched, so their
+            // PRNG draw sequence is exactly the run-to-completion one.
+            let gen_target = if remaining >= self.config.measure_per_round {
+                self.config.population
+            } else {
+                (remaining * self.config.population)
+                    .div_ceil(self.config.measure_per_round)
+                    .max(remaining)
+            };
+            let mut cands: Vec<Schedule> = Vec::new();
+            let mut round_seen: HashSet<u64> = HashSet::new();
+            let mut attempts = 0;
+            while cands.len() < gen_target && attempts < gen_target * 8 {
+                attempts += 1;
+                let s = if !self.elites.is_empty() && self.rng.chance(self.config.mutation_prob) {
+                    let parent =
+                        &self.elites[self.rng.below(self.elites.len() as u64) as usize].0;
+                    self.space.mutate(parent, &mut self.rng)
+                } else {
+                    self.space.sample(&mut self.rng)
+                };
+                let h = s.struct_hash();
+                if self.taken.contains(&h) || !round_seen.insert(h) {
+                    continue;
+                }
+                cands.push(s);
+            }
+            if cands.is_empty() {
+                None // space exhausted
+            } else {
+                let ticket = self.measurer.begin_prepare(self.op, self.soc, &cands);
+                Some((cands, ticket))
+            }
+        } else {
+            None // budget spent
+        };
+
+        // --- stage 2: drain the previous round's measurements; learn
+        self.drain(model, db);
+
+        // --- stage 3: score rendezvous, choose top-k, kick off measurement
+        let Some((cands, pticket)) = round else { return RoundOutcome::Done };
+        let mut prepared = pticket.wait();
+        let mut feats: Vec<Vec<f32>> =
+            prepared.iter_mut().map(|p| std::mem::take(&mut p.features)).collect();
+        let scores = model.score(&feats);
+        let mut order: Vec<usize> = (0..cands.len()).collect();
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+        let k = self
+            .config
+            .measure_per_round
+            .min(self.config.trials - self.queued)
+            .min(self.round_cap)
+            .min(order.len());
+        // Epsilon-greedy batch: mostly the model's top ranks, plus a few
+        // random picks from the remainder so a mislearned model cannot
+        // starve good regions of the space.
+        let k_greedy = k - ((k as f64 * self.config.epsilon).round() as usize).min(k);
+        let mut chosen: Vec<usize> = order[..k_greedy].to_vec();
+        let mut rest: Vec<usize> = order[k_greedy..].to_vec();
+        self.rng.shuffle(&mut rest);
+        chosen.extend(rest.into_iter().take(k - k_greedy));
+
+        for &i in &chosen {
+            self.taken.insert(cands[i].struct_hash());
+        }
+        let programs: Vec<Arc<VProgram>> =
+            chosen.iter().map(|&i| Arc::clone(&prepared[i].program)).collect();
+        let ticket = self.measurer.begin_measure(self.soc, programs);
+        self.queued += chosen.len();
+        self.inflight = Some(InFlight {
+            ticket,
+            schedules: chosen.iter().map(|&i| cands[i].clone()).collect(),
+            // `feats` is dead after this point; move the chosen vectors out
+            // (indices in `chosen` are distinct).
+            feats: chosen.iter().map(|&i| std::mem::take(&mut feats[i])).collect(),
+        });
+        RoundOutcome::Progressed
+    }
+
+    /// Drain the in-flight round (if any): record its measurements, update
+    /// the elites, refit the model, extend the convergence history.
+    fn drain(&mut self, model: &mut dyn CostModel, db: &mut Database) {
+        let Some(fl) = self.inflight.take() else { return };
+        let results = fl.ticket.wait();
+        let mut upd_feats = Vec::with_capacity(results.len());
+        let mut upd_labels = Vec::with_capacity(results.len());
+        for ((schedule, feat), res) in fl.schedules.into_iter().zip(fl.feats).zip(&results) {
+            db.add(TuneRecord {
+                op_key: self.op_key.clone(),
+                soc: self.soc.name.clone(),
+                schedule: schedule.clone(),
+                cycles: res.cycles,
+                macs: self.op.macs(),
+                trial: self.measured,
+            });
+            self.measured += 1;
+            upd_feats.push(feat);
+            upd_labels.push((self.op.macs() as f64 / res.cycles.max(1.0)).ln());
+            self.elites.push((schedule, res.cycles));
+        }
+        self.elites.sort_by(|a, b| a.1.total_cmp(&b.1));
+        self.elites.truncate(self.config.elites);
+        model.update(&upd_feats, &upd_labels);
+        self.history.push(self.elites[0].1);
+    }
+
+    /// Drain any still in-flight round (a scheduler may stop a tuner
+    /// mid-budget) and produce the final outcome from the database this
+    /// run wrote into.
+    pub fn finish(mut self, model: &mut dyn CostModel, db: &mut Database) -> Option<TuneOutcome> {
+        self.drain(model, db);
+        db.best(&self.op_key, &self.soc.name).map(|best| TuneOutcome {
+            best: best.clone(),
+            trials_measured: self.measured,
+            history: self.history,
+        })
+    }
+}
+
+/// Tune `op` on `soc` to completion — the thin drive-to-the-end wrapper
+/// over [`OpTuner`]. Returns None when no intrinsic variant matches the
 /// operator (the caller falls back to the compiler's vectorization, as
 /// TVM does for non-tensorizable blocks).
-///
-/// Per pipeline stage (one loop iteration = one round):
-/// 1. generate round N's candidates (dedup on [`Schedule::struct_hash`])
-///    and submit their prepare jobs — these overlap round N-1's
-///    measurements on a parallel backend;
-/// 2. drain round N-1's measurements, record them, refit the model;
-/// 3. rendezvous on round N's prepared features, `score()` the batch once,
-///    pick the epsilon-greedy top-k, submit their measurements.
 pub fn tune_op(
     op: &Op,
     soc: &SocConfig,
@@ -192,128 +455,9 @@ pub fn tune_op(
     db: &mut Database,
     config: &SearchConfig,
 ) -> Option<TuneOutcome> {
-    let space = SearchSpace::new(op, registry);
-    if !space.is_tunable() {
-        return None;
-    }
-    let mut rng = Pcg::seeded(config.seed);
-    let op_key = op.key();
-    let mut measured = 0usize;
-    let mut queued = 0usize;
-    let mut elites: Vec<(Schedule, f64)> = Vec::new();
-    let mut history = Vec::new();
-    // Every schedule ever selected for measurement, as structural hashes —
-    // replaces the string-keyed `describe()` set and the linear
-    // `Database::contains` scan per candidate. Seeded from prior records so
-    // a reused database still dedups across tuning runs.
-    let mut taken: HashSet<u64> = db
-        .records()
-        .iter()
-        .filter(|r| r.op_key == op_key && r.soc == soc.name)
-        .map(|r| r.schedule.struct_hash())
-        .collect();
-    let mut inflight: Option<InFlight> = None;
-
-    loop {
-        // --- stage 1: generate candidates, kick off prepare (overlaps the
-        // in-flight measurements of the previous round)
-        let round = if queued < config.trials {
-            let mut cands: Vec<Schedule> = Vec::new();
-            let mut round_seen: HashSet<u64> = HashSet::new();
-            let mut attempts = 0;
-            while cands.len() < config.population && attempts < config.population * 8 {
-                attempts += 1;
-                let s = if !elites.is_empty() && rng.chance(config.mutation_prob) {
-                    let parent = &elites[rng.below(elites.len() as u64) as usize].0;
-                    space.mutate(parent, &mut rng)
-                } else {
-                    space.sample(&mut rng)
-                };
-                let h = s.struct_hash();
-                if taken.contains(&h) || !round_seen.insert(h) {
-                    continue;
-                }
-                cands.push(s);
-            }
-            if cands.is_empty() {
-                None // space exhausted
-            } else {
-                let ticket = measurer.begin_prepare(op, soc, &cands);
-                Some((cands, ticket))
-            }
-        } else {
-            None // budget spent
-        };
-
-        // --- stage 2: drain the previous round's measurements; learn
-        if let Some(fl) = inflight.take() {
-            let results = fl.ticket.wait();
-            let mut upd_feats = Vec::with_capacity(results.len());
-            let mut upd_labels = Vec::with_capacity(results.len());
-            for ((schedule, feat), res) in
-                fl.schedules.into_iter().zip(fl.feats).zip(&results)
-            {
-                db.add(TuneRecord {
-                    op_key: op_key.clone(),
-                    soc: soc.name.clone(),
-                    schedule: schedule.clone(),
-                    cycles: res.cycles,
-                    macs: op.macs(),
-                    trial: measured,
-                });
-                measured += 1;
-                upd_feats.push(feat);
-                upd_labels.push((op.macs() as f64 / res.cycles.max(1.0)).ln());
-                elites.push((schedule, res.cycles));
-            }
-            elites.sort_by(|a, b| a.1.total_cmp(&b.1));
-            elites.truncate(config.elites);
-            model.update(&upd_feats, &upd_labels);
-            history.push(elites[0].1);
-        }
-
-        // --- stage 3: score rendezvous, choose top-k, kick off measurement
-        let Some((cands, pticket)) = round else { break };
-        let mut prepared = pticket.wait();
-        let mut feats: Vec<Vec<f32>> =
-            prepared.iter_mut().map(|p| std::mem::take(&mut p.features)).collect();
-        let scores = model.score(&feats);
-        let mut order: Vec<usize> = (0..cands.len()).collect();
-        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
-        let k = config
-            .measure_per_round
-            .min(config.trials - queued)
-            .min(order.len());
-        // Epsilon-greedy batch: mostly the model's top ranks, plus a few
-        // random picks from the remainder so a mislearned model cannot
-        // starve good regions of the space.
-        let k_greedy = k - ((k as f64 * config.epsilon).round() as usize).min(k);
-        let mut chosen: Vec<usize> = order[..k_greedy].to_vec();
-        let mut rest: Vec<usize> = order[k_greedy..].to_vec();
-        rng.shuffle(&mut rest);
-        chosen.extend(rest.into_iter().take(k - k_greedy));
-
-        for &i in &chosen {
-            taken.insert(cands[i].struct_hash());
-        }
-        let programs: Vec<Arc<VProgram>> =
-            chosen.iter().map(|&i| Arc::clone(&prepared[i].program)).collect();
-        let ticket = measurer.begin_measure(soc, programs);
-        queued += chosen.len();
-        inflight = Some(InFlight {
-            ticket,
-            schedules: chosen.iter().map(|&i| cands[i].clone()).collect(),
-            // `feats` is dead after this point; move the chosen vectors out
-            // (indices in `chosen` are distinct).
-            feats: chosen.iter().map(|&i| std::mem::take(&mut feats[i])).collect(),
-        });
-    }
-
-    db.best(&op_key, &soc.name).map(|best| TuneOutcome {
-        best: best.clone(),
-        trials_measured: measured,
-        history,
-    })
+    let mut tuner = OpTuner::new(op, soc, registry, measurer, db, config.clone())?;
+    while tuner.step_round(model, db) == RoundOutcome::Progressed {}
+    tuner.finish(model, db)
 }
 
 #[cfg(test)]
@@ -420,6 +564,149 @@ mod tests {
         .cycles;
         // Heuristic guidance should not be (much) worse than random.
         assert!(best_h <= best_r * 1.15, "heuristic {best_h} vs random {best_r}");
+    }
+
+    /// Serial measurer that records the size of every prepare batch.
+    struct CountingMeasurer {
+        prepares: std::cell::RefCell<Vec<usize>>,
+    }
+
+    impl CountingMeasurer {
+        fn new() -> CountingMeasurer {
+            CountingMeasurer { prepares: std::cell::RefCell::new(Vec::new()) }
+        }
+    }
+
+    impl Measurer for CountingMeasurer {
+        fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
+            SerialMeasurer.measure(soc, programs)
+        }
+
+        fn begin_prepare(
+            &self,
+            op: &Op,
+            soc: &SocConfig,
+            schedules: &[Schedule],
+        ) -> PrepareTicket {
+            self.prepares.borrow_mut().push(schedules.len());
+            SerialMeasurer.begin_prepare(op, soc, schedules)
+        }
+    }
+
+    /// The final partial round must not prepare a full `population`: with
+    /// 4 trials left of a 16-per-round batch, the candidate pool shrinks
+    /// proportionally (keeping the oversampling ratio) — and the full
+    /// rounds before it draw the exact same PRNG sequence as an untruncated
+    /// run, so their measured schedules are identical.
+    #[test]
+    fn final_round_scales_candidate_generation() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let config = SearchConfig { trials: 20, seed: 13, ..Default::default() };
+        let m = CountingMeasurer::new();
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        tune_op(&op, &soc, &registry, &mut model, &m, &mut db, &config).unwrap();
+        let sizes = m.prepares.borrow().clone();
+        assert!(sizes.len() >= 2, "expected a full round and a partial round: {sizes:?}");
+        assert!(
+            sizes[0] > config.measure_per_round,
+            "full rounds oversample beyond the batch size: {sizes:?}"
+        );
+        let cap = (4 * config.population).div_ceil(config.measure_per_round);
+        assert!(
+            *sizes.last().unwrap() <= cap,
+            "final round (4 trials left) prepared {} candidates, cap {cap}",
+            sizes.last().unwrap()
+        );
+        // Full-round PRNG determinism: the first full round of a 20-trial
+        // run matches the first round of a 100-trial run bit for bit.
+        let mut model2 = HeuristicCostModel;
+        let mut db2 = Database::new();
+        let config_long = SearchConfig { trials: 100, seed: 13, ..Default::default() };
+        tune_op(&op, &soc, &registry, &mut model2, &SerialMeasurer, &mut db2, &config_long)
+            .unwrap();
+        let first_round = |db: &Database| -> Vec<u64> {
+            db.records().iter().take(16).map(|r| r.schedule.struct_hash()).collect()
+        };
+        assert_eq!(first_round(&db), first_round(&db2));
+    }
+
+    /// Driving an `OpTuner` by hand must be bit-identical to `tune_op`.
+    #[test]
+    fn manual_stepping_matches_tune_op() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let config = SearchConfig { trials: 40, seed: 21, ..Default::default() };
+
+        let mut model_a = HeuristicCostModel;
+        let mut db_a = Database::new();
+        let a = tune_op(&op, &soc, &registry, &mut model_a, &SerialMeasurer, &mut db_a, &config)
+            .unwrap();
+
+        let mut model_b = HeuristicCostModel;
+        let mut db_b = Database::new();
+        let mut tuner =
+            OpTuner::new(&op, &soc, &registry, &SerialMeasurer, &db_b, config.clone()).unwrap();
+        while tuner.step_round(&mut model_b, &mut db_b) == RoundOutcome::Progressed {}
+        let b = tuner.finish(&mut model_b, &mut db_b).unwrap();
+
+        assert_eq!(a.best.cycles, b.best.cycles);
+        assert_eq!(a.best.schedule, b.best.schedule);
+        assert_eq!(a.history, b.history);
+        assert_eq!(a.trials_measured, b.trials_measured);
+        let hashes = |db: &Database| -> Vec<u64> {
+            db.records().iter().map(|r| r.schedule.struct_hash()).collect()
+        };
+        assert_eq!(hashes(&db_a), hashes(&db_b));
+    }
+
+    /// A tuner stopped mid-budget drains its in-flight round in `finish`.
+    #[test]
+    fn early_finish_drains_inflight_round() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let config = SearchConfig { trials: 64, seed: 3, ..Default::default() };
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        let mut tuner =
+            OpTuner::new(&op, &soc, &registry, &SerialMeasurer, &db, config).unwrap();
+        assert_eq!(tuner.step_round(&mut model, &mut db), RoundOutcome::Progressed);
+        assert_eq!(tuner.queued(), 16);
+        assert_eq!(tuner.measured(), 0, "first round still in flight");
+        let out = tuner.finish(&mut model, &mut db).unwrap();
+        assert_eq!(out.trials_measured, 16);
+        assert_eq!(out.history.len(), 1);
+        assert_eq!(db.len(), 16);
+    }
+
+    /// The round cap limits how many trials one round submits without
+    /// shrinking the candidate pool they are picked from.
+    #[test]
+    fn round_cap_limits_submissions_not_generation() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let config = SearchConfig { trials: 64, seed: 5, ..Default::default() };
+        let m = CountingMeasurer::new();
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        let mut tuner = OpTuner::new(&op, &soc, &registry, &m, &db, config.clone()).unwrap();
+        tuner.set_round_cap(4);
+        assert_eq!(tuner.step_round(&mut model, &mut db), RoundOutcome::Progressed);
+        assert_eq!(tuner.queued(), 4);
+        assert!(
+            m.prepares.borrow()[0] > config.measure_per_round,
+            "warm-up rounds still rank a full (oversampled) population, got {}",
+            m.prepares.borrow()[0]
+        );
+        tuner.set_round_cap(usize::MAX);
+        assert_eq!(tuner.step_round(&mut model, &mut db), RoundOutcome::Progressed);
+        assert_eq!(tuner.queued(), 4 + 16);
+        tuner.finish(&mut model, &mut db).unwrap();
     }
 
     #[test]

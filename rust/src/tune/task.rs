@@ -36,6 +36,15 @@ pub fn extract_tasks(layers: &[Op]) -> Vec<TuneTask> {
     by_key.into_values().collect()
 }
 
+/// The effective global budget once the per-layer floor is applied:
+/// `total`, grown to `min_per_task × tasks` when the floor alone exceeds
+/// it. Both schedulers honour the same growth rule (the paper grew the
+/// MobileLLM budget 200 -> 400 exactly this way), so their budgets stay
+/// comparable.
+pub fn floor_budget(tasks: &[TuneTask], total: usize, min_per_task: usize) -> usize {
+    total.max(min_per_task * tasks.len())
+}
+
 /// Allocate `total` trials across tasks proportionally to weight, with at
 /// least `min_per_task` each (the paper's "at least 10 candidates per
 /// layer"). If the floor alone exceeds the budget, every task gets the
@@ -117,5 +126,20 @@ mod tests {
     fn empty_tasks() {
         assert!(allocate_trials(&[], 100, 10).is_empty());
         assert!(extract_tasks(&[]).is_empty());
+    }
+
+    #[test]
+    fn floor_budget_grows_only_when_the_floor_dominates() {
+        let tasks: Vec<TuneTask> = (1..=4)
+            .map(|i| TuneTask { op: Op::square_matmul(i * 16, DType::I8), count: 1 })
+            .collect();
+        assert_eq!(floor_budget(&tasks, 200, 10), 200);
+        assert_eq!(floor_budget(&tasks, 30, 10), 40);
+        assert_eq!(floor_budget(&[], 30, 10), 30);
+        // Matches the sum `allocate_trials` hands out in the floor regime.
+        assert_eq!(
+            allocate_trials(&tasks, 30, 10).iter().sum::<usize>(),
+            floor_budget(&tasks, 30, 10)
+        );
     }
 }

@@ -4,7 +4,8 @@
 
 use rvv_tune::codegen::Scenario;
 use rvv_tune::coordinator::{
-    Fixed, MeasureRequest, ServiceOptions, Target, TuneRequest, TuneService, TunedWithFallback,
+    Fixed, MeasureRequest, SchedulerKind, ServiceOptions, Target, TuneRequest, TuneService,
+    TunedWithFallback,
 };
 use rvv_tune::sim::SocConfig;
 use rvv_tune::tir::{DType, Op};
@@ -178,11 +179,126 @@ fn database_roundtrip_through_service() {
 fn network_budget_allocation_respects_paper_floor() {
     let s = service(256);
     let model = models::by_name("keyword-spotting", DType::I8).unwrap();
-    let outcomes = s.tune_network(&model.layers, 60, 5);
-    assert_eq!(outcomes.len(), model.distinct_tasks());
-    for (key, o) in &outcomes {
+    let report = s.tune_network(&model.layers, 60, 5);
+    assert_eq!(report.outcomes.len(), model.distinct_tasks());
+    for (key, o) in &report.outcomes {
         let o = o.as_ref().unwrap_or_else(|| panic!("{key} should be tunable"));
         assert!(o.trials_measured >= 5, "{key}: {}", o.trials_measured);
+    }
+}
+
+/// The gradient scheduler guarantee: network tuning through the shared
+/// pool is bit-identical for any worker count — every scheduling decision
+/// is a function of deterministic tuner state, and measurement batches
+/// rendezvous by index no matter how many workers race.
+#[test]
+fn gradient_network_tuning_is_bit_identical_across_worker_counts() {
+    let model = models::by_name("keyword-spotting", DType::I8).unwrap();
+    type Canon =
+        (Vec<(String, Option<(f64, usize, Vec<f64>)>)>, Vec<f64>, Vec<(String, usize, u64, f64)>);
+    let run = |workers: usize| -> Canon {
+        let s = TuneService::new(
+            Target::new(SocConfig::saturn(256)),
+            ServiceOptions {
+                use_mlp: false,
+                workers,
+                scheduler: SchedulerKind::Gradient,
+                ..Default::default()
+            },
+        );
+        let report = s.tune_network(&model.layers, 64, 4);
+        let outcomes = report
+            .outcomes
+            .iter()
+            .map(|(k, o)| {
+                (
+                    k.clone(),
+                    o.as_ref().map(|o| (o.best.cycles, o.trials_measured, o.history.clone())),
+                )
+            })
+            .collect();
+        let mut records: Vec<(String, usize, u64, f64)> = s
+            .db()
+            .snapshot()
+            .records()
+            .iter()
+            .map(|r| (r.op_key.clone(), r.trial, r.schedule.struct_hash(), r.cycles))
+            .collect();
+        records.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        (outcomes, report.convergence, records)
+    };
+    let one = run(1);
+    for workers in [2usize, 4] {
+        assert_eq!(one, run(workers), "{workers} workers must match 1 worker bit for bit");
+    }
+}
+
+/// The per-network convergence curve the report surfaces must be monotone
+/// non-increasing (it tracks Σ occurrences × best cycles, and bests only
+/// improve).
+#[test]
+fn network_convergence_curve_is_monotone_non_increasing() {
+    let s = service(256);
+    let model = models::by_name("image-classification", DType::I8).unwrap();
+    let report = s.tune_network(&model.layers, 120, 4);
+    assert_eq!(report.scheduler, "gradient");
+    assert!(
+        report.convergence.len() >= 2,
+        "expected a multi-round curve, got {:?}",
+        report.convergence
+    );
+    for w in report.convergence.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "convergence regressed: {} -> {}", w[0], w[1]);
+    }
+    // The curve's final point is consistent with the tuned bests.
+    let expected: f64 = report
+        .outcomes
+        .iter()
+        .filter_map(|(key, o)| {
+            o.as_ref().map(|o| {
+                let count =
+                    model.layers.iter().filter(|l| &l.key() == key).count() as f64;
+                o.best.cycles * count
+            })
+        })
+        .sum();
+    let last = report.final_estimate().unwrap();
+    assert!((last - expected).abs() < 1e-6, "final {last} vs recomputed {expected}");
+}
+
+/// The ISSUE's acceptance bar: with an equal total trial budget, the
+/// gradient scheduler's end-to-end network latency must be no worse than
+/// the static allocation baseline's, on at least two MLPerf-Tiny models.
+#[test]
+fn gradient_scheduler_matches_or_beats_static_on_equal_budget() {
+    for name in ["anomaly-detection", "keyword-spotting"] {
+        let model = models::by_name(name, DType::I8).unwrap();
+        let run = |kind: SchedulerKind| {
+            let s = TuneService::new(
+                Target::new(SocConfig::saturn(256)),
+                ServiceOptions {
+                    use_mlp: false,
+                    workers: 2,
+                    scheduler: kind,
+                    ..Default::default()
+                },
+            );
+            let report = s.tune_network(&model.layers, 200, 10);
+            let cycles = s
+                .measure_network(&model.layers, &TunedWithFallback { trials: 10 })
+                .unwrap()
+                .cycles;
+            (cycles, report.trials_measured)
+        };
+        let (grad, grad_trials) = run(SchedulerKind::Gradient);
+        let (stat, stat_trials) = run(SchedulerKind::Static);
+        assert!(
+            grad <= stat + 1e-6,
+            "{name}: gradient {grad} cycles must be <= static {stat} cycles"
+        );
+        // Equal budgets: neither scheduler may overspend the requested total.
+        assert!(grad_trials <= 200, "{name}: gradient spent {grad_trials}");
+        assert!(stat_trials <= 200, "{name}: static spent {stat_trials}");
     }
 }
 
