@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI: tier-1 build + tests, then a quick perf smoke of the tuning hot path.
-# Leaves machine-readable bench output in rust/BENCH_perf_hotpath.json
-# (see EXPERIMENTS.md §Perf).
+# CI: tier-1 build + tests, a database/trace round-trip smoke, then a
+# quick perf smoke of the tuning hot path. Leaves machine-readable bench
+# output in rust/BENCH_perf_hotpath.json (see EXPERIMENTS.md §Perf).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -11,18 +11,9 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
-echo "== lint: cargo fmt --check =="
+echo "== lint: cargo fmt --check (strict) =="
 if cargo fmt --version >/dev/null 2>&1; then
-  # Advisory until the pre-existing tree is reformatted in one sweep: the
-  # seed code predates the check and is not yet rustfmt-clean, so drift is
-  # reported (for review) without failing CI. Flip to a hard failure by
-  # exporting CI_STRICT_FMT=1 once `cargo fmt` has been run tree-wide.
-  if ! cargo fmt --check; then
-    if [ "${CI_STRICT_FMT:-0}" = "1" ]; then
-      echo "fmt check failed (CI_STRICT_FMT=1)"; exit 1
-    fi
-    echo "warning: rustfmt drift detected (advisory; see diff above)"
-  fi
+  cargo fmt --check
 else
   echo "rustfmt component not installed in this toolchain; fmt check skipped"
 fi
@@ -33,6 +24,18 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
   echo "clippy component not installed in this toolchain; lint skipped"
 fi
+
+echo "== trace round-trip smoke: tune -> save -> load -> replay =="
+# Database-format regressions must fail CI, not users: tune a tiny matmul,
+# persist the trace-carrying database, then reload it and replay the best
+# record's decision trace through the CLI (`trace --db` exits nonzero on a
+# load or replay failure).
+smoke_dir="$(mktemp -d)"
+trap 'rm -rf "$smoke_dir"' EXIT
+cargo run --release --quiet -- tune --workload matmul:16:int8 --soc saturn-256 \
+  --trials 8 --no-mlp --db "$smoke_dir/db.json" >/dev/null
+cargo run --release --quiet -- trace --workload matmul:16:int8 --soc saturn-256 \
+  --db "$smoke_dir/db.json"
 
 echo "== perf smoke: BENCH_QUICK=1 perf_hotpath =="
 BENCH_QUICK=1 cargo bench --bench perf_hotpath

@@ -44,6 +44,9 @@ struct NetworkRun {
     /// First and last point of the gradient scheduler's convergence curve
     /// (estimated network cycles).
     converge: Option<(f64, f64)>,
+    /// Decision trace of the heaviest tunable task's best record — the
+    /// replayable probabilistic-program execution behind the winner.
+    best_trace: Option<String>,
 }
 
 fn run_network(name: &'static str, quick: bool, workers: usize) -> NetworkRun {
@@ -84,7 +87,18 @@ fn run_network(name: &'static str, quick: bool, workers: usize) -> NetworkRun {
         .measure_network(&model.layers, &TunedWithFallback { trials: min_per })
         .unwrap()
         .cycles;
-    NetworkRun { name, base, o3, mu, ours, candidates, converge }
+    // The decision trace behind the heaviest *tuned* task's winner: every
+    // record stores its replayable trace, so the "why is this fast"
+    // question has a first-class answer (also: `rvv-tune trace`). Skip
+    // untunable tasks — a network may have fallback layers yet still show
+    // its heaviest tuned winner.
+    let mut tasks = rvv_tune::tune::extract_tasks(&model.layers);
+    tasks.sort_by(|a, b| b.weight().total_cmp(&a.weight()));
+    let best_trace = tasks
+        .iter()
+        .find_map(|t| service.db().best(&t.op.key(), &service.soc().name))
+        .map(|r| format!("{} <- {}", r.op_key, r.trace.describe()));
+    NetworkRun { name, base, o3, mu, ours, candidates, converge, best_trace }
 }
 
 fn main() {
@@ -140,6 +154,14 @@ fn main() {
                 last,
                 (first / last.max(1e-9) - 1.0) * 100.0
             ),
+            None => println!("  {:<22} (no tunable tasks)", r.name),
+        }
+    }
+
+    println!("\nwinning decision traces (heaviest task per network):");
+    for r in &runs {
+        match &r.best_trace {
+            Some(t) => println!("  {:<22} {t}", r.name),
             None => println!("  {:<22} (no tunable tasks)", r.name),
         }
     }

@@ -41,6 +41,9 @@ fn main() {
         outcome.best.schedule.describe(),
         outcome.best.cycles,
     );
+    // Every record stores the replayable decision trace that produced it
+    // (the probabilistic-program execution the schedule was lowered from).
+    println!("winning decision trace: {}", outcome.best.trace.describe());
 
     // Compare all scenarios (MeasureRequest -> Measurement).
     println!("\n{:<16} {:>12} {:>10} {:>9}", "scenario", "cycles", "lat(us)", "speedup");

@@ -12,5 +12,10 @@ fn main() {
 
     rvv_tune::util::bench::section("fig3_matmul_saturn: measurement primitive");
     let op = rvv_tune::workloads::matmul::matmul(64, rvv_tune::tir::DType::I8);
-    common::bench_measure("sim-timing 64^3 int8 muriscv-nn", &op, &rvv_tune::codegen::Scenario::MuRiscvNn, 1024);
+    common::bench_measure(
+        "sim-timing 64^3 int8 muriscv-nn",
+        &op,
+        &rvv_tune::codegen::Scenario::MuRiscvNn,
+        1024,
+    );
 }

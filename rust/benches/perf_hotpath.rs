@@ -17,7 +17,7 @@ use rvv_tune::intrinsics::Registry;
 use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
 use rvv_tune::tir::DType;
 use rvv_tune::tune::{
-    self, Database, HeuristicCostModel, Measurer, SearchConfig, SearchSpace, SerialMeasurer,
+    self, Database, HeuristicCostModel, Measurer, SearchConfig, SerialMeasurer,
 };
 use rvv_tune::util::bench::{
     bench, black_box, opts, quick_mode, quick_opts, section, BenchReport,
@@ -72,14 +72,15 @@ fn main() {
         report.add(&r);
     }
 
-    section("L3: candidate generation (sample + codegen + features)");
+    section("L3: candidate generation (trace sample + replay + codegen + features)");
     let op = matmul::matmul(128, DType::I8);
-    let space = SearchSpace::new(&op, &registry);
+    let space = tune::program_for(&op, &registry);
     let mut rng = Pcg::seeded(1);
     let r = bench("sample+emit+features 128^3", opts(), || {
-        let s = space.sample(&mut rng);
+        let t = space.sample(&mut rng);
+        let s = tune::lower(&t).unwrap();
         let p = codegen::ours::emit(&op, &s, 1024);
-        let f = tune::features::extract(&op, &s, &p, &soc);
+        let f = tune::features::extract(&op, &t, &p, &soc);
         black_box(f);
     });
     report.add(&r);
@@ -88,7 +89,7 @@ fn main() {
     let mut programs = Vec::new();
     let mut rng2 = Pcg::seeded(2);
     for _ in 0..16 {
-        let s = space.sample(&mut rng2);
+        let s = tune::lower(&space.sample(&mut rng2)).unwrap();
         programs.push(codegen::ours::emit(&op, &s, 1024));
     }
     let r_serial = bench("serial 16 candidates 128^3", quick_opts(), || {

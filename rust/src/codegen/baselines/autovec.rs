@@ -102,8 +102,17 @@ pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
             body.push(Node::Inst(Inst::VRedSum { vd: 12, vs: 8, acc: 12 }));
             let c_addr = AddrExpr::var(mv, n as i64).plus(nv, 1);
             body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: acc_sew, lmul: Lmul::M1, float }));
-            body.push(Node::Inst(Inst::VLoad { vd: 13, mem: MemRef::unit(bufs.acc, c_addr.clone()) }));
-            body.push(Node::Inst(Inst::VBin { op: VBinOp::Add, vd: 12, vs1: 12, vs2: 13, widen: false }));
+            body.push(Node::Inst(Inst::VLoad {
+                vd: 13,
+                mem: MemRef::unit(bufs.acc, c_addr.clone()),
+            }));
+            body.push(Node::Inst(Inst::VBin {
+                op: VBinOp::Add,
+                vd: 12,
+                vs1: 12,
+                vs2: 13,
+                widen: false,
+            }));
             body.push(Node::Inst(Inst::VStore { vs: 12, mem: MemRef::unit(bufs.acc, c_addr) }));
 
             let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body });
@@ -165,8 +174,12 @@ pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
                     lmul: flavor.lmul(),
                     float,
                 }));
-                t_body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.acc, y_addr.clone()) }));
-                t_body.push(Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: flavor.lmul(), float }));
+                t_body.push(Node::Inst(Inst::VLoad {
+                    vd: 8,
+                    mem: MemRef::unit(bufs.acc, y_addr.clone()),
+                }));
+                t_body
+                    .push(Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: flavor.lmul(), float }));
                 t_body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, x_addr) }));
                 t_body.push(Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.b, w_addr) }));
                 t_body.push(Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }));
@@ -176,7 +189,8 @@ pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
                     lmul: flavor.lmul(),
                     float,
                 }));
-                t_body.push(Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(bufs.acc, y_addr) }));
+                t_body
+                    .push(Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(bufs.acc, y_addr) }));
             };
             if c_full > 0 {
                 let cv = p.fresh_var();
@@ -192,7 +206,8 @@ pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
             if c_tail > 0 {
                 emit_chunk(&mut t_body, AddrExpr::constant(c_full as i64 * vl as i64), c_tail);
             }
-            let t_loop = Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body: t_body });
+            let t_loop =
+                Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body: t_body });
             p.body.push(Node::Loop(LoopNode {
                 var: sv,
                 extent: spatial as u32,

@@ -79,15 +79,26 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
                 let kv = p.fresh_var();
                 let mut body: Vec<Node> = Vec::new();
                 body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
-                body.push(Node::Inst(Inst::VSplat { vd: 16, value: ScalarSrc::I(0), vl_override: None }));
+                body.push(Node::Inst(Inst::VSplat {
+                    vd: 16,
+                    value: ScalarSrc::I(0),
+                    vl_override: None,
+                }));
                 if two_rows {
-                    body.push(Node::Inst(Inst::VSplat { vd: 20, value: ScalarSrc::I(0), vl_override: None }));
+                    body.push(Node::Inst(Inst::VSplat {
+                        vd: 20,
+                        value: ScalarSrc::I(0),
+                        vl_override: None,
+                    }));
                 }
                 let k_block = |body: &mut Vec<Node>, k_base: AddrExpr, _vl_cur: u32| {
                     let a1 = row_expr.clone().scaled(k as i64).plus_expr(&k_base);
                     let b_addr = AddrExpr::var(nv, k as i64).plus_expr(&k_base);
                     body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.b, b_addr) }));
-                    body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, a1.clone()) }));
+                    body.push(Node::Inst(Inst::VLoad {
+                        vd: 0,
+                        mem: MemRef::unit(bufs.a, a1.clone()),
+                    }));
                     body.push(Node::Inst(Inst::VMacc { vd: 16, vs1: 0, vs2: 8, widen: true }));
                     if two_rows {
                         let a2 = a1.offset(k as i64);
@@ -98,7 +109,12 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
                 if k_full > 0 {
                     let mut inner = Vec::new();
                     k_block(&mut inner, AddrExpr::var(kv, chunk as i64), chunk);
-                    body.push(Node::Loop(LoopNode { var: kv, extent: k_full as u32, unroll: 1, body: inner }));
+                    body.push(Node::Loop(LoopNode {
+                        var: kv,
+                        extent: k_full as u32,
+                        unroll: 1,
+                        body: inner,
+                    }));
                 }
                 if k_tail > 0 {
                     body.push(Node::Inst(Inst::VSetVl { vl: k_tail, sew, lmul, float: false }));
@@ -115,11 +131,29 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
                         .offset(*row_off)
                         .scaled(n as i64)
                         .plus(nv, 1);
-                    body.push(Node::Inst(Inst::VSplat { vd: 24, value: ScalarSrc::I(0), vl_override: Some(1) }));
+                    body.push(Node::Inst(Inst::VSplat {
+                        vd: 24,
+                        value: ScalarSrc::I(0),
+                        vl_override: Some(1),
+                    }));
                     body.push(Node::Inst(Inst::VRedSum { vd: 24, vs: *acc_reg, acc: 24 }));
-                    body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: Sew::E32, lmul: Lmul::M1, float: false }));
-                    body.push(Node::Inst(Inst::VLoad { vd: 25, mem: MemRef::unit(bufs.acc, c_addr.clone()) }));
-                    body.push(Node::Inst(Inst::VBin { op: VBinOp::Add, vd: 24, vs1: 24, vs2: 25, widen: false }));
+                    body.push(Node::Inst(Inst::VSetVl {
+                        vl: 1,
+                        sew: Sew::E32,
+                        lmul: Lmul::M1,
+                        float: false,
+                    }));
+                    body.push(Node::Inst(Inst::VLoad {
+                        vd: 25,
+                        mem: MemRef::unit(bufs.acc, c_addr.clone()),
+                    }));
+                    body.push(Node::Inst(Inst::VBin {
+                        op: VBinOp::Add,
+                        vd: 24,
+                        vs1: 24,
+                        vs2: 25,
+                        widen: false,
+                    }));
                     body.push(Node::Inst(Inst::VRequant {
                         vd: 26,
                         vs: 24,
@@ -167,26 +201,53 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
                     .plus_expr(&c_base);
                 let w_addr = AddrExpr::var(tv, channels as i64).plus_expr(&c_base);
                 let y_addr = AddrExpr::var(sv, channels as i64).plus_expr(&c_base);
-                t_body.push(Node::Inst(Inst::VSetVl { vl: vl_cur, sew: Sew::E32, lmul, float: false }));
-                t_body.push(Node::Inst(Inst::VLoad { vd: 16, mem: MemRef::unit(bufs.acc, y_addr.clone()) }));
+                t_body.push(Node::Inst(Inst::VSetVl {
+                    vl: vl_cur,
+                    sew: Sew::E32,
+                    lmul,
+                    float: false,
+                }));
+                t_body.push(Node::Inst(Inst::VLoad {
+                    vd: 16,
+                    mem: MemRef::unit(bufs.acc, y_addr.clone()),
+                }));
                 t_body.push(Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul, float: false }));
                 t_body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, x_addr) }));
                 t_body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.b, w_addr) }));
                 t_body.push(Node::Inst(Inst::VMacc { vd: 16, vs1: 0, vs2: 8, widen: true }));
-                t_body.push(Node::Inst(Inst::VSetVl { vl: vl_cur, sew: Sew::E32, lmul, float: false }));
-                t_body.push(Node::Inst(Inst::VStore { vs: 16, mem: MemRef::unit(bufs.acc, y_addr) }));
+                t_body.push(Node::Inst(Inst::VSetVl {
+                    vl: vl_cur,
+                    sew: Sew::E32,
+                    lmul,
+                    float: false,
+                }));
+                t_body.push(Node::Inst(Inst::VStore {
+                    vs: 16,
+                    mem: MemRef::unit(bufs.acc, y_addr),
+                }));
             };
             if c_full > 0 {
                 let cv = p.fresh_var();
                 let mut inner = Vec::new();
                 emit_chunk(&mut inner, AddrExpr::var(cv, vl as i64), vl);
-                t_body.push(Node::Loop(LoopNode { var: cv, extent: c_full as u32, unroll: 1, body: inner }));
+                t_body.push(Node::Loop(LoopNode {
+                    var: cv,
+                    extent: c_full as u32,
+                    unroll: 1,
+                    body: inner,
+                }));
             }
             if c_tail > 0 {
                 emit_chunk(&mut t_body, AddrExpr::constant(c_full as i64 * vl as i64), c_tail);
             }
-            let t_loop = Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body: t_body });
-            p.body.push(Node::Loop(LoopNode { var: sv, extent: spatial as u32, unroll: 1, body: vec![t_loop] }));
+            let t_loop =
+                Node::Loop(LoopNode { var: tv, extent: taps as u32, unroll: 1, body: t_body });
+            p.body.push(Node::Loop(LoopNode {
+                var: sv,
+                extent: spatial as u32,
+                unroll: 1,
+                body: vec![t_loop],
+            }));
             if let Some(rq) = requant {
                 super::super::ours::emit_requant_epilogue(
                     &mut p,

@@ -164,6 +164,7 @@ mod tests {
             order: LoopOrder::NMK,
             unroll: 8,
             transpose: false,
+            ks: 1,
         }));
         let rvv = cycles(&codegen::generate(&op, &tuned, 1024).unwrap());
         assert!(pext < scalar / 2.0, "packed SIMD beats scalar: {pext} vs {scalar}");

@@ -102,7 +102,9 @@ pub fn declare_buffers(p: &mut VProgram, op: &Op) -> ProgramBufs {
 pub fn generate(op: &Op, scenario: &Scenario, vlen: u32) -> Option<VProgram> {
     match scenario {
         Scenario::ScalarOs => Some(baselines::scalar::emit(op)),
-        Scenario::AutovecGcc => Some(baselines::autovec::emit(op, vlen, baselines::autovec::Flavor::Gcc)),
+        Scenario::AutovecGcc => {
+            Some(baselines::autovec::emit(op, vlen, baselines::autovec::Flavor::Gcc))
+        }
         Scenario::AutovecLlvm => {
             Some(baselines::autovec::emit(op, vlen, baselines::autovec::Flavor::Llvm))
         }
@@ -119,7 +121,13 @@ mod tests {
 
     #[test]
     fn buffer_convention_matmul_i8() {
-        let op = Op::Matmul { m: 4, n: 8, k: 16, dtype: DType::I8, requant: Some(Requant::default_for_tests()) };
+        let op = Op::Matmul {
+            m: 4,
+            n: 8,
+            k: 16,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
         let mut p = VProgram::new("t");
         let bufs = declare_buffers(&mut p, &op);
         assert_eq!(p.buffers[bufs.a].len, 64);

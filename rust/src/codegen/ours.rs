@@ -38,7 +38,9 @@ pub const LAYER_GLUE_BYTES: u64 = 224;
 pub fn variant_key(op: &Op, schedule: &Schedule) -> String {
     let d = op.dtype().name();
     match schedule {
-        Schedule::Matmul(s) => format!("vmatmul-{}-vl{}-j{}-u{}", d, s.intrin.vl, s.intrin.j, s.unroll),
+        Schedule::Matmul(s) => {
+            format!("vmatmul-{}-vl{}-j{}-u{}", d, s.intrin.vl, s.intrin.j, s.unroll)
+        }
         Schedule::DwConv(s) => format!("vmacc-dw-{}-vl{}-h{}", d, s.vl, s.unroll_taps),
         Schedule::Eltwise(s) => format!("vmacc-ew-{}-vl{}-u{}", d, s.vl, s.unroll),
     }
@@ -144,7 +146,10 @@ fn intrinsic_call(
             lmul: Lmul::M1,
             float: ctx.is_float(),
         }));
-        nodes.push(Node::Inst(Inst::VLoad { vd: 26, mem: MemRef::unit(ctx.bufs.acc, c_addr.clone()) }));
+        nodes.push(Node::Inst(Inst::VLoad {
+            vd: 26,
+            mem: MemRef::unit(ctx.bufs.acc, c_addr.clone()),
+        }));
         nodes.push(Node::Inst(Inst::VBin {
             op: crate::isa::VBinOp::Add,
             vd: 25,
@@ -259,9 +264,26 @@ fn emit_matmul(
     let k_tail = (k % vl as usize) as u32;
     let n_full = n_e / j as usize;
     let n_tail = (n_e % j as usize) as u32;
-    let mi = sched.mi.max(1).min(m_e as u32);
-    debug_assert_eq!(m_e % mi as usize, 0, "mi must divide the row extent");
+    // Tiling factors must divide their extents or chunks get dropped. The
+    // space programs only produce divisors, but a hand-edited schedule (or
+    // a database record whose stored domain was tampered with) must not
+    // silently compute a wrong result in release builds — clamp to the
+    // largest not-exceeding divisor instead.
+    let largest_divisor = |extent: usize, cap: u32| -> u32 {
+        (1..=cap.max(1).min(extent.max(1) as u32))
+            .rev()
+            .find(|&c| extent % c as usize == 0)
+            .unwrap_or(1)
+    };
+    let mi = largest_divisor(m_e, sched.mi);
+    debug_assert_eq!(mi, sched.mi.max(1).min(m_e as u32), "mi must divide the row extent");
     let m_outer = m_e / mi as usize;
+    let ks = largest_divisor(k_full, sched.ks);
+    debug_assert_eq!(
+        ks,
+        sched.ks.max(1).min(k_full.max(1) as u32),
+        "ks must divide the full-chunk count"
+    );
 
     // Recursive emission over the loop order with tail peeling on N and K.
     fn gen(
@@ -273,7 +295,8 @@ fn emit_matmul(
         j_count: u32,
         k_base: AddrExpr,
         vl_cur: u32,
-        dims: (usize, u32, usize, u32, usize, u32, u32), // m_outer, mi, n_full, n_tail, k_full, k_tail, vl
+        // (m_outer, mi, n_full, n_tail, k_full, k_tail, vl)
+        dims: (usize, u32, usize, u32, usize, u32, u32),
     ) -> Vec<Node> {
         let (m_outer, mi, n_full, n_tail, k_full, k_tail, vl) = dims;
         match axes.split_first() {
@@ -327,10 +350,12 @@ fn emit_matmul(
                 nodes
             }
             Some((Axis::K, rest)) => {
+                // `k_base` arrives non-zero when a k-split hoisted a block
+                // loop outside this nest; the chunk loop composes with it.
                 let mut nodes = Vec::new();
                 if k_full > 0 {
                     let ko = p.fresh_var();
-                    let base = AddrExpr::var(ko, vl as i64);
+                    let base = k_base.clone().plus(ko, vl as i64);
                     let inner = gen(
                         p,
                         ctx,
@@ -350,7 +375,7 @@ fn emit_matmul(
                     }));
                 }
                 if k_tail > 0 {
-                    let base = AddrExpr::constant(k_full as i64 * vl as i64);
+                    let base = k_base.offset(k_full as i64 * vl as i64);
                     nodes.extend(gen(p, ctx, rest, row, n_base, j_count, base, k_tail, dims));
                 }
                 nodes
@@ -359,17 +384,56 @@ fn emit_matmul(
     }
 
     let axes = order_axes(sched.order);
-    let body = gen(
-        &mut p,
-        &ctx,
-        &axes,
-        AddrExpr::constant(0),
-        AddrExpr::constant(0),
-        j,
-        AddrExpr::constant(0),
-        vl,
-        (m_outer, mi, n_full, n_tail, k_full, k_tail, vl),
-    );
+    let body = if ks <= 1 {
+        gen(
+            &mut p,
+            &ctx,
+            &axes,
+            AddrExpr::constant(0),
+            AddrExpr::constant(0),
+            j,
+            AddrExpr::constant(0),
+            vl,
+            (m_outer, mi, n_full, n_tail, k_full, k_tail, vl),
+        )
+    } else {
+        // Reduction k-split: the full VL-chunks are tiled into `ks` equal
+        // blocks and the block loop is hoisted outside the whole nest, so
+        // each block's A/B slices stay cache-hot across the m/n sweep.
+        // The reduction still accumulates through the C tile in memory,
+        // so integer results are exact for any split. The k tail (if any)
+        // runs as one peeled nest after the blocks.
+        let per = k_full / ks as usize;
+        let kbv = p.fresh_var();
+        let block_base = AddrExpr::var(kbv, per as i64 * vl as i64);
+        let inner = gen(
+            &mut p,
+            &ctx,
+            &axes,
+            AddrExpr::constant(0),
+            AddrExpr::constant(0),
+            j,
+            block_base,
+            vl,
+            (m_outer, mi, n_full, n_tail, per, 0, vl),
+        );
+        let mut nodes =
+            vec![Node::Loop(LoopNode { var: kbv, extent: ks, unroll: 1, body: inner })];
+        if k_tail > 0 {
+            nodes.extend(gen(
+                &mut p,
+                &ctx,
+                &axes,
+                AddrExpr::constant(0),
+                AddrExpr::constant(0),
+                j,
+                AddrExpr::constant(k_full as i64 * vl as i64),
+                vl,
+                (m_outer, mi, n_full, n_tail, 0, k_tail, vl),
+            ));
+        }
+        nodes
+    };
     p.body = body;
 
     if let Some(rq) = requant {
@@ -457,7 +521,8 @@ fn emit_dwconv(
             .plus_expr(&c_base);
         let w_addr = AddrExpr::var(tv, channels as i64).plus_expr(&c_base);
         let y_addr = AddrExpr::var(sv, channels as i64).plus_expr(&c_base);
-        let load_y = Node::Inst(Inst::VLoad { vd: 16, mem: MemRef::unit(bufs.acc, y_addr.clone()) });
+        let load_y =
+            Node::Inst(Inst::VLoad { vd: 16, mem: MemRef::unit(bufs.acc, y_addr.clone()) });
         let store_y = Node::Inst(Inst::VStore { vs: 16, mem: MemRef::unit(bufs.acc, y_addr) });
         let set_acc =
             Node::Inst(Inst::VSetVl { vl: vl_cur, sew: acc_sew, lmul: Lmul::M8, float });
@@ -497,7 +562,8 @@ fn emit_dwconv(
     if c_full > 0 {
         let cv = p.fresh_var();
         let chunk = emit_chunk(&mut p, AddrExpr::var(cv, vl as i64), vl);
-        s_body.push(Node::Loop(LoopNode { var: cv, extent: c_full as u32, unroll: 1, body: chunk }));
+        s_body
+            .push(Node::Loop(LoopNode { var: cv, extent: c_full as u32, unroll: 1, body: chunk }));
     }
     if c_tail > 0 {
         let base = AddrExpr::constant(c_full as i64 * vl as i64);
@@ -560,6 +626,7 @@ mod tests {
             order,
             unroll: 1,
             transpose: false,
+            ks: 1,
         })
     }
 
@@ -587,7 +654,13 @@ mod tests {
         out
     }
 
-    fn run_i8_matmul(m: usize, n: usize, k: usize, sched: &Schedule, vlen: u32) -> (Vec<i8>, Vec<i8>) {
+    fn run_i8_matmul(
+        m: usize,
+        n: usize,
+        k: usize,
+        sched: &Schedule,
+        vlen: u32,
+    ) -> (Vec<i8>, Vec<i8>) {
         let rq = Requant { mult: 1 << 18, shift: 20, zp: 3 };
         let op = Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rq) };
         let p = emit(&op, sched, vlen);
@@ -624,6 +697,7 @@ mod tests {
                 order,
                 unroll: 1,
                 transpose: true,
+                ks: 1,
             });
             let (got, want) = run_i8_matmul(24, 6, 32, &sched, 256);
             assert_eq!(got, want, "order {}", order.name());
@@ -633,7 +707,13 @@ mod tests {
     #[test]
     fn transposed_mapping_beats_j1_on_narrow_n() {
         // ResNet8-like layer: m large, n=16 < J=32 at VLEN=1024.
-        let op = Op::Matmul { m: 256, n: 16, k: 144, dtype: DType::I8, requant: Some(Requant::default_for_tests()) };
+        let op = Op::Matmul {
+            m: 256,
+            n: 16,
+            k: 144,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
         let run = |sched: &Schedule| {
             let p = emit(&op, sched, 1024);
             let mut bufs = BufStore::timing(&p);
@@ -645,6 +725,7 @@ mod tests {
             order: LoopOrder::NMK,
             unroll: 2,
             transpose: false,
+            ks: 1,
         });
         let transposed = Schedule::Matmul(MatmulSchedule {
             intrin: IntrinChoice { vl: 144, j: 32, lmul: 8 },
@@ -652,8 +733,56 @@ mod tests {
             order: LoopOrder::NMK,
             unroll: 2,
             transpose: true,
+            ks: 1,
         });
         assert!(run(&transposed) < run(&j1), "transposed must win on narrow n");
+    }
+
+    /// Reduction k-blocking (the k-split decision) must stay exact for
+    /// every loop order, with and without a k tail: the blocks accumulate
+    /// through the C tile in memory, so integer results are
+    /// order-insensitive.
+    #[test]
+    fn alg1_ksplit_is_exact() {
+        for order in LoopOrder::ALL {
+            for (k, ks) in [(64usize, 2u32), (64, 4), (72, 2)] {
+                let sched = Schedule::Matmul(MatmulSchedule {
+                    intrin: IntrinChoice { vl: 16, j: 4, lmul: 8 },
+                    mi: 2,
+                    order,
+                    unroll: 1,
+                    transpose: false,
+                    ks,
+                });
+                let (got, want) = run_i8_matmul(6, 12, k, &sched, 256);
+                assert_eq!(got, want, "order {} k {k} ks {ks}", order.name());
+            }
+        }
+    }
+
+    /// The k-split block loop is hoisted outermost: ks > 1 wraps the whole
+    /// nest in a block loop of that extent, while ks = 1 emits the
+    /// pre-k-split structure (no wrapper).
+    #[test]
+    fn ksplit_hoists_an_outermost_block_loop() {
+        let op = Op::square_matmul(64, DType::I8);
+        let mk = |ks: u32| {
+            let mut s = match mm_sched(16, 8, LoopOrder::NMK, 2) {
+                Schedule::Matmul(s) => s,
+                _ => unreachable!(),
+            };
+            s.ks = ks;
+            emit(&op, &Schedule::Matmul(s), 256)
+        };
+        let p1 = mk(1);
+        let p2 = mk(2);
+        match (&p1.body[0], &p2.body[0]) {
+            (Node::Loop(a), Node::Loop(b)) => {
+                assert_eq!(b.extent, 2, "outermost loop must be the k-block loop");
+                assert_ne!(a.extent, 2, "ks=1 must not grow a block wrapper");
+            }
+            other => panic!("expected loops outermost, got {other:?}"),
+        }
     }
 
     #[test]

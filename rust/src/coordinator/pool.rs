@@ -5,7 +5,8 @@
 //! `Mutex<Option<ExecResult>>` per result; workers only executed
 //! measurements, so codegen + feature extraction serialized on the leader.
 //! This pool keeps **long-lived workers** draining a shared job queue, and
-//! workers run the *whole per-candidate chain*: a `Prepare` job is
+//! workers run the *whole per-candidate chain*: a `Prepare` job replays a
+//! decision trace to its schedule (`tune::space::lower`) and runs
 //! `codegen::ours::emit` + `features::extract`, a `Measure` job is a
 //! timing-mode `execute`. Batches rendezvous through an indexed sink, so
 //! results are position-stable and bit-identical to serial execution no
@@ -23,9 +24,9 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::sim::{ExecResult, SocConfig, VProgram};
-use crate::tir::{Op, Schedule};
+use crate::tir::Op;
 use crate::tune::search::measure_one;
-use crate::tune::{MeasureTicket, Measurer, Prepared, PrepareTicket};
+use crate::tune::{MeasureTicket, Measurer, Prepared, PrepareTicket, Trace};
 
 /// Context shared by every prepare job of one batch.
 struct PrepareCtx {
@@ -35,10 +36,15 @@ struct PrepareCtx {
 
 /// One unit of worker work.
 enum Job {
-    /// Emit + feature-extract one candidate schedule.
-    Prepare { idx: usize, schedule: Schedule, ctx: Arc<PrepareCtx>, out: Arc<BatchSink<Prepared>> },
+    /// Replay + emit + feature-extract one candidate trace.
+    Prepare { idx: usize, trace: Trace, ctx: Arc<PrepareCtx>, out: Arc<BatchSink<Prepared>> },
     /// Timing-mode measure one emitted program.
-    Measure { idx: usize, program: Arc<VProgram>, soc: Arc<SocConfig>, out: Arc<BatchSink<ExecResult>> },
+    Measure {
+        idx: usize,
+        program: Arc<VProgram>,
+        soc: Arc<SocConfig>,
+        out: Arc<BatchSink<ExecResult>>,
+    },
 }
 
 impl Job {
@@ -50,9 +56,9 @@ impl Job {
     fn run(self) {
         use std::panic::{catch_unwind, AssertUnwindSafe};
         match self {
-            Job::Prepare { idx, schedule, ctx, out } => {
+            Job::Prepare { idx, trace, ctx, out } => {
                 let r = catch_unwind(AssertUnwindSafe(|| {
-                    Prepared::build(&ctx.op, &schedule, &ctx.soc)
+                    Prepared::build(&ctx.op, &trace, &ctx.soc)
                 }));
                 match r {
                     Ok(v) => out.put(idx, v),
@@ -238,15 +244,15 @@ impl Measurer for MeasurePool {
             .wait()
     }
 
-    fn begin_prepare(&self, op: &Op, soc: &SocConfig, schedules: &[Schedule]) -> PrepareTicket {
-        let sink = BatchSink::new(schedules.len());
+    fn begin_prepare(&self, op: &Op, soc: &SocConfig, candidates: &[Trace]) -> PrepareTicket {
+        let sink = BatchSink::new(candidates.len());
         let ctx = Arc::new(PrepareCtx { op: op.clone(), soc: soc.clone() });
-        let jobs = schedules
+        let jobs = candidates
             .iter()
             .enumerate()
-            .map(|(idx, s)| Job::Prepare {
+            .map(|(idx, t)| Job::Prepare {
                 idx,
-                schedule: s.clone(),
+                trace: t.clone(),
                 ctx: Arc::clone(&ctx),
                 out: Arc::clone(&sink),
             })
@@ -282,7 +288,7 @@ mod tests {
     use crate::intrinsics::Registry;
     use crate::tir::{DType, Op};
     use crate::tune::costmodel::HeuristicCostModel;
-    use crate::tune::{tune_op, Database, SearchConfig, SearchSpace, SerialMeasurer};
+    use crate::tune::{program_for, tune_op, Database, SearchConfig, SerialMeasurer};
     use crate::util::Pcg;
 
     fn programs(sizes: &[usize]) -> Vec<VProgram> {
@@ -333,12 +339,12 @@ mod tests {
         let op = Op::square_matmul(64, DType::I8);
         let soc = SocConfig::saturn(1024);
         let registry = Registry::build(1024);
-        let space = SearchSpace::new(&op, &registry);
+        let space = program_for(&op, &registry);
         let mut rng = Pcg::seeded(21);
-        let schedules: Vec<_> = (0..12).map(|_| space.sample(&mut rng)).collect();
+        let candidates: Vec<_> = (0..12).map(|_| space.sample(&mut rng)).collect();
         let pool = MeasurePool::new(3);
-        let pooled = pool.begin_prepare(&op, &soc, &schedules).wait();
-        let serial = SerialMeasurer.begin_prepare(&op, &soc, &schedules).wait();
+        let pooled = pool.begin_prepare(&op, &soc, &candidates).wait();
+        let serial = SerialMeasurer.begin_prepare(&op, &soc, &candidates).wait();
         assert_eq!(pooled.len(), serial.len());
         for (a, b) in pooled.iter().zip(&serial) {
             assert_eq!(a.features, b.features);
@@ -353,11 +359,11 @@ mod tests {
         let op = Op::square_matmul(48, DType::I8);
         let soc = SocConfig::saturn(256);
         let registry = Registry::build(256);
-        let space = SearchSpace::new(&op, &registry);
+        let space = program_for(&op, &registry);
         let mut rng = Pcg::seeded(4);
-        let schedules: Vec<_> = (0..8).map(|_| space.sample(&mut rng)).collect();
+        let candidates: Vec<_> = (0..8).map(|_| space.sample(&mut rng)).collect();
         let pool = MeasurePool::new(2);
-        let prep = pool.begin_prepare(&op, &soc, &schedules);
+        let prep = pool.begin_prepare(&op, &soc, &candidates);
         let to_measure: Vec<Arc<VProgram>> =
             programs(&[16, 24, 32]).into_iter().map(Arc::new).collect();
         let meas = pool.begin_measure(&soc, to_measure.clone());

@@ -275,7 +275,10 @@ impl TuneService {
                 ),
                 Err(e) => {
                     eprintln!("note: PJRT cost model unavailable ({e}); using heuristic");
-                    ("heuristic", Box::new(|_seed: u64| Box::new(HeuristicCostModel) as Box<dyn CostModel>))
+                    (
+                        "heuristic",
+                        Box::new(|_seed: u64| Box::new(HeuristicCostModel) as Box<dyn CostModel>),
+                    )
                 }
             }
         } else {

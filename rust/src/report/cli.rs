@@ -6,6 +6,7 @@
 //! rvv-tune ablation --id vl-ladder|j-variant|cost-model [--quick]
 //! rvv-tune tune     --workload matmul:128:int8 | model:bert-tiny:int8
 //!                   [--soc saturn-1024] [--trials 100] [--db db.json] [--no-mlp]
+//! rvv-tune trace    --workload matmul:64:int8 [--db db.json] [--trials 32]
 //! rvv-tune simulate --workload matmul:64:int8 --scenario muriscv-nn
 //!                   [--soc saturn-1024] [--trace]
 //! rvv-tune models   [--dtype int8]
@@ -30,17 +31,24 @@ const FLAGS: [&str; 4] = ["quick", "trace", "no-mlp", "help"];
 /// Entry point; returns the process exit code.
 pub fn run(argv: Vec<String>) -> i32 {
     let args = Args::parse(argv, &FLAGS);
-    if args.flag("help") || args.subcommand.is_none() {
+    if args.flag("help") {
         print_help();
         return 0;
     }
-    match args.subcommand.as_deref().unwrap() {
+    // A missing subcommand is a usage error, not a successful help run.
+    let Some(subcommand) = args.subcommand.as_deref() else {
+        eprintln!("missing subcommand");
+        print_help();
+        return 2;
+    };
+    match subcommand {
         "figures" => cmd_figures(&args),
         "figure" => cmd_figure(&args),
         "export" => cmd_export(&args),
         "converge" => cmd_converge(&args),
         "ablation" => cmd_ablation(&args),
         "tune" => cmd_tune(&args),
+        "trace" => cmd_trace(&args),
         "simulate" => cmd_simulate(&args),
         "models" => cmd_models(&args),
         "info" => cmd_info(),
@@ -64,6 +72,8 @@ USAGE: rvv-tune <subcommand> [options]
   converge  tuning convergence curve CSV: --workload ... [--trials N]
   ablation  design-choice ablations: --id vl-ladder | j-variant | cost-model
   tune      tune one workload: --workload matmul:SIZE:DTYPE | model:NAME:DTYPE
+  trace     dump the decision trace of the best record per op:
+            --workload ... [--db db.json to read a saved database]
   simulate  measure one scenario: --scenario non-tuned|non-tuned-O3|non-tuned-v|muriscv-nn|packed-simd
   models    list the network zoo
   info      artifact/runtime status
@@ -271,6 +281,74 @@ fn cmd_tune(args: &Args) -> i32 {
     0
 }
 
+/// Dump the decision trace of the best database record per operator of a
+/// workload — either from a saved database (`--db`, exercising the full
+/// save -> load -> replay path) or by tuning now.
+fn cmd_trace(args: &Args) -> i32 {
+    let spec = args.get_or("workload", "matmul:64:int8");
+    let (name, layers, default_trials) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let soc_name = args.get_or("soc", "saturn-1024").to_string();
+    let db: crate::tune::Database = if let Some(path) = args.get("db") {
+        match crate::tune::Database::load(&PathBuf::from(path)) {
+            Ok(db) => db,
+            Err(e) => {
+                eprintln!("db load failed: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        let service = match service_from(args) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let trials = args.get_usize("trials", default_trials);
+        service.tune_network(&layers, trials, 10.min(trials));
+        service.db().snapshot()
+    };
+    let mut shown = 0usize;
+    for task in crate::tune::extract_tasks(&layers) {
+        let key = task.op.key();
+        let Some(best) = db.best(&key, &soc_name) else {
+            println!("{key}: no record for soc {soc_name}");
+            continue;
+        };
+        shown += 1;
+        println!(
+            "{key}: best {} cycles (trial {}) -> {}",
+            fnum(best.cycles),
+            best.trial,
+            best.schedule.describe()
+        );
+        let mut t = Table::new(
+            format!("decision trace ({})", best.trace.kind()),
+            &["decision", "value", "choice", "domain"],
+        );
+        for d in best.trace.decisions() {
+            t.row(vec![
+                d.id.name().to_string(),
+                d.domain.show(d.choice),
+                format!("{}/{}", d.choice, d.domain.len()),
+                d.domain.describe(),
+            ]);
+        }
+        t.print();
+    }
+    if shown == 0 {
+        eprintln!("no records found for {name} on {soc_name}");
+        return 1;
+    }
+    0
+}
+
 fn cmd_simulate(args: &Args) -> i32 {
     let spec = args.get_or("workload", "matmul:64:int8");
     let (name, layers, _) = match parse_workload(spec) {
@@ -400,8 +478,16 @@ fn cmd_models(args: &Args) -> i32 {
         format!("model zoo ({dtype})"),
         &["model", "layers", "distinct_tasks", "MACs", "default_trials"],
     );
+    let mut missing = 0;
     for name in models::BPI_MODELS {
-        let m = models::by_name(name, dtype).unwrap();
+        // A zoo entry the builder cannot instantiate (e.g. a dtype the
+        // model does not support) is reported and skipped, not a panic —
+        // the available models still print.
+        let Some(m) = models::by_name(name, dtype) else {
+            eprintln!("model `{name}` unavailable for dtype {dtype}");
+            missing += 1;
+            continue;
+        };
         t.row(vec![
             m.name.clone(),
             m.layers.len().to_string(),
@@ -411,6 +497,9 @@ fn cmd_models(args: &Args) -> i32 {
         ]);
     }
     t.print();
+    if missing > 0 {
+        return 1;
+    }
     0
 }
 

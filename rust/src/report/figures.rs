@@ -114,7 +114,17 @@ pub fn fig3(opts: &FigOpts) -> Table {
     let s = opts.service(SocConfig::saturn(1024));
     let mut t = Table::new(
         "Fig 3: matmuls on Saturn VLEN=1024 (speedup vs non-tuned)",
-        &["dtype", "size", "non-tuned", "O3(gcc)", "muriscv-nn", "ours", "sp(O3)", "sp(mu)", "sp(ours)"],
+        &[
+            "dtype",
+            "size",
+            "non-tuned",
+            "O3(gcc)",
+            "muriscv-nn",
+            "ours",
+            "sp(O3)",
+            "sp(mu)",
+            "sp(ours)",
+        ],
     );
     let mut impr_vs_gcc = Vec::new();
     let mut impr_vs_mu = Vec::new();
@@ -144,7 +154,8 @@ pub fn fig3(opts: &FigOpts) -> Table {
         }
     }
     println!(
-        "Fig3 summary: ours vs GCC-autovec mean improvement {}; vs muRISCV-NN {} (paper: 84% / 50%)",
+        "Fig3 summary: ours vs GCC-autovec mean improvement {}; vs muRISCV-NN {} \
+         (paper: 84% / 50%)",
         pct(stats::mean(&impr_vs_gcc)),
         pct(stats::mean(&impr_vs_mu)),
     );
@@ -334,7 +345,8 @@ pub fn fig7(opts: &FigOpts) -> Table {
         }
     }
     println!(
-        "Fig7 summary: ours vs GCC-autovec mean improvement {}; vs muRISCV-NN {} (paper: 46% / 29%)",
+        "Fig7 summary: ours vs GCC-autovec mean improvement {}; vs muRISCV-NN {} \
+         (paper: 46% / 29%)",
         pct(stats::mean(&impr_gcc)),
         pct(stats::mean(&impr_mu)),
     );
@@ -579,7 +591,9 @@ pub fn ablation(opts: &FigOpts, id: &str) -> Table {
         }
         other => {
             let mut t = Table::new(format!("unknown ablation {other}"), &["error"]);
-            t.row(vec![format!("unknown ablation id {other}; use vl-ladder | j-variant | cost-model")]);
+            t.row(vec![format!(
+                "unknown ablation id {other}; use vl-ladder | j-variant | cost-model"
+            )]);
             t
         }
     }
@@ -591,7 +605,16 @@ pub fn ext_pext(opts: &FigOpts) -> Table {
     let s = opts.service(SocConfig::saturn(1024));
     let mut t = Table::new(
         "Extension study: Packed SIMD (P ext) vs RVV (int8, speedup vs non-tuned)",
-        &["size", "non-tuned", "packed-simd", "muriscv-nn", "ours", "sp(pext)", "sp(mu)", "sp(ours)"],
+        &[
+            "size",
+            "non-tuned",
+            "packed-simd",
+            "muriscv-nn",
+            "ours",
+            "sp(pext)",
+            "sp(mu)",
+            "sp(ours)",
+        ],
     );
     for size in opts.sizes() {
         let op = matmul::matmul(size, DType::I8);

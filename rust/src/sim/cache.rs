@@ -408,7 +408,8 @@ mod tests {
                 // Keep the lowest address of any stream non-negative:
                 // the largest negative excursion is 3*128 bytes * 80 elems.
                 let base = 40_000 + rng.below(1 << 14);
-                let stride = rng.range_inclusive(-3 * params.line_bytes as i64, 3 * params.line_bytes as i64);
+                let stride = rng
+                    .range_inclusive(-3 * params.line_bytes as i64, 3 * params.line_bytes as i64);
                 let len = rng.below(80);
                 let pa = coalesced.probe_run(base, stride, len);
                 let mut pb = 0.0;

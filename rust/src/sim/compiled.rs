@@ -158,7 +158,11 @@ impl Compiler<'_> {
         acc_trace: &mut [u64; 8],
     ) {
         let soc = self.soc;
-        let stat = |cycles: f64, group: InstrGroup, n: u64, acc_cycles: &mut f64, acc_trace: &mut [u64; 8]| {
+        let stat = |cycles: f64,
+                    group: InstrGroup,
+                    n: u64,
+                    acc_cycles: &mut f64,
+                    acc_trace: &mut [u64; 8]| {
             *acc_cycles += cycles;
             acc_trace[group as usize] += n;
         };

@@ -559,7 +559,8 @@ impl<'a> Machine<'a> {
             }
             Inst::VMv { vd, vs } => {
                 self.cycles +=
-                    self.soc.issue_overhead + vecunit::chime(self.cfg.vl, self.cfg.sew, self.soc.dlen);
+                    self.soc.issue_overhead
+                        + vecunit::chime(self.cfg.vl, self.cfg.sew, self.soc.dlen);
                 self.trace.add(InstrGroup::Move, 1);
                 if self.mode == Mode::Functional {
                     self.regs[*vd as usize] = self.regs[*vs as usize].clone();
@@ -856,9 +857,17 @@ mod tests {
             lmul: Lmul::M1,
             float: false,
         }));
-        p.body.push(Node::Inst(Inst::VLoad { vd: 26, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
-        p.body.push(Node::Inst(Inst::VBin { op: VBinOp::Add, vd: 25, vs1: 25, vs2: 26, widen: false }));
-        p.body.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        p.body
+            .push(Node::Inst(Inst::VLoad { vd: 26, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        p.body.push(Node::Inst(Inst::VBin {
+            op: VBinOp::Add,
+            vd: 25,
+            vs1: 25,
+            vs2: 26,
+            widen: false,
+        }));
+        p.body
+            .push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
         p
     }
 
@@ -926,10 +935,16 @@ mod tests {
         let mut p = VProgram::new("rq");
         let src = p.add_buffer("src", DType::I32, 8);
         let dst = p.add_buffer("dst", DType::I8, 8);
-        p.body.push(Node::Inst(Inst::VSetVl { vl: 8, sew: Sew::E32, lmul: Lmul::M1, float: false }));
-        p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(src, AddrExpr::constant(0)) }));
+        p.body
+            .push(Node::Inst(Inst::VSetVl { vl: 8, sew: Sew::E32, lmul: Lmul::M1, float: false }));
+        p.body
+            .push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(src, AddrExpr::constant(0)) }));
         p.body.push(Node::Inst(Inst::VRequant { vd: 1, vs: 0, mult: 1 << 20, shift: 21, zp: 3 }));
-        p.body.push(Node::Inst(Inst::VStore { vs: 1, mem: MemRef::unit(dst, AddrExpr::constant(0)) }));
+        p.body
+            .push(Node::Inst(Inst::VStore {
+                vs: 1,
+                mem: MemRef::unit(dst, AddrExpr::constant(0)),
+            }));
         let mut bufs = BufStore::functional(&p);
         bufs.set_i32(src, &[0, 2, -2, 200, -200, 300, 100000, -100000]);
         execute(&soc(), &p, &mut bufs, Mode::Functional, false);
@@ -952,11 +967,17 @@ mod tests {
         p.body.push(Node::Inst(Inst::VSetVl { vl, sew: Sew::E32, lmul: Lmul::M8, float: true }));
         p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
         p.body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(b, AddrExpr::constant(0)) }));
-        p.body.push(Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 16, vs1: 0, vs2: 8, widen: false }));
-        p.body.push(Node::Inst(Inst::VSplat { vd: 24, value: ScalarSrc::F(0.0), vl_override: Some(1) }));
+        p.body
+            .push(Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 16, vs1: 0, vs2: 8, widen: false }));
+        p.body.push(Node::Inst(Inst::VSplat {
+            vd: 24,
+            value: ScalarSrc::F(0.0),
+            vl_override: Some(1),
+        }));
         p.body.push(Node::Inst(Inst::VRedSum { vd: 25, vs: 16, acc: 24 }));
         p.body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: Sew::E32, lmul: Lmul::M1, float: true }));
-        p.body.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        p.body
+            .push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
         let mut bufs = BufStore::functional(&p);
         let av: Vec<f32> = (0..vl).map(|i| i as f32 * 0.25).collect();
         let bv: Vec<f32> = (0..vl).map(|i| 1.0 - i as f32 * 0.1).collect();
@@ -1005,14 +1026,18 @@ mod tests {
         p.body.push(Node::Inst(Inst::VSetVl { vl: 4, sew: Sew::E16, lmul: Lmul::M1, float: true }));
         p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
         p.body.push(Node::Inst(Inst::VLoad { vd: 1, mem: MemRef::unit(b, AddrExpr::constant(0)) }));
-        p.body.push(Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 2, vs1: 0, vs2: 1, widen: false }));
-        p.body.push(Node::Inst(Inst::VStore { vs: 2, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
+        p.body
+            .push(Node::Inst(Inst::VBin { op: VBinOp::Mul, vd: 2, vs1: 0, vs2: 1, widen: false }));
+        p.body
+            .push(Node::Inst(Inst::VStore { vs: 2, mem: MemRef::unit(c, AddrExpr::constant(0)) }));
         let mut bufs = BufStore::functional(&p);
         bufs.set_f16_from_f32(a, &[1.1, 2.3, 0.007, 1000.0]);
         bufs.set_f16_from_f32(b, &[3.7, 0.9, 123.0, 99.0]);
         execute(&soc(), &p, &mut bufs, Mode::Functional, false);
         let got = bufs.get_f16_as_f32(c);
-        for (i, (&x, &y)) in [1.1f32, 2.3, 0.007, 1000.0].iter().zip(&[3.7f32, 0.9, 123.0, 99.0]).enumerate() {
+        let xs = [1.1f32, 2.3, 0.007, 1000.0];
+        let ys = [3.7f32, 0.9, 123.0, 99.0];
+        for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
             let expect = f16::f16_round(f16::f16_round(x) * f16::f16_round(y));
             assert_eq!(got[i], expect, "lane {i}");
         }
@@ -1023,7 +1048,8 @@ mod tests {
     fn oob_vector_access_panics() {
         let mut p = VProgram::new("oob");
         let a = p.add_buffer("a", DType::I8, 8);
-        p.body.push(Node::Inst(Inst::VSetVl { vl: 16, sew: Sew::E8, lmul: Lmul::M1, float: false }));
+        p.body
+            .push(Node::Inst(Inst::VSetVl { vl: 16, sew: Sew::E8, lmul: Lmul::M1, float: false }));
         p.body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::constant(0)) }));
         let mut bufs = BufStore::functional(&p);
         execute(&soc(), &p, &mut bufs, Mode::Functional, false);

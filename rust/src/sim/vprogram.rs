@@ -328,35 +328,87 @@ impl VProgram {
             for n in nodes {
                 match n {
                     Node::Loop(l) => {
-                        let u = if l.unroll > 1 { format!("  // unroll {}", l.unroll) } else { String::new() };
-                        out.push_str(&format!("{pad}for (i{} = 0; i{} < {}; i{}++) {{{u}\n", l.var, l.var, l.extent, l.var));
+                        let u = if l.unroll > 1 {
+                            format!("  // unroll {}", l.unroll)
+                        } else {
+                            String::new()
+                        };
+                        out.push_str(&format!(
+                            "{pad}for (i{} = 0; i{} < {}; i{}++) {{{u}\n",
+                            l.var, l.var, l.extent, l.var
+                        ));
                         walk(&l.body, p, depth + 1, out);
                         out.push_str(&format!("{pad}}}\n"));
                     }
                     Node::Inst(inst) => {
                         let line = match inst {
-                            Inst::VSetVl { vl, sew, lmul, .. } => format!("vsetvli vl={vl}, e{}, m{}", sew.bits(), lmul.factor()),
+                            Inst::VSetVl { vl, sew, lmul, .. } => {
+                                format!("vsetvli vl={vl}, e{}, m{}", sew.bits(), lmul.factor())
+                            }
                             Inst::VLoad { vd, mem: m } => format!("v{vd} = vle {}", mem(m, p)),
                             Inst::VStore { vs, mem: m } => format!("vse v{vs} -> {}", mem(m, p)),
-                            Inst::VBin { op, vd, vs1, vs2, widen } => format!("v{vd} = {}v{:?}(v{vs1}, v{vs2})", if *widen { "vw" } else { "v" }, op).to_lowercase(),
-                            Inst::VBinScalar { op, vd, vs1, .. } => format!("v{vd} = v{:?}.vx(v{vs1}, imm)", op).to_lowercase(),
-                            Inst::VMacc { vd, vs1, vs2, widen } => format!("v{vd} += {}v{vs1} * v{vs2}", if *widen { "(widen) " } else { "" }),
-                            Inst::VRedSum { vd, vs, acc } => format!("v{vd}[0] = vredsum(v{vs}) + v{acc}[0]"),
+                            Inst::VBin { op, vd, vs1, vs2, widen } => format!(
+                                "v{vd} = {}v{:?}(v{vs1}, v{vs2})",
+                                if *widen { "vw" } else { "v" },
+                                op
+                            )
+                            .to_lowercase(),
+                            Inst::VBinScalar { op, vd, vs1, .. } => {
+                                format!("v{vd} = v{:?}.vx(v{vs1}, imm)", op).to_lowercase()
+                            }
+                            Inst::VMacc { vd, vs1, vs2, widen } => format!(
+                                "v{vd} += {}v{vs1} * v{vs2}",
+                                if *widen { "(widen) " } else { "" }
+                            ),
+                            Inst::VRedSum { vd, vs, acc } => {
+                                format!("v{vd}[0] = vredsum(v{vs}) + v{acc}[0]")
+                            }
                             Inst::VSlideInsert { vd, vs, pos } => {
                                 let idx = addr(pos, "").replace(['[', ']'], "");
                                 format!("v{vd}[{idx}] = v{vs}[0]  // vmv.x.s + vslideup")
                             }
                             Inst::VSplat { vd, .. } => format!("v{vd} = vmv.v.i 0"),
                             Inst::VMv { vd, vs } => format!("v{vd} = v{vs}"),
-                            Inst::VRequant { vd, vs, mult, shift, zp } => format!("v{vd} = requant(v{vs}, mult={mult}, shift={shift}, zp={zp})  // vmulh+vssra+vadd+vnclip"),
+                            Inst::VRequant { vd, vs, mult, shift, zp } => format!(
+                                "v{vd} = requant(v{vs}, mult={mult}, shift={shift}, zp={zp})  \
+                                 // vmulh+vssra+vadd+vnclip"
+                            ),
                             Inst::SOps { count } => format!("// {count} scalar ops"),
-                            Inst::SDotRun { acc, a, b, len, .. } => format!("{} += dot({}, {}, len={len})  // scalar", mem(acc, p), mem(a, p), mem(b, p)),
-                            Inst::SAxpyRun { y, a, b, len, .. } => format!("{} += {} * {} (len={len})  // scalar", mem(y, p), mem(a, p), mem(b, p)),
-                            Inst::SRequantRun { dst, src, len, .. } => format!("{} = requant({}, len={len})  // scalar", mem(dst, p), mem(src, p)),
-                            Inst::SCopyRun { dst, src, len, .. } => format!("{} = copy({}, len={len})", mem(dst, p), mem(src, p)),
-                            Inst::SAddRun { dst, src, len, .. } => format!("{} += {} (len={len})", mem(dst, p), mem(src, p)),
-                            Inst::PDotRun { acc, a, b, len, lanes } => format!("{} += smaqa-dot({}, {}, len={len}, lanes={lanes})  // P-ext", mem(acc, p), mem(a, p), mem(b, p)),
-                            Inst::PAxpyRun { y, a, b, len, lanes } => format!("{} += {} * {} (len={len}, lanes={lanes})  // P-ext", mem(y, p), mem(a, p), mem(b, p)),
+                            Inst::SDotRun { acc, a, b, len, .. } => format!(
+                                "{} += dot({}, {}, len={len})  // scalar",
+                                mem(acc, p),
+                                mem(a, p),
+                                mem(b, p)
+                            ),
+                            Inst::SAxpyRun { y, a, b, len, .. } => format!(
+                                "{} += {} * {} (len={len})  // scalar",
+                                mem(y, p),
+                                mem(a, p),
+                                mem(b, p)
+                            ),
+                            Inst::SRequantRun { dst, src, len, .. } => format!(
+                                "{} = requant({}, len={len})  // scalar",
+                                mem(dst, p),
+                                mem(src, p)
+                            ),
+                            Inst::SCopyRun { dst, src, len, .. } => {
+                                format!("{} = copy({}, len={len})", mem(dst, p), mem(src, p))
+                            }
+                            Inst::SAddRun { dst, src, len, .. } => {
+                                format!("{} += {} (len={len})", mem(dst, p), mem(src, p))
+                            }
+                            Inst::PDotRun { acc, a, b, len, lanes } => format!(
+                                "{} += smaqa-dot({}, {}, len={len}, lanes={lanes})  // P-ext",
+                                mem(acc, p),
+                                mem(a, p),
+                                mem(b, p)
+                            ),
+                            Inst::PAxpyRun { y, a, b, len, lanes } => format!(
+                                "{} += {} * {} (len={len}, lanes={lanes})  // P-ext",
+                                mem(y, p),
+                                mem(a, p),
+                                mem(b, p)
+                            ),
                         };
                         out.push_str(&format!("{pad}{line}\n"));
                     }

@@ -119,15 +119,28 @@ mod tests {
 
     #[test]
     fn same_shape_same_key() {
-        let a = Op::Matmul { m: 1, n: 128, k: 640, dtype: DType::I8, requant: Some(Requant::default_for_tests()) };
-        let b = Op::Matmul { m: 1, n: 128, k: 640, dtype: DType::I8, requant: Some(Requant { mult: 99, shift: 9, zp: 1 }) };
+        let a = Op::Matmul {
+            m: 1,
+            n: 128,
+            k: 640,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
+        let b = Op::Matmul {
+            m: 1,
+            n: 128,
+            k: 640,
+            dtype: DType::I8,
+            requant: Some(Requant { mult: 99, shift: 9, zp: 1 }),
+        };
         // requant parameter values don't change the *schedule* space
         assert_eq!(a.key(), b.key());
     }
 
     #[test]
     fn dwconv_macs() {
-        let op = Op::DwConv { spatial: 100, channels: 32, taps: 9, dtype: DType::I8, requant: None };
+        let op =
+            Op::DwConv { spatial: 100, channels: 32, taps: 9, dtype: DType::I8, requant: None };
         assert_eq!(op.macs(), 100 * 32 * 9);
     }
 }

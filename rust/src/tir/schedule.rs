@@ -1,15 +1,13 @@
-//! Schedule decisions — the output of the probabilistic sampler and the
-//! input of the code generator.
+//! Schedule decisions — the concrete output of replaying a decision
+//! trace, and the input of the code generator.
 //!
 //! A `Schedule` is the small vector of decisions MetaSchedule samples for
 //! one operator: which tensor intrinsic variant to use (VL ladder + J
 //! variant, paper §III), how to tile each loop, the outer-loop order, and
-//! the unroll factor. Everything here is plain data so schedules can be
-//! mutated (evolutionary search), hashed (dedup), and serialized
-//! (database).
-
-use crate::util::hash::{fnv1a_mix, FNV_OFFSET};
-use crate::util::Json;
+//! the unroll factor. Sampling, mutation, dedup, and persistence operate
+//! on the decision *trace* (`tune::trace`), not on these structs; a
+//! schedule is derived from a trace by the pure `tune::space::lower`
+//! lowering, so this file only carries what codegen consumes.
 
 /// The tensor-intrinsic variant chosen for the inner computation
 /// (one entry of the registry in `intrinsics/`).
@@ -40,7 +38,8 @@ pub enum LoopOrder {
 }
 
 impl LoopOrder {
-    pub const ALL: [LoopOrder; 4] = [LoopOrder::MNK, LoopOrder::NMK, LoopOrder::NKM, LoopOrder::KMN];
+    pub const ALL: [LoopOrder; 4] =
+        [LoopOrder::MNK, LoopOrder::NMK, LoopOrder::NKM, LoopOrder::KMN];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -70,6 +69,12 @@ pub struct MatmulSchedule {
     /// e.g. narrow conv-as-GEMM layers). The output tile is then accessed
     /// with stride n (vlse/vsse).
     pub transpose: bool,
+    /// Reduction k-split: the loop over full VL-wide reduction chunks is
+    /// tiled into `ks` equal blocks and the block loop is hoisted
+    /// outermost (classic k-blocking — each block's A/B slices stay hot
+    /// across the whole m/n sweep at the cost of revisiting C per block).
+    /// 1 = no blocking.
+    pub ks: u32,
 }
 
 /// Schedule for a depthwise convolution (Algorithm-2 target): channels are
@@ -96,102 +101,22 @@ pub enum Schedule {
 }
 
 impl Schedule {
-    /// Compact human-readable form (database / report key).
+    /// Compact human-readable form (report key).
     pub fn describe(&self) -> String {
         match self {
             Schedule::Matmul(s) => format!(
-                "mm[vl={} j={} lmul={} mi={} order={} unroll={}{}]",
+                "mm[vl={} j={} lmul={} mi={} order={} unroll={} ks={}{}]",
                 s.intrin.vl,
                 s.intrin.j,
                 s.intrin.lmul,
                 s.mi,
                 s.order.name(),
                 s.unroll,
+                s.ks,
                 if s.transpose { " T" } else { "" }
             ),
             Schedule::DwConv(s) => format!("dw[vl={} unroll_taps={}]", s.vl, s.unroll_taps),
             Schedule::Eltwise(s) => format!("ew[vl={} unroll={}]", s.vl, s.unroll),
-        }
-    }
-
-    /// Structural 64-bit hash over the decision fields — the tuner's dedup
-    /// key. Replaces string-keyed `describe()` sets and linear
-    /// `Database::contains` scans on the search hot path: one u64 per
-    /// candidate, no allocation. Schedules compare equal iff their hashes
-    /// were computed from the same decisions (modulo the usual 2^-64
-    /// collision odds, harmless for dedup).
-    pub fn struct_hash(&self) -> u64 {
-        match self {
-            Schedule::Matmul(s) => {
-                let mut h = fnv1a_mix(FNV_OFFSET, 1);
-                h = fnv1a_mix(h, s.intrin.vl as u64);
-                h = fnv1a_mix(h, s.intrin.j as u64);
-                h = fnv1a_mix(h, s.intrin.lmul as u64);
-                h = fnv1a_mix(h, s.mi as u64);
-                h = fnv1a_mix(h, s.order as u64);
-                h = fnv1a_mix(h, s.unroll as u64);
-                fnv1a_mix(h, s.transpose as u64)
-            }
-            Schedule::DwConv(s) => {
-                let mut h = fnv1a_mix(FNV_OFFSET, 2);
-                h = fnv1a_mix(h, s.vl as u64);
-                fnv1a_mix(h, s.unroll_taps as u64)
-            }
-            Schedule::Eltwise(s) => {
-                let mut h = fnv1a_mix(FNV_OFFSET, 3);
-                h = fnv1a_mix(h, s.vl as u64);
-                fnv1a_mix(h, s.unroll as u64)
-            }
-        }
-    }
-
-    pub fn to_json(&self) -> Json {
-        match self {
-            Schedule::Matmul(s) => Json::obj(vec![
-                ("kind", Json::str("matmul")),
-                ("vl", Json::num(s.intrin.vl as f64)),
-                ("j", Json::num(s.intrin.j as f64)),
-                ("lmul", Json::num(s.intrin.lmul as f64)),
-                ("mi", Json::num(s.mi as f64)),
-                ("order", Json::str(s.order.name())),
-                ("unroll", Json::num(s.unroll as f64)),
-                ("transpose", Json::Bool(s.transpose)),
-            ]),
-            Schedule::DwConv(s) => Json::obj(vec![
-                ("kind", Json::str("dwconv")),
-                ("vl", Json::num(s.vl as f64)),
-                ("unroll_taps", Json::Bool(s.unroll_taps)),
-            ]),
-            Schedule::Eltwise(s) => Json::obj(vec![
-                ("kind", Json::str("eltwise")),
-                ("vl", Json::num(s.vl as f64)),
-                ("unroll", Json::num(s.unroll as f64)),
-            ]),
-        }
-    }
-
-    pub fn from_json(j: &Json) -> Option<Schedule> {
-        match j.get("kind")?.as_str()? {
-            "matmul" => Some(Schedule::Matmul(MatmulSchedule {
-                intrin: IntrinChoice {
-                    vl: j.get("vl")?.as_u64()? as u32,
-                    j: j.get("j")?.as_u64()? as u32,
-                    lmul: j.get("lmul")?.as_u64()? as u32,
-                },
-                mi: j.get("mi")?.as_u64()? as u32,
-                order: LoopOrder::parse(j.get("order")?.as_str()?)?,
-                unroll: j.get("unroll")?.as_u64()? as u32,
-                transpose: j.get("transpose").and_then(|b| b.as_bool()).unwrap_or(false),
-            })),
-            "dwconv" => Some(Schedule::DwConv(DwConvSchedule {
-                vl: j.get("vl")?.as_u64()? as u32,
-                unroll_taps: j.get("unroll_taps")?.as_bool()?,
-            })),
-            "eltwise" => Some(Schedule::Eltwise(EltwiseSchedule {
-                vl: j.get("vl")?.as_u64()? as u32,
-                unroll: j.get("unroll")?.as_u64()? as u32,
-            })),
-            _ => None,
         }
     }
 }
@@ -207,21 +132,8 @@ mod tests {
             order: LoopOrder::NMK,
             unroll: 2,
             transpose: true,
+            ks: 2,
         })
-    }
-
-    #[test]
-    fn json_roundtrip_matmul() {
-        let s = sample_matmul();
-        assert_eq!(Schedule::from_json(&s.to_json()), Some(s));
-    }
-
-    #[test]
-    fn json_roundtrip_dwconv_eltwise() {
-        let d = Schedule::DwConv(DwConvSchedule { vl: 128, unroll_taps: true });
-        assert_eq!(Schedule::from_json(&d.to_json()), Some(d));
-        let e = Schedule::Eltwise(EltwiseSchedule { vl: 64, unroll: 4 });
-        assert_eq!(Schedule::from_json(&e.to_json()), Some(e));
     }
 
     #[test]
@@ -234,42 +146,8 @@ mod tests {
 
     #[test]
     fn describe_is_compact() {
-        assert!(sample_matmul().describe().contains("vl=256"));
-    }
-
-    #[test]
-    fn struct_hash_distinguishes_decisions() {
-        let base = sample_matmul();
-        assert_eq!(base.struct_hash(), sample_matmul().struct_hash());
-        let mut variants = Vec::new();
-        if let Schedule::Matmul(m) = &base {
-            let muts: [fn(&mut MatmulSchedule); 7] = [
-                |m| m.intrin.vl = 128,
-                |m| m.intrin.j = 16,
-                |m| m.intrin.lmul = 4,
-                |m| m.mi = 8,
-                |m| m.order = LoopOrder::KMN,
-                |m| m.unroll = 4,
-                |m| m.transpose = false,
-            ];
-            for (i, f) in muts.iter().enumerate() {
-                let mut v = m.clone();
-                f(&mut v);
-                let h = Schedule::Matmul(v).struct_hash();
-                assert_ne!(h, base.struct_hash(), "mutation {i} must change the hash");
-                variants.push(h);
-            }
-        }
-        variants.sort_unstable();
-        variants.dedup();
-        assert_eq!(variants.len(), 7, "all single-field variants distinct");
-    }
-
-    #[test]
-    fn struct_hash_distinguishes_kinds() {
-        // Same raw numbers under different schedule kinds must not collide.
-        let dw = Schedule::DwConv(DwConvSchedule { vl: 64, unroll_taps: false });
-        let ew = Schedule::Eltwise(EltwiseSchedule { vl: 64, unroll: 0 });
-        assert_ne!(dw.struct_hash(), ew.struct_hash());
+        let d = sample_matmul().describe();
+        assert!(d.contains("vl=256"));
+        assert!(d.contains("ks=2"));
     }
 }

@@ -1,6 +1,13 @@
 //! The tuning database: every measured candidate, with JSON persistence
 //! (MetaSchedule's tuning-records database).
 //!
+//! A record stores the *decision trace* that produced its candidate (the
+//! replayable probabilistic-program execution), plus the schedule the
+//! trace lowers to, cached for codegen and reports. The on-disk format is
+//! version-tagged ([`DB_FORMAT_VERSION`]): pre-trace files (format v1, a
+//! bare record array whose records carry raw schedules) are rejected with
+//! a clear versioned error instead of deserializing silently wrong.
+//!
 //! Two flavours:
 //!
 //! * [`Database`] — the plain single-owner store the search loop writes
@@ -16,16 +23,27 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::tir::Schedule;
+use crate::tune::space;
+use crate::tune::trace::Trace;
 use crate::util::{fnv1a_str, Json};
+
+/// On-disk database format. v1 (pre-trace) stored raw schedules in an
+/// untagged array; v2 stores decision traces under a version tag.
+pub const DB_FORMAT_VERSION: u64 = 2;
 
 /// One measured candidate.
 #[derive(Clone, Debug)]
 pub struct TuneRecord {
     pub op_key: String,
     pub soc: String,
+    /// The replayable decision trace that produced this candidate — the
+    /// persisted source of truth.
+    pub trace: Trace,
+    /// `space::lower(&trace)`, cached so codegen/report consumers never
+    /// re-lower.
     pub schedule: Schedule,
     pub cycles: f64,
     pub macs: u64,
@@ -33,6 +51,22 @@ pub struct TuneRecord {
 }
 
 impl TuneRecord {
+    /// Build a record from a measured trace; the cached `schedule` is the
+    /// trace's pure lowering. Panics on an unlowerable trace — the tuner
+    /// only records traces its space program produced (fallible revival
+    /// of persisted traces goes through [`TuneRecord::from_json`]).
+    pub fn new(
+        op_key: String,
+        soc: String,
+        trace: Trace,
+        cycles: f64,
+        macs: u64,
+        trial: usize,
+    ) -> TuneRecord {
+        let schedule = space::lower(&trace).expect("measured trace lowers to a schedule");
+        TuneRecord { op_key, soc, trace, schedule, cycles, macs, trial }
+    }
+
     pub fn throughput(&self) -> f64 {
         self.macs as f64 / self.cycles.max(1.0)
     }
@@ -41,7 +75,7 @@ impl TuneRecord {
         Json::obj(vec![
             ("op", Json::str(&self.op_key)),
             ("soc", Json::str(&self.soc)),
-            ("schedule", self.schedule.to_json()),
+            ("trace", self.trace.to_json()),
             ("cycles", Json::Num(self.cycles)),
             ("macs", Json::num(self.macs as f64)),
             ("trial", Json::num(self.trial as f64)),
@@ -49,10 +83,13 @@ impl TuneRecord {
     }
 
     fn from_json(j: &Json) -> Option<TuneRecord> {
+        let trace = Trace::from_json(j.get("trace")?)?;
+        let schedule = space::lower(&trace)?;
         Some(TuneRecord {
             op_key: j.get("op")?.as_str()?.to_string(),
             soc: j.get("soc")?.as_str()?.to_string(),
-            schedule: Schedule::from_json(j.get("schedule")?)?,
+            trace,
+            schedule,
             cycles: j.get("cycles")?.as_f64()?,
             macs: j.get("macs")?.as_u64()?,
             trial: j.get("trial")?.as_usize()?,
@@ -104,19 +141,24 @@ impl Database {
         self.best.get(op_key)?.get(soc).map(|&i| &self.records[i])
     }
 
-    /// Has this exact schedule already been measured for (op, soc)?
+    /// Has this exact trace (by decision values) already been measured for
+    /// (op, soc)?
     ///
     /// Linear scan — fine for offline queries (reports, CLI inspection).
     /// The search hot path does NOT use this: `tune_op` dedups via a
-    /// `Schedule::struct_hash` set seeded from `records()`.
-    pub fn contains(&self, op_key: &str, soc: &str, schedule: &Schedule) -> bool {
+    /// `Trace::fnv_hash` set seeded from `records()`.
+    pub fn contains(&self, op_key: &str, soc: &str, trace: &Trace) -> bool {
+        let h = trace.fnv_hash();
         self.records
             .iter()
-            .any(|r| r.op_key == op_key && r.soc == soc && &r.schedule == schedule)
+            .any(|r| r.op_key == op_key && r.soc == soc && r.trace.fnv_hash() == h)
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
-        let arr = Json::Arr(self.records.iter().map(|r| r.to_json()).collect());
+        let file = Json::obj(vec![
+            ("version", Json::num(DB_FORMAT_VERSION as f64)),
+            ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ]);
         // `parent()` yields Some("") for bare file names — nothing to
         // create there, but a real parent that cannot be created must
         // fail loudly (the silent `.ok()` here used to turn a bad
@@ -127,15 +169,41 @@ impl Database {
                     .with_context(|| format!("creating {parent:?}"))?;
             }
         }
-        std::fs::write(path, arr.to_pretty()).with_context(|| format!("writing {path:?}"))
+        std::fs::write(path, file.to_pretty()).with_context(|| format!("writing {path:?}"))
     }
 
     pub fn load(path: &Path) -> Result<Database> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("db parse: {e}"))?;
+        if j.as_arr().is_some() {
+            bail!(
+                "database {path:?} is in the pre-trace v1 format (an untagged record array \
+                 storing raw schedules); this build reads format v{DB_FORMAT_VERSION} \
+                 (decision traces). Re-tune to regenerate the database, or read it with a \
+                 pre-trace build."
+            );
+        }
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("database {path:?} has no format version tag"))?;
+        if version != DB_FORMAT_VERSION {
+            bail!(
+                "database {path:?} is format v{version}; this build reads \
+                 v{DB_FORMAT_VERSION}"
+            );
+        }
         let mut db = Database::new();
-        for item in j.as_arr().ok_or_else(|| anyhow!("db not an array"))? {
-            let rec = TuneRecord::from_json(item).ok_or_else(|| anyhow!("bad record"))?;
+        for (i, item) in j
+            .get("records")
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| anyhow!("db: missing records array"))?
+            .iter()
+            .enumerate()
+        {
+            let rec = TuneRecord::from_json(item).ok_or_else(|| {
+                anyhow!("db record {i}: bad record (corrupt trace or unknown lowering)")
+            })?;
             db.add(rec);
         }
         Ok(db)
@@ -259,23 +327,19 @@ impl SharedDatabase {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tir::{EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule};
+    use crate::tir::{IntrinChoice, LoopOrder};
+    use crate::tune::space::test_matmul_trace;
 
     fn rec(op: &str, cycles: f64, trial: usize) -> TuneRecord {
-        TuneRecord {
-            op_key: op.to_string(),
-            soc: "saturn-256".to_string(),
-            schedule: Schedule::Matmul(MatmulSchedule {
-                intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
-                mi: trial as u32 % 4 + 1,
-                order: LoopOrder::NMK,
-                unroll: 1,
-                transpose: false,
-            }),
-            cycles,
-            macs: 1000,
-            trial,
-        }
+        let trace = test_matmul_trace(
+            IntrinChoice { vl: 64, j: 8, lmul: 8 },
+            trial as u64 % 4 + 1,
+            LoopOrder::NMK,
+            1,
+            false,
+            1,
+        );
+        TuneRecord::new(op.to_string(), "saturn-256".to_string(), trace, cycles, 1000, trial)
     }
 
     #[test]
@@ -291,24 +355,61 @@ mod tests {
     }
 
     #[test]
+    fn record_caches_the_lowered_schedule() {
+        let r = rec("a", 10.0, 3);
+        assert_eq!(crate::tune::space::lower(&r.trace), Some(r.schedule.clone()));
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let mut db = Database::new();
         db.add(rec("x", 123.5, 0));
-        db.add(TuneRecord {
-            op_key: "e".into(),
-            soc: "bpi-f3".into(),
-            schedule: Schedule::Eltwise(EltwiseSchedule { vl: 32, unroll: 2 }),
-            cycles: 9.0,
-            macs: 64,
-            trial: 3,
-        });
+        db.add(rec("x", 99.0, 1));
         let dir = std::env::temp_dir().join("rvv-tune-test-db");
         let path = dir.join("db.json");
         db.save(&path).unwrap();
         let back = Database::load(&path).unwrap();
         assert_eq!(back.len(), 2);
-        assert_eq!(back.best("x", "saturn-256").unwrap().cycles, 123.5);
-        assert_eq!(back.best("e", "bpi-f3").unwrap().macs, 64);
+        assert_eq!(back.best("x", "saturn-256").unwrap().cycles, 99.0);
+        // Traces survive byte-exactly: same hashes, same lowered schedule.
+        for (a, b) in db.records().iter().zip(back.records()) {
+            assert_eq!(a.trace, b.trace);
+            assert_eq!(a.trace.fnv_hash(), b.trace.fnv_hash());
+            assert_eq!(a.schedule, b.schedule);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_pre_trace_v1_files() {
+        let dir = std::env::temp_dir().join("rvv-tune-test-db-v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.json");
+        // The exact shape PR-3-era builds wrote: a bare array of records
+        // carrying raw schedule objects.
+        std::fs::write(
+            &path,
+            r#"[{"op": "matmul-64", "soc": "saturn-256", "cycles": 10, "macs": 100,
+                 "trial": 0, "schedule": {"kind": "matmul", "vl": 64, "j": 8,
+                 "lmul": 8, "mi": 1, "order": "nmk", "unroll": 1,
+                 "transpose": false}}]"#,
+        )
+        .unwrap();
+        let err = Database::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("v1"), "error must name the legacy version: {msg}");
+        assert!(msg.contains("v2"), "error must name the expected version: {msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_unknown_future_versions() {
+        let dir = std::env::temp_dir().join("rvv-tune-test-db-v99");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v99.json");
+        std::fs::write(&path, r#"{"version": 99, "records": []}"#).unwrap();
+        let err = Database::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("v99"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -316,10 +417,10 @@ mod tests {
     fn contains_detects_duplicates() {
         let mut db = Database::new();
         let r = rec("a", 10.0, 1);
-        let s = r.schedule.clone();
+        let t = r.trace.clone();
         db.add(r);
-        assert!(db.contains("a", "saturn-256", &s));
-        assert!(!db.contains("a", "bpi-f3", &s));
+        assert!(db.contains("a", "saturn-256", &t));
+        assert!(!db.contains("a", "bpi-f3", &t));
     }
 
     #[test]

@@ -1,12 +1,21 @@
-//! Feature extraction: (operator, schedule, SoC) -> 32-dim vector for the
-//! learned cost model. Must stay in lockstep with FEATURE_DIM in
+//! Feature extraction: (operator, decision trace, SoC) -> 32-dim vector
+//! for the learned cost model. Must stay in lockstep with FEATURE_DIM in
 //! python/compile/model.py.
+//!
+//! Schedule decisions are read from the trace by [`DecisionId`], not from
+//! schedule struct fields: [`decision_slot`] maps each known decision
+//! name to one feature slot and a value transform, and the extraction
+//! loop is generic — a new decision needs exactly one entry there (its
+//! generator and lowering arm live in `tune::space`). Unknown decisions
+//! are invisible to the model until they get a slot.
 
 use crate::isa::InstrGroup;
 use crate::sim::{SocConfig, VProgram};
-use crate::tir::{LoopOrder, Op, Schedule};
+use crate::tir::Op;
 
 use super::analysis::{static_profile, StaticProfile};
+use super::space::{ids, KIND_DWCONV, KIND_ELTWISE, KIND_MATMUL};
+use super::trace::{unpack_intrin, Trace};
 
 /// Must equal model.FEATURE_DIM (checked against the manifest at runtime).
 pub const FEATURE_DIM: usize = 32;
@@ -15,8 +24,46 @@ fn log2p(x: f64) -> f32 {
     (x.max(0.0) + 1.0).log2() as f32
 }
 
+/// Feature slot + value transform for one decision id — the model's view
+/// of the decision trace. Slot contributions are *additive*, so two
+/// mutually exclusive decisions (e.g. `unroll` and `unroll_taps`) may
+/// share a slot. The structured `intrin` decision is decoded separately
+/// in [`extract`] (it feeds the vl/j slots); everything scalar goes
+/// through this table.
+fn decision_slot(id: &str) -> Option<(usize, fn(u64) -> f32)> {
+    if id == ids::KSPLIT.name() {
+        Some((10, |v| log2p(v as f64)))
+    } else if id == ids::MI.name() {
+        Some((11, |v| log2p(v as f64)))
+    } else if id == ids::ORDER.name() {
+        Some((12, |v| v as f32))
+    } else if id == ids::TRANSPOSE.name() {
+        // Shares the order slot the way the pre-trace extractor packed it
+        // (order index + 4 when transposed): one slot, 8 distinct levels.
+        Some((12, |v| 4.0 * v as f32))
+    } else if id == ids::UNROLL.name() {
+        Some((13, |v| log2p(v as f64)))
+    } else if id == ids::UNROLL_TAPS.name() {
+        Some((13, |v| v as f32))
+    } else if id == ids::VL.name() {
+        Some((8, |v| log2p(v as f64)))
+    } else {
+        None
+    }
+}
+
+/// The effective vector length a trace's schedule runs at (intrinsic VL
+/// for matmuls, the vmacc VL otherwise).
+fn trace_vl(trace: &Trace) -> f64 {
+    trace
+        .value_of(&ids::INTRIN)
+        .map(|v| unpack_intrin(v).vl as f64)
+        .or_else(|| trace.value_of(&ids::VL).map(|v| v as f64))
+        .unwrap_or(0.0)
+}
+
 /// Extract the feature vector for one candidate.
-pub fn extract(op: &Op, schedule: &Schedule, program: &VProgram, soc: &SocConfig) -> Vec<f32> {
+pub fn extract(op: &Op, trace: &Trace, program: &VProgram, soc: &SocConfig) -> Vec<f32> {
     let sp: StaticProfile = static_profile(program);
     let macs = op.macs() as f64;
     let mut f = vec![0f32; FEATURE_DIM];
@@ -43,37 +90,23 @@ pub fn extract(op: &Op, schedule: &Schedule, program: &VProgram, soc: &SocConfig
     f[6] = log2p(macs);
     f[7] = if op.dtype().is_float() { 1.0 } else { 0.0 };
 
-    // --- schedule decisions (8..15)
-    match schedule {
-        Schedule::Matmul(s) => {
-            f[8] = log2p(s.intrin.vl as f64);
-            f[9] = log2p(s.intrin.j as f64);
-            f[10] = s.intrin.lmul as f32;
-            f[11] = log2p(s.mi as f64);
-            f[12] = match s.order {
-                LoopOrder::MNK => 0.0,
-                LoopOrder::NMK => 1.0,
-                LoopOrder::NKM => 2.0,
-                LoopOrder::KMN => 3.0,
-            } + if s.transpose { 4.0 } else { 0.0 };
-            f[13] = log2p(s.unroll as f64);
-        }
-        Schedule::DwConv(s) => {
-            f[8] = log2p(s.vl as f64);
-            f[13] = if s.unroll_taps { 1.0 } else { 0.0 };
-        }
-        Schedule::Eltwise(s) => {
-            f[8] = log2p(s.vl as f64);
-            f[13] = log2p(s.unroll as f64);
+    // --- schedule decisions (8..15), read from the trace by DecisionId.
+    // The structured intrinsic decision feeds the vl/j slots (its LMUL is
+    // registry-constant at 8 and carries no signal); scalar decisions go
+    // through the `decision_slot` table.
+    if let Some(v) = trace.value_of(&ids::INTRIN) {
+        let intrin = unpack_intrin(v);
+        f[8] = log2p(intrin.vl as f64);
+        f[9] = log2p(intrin.j as f64);
+    }
+    for d in trace.decisions() {
+        if let Some((slot, transform)) = decision_slot(d.id.name()) {
+            f[slot] += transform(d.value());
         }
     }
     // VL utilization vs the SoC's VLMAX at LMUL=8.
     let vlmax = (soc.vlen * 8 / op.dtype().sew().bits()) as f64;
-    let vl = match schedule {
-        Schedule::Matmul(s) => s.intrin.vl as f64,
-        Schedule::DwConv(s) => s.vl as f64,
-        Schedule::Eltwise(s) => s.vl as f64,
-    };
+    let vl = trace_vl(trace);
     f[14] = (vl / vlmax) as f32;
     f[15] = log2p(soc.vlen as f64);
 
@@ -95,17 +128,20 @@ pub fn extract(op: &Op, schedule: &Schedule, program: &VProgram, soc: &SocConfig
     let l1_bytes = (soc.cache.l1_kb * 1024) as f64;
     let l2_bytes = (soc.cache.l2_kb * 1024) as f64;
     // Inner working set: one A chunk + J rows of B + the output tile.
-    let ws = match (op, schedule) {
-        (Op::Matmul { .. }, Schedule::Matmul(s)) => {
-            let eb = op.dtype().bytes() as f64;
-            s.intrin.vl as f64 * eb * (1.0 + s.intrin.j as f64) + s.intrin.j as f64 * 4.0
+    let eb = op.dtype().bytes() as f64;
+    let ws = match trace.kind() {
+        KIND_MATMUL => {
+            let j = trace.value_of(&ids::INTRIN).map(|v| unpack_intrin(v).j as f64).unwrap_or(1.0);
+            vl * eb * (1.0 + j) + j * 4.0
         }
-        (Op::DwConv { channels, .. }, Schedule::DwConv(s)) => {
-            (s.vl.min(*channels as u32) as f64) * op.dtype().bytes() as f64 * 3.0
+        KIND_DWCONV => {
+            let channels = match op {
+                Op::DwConv { channels, .. } => *channels as f64,
+                _ => vl,
+            };
+            vl.min(channels) * eb * 3.0
         }
-        (Op::Eltwise { .. }, Schedule::Eltwise(s)) => {
-            s.vl as f64 * op.dtype().bytes() as f64 * 3.0
-        }
+        KIND_ELTWISE => vl * eb * 3.0,
         _ => 0.0,
     };
     f[27] = (ws / l1_bytes).min(8.0) as f32;
@@ -131,37 +167,37 @@ pub fn extract(op: &Op, schedule: &Schedule, program: &VProgram, soc: &SocConfig
 mod tests {
     use super::*;
     use crate::codegen::{self, Scenario};
-    use crate::tir::{DType, IntrinChoice, MatmulSchedule};
+    use crate::tir::{DType, IntrinChoice, LoopOrder};
+    use crate::tune::space::{self, test_matmul_trace};
 
-    fn sched(vl: u32, j: u32) -> Schedule {
-        Schedule::Matmul(MatmulSchedule {
-            intrin: IntrinChoice { vl, j, lmul: 8 },
-            mi: 1,
-            order: LoopOrder::NMK,
-            unroll: 1,
-            transpose: false,
-        })
+    fn trace(vl: u32, j: u32) -> Trace {
+        test_matmul_trace(IntrinChoice { vl, j, lmul: 8 }, 1, LoopOrder::NMK, 1, false, 1)
+    }
+
+    fn emit(op: &Op, t: &Trace) -> VProgram {
+        let s = space::lower(t).unwrap();
+        codegen::generate(op, &Scenario::Ours(s), 1024).unwrap()
     }
 
     #[test]
     fn feature_vector_has_fixed_dim_and_is_finite() {
         let op = Op::square_matmul(64, DType::I8);
-        let s = sched(64, 32);
-        let p = codegen::generate(&op, &Scenario::Ours(s.clone()), 1024).unwrap();
-        let f = extract(&op, &s, &p, &SocConfig::saturn(1024));
+        let t = trace(64, 32);
+        let p = emit(&op, &t);
+        let f = extract(&op, &t, &p, &SocConfig::saturn(1024));
         assert_eq!(f.len(), FEATURE_DIM);
         assert!(f.iter().all(|x| x.is_finite()));
     }
 
     #[test]
-    fn different_schedules_have_different_features() {
+    fn different_traces_have_different_features() {
         let op = Op::square_matmul(64, DType::I8);
         let soc = SocConfig::saturn(1024);
-        let s1 = sched(64, 32);
-        let s2 = sched(16, 1);
-        let p1 = codegen::generate(&op, &Scenario::Ours(s1.clone()), 1024).unwrap();
-        let p2 = codegen::generate(&op, &Scenario::Ours(s2.clone()), 1024).unwrap();
-        assert_ne!(extract(&op, &s1, &p1, &soc), extract(&op, &s2, &p2, &soc));
+        let t1 = trace(64, 32);
+        let t2 = trace(16, 1);
+        let p1 = emit(&op, &t1);
+        let p2 = emit(&op, &t2);
+        assert_ne!(extract(&op, &t1, &p1, &soc), extract(&op, &t2, &p2, &soc));
     }
 
     #[test]
@@ -170,12 +206,37 @@ mod tests {
         // the J=32 tile schedule.
         let op = Op::square_matmul(64, DType::I8);
         let soc = SocConfig::saturn(1024);
-        let tile = sched(64, 32);
-        let j1 = sched(64, 1);
-        let pt = codegen::generate(&op, &Scenario::Ours(tile.clone()), 1024).unwrap();
-        let p1 = codegen::generate(&op, &Scenario::Ours(j1.clone()), 1024).unwrap();
+        let tile = trace(64, 32);
+        let j1 = trace(64, 1);
+        let pt = emit(&op, &tile);
+        let p1 = emit(&op, &j1);
         let ft = extract(&op, &tile, &pt, &soc);
         let f1 = extract(&op, &j1, &p1, &soc);
         assert!(f1[17] > ft[17], "store feature {} vs {}", f1[17], ft[17]);
+    }
+
+    #[test]
+    fn ksplit_has_a_feature_slot() {
+        // The k-split decision must be visible to the cost model: same
+        // trace except for ksplit -> different feature vectors.
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let mk = |ks: u64| {
+            test_matmul_trace(
+                IntrinChoice { vl: 16, j: 8, lmul: 8 },
+                1,
+                LoopOrder::NMK,
+                1,
+                false,
+                ks,
+            )
+        };
+        let t1 = mk(1);
+        let t2 = mk(2);
+        let p1 = emit(&op, &t1);
+        let p2 = emit(&op, &t2);
+        let f1 = extract(&op, &t1, &p1, &soc);
+        let f2 = extract(&op, &t2, &p2, &soc);
+        assert_ne!(f1[10], f2[10], "ksplit slot must move with the decision");
     }
 }

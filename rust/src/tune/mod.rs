@@ -1,14 +1,18 @@
 //! The MetaSchedule-style probabilistic tuner — the paper's contribution.
 //!
-//! Pipeline per operator (§II/§III): [`space`] samples schedule decisions
-//! (intrinsic VL/J variants from the [`crate::intrinsics`] registry, tile
-//! sizes, loop order, unroll) -> [`features`]/[`analysis`] produce static
-//! descriptors -> [`costmodel`] ranks candidates (JAX/Pallas MLP via PJRT)
-//! -> [`search`] measures the top-k on the simulated SoC and refits ->
-//! [`database`] records everything. [`task`] splits a network into tuning
-//! tasks with the paper's budget policy, and [`scheduler`] decides how a
-//! network's shared trial budget flows between those tasks round by round
-//! (static ablation split vs MetaSchedule-style gradient reallocation).
+//! Pipeline per operator (§II/§III): [`space`] declares the operator's
+//! probabilistic program and [`trace`] executes it — every schedule
+//! decision (intrinsic VL/J variants from the [`crate::intrinsics`]
+//! registry, tile sizes, loop order, unroll, reduction k-split) is a
+//! named random variable recorded in a replayable decision trace ->
+//! [`features`]/[`analysis`] produce static descriptors -> [`costmodel`]
+//! ranks candidates (JAX/Pallas MLP via PJRT) -> [`search`] measures the
+//! top-k on the simulated SoC and refits -> [`database`] records every
+//! measured trace (version-tagged, so tuning state replays across
+//! sessions). [`task`] splits a network into tuning tasks with the
+//! paper's budget policy, and [`scheduler`] decides how a network's
+//! shared trial budget flows between those tasks round by round (static
+//! ablation split vs MetaSchedule-style gradient reallocation).
 
 pub mod analysis;
 pub mod costmodel;
@@ -18,9 +22,10 @@ pub mod scheduler;
 pub mod search;
 pub mod space;
 pub mod task;
+pub mod trace;
 
 pub use costmodel::{CostModel, HeuristicCostModel, MlpCostModel, RandomCostModel};
-pub use database::{Database, SharedDatabase, TuneRecord};
+pub use database::{Database, SharedDatabase, TuneRecord, DB_FORMAT_VERSION};
 pub use features::FEATURE_DIM;
 pub use scheduler::{
     GradientScheduler, Pick, Plan, SchedulerKind, StaticAllocation, TaskScheduler, TaskView,
@@ -29,5 +34,6 @@ pub use search::{
     tune_op, MeasureTicket, Measurer, OpTuner, Prepared, PrepareTicket, RoundOutcome,
     SearchConfig, SerialMeasurer, TuneOutcome,
 };
-pub use space::SearchSpace;
+pub use space::{lower, program_for};
 pub use task::{allocate_trials, extract_tasks, floor_budget, TuneTask};
+pub use trace::{Decision, DecisionId, Domain, SpaceProgram, Trace};

@@ -23,13 +23,14 @@ use std::sync::Arc;
 
 use crate::codegen;
 use crate::sim::{ExecResult, SocConfig, VProgram};
-use crate::tir::{Op, Schedule};
+use crate::tir::Op;
 use crate::util::Pcg;
 
 use super::costmodel::CostModel;
 use super::database::{Database, TuneRecord};
 use super::features;
-use super::space::SearchSpace;
+use super::space;
+use super::trace::{SpaceProgram, Trace};
 
 /// One candidate after the prepare stage: emitted program + cost-model
 /// features. The program is `Arc`-shared so the measure stage never clones
@@ -40,13 +41,14 @@ pub struct Prepared {
 }
 
 impl Prepared {
-    /// The canonical per-candidate prepare chain (emit + feature
-    /// extraction). Every backend — the serial default and the pool's
-    /// workers — MUST go through this one definition: the engine's
+    /// The canonical per-candidate prepare chain (trace replay + emit +
+    /// feature extraction). Every backend — the serial default and the
+    /// pool's workers — MUST go through this one definition: the engine's
     /// bit-identical serial/pool guarantee depends on it.
-    pub fn build(op: &Op, schedule: &Schedule, soc: &SocConfig) -> Prepared {
-        let program = codegen::ours::emit(op, schedule, soc.vlen);
-        let features = features::extract(op, schedule, &program, soc);
+    pub fn build(op: &Op, trace: &Trace, soc: &SocConfig) -> Prepared {
+        let schedule = space::lower(trace).expect("candidate trace lowers to a schedule");
+        let program = codegen::ours::emit(op, &schedule, soc.vlen);
+        let features = features::extract(op, trace, &program, soc);
         Prepared { program: Arc::new(program), features }
     }
 }
@@ -101,9 +103,10 @@ pub trait Measurer {
     /// API, used by the figure harnesses and benches).
     fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult>;
 
-    /// Start codegen + feature extraction for a batch of schedules.
-    fn begin_prepare(&self, op: &Op, soc: &SocConfig, schedules: &[Schedule]) -> PrepareTicket {
-        PrepareTicket::Ready(schedules.iter().map(|s| Prepared::build(op, s, soc)).collect())
+    /// Start replay + codegen + feature extraction for a batch of
+    /// candidate traces.
+    fn begin_prepare(&self, op: &Op, soc: &SocConfig, candidates: &[Trace]) -> PrepareTicket {
+        PrepareTicket::Ready(candidates.iter().map(|t| Prepared::build(op, t, soc)).collect())
     }
 
     /// Start timing-mode measurement of already-emitted programs.
@@ -168,7 +171,7 @@ pub struct TuneOutcome {
 /// One measured round still in flight while the next round is generated.
 struct InFlight {
     ticket: MeasureTicket,
-    schedules: Vec<Schedule>,
+    traces: Vec<Trace>,
     feats: Vec<Vec<f32>>,
 }
 
@@ -187,7 +190,7 @@ pub enum RoundOutcome {
 /// [`tune_op`].
 ///
 /// The tuner owns everything one operator's search needs between rounds:
-/// its PRNG, the elite set, the structural-hash dedup set, the in-flight
+/// its PRNG, the elite set, the trace-hash dedup set, the in-flight
 /// measurement tickets, and the trial counters. The cost model and the
 /// (checked-out) database stay with the caller and are passed into each
 /// [`OpTuner::step_round`], so a network scheduler can hold many tuners
@@ -200,7 +203,7 @@ pub struct OpTuner<'a> {
     op: &'a Op,
     soc: &'a SocConfig,
     measurer: &'a dyn Measurer,
-    space: SearchSpace,
+    space: SpaceProgram,
     config: SearchConfig,
     rng: Pcg,
     op_key: String,
@@ -210,7 +213,7 @@ pub struct OpTuner<'a> {
     /// scheduler's warm-up knob. Does not affect candidate generation,
     /// which scales off the remaining `config.trials` budget.
     round_cap: usize,
-    elites: Vec<(Schedule, f64)>,
+    elites: Vec<(Trace, f64)>,
     history: Vec<f64>,
     taken: HashSet<u64>,
     inflight: Option<InFlight>,
@@ -222,10 +225,9 @@ impl<'a> OpTuner<'a> {
     /// compiler's vectorization, as TVM does for non-tensorizable blocks).
     ///
     /// The dedup set is seeded from `db`'s existing `(op, soc)` records —
-    /// every schedule ever selected for measurement, as structural hashes
-    /// (replaces the string-keyed `describe()` set and the linear
-    /// `Database::contains` scan per candidate) — so a reused database is
-    /// never re-measured.
+    /// every trace ever selected for measurement, as FNV hashes over the
+    /// decision values — so a reused (or reloaded) database is never
+    /// re-measured.
     pub fn new(
         op: &'a Op,
         soc: &'a SocConfig,
@@ -234,7 +236,7 @@ impl<'a> OpTuner<'a> {
         db: &Database,
         config: SearchConfig,
     ) -> Option<OpTuner<'a>> {
-        let space = SearchSpace::new(op, registry);
+        let space = space::program_for(op, registry);
         if !space.is_tunable() {
             return None;
         }
@@ -244,7 +246,7 @@ impl<'a> OpTuner<'a> {
             .records()
             .iter()
             .filter(|r| r.op_key == op_key && r.soc == soc.name)
-            .map(|r| r.schedule.struct_hash())
+            .map(|r| r.trace.fnv_hash())
             .collect();
         Some(OpTuner {
             op,
@@ -305,8 +307,8 @@ impl<'a> OpTuner<'a> {
     }
 
     /// Advance the pipeline by one round:
-    /// 1. generate round N's candidates (dedup on
-    ///    [`Schedule::struct_hash`]) and submit their prepare jobs — these
+    /// 1. generate round N's candidate traces (dedup on
+    ///    [`Trace::fnv_hash`]) and submit their prepare jobs — these
     ///    overlap round N-1's measurements on a parallel backend;
     /// 2. drain round N-1's measurements into `db`, refit `model`;
     /// 3. rendezvous on round N's prepared features, `score()` the batch
@@ -331,23 +333,23 @@ impl<'a> OpTuner<'a> {
                     .div_ceil(self.config.measure_per_round)
                     .max(remaining)
             };
-            let mut cands: Vec<Schedule> = Vec::new();
+            let mut cands: Vec<Trace> = Vec::new();
             let mut round_seen: HashSet<u64> = HashSet::new();
             let mut attempts = 0;
             while cands.len() < gen_target && attempts < gen_target * 8 {
                 attempts += 1;
-                let s = if !self.elites.is_empty() && self.rng.chance(self.config.mutation_prob) {
+                let t = if !self.elites.is_empty() && self.rng.chance(self.config.mutation_prob) {
                     let parent =
                         &self.elites[self.rng.below(self.elites.len() as u64) as usize].0;
                     self.space.mutate(parent, &mut self.rng)
                 } else {
                     self.space.sample(&mut self.rng)
                 };
-                let h = s.struct_hash();
+                let h = t.fnv_hash();
                 if self.taken.contains(&h) || !round_seen.insert(h) {
                     continue;
                 }
-                cands.push(s);
+                cands.push(t);
             }
             if cands.is_empty() {
                 None // space exhausted
@@ -386,7 +388,7 @@ impl<'a> OpTuner<'a> {
         chosen.extend(rest.into_iter().take(k - k_greedy));
 
         for &i in &chosen {
-            self.taken.insert(cands[i].struct_hash());
+            self.taken.insert(cands[i].fnv_hash());
         }
         let programs: Vec<Arc<VProgram>> =
             chosen.iter().map(|&i| Arc::clone(&prepared[i].program)).collect();
@@ -394,7 +396,7 @@ impl<'a> OpTuner<'a> {
         self.queued += chosen.len();
         self.inflight = Some(InFlight {
             ticket,
-            schedules: chosen.iter().map(|&i| cands[i].clone()).collect(),
+            traces: chosen.iter().map(|&i| cands[i].clone()).collect(),
             // `feats` is dead after this point; move the chosen vectors out
             // (indices in `chosen` are distinct).
             feats: chosen.iter().map(|&i| std::mem::take(&mut feats[i])).collect(),
@@ -409,19 +411,19 @@ impl<'a> OpTuner<'a> {
         let results = fl.ticket.wait();
         let mut upd_feats = Vec::with_capacity(results.len());
         let mut upd_labels = Vec::with_capacity(results.len());
-        for ((schedule, feat), res) in fl.schedules.into_iter().zip(fl.feats).zip(&results) {
-            db.add(TuneRecord {
-                op_key: self.op_key.clone(),
-                soc: self.soc.name.clone(),
-                schedule: schedule.clone(),
-                cycles: res.cycles,
-                macs: self.op.macs(),
-                trial: self.measured,
-            });
+        for ((trace, feat), res) in fl.traces.into_iter().zip(fl.feats).zip(&results) {
+            db.add(TuneRecord::new(
+                self.op_key.clone(),
+                self.soc.name.clone(),
+                trace.clone(),
+                res.cycles,
+                self.op.macs(),
+                self.measured,
+            ));
             self.measured += 1;
             upd_feats.push(feat);
             upd_labels.push((self.op.macs() as f64 / res.cycles.max(1.0)).ln());
-            self.elites.push((schedule, res.cycles));
+            self.elites.push((trace, res.cycles));
         }
         self.elites.sort_by(|a, b| a.1.total_cmp(&b.1));
         self.elites.truncate(self.config.elites);
@@ -511,7 +513,7 @@ mod tests {
         let config = SearchConfig { trials: 48, seed: 11, ..Default::default() };
         tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
         let mut hashes: Vec<u64> =
-            db.records().iter().map(|r| r.schedule.struct_hash()).collect();
+            db.records().iter().map(|r| r.trace.fnv_hash()).collect();
         let n = hashes.len();
         hashes.sort_unstable();
         hashes.dedup();
@@ -531,7 +533,7 @@ mod tests {
         // schedules are excluded via their structural hashes.
         tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
         let mut hashes: Vec<u64> =
-            db.records().iter().map(|r| r.schedule.struct_hash()).collect();
+            db.records().iter().map(|r| r.trace.fnv_hash()).collect();
         let n = hashes.len();
         hashes.sort_unstable();
         hashes.dedup();
@@ -586,10 +588,10 @@ mod tests {
             &self,
             op: &Op,
             soc: &SocConfig,
-            schedules: &[Schedule],
+            candidates: &[Trace],
         ) -> PrepareTicket {
-            self.prepares.borrow_mut().push(schedules.len());
-            SerialMeasurer.begin_prepare(op, soc, schedules)
+            self.prepares.borrow_mut().push(candidates.len());
+            SerialMeasurer.begin_prepare(op, soc, candidates)
         }
     }
 
@@ -628,7 +630,7 @@ mod tests {
         tune_op(&op, &soc, &registry, &mut model2, &SerialMeasurer, &mut db2, &config_long)
             .unwrap();
         let first_round = |db: &Database| -> Vec<u64> {
-            db.records().iter().take(16).map(|r| r.schedule.struct_hash()).collect()
+            db.records().iter().take(16).map(|r| r.trace.fnv_hash()).collect()
         };
         assert_eq!(first_round(&db), first_round(&db2));
     }
@@ -658,7 +660,7 @@ mod tests {
         assert_eq!(a.history, b.history);
         assert_eq!(a.trials_measured, b.trials_measured);
         let hashes = |db: &Database| -> Vec<u64> {
-            db.records().iter().map(|r| r.schedule.struct_hash()).collect()
+            db.records().iter().map(|r| r.trace.fnv_hash()).collect()
         };
         assert_eq!(hashes(&db_a), hashes(&db_b));
     }

@@ -1,263 +1,270 @@
-//! The probabilistic schedule space: sampling and mutation.
+//! The per-operator probabilistic schedule programs and the pure
+//! trace -> [`Schedule`] lowering.
 //!
-//! This is the "probabilistic program" of the paper's title — each
-//! schedule decision (intrinsic variant from the VL ladder, J variant,
-//! row-block size, loop order, unroll) is a random variable; the sampler
-//! draws candidates and the evolutionary search mutates one decision at a
-//! time, exactly like MetaSchedule's sample-perfect-tile + mutator stack.
+//! This is the operator-specific half of the paper's "probabilistic
+//! program": each operator kind contributes one declarative
+//! [`SpaceProgram`] (an ordered list of decision generators, where later
+//! domains depend on earlier choices — e.g. valid row-block sizes depend
+//! on the chosen intrinsic mapping) and one lowering arm in [`lower`]
+//! that reads decisions by [`DecisionId`] and builds the concrete
+//! [`Schedule`] the codegen layer consumes. Sampling, mutation, dedup,
+//! and persistence are all generic over the trace IR in
+//! [`super::trace`] — adding a decision here never touches them.
 
 use crate::intrinsics::Registry;
 use crate::tir::{
     DwConvSchedule, EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule, Op, Schedule,
 };
-use crate::util::Pcg;
 
-/// The search space for one operator on one SoC.
-#[derive(Clone, Debug)]
-pub struct SearchSpace {
-    pub op: Op,
-    pub vlen: u32,
-    /// Matching intrinsic variants (Algorithm 1) for the direct mapping.
-    matmul_intrinsics: Vec<IntrinChoice>,
-    /// Matching variants for the transposed mapping (J tiles along m).
-    matmul_intrinsics_t: Vec<IntrinChoice>,
-    vmacc_vls: Vec<u32>,
-    mi_divisors: Vec<u32>,
-    mi_divisors_t: Vec<u32>,
+use super::trace::{unpack_intrin, DecisionId, Domain, SpaceProgram, Trace};
+
+/// The decision names of the built-in space programs. Stable: they are
+/// the schema of persisted traces.
+pub mod ids {
+    use super::DecisionId;
+
+    /// Matmul: tensorize the transposed problem (J tiles run along m).
+    pub const TRANSPOSE: DecisionId = DecisionId::new("transpose");
+    /// Matmul: which registered intrinsic variant (VL/J/LMUL) to call.
+    pub const INTRIN: DecisionId = DecisionId::new("intrin");
+    /// Matmul: inner row-block size.
+    pub const MI: DecisionId = DecisionId::new("mi");
+    /// Matmul: outer-loop order.
+    pub const ORDER: DecisionId = DecisionId::new("order");
+    /// Matmul/eltwise: innermost structural unroll factor.
+    pub const UNROLL: DecisionId = DecisionId::new("unroll");
+    /// Matmul: reduction k-split — number of equal blocks the full
+    /// VL-chunk loop is tiled into, hoisted outermost (k-blocking).
+    pub const KSPLIT: DecisionId = DecisionId::new("ksplit");
+    /// DwConv/eltwise: vector length of the vmacc intrinsic.
+    pub const VL: DecisionId = DecisionId::new("vl");
+    /// DwConv: hoist the accumulator across an unrolled tap loop.
+    pub const UNROLL_TAPS: DecisionId = DecisionId::new("unroll_taps");
 }
 
-const UNROLLS: [u32; 4] = [1, 2, 4, 8];
+/// Trace-kind tags (one per lowering arm).
+pub const KIND_MATMUL: &str = "matmul";
+pub const KIND_DWCONV: &str = "dwconv";
+pub const KIND_ELTWISE: &str = "eltwise";
 
-fn divisors_up_to(n: usize, cap: u32) -> Vec<u32> {
-    (1..=cap.min(n as u32)).filter(|d| n % *d as usize == 0).collect()
+const UNROLLS: [u64; 4] = [1, 2, 4, 8];
+
+/// Largest number of reduction blocks the k-split decision may pick.
+const KSPLIT_CAP: u64 = 8;
+
+fn divisors_up_to(n: usize, cap: u64) -> Vec<u64> {
+    (1..=cap.min(n as u64)).filter(|d| n as u64 % d == 0).collect()
 }
 
-impl SearchSpace {
-    pub fn new(op: &Op, registry: &Registry) -> SearchSpace {
-        let (matmul_intrinsics, matmul_intrinsics_t) = match op {
-            Op::Matmul { m, n, k, dtype, .. } => (
-                registry
-                    .matmul_candidates_for(*n, *k, *dtype)
-                    .iter()
-                    .map(|i| i.choice())
-                    .collect(),
-                registry
-                    .matmul_candidates_for(*m, *k, *dtype)
-                    .iter()
-                    .map(|i| i.choice())
-                    .collect(),
-            ),
-            _ => (vec![], vec![]),
-        };
-        let vmacc_vls = match op {
-            Op::DwConv { channels, dtype, .. } => registry
-                .vmacc_candidates(*channels, *dtype)
-                .iter()
-                .map(|i| i.vl)
-                .collect(),
-            Op::Eltwise { len, dtype } => {
-                registry.vmacc_candidates(*len, *dtype).iter().map(|i| i.vl).collect()
+/// Build the space program for `op` on `registry`'s target. An operator
+/// no registered intrinsic matches gets an empty (untunable) program —
+/// the caller falls back to the compiler's vectorization.
+pub fn program_for(op: &Op, registry: &Registry) -> SpaceProgram {
+    match op {
+        Op::Matmul { m, n, k, dtype, .. } => {
+            let direct: Vec<IntrinChoice> =
+                registry.matmul_candidates_for(*n, *k, *dtype).iter().map(|i| i.choice()).collect();
+            let transposed: Vec<IntrinChoice> =
+                registry.matmul_candidates_for(*m, *k, *dtype).iter().map(|i| i.choice()).collect();
+            matmul_program(*m, *n, *k, direct, transposed)
+        }
+        Op::DwConv { channels, dtype, .. } => {
+            let vls: Vec<u64> =
+                registry.vmacc_candidates(*channels, *dtype).iter().map(|i| i.vl as u64).collect();
+            if vls.is_empty() {
+                return SpaceProgram::new(KIND_DWCONV);
             }
-            _ => vec![],
-        };
-        let (mi_divisors, mi_divisors_t) = match op {
-            Op::Matmul { m, n, .. } => (divisors_up_to(*m, 16), divisors_up_to(*n, 16)),
-            _ => (vec![1], vec![1]),
-        };
-        SearchSpace {
-            op: op.clone(),
-            vlen: registry.vlen,
-            matmul_intrinsics,
-            matmul_intrinsics_t,
-            vmacc_vls,
-            mi_divisors,
-            mi_divisors_t,
+            SpaceProgram::new(KIND_DWCONV)
+                .decision(ids::VL, move |_| Domain::Ints(vls.clone()))
+                .decision(ids::UNROLL_TAPS, |_| Domain::Bools(vec![false, true]))
+        }
+        Op::Eltwise { len, dtype } => {
+            let vls: Vec<u64> =
+                registry.vmacc_candidates(*len, *dtype).iter().map(|i| i.vl as u64).collect();
+            if vls.is_empty() {
+                return SpaceProgram::new(KIND_ELTWISE);
+            }
+            SpaceProgram::new(KIND_ELTWISE)
+                .decision(ids::VL, move |_| Domain::Ints(vls.clone()))
+                .decision(ids::UNROLL, |_| Domain::Ints(UNROLLS.to_vec()))
         }
     }
+}
 
-    /// True when at least one intrinsic variant matches the operator.
-    pub fn is_tunable(&self) -> bool {
-        match self.op {
-            Op::Matmul { .. } => {
-                !self.matmul_intrinsics.is_empty() || !self.matmul_intrinsics_t.is_empty()
-            }
-            _ => !self.vmacc_vls.is_empty(),
-        }
-    }
-
-    fn sample_matmul(&self, rng: &mut Pcg, transpose: bool) -> Schedule {
-        let (intrinsics, divisors) = if transpose {
-            (&self.matmul_intrinsics_t, &self.mi_divisors_t)
-        } else {
-            (&self.matmul_intrinsics, &self.mi_divisors)
-        };
-        Schedule::Matmul(MatmulSchedule {
-            intrin: *rng.choose(intrinsics),
-            mi: *rng.choose(divisors),
-            order: *rng.choose(&LoopOrder::ALL),
-            unroll: *rng.choose(&UNROLLS),
-            transpose,
+/// The matmul program. The decision chain showcases dependent domains:
+/// the mapping (`transpose`) restricts which intrinsic variants match,
+/// the variant's VL fixes how many full reduction chunks exist, and the
+/// `ksplit` domain is derived from that count.
+fn matmul_program(
+    m: usize,
+    n: usize,
+    k: usize,
+    direct: Vec<IntrinChoice>,
+    transposed: Vec<IntrinChoice>,
+) -> SpaceProgram {
+    let mappings: Vec<bool> = match (direct.is_empty(), transposed.is_empty()) {
+        (true, true) => return SpaceProgram::new(KIND_MATMUL), // untunable
+        (false, true) => vec![false],
+        (true, false) => vec![true],
+        (false, false) => vec![false, true],
+    };
+    let mi_direct = divisors_up_to(m, 16);
+    let mi_transposed = divisors_up_to(n, 16);
+    SpaceProgram::new(KIND_MATMUL)
+        .decision(ids::TRANSPOSE, move |_| Domain::Bools(mappings.clone()))
+        .decision(ids::INTRIN, move |t| {
+            let flipped = t.value_of(&ids::TRANSPOSE) == Some(1);
+            Domain::Intrins(if flipped { transposed.clone() } else { direct.clone() })
         })
-    }
+        .decision(ids::MI, move |t| {
+            let flipped = t.value_of(&ids::TRANSPOSE) == Some(1);
+            Domain::Ints(if flipped { mi_transposed.clone() } else { mi_direct.clone() })
+        })
+        .decision(ids::ORDER, |_| Domain::Orders(LoopOrder::ALL.to_vec()))
+        .decision(ids::UNROLL, |_| Domain::Ints(UNROLLS.to_vec()))
+        .decision(ids::KSPLIT, move |t| {
+            // The chosen intrinsic's effective VL fixes the number of
+            // full reduction chunks; valid splits are its divisors.
+            let intrin = unpack_intrin(t.value_of(&ids::INTRIN).expect("intrin precedes ksplit"));
+            let vl = intrin.vl.min(k as u32).max(1) as usize;
+            Domain::Ints(divisors_up_to(k / vl, KSPLIT_CAP))
+        })
+}
 
-    fn pick_transpose(&self, rng: &mut Pcg) -> bool {
-        match (self.matmul_intrinsics.is_empty(), self.matmul_intrinsics_t.is_empty()) {
-            (false, false) => rng.chance(0.5),
-            (false, true) => false,
-            (true, false) => true,
-            (true, true) => unreachable!("untunable space sampled"),
-        }
+/// Pure lowering: derive the concrete [`Schedule`] the codegen layer
+/// consumes from a decision trace. Returns `None` when a required
+/// decision is missing or undecodable (e.g. a corrupted database
+/// record); optional decisions (like `ksplit`, absent from pre-k-split
+/// and ablated traces) lower to their defaults.
+pub fn lower(trace: &Trace) -> Option<Schedule> {
+    match trace.kind() {
+        KIND_MATMUL => Some(Schedule::Matmul(MatmulSchedule {
+            intrin: unpack_intrin(trace.value_of(&ids::INTRIN)?),
+            mi: trace.value_of(&ids::MI)? as u32,
+            order: *LoopOrder::ALL.get(trace.value_of(&ids::ORDER)? as usize)?,
+            unroll: trace.value_of(&ids::UNROLL)? as u32,
+            transpose: trace.value_of(&ids::TRANSPOSE)? == 1,
+            ks: trace.value_of(&ids::KSPLIT).unwrap_or(1) as u32,
+        })),
+        KIND_DWCONV => Some(Schedule::DwConv(DwConvSchedule {
+            vl: trace.value_of(&ids::VL)? as u32,
+            unroll_taps: trace.value_of(&ids::UNROLL_TAPS)? == 1,
+        })),
+        KIND_ELTWISE => Some(Schedule::Eltwise(EltwiseSchedule {
+            vl: trace.value_of(&ids::VL)? as u32,
+            unroll: trace.value_of(&ids::UNROLL)? as u32,
+        })),
+        _ => None,
     }
+}
 
-    /// Draw one random schedule.
-    pub fn sample(&self, rng: &mut Pcg) -> Schedule {
-        match &self.op {
-            Op::Matmul { .. } => {
-                let transpose = self.pick_transpose(rng);
-                self.sample_matmul(rng, transpose)
-            }
-            Op::DwConv { .. } => Schedule::DwConv(DwConvSchedule {
-                vl: *rng.choose(&self.vmacc_vls),
-                unroll_taps: rng.chance(0.5),
-            }),
-            Op::Eltwise { .. } => Schedule::Eltwise(EltwiseSchedule {
-                vl: *rng.choose(&self.vmacc_vls),
-                unroll: *rng.choose(&UNROLLS),
-            }),
-        }
-    }
-
-    /// Mutate exactly one decision of `s`.
-    pub fn mutate(&self, s: &Schedule, rng: &mut Pcg) -> Schedule {
-        match s {
-            Schedule::Matmul(m) => {
-                let (intrinsics, divisors) = if m.transpose {
-                    (&self.matmul_intrinsics_t, &self.mi_divisors_t)
-                } else {
-                    (&self.matmul_intrinsics, &self.mi_divisors)
-                };
-                let mut m = m.clone();
-                match rng.below(5) {
-                    0 => m.intrin = *rng.choose(intrinsics),
-                    1 => m.mi = *rng.choose(divisors),
-                    2 => m.order = *rng.choose(&LoopOrder::ALL),
-                    3 => m.unroll = *rng.choose(&UNROLLS),
-                    _ => {
-                        // Flip the mapping: resample transpose-dependent
-                        // decisions so the mutant stays valid.
-                        let t = self.pick_transpose(rng);
-                        if t != m.transpose {
-                            return self.sample_matmul(rng, t);
-                        }
-                    }
-                }
-                Schedule::Matmul(m)
-            }
-            Schedule::DwConv(d) => {
-                let mut d = d.clone();
-                if rng.chance(0.5) {
-                    d.vl = *rng.choose(&self.vmacc_vls);
-                } else {
-                    d.unroll_taps = !d.unroll_taps;
-                }
-                Schedule::DwConv(d)
-            }
-            Schedule::Eltwise(e) => {
-                let mut e = e.clone();
-                if rng.chance(0.5) {
-                    e.vl = *rng.choose(&self.vmacc_vls);
-                } else {
-                    e.unroll = *rng.choose(&UNROLLS);
-                }
-                Schedule::Eltwise(e)
-            }
-        }
-    }
-
-    /// Size bound of the discrete space (for reporting).
-    pub fn cardinality(&self) -> usize {
-        match self.op {
-            Op::Matmul { .. } => {
-                (self.matmul_intrinsics.len() * self.mi_divisors.len()
-                    + self.matmul_intrinsics_t.len() * self.mi_divisors_t.len())
-                    * LoopOrder::ALL.len()
-                    * UNROLLS.len()
-            }
-            Op::DwConv { .. } => self.vmacc_vls.len() * 2,
-            Op::Eltwise { .. } => self.vmacc_vls.len() * UNROLLS.len(),
-        }
-    }
+/// Hand-build a matmul trace with forced values (tests and tools; the
+/// tuner itself only ever executes programs).
+#[cfg(test)]
+pub(crate) fn test_matmul_trace(
+    intrin: IntrinChoice,
+    mi: u64,
+    order: LoopOrder,
+    unroll: u64,
+    transpose: bool,
+    ks: u64,
+) -> Trace {
+    use super::trace::Decision;
+    let mut t = Trace::new(KIND_MATMUL);
+    let order_idx = LoopOrder::ALL.iter().position(|o| *o == order).unwrap();
+    t.push(Decision {
+        id: ids::TRANSPOSE,
+        domain: Domain::Bools(vec![false, true]),
+        choice: transpose as usize,
+    });
+    t.push(Decision { id: ids::INTRIN, domain: Domain::Intrins(vec![intrin]), choice: 0 });
+    t.push(Decision { id: ids::MI, domain: Domain::Ints(vec![mi]), choice: 0 });
+    t.push(Decision {
+        id: ids::ORDER,
+        domain: Domain::Orders(LoopOrder::ALL.to_vec()),
+        choice: order_idx,
+    });
+    t.push(Decision { id: ids::UNROLL, domain: Domain::Ints(vec![unroll]), choice: 0 });
+    t.push(Decision { id: ids::KSPLIT, domain: Domain::Ints(vec![ks]), choice: 0 });
+    t
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tir::DType;
+    use crate::util::Pcg;
 
     #[test]
-    fn samples_are_valid_and_varied() {
+    fn samples_lower_to_valid_varied_schedules() {
         let op = Op::square_matmul(128, DType::I8);
         let reg = Registry::build(1024);
-        let space = SearchSpace::new(&op, &reg);
-        assert!(space.is_tunable());
+        let program = program_for(&op, &reg);
+        assert!(program.is_tunable());
         let mut rng = Pcg::seeded(1);
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..64 {
-            let s = space.sample(&mut rng);
-            if let Schedule::Matmul(m) = &s {
-                assert!(m.intrin.vl <= 128);
-                assert!(128 % m.mi as usize == 0);
-                seen.insert(s.describe());
-                let _ = m.transpose;
-            } else {
-                panic!("wrong kind");
-            }
+            let t = program.sample(&mut rng);
+            assert!(program.validates(&t));
+            let Some(Schedule::Matmul(m)) = lower(&t) else { panic!("wrong kind") };
+            assert!(m.intrin.vl <= 128);
+            assert!(128 % m.mi as usize == 0);
+            assert!(m.ks >= 1 && (128 / m.intrin.vl.min(128) as usize) % m.ks as usize == 0);
+            seen.insert(t.fnv_hash());
         }
         assert!(seen.len() > 10, "only {} distinct samples", seen.len());
     }
 
     #[test]
-    fn mutation_changes_at_most_one_decision() {
-        let op = Op::square_matmul(64, DType::F32);
+    fn ksplit_domain_depends_on_chosen_intrinsic() {
+        let op = Op::square_matmul(128, DType::I8);
+        let reg = Registry::build(1024);
+        let program = program_for(&op, &reg);
+        let mut rng = Pcg::seeded(7);
+        let mut domain_sizes = std::collections::BTreeSet::new();
+        for _ in 0..128 {
+            let t = program.sample(&mut rng);
+            let ks = t.get(&ids::KSPLIT).unwrap();
+            let vl = unpack_intrin(t.value_of(&ids::INTRIN).unwrap()).vl.min(128);
+            let k_full = 128 / vl as usize;
+            assert!(k_full as u64 % ks.value() == 0, "ks must divide the chunk count");
+            domain_sizes.insert(ks.domain.len());
+        }
+        assert!(domain_sizes.len() > 1, "ksplit domain must vary with the intrinsic VL");
+    }
+
+    #[test]
+    fn mutation_stays_in_space_across_mapping_flips() {
+        let op = Op::Matmul { m: 24, n: 6, k: 32, dtype: DType::I8, requant: None };
         let reg = Registry::build(256);
-        let space = SearchSpace::new(&op, &reg);
+        let program = program_for(&op, &reg);
+        assert!(program.is_tunable());
         let mut rng = Pcg::seeded(3);
-        let base = space.sample(&mut rng);
-        for _ in 0..32 {
-            let mutant = space.mutate(&base, &mut rng);
-            if let (Schedule::Matmul(a), Schedule::Matmul(b)) = (&base, &mutant) {
-                if a.transpose != b.transpose {
-                    continue; // mapping flip resamples dependent decisions
-                }
-                let diffs = [
-                    a.intrin != b.intrin,
-                    a.mi != b.mi,
-                    a.order != b.order,
-                    a.unroll != b.unroll,
-                ]
-                .iter()
-                .filter(|&&d| d)
-                .count();
-                assert!(diffs <= 1);
-            }
+        let mut t = program.sample(&mut rng);
+        for _ in 0..64 {
+            t = program.mutate(&t, &mut rng);
+            assert!(program.validates(&t), "mutant left the space: {}", t.describe());
+            let Some(Schedule::Matmul(m)) = lower(&t) else { panic!("wrong kind") };
+            let rows = if m.transpose { 6 } else { 24 };
+            assert_eq!(rows % m.mi as usize, 0);
         }
     }
 
     #[test]
-    fn dwconv_and_eltwise_spaces() {
+    fn dwconv_and_eltwise_programs() {
         let reg = Registry::build(256);
         let dw = Op::DwConv { spatial: 10, channels: 64, taps: 9, dtype: DType::I8, requant: None };
-        let space = SearchSpace::new(&dw, &reg);
-        assert!(space.is_tunable());
-        assert!(space.cardinality() >= 4);
+        let program = program_for(&dw, &reg);
+        assert!(program.is_tunable());
+        assert!(program.cardinality(1 << 20) >= 4);
         let ew = Op::Eltwise { len: 256, dtype: DType::F32 };
-        let sp2 = SearchSpace::new(&ew, &reg);
-        assert!(sp2.is_tunable());
+        let p2 = program_for(&ew, &reg);
+        assert!(p2.is_tunable());
         let mut rng = Pcg::seeded(9);
         for _ in 0..8 {
-            match sp2.sample(&mut rng) {
-                Schedule::Eltwise(e) => assert!(e.vl <= 256),
-                _ => panic!("wrong kind"),
+            match lower(&p2.sample(&mut rng)) {
+                Some(Schedule::Eltwise(e)) => assert!(e.vl <= 256),
+                other => panic!("wrong kind: {other:?}"),
             }
         }
     }
@@ -267,6 +274,29 @@ mod tests {
         // 3-channel dwconv: below MIN_VL, no Algorithm-2 variant matches.
         let reg = Registry::build(256);
         let dw = Op::DwConv { spatial: 4, channels: 3, taps: 9, dtype: DType::I8, requant: None };
-        assert!(!SearchSpace::new(&dw, &reg).is_tunable());
+        assert!(!program_for(&dw, &reg).is_tunable());
+    }
+
+    #[test]
+    fn lowering_defaults_ksplit_when_absent() {
+        // The ablated program (and any pre-k-split trace) lowers with
+        // ks = 1 — the k-split landed without touching generic machinery,
+        // so removing it must degrade gracefully too.
+        let op = Op::square_matmul(64, DType::I8);
+        let reg = Registry::build(256);
+        let program = program_for(&op, &reg).without(&ids::KSPLIT);
+        let mut rng = Pcg::seeded(11);
+        let t = program.sample(&mut rng);
+        assert!(t.get(&ids::KSPLIT).is_none());
+        let Some(Schedule::Matmul(m)) = lower(&t) else { panic!("wrong kind") };
+        assert_eq!(m.ks, 1);
+    }
+
+    #[test]
+    fn lowering_rejects_foreign_or_truncated_traces() {
+        let mut t = Trace::new("no-such-kind");
+        assert!(lower(&t).is_none());
+        t = Trace::new(KIND_MATMUL);
+        assert!(lower(&t).is_none(), "matmul trace without decisions must not lower");
     }
 }

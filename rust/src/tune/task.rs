@@ -59,7 +59,11 @@ pub fn allocate_trials(tasks: &[TuneTask], total: usize, min_per_task: usize) ->
     let mut alloc: Vec<usize> = tasks
         .iter()
         .map(|t| {
-            let share = if weight_sum > 0.0 { t.weight() / weight_sum } else { 1.0 / tasks.len() as f64 };
+            let share = if weight_sum > 0.0 {
+                t.weight() / weight_sum
+            } else {
+                1.0 / tasks.len() as f64
+            };
             min_per_task + (share * spare as f64).floor() as usize
         })
         .collect();
@@ -119,7 +123,10 @@ mod tests {
             .collect();
         let alloc = allocate_trials(&tasks, 200, 10);
         assert!(alloc.iter().all(|&a| a >= 10));
-        assert!(alloc.iter().sum::<usize>() >= 300, "floor grows the budget like the paper's LLM case");
+        assert!(
+            alloc.iter().sum::<usize>() >= 300,
+            "floor grows the budget like the paper's LLM case"
+        );
     }
 
     #[test]

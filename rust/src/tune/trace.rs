@@ -1,0 +1,723 @@
+//! The decision-trace IR: MetaSchedule's *probabilistic program* made
+//! first-class.
+//!
+//! Every schedule decision is a named random variable. Executing a
+//! [`SpaceProgram`] draws each variable from a [`Domain`] that may depend
+//! on the choices already made (e.g. valid row-block sizes depend on the
+//! chosen intrinsic mapping) and records the draw as a [`Decision`] in an
+//! ordered, replayable [`Trace`]. Everything the tuner needs is then
+//! *generic over the space*:
+//!
+//! * **sampling** = executing the program with a PRNG
+//!   ([`SpaceProgram::sample`]);
+//! * **mutation** = resampling one decision and replaying the suffix,
+//!   re-deriving any downstream domain the change invalidated
+//!   ([`SpaceProgram::mutate`]);
+//! * **dedup** = FNV-1a over the trace's decision values
+//!   ([`Trace::fnv_hash`]);
+//! * **persistence** = the trace's JSON form ([`Trace::to_json`]), stored
+//!   verbatim in database records so tuning state replays across
+//!   sessions.
+//!
+//! This module knows nothing about concrete operators: the per-operator
+//! programs (which decisions exist, what their domains are) and the pure
+//! `Trace -> Schedule` lowering live in [`super::space`]. Adding a new
+//! decision to an operator therefore never touches this file — only a
+//! generator and a lowering arm over there (plus a feature-slot entry in
+//! [`super::features`]).
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use crate::tir::{IntrinChoice, LoopOrder};
+use crate::util::hash::{fnv1a_byte, fnv1a_mix, FNV_OFFSET};
+use crate::util::{Json, Pcg};
+
+/// Stable name of one random variable of a space program. Program
+/// generators construct these from static strings; traces revived from a
+/// serialized database own their names.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DecisionId(Cow<'static, str>);
+
+impl DecisionId {
+    pub const fn new(name: &'static str) -> DecisionId {
+        DecisionId(Cow::Borrowed(name))
+    }
+
+    pub fn owned(name: &str) -> DecisionId {
+        DecisionId(Cow::Owned(name.to_string()))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for DecisionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Pack an intrinsic variant into the 64-bit decision value space
+/// (vl | j << 32 | lmul << 48). `j` and `lmul` get 16 bits each — far
+/// beyond today's registries (j = VLEN/32, lmul <= 8), but a variant that
+/// ever exceeded them would silently corrupt its neighbour field, so the
+/// bound is asserted.
+pub fn pack_intrin(i: IntrinChoice) -> u64 {
+    debug_assert!(i.j <= u16::MAX as u32 && i.lmul <= u16::MAX as u32, "intrin field overflow");
+    i.vl as u64 | (i.j as u64) << 32 | (i.lmul as u64) << 48
+}
+
+/// Inverse of [`pack_intrin`].
+pub fn unpack_intrin(v: u64) -> IntrinChoice {
+    IntrinChoice {
+        vl: v as u32,
+        j: (v >> 32) as u16 as u32,
+        lmul: (v >> 48) as u16 as u32,
+    }
+}
+
+/// The value menu one decision was drawn from. Domains are stored in the
+/// trace so a mutation can tell whether an old choice is still valid
+/// after upstream decisions moved.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Domain {
+    /// An ordered integer menu (tile sizes, unroll factors, VLs, ...).
+    Ints(Vec<u64>),
+    /// Available boolean options (a forced mapping is a one-entry menu).
+    Bools(Vec<bool>),
+    /// Matching tensor-intrinsic variants from the registry.
+    Intrins(Vec<IntrinChoice>),
+    /// Outer-loop orders.
+    Orders(Vec<LoopOrder>),
+}
+
+impl Domain {
+    pub fn len(&self) -> usize {
+        match self {
+            Domain::Ints(v) => v.len(),
+            Domain::Bools(v) => v.len(),
+            Domain::Intrins(v) => v.len(),
+            Domain::Orders(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The canonical `u64` encoding of the value at `choice` — the only
+    /// representation hashing, feature extraction, and lowering read.
+    pub fn value(&self, choice: usize) -> u64 {
+        match self {
+            Domain::Ints(v) => v[choice],
+            Domain::Bools(v) => v[choice] as u64,
+            Domain::Intrins(v) => pack_intrin(v[choice]),
+            Domain::Orders(v) => {
+                LoopOrder::ALL.iter().position(|o| *o == v[choice]).expect("order in ALL") as u64
+            }
+        }
+    }
+
+    /// Choice index of an encoded value, if the value is in this domain.
+    pub fn find(&self, value: u64) -> Option<usize> {
+        (0..self.len()).find(|&c| self.value(c) == value)
+    }
+
+    /// Human-readable value at `choice` (CLI trace dumps).
+    pub fn show(&self, choice: usize) -> String {
+        match self {
+            Domain::Ints(v) => v[choice].to_string(),
+            Domain::Bools(v) => v[choice].to_string(),
+            Domain::Intrins(v) => {
+                let i = v[choice];
+                format!("vl{}:j{}:m{}", i.vl, i.j, i.lmul)
+            }
+            Domain::Orders(v) => v[choice].name().to_string(),
+        }
+    }
+
+    /// Compact description of the whole menu (CLI trace dumps).
+    pub fn describe(&self) -> String {
+        let items: Vec<String> = (0..self.len()).map(|c| self.show(c)).collect();
+        let tag = match self {
+            Domain::Ints(_) => "ints",
+            Domain::Bools(_) => "bools",
+            Domain::Intrins(_) => "intrins",
+            Domain::Orders(_) => "orders",
+        };
+        format!("{tag}[{}]", items.join(","))
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Domain::Ints(v) => Json::obj(vec![(
+                "ints",
+                Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect()),
+            )]),
+            Domain::Bools(v) => {
+                Json::obj(vec![("bools", Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect()))])
+            }
+            Domain::Intrins(v) => Json::obj(vec![(
+                "intrins",
+                Json::Arr(
+                    v.iter()
+                        .map(|i| {
+                            Json::Arr(vec![
+                                Json::num(i.vl as f64),
+                                Json::num(i.j as f64),
+                                Json::num(i.lmul as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+            Domain::Orders(v) => Json::obj(vec![(
+                "orders",
+                Json::Arr(v.iter().map(|o| Json::str(o.name())).collect()),
+            )]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Option<Domain> {
+        if let Some(v) = j.get("ints") {
+            return Some(Domain::Ints(
+                v.as_arr()?.iter().map(|x| x.as_u64()).collect::<Option<_>>()?,
+            ));
+        }
+        if let Some(v) = j.get("bools") {
+            return Some(Domain::Bools(
+                v.as_arr()?.iter().map(|x| x.as_bool()).collect::<Option<_>>()?,
+            ));
+        }
+        if let Some(v) = j.get("intrins") {
+            let items = v
+                .as_arr()?
+                .iter()
+                .map(|x| {
+                    let t = x.as_arr()?;
+                    match t {
+                        [vl, jw, lmul] => Some(IntrinChoice {
+                            vl: vl.as_u64()? as u32,
+                            j: jw.as_u64()? as u32,
+                            lmul: lmul.as_u64()? as u32,
+                        }),
+                        _ => None,
+                    }
+                })
+                .collect::<Option<_>>()?;
+            return Some(Domain::Intrins(items));
+        }
+        if let Some(v) = j.get("orders") {
+            return Some(Domain::Orders(
+                v.as_arr()?.iter().map(|x| LoopOrder::parse(x.as_str()?)).collect::<Option<_>>()?,
+            ));
+        }
+        None
+    }
+}
+
+/// One executed instruction of the probabilistic program: which variable,
+/// the menu it was drawn from, and the index drawn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    pub id: DecisionId,
+    pub domain: Domain,
+    pub choice: usize,
+}
+
+impl Decision {
+    /// The resolved value (canonical `u64` encoding).
+    pub fn value(&self) -> u64 {
+        self.domain.value(self.choice)
+    }
+}
+
+/// An ordered, replayable record of every random decision that produced
+/// one schedule candidate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    kind: Cow<'static, str>,
+    decisions: Vec<Decision>,
+}
+
+impl Trace {
+    pub fn new(kind: &'static str) -> Trace {
+        Trace { kind: Cow::Borrowed(kind), decisions: Vec::new() }
+    }
+
+    /// The operator-kind tag that selects the lowering arm.
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+
+    pub fn push(&mut self, d: Decision) {
+        self.decisions.push(d);
+    }
+
+    fn pop(&mut self) {
+        self.decisions.pop();
+    }
+
+    pub fn get(&self, id: &DecisionId) -> Option<&Decision> {
+        self.decisions.iter().find(|d| d.id == *id)
+    }
+
+    /// The resolved value of a decision, by name.
+    pub fn value_of(&self, id: &DecisionId) -> Option<u64> {
+        self.get(id).map(|d| d.value())
+    }
+
+    /// FNV-1a over the kind and the (id, value) sequence — the tuner's
+    /// dedup key. Two traces hash equal iff their decision sequences
+    /// (ids and resolved values, in order) are equal, modulo the usual
+    /// 2^-64 collision odds; domains deliberately do not contribute, so a
+    /// re-derived domain with the same pick stays the same candidate.
+    pub fn fnv_hash(&self) -> u64 {
+        let mut h = self.kind.bytes().fold(FNV_OFFSET, fnv1a_byte);
+        for d in &self.decisions {
+            h = d.id.name().bytes().fold(h, fnv1a_byte);
+            h = fnv1a_byte(h, 0xff);
+            h = fnv1a_mix(h, d.value());
+        }
+        h
+    }
+
+    /// Compact one-line form (reports, CLI).
+    pub fn describe(&self) -> String {
+        let body: Vec<String> = self
+            .decisions
+            .iter()
+            .map(|d| format!("{}={}", d.id, d.domain.show(d.choice)))
+            .collect();
+        format!("{}{{{}}}", self.kind, body.join(" "))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.as_ref())),
+            (
+                "decisions",
+                Json::Arr(
+                    self.decisions
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("id", Json::str(d.id.name())),
+                                ("choice", Json::num(d.choice as f64)),
+                                ("domain", d.domain.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Trace> {
+        let kind = j.get("kind")?.as_str()?.to_string();
+        let mut decisions = Vec::new();
+        for d in j.get("decisions")?.as_arr()? {
+            let id = DecisionId::owned(d.get("id")?.as_str()?);
+            let domain = Domain::from_json(d.get("domain")?)?;
+            let choice = d.get("choice")?.as_usize()?;
+            if choice >= domain.len() {
+                return None; // out-of-range choice: corrupt record
+            }
+            decisions.push(Decision { id, domain, choice });
+        }
+        Some(Trace { kind: Cow::Owned(kind), decisions })
+    }
+}
+
+type DomainFn = Arc<dyn Fn(&Trace) -> Domain + Send + Sync>;
+
+/// One instruction of a space program: a named decision and the rule
+/// deriving its domain from the already-executed prefix.
+#[derive(Clone)]
+struct DecisionGen {
+    id: DecisionId,
+    derive: DomainFn,
+}
+
+/// A declarative probabilistic program over schedule decisions: an
+/// ordered list of decision generators, where later domains may depend on
+/// earlier choices. One program describes one operator's search space;
+/// the generic execution machinery below (sample / mutate / enumerate)
+/// never changes when an operator gains a decision.
+#[derive(Clone)]
+pub struct SpaceProgram {
+    kind: &'static str,
+    gens: Vec<DecisionGen>,
+}
+
+impl SpaceProgram {
+    /// An empty program for `kind`. A program with no decisions is the
+    /// "untunable" marker — [`SpaceProgram::is_tunable`] is false and it
+    /// must not be sampled.
+    pub fn new(kind: &'static str) -> SpaceProgram {
+        SpaceProgram { kind, gens: Vec::new() }
+    }
+
+    /// Append a decision generator (builder style).
+    pub fn decision<F>(mut self, id: DecisionId, derive: F) -> SpaceProgram
+    where
+        F: Fn(&Trace) -> Domain + Send + Sync + 'static,
+    {
+        self.gens.push(DecisionGen { id, derive: Arc::new(derive) });
+        self
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    /// Number of decisions one execution records.
+    pub fn len(&self) -> usize {
+        self.gens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gens.is_empty()
+    }
+
+    /// True when the program has at least one decision (i.e. some
+    /// intrinsic variant matched the operator at construction).
+    pub fn is_tunable(&self) -> bool {
+        !self.gens.is_empty()
+    }
+
+    /// The same program with one decision removed — ablation hook (the
+    /// lowering treats the missing decision as its default). The id must
+    /// not be one a later domain depends on.
+    pub fn without(&self, id: &DecisionId) -> SpaceProgram {
+        SpaceProgram {
+            kind: self.kind,
+            gens: self.gens.iter().filter(|g| g.id != *id).cloned().collect(),
+        }
+    }
+
+    /// Execute the program: derive each domain from the prefix and draw
+    /// the decision uniformly. Generators must be total — an empty domain
+    /// for a reachable prefix is a programming error in the space, not a
+    /// sampling failure.
+    pub fn sample(&self, rng: &mut Pcg) -> Trace {
+        assert!(self.is_tunable(), "sampled an untunable space program");
+        let mut t = Trace::new(self.kind);
+        for g in &self.gens {
+            let domain = (g.derive)(&t);
+            assert!(!domain.is_empty(), "decision `{}` derived an empty domain", g.id);
+            let choice = rng.below(domain.len() as u64) as usize;
+            t.push(Decision { id: g.id.clone(), domain, choice });
+        }
+        t
+    }
+
+    /// Mutate exactly one decision of `t` and replay the suffix:
+    ///
+    /// 1. pick a decision with more than one option, uniformly;
+    /// 2. resample it to a *different* choice;
+    /// 3. re-derive every downstream domain; a downstream decision keeps
+    ///    its old value whenever the new domain still contains it and is
+    ///    resampled uniformly otherwise (the old value became invalid).
+    ///
+    /// The result is always a trace this program could have produced. If
+    /// no decision has an alternative, `t` is returned unchanged.
+    pub fn mutate(&self, t: &Trace, rng: &mut Pcg) -> Trace {
+        debug_assert_eq!(t.decisions().len(), self.gens.len(), "trace/program mismatch");
+        let movable: Vec<usize> = t
+            .decisions()
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.domain.len() > 1)
+            .map(|(i, _)| i)
+            .collect();
+        if movable.is_empty() {
+            return t.clone();
+        }
+        let pos = movable[rng.below(movable.len() as u64) as usize];
+        let mut out = Trace::new(self.kind);
+        for d in &t.decisions()[..pos] {
+            out.push(d.clone());
+        }
+        let d = &t.decisions()[pos];
+        let n = d.domain.len() as u64;
+        let choice = ((d.choice as u64 + 1 + rng.below(n - 1)) % n) as usize;
+        out.push(Decision { id: d.id.clone(), domain: d.domain.clone(), choice });
+        for (g, old) in self.gens[pos + 1..].iter().zip(&t.decisions()[pos + 1..]) {
+            let domain = (g.derive)(&out);
+            assert!(!domain.is_empty(), "decision `{}` derived an empty domain", g.id);
+            let choice = if domain == old.domain {
+                old.choice
+            } else if let Some(c) = domain.find(old.value()) {
+                c
+            } else {
+                rng.below(domain.len() as u64) as usize
+            };
+            out.push(Decision { id: g.id.clone(), domain, choice });
+        }
+        out
+    }
+
+    /// True when `t` is exactly a trace this program could have produced:
+    /// same kind, same decision names in order, every domain equal to the
+    /// re-derived one, every choice in range.
+    pub fn validates(&self, t: &Trace) -> bool {
+        if t.kind() != self.kind || t.decisions().len() != self.gens.len() {
+            return false;
+        }
+        let mut prefix = Trace::new(self.kind);
+        for (g, d) in self.gens.iter().zip(t.decisions()) {
+            if d.id != g.id || (g.derive)(&prefix) != d.domain || d.choice >= d.domain.len() {
+                return false;
+            }
+            prefix.push(d.clone());
+        }
+        true
+    }
+
+    /// Exact size of the discrete space (number of distinct traces),
+    /// saturating at `cap`. Domains depend on prefixes, so this walks the
+    /// decision tree — reporting only, not a hot path.
+    pub fn cardinality(&self, cap: usize) -> usize {
+        if !self.is_tunable() {
+            return 0;
+        }
+        let mut n = 0usize;
+        let mut prefix = Trace::new(self.kind);
+        self.count_walk(0, &mut prefix, cap, &mut n);
+        n
+    }
+
+    fn count_walk(&self, depth: usize, prefix: &mut Trace, cap: usize, n: &mut usize) {
+        if *n >= cap {
+            return;
+        }
+        if depth == self.gens.len() {
+            *n += 1;
+            return;
+        }
+        let g = &self.gens[depth];
+        let domain = (g.derive)(prefix);
+        for choice in 0..domain.len() {
+            prefix.push(Decision { id: g.id.clone(), domain: domain.clone(), choice });
+            self.count_walk(depth + 1, prefix, cap, n);
+            prefix.pop();
+            if *n >= cap {
+                return;
+            }
+        }
+    }
+
+    fn walk(
+        &self,
+        depth: usize,
+        prefix: &mut Trace,
+        cap: usize,
+        visit: &mut dyn FnMut(&Trace),
+        seen: &mut usize,
+    ) {
+        if *seen >= cap {
+            return;
+        }
+        if depth == self.gens.len() {
+            *seen += 1;
+            visit(prefix);
+            return;
+        }
+        let g = &self.gens[depth];
+        let domain = (g.derive)(prefix);
+        for choice in 0..domain.len() {
+            prefix.push(Decision { id: g.id.clone(), domain: domain.clone(), choice });
+            self.walk(depth + 1, prefix, cap, visit, seen);
+            prefix.pop();
+            if *seen >= cap {
+                return;
+            }
+        }
+    }
+
+    /// Every trace of the space, in decision-tree order, up to `cap`
+    /// (exhaustive ablation studies on small operators).
+    pub fn enumerate(&self, cap: usize) -> Vec<Trace> {
+        let mut out = Vec::new();
+        if !self.is_tunable() {
+            return out;
+        }
+        let mut prefix = Trace::new(self.kind);
+        let mut seen = 0usize;
+        self.walk(0, &mut prefix, cap, &mut |t| out.push(t.clone()), &mut seen);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: DecisionId = DecisionId::new("a");
+    const B: DecisionId = DecisionId::new("b");
+    const C: DecisionId = DecisionId::new("c");
+
+    /// b's domain depends on a: a=0 -> {10,20,30}, a=1 -> {10}; c is a
+    /// free boolean.
+    fn program() -> SpaceProgram {
+        SpaceProgram::new("test")
+            .decision(A, |_| Domain::Ints(vec![0, 1]))
+            .decision(B, |t| {
+                if t.value_of(&A) == Some(0) {
+                    Domain::Ints(vec![10, 20, 30])
+                } else {
+                    Domain::Ints(vec![10])
+                }
+            })
+            .decision(C, |_| Domain::Bools(vec![false, true]))
+    }
+
+    #[test]
+    fn sample_records_every_decision_in_order() {
+        let p = program();
+        let mut rng = Pcg::seeded(1);
+        for _ in 0..32 {
+            let t = p.sample(&mut rng);
+            assert_eq!(t.decisions().len(), 3);
+            assert_eq!(t.decisions()[0].id, A);
+            assert_eq!(t.decisions()[1].id, B);
+            assert_eq!(t.decisions()[2].id, C);
+            assert!(p.validates(&t), "sampled trace must validate: {}", t.describe());
+        }
+    }
+
+    #[test]
+    fn dependent_domain_follows_prefix() {
+        let p = program();
+        let mut rng = Pcg::seeded(2);
+        for _ in 0..64 {
+            let t = p.sample(&mut rng);
+            let b = t.value_of(&B).unwrap();
+            if t.value_of(&A) == Some(1) {
+                assert_eq!(b, 10);
+            } else {
+                assert!([10, 20, 30].contains(&b));
+            }
+        }
+    }
+
+    #[test]
+    fn mutate_changes_one_decision_and_revalidates() {
+        let p = program();
+        let mut rng = Pcg::seeded(3);
+        for _ in 0..128 {
+            let t = p.sample(&mut rng);
+            let m = p.mutate(&t, &mut rng);
+            assert!(p.validates(&m), "mutant must validate: {}", m.describe());
+            let diffs: Vec<usize> = (0..3)
+                .filter(|&i| t.decisions()[i].value() != m.decisions()[i].value())
+                .collect();
+            assert!(!diffs.is_empty(), "mutation must change something");
+            // Exactly one decision changed while its old value was still
+            // an option; any other change means the old value fell out of
+            // the re-derived domain.
+            let voluntary = diffs
+                .iter()
+                .filter(|&&i| m.decisions()[i].domain.find(t.decisions()[i].value()).is_some())
+                .count();
+            assert!(voluntary <= 1, "more than one voluntary change: {diffs:?}");
+        }
+    }
+
+    #[test]
+    fn hash_is_equality_on_decision_values() {
+        let p = program();
+        let mut rng = Pcg::seeded(4);
+        let traces: Vec<Trace> = (0..200).map(|_| p.sample(&mut rng)).collect();
+        for a in &traces {
+            for b in &traces {
+                let values =
+                    |t: &Trace| -> Vec<(String, u64)> {
+                        t.decisions().iter().map(|d| (d.id.name().to_string(), d.value())).collect()
+                    };
+                assert_eq!(a.fnv_hash() == b.fnv_hash(), values(a) == values(b));
+            }
+        }
+    }
+
+    #[test]
+    fn cardinality_and_enumerate_agree() {
+        let p = program();
+        // a=0: 3 b-options; a=1: 1 b-option; x2 for c = (3 + 1) * 2 = 8.
+        assert_eq!(p.cardinality(1 << 20), 8);
+        let all = p.enumerate(1 << 20);
+        assert_eq!(all.len(), 8);
+        let mut hashes: Vec<u64> = all.iter().map(|t| t.fnv_hash()).collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), 8, "enumerated traces must be distinct");
+        assert!(all.iter().all(|t| p.validates(t)));
+        // Saturation.
+        assert_eq!(p.cardinality(5), 5);
+        assert_eq!(p.enumerate(5).len(), 5);
+    }
+
+    #[test]
+    fn without_drops_exactly_one_decision() {
+        let p = program().without(&C);
+        assert_eq!(p.len(), 2);
+        let mut rng = Pcg::seeded(5);
+        let t = p.sample(&mut rng);
+        assert!(t.get(&C).is_none());
+        assert!(t.get(&A).is_some() && t.get(&B).is_some());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_trace_exactly() {
+        let p = program();
+        let mut rng = Pcg::seeded(6);
+        for _ in 0..32 {
+            let t = p.sample(&mut rng);
+            let back = Trace::from_json(&t.to_json()).expect("roundtrip");
+            assert_eq!(t, back);
+            assert_eq!(t.fnv_hash(), back.fnv_hash());
+        }
+    }
+
+    #[test]
+    fn json_rejects_out_of_range_choice() {
+        let p = program();
+        let mut rng = Pcg::seeded(7);
+        let t = p.sample(&mut rng);
+        let mut j = t.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(ds)) = m.get_mut("decisions") {
+                if let Json::Obj(d0) = &mut ds[0] {
+                    d0.insert("choice".into(), Json::num(99.0));
+                }
+            }
+        }
+        assert!(Trace::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn intrin_packing_roundtrips() {
+        for i in [
+            IntrinChoice { vl: 1024, j: 32, lmul: 8 },
+            IntrinChoice { vl: 4, j: 1, lmul: 1 },
+            IntrinChoice { vl: 144, j: 8, lmul: 4 },
+        ] {
+            assert_eq!(unpack_intrin(pack_intrin(i)), i);
+        }
+    }
+
+    #[test]
+    fn untunable_program_is_flagged() {
+        let p = SpaceProgram::new("test");
+        assert!(!p.is_tunable());
+        assert_eq!(p.cardinality(100), 0);
+        assert!(p.enumerate(100).is_empty());
+    }
+}

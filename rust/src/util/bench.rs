@@ -41,13 +41,21 @@ impl Default for BenchOpts {
 
 /// Quick profile for heavy end-to-end benches.
 pub fn quick() -> BenchOpts {
-    BenchOpts { warmup: Duration::from_millis(50), samples: 5, sample_time: Duration::from_millis(20) }
+    BenchOpts {
+        warmup: Duration::from_millis(50),
+        samples: 5,
+        sample_time: Duration::from_millis(20),
+    }
 }
 
 /// Smoke profile for CI: a few milliseconds per measurement, just enough
 /// to catch order-of-magnitude regressions and exercise the code paths.
 pub fn smoke() -> BenchOpts {
-    BenchOpts { warmup: Duration::from_millis(10), samples: 3, sample_time: Duration::from_millis(5) }
+    BenchOpts {
+        warmup: Duration::from_millis(10),
+        samples: 3,
+        sample_time: Duration::from_millis(5),
+    }
 }
 
 /// True when `BENCH_QUICK` is set (and not "0") — CI smoke mode. Benches

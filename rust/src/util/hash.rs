@@ -1,10 +1,10 @@
 //! The crate's one FNV-1a implementation.
 //!
-//! Both the schedule dedup key (`tir::Schedule::struct_hash`) and the
-//! per-operator tuning seeds (`coordinator::TuneService`) need a tiny,
-//! deterministic, dependency-free 64-bit hash. They used to hand-roll the
-//! same primes independently; this module is now the single home of the
-//! constants and the mixing steps.
+//! Both the decision-trace dedup key (`tune::trace::Trace::fnv_hash`) and
+//! the per-operator tuning seeds (`coordinator::TuneService`) need a
+//! tiny, deterministic, dependency-free 64-bit hash. They used to
+//! hand-roll the same primes independently; this module is now the single
+//! home of the constants and the mixing steps.
 
 /// FNV-1a 64-bit offset basis.
 pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;

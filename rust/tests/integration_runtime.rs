@@ -102,6 +102,7 @@ fn simulator_int8_matches_jax_oracle_via_pjrt() {
         order: LoopOrder::NMK,
         unroll: 2,
         transpose: false,
+        ks: 1,
     });
     for scenario in [
         Scenario::ScalarOs,
@@ -152,6 +153,7 @@ fn simulator_f32_matches_jax_oracle_via_pjrt() {
         order: LoopOrder::MNK,
         unroll: 1,
         transpose: false,
+        ks: 1,
     });
     let p = codegen::generate(&op, &Scenario::Ours(sched), 256).unwrap();
     let mut bufs = BufStore::functional(&p);

@@ -100,7 +100,7 @@ fn concurrent_service_matches_serial() {
         let mut v: Vec<(String, usize, u64, f64)> = db
             .records()
             .iter()
-            .map(|r| (r.op_key.clone(), r.trial, r.schedule.struct_hash(), r.cycles))
+            .map(|r| (r.op_key.clone(), r.trial, r.trace.fnv_hash(), r.cycles))
             .collect();
         v.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
         v
@@ -142,8 +142,7 @@ fn concurrent_same_op_requests_match_serial() {
     });
 
     let canonical = |db: &Database| {
-        let mut v: Vec<u64> =
-            db.records().iter().map(|r| r.schedule.struct_hash()).collect();
+        let mut v: Vec<u64> = db.records().iter().map(|r| r.trace.fnv_hash()).collect();
         v.sort_unstable();
         v
     };
@@ -172,6 +171,42 @@ fn database_roundtrip_through_service() {
     let best_back = loaded.best(&op.key(), "saturn-256").unwrap();
     assert_eq!(best_orig.cycles, best_back.cycles);
     assert_eq!(best_orig.schedule, best_back.schedule);
+    assert_eq!(best_orig.trace, best_back.trace, "traces must survive persistence exactly");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tuning state replays across sessions: a database saved by one process
+/// and loaded by another seeds the next tuner's dedup set from the
+/// persisted traces, so nothing already measured is re-measured.
+#[test]
+fn loaded_database_is_not_remeasured_across_sessions() {
+    use rvv_tune::intrinsics::Registry;
+    use rvv_tune::tune::{tune_op, HeuristicCostModel, SearchConfig, SerialMeasurer};
+    let op = Op::square_matmul(32, DType::I8);
+    let soc = SocConfig::saturn(256);
+    let registry = Registry::build(256);
+    let config = SearchConfig { trials: 12, seed: 9, ..Default::default() };
+
+    // Session 1: tune and persist.
+    let mut db = Database::new();
+    let mut model = HeuristicCostModel;
+    tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
+    let dir = std::env::temp_dir().join("rvv-tune-int-db-xsession");
+    let path = dir.join("db.json");
+    db.save(&path).unwrap();
+
+    // Session 2: load and continue with the same seed — every candidate
+    // the first session measured must be excluded via its trace hash.
+    let mut db2 = Database::load(&path).unwrap();
+    let measured_before = db2.len();
+    let mut model2 = HeuristicCostModel;
+    tune_op(&op, &soc, &registry, &mut model2, &SerialMeasurer, &mut db2, &config).unwrap();
+    assert!(db2.len() > measured_before, "second session must measure new candidates");
+    let mut hashes: Vec<u64> = db2.records().iter().map(|r| r.trace.fnv_hash()).collect();
+    let n = hashes.len();
+    hashes.sort_unstable();
+    hashes.dedup();
+    assert_eq!(hashes.len(), n, "a persisted trace was re-measured after reload");
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -222,7 +257,7 @@ fn gradient_network_tuning_is_bit_identical_across_worker_counts() {
             .snapshot()
             .records()
             .iter()
-            .map(|r| (r.op_key.clone(), r.trial, r.schedule.struct_hash(), r.cycles))
+            .map(|r| (r.op_key.clone(), r.trial, r.trace.fnv_hash(), r.cycles))
             .collect();
         records.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
         (outcomes, report.convergence, records)

@@ -6,7 +6,7 @@ use rvv_tune::codegen::{self, Scenario};
 use rvv_tune::intrinsics::Registry;
 use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
 use rvv_tune::tir::{DType, Op, Requant, Schedule};
-use rvv_tune::tune::{analysis, SearchSpace};
+use rvv_tune::tune::{analysis, lower, program_for, Trace};
 use rvv_tune::util::Pcg;
 
 const CASES: usize = 40;
@@ -65,11 +65,11 @@ fn prop_sampled_schedules_are_functionally_exact() {
         }
         let soc = random_soc(&mut rng);
         let registry = Registry::build(soc.vlen);
-        let space = SearchSpace::new(&op, &registry);
+        let space = program_for(&op, &registry);
         if !space.is_tunable() {
             continue;
         }
-        let sched = space.sample(&mut rng);
+        let sched = lower(&space.sample(&mut rng)).expect("sampled trace lowers");
         let p = codegen::ours::emit(&op, &sched, soc.vlen);
         let (m, n, k) = match op {
             Op::Matmul { m, n, k, .. } => (m, n, k),
@@ -104,7 +104,9 @@ fn prop_timing_equals_functional_cycles() {
     for _ in 0..CASES {
         let op = random_matmul(&mut rng);
         let soc = random_soc(&mut rng);
-        let sc = rng.choose(&[Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm]).clone();
+        let sc = rng
+            .choose(&[Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm])
+            .clone();
         let p = codegen::generate(&op, &sc, soc.vlen).unwrap();
         let warm = rng.chance(0.5);
         let mut fb = BufStore::functional(&p);
@@ -146,20 +148,24 @@ fn prop_static_profile_matches_dynamic_trace() {
     }
 }
 
-/// P4: schedules survive a JSON round trip through the database format.
+/// P4: decision traces survive a JSON round trip through the database
+/// format — byte-exact decisions, identical dedup hash, identical lowered
+/// schedule.
 #[test]
-fn prop_schedule_json_roundtrip() {
+fn prop_trace_json_roundtrip() {
     let mut rng = Pcg::seeded(0xD00D);
     for _ in 0..CASES * 4 {
         let op = random_matmul(&mut rng);
         let registry = Registry::build(*rng.choose(&[256u32, 512, 1024]));
-        let space = SearchSpace::new(&op, &registry);
+        let space = program_for(&op, &registry);
         if !space.is_tunable() {
             continue;
         }
-        let s = space.sample(&mut rng);
-        let back = Schedule::from_json(&s.to_json()).expect("roundtrip");
-        assert_eq!(s, back);
+        let t = space.sample(&mut rng);
+        let back = Trace::from_json(&t.to_json()).expect("roundtrip");
+        assert_eq!(t, back);
+        assert_eq!(t.fnv_hash(), back.fnv_hash());
+        assert_eq!(lower(&t), lower(&back));
     }
 }
 
@@ -186,21 +192,24 @@ fn prop_cache_monotonicity() {
     }
 }
 
-/// P6: mutation always yields a schedule that is still inside the space
-/// (valid intrinsic variant, valid divisors).
+/// P6: mutation always yields a trace that is still inside the space
+/// (the program re-validates it: same decision sequence, re-derivable
+/// domains, in-range choices) and lowers to an emittable schedule.
 #[test]
 fn prop_mutation_stays_in_space() {
     let mut rng = Pcg::seeded(0x5EED);
     for _ in 0..CASES {
         let op = random_matmul(&mut rng);
         let registry = Registry::build(1024);
-        let space = SearchSpace::new(&op, &registry);
+        let space = program_for(&op, &registry);
         if !space.is_tunable() {
             continue;
         }
-        let mut s = space.sample(&mut rng);
+        let mut t = space.sample(&mut rng);
         for _ in 0..16 {
-            s = space.mutate(&s, &mut rng);
+            t = space.mutate(&t, &mut rng);
+            assert!(space.validates(&t), "mutant left the space: {}", t.describe());
+            let s = lower(&t).expect("mutant lowers");
             if let (Schedule::Matmul(ms), Op::Matmul { m, n, k, .. }) = (&s, &op) {
                 let rows = if ms.transpose { *n } else { *m };
                 let cols = if ms.transpose { *m } else { *n };
@@ -215,6 +224,126 @@ fn prop_mutation_stays_in_space() {
             assert!(r.cycles > 0.0);
         }
     }
+}
+
+/// P8: trace replay is deterministic and pure — executing a program twice
+/// with the same seed records identical traces, and lowering the same
+/// trace twice produces the same `Schedule`.
+#[test]
+fn prop_replay_is_deterministic() {
+    let mut shape_rng = Pcg::seeded(0x11AD);
+    for case in 0..CASES {
+        let op = random_matmul(&mut shape_rng);
+        let registry = Registry::build(512);
+        let space = program_for(&op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        let mut a = Pcg::seeded(case as u64);
+        let mut b = Pcg::seeded(case as u64);
+        let ta = space.sample(&mut a);
+        let tb = space.sample(&mut b);
+        assert_eq!(ta, tb, "same seed must record the same trace");
+        assert_eq!(lower(&ta), lower(&tb));
+        // Lowering is a pure function of the trace: a JSON-revived copy
+        // lowers to the same schedule.
+        let revived = Trace::from_json(&ta.to_json()).expect("revives");
+        assert_eq!(lower(&ta), lower(&revived), "lowering must be pure across revival");
+    }
+}
+
+/// P9: `mutate` changes exactly one decision voluntarily; any further
+/// change is forced (the old value fell out of a re-derived downstream
+/// domain) — and the mutant always revalidates against the program.
+#[test]
+fn prop_mutate_changes_exactly_one_decision() {
+    let mut rng = Pcg::seeded(0x30B);
+    for _ in 0..CASES * 2 {
+        let op = random_matmul(&mut rng);
+        let registry = Registry::build(*rng.choose(&[256u32, 1024]));
+        let space = program_for(&op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        let t = space.sample(&mut rng);
+        let m = space.mutate(&t, &mut rng);
+        assert!(space.validates(&m));
+        let n = t.decisions().len();
+        assert_eq!(m.decisions().len(), n);
+        let changed: Vec<usize> = (0..n)
+            .filter(|&i| t.decisions()[i].value() != m.decisions()[i].value())
+            .collect();
+        assert!(!changed.is_empty(), "a mutation must change the trace");
+        // "Voluntary" changes keep the old value available in the mutant's
+        // domain; there must be exactly one (the mutated decision). Forced
+        // changes — old value no longer derivable — may follow downstream.
+        let voluntary = changed
+            .iter()
+            .filter(|&&i| m.decisions()[i].domain.find(t.decisions()[i].value()).is_some())
+            .count();
+        assert!(
+            voluntary <= 1,
+            "mutation changed {voluntary} decisions whose old value was still valid"
+        );
+    }
+}
+
+/// P10: trace hash equality is decision equality — over many sampled
+/// traces of one space, two traces hash equal iff their (id, value)
+/// sequences are equal.
+#[test]
+fn prop_trace_hash_equality_is_decision_equality() {
+    let op = Op::square_matmul(32, DType::I8);
+    let registry = Registry::build(256);
+    let space = program_for(&op, &registry);
+    let mut rng = Pcg::seeded(0x4A5);
+    let traces: Vec<Trace> = (0..256).map(|_| space.sample(&mut rng)).collect();
+    let values = |t: &Trace| -> Vec<(String, u64)> {
+        t.decisions().iter().map(|d| (d.id.name().to_string(), d.value())).collect()
+    };
+    for a in &traces {
+        for b in &traces {
+            assert_eq!(
+                a.fnv_hash() == b.fnv_hash(),
+                values(a) == values(b),
+                "hash equality must coincide with decision equality"
+            );
+        }
+    }
+}
+
+/// P11: space containment of the k-split ablation — every trace of the
+/// program without the k-split decision corresponds to a full-space trace
+/// with ks = 1, so at equal exhaustive coverage the full space's best
+/// cycles can only be at least as good.
+#[test]
+fn prop_ksplit_space_contains_the_ablated_space() {
+    use rvv_tune::tune::space::ids;
+    let op = Op::Matmul { m: 8, n: 8, k: 32, dtype: DType::I8, requant: None };
+    let registry = Registry::build(256);
+    let soc = SocConfig::saturn(256);
+    let full = program_for(&op, &registry);
+    let ablated = full.without(&ids::KSPLIT);
+    let measure = |t: &Trace| {
+        let s = lower(t).expect("lowers");
+        let p = codegen::ours::emit(&op, &s, soc.vlen);
+        let mut bufs = BufStore::timing(&p);
+        execute(&soc, &p, &mut bufs, Mode::Timing, true).cycles
+    };
+    let best = |traces: &[Trace]| {
+        traces.iter().map(|t| measure(t)).fold(f64::INFINITY, f64::min)
+    };
+    let cap = 1 << 14;
+    let full_traces = full.enumerate(cap);
+    let ablated_traces = ablated.enumerate(cap);
+    assert!(full_traces.len() < cap, "enumeration must be exhaustive for this op");
+    assert!(full_traces.len() > ablated_traces.len(), "k-split must enlarge the space");
+    let best_full = best(&full_traces);
+    let best_ablated = best(&ablated_traces);
+    assert!(
+        best_full <= best_ablated,
+        "full-space best {best_full} must be <= ablated best {best_ablated}"
+    );
 }
 
 /// P7: the dynamic instruction total is invariant across SoCs (the ISA
