@@ -8,6 +8,15 @@ cd "$(dirname "$0")/rust"
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+echo "== quick tier: differential codegen harness =="
+# Every backend (scalar, autovec, muriscv-nn, packed-simd, ours) must be
+# bit-identical on random ops of all four kinds, requant path included.
+# Deliberately run before (and therefore again inside) the full suite:
+# a codegen numerics break should fail CI in seconds, not after the
+# whole tier-1 wall; the duplicate execution costs only seconds and the
+# test binary is compiled once either way.
+cargo test -q --test differential_codegen
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
@@ -36,6 +45,17 @@ cargo run --release --quiet -- tune --workload matmul:16:int8 --soc saturn-256 \
   --trials 8 --no-mlp --db "$smoke_dir/db.json" >/dev/null
 cargo run --release --quiet -- trace --workload matmul:16:int8 --soc saturn-256 \
   --db "$smoke_dir/db.json"
+
+echo "== conv smoke: tune Conv2d -> save -> load -> replay -> strategy =="
+# Same round trip for the first-class conv op; the replayed trace dump
+# must surface the im2col-vs-direct strategy decision.
+cargo run --release --quiet -- tune --workload conv2d:8:16:16:3:1:int8 --soc saturn-512 \
+  --trials 8 --no-mlp --db "$smoke_dir/conv.json" >/dev/null
+conv_trace="$(cargo run --release --quiet -- trace --workload conv2d:8:16:16:3:1:int8 \
+  --soc saturn-512 --db "$smoke_dir/conv.json")"
+echo "$conv_trace"
+grep -q "strategy" <<<"$conv_trace" \
+  || { echo "conv trace dump is missing the strategy decision"; exit 1; }
 
 echo "== perf smoke: BENCH_QUICK=1 perf_hotpath =="
 BENCH_QUICK=1 cargo bench --bench perf_hotpath

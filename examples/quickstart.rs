@@ -8,7 +8,7 @@
 use rvv_tune::codegen::Scenario;
 use rvv_tune::coordinator::{MeasureRequest, ServiceOptions, Target, TuneRequest, TuneService};
 use rvv_tune::sim::SocConfig;
-use rvv_tune::tir::DType;
+use rvv_tune::tir::{DType, Op};
 use rvv_tune::workloads::matmul;
 
 fn main() {
@@ -63,4 +63,19 @@ fn main() {
             );
         }
     }
+
+    // First-class Conv2d: the *first* decision of a conv's space program
+    // picks the lowering strategy — materialized im2col GEMM vs direct
+    // register-blocked convolution — so the tuner decides per (layer,
+    // VLEN) instead of a policy baked into the model importer.
+    let conv = Op::square_conv2d(8, 32, 16, 3, 1, DType::I8);
+    let conv_report = service.tune(&TuneRequest::new(conv.clone(), 64));
+    let conv_outcome = conv_report.outcome.expect("conv is tunable");
+    println!(
+        "\nconv workload: {conv}\ntuned in {} trials -> {}  ({} cycles)",
+        conv_outcome.trials_measured,
+        conv_outcome.best.schedule.describe(),
+        conv_outcome.best.cycles,
+    );
+    println!("conv decision trace (strategy first): {}", conv_outcome.best.trace.describe());
 }

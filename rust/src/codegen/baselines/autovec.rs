@@ -40,111 +40,137 @@ impl Flavor {
     }
 }
 
+/// The GEMM loop nest both compilers produce for a dot-product loop:
+/// innermost-loop vectorization of the k reduction, no register blocking
+/// or cross-iteration reuse. `a_buf` is parametric so the conv arm can
+/// run the same nest over its packed patch matrix.
+#[allow(clippy::too_many_arguments)]
+fn emit_gemm(
+    p: &mut VProgram,
+    flavor: Flavor,
+    a_buf: crate::sim::BufId,
+    b_buf: crate::sim::BufId,
+    acc_buf: crate::sim::BufId,
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype: DType,
+    vlen: u32,
+) {
+    let sew = dtype.sew();
+    let acc_sew = dtype.accumulator().sew();
+    let float = dtype.is_float();
+    let widen = dtype == DType::I8;
+    // Loop vectorizers choose the VF from the *widest* type in the
+    // loop; the int8 dot product accumulates in int32, so VF is
+    // 4x smaller than the element VLMAX (one reason autovec loses
+    // to widening-aware hand kernels on int8 — paper §IV-A).
+    let vlmax = vlen * flavor.lmul().factor() / acc_sew.bits();
+    let chunk = vlmax.min(k as u32);
+    let k_full = k / chunk as usize;
+    let k_tail = (k % chunk as usize) as u32;
+    let zero = if float { ScalarSrc::F(0.0) } else { ScalarSrc::I(0) };
+
+    let mv = p.fresh_var();
+    let nv = p.fresh_var();
+    let kv = p.fresh_var();
+
+    let mut body: Vec<Node> = Vec::new();
+    // vacc = 0 (chunk-long accumulator, LMUL-limited)
+    body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul: flavor.lmul(), float }));
+    body.push(Node::Inst(Inst::VSplat { vd: 8, value: zero, vl_override: None }));
+    if k_full > 0 {
+        let a_addr = AddrExpr::var(mv, k as i64).plus(kv, chunk as i64);
+        let b_addr = AddrExpr::var(nv, k as i64).plus(kv, chunk as i64);
+        body.push(Node::Loop(LoopNode {
+            var: kv,
+            extent: k_full as u32,
+            unroll: flavor.interleave(),
+            body: vec![
+                Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a_buf, a_addr) }),
+                Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(b_buf, b_addr) }),
+                Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }),
+            ],
+        }));
+    }
+    if k_tail > 0 {
+        let off = (k_full as i64) * chunk as i64;
+        body.push(Node::Inst(Inst::VSetVl { vl: k_tail, sew, lmul: flavor.lmul(), float }));
+        body.push(Node::Inst(Inst::VLoad {
+            vd: 0,
+            mem: MemRef::unit(a_buf, AddrExpr::var(mv, k as i64).offset(off)),
+        }));
+        body.push(Node::Inst(Inst::VLoad {
+            vd: 4,
+            mem: MemRef::unit(b_buf, AddrExpr::var(nv, k as i64).offset(off)),
+        }));
+        body.push(Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }));
+        // restore full-chunk VL for the reduction below
+        body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul: flavor.lmul(), float }));
+    }
+    // Horizontal reduction + bias accumulate + store (one element).
+    body.push(Node::Inst(Inst::VSplat { vd: 12, value: zero, vl_override: Some(1) }));
+    body.push(Node::Inst(Inst::VRedSum { vd: 12, vs: 8, acc: 12 }));
+    let c_addr = AddrExpr::var(mv, n as i64).plus(nv, 1);
+    body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: acc_sew, lmul: Lmul::M1, float }));
+    body.push(Node::Inst(Inst::VLoad { vd: 13, mem: MemRef::unit(acc_buf, c_addr.clone()) }));
+    body.push(Node::Inst(Inst::VBin { op: VBinOp::Add, vd: 12, vs1: 12, vs2: 13, widen: false }));
+    body.push(Node::Inst(Inst::VStore { vs: 12, mem: MemRef::unit(acc_buf, c_addr) }));
+
+    let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body });
+    p.body
+        .push(Node::Loop(LoopNode { var: mv, extent: m as u32, unroll: 1, body: vec![n_loop] }));
+}
+
+/// Per-flavor requantization epilogue: GCC's saturating fixed-point chain
+/// stays scalar; LLVM vectorizes it.
+#[allow(clippy::too_many_arguments)]
+fn emit_requant(
+    p: &mut VProgram,
+    flavor: Flavor,
+    acc: crate::sim::BufId,
+    out: crate::sim::BufId,
+    rows: usize,
+    cols: usize,
+    rq: crate::tir::Requant,
+    vlen: u32,
+) {
+    match flavor {
+        Flavor::Gcc => p.body.push(Node::Inst(Inst::SRequantRun {
+            dst: MemRef::unit(out, AddrExpr::constant(0)),
+            src: MemRef::unit(acc, AddrExpr::constant(0)),
+            len: (rows * cols) as u32,
+            mult: rq.mult,
+            shift: rq.shift,
+            zp: rq.zp,
+        })),
+        Flavor::Llvm => ours::emit_requant_epilogue(p, acc, out, rows, cols, rq, vlen),
+    }
+}
+
 /// Emit the autovectorized program for `op`.
 pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
     let mut p = VProgram::new(format!("autovec-{:?}-{}", flavor, op.key()));
     let bufs = declare_buffers(&mut p, op);
     match *op {
         Op::Matmul { m, n, k, dtype, requant } => {
-            let sew = dtype.sew();
-            let acc_sew = dtype.accumulator().sew();
-            let float = dtype.is_float();
-            let widen = dtype == DType::I8;
-            // Loop vectorizers choose the VF from the *widest* type in the
-            // loop; the int8 dot product accumulates in int32, so VF is
-            // 4x smaller than the element VLMAX (one reason autovec loses
-            // to widening-aware hand kernels on int8 — paper §IV-A).
-            let vlmax = vlen * flavor.lmul().factor() / acc_sew.bits();
-            let chunk = vlmax.min(k as u32);
-            let k_full = k / chunk as usize;
-            let k_tail = (k % chunk as usize) as u32;
-            let zero = if float { ScalarSrc::F(0.0) } else { ScalarSrc::I(0) };
-
-            let mv = p.fresh_var();
-            let nv = p.fresh_var();
-            let kv = p.fresh_var();
-
-            let mut body: Vec<Node> = Vec::new();
-            // vacc = 0 (chunk-long accumulator, LMUL-limited)
-            body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul: flavor.lmul(), float }));
-            body.push(Node::Inst(Inst::VSplat { vd: 8, value: zero, vl_override: None }));
-            if k_full > 0 {
-                let a_addr = AddrExpr::var(mv, k as i64).plus(kv, chunk as i64);
-                let b_addr = AddrExpr::var(nv, k as i64).plus(kv, chunk as i64);
-                body.push(Node::Loop(LoopNode {
-                    var: kv,
-                    extent: k_full as u32,
-                    unroll: flavor.interleave(),
-                    body: vec![
-                        Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(bufs.a, a_addr) }),
-                        Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.b, b_addr) }),
-                        Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }),
-                    ],
-                }));
-            }
-            if k_tail > 0 {
-                let off = (k_full as i64) * chunk as i64;
-                body.push(Node::Inst(Inst::VSetVl { vl: k_tail, sew, lmul: flavor.lmul(), float }));
-                body.push(Node::Inst(Inst::VLoad {
-                    vd: 0,
-                    mem: MemRef::unit(bufs.a, AddrExpr::var(mv, k as i64).offset(off)),
-                }));
-                body.push(Node::Inst(Inst::VLoad {
-                    vd: 4,
-                    mem: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64).offset(off)),
-                }));
-                body.push(Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen }));
-                // restore full-chunk VL for the reduction below
-                body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul: flavor.lmul(), float }));
-            }
-            // Horizontal reduction + bias accumulate + store (one element).
-            body.push(Node::Inst(Inst::VSplat { vd: 12, value: zero, vl_override: Some(1) }));
-            body.push(Node::Inst(Inst::VRedSum { vd: 12, vs: 8, acc: 12 }));
-            let c_addr = AddrExpr::var(mv, n as i64).plus(nv, 1);
-            body.push(Node::Inst(Inst::VSetVl { vl: 1, sew: acc_sew, lmul: Lmul::M1, float }));
-            body.push(Node::Inst(Inst::VLoad {
-                vd: 13,
-                mem: MemRef::unit(bufs.acc, c_addr.clone()),
-            }));
-            body.push(Node::Inst(Inst::VBin {
-                op: VBinOp::Add,
-                vd: 12,
-                vs1: 12,
-                vs2: 13,
-                widen: false,
-            }));
-            body.push(Node::Inst(Inst::VStore { vs: 12, mem: MemRef::unit(bufs.acc, c_addr) }));
-
-            let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body });
-            p.body.push(Node::Loop(LoopNode {
-                var: mv,
-                extent: m as u32,
-                unroll: 1,
-                body: vec![n_loop],
-            }));
-
+            emit_gemm(&mut p, flavor, bufs.a, bufs.b, bufs.acc, m, n, k, dtype, vlen);
             if let Some(rq) = requant {
-                match flavor {
-                    // GCC: the saturating requant chain stays scalar.
-                    Flavor::Gcc => p.body.push(Node::Inst(Inst::SRequantRun {
-                        dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
-                        src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
-                        len: (m * n) as u32,
-                        mult: rq.mult,
-                        shift: rq.shift,
-                        zp: rq.zp,
-                    })),
-                    // LLVM vectorizes the epilogue.
-                    Flavor::Llvm => ours::emit_requant_epilogue(
-                        &mut p,
-                        bufs.acc,
-                        bufs.out.unwrap(),
-                        m,
-                        n,
-                        rq,
-                        vlen,
-                    ),
-                }
+                emit_requant(&mut p, flavor, bufs.acc, bufs.out.unwrap(), m, n, rq, vlen);
+            }
+        }
+        Op::Conv2d { dtype, requant, .. } => {
+            // Neither compiler turns a conv nest into a blocked kernel:
+            // the generated code packs patches with scalar loops (the
+            // im2col the C source spells out) and the vectorizer handles
+            // the innermost dot-product loop of the GEMM.
+            let d = op.conv_dims().expect("conv dims");
+            let (m, n, k) = (d.pixels(), d.cout, d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(&mut p, bufs.a, col, dtype, d);
+            emit_gemm(&mut p, flavor, col, bufs.b, bufs.acc, m, n, k, dtype, vlen);
+            if let Some(rq) = requant {
+                emit_requant(&mut p, flavor, bufs.acc, bufs.out.unwrap(), m, n, rq, vlen);
             }
         }
         Op::DwConv { spatial, channels, taps, dtype, requant } => {
@@ -310,6 +336,40 @@ mod tests {
         for flavor in [Flavor::Gcc, Flavor::Llvm] {
             let (got, want) = run_i8(6, 10, 50, flavor, 256);
             assert_eq!(got, want, "{flavor:?}");
+        }
+    }
+
+    #[test]
+    fn conv2d_both_flavors_exact() {
+        let rq = Requant { mult: 1 << 15, shift: 17, zp: -2 };
+        let op = Op::Conv2d {
+            h: 8,
+            w: 7,
+            cin: 4,
+            cout: 5,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dtype: DType::I8,
+            requant: Some(rq),
+        };
+        let d = op.conv_dims().unwrap();
+        for flavor in [Flavor::Gcc, Flavor::Llvm] {
+            let p = emit(&op, 256, flavor);
+            let mut bufs = BufStore::functional(&p);
+            let xv: Vec<i8> = (0..8 * 7 * 4).map(|i| ((i * 37) % 255) as i8).collect();
+            let wv: Vec<i8> = (0..5 * d.k_col()).map(|i| ((i * 19) % 251) as i8).collect();
+            let bias: Vec<i32> =
+                (0..d.pixels() * 5).map(|i| (i as i32 * 7) % 63 - 31).collect();
+            bufs.set_i8(0, &xv);
+            bufs.set_i8(1, &wv);
+            bufs.set_i32(2, &bias);
+            execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+            let want: Vec<i8> = crate::tir::ref_conv2d_acc(d, &xv, &wv, &bias)
+                .into_iter()
+                .map(|a| crate::sim::requant_i64(a, rq.mult, rq.shift, rq.zp) as i8)
+                .collect();
+            assert_eq!(bufs.get_i8(3), &want[..], "{flavor:?}");
         }
     }
 

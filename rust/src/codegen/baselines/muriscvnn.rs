@@ -28,8 +28,10 @@ use super::super::declare_buffers;
 /// emits specialized code per layer).
 pub fn library_fn_bytes(op: &Op) -> u64 {
     match op {
-        // conv-as-GEMM layers pull the full convolve_s8 object: conv +
-        // 1x1/1xN variants + im2col + nt_t mat-mult kernels
+        // conv layers (first-class or flattened to a conv-as-GEMM matmul)
+        // pull the full convolve_s8 object: conv + 1x1/1xN variants +
+        // im2col + nt_t mat-mult kernels
+        Op::Conv2d { .. } => 24576,
         Op::Matmul { m, .. } if *m > 1 => 24576,
         // batch-1 fully-connected: vec_mat_mult_t_s8 only
         Op::Matmul { .. } => 1200,
@@ -44,6 +46,9 @@ pub fn library_fn_bytes(op: &Op) -> u64 {
 /// use it (see [`crate::codegen::CodeSizeModel`]).
 pub fn library_fn_kind(op: &Op) -> &'static str {
     match op {
+        // First-class convs and legacy conv-as-GEMM layers call the same
+        // convolve_s8 object — one copy in the binary either way.
+        Op::Conv2d { .. } => "conv",
         Op::Matmul { m, .. } if *m > 1 => "conv",
         Op::Matmul { .. } => "fc",
         Op::DwConv { .. } => "dwconv",
@@ -53,6 +58,145 @@ pub fn library_fn_kind(op: &Op) -> &'static str {
 
 /// Per-call-site glue (argument setup + call) in the generated C.
 pub const CALL_GLUE_BYTES: u64 = 96;
+
+/// The library's `nt_t` row-pair GEMM core: fixed VLMAX chunks, two rows
+/// per pass with a vector accumulator each, per-output in-register
+/// requant + single-element store. `a_buf` is parametric because
+/// `convolve_s8` calls the very same core over its im2col scratch arena.
+#[allow(clippy::too_many_arguments)]
+fn emit_gemm_rowpair(
+    p: &mut VProgram,
+    a_buf: crate::sim::BufId,
+    b_buf: crate::sim::BufId,
+    acc_buf: crate::sim::BufId,
+    out_buf: crate::sim::BufId,
+    m: usize,
+    n: usize,
+    k: usize,
+    rq: Requant,
+    vlmax: u32,
+) {
+    let lmul = Lmul::M4;
+    let sew = Sew::E8;
+    let chunk = vlmax.min(k as u32);
+    let k_full = k / chunk as usize;
+    let k_tail = (k % chunk as usize) as u32;
+    let rows2 = m / 2;
+    let m_tail = m % 2;
+
+    // One (row-pair | single row) x column body.
+    let emit_cols = |p: &mut VProgram, row_expr: AddrExpr, two_rows: bool| -> Node {
+        let nv = p.fresh_var();
+        let kv = p.fresh_var();
+        let mut body: Vec<Node> = Vec::new();
+        body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
+        body.push(Node::Inst(Inst::VSplat {
+            vd: 16,
+            value: ScalarSrc::I(0),
+            vl_override: None,
+        }));
+        if two_rows {
+            body.push(Node::Inst(Inst::VSplat {
+                vd: 20,
+                value: ScalarSrc::I(0),
+                vl_override: None,
+            }));
+        }
+        let k_block = |body: &mut Vec<Node>, k_base: AddrExpr, _vl_cur: u32| {
+            let a1 = row_expr.clone().scaled(k as i64).plus_expr(&k_base);
+            let b_addr = AddrExpr::var(nv, k as i64).plus_expr(&k_base);
+            body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(b_buf, b_addr) }));
+            body.push(Node::Inst(Inst::VLoad {
+                vd: 0,
+                mem: MemRef::unit(a_buf, a1.clone()),
+            }));
+            body.push(Node::Inst(Inst::VMacc { vd: 16, vs1: 0, vs2: 8, widen: true }));
+            if two_rows {
+                let a2 = a1.offset(k as i64);
+                body.push(Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(a_buf, a2) }));
+                body.push(Node::Inst(Inst::VMacc { vd: 20, vs1: 4, vs2: 8, widen: true }));
+            }
+        };
+        if k_full > 0 {
+            let mut inner = Vec::new();
+            k_block(&mut inner, AddrExpr::var(kv, chunk as i64), chunk);
+            body.push(Node::Loop(LoopNode {
+                var: kv,
+                extent: k_full as u32,
+                unroll: 1,
+                body: inner,
+            }));
+        }
+        if k_tail > 0 {
+            body.push(Node::Inst(Inst::VSetVl { vl: k_tail, sew, lmul, float: false }));
+            k_block(&mut body, AddrExpr::constant(k_full as i64 * chunk as i64), k_tail);
+            body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
+        }
+        // Per-row: reduce, add bias, requant in-register, store one
+        // int8 element (the library's per-output epilogue).
+        for (acc_reg, row_off) in
+            [(16u8, 0i64), (20, 1)].iter().take(if two_rows { 2 } else { 1 })
+        {
+            let c_addr = row_expr
+                .clone()
+                .offset(*row_off)
+                .scaled(n as i64)
+                .plus(nv, 1);
+            body.push(Node::Inst(Inst::VSplat {
+                vd: 24,
+                value: ScalarSrc::I(0),
+                vl_override: Some(1),
+            }));
+            body.push(Node::Inst(Inst::VRedSum { vd: 24, vs: *acc_reg, acc: 24 }));
+            body.push(Node::Inst(Inst::VSetVl {
+                vl: 1,
+                sew: Sew::E32,
+                lmul: Lmul::M1,
+                float: false,
+            }));
+            body.push(Node::Inst(Inst::VLoad {
+                vd: 25,
+                mem: MemRef::unit(acc_buf, c_addr.clone()),
+            }));
+            body.push(Node::Inst(Inst::VBin {
+                op: VBinOp::Add,
+                vd: 24,
+                vs1: 24,
+                vs2: 25,
+                widen: false,
+            }));
+            body.push(Node::Inst(Inst::VRequant {
+                vd: 26,
+                vs: 24,
+                mult: rq.mult,
+                shift: rq.shift,
+                zp: rq.zp,
+            }));
+            body.push(Node::Inst(Inst::VStore {
+                vs: 26,
+                mem: MemRef::unit(out_buf, c_addr),
+            }));
+            // back to element config for the next column's k loop
+            body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
+        }
+        Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body })
+    };
+
+    if rows2 > 0 {
+        let rv = p.fresh_var();
+        let cols = emit_cols(p, AddrExpr::var(rv, 2), true);
+        p.body.push(Node::Loop(LoopNode {
+            var: rv,
+            extent: rows2 as u32,
+            unroll: 1,
+            body: vec![cols],
+        }));
+    }
+    if m_tail > 0 {
+        let cols = emit_cols(p, AddrExpr::constant((m - 1) as i64), false);
+        p.body.push(cols);
+    }
+}
 
 /// Emit the library-kernel program for `op`; `None` for float dtypes.
 pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
@@ -67,124 +211,21 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
     match *op {
         Op::Matmul { m, n, k, requant, .. } => {
             let rq = requant.unwrap_or(Requant { mult: 1 << 14, shift: 15, zp: 0 });
-            let chunk = vlmax.min(k as u32);
-            let k_full = k / chunk as usize;
-            let k_tail = (k % chunk as usize) as u32;
-            let rows2 = m / 2;
-            let m_tail = m % 2;
-
-            // One (row-pair | single row) x column body.
-            let emit_cols = |p: &mut VProgram, row_expr: AddrExpr, two_rows: bool| -> Node {
-                let nv = p.fresh_var();
-                let kv = p.fresh_var();
-                let mut body: Vec<Node> = Vec::new();
-                body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
-                body.push(Node::Inst(Inst::VSplat {
-                    vd: 16,
-                    value: ScalarSrc::I(0),
-                    vl_override: None,
-                }));
-                if two_rows {
-                    body.push(Node::Inst(Inst::VSplat {
-                        vd: 20,
-                        value: ScalarSrc::I(0),
-                        vl_override: None,
-                    }));
-                }
-                let k_block = |body: &mut Vec<Node>, k_base: AddrExpr, _vl_cur: u32| {
-                    let a1 = row_expr.clone().scaled(k as i64).plus_expr(&k_base);
-                    let b_addr = AddrExpr::var(nv, k as i64).plus_expr(&k_base);
-                    body.push(Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.b, b_addr) }));
-                    body.push(Node::Inst(Inst::VLoad {
-                        vd: 0,
-                        mem: MemRef::unit(bufs.a, a1.clone()),
-                    }));
-                    body.push(Node::Inst(Inst::VMacc { vd: 16, vs1: 0, vs2: 8, widen: true }));
-                    if two_rows {
-                        let a2 = a1.offset(k as i64);
-                        body.push(Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.a, a2) }));
-                        body.push(Node::Inst(Inst::VMacc { vd: 20, vs1: 4, vs2: 8, widen: true }));
-                    }
-                };
-                if k_full > 0 {
-                    let mut inner = Vec::new();
-                    k_block(&mut inner, AddrExpr::var(kv, chunk as i64), chunk);
-                    body.push(Node::Loop(LoopNode {
-                        var: kv,
-                        extent: k_full as u32,
-                        unroll: 1,
-                        body: inner,
-                    }));
-                }
-                if k_tail > 0 {
-                    body.push(Node::Inst(Inst::VSetVl { vl: k_tail, sew, lmul, float: false }));
-                    k_block(&mut body, AddrExpr::constant(k_full as i64 * chunk as i64), k_tail);
-                    body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
-                }
-                // Per-row: reduce, add bias, requant in-register, store one
-                // int8 element (the library's per-output epilogue).
-                for (acc_reg, row_off) in
-                    [(16u8, 0i64), (20, 1)].iter().take(if two_rows { 2 } else { 1 })
-                {
-                    let c_addr = row_expr
-                        .clone()
-                        .offset(*row_off)
-                        .scaled(n as i64)
-                        .plus(nv, 1);
-                    body.push(Node::Inst(Inst::VSplat {
-                        vd: 24,
-                        value: ScalarSrc::I(0),
-                        vl_override: Some(1),
-                    }));
-                    body.push(Node::Inst(Inst::VRedSum { vd: 24, vs: *acc_reg, acc: 24 }));
-                    body.push(Node::Inst(Inst::VSetVl {
-                        vl: 1,
-                        sew: Sew::E32,
-                        lmul: Lmul::M1,
-                        float: false,
-                    }));
-                    body.push(Node::Inst(Inst::VLoad {
-                        vd: 25,
-                        mem: MemRef::unit(bufs.acc, c_addr.clone()),
-                    }));
-                    body.push(Node::Inst(Inst::VBin {
-                        op: VBinOp::Add,
-                        vd: 24,
-                        vs1: 24,
-                        vs2: 25,
-                        widen: false,
-                    }));
-                    body.push(Node::Inst(Inst::VRequant {
-                        vd: 26,
-                        vs: 24,
-                        mult: rq.mult,
-                        shift: rq.shift,
-                        zp: rq.zp,
-                    }));
-                    body.push(Node::Inst(Inst::VStore {
-                        vs: 26,
-                        mem: MemRef::unit(bufs.out.unwrap(), c_addr),
-                    }));
-                    // back to element config for the next column's k loop
-                    body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
-                }
-                Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body })
-            };
-
-            if rows2 > 0 {
-                let rv = p.fresh_var();
-                let cols = emit_cols(&mut p, AddrExpr::var(rv, 2), true);
-                p.body.push(Node::Loop(LoopNode {
-                    var: rv,
-                    extent: rows2 as u32,
-                    unroll: 1,
-                    body: vec![cols],
-                }));
-            }
-            if m_tail > 0 {
-                let cols = emit_cols(&mut p, AddrExpr::constant((m - 1) as i64), false);
-                p.body.push(cols);
-            }
+            let out = bufs.out.unwrap();
+            emit_gemm_rowpair(&mut p, bufs.a, bufs.b, bufs.acc, out, m, n, k, rq, vlmax);
+        }
+        Op::Conv2d { dtype, requant, .. } => {
+            // convolve_s8: scalar im2col into the library's scratch arena,
+            // then the same nt_t row-pair GEMM core the conv kernel calls
+            // (this shared object is why the conv library function is the
+            // big one in `library_fn_bytes`).
+            let d = op.conv_dims().expect("conv dims");
+            let rq = requant.unwrap_or(Requant { mult: 1 << 14, shift: 15, zp: 0 });
+            let (m, n, k) = (d.pixels(), d.cout, d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(&mut p, bufs.a, col, dtype, d);
+            let out = bufs.out.unwrap();
+            emit_gemm_rowpair(&mut p, col, bufs.b, bufs.acc, out, m, n, k, rq, vlmax);
         }
         Op::DwConv { spatial, channels, taps, requant, .. } => {
             // Literal Algorithm-2 composition: load / macc / store per tap.
@@ -326,6 +367,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn conv2d_via_library_matches_reference() {
+        let rq = Requant { mult: 1 << 15, shift: 17, zp: 2 };
+        let op = Op::Conv2d {
+            h: 6,
+            w: 6,
+            cin: 3,
+            cout: 5,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dtype: DType::I8,
+            requant: Some(rq),
+        };
+        let d = op.conv_dims().unwrap();
+        let p = emit(&op, 256).unwrap();
+        let mut bufs = BufStore::functional(&p);
+        let xv: Vec<i8> = (0..6 * 6 * 3).map(|i| ((i * 29) % 255) as i8).collect();
+        let wv: Vec<i8> = (0..5 * d.k_col()).map(|i| ((i * 17) % 249) as i8).collect();
+        let bias: Vec<i32> = (0..d.pixels() * 5).map(|i| (i as i32 * 13) % 81 - 40).collect();
+        bufs.set_i8(0, &xv);
+        bufs.set_i8(1, &wv);
+        bufs.set_i32(2, &bias);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        let want: Vec<i8> = crate::tir::ref_conv2d_acc(d, &xv, &wv, &bias)
+            .into_iter()
+            .map(|a| crate::sim::requant_i64(a, rq.mult, rq.shift, rq.zp) as i8)
+            .collect();
+        assert_eq!(bufs.get_i8(3), &want[..]);
+    }
+
+    #[test]
+    fn conv2d_shares_the_conv_library_object_with_legacy_gemms() {
+        let conv = Op::square_conv2d(8, 8, 16, 3, 1, DType::I8);
+        let legacy = Op::Matmul {
+            m: 64,
+            n: 16,
+            k: 72,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
+        assert_eq!(library_fn_kind(&conv), "conv");
+        assert_eq!(library_fn_kind(&conv), library_fn_kind(&legacy));
+        assert_eq!(library_fn_bytes(&conv), library_fn_bytes(&legacy));
     }
 
     #[test]

@@ -98,6 +98,40 @@ pub fn emit(op: &Op) -> Option<VProgram> {
                 lanes: LANES,
             }));
         }
+        Op::Conv2d { dtype, requant, .. } => {
+            // Packed-SIMD kernels keep the library structure: scalar
+            // im2col, then the smaqa dot-product GEMM over the patches.
+            let d = op.conv_dims().expect("conv dims");
+            let (m, n, k) = (d.pixels(), d.cout, d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(&mut p, bufs.a, col, dtype, d);
+            let mv = p.fresh_var();
+            let nv = p.fresh_var();
+            let inner = vec![Node::Inst(Inst::PDotRun {
+                acc: MemRef::unit(bufs.acc, AddrExpr::var(mv, n as i64).plus(nv, 1)),
+                a: MemRef::unit(col, AddrExpr::var(mv, k as i64)),
+                b: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64)),
+                len: k as u32,
+                lanes: LANES,
+            })];
+            let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body: inner });
+            p.body.push(Node::Loop(LoopNode {
+                var: mv,
+                extent: m as u32,
+                unroll: 1,
+                body: vec![n_loop],
+            }));
+            if let Some(rq) = requant {
+                p.body.push(Node::Inst(Inst::SRequantRun {
+                    dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
+                    src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                    len: (m * n) as u32,
+                    mult: rq.mult,
+                    shift: rq.shift,
+                    zp: rq.zp,
+                }));
+            }
+        }
     }
     Some(p)
 }

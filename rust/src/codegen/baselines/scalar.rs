@@ -81,6 +81,40 @@ pub fn emit(op: &Op) -> VProgram {
                 dtype,
             }));
         }
+        Op::Conv2d { dtype, requant, .. } => {
+            // The C TVM emits for an unscheduled conv: scalar im2col
+            // packing, then the scalar GEMM over the patch matrix.
+            let d = op.conv_dims().expect("conv dims");
+            let (m, n, k) = (d.pixels(), d.cout, d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(&mut p, bufs.a, col, dtype, d);
+            let mv = p.fresh_var();
+            let nv = p.fresh_var();
+            let inner = vec![Node::Inst(Inst::SDotRun {
+                acc: MemRef::unit(bufs.acc, AddrExpr::var(mv, n as i64).plus(nv, 1)),
+                a: MemRef::unit(col, AddrExpr::var(mv, k as i64)),
+                b: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64)),
+                len: k as u32,
+                dtype,
+            })];
+            let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body: inner });
+            p.body.push(Node::Loop(LoopNode {
+                var: mv,
+                extent: m as u32,
+                unroll: 1,
+                body: vec![n_loop],
+            }));
+            if let Some(rq) = requant {
+                p.body.push(Node::Inst(Inst::SRequantRun {
+                    dst: MemRef::unit(bufs.out.unwrap(), AddrExpr::constant(0)),
+                    src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                    len: (m * n) as u32,
+                    mult: rq.mult,
+                    shift: rq.shift,
+                    zp: rq.zp,
+                }));
+            }
+        }
     }
     p
 }
@@ -117,6 +151,40 @@ mod tests {
                 assert_eq!(got[i * n + j], want, "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn scalar_conv2d_i8_matches_reference() {
+        // 7x6 input, 3x2 kernel, stride 2 -> 3x3 output.
+        let rq = Requant { mult: 1 << 16, shift: 18, zp: 1 };
+        let op = Op::Conv2d {
+            h: 7,
+            w: 6,
+            cin: 3,
+            cout: 4,
+            kh: 3,
+            kw: 2,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(rq),
+        };
+        let d = op.conv_dims().unwrap();
+        assert_eq!((d.h_out(), d.w_out()), (3, 3));
+        let p = emit(&op);
+        let mut bufs = BufStore::functional(&p);
+        let xv: Vec<i8> = (0..7 * 6 * 3).map(|i| ((i * 23) % 255) as i8).collect();
+        let wv: Vec<i8> = (0..4 * d.k_col()).map(|i| ((i * 11) % 253) as i8).collect();
+        let bias: Vec<i32> = (0..9 * 4).map(|i| (i as i32 * 17) % 91 - 45).collect();
+        bufs.set_i8(0, &xv);
+        bufs.set_i8(1, &wv);
+        bufs.set_i32(2, &bias);
+        let r = execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        assert_eq!(r.trace.vector_total(), 0, "scalar conv must not vectorize");
+        let want: Vec<i8> = crate::tir::ref_conv2d_acc(d, &xv, &wv, &bias)
+            .into_iter()
+            .map(|a| crate::sim::requant_i64(a, rq.mult, rq.shift, rq.zp) as i8)
+            .collect();
+        assert_eq!(bufs.get_i8(3), &want[..]);
     }
 
     #[test]

@@ -19,7 +19,16 @@
 //! DwConv:  buf0 X[spatial,taps,ch]  buf1 W[taps,ch]
 //!          buf2 ACC[spatial,ch]     buf3 OUT i8 (int8 only)
 //! Eltwise: buf0 a  buf1 b  buf2 y (y += a*b)
+//! Conv2d:  buf0 X[h,w,cin] (NHWC, pre-padded)
+//!          buf1 W[cout,kh,kw,cin] (cout-major = GEMM [n,k] layout)
+//!          buf2 ACC[h_out*w_out,cout] (pre-filled with bias)
+//!          buf3 OUT i8 (int8 only)
 //! ```
+//!
+//! Generators that lower Conv2d via im2col append their private patch
+//! scratch buffer *after* the conventional ones, so the input/output
+//! buffer indices stay comparable across scenarios (the differential
+//! harness depends on this).
 
 pub mod baselines;
 pub mod ours;
@@ -27,8 +36,8 @@ pub mod size;
 
 pub use size::CodeSizeModel;
 
-use crate::sim::{BufId, VProgram};
-use crate::tir::{DType, Op, Schedule};
+use crate::sim::{AddrExpr, BufId, Inst, LoopNode, MemRef, Node, VProgram};
+use crate::tir::{ConvDims, DType, Op, Schedule};
 
 /// A measurement scenario of the paper's evaluation section.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,7 +102,47 @@ pub fn declare_buffers(p: &mut VProgram, op: &Op) -> ProgramBufs {
             let acc = p.add_buffer("y", *dtype, *len);
             ProgramBufs { a, b, acc, out: None }
         }
+        Op::Conv2d { h, w, cin, cout, kh, kw, dtype, requant, .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            let a = p.add_buffer("X", *dtype, h * w * cin);
+            let b = p.add_buffer("W", *dtype, cout * kh * kw * cin);
+            let acc = p.add_buffer("ACC", dtype.accumulator(), d.pixels() * cout);
+            let out = requant.map(|_| p.add_buffer("OUT", DType::I8, d.pixels() * cout));
+            ProgramBufs { a, b, acc, out }
+        }
     }
+}
+
+/// Append the im2col packing loops to `p`: for every output pixel
+/// `(oy, ox)` and kernel row `ky`, one unit-stride copy of the `kw*cin`
+/// segment `X[(oy*s+ky)*w*cin + ox*s*cin ..]` into the patch row
+/// `COL[(oy*w_out+ox)*k_col + ky*kw*cin ..]` — the scalar packing loop
+/// TVM's conv lowering and muRISCV-NN's `convolve_s8` both generate.
+/// Shared by every backend that takes the im2col route, so the packing
+/// cost the tuner weighs against the direct lowering is scenario-neutral.
+pub fn emit_im2col(p: &mut VProgram, x: BufId, col: BufId, dtype: DType, d: ConvDims) {
+    let (h_out, w_out) = (d.h_out(), d.w_out());
+    let seg = d.k_row();
+    let oy = p.fresh_var();
+    let ox = p.fresh_var();
+    let ky = p.fresh_var();
+    let src = AddrExpr::var(oy, (d.stride * d.w * d.cin) as i64)
+        .plus(ky, (d.w * d.cin) as i64)
+        .plus(ox, (d.stride * d.cin) as i64);
+    let dst = AddrExpr::var(oy, (w_out * d.k_col()) as i64)
+        .plus(ox, d.k_col() as i64)
+        .plus(ky, seg as i64);
+    let copy = Node::Inst(Inst::SCopyRun {
+        dst: MemRef::unit(col, dst),
+        src: MemRef::unit(x, src),
+        len: seg as u32,
+        dtype,
+    });
+    let ky_loop = Node::Loop(LoopNode { var: ky, extent: d.kh as u32, unroll: 1, body: vec![copy] });
+    let ox_loop =
+        Node::Loop(LoopNode { var: ox, extent: w_out as u32, unroll: 1, body: vec![ky_loop] });
+    p.body
+        .push(Node::Loop(LoopNode { var: oy, extent: h_out as u32, unroll: 1, body: vec![ox_loop] }));
 }
 
 /// Generate the program for `op` under `scenario` on a SoC with `vlen`.
@@ -143,5 +192,59 @@ mod tests {
         let bufs = declare_buffers(&mut p, &op);
         assert!(bufs.out.is_none());
         assert_eq!(p.buffers[bufs.acc].dtype, DType::F32);
+    }
+
+    #[test]
+    fn buffer_convention_conv2d() {
+        let op = Op::square_conv2d(4, 2, 3, 3, 1, DType::I8); // input 6x6x2
+        let mut p = VProgram::new("t");
+        let bufs = declare_buffers(&mut p, &op);
+        assert_eq!(p.buffers[bufs.a].len, 6 * 6 * 2);
+        assert_eq!(p.buffers[bufs.b].len, 3 * 3 * 3 * 2);
+        assert_eq!(p.buffers[bufs.acc].len, 16 * 3);
+        assert_eq!(p.buffers[bufs.acc].dtype, DType::I32);
+        assert_eq!(p.buffers[bufs.out.unwrap()].dtype, DType::I8);
+    }
+
+    /// The packing loops materialize exactly the patch matrix the im2col
+    /// GEMM view assumes, stride included.
+    #[test]
+    fn im2col_packs_strided_patches_exactly() {
+        use crate::sim::{execute, BufStore, Mode, SocConfig};
+        let op = Op::Conv2d {
+            h: 5,
+            w: 4,
+            cin: 2,
+            cout: 1,
+            kh: 2,
+            kw: 2,
+            stride: 2,
+            dtype: DType::I8,
+            requant: None,
+        };
+        let d = op.conv_dims().unwrap();
+        assert_eq!((d.h_out(), d.w_out()), (2, 2));
+        let mut p = VProgram::new("im2col-test");
+        let bufs = declare_buffers(&mut p, &op);
+        let col = p.add_buffer("COL", DType::I8, d.pixels() * d.k_col());
+        emit_im2col(&mut p, bufs.a, col, DType::I8, d);
+        let mut store = BufStore::functional(&p);
+        let xv: Vec<i8> = (0..5 * 4 * 2).map(|i| i as i8).collect();
+        store.set_i8(bufs.a, &xv);
+        execute(&SocConfig::saturn(256), &p, &mut store, Mode::Functional, true);
+        let got = store.get_i8(col);
+        for oy in 0..2usize {
+            for ox in 0..2usize {
+                for ky in 0..2usize {
+                    for kx in 0..2usize {
+                        for ci in 0..2usize {
+                            let want = xv[((oy * 2 + ky) * 4 + ox * 2 + kx) * 2 + ci];
+                            let idx = (oy * 2 + ox) * 8 + (ky * 2 + kx) * 2 + ci;
+                            assert_eq!(got[idx], want, "oy={oy} ox={ox} ky={ky} kx={kx} ci={ci}");
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -18,12 +18,13 @@
 //! the generated C does.
 
 use crate::isa::{Lmul, Sew};
-use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram};
+use crate::sim::{AddrExpr, BufId, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram};
 use crate::tir::{
-    DType, DwConvSchedule, EltwiseSchedule, LoopOrder, MatmulSchedule, Op, Requant, Schedule,
+    Conv2dSchedule, ConvDims, DType, DirectConvSchedule, DwConvSchedule, EltwiseSchedule,
+    LoopOrder, MatmulSchedule, Op, Requant, Schedule,
 };
 
-use super::{declare_buffers, ProgramBufs};
+use super::declare_buffers;
 
 /// Code-size model for the tensorized path. TVM emits each *tensor
 /// intrinsic variant* as one standalone C function shared by every call
@@ -35,14 +36,25 @@ pub const INTRINSIC_FN_BYTES: u64 = 360;
 pub const LAYER_GLUE_BYTES: u64 = 224;
 
 /// Deduplication key of the intrinsic variant a schedule instantiates.
+/// A Conv2d lowered via im2col calls the *same* standalone vmatmul
+/// intrinsic function a plain matmul with that variant does, so the two
+/// share one key (and one function in the binary); the direct lowering is
+/// its own function family.
 pub fn variant_key(op: &Op, schedule: &Schedule) -> String {
     let d = op.dtype().name();
     match schedule {
-        Schedule::Matmul(s) => {
+        Schedule::Matmul(s) | Schedule::Conv2d(Conv2dSchedule::Im2col(s)) => {
             format!("vmatmul-{}-vl{}-j{}-u{}", d, s.intrin.vl, s.intrin.j, s.unroll)
         }
         Schedule::DwConv(s) => format!("vmacc-dw-{}-vl{}-h{}", d, s.vl, s.unroll_taps),
         Schedule::Eltwise(s) => format!("vmacc-ew-{}-vl{}-u{}", d, s.vl, s.unroll),
+        // Like the vmatmul key, the unroll factor is part of the variant:
+        // it is baked into the emitted function body, so two schedules
+        // differing only in unroll are two functions in the binary.
+        Schedule::Conv2d(Conv2dSchedule::Direct(s)) => format!(
+            "vconv-direct-{}-vl{}-j{}-u{}-h{}",
+            d, s.intrin.vl, s.intrin.j, s.unroll, s.ky_hoist
+        ),
     }
 }
 
@@ -57,16 +69,31 @@ pub fn emit(op: &Op, schedule: &Schedule, vlen: u32) -> VProgram {
             emit_dwconv(*spatial, *channels, *taps, *dtype, *requant, s, vlen)
         }
         (Op::Eltwise { len, dtype }, Schedule::Eltwise(s)) => emit_eltwise(*len, *dtype, s),
+        (Op::Conv2d { dtype, requant, .. }, Schedule::Conv2d(s)) => {
+            emit_conv2d(op.conv_dims().expect("conv dims"), *dtype, *requant, s, vlen)
+        }
         (op, s) => panic!("schedule kind mismatch: {op} vs {}", s.describe()),
     }
 }
 
+/// Largest divisor of `extent` not exceeding `cap`. Tiling factors must
+/// divide their extents or chunks get dropped: the space programs only
+/// produce divisors, but a hand-edited schedule (or a tampered database
+/// record) must not silently compute a wrong result in release builds.
+fn largest_divisor(extent: usize, cap: u32) -> u32 {
+    (1..=cap.max(1).min(extent.max(1) as u32))
+        .rev()
+        .find(|&c| extent % c as usize == 0)
+        .unwrap_or(1)
+}
+
 struct MatmulCtx<'a> {
-    bufs: ProgramBufs,
+    /// The C accumulator buffer.
+    acc: BufId,
     /// Buffer providing the "A row" operand (B when transposed).
-    a_buf: crate::sim::BufId,
+    a_buf: BufId,
     /// Buffer providing the "B[J,VL]" operand (A when transposed).
-    b_buf: crate::sim::BufId,
+    b_buf: BufId,
     /// Original n (C row pitch).
     n_cols: usize,
     k_total: usize,
@@ -148,7 +175,7 @@ fn intrinsic_call(
         }));
         nodes.push(Node::Inst(Inst::VLoad {
             vd: 26,
-            mem: MemRef::unit(ctx.bufs.acc, c_addr.clone()),
+            mem: MemRef::unit(ctx.acc, c_addr.clone()),
         }));
         nodes.push(Node::Inst(Inst::VBin {
             op: crate::isa::VBinOp::Add,
@@ -157,7 +184,7 @@ fn intrinsic_call(
             vs2: 26,
             widen: false,
         }));
-        nodes.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(ctx.bufs.acc, c_addr) }));
+        nodes.push(Node::Inst(Inst::VStore { vs: 25, mem: MemRef::unit(ctx.acc, c_addr) }));
         return nodes;
     }
 
@@ -198,7 +225,7 @@ fn intrinsic_call(
 
     // Accumulate with C and store the tile once (Alg. 1 lines 20-22).
     let c_addr = ctx.c_base(row, n_base);
-    let c_mem = MemRef::strided(ctx.bufs.acc, c_addr, ctx.c_stride);
+    let c_mem = MemRef::strided(ctx.acc, c_addr, ctx.c_stride);
     nodes.push(Node::Inst(Inst::VSetVl {
         vl: j_count,
         sew: ctx.acc_sew(),
@@ -245,12 +272,35 @@ fn emit_matmul(
 ) -> VProgram {
     let mut p = VProgram::new(format!("ours-matmul-{m}x{n}x{k}-{}", dtype.name()));
     let bufs = declare_buffers(&mut p, &Op::Matmul { m, n, k, dtype, requant });
+    emit_matmul_nest(&mut p, bufs.a, bufs.b, bufs.acc, m, n, k, dtype, sched);
+    if let Some(rq) = requant {
+        emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), m, n, rq, vlen);
+    }
+    p
+}
+
+/// Append the Algorithm-1 GEMM loop nest `ACC[m,n] += A[m,k] x B[n,k]` to
+/// `p`'s body. `a`/`b` are the logical operand buffers — the schedule's
+/// transposed mapping swaps their roles internally, and the conv-as-im2col
+/// path passes its materialized patch buffer as `a`.
+#[allow(clippy::too_many_arguments)]
+fn emit_matmul_nest(
+    p: &mut VProgram,
+    a: BufId,
+    b: BufId,
+    acc: BufId,
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype: DType,
+    sched: &MatmulSchedule,
+) {
     // Transposed tensorization swaps the roles of m and n (and of A and B).
     let (m_e, n_e) = if sched.transpose { (n, m) } else { (m, n) };
     let ctx = MatmulCtx {
-        bufs,
-        a_buf: if sched.transpose { bufs.b } else { bufs.a },
-        b_buf: if sched.transpose { bufs.a } else { bufs.b },
+        acc,
+        a_buf: if sched.transpose { b } else { a },
+        b_buf: if sched.transpose { a } else { b },
         n_cols: n,
         k_total: k,
         c_stride: if sched.transpose { n as i64 } else { 1 },
@@ -264,17 +314,6 @@ fn emit_matmul(
     let k_tail = (k % vl as usize) as u32;
     let n_full = n_e / j as usize;
     let n_tail = (n_e % j as usize) as u32;
-    // Tiling factors must divide their extents or chunks get dropped. The
-    // space programs only produce divisors, but a hand-edited schedule (or
-    // a database record whose stored domain was tampered with) must not
-    // silently compute a wrong result in release builds — clamp to the
-    // largest not-exceeding divisor instead.
-    let largest_divisor = |extent: usize, cap: u32| -> u32 {
-        (1..=cap.max(1).min(extent.max(1) as u32))
-            .rev()
-            .find(|&c| extent % c as usize == 0)
-            .unwrap_or(1)
-    };
     let mi = largest_divisor(m_e, sched.mi);
     debug_assert_eq!(mi, sched.mi.max(1).min(m_e as u32), "mi must divide the row extent");
     let m_outer = m_e / mi as usize;
@@ -386,7 +425,7 @@ fn emit_matmul(
     let axes = order_axes(sched.order);
     let body = if ks <= 1 {
         gen(
-            &mut p,
+            p,
             &ctx,
             &axes,
             AddrExpr::constant(0),
@@ -407,7 +446,7 @@ fn emit_matmul(
         let kbv = p.fresh_var();
         let block_base = AddrExpr::var(kbv, per as i64 * vl as i64);
         let inner = gen(
-            &mut p,
+            p,
             &ctx,
             &axes,
             AddrExpr::constant(0),
@@ -421,7 +460,7 @@ fn emit_matmul(
             vec![Node::Loop(LoopNode { var: kbv, extent: ks, unroll: 1, body: inner })];
         if k_tail > 0 {
             nodes.extend(gen(
-                &mut p,
+                p,
                 &ctx,
                 &axes,
                 AddrExpr::constant(0),
@@ -434,12 +473,7 @@ fn emit_matmul(
         }
         nodes
     };
-    p.body = body;
-
-    if let Some(rq) = requant {
-        emit_requant_epilogue(&mut p, ctx.bufs.acc, ctx.bufs.out.unwrap(), m, n, rq, vlen);
-    }
-    p
+    p.body.extend(body);
 }
 
 /// Vectorized requantization pass ACC (i32) -> OUT (i8), row by row.
@@ -484,6 +518,409 @@ pub fn emit_requant_epilogue(
     }
     p.body
         .push(Node::Loop(LoopNode { var: rv, extent: rows as u32, unroll: 1, body }));
+}
+
+/// Emit the program for a first-class Conv2d under the chosen lowering
+/// strategy — the two genuinely different sub-programs of the conv space.
+fn emit_conv2d(
+    dims: ConvDims,
+    dtype: DType,
+    requant: Option<Requant>,
+    sched: &Conv2dSchedule,
+    vlen: u32,
+) -> VProgram {
+    let ConvDims { h, w, cin, cout, kh, kw, stride } = dims;
+    match sched {
+        Conv2dSchedule::Im2col(ms) => {
+            // Materialize patches, then reuse the Algorithm-1 GEMM nest
+            // verbatim with COL as the A operand: long contiguous k
+            // (= cin*kh*kw) at the price of the scalar packing pass.
+            let mut p = VProgram::new(format!(
+                "ours-conv2d-im2col-{h}x{w}x{cin}-{cout}x{kh}x{kw}s{stride}-{}",
+                dtype.name()
+            ));
+            let bufs = declare_buffers(
+                &mut p,
+                &Op::Conv2d { h, w, cin, cout, kh, kw, stride, dtype, requant },
+            );
+            let (m, k) = (dims.pixels(), dims.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::emit_im2col(&mut p, bufs.a, col, dtype, dims);
+            emit_matmul_nest(&mut p, col, bufs.b, bufs.acc, m, cout, k, dtype, ms);
+            if let Some(rq) = requant {
+                emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), m, cout, rq, vlen);
+            }
+            p
+        }
+        Conv2dSchedule::Direct(ds) => emit_conv2d_direct(dims, dtype, requant, ds, vlen),
+    }
+}
+
+/// Shared state of the direct-convolution tile emitters.
+struct DirectCtx<'a> {
+    x: BufId,
+    wgt: BufId,
+    acc: BufId,
+    dims: ConvDims,
+    dtype: DType,
+    sched: &'a DirectConvSchedule,
+    /// Effective chunk VL over one `kw*cin` row segment.
+    vl: u32,
+    /// Full chunks / tail elements of a row segment.
+    k_full: usize,
+    k_tail: u32,
+    /// Output-row loop variable.
+    oy: crate::sim::VarId,
+    /// Output-column expression (`wo*wi + wiv`).
+    ox: AddrExpr,
+}
+
+impl DirectCtx<'_> {
+    fn sew(&self) -> Sew {
+        self.dtype.sew()
+    }
+
+    fn acc_sew(&self) -> Sew {
+        self.dtype.accumulator().sew()
+    }
+
+    fn is_float(&self) -> bool {
+        self.dtype.is_float()
+    }
+
+    fn widen(&self) -> bool {
+        self.dtype == DType::I8
+    }
+
+    fn lmul(&self) -> Lmul {
+        Lmul::from_factor(self.sched.intrin.lmul)
+    }
+
+    fn zero(&self) -> ScalarSrc {
+        if self.is_float() {
+            ScalarSrc::F(0.0)
+        } else {
+            ScalarSrc::I(0)
+        }
+    }
+
+    /// X row-segment base: `((oy*s + ky)*w + ox*s)*cin + k_off` —
+    /// unit-stride over `(kx, ci)` thanks to the NHWC layout.
+    fn x_addr(&self, ky: crate::sim::VarId, k_off: &AddrExpr) -> AddrExpr {
+        let d = &self.dims;
+        AddrExpr::var(self.oy, (d.stride * d.w * d.cin) as i64)
+            .plus(ky, (d.w * d.cin) as i64)
+            .plus_expr(&self.ox.clone().scaled((d.stride * d.cin) as i64))
+            .plus_expr(k_off)
+    }
+
+    /// W row base for output channel `n_base + jv` at kernel row `ky`.
+    fn w_addr(
+        &self,
+        n_base: &AddrExpr,
+        jv: crate::sim::VarId,
+        ky: crate::sim::VarId,
+        k_off: &AddrExpr,
+    ) -> AddrExpr {
+        let d = &self.dims;
+        n_base
+            .clone()
+            .scaled(d.k_col() as i64)
+            .plus(jv, d.k_col() as i64)
+            .plus(ky, d.k_row() as i64)
+            .plus_expr(k_off)
+    }
+
+    /// ACC tile for the current pixel at channel base `n_base`
+    /// (contiguous over the J lanes).
+    fn c_mem(&self, n_base: &AddrExpr) -> MemRef {
+        let d = &self.dims;
+        let addr = AddrExpr::var(self.oy, (d.w_out() * d.cout) as i64)
+            .plus_expr(&self.ox.clone().scaled(d.cout as i64))
+            .plus_expr(n_base);
+        MemRef::unit(self.acc, addr)
+    }
+}
+
+/// One J-wide cout tile, memory-accumulating variant (`ky_hoist = false`):
+/// per `(ky, VL-chunk)` an Algorithm-1-shaped partial-dot block whose
+/// J-wide result is added into the ACC tile — instruction-for-instruction
+/// the im2col GEMM's k-chunk body, minus the patch materialization.
+fn direct_tile_mem(
+    p: &mut VProgram,
+    c: &DirectCtx<'_>,
+    n_base: &AddrExpr,
+    j_count: u32,
+) -> Vec<Node> {
+    let ky = p.fresh_var();
+    let chunk = |p: &mut VProgram, out: &mut Vec<Node>, k_off: AddrExpr, vl_cur: u32| {
+        out.push(Node::Inst(Inst::VSetVl {
+            vl: vl_cur,
+            sew: c.sew(),
+            lmul: c.lmul(),
+            float: c.is_float(),
+        }));
+        // The X segment is loaded once and reused across the J channels.
+        out.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(c.x, c.x_addr(ky, &k_off)) }));
+        out.push(Node::Inst(Inst::VSplat {
+            vd: 25,
+            value: c.zero(),
+            vl_override: Some(j_count),
+        }));
+        let jv = p.fresh_var();
+        let body = vec![
+            Node::Inst(Inst::VSetVl {
+                vl: vl_cur,
+                sew: c.sew(),
+                lmul: c.lmul(),
+                float: c.is_float(),
+            }),
+            Node::Inst(Inst::VSplat { vd: 24, value: c.zero(), vl_override: Some(1) }),
+            Node::Inst(Inst::VLoad {
+                vd: 8,
+                mem: MemRef::unit(c.wgt, c.w_addr(n_base, jv, ky, &k_off)),
+            }),
+            Node::Inst(Inst::VBin {
+                op: crate::isa::VBinOp::Mul,
+                vd: 16,
+                vs1: 0,
+                vs2: 8,
+                widen: c.widen(),
+            }),
+            Node::Inst(Inst::VRedSum { vd: 24, vs: 16, acc: 24 }),
+            Node::Inst(Inst::VSetVl {
+                vl: j_count,
+                sew: c.acc_sew(),
+                lmul: Lmul::M1,
+                float: c.is_float(),
+            }),
+            Node::Inst(Inst::VSlideInsert { vd: 25, vs: 24, pos: AddrExpr::var(jv, 1) }),
+        ];
+        out.push(Node::Loop(LoopNode {
+            var: jv,
+            extent: j_count,
+            unroll: c.sched.unroll.max(1).min(j_count.max(1)),
+            body,
+        }));
+        let c_mem = c.c_mem(n_base);
+        out.push(Node::Inst(Inst::VSetVl {
+            vl: j_count,
+            sew: c.acc_sew(),
+            lmul: Lmul::M1,
+            float: c.is_float(),
+        }));
+        out.push(Node::Inst(Inst::VLoad { vd: 26, mem: c_mem.clone() }));
+        out.push(Node::Inst(Inst::VBin {
+            op: crate::isa::VBinOp::Add,
+            vd: 25,
+            vs1: 25,
+            vs2: 26,
+            widen: false,
+        }));
+        out.push(Node::Inst(Inst::VStore { vs: 25, mem: c_mem }));
+    };
+    let mut ky_body: Vec<Node> = Vec::new();
+    if c.k_full > 0 {
+        let kc = p.fresh_var();
+        let mut inner = Vec::new();
+        chunk(p, &mut inner, AddrExpr::var(kc, c.vl as i64), c.vl);
+        ky_body.push(Node::Loop(LoopNode {
+            var: kc,
+            extent: c.k_full as u32,
+            unroll: 1,
+            body: inner,
+        }));
+    }
+    if c.k_tail > 0 {
+        chunk(p, &mut ky_body, AddrExpr::constant(c.k_full as i64 * c.vl as i64), c.k_tail);
+    }
+    vec![Node::Loop(LoopNode {
+        var: ky,
+        extent: c.dims.kh as u32,
+        unroll: 1,
+        body: ky_body,
+    })]
+}
+
+/// Register-hoisting tile variant (`ky_hoist = true`): the scalar
+/// accumulator stays live across the whole `kh*kw*cin` reduction of one
+/// output element, so ACC is touched exactly once per tile — at the price
+/// of re-loading the X segment per output channel (the dwconv
+/// `unroll_taps` tradeoff, transplanted to Algorithm 1).
+fn direct_tile_hoisted(
+    p: &mut VProgram,
+    c: &DirectCtx<'_>,
+    n_base: &AddrExpr,
+    j_count: u32,
+) -> Vec<Node> {
+    let mut nodes =
+        vec![Node::Inst(Inst::VSplat { vd: 25, value: c.zero(), vl_override: Some(j_count) })];
+    let jv = p.fresh_var();
+    let ky = p.fresh_var();
+    let chunk = |out: &mut Vec<Node>, k_off: AddrExpr, vl_cur: u32| {
+        out.push(Node::Inst(Inst::VSetVl {
+            vl: vl_cur,
+            sew: c.sew(),
+            lmul: c.lmul(),
+            float: c.is_float(),
+        }));
+        out.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(c.x, c.x_addr(ky, &k_off)) }));
+        out.push(Node::Inst(Inst::VLoad {
+            vd: 8,
+            mem: MemRef::unit(c.wgt, c.w_addr(n_base, jv, ky, &k_off)),
+        }));
+        out.push(Node::Inst(Inst::VBin {
+            op: crate::isa::VBinOp::Mul,
+            vd: 16,
+            vs1: 0,
+            vs2: 8,
+            widen: c.widen(),
+        }));
+        out.push(Node::Inst(Inst::VRedSum { vd: 24, vs: 16, acc: 24 }));
+    };
+    let mut red: Vec<Node> = Vec::new();
+    if c.k_full > 0 {
+        let kc = p.fresh_var();
+        let mut inner = Vec::new();
+        chunk(&mut inner, AddrExpr::var(kc, c.vl as i64), c.vl);
+        red.push(Node::Loop(LoopNode { var: kc, extent: c.k_full as u32, unroll: 1, body: inner }));
+    }
+    if c.k_tail > 0 {
+        chunk(&mut red, AddrExpr::constant(c.k_full as i64 * c.vl as i64), c.k_tail);
+    }
+    // Hoisting fully unrolls the ky loop, exactly like the dwconv
+    // accumulator hoist unrolls its tap loop.
+    let ky_loop = Node::Loop(LoopNode {
+        var: ky,
+        extent: c.dims.kh as u32,
+        unroll: c.dims.kh as u32,
+        body: red,
+    });
+    let j_body = vec![
+        Node::Inst(Inst::VSplat { vd: 24, value: c.zero(), vl_override: Some(1) }),
+        ky_loop,
+        Node::Inst(Inst::VSetVl {
+            vl: j_count,
+            sew: c.acc_sew(),
+            lmul: Lmul::M1,
+            float: c.is_float(),
+        }),
+        Node::Inst(Inst::VSlideInsert { vd: 25, vs: 24, pos: AddrExpr::var(jv, 1) }),
+    ];
+    nodes.push(Node::Loop(LoopNode {
+        var: jv,
+        extent: j_count,
+        unroll: c.sched.unroll.max(1).min(j_count.max(1)),
+        body: j_body,
+    }));
+    let c_mem = c.c_mem(n_base);
+    nodes.push(Node::Inst(Inst::VSetVl {
+        vl: j_count,
+        sew: c.acc_sew(),
+        lmul: Lmul::M1,
+        float: c.is_float(),
+    }));
+    nodes.push(Node::Inst(Inst::VLoad { vd: 26, mem: c_mem.clone() }));
+    nodes.push(Node::Inst(Inst::VBin {
+        op: crate::isa::VBinOp::Add,
+        vd: 25,
+        vs1: 25,
+        vs2: 26,
+        widen: false,
+    }));
+    nodes.push(Node::Inst(Inst::VStore { vs: 25, mem: c_mem }));
+    nodes
+}
+
+/// Direct convolution: an Algorithm-1-style register-tiled kernel over the
+/// conv's native loops — no patch buffer, the reduction runs over `kh`
+/// unit-stride row segments of `kw*cin` elements, the J-wide output tile
+/// blocks the output channels, and the output-column loop is tiled by
+/// `wi`. The im2col-vs-direct tradeoff the tuner explores is exactly the
+/// one 2311.05284 measures on RVV: direct skips the whole scalar packing
+/// pass (and COL traffic) but its reduction chunks are bounded by
+/// `kw*cin` instead of `cin*kh*kw`, so the better choice shifts with
+/// VLEN and layer shape.
+fn emit_conv2d_direct(
+    dims: ConvDims,
+    dtype: DType,
+    requant: Option<Requant>,
+    sched: &DirectConvSchedule,
+    vlen: u32,
+) -> VProgram {
+    let ConvDims { h, w, cin, cout, kh, kw, stride } = dims;
+    let mut p = VProgram::new(format!(
+        "ours-conv2d-direct-{h}x{w}x{cin}-{cout}x{kh}x{kw}s{stride}-{}",
+        dtype.name()
+    ));
+    let bufs = declare_buffers(
+        &mut p,
+        &Op::Conv2d { h, w, cin, cout, kh, kw, stride, dtype, requant },
+    );
+    let k_row = dims.k_row();
+    let vl = sched.intrin.vl.min(k_row as u32).max(1);
+    let j = sched.intrin.j.min(cout as u32).max(1);
+    let (h_out, w_out) = (dims.h_out(), dims.w_out());
+    let wi = largest_divisor(w_out, sched.wi);
+    let w_outer = w_out / wi as usize;
+    let n_full = cout / j as usize;
+    let n_tail = (cout % j as usize) as u32;
+
+    let oy = p.fresh_var();
+    let wo = p.fresh_var();
+    let wiv = p.fresh_var();
+    let ctx = DirectCtx {
+        x: bufs.a,
+        wgt: bufs.b,
+        acc: bufs.acc,
+        dims,
+        dtype,
+        sched,
+        vl,
+        k_full: k_row / vl as usize,
+        k_tail: (k_row % vl as usize) as u32,
+        oy,
+        ox: AddrExpr::var(wo, wi as i64).plus(wiv, 1),
+    };
+
+    let mut tiles: Vec<Node> = Vec::new();
+    if n_full > 0 {
+        let nv = p.fresh_var();
+        let n_base = AddrExpr::var(nv, j as i64);
+        let body = if sched.ky_hoist {
+            direct_tile_hoisted(&mut p, &ctx, &n_base, j)
+        } else {
+            direct_tile_mem(&mut p, &ctx, &n_base, j)
+        };
+        tiles.push(Node::Loop(LoopNode { var: nv, extent: n_full as u32, unroll: 1, body }));
+    }
+    if n_tail > 0 {
+        let n_base = AddrExpr::constant(n_full as i64 * j as i64);
+        if sched.ky_hoist {
+            tiles.extend(direct_tile_hoisted(&mut p, &ctx, &n_base, n_tail));
+        } else {
+            tiles.extend(direct_tile_mem(&mut p, &ctx, &n_base, n_tail));
+        }
+    }
+    let wi_loop = Node::Loop(LoopNode {
+        var: wiv,
+        extent: wi,
+        unroll: sched.unroll.max(1).min(wi.max(1)),
+        body: tiles,
+    });
+    let wo_loop =
+        Node::Loop(LoopNode { var: wo, extent: w_outer as u32, unroll: 1, body: vec![wi_loop] });
+    p.body.push(Node::Loop(LoopNode {
+        var: oy,
+        extent: h_out as u32,
+        unroll: 1,
+        body: vec![wo_loop],
+    }));
+
+    if let Some(rq) = requant {
+        emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), h_out * w_out, cout, rq, vlen);
+    }
+    p
 }
 
 fn emit_dwconv(
@@ -901,6 +1338,226 @@ mod tests {
             let want = yv[i] + av[i] * bv[i];
             assert!((got[i] - want).abs() < 1e-4, "i={i}");
         }
+    }
+
+    use crate::tir::ref_conv2d_acc;
+
+    fn run_i8_conv2d(op: &Op, sched: &Schedule, vlen: u32) -> (Vec<i8>, Vec<i8>) {
+        let d = op.conv_dims().unwrap();
+        let rq = match op {
+            Op::Conv2d { requant: Some(rq), .. } => *rq,
+            _ => panic!("i8 conv test needs requant"),
+        };
+        let p = emit(op, sched, vlen);
+        let mut bufs = BufStore::functional(&p);
+        let xv: Vec<i8> = (0..d.h * d.w * d.cin).map(|i| ((i * 31 + 7) % 255) as i8).collect();
+        let wv: Vec<i8> = (0..d.cout * d.k_col()).map(|i| ((i * 13 + 3) % 251) as i8).collect();
+        let bias: Vec<i32> = (0..d.pixels() * d.cout).map(|i| (i as i32 % 89) - 44).collect();
+        bufs.set_i8(0, &xv);
+        bufs.set_i8(1, &wv);
+        bufs.set_i32(2, &bias);
+        execute(&SocConfig::saturn(vlen), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_i8(3).to_vec();
+        let want: Vec<i8> = ref_conv2d_acc(d, &xv, &wv, &bias)
+            .into_iter()
+            .map(|a| crate::sim::requant_i64(a, rq.mult, rq.shift, rq.zp) as i8)
+            .collect();
+        (got, want)
+    }
+
+    /// The im2col lowering must be exact for every loop order, with k/n
+    /// tails and a non-unit stride.
+    #[test]
+    fn conv2d_im2col_is_exact() {
+        // 9x7 input, 3x3 kernel, stride 2 -> 4x3 output; k_col = 45.
+        let op = Op::Conv2d {
+            h: 9,
+            w: 7,
+            cin: 5,
+            cout: 6,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(Requant { mult: 1 << 17, shift: 19, zp: 2 }),
+        };
+        for order in LoopOrder::ALL {
+            for transpose in [false, true] {
+                let sched = Schedule::Conv2d(Conv2dSchedule::Im2col(MatmulSchedule {
+                    intrin: IntrinChoice { vl: 16, j: if transpose { 4 } else { 2 }, lmul: 8 },
+                    mi: if transpose { 2 } else { 3 },
+                    order,
+                    unroll: 2,
+                    transpose,
+                    ks: 1,
+                }));
+                let (got, want) = run_i8_conv2d(&op, &sched, 256);
+                assert_eq!(got, want, "order {} transpose {transpose}", order.name());
+            }
+        }
+    }
+
+    /// Both direct-tile variants must be exact, including VL chunk tails
+    /// (vl does not divide kw*cin), cout tile tails (j does not divide
+    /// cout), wi column blocking, and a non-unit stride.
+    #[test]
+    fn conv2d_direct_is_exact() {
+        let op = Op::Conv2d {
+            h: 9,
+            w: 9,
+            cin: 5,
+            cout: 7,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(Requant { mult: 1 << 16, shift: 18, zp: -3 }),
+        };
+        for hoist in [false, true] {
+            for (vl, j, wi) in [(8u32, 3u32, 2u32), (15, 1, 4), (4, 7, 1)] {
+                let sched = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+                    intrin: IntrinChoice { vl, j, lmul: 8 },
+                    wi,
+                    unroll: 2,
+                    ky_hoist: hoist,
+                }));
+                let (got, want) = run_i8_conv2d(&op, &sched, 256);
+                assert_eq!(got, want, "hoist {hoist} vl {vl} j {j} wi {wi}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_direct_f32_close_to_reference() {
+        let op = Op::Conv2d {
+            h: 6,
+            w: 6,
+            cin: 4,
+            cout: 3,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dtype: DType::F32,
+            requant: None,
+        };
+        let d = op.conv_dims().unwrap();
+        let sched = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+            intrin: IntrinChoice { vl: 8, j: 3, lmul: 8 },
+            wi: 2,
+            unroll: 1,
+            ky_hoist: true,
+        }));
+        let p = emit(&op, &sched, 256);
+        let mut bufs = BufStore::functional(&p);
+        let xv: Vec<f32> = (0..d.h * d.w * d.cin).map(|i| ((i % 11) as f32 - 5.0) * 0.25).collect();
+        let wv: Vec<f32> =
+            (0..d.cout * d.k_col()).map(|i| ((i % 7) as f32 - 3.0) * 0.125).collect();
+        let bias: Vec<f32> = (0..d.pixels() * d.cout).map(|i| i as f32 * 0.01).collect();
+        bufs.set_f32(0, &xv);
+        bufs.set_f32(1, &wv);
+        bufs.set_f32(2, &bias);
+        execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_f32(2);
+        for oy in 0..d.h_out() {
+            for ox in 0..d.w_out() {
+                for co in 0..d.cout {
+                    let mut want = bias[(oy * d.w_out() + ox) * d.cout + co];
+                    for ky in 0..d.kh {
+                        for kx in 0..d.kw {
+                            for ci in 0..d.cin {
+                                want += xv[((oy + ky) * d.w + ox + kx) * d.cin + ci]
+                                    * wv[co * d.k_col() + (ky * d.kw + kx) * d.cin + ci];
+                            }
+                        }
+                    }
+                    let g = got[(oy * d.w_out() + ox) * d.cout + co];
+                    assert!((g - want).abs() < 1e-3, "({oy},{ox},{co}): {g} vs {want}");
+                }
+            }
+        }
+    }
+
+    /// The structural payoff of the direct lowering: no scalar im2col
+    /// packing pass. Same op, comparable schedules — the direct program's
+    /// scalar instruction count must be far below the im2col one's, and
+    /// at a packing-dominated shape it must win end to end.
+    #[test]
+    fn conv2d_direct_skips_the_packing_pass() {
+        // kw*cin = 512 = the i8 VLMAX ladder top at VLEN=512: direct's
+        // per-ky chunks equal the im2col GEMM's k-chunks, so the
+        // instruction streams match and im2col's extra scalar packing
+        // decides the comparison.
+        let op = Op::Conv2d {
+            h: 5,
+            w: 5,
+            cin: 128,
+            cout: 16,
+            kh: 4,
+            kw: 4,
+            stride: 1,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
+        let im2col = Schedule::Conv2d(Conv2dSchedule::Im2col(MatmulSchedule {
+            intrin: IntrinChoice { vl: 512, j: 16, lmul: 8 },
+            mi: 1,
+            order: LoopOrder::NMK,
+            unroll: 1,
+            transpose: false,
+            ks: 1,
+        }));
+        let direct = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+            intrin: IntrinChoice { vl: 512, j: 16, lmul: 8 },
+            wi: 1,
+            unroll: 1,
+            ky_hoist: false,
+        }));
+        let run = |sched: &Schedule| {
+            let p = emit(&op, sched, 512);
+            let mut bufs = BufStore::timing(&p);
+            execute(&SocConfig::saturn(512), &p, &mut bufs, Mode::Timing, true)
+        };
+        let ri = run(&im2col);
+        let rd = run(&direct);
+        use crate::isa::InstrGroup;
+        assert!(
+            rd.trace.get(InstrGroup::Scalar) * 4 < ri.trace.get(InstrGroup::Scalar),
+            "direct scalar {} vs im2col scalar {}",
+            rd.trace.get(InstrGroup::Scalar),
+            ri.trace.get(InstrGroup::Scalar)
+        );
+        assert!(rd.cycles < ri.cycles, "direct {} vs im2col {}", rd.cycles, ri.cycles);
+        // And both are exact, of course.
+        for sched in [&im2col, &direct] {
+            let (got, want) = run_i8_conv2d(&op, sched, 512);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn conv2d_im2col_shares_the_vmatmul_variant_key() {
+        let ms = MatmulSchedule {
+            intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
+            mi: 1,
+            order: LoopOrder::NMK,
+            unroll: 2,
+            transpose: false,
+            ks: 1,
+        };
+        let conv = Op::square_conv2d(4, 8, 8, 3, 1, DType::I8);
+        let mm = Op::Matmul { m: 16, n: 8, k: 72, dtype: DType::I8, requant: None };
+        assert_eq!(
+            variant_key(&conv, &Schedule::Conv2d(Conv2dSchedule::Im2col(ms.clone()))),
+            variant_key(&mm, &Schedule::Matmul(ms.clone())),
+            "im2col conv reuses the standalone vmatmul function"
+        );
+        let direct = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+            intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
+            wi: 1,
+            unroll: 1,
+            ky_hoist: true,
+        }));
+        assert!(variant_key(&conv, &direct).contains("vconv-direct"));
     }
 
     #[test]

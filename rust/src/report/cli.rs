@@ -71,8 +71,11 @@ USAGE: rvv-tune <subcommand> [options]
   export    tune + print the generated kernel: --workload matmul:64:int8
   converge  tuning convergence curve CSV: --workload ... [--trials N]
   ablation  design-choice ablations: --id vl-ladder | j-variant | cost-model
-  tune      tune one workload: --workload matmul:SIZE:DTYPE | model:NAME:DTYPE
-  trace     dump the decision trace of the best record per op:
+  tune      tune one workload: --workload matmul:SIZE:DTYPE |
+            conv2d:OUT:CIN:COUT:K:STRIDE:DTYPE | model:NAME:DTYPE
+  trace     dump the decision trace of the best record per op (for a
+            Conv2d this shows the strategy decision first — im2col vs
+            direct — then the branch's decisions):
             --workload ... [--db db.json to read a saved database]
   simulate  measure one scenario: --scenario non-tuned|non-tuned-O3|non-tuned-v|muriscv-nn|packed-simd
   models    list the network zoo
@@ -105,12 +108,33 @@ fn parse_workload(spec: &str) -> Result<(String, Vec<Op>, usize), String> {
             let dtype = DType::parse(dtype).ok_or(format!("bad dtype {dtype}"))?;
             Ok((format!("matmul-{size}-{dtype}"), vec![matmul::matmul(size, dtype)], 100))
         }
+        // A square Conv2d: OUT x OUT output map, CIN -> COUT channels,
+        // K x K kernel at STRIDE (pre-padded input, as the zoo builds).
+        ["conv2d", out, cin, cout, k, stride, dtype] => {
+            let parse_dim = |s: &str, what: &str| -> Result<usize, String> {
+                match s.parse::<usize>() {
+                    Ok(v) if v > 0 => Ok(v),
+                    _ => Err(format!("bad {what} `{s}`")),
+                }
+            };
+            let out = parse_dim(out, "output size")?;
+            let cin = parse_dim(cin, "cin")?;
+            let cout = parse_dim(cout, "cout")?;
+            let k = parse_dim(k, "kernel")?;
+            let stride = parse_dim(stride, "stride")?;
+            let dtype = DType::parse(dtype).ok_or(format!("bad dtype {dtype}"))?;
+            let op = Op::square_conv2d(out, cin, cout, k, stride, dtype);
+            Ok((format!("conv2d-{out}-{cin}-{cout}-{k}-s{stride}-{dtype}"), vec![op], 100))
+        }
         ["model", name, dtype] => {
             let dtype = DType::parse(dtype).ok_or(format!("bad dtype {dtype}"))?;
             let m = models::by_name(name, dtype).ok_or(format!("unknown model {name}"))?;
             Ok((m.name.clone(), m.layers, m.default_trials))
         }
-        _ => Err(format!("bad workload spec `{spec}` (matmul:SIZE:DTYPE or model:NAME:DTYPE)")),
+        _ => Err(format!(
+            "bad workload spec `{spec}` (matmul:SIZE:DTYPE, \
+             conv2d:OUT:CIN:COUT:K:STRIDE:DTYPE, or model:NAME:DTYPE)"
+        )),
     }
 }
 
@@ -541,6 +565,22 @@ mod tests {
         assert!(parse_workload("bogus").is_err());
         assert!(parse_workload("matmul:xx:int8").is_err());
         assert!(parse_workload("model:nope:int8").is_err());
+    }
+
+    #[test]
+    fn conv2d_workload_parsing() {
+        let (name, ops, _) = parse_workload("conv2d:8:16:16:3:1:int8").unwrap();
+        assert!(name.starts_with("conv2d-8"));
+        match &ops[..] {
+            [Op::Conv2d { h, w, cin, cout, kh, kw, stride, requant, .. }] => {
+                assert_eq!((*h, *w), (10, 10)); // (8-1)*1 + 3 pre-padded
+                assert_eq!((*cin, *cout, *kh, *kw, *stride), (16, 16, 3, 3, 1));
+                assert!(requant.is_some());
+            }
+            other => panic!("expected one Conv2d, got {other:?}"),
+        }
+        assert!(parse_workload("conv2d:8:16:16:3:0:int8").is_err(), "stride 0 rejected");
+        assert!(parse_workload("conv2d:8:16:16:x:1:int8").is_err());
     }
 
     #[test]

@@ -5,7 +5,10 @@ mod op;
 mod schedule;
 
 pub use dtype::DType;
-pub use op::{Op, Requant};
+pub use op::{conv_out_extent, ConvDims, Op, Requant};
+#[doc(hidden)]
+pub use op::ref_conv2d_acc;
 pub use schedule::{
-    DwConvSchedule, EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule, Schedule,
+    Conv2dSchedule, DirectConvSchedule, DwConvSchedule, EltwiseSchedule, IntrinChoice, LoopOrder,
+    MatmulSchedule, Schedule,
 };

@@ -1,11 +1,92 @@
 //! Tensor operator descriptions — the unit of tuning.
 //!
-//! Network layers (workloads::models) lower onto these three primitives the
-//! same way muRISCV-NN / CMSIS-NN do: convolutions via im2col to GEMM,
-//! depthwise convolutions to channel-vectorized multiply-accumulate
-//! (the paper's Algorithm 2 target), everything dense to `Matmul`.
+//! Network layers (workloads::models) lower onto these primitives:
+//! dense/attention layers to `Matmul`, depthwise convolutions to the
+//! channel-vectorized multiply-accumulate (the paper's Algorithm 2
+//! target), residual adds to `Eltwise` — and k×k convolutions to the
+//! first-class `Conv2d`, whose *lowering strategy* (materialized im2col
+//! GEMM vs direct register-blocked convolution) is itself a schedule
+//! decision the probabilistic space program explores.
 
 use super::dtype::DType;
+
+/// Output extent of one convolution axis: `(input - k) / stride + 1`
+/// (a valid convolution over an input that is stored pre-padded, which is
+/// how the embedded runtimes this models lay out activations).
+pub fn conv_out_extent(input: usize, k: usize, stride: usize) -> usize {
+    debug_assert!(input >= k && stride >= 1, "conv extent {input} < kernel {k}");
+    (input - k) / stride + 1
+}
+
+/// Shape bundle of a [`Op::Conv2d`] with the derived views every consumer
+/// (space program, code generators, feature extraction) needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvDims {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+}
+
+impl ConvDims {
+    pub fn h_out(&self) -> usize {
+        conv_out_extent(self.h, self.kh, self.stride)
+    }
+
+    pub fn w_out(&self) -> usize {
+        conv_out_extent(self.w, self.kw, self.stride)
+    }
+
+    /// Output pixels — the `m` of the im2col GEMM view.
+    pub fn pixels(&self) -> usize {
+        self.h_out() * self.w_out()
+    }
+
+    /// Full reduction depth `cin*kh*kw` — the `k` of the im2col GEMM view.
+    pub fn k_col(&self) -> usize {
+        self.cin * self.kh * self.kw
+    }
+
+    /// One kernel-row reduction segment `kw*cin` — the unit-stride chunk
+    /// the direct lowering reduces over per `ky`.
+    pub fn k_row(&self) -> usize {
+        self.kw * self.cin
+    }
+}
+
+/// Plain-rust reference Conv2d accumulator over the conventional buffers
+/// (NHWC pre-padded input, cout-major weights, bias-prefilled ACC) — the
+/// single source of truth every backend exactness test (in-crate unit
+/// tests AND the cross-backend differential harness) compares against.
+/// `pub` but doc-hidden: it must stay visible to integration tests,
+/// where `cfg(test)` items do not exist.
+#[doc(hidden)]
+pub fn ref_conv2d_acc(d: ConvDims, x: &[i8], w: &[i8], bias: &[i32]) -> Vec<i64> {
+    let (h_out, w_out) = (d.h_out(), d.w_out());
+    let mut acc = vec![0i64; h_out * w_out * d.cout];
+    for oy in 0..h_out {
+        for ox in 0..w_out {
+            for co in 0..d.cout {
+                let mut s = bias[(oy * w_out + ox) * d.cout + co] as i64;
+                for ky in 0..d.kh {
+                    for kx in 0..d.kw {
+                        for ci in 0..d.cin {
+                            let xi = ((oy * d.stride + ky) * d.w + ox * d.stride + kx) * d.cin
+                                + ci;
+                            let wi = co * d.k_col() + (ky * d.kw + kx) * d.cin + ci;
+                            s += x[xi] as i64 * w[wi] as i64;
+                        }
+                    }
+                }
+                acc[(oy * w_out + ox) * d.cout + co] = s;
+            }
+        }
+    }
+    acc
+}
 
 /// QNN requantization parameters (paper §IV-A: int8 matmuls accumulate in
 /// int32, add an int32 bias, then requantize back to int8).
@@ -52,28 +133,82 @@ pub enum Op {
     },
     /// Elementwise multiply-accumulate `y[i] += a[i] * b[i]`.
     Eltwise { len: usize, dtype: DType },
+    /// 2-D convolution over an NHWC activation `X[h, w, cin]` (stored
+    /// pre-padded; output extents are `conv_out_extent`) with weights
+    /// `W[cout, kh, kw, cin]` — cout-major, so the flattened weight matrix
+    /// is exactly the `[n, k]` layout the GEMM generators consume. Unlike
+    /// the deprecated im2col shim in `workloads::models::conv`, the
+    /// flattening strategy is NOT baked in here: the space program decides
+    /// per target whether to materialize patches (im2col) or run the
+    /// direct register-blocked kernel.
+    Conv2d {
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        dtype: DType,
+        requant: Option<Requant>,
+    },
 }
 
 impl Op {
     pub fn dtype(&self) -> DType {
         match self {
-            Op::Matmul { dtype, .. } | Op::DwConv { dtype, .. } | Op::Eltwise { dtype, .. } => {
-                *dtype
-            }
+            Op::Matmul { dtype, .. }
+            | Op::DwConv { dtype, .. }
+            | Op::Eltwise { dtype, .. }
+            | Op::Conv2d { dtype, .. } => *dtype,
+        }
+    }
+
+    /// The shape bundle of a `Conv2d` (`None` for other operators).
+    pub fn conv_dims(&self) -> Option<ConvDims> {
+        match self {
+            Op::Conv2d { h, w, cin, cout, kh, kw, stride, .. } => Some(ConvDims {
+                h: *h,
+                w: *w,
+                cin: *cin,
+                cout: *cout,
+                kh: *kh,
+                kw: *kw,
+                stride: *stride,
+            }),
+            _ => None,
         }
     }
 
     /// Multiply-accumulate count (work metric for throughput reporting).
+    /// For `Conv2d` this is stride-aware: `h_out * w_out * cout * cin *
+    /// kh * kw` — identical to the MACs of the im2col GEMM the layer used
+    /// to be flattened to, so the im2col→Conv2d zoo migration leaves every
+    /// model's `total_macs` unchanged.
     pub fn macs(&self) -> u64 {
         match self {
             Op::Matmul { m, n, k, .. } => (*m * *n * *k) as u64,
             Op::DwConv { spatial, channels, taps, .. } => (*spatial * *channels * *taps) as u64,
             Op::Eltwise { len, .. } => *len as u64,
+            Op::Conv2d { cin, cout, kh, kw, .. } => {
+                let d = self.conv_dims().expect("conv dims");
+                (d.pixels() * *cout * *cin * *kh * *kw) as u64
+            }
         }
     }
 
     /// Canonical identity used to deduplicate tuning tasks: layers with the
     /// same shape+dtype share one tuned schedule (as TVM does).
+    ///
+    /// **Stability contract:** these strings are the persisted database
+    /// schema — `TuneRecord::op_key` is written to disk and joined against
+    /// on reload, so the formats below must never change for an existing
+    /// operator. `Conv2d` keys are `conv2d-HxWxCIN-COUTxKHxKWsS-DTYPE-rqR`
+    /// (input extents, not output: two strides over the same input are
+    /// different tasks). Databases written before the Conv2d migration
+    /// keyed conv layers as `matmul-…` im2col GEMMs; those records stay
+    /// loadable and are simply separate tasks alongside new `conv2d-…`
+    /// keys.
     pub fn key(&self) -> String {
         match self {
             Op::Matmul { m, n, k, dtype, requant } => {
@@ -85,6 +220,11 @@ impl Op {
                 requant.is_some() as u8
             ),
             Op::Eltwise { len, dtype } => format!("eltwise-{len}-{}", dtype.name()),
+            Op::Conv2d { h, w, cin, cout, kh, kw, stride, dtype, requant } => format!(
+                "conv2d-{h}x{w}x{cin}-{cout}x{kh}x{kw}s{stride}-{}-rq{}",
+                dtype.name(),
+                requant.is_some() as u8
+            ),
         }
     }
 
@@ -95,6 +235,25 @@ impl Op {
             _ => None,
         };
         Op::Matmul { m: size, n: size, k: size, dtype, requant }
+    }
+
+    /// A k×k `Conv2d` producing an `out × out` output map at `stride`
+    /// over the implicitly pre-padded `(out-1)*stride + k` square input
+    /// (int8 ops carry the test requant, floats none).
+    pub fn square_conv2d(
+        out: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        dtype: DType,
+    ) -> Op {
+        let requant = match dtype {
+            DType::I8 => Some(Requant::default_for_tests()),
+            _ => None,
+        };
+        let input = (out - 1) * stride + k;
+        Op::Conv2d { h: input, w: input, cin, cout, kh: k, kw: k, stride, dtype, requant }
     }
 }
 
@@ -142,5 +301,74 @@ mod tests {
         let op =
             Op::DwConv { spatial: 100, channels: 32, taps: 9, dtype: DType::I8, requant: None };
         assert_eq!(op.macs(), 100 * 32 * 9);
+    }
+
+    /// Hand-computed stride-2 reference: 11x9 input, 3x3 kernel, stride 2
+    /// -> 5x4 output; macs = 5*4*cout*cin*3*3.
+    #[test]
+    fn conv2d_macs_are_stride_aware() {
+        assert_eq!(conv_out_extent(11, 3, 2), 5);
+        assert_eq!(conv_out_extent(9, 3, 2), 4);
+        let op = Op::Conv2d {
+            h: 11,
+            w: 9,
+            cin: 16,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
+        assert_eq!(op.macs(), 5 * 4 * 8 * 16 * 3 * 3);
+        // Unit stride over the same input covers every position instead.
+        let s1 = Op::Conv2d {
+            h: 11,
+            w: 9,
+            cin: 16,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            dtype: DType::I8,
+            requant: None,
+        };
+        assert_eq!(s1.macs(), 9 * 7 * 8 * 16 * 3 * 3);
+    }
+
+    /// The key format is the persisted db schema — pin it exactly.
+    #[test]
+    fn conv2d_key_is_stable_and_stride_distinct() {
+        let op = Op::Conv2d {
+            h: 11,
+            w: 9,
+            cin: 16,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(Requant::default_for_tests()),
+        };
+        assert_eq!(op.key(), "conv2d-11x9x16-8x3x3s2-int8-rq1");
+        let mut s1 = op.clone();
+        if let Op::Conv2d { stride, .. } = &mut s1 {
+            *stride = 1;
+        }
+        assert_ne!(op.key(), s1.key(), "stride must be part of the task identity");
+    }
+
+    #[test]
+    fn square_conv2d_helper_round_trips_output_extent() {
+        let op = Op::square_conv2d(16, 8, 32, 3, 2, DType::I8);
+        let d = op.conv_dims().unwrap();
+        assert_eq!(d.h, (16 - 1) * 2 + 3);
+        assert_eq!((d.h_out(), d.w_out()), (16, 16));
+        assert_eq!(d.pixels(), 256);
+        assert_eq!(d.k_col(), 8 * 9);
+        assert_eq!(d.k_row(), 8 * 3);
+        assert!(matches!(op, Op::Conv2d { requant: Some(_), .. }));
+        let f = Op::square_conv2d(16, 8, 32, 3, 2, DType::F32);
+        assert!(matches!(f, Op::Conv2d { requant: None, .. }));
     }
 }

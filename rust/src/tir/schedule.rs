@@ -77,6 +77,38 @@ pub struct MatmulSchedule {
     pub ks: u32,
 }
 
+/// Schedule for the *direct* (no im2col materialization) Conv2d lowering:
+/// an Algorithm-1-style kernel over the convolution's native loops. The
+/// reduction runs over `kh` unit-stride row segments of `kw*cin` elements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DirectConvSchedule {
+    /// VL over a `kw*cin` row segment; J tiles the output channels
+    /// (cout register blocking).
+    pub intrin: IntrinChoice,
+    /// Output-column block size (divides `w_out`; the block loop is
+    /// unroll-able).
+    pub wi: u32,
+    /// Unroll factor of the J (cout-tile) loop and the `wi` column block.
+    /// The `ky` reduction loop itself runs rolled — or fully unrolled as
+    /// part of `ky_hoist`, mirroring the dwconv tap hoist.
+    pub unroll: u32,
+    /// Keep the scalar reduction accumulator live across all `kh` row
+    /// segments (one ACC round-trip per output tile, but the X segment is
+    /// re-loaded per output channel) instead of accumulating partial
+    /// J-wide tiles through ACC per `(ky, chunk)`.
+    pub ky_hoist: bool,
+}
+
+/// How a Conv2d lowers — the first decision of its space program.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Conv2dSchedule {
+    /// Materialize patches into a scratch COL buffer, then run the plain
+    /// Algorithm-1 GEMM suffix over it (the muRISCV-NN/TVM default).
+    Im2col(MatmulSchedule),
+    /// Direct register-blocked convolution, no patch buffer.
+    Direct(DirectConvSchedule),
+}
+
 /// Schedule for a depthwise convolution (Algorithm-2 target): channels are
 /// chunked by VL; taps may be unrolled.
 #[derive(Clone, Debug, PartialEq)]
@@ -98,6 +130,7 @@ pub enum Schedule {
     Matmul(MatmulSchedule),
     DwConv(DwConvSchedule),
     Eltwise(EltwiseSchedule),
+    Conv2d(Conv2dSchedule),
 }
 
 impl Schedule {
@@ -117,6 +150,13 @@ impl Schedule {
             ),
             Schedule::DwConv(s) => format!("dw[vl={} unroll_taps={}]", s.vl, s.unroll_taps),
             Schedule::Eltwise(s) => format!("ew[vl={} unroll={}]", s.vl, s.unroll),
+            Schedule::Conv2d(Conv2dSchedule::Im2col(s)) => {
+                format!("conv-im2col{{{}}}", Schedule::Matmul(s.clone()).describe())
+            }
+            Schedule::Conv2d(Conv2dSchedule::Direct(s)) => format!(
+                "conv-direct[vl={} j={} lmul={} wi={} unroll={} hoist={}]",
+                s.intrin.vl, s.intrin.j, s.intrin.lmul, s.wi, s.unroll, s.ky_hoist
+            ),
         }
     }
 }
@@ -149,5 +189,20 @@ mod tests {
         let d = sample_matmul().describe();
         assert!(d.contains("vl=256"));
         assert!(d.contains("ks=2"));
+    }
+
+    #[test]
+    fn conv2d_describe_names_the_strategy() {
+        let Schedule::Matmul(ms) = sample_matmul() else { unreachable!() };
+        let im2col = Schedule::Conv2d(Conv2dSchedule::Im2col(ms));
+        assert!(im2col.describe().contains("conv-im2col"));
+        let direct = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+            intrin: IntrinChoice { vl: 64, j: 8, lmul: 8 },
+            wi: 2,
+            unroll: 4,
+            ky_hoist: true,
+        }));
+        let d = direct.describe();
+        assert!(d.contains("conv-direct") && d.contains("hoist=true"), "{d}");
     }
 }

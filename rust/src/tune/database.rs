@@ -380,6 +380,53 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// Migration compatibility: a v2 database holding records keyed by
+    /// old-style `matmul-…` im2col conv keys stays loadable alongside new
+    /// `conv2d-…` records — the two are simply separate tasks, so tuning
+    /// state from before the Conv2d migration is never invalidated.
+    #[test]
+    fn v2_db_mixes_legacy_im2col_keys_with_conv2d_keys() {
+        use crate::tir::{IntrinChoice as IC, LoopOrder as LO};
+        use crate::tune::space::test_conv2d_trace;
+        let mut db = Database::new();
+        // Old world: the conv layer was flattened up front and keyed as a
+        // matmul (this exact key shape is what PR-4-era databases hold).
+        let legacy_key = "matmul-64x16x72-int8-rq1";
+        let legacy = TuneRecord::new(
+            legacy_key.to_string(),
+            "saturn-256".to_string(),
+            test_matmul_trace(IC { vl: 64, j: 8, lmul: 8 }, 2, LO::NMK, 1, false, 1),
+            111.0,
+            73728,
+            0,
+        );
+        db.add(legacy);
+        // New world: the same layer as a first-class Conv2d task.
+        let conv_key = "conv2d-10x10x8-16x3x3s1-int8-rq1";
+        let conv = TuneRecord::new(
+            conv_key.to_string(),
+            "saturn-256".to_string(),
+            test_conv2d_trace(true, IC { vl: 24, j: 8, lmul: 8 }, 2, LO::MNK, 1, 1, true),
+            99.0,
+            73728,
+            0,
+        );
+        db.add(conv);
+        let dir = std::env::temp_dir().join("rvv-tune-test-db-mixed");
+        let path = dir.join("mixed.json");
+        db.save(&path).unwrap();
+        let back = Database::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let l = back.best(legacy_key, "saturn-256").unwrap();
+        assert!(matches!(l.schedule, crate::tir::Schedule::Matmul(_)));
+        let c = back.best(conv_key, "saturn-256").unwrap();
+        assert!(matches!(
+            c.schedule,
+            crate::tir::Schedule::Conv2d(crate::tir::Conv2dSchedule::Direct(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     #[test]
     fn load_rejects_pre_trace_v1_files() {
         let dir = std::env::temp_dir().join("rvv-tune-test-db-v1");

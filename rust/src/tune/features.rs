@@ -14,7 +14,7 @@ use crate::sim::{SocConfig, VProgram};
 use crate::tir::Op;
 
 use super::analysis::{static_profile, StaticProfile};
-use super::space::{ids, KIND_DWCONV, KIND_ELTWISE, KIND_MATMUL};
+use super::space::{ids, KIND_CONV2D, KIND_DWCONV, KIND_ELTWISE, KIND_MATMUL};
 use super::trace::{unpack_intrin, Trace};
 
 /// Must equal model.FEATURE_DIM (checked against the manifest at runtime).
@@ -41,10 +41,19 @@ fn decision_slot(id: &str) -> Option<(usize, fn(u64) -> f32)> {
         // Shares the order slot the way the pre-trace extractor packed it
         // (order index + 4 when transposed): one slot, 8 distinct levels.
         Some((12, |v| 4.0 * v as f32))
+    } else if id == ids::STRATEGY.name() {
+        // Extends the packed order/transpose slot: +8 for the direct conv
+        // lowering, keeping every (order, transpose, strategy) combination
+        // a distinct level of one additive slot.
+        Some((12, |v| 8.0 * v as f32))
     } else if id == ids::UNROLL.name() {
         Some((13, |v| log2p(v as f64)))
     } else if id == ids::UNROLL_TAPS.name() {
         Some((13, |v| v as f32))
+    } else if id == ids::KY_HOIST.name() {
+        // Accumulator-hoisting flag — shares the unroll slot additively
+        // like `unroll_taps` (its dwconv analog) does.
+        Some((13, |v| 2.0 * v as f32))
     } else if id == ids::VL.name() {
         Some((8, |v| log2p(v as f64)))
     } else {
@@ -85,6 +94,17 @@ pub fn extract(op: &Op, trace: &Trace, program: &VProgram, soc: &SocConfig) -> V
         Op::Eltwise { len, .. } => {
             f[2] = 1.0;
             f[3] = log2p(*len as f64);
+        }
+        Op::Conv2d { .. } => {
+            // Conv is both GEMM-like and spatial: the pair (f0, f1) = (1, 1)
+            // is a distinct one-hot code without growing FEATURE_DIM (which
+            // is pinned by the PJRT artifact manifest).
+            let d = op.conv_dims().expect("conv dims");
+            f[0] = 1.0;
+            f[1] = 1.0;
+            f[3] = log2p(d.pixels() as f64);
+            f[4] = log2p(d.cout as f64);
+            f[5] = log2p(d.k_col() as f64);
         }
     }
     f[6] = log2p(macs);
@@ -130,7 +150,11 @@ pub fn extract(op: &Op, trace: &Trace, program: &VProgram, soc: &SocConfig) -> V
     // Inner working set: one A chunk + J rows of B + the output tile.
     let eb = op.dtype().bytes() as f64;
     let ws = match trace.kind() {
-        KIND_MATMUL => {
+        KIND_MATMUL | KIND_CONV2D => {
+            // One A/X chunk + J weight rows + the J-wide output tile —
+            // the same register-resident tile shape for a GEMM and for
+            // either conv lowering (the im2col k-chunk and the direct row
+            // segment are both one VL-long operand).
             let j = trace.value_of(&ids::INTRIN).map(|v| unpack_intrin(v).j as f64).unwrap_or(1.0);
             vl * eb * (1.0 + j) + j * 4.0
         }
@@ -213,6 +237,26 @@ mod tests {
         let ft = extract(&op, &tile, &pt, &soc);
         let f1 = extract(&op, &j1, &p1, &soc);
         assert!(f1[17] > ft[17], "store feature {} vs {}", f1[17], ft[17]);
+    }
+
+    #[test]
+    fn conv2d_strategy_and_hoist_have_feature_slots() {
+        use crate::tune::space::test_conv2d_trace;
+        let op = Op::square_conv2d(8, 16, 16, 3, 1, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let intrin = IntrinChoice { vl: 32, j: 16, lmul: 8 };
+        let im2col = test_conv2d_trace(false, intrin, 1, LoopOrder::MNK, 1, 1, false);
+        let direct = test_conv2d_trace(true, intrin, 1, LoopOrder::MNK, 1, 1, false);
+        let hoisted = test_conv2d_trace(true, intrin, 1, LoopOrder::MNK, 1, 1, true);
+        let fi = extract(&op, &im2col, &emit(&op, &im2col), &soc);
+        let fd = extract(&op, &direct, &emit(&op, &direct), &soc);
+        let fh = extract(&op, &hoisted, &emit(&op, &hoisted), &soc);
+        assert_eq!(fi.len(), FEATURE_DIM);
+        // Conv's one-hot code is (f0, f1) = (1, 1) — distinct from all
+        // three original kinds.
+        assert_eq!((fi[0], fi[1]), (0.125, 0.125));
+        assert_ne!(fi[12], fd[12], "strategy must move the packed order slot");
+        assert_ne!(fd[13], fh[13], "ky_hoist must move the unroll slot");
     }
 
     #[test]

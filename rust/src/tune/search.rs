@@ -236,7 +236,22 @@ impl<'a> OpTuner<'a> {
         db: &Database,
         config: SearchConfig,
     ) -> Option<OpTuner<'a>> {
-        let space = space::program_for(op, registry);
+        Self::with_space(op, soc, space::program_for(op, registry), measurer, db, config)
+    }
+
+    /// [`OpTuner::new`] with an explicit space program instead of the
+    /// registry-derived default — the ablation hook: tune over
+    /// `program_for(op, reg).without(&some_decision)` to measure what a
+    /// decision buys at an equal trial budget (e.g. forcing a Conv2d to
+    /// its im2col sub-space by dropping the strategy decision).
+    pub fn with_space(
+        op: &'a Op,
+        soc: &'a SocConfig,
+        space: SpaceProgram,
+        measurer: &'a dyn Measurer,
+        db: &Database,
+        config: SearchConfig,
+    ) -> Option<OpTuner<'a>> {
         if !space.is_tunable() {
             return None;
         }

@@ -13,7 +13,8 @@
 
 use crate::intrinsics::Registry;
 use crate::tir::{
-    DwConvSchedule, EltwiseSchedule, IntrinChoice, LoopOrder, MatmulSchedule, Op, Schedule,
+    Conv2dSchedule, ConvDims, DirectConvSchedule, DwConvSchedule, EltwiseSchedule, IntrinChoice,
+    LoopOrder, MatmulSchedule, Op, Schedule,
 };
 
 use super::trace::{unpack_intrin, DecisionId, Domain, SpaceProgram, Trace};
@@ -40,12 +41,24 @@ pub mod ids {
     pub const VL: DecisionId = DecisionId::new("vl");
     /// DwConv: hoist the accumulator across an unrolled tap loop.
     pub const UNROLL_TAPS: DecisionId = DecisionId::new("unroll_taps");
+    /// Conv2d: the lowering strategy — `false` = materialized im2col GEMM,
+    /// `true` = direct register-blocked convolution. The *first* decision
+    /// of the conv program: every later domain depends on it, so the two
+    /// lowering sub-programs live inside one trace space. Absent (ablated)
+    /// traces lower as im2col, the pre-Conv2d behaviour.
+    pub const STRATEGY: DecisionId = DecisionId::new("strategy");
+    /// Conv2d/direct only: keep the reduction accumulator live across the
+    /// whole kh*kw*cin reduction (one ACC round-trip per output tile)
+    /// instead of accumulating partial tiles through memory per (ky,
+    /// chunk). Inert (single-option) on the im2col branch.
+    pub const KY_HOIST: DecisionId = DecisionId::new("ky_hoist");
 }
 
 /// Trace-kind tags (one per lowering arm).
 pub const KIND_MATMUL: &str = "matmul";
 pub const KIND_DWCONV: &str = "dwconv";
 pub const KIND_ELTWISE: &str = "eltwise";
+pub const KIND_CONV2D: &str = "conv2d";
 
 const UNROLLS: [u64; 4] = [1, 2, 4, 8];
 
@@ -88,7 +101,114 @@ pub fn program_for(op: &Op, registry: &Registry) -> SpaceProgram {
                 .decision(ids::VL, move |_| Domain::Ints(vls.clone()))
                 .decision(ids::UNROLL, |_| Domain::Ints(UNROLLS.to_vec()))
         }
+        Op::Conv2d { dtype, .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            // im2col GEMM view: C[pixels, cout] = COL[pixels, k_col] x W.
+            let im2col_direct: Vec<IntrinChoice> = registry
+                .matmul_candidates_for(d.cout, d.k_col(), *dtype)
+                .iter()
+                .map(|i| i.choice())
+                .collect();
+            let im2col_transposed: Vec<IntrinChoice> = registry
+                .matmul_candidates_for(d.pixels(), d.k_col(), *dtype)
+                .iter()
+                .map(|i| i.choice())
+                .collect();
+            // Direct view: J tiles cout, VL runs over one kw*cin segment.
+            let direct: Vec<IntrinChoice> = registry
+                .matmul_candidates_for(d.cout, d.k_row(), *dtype)
+                .iter()
+                .map(|i| i.choice())
+                .collect();
+            conv2d_program(d, im2col_direct, im2col_transposed, direct)
+        }
     }
+}
+
+/// The Conv2d program — the first operator whose space contains two
+/// genuinely different lowering sub-programs. The *first* decision picks
+/// the strategy; every later domain is derived from it, collapsing to a
+/// single inert option on the branch where the decision does not apply
+/// (so mutation's suffix replay moves cleanly across the strategy flip,
+/// and `without(STRATEGY)` forces the im2col sub-space).
+fn conv2d_program(
+    d: ConvDims,
+    im2col_direct: Vec<IntrinChoice>,
+    im2col_transposed: Vec<IntrinChoice>,
+    direct: Vec<IntrinChoice>,
+) -> SpaceProgram {
+    let im2col_ok = !im2col_direct.is_empty() || !im2col_transposed.is_empty();
+    let direct_ok = !direct.is_empty();
+    let strategies: Vec<bool> = match (im2col_ok, direct_ok) {
+        (false, false) => return SpaceProgram::new(KIND_CONV2D), // untunable
+        (true, false) => vec![false],
+        (false, true) => vec![true],
+        (true, true) => vec![false, true],
+    };
+    let mappings: Vec<bool> = match (im2col_direct.is_empty(), im2col_transposed.is_empty()) {
+        (false, true) => vec![false],
+        (true, false) => vec![true],
+        _ => vec![false, true], // both (or neither — strategy then never picks im2col)
+    };
+    let k_col = d.k_col() as u32;
+    let mi_im2col = divisors_up_to(d.pixels(), 16);
+    let mi_transposed = divisors_up_to(d.cout, 16);
+    let wi_direct = divisors_up_to(d.w_out(), 16);
+    let is_direct = |t: &Trace| t.value_of(&ids::STRATEGY) == Some(1);
+    SpaceProgram::new(KIND_CONV2D)
+        .decision(ids::STRATEGY, move |_| Domain::Bools(strategies.clone()))
+        .decision(ids::TRANSPOSE, move |t| {
+            if is_direct(t) {
+                Domain::Bools(vec![false]) // inert on the direct branch
+            } else {
+                Domain::Bools(mappings.clone())
+            }
+        })
+        .decision(ids::INTRIN, move |t| {
+            Domain::Intrins(if is_direct(t) {
+                direct.clone()
+            } else if t.value_of(&ids::TRANSPOSE) == Some(1) {
+                im2col_transposed.clone()
+            } else {
+                im2col_direct.clone()
+            })
+        })
+        .decision(ids::MI, move |t| {
+            // im2col: GEMM row-block (pixels, or cout when transposed);
+            // direct: the output-column block wi.
+            Domain::Ints(if is_direct(t) {
+                wi_direct.clone()
+            } else if t.value_of(&ids::TRANSPOSE) == Some(1) {
+                mi_transposed.clone()
+            } else {
+                mi_im2col.clone()
+            })
+        })
+        .decision(ids::ORDER, move |t| {
+            Domain::Orders(if is_direct(t) {
+                vec![LoopOrder::MNK] // the direct nest is fixed: pixels, cout tiles, ky
+            } else {
+                LoopOrder::ALL.to_vec()
+            })
+        })
+        .decision(ids::UNROLL, |_| Domain::Ints(UNROLLS.to_vec()))
+        .decision(ids::KSPLIT, move |t| {
+            if is_direct(t) {
+                Domain::Ints(vec![1]) // inert: the direct path has no k-split
+            } else {
+                let intrin =
+                    unpack_intrin(t.value_of(&ids::INTRIN).expect("intrin precedes ksplit"));
+                let vl = intrin.vl.min(k_col).max(1) as usize;
+                Domain::Ints(divisors_up_to(d.k_col() / vl, KSPLIT_CAP))
+            }
+        })
+        .decision(ids::KY_HOIST, move |t| {
+            if is_direct(t) {
+                Domain::Bools(vec![false, true])
+            } else {
+                Domain::Bools(vec![false]) // inert on the im2col branch
+            }
+        })
 }
 
 /// The matmul program. The decision chain showcases dependent domains:
@@ -154,6 +274,27 @@ pub fn lower(trace: &Trace) -> Option<Schedule> {
             vl: trace.value_of(&ids::VL)? as u32,
             unroll: trace.value_of(&ids::UNROLL)? as u32,
         })),
+        KIND_CONV2D => {
+            // Strategy defaults to im2col when absent (`without(STRATEGY)`
+            // ablations and any pre-strategy trace).
+            if trace.value_of(&ids::STRATEGY).unwrap_or(0) == 1 {
+                Some(Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+                    intrin: unpack_intrin(trace.value_of(&ids::INTRIN)?),
+                    wi: trace.value_of(&ids::MI)? as u32,
+                    unroll: trace.value_of(&ids::UNROLL)? as u32,
+                    ky_hoist: trace.value_of(&ids::KY_HOIST).unwrap_or(0) == 1,
+                })))
+            } else {
+                Some(Schedule::Conv2d(Conv2dSchedule::Im2col(MatmulSchedule {
+                    intrin: unpack_intrin(trace.value_of(&ids::INTRIN)?),
+                    mi: trace.value_of(&ids::MI)? as u32,
+                    order: *LoopOrder::ALL.get(trace.value_of(&ids::ORDER)? as usize)?,
+                    unroll: trace.value_of(&ids::UNROLL)? as u32,
+                    transpose: trace.value_of(&ids::TRANSPOSE).unwrap_or(0) == 1,
+                    ks: trace.value_of(&ids::KSPLIT).unwrap_or(1) as u32,
+                })))
+            }
+        }
         _ => None,
     }
 }
@@ -186,6 +327,46 @@ pub(crate) fn test_matmul_trace(
     });
     t.push(Decision { id: ids::UNROLL, domain: Domain::Ints(vec![unroll]), choice: 0 });
     t.push(Decision { id: ids::KSPLIT, domain: Domain::Ints(vec![ks]), choice: 0 });
+    t
+}
+
+/// Hand-build a conv2d trace with forced values (tests only; the tuner
+/// itself only ever executes programs). Decision order mirrors
+/// [`conv2d_program`].
+#[cfg(test)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn test_conv2d_trace(
+    direct: bool,
+    intrin: IntrinChoice,
+    mi: u64,
+    order: LoopOrder,
+    unroll: u64,
+    ks: u64,
+    ky_hoist: bool,
+) -> Trace {
+    use super::trace::Decision;
+    let mut t = Trace::new(KIND_CONV2D);
+    let order_idx = LoopOrder::ALL.iter().position(|o| *o == order).unwrap();
+    t.push(Decision {
+        id: ids::STRATEGY,
+        domain: Domain::Bools(vec![false, true]),
+        choice: direct as usize,
+    });
+    t.push(Decision { id: ids::TRANSPOSE, domain: Domain::Bools(vec![false]), choice: 0 });
+    t.push(Decision { id: ids::INTRIN, domain: Domain::Intrins(vec![intrin]), choice: 0 });
+    t.push(Decision { id: ids::MI, domain: Domain::Ints(vec![mi]), choice: 0 });
+    t.push(Decision {
+        id: ids::ORDER,
+        domain: Domain::Orders(LoopOrder::ALL.to_vec()),
+        choice: order_idx,
+    });
+    t.push(Decision { id: ids::UNROLL, domain: Domain::Ints(vec![unroll]), choice: 0 });
+    t.push(Decision { id: ids::KSPLIT, domain: Domain::Ints(vec![ks]), choice: 0 });
+    t.push(Decision {
+        id: ids::KY_HOIST,
+        domain: Domain::Bools(vec![false, true]),
+        choice: ky_hoist as usize,
+    });
     t
 }
 
@@ -298,5 +479,98 @@ mod tests {
         assert!(lower(&t).is_none());
         t = Trace::new(KIND_MATMUL);
         assert!(lower(&t).is_none(), "matmul trace without decisions must not lower");
+    }
+
+    #[test]
+    fn conv2d_program_branches_on_strategy() {
+        let op = Op::square_conv2d(8, 16, 16, 3, 1, DType::I8);
+        let reg = Registry::build(512);
+        let program = program_for(&op, &reg);
+        assert!(program.is_tunable());
+        let mut rng = Pcg::seeded(21);
+        let (mut saw_direct, mut saw_im2col) = (false, false);
+        for _ in 0..96 {
+            let t = program.sample(&mut rng);
+            assert!(program.validates(&t));
+            match lower(&t) {
+                Some(Schedule::Conv2d(Conv2dSchedule::Direct(ds))) => {
+                    saw_direct = true;
+                    assert_eq!(t.value_of(&ids::STRATEGY), Some(1));
+                    // Direct VL is bounded by one kw*cin row segment.
+                    assert!(ds.intrin.vl as usize <= 3 * 16);
+                    assert!(8 % ds.wi as usize == 0, "wi must divide w_out");
+                    // The inert im2col decisions collapsed to singletons.
+                    assert_eq!(t.value_of(&ids::KSPLIT), Some(1));
+                    assert_eq!(t.value_of(&ids::TRANSPOSE), Some(0));
+                }
+                Some(Schedule::Conv2d(Conv2dSchedule::Im2col(ms))) => {
+                    saw_im2col = true;
+                    assert_eq!(t.value_of(&ids::STRATEGY), Some(0));
+                    assert!(ms.intrin.vl as usize <= 16 * 9);
+                    assert_eq!(t.value_of(&ids::KY_HOIST), Some(0), "ky_hoist inert on im2col");
+                }
+                other => panic!("wrong lowering: {other:?}"),
+            }
+        }
+        assert!(saw_direct && saw_im2col, "both strategies must be reachable");
+    }
+
+    #[test]
+    fn conv2d_mutation_survives_strategy_flips() {
+        let op = Op::square_conv2d(4, 8, 6, 3, 2, DType::I8);
+        let reg = Registry::build(256);
+        let program = program_for(&op, &reg);
+        assert!(program.is_tunable());
+        let mut rng = Pcg::seeded(5);
+        let mut t = program.sample(&mut rng);
+        let mut flips = 0;
+        let mut last = t.value_of(&ids::STRATEGY);
+        for _ in 0..128 {
+            t = program.mutate(&t, &mut rng);
+            assert!(program.validates(&t), "mutant left the space: {}", t.describe());
+            assert!(lower(&t).is_some(), "every mutant must lower");
+            let s = t.value_of(&ids::STRATEGY);
+            if s != last {
+                flips += 1;
+                last = s;
+            }
+        }
+        assert!(flips > 0, "mutation must be able to flip the lowering strategy");
+    }
+
+    #[test]
+    fn conv2d_without_strategy_forces_im2col() {
+        let op = Op::square_conv2d(4, 8, 8, 3, 1, DType::I8);
+        let reg = Registry::build(256);
+        let program = program_for(&op, &reg).without(&ids::STRATEGY);
+        let mut rng = Pcg::seeded(13);
+        for _ in 0..32 {
+            let t = program.sample(&mut rng);
+            assert!(t.get(&ids::STRATEGY).is_none());
+            match lower(&t) {
+                Some(Schedule::Conv2d(Conv2dSchedule::Im2col(_))) => {}
+                other => panic!("ablated program must lower as im2col, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_untunable_when_nothing_matches() {
+        // cout = 0-channel is impossible; instead: k too small for any
+        // intrinsic (k_row = 1*1 = 1 < MIN_VL and k_col = 1 < MIN_VL, and
+        // both J variants need n >= 1 but vl >= 4 > k).
+        let reg = Registry::build(256);
+        let op = Op::Conv2d {
+            h: 3,
+            w: 3,
+            cin: 1,
+            cout: 2,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            dtype: DType::I8,
+            requant: None,
+        };
+        assert!(!program_for(&op, &reg).is_tunable());
     }
 }

@@ -52,13 +52,36 @@ impl B {
         self.layers.push(Op::Matmul { m: 1, n: out, k: inp, dtype: self.dtype, requant });
     }
 
-    /// Conv2d via im2col: m = output spatial, k = cin*kh*kw, n = cout.
+    /// Deprecated im2col shim: flatten a conv to its GEMM view up front
+    /// (m = output spatial, k = cin*kh*kw, n = cout), hiding the lowering
+    /// choice from the tuner. Kept only for comparison benches and the
+    /// `*-im2col` zoo variants — new layers go through [`B::conv2d`],
+    /// which leaves the im2col-vs-direct decision to the space program.
     fn conv(&mut self, spatial_out: usize, cin: usize, ksize: usize, cout: usize) {
         let requant = self.rq();
         self.layers.push(Op::Matmul {
             m: spatial_out,
             n: cout,
             k: cin * ksize * ksize,
+            dtype: self.dtype,
+            requant,
+        });
+    }
+
+    /// First-class k×k Conv2d producing an `out × out` map at `stride`
+    /// (input is the implicitly pre-padded `(out-1)*stride + k` square, so
+    /// `total_macs` equals the im2col GEMM this layer used to flatten to).
+    fn conv2d(&mut self, out: usize, cin: usize, ksize: usize, cout: usize, stride: usize) {
+        let requant = self.rq();
+        let input = (out - 1) * stride + ksize;
+        self.layers.push(Op::Conv2d {
+            h: input,
+            w: input,
+            cin,
+            cout,
+            kh: ksize,
+            kw: ksize,
+            stride,
             dtype: self.dtype,
             requant,
         });
@@ -122,7 +145,34 @@ pub fn keyword_spotting(dtype: DType) -> Model {
 }
 
 /// MLPerf-Tiny image classification: ResNet8 on CIFAR-10 (32x32x3).
+/// First-class Conv2d layers — the tuner picks each conv's lowering.
 pub fn image_classification(dtype: DType) -> Model {
+    let mut b = B::new(dtype);
+    b.conv2d(32, 3, 3, 16, 1); // stem, 32x32
+    // stack 1 (16ch, 32x32)
+    b.conv2d(32, 16, 3, 16, 1);
+    b.conv2d(32, 16, 3, 16, 1);
+    b.add(1024 * 16);
+    // stack 2 (32ch, 16x16; first conv + shortcut downsample)
+    b.conv2d(16, 16, 3, 32, 2);
+    b.conv2d(16, 32, 3, 32, 1);
+    b.conv2d(16, 16, 1, 32, 2); // 1x1 shortcut
+    b.add(256 * 32);
+    // stack 3 (64ch, 8x8)
+    b.conv2d(8, 32, 3, 64, 2);
+    b.conv2d(8, 64, 3, 64, 1);
+    b.conv2d(8, 32, 1, 64, 2);
+    b.add(64 * 64);
+    b.fc(10, 64);
+    b.build("image-classification", 200)
+}
+
+/// The pre-migration im2col view of ResNet8: every conv flattened to its
+/// GEMM up front via the deprecated [`B::conv`] shim. Kept as a zoo
+/// variant so the im2col-vs-first-class ablation is one bench away (and
+/// as the compatibility anchor: old databases key these layers as
+/// `matmul-…` tasks).
+pub fn image_classification_im2col(dtype: DType) -> Model {
     let mut b = B::new(dtype);
     b.conv(1024, 3, 3, 16); // 32x32
     // stack 1 (16ch, 32x32)
@@ -140,13 +190,13 @@ pub fn image_classification(dtype: DType) -> Model {
     b.conv(64, 32, 1, 64);
     b.add(64 * 64);
     b.fc(10, 64);
-    b.build("image-classification", 200)
+    b.build("image-classification-im2col", 200)
 }
 
 /// MLPerf-Tiny visual wake words: MobileNetV1 alpha=0.25 (96x96x3).
 pub fn visual_wake_words(dtype: DType) -> Model {
     let mut b = B::new(dtype);
-    b.conv(48 * 48, 3, 3, 8);
+    b.conv2d(48, 3, 3, 8, 2); // stem: 96x96 -> 48x48
     // (spatial_in, cin, cout, stride)
     let cfg: [(usize, usize, usize, usize); 13] = [
         (48, 8, 16, 1),
@@ -175,7 +225,7 @@ pub fn visual_wake_words(dtype: DType) -> Model {
 /// MobileNetV2 (224x224x3, width 1.0).
 pub fn mobilenet_v2(dtype: DType) -> Model {
     let mut b = B::new(dtype);
-    b.conv(112 * 112, 3, 3, 32);
+    b.conv2d(112, 3, 3, 32, 2); // stem: 224x224 -> 112x112
     // inverted residual blocks: (expansion t, cout, repeats, stride)
     let cfg: [(usize, usize, usize, usize); 7] = [
         (1, 16, 1, 1),
@@ -213,22 +263,23 @@ pub fn mobilenet_v2(dtype: DType) -> Model {
 /// ResNet18 (224x224x3).
 pub fn resnet18(dtype: DType) -> Model {
     let mut b = B::new(dtype);
-    b.conv(112 * 112, 3, 7, 64);
+    b.conv2d(112, 3, 7, 64, 2); // stem: 224x224 -> 112x112
     // (spatial, cin, cout) per stage; 2 basic blocks each.
     let stages: [(usize, usize, usize); 4] =
         [(56, 64, 64), (28, 64, 128), (14, 128, 256), (7, 256, 512)];
     for (i, (sp, cin, cout)) in stages.into_iter().enumerate() {
         let spatial = sp * sp;
-        // block 1 (possibly downsampling)
-        b.conv(spatial, cin, 3, cout);
-        b.conv(spatial, cout, 3, cout);
+        // block 1 (stages after the first downsample on entry)
+        let stride = if i > 0 { 2 } else { 1 };
+        b.conv2d(sp, cin, 3, cout, stride);
+        b.conv2d(sp, cout, 3, cout, 1);
         if i > 0 {
-            b.conv(spatial, cin, 1, cout); // 1x1 projection shortcut
+            b.conv2d(sp, cin, 1, cout, 2); // 1x1 projection shortcut
         }
         b.add(spatial * cout);
         // block 2
-        b.conv(spatial, cout, 3, cout);
-        b.conv(spatial, cout, 3, cout);
+        b.conv2d(sp, cout, 3, cout, 1);
+        b.conv2d(sp, cout, 3, cout, 1);
         b.add(spatial * cout);
     }
     b.fc(1000, 512);
@@ -327,6 +378,7 @@ pub fn by_name(name: &str, dtype: DType) -> Option<Model> {
         "anomaly-detection" => anomaly_detection(dtype),
         "keyword-spotting" => keyword_spotting(dtype),
         "image-classification" => image_classification(dtype),
+        "image-classification-im2col" => image_classification_im2col(dtype),
         "visual-wake-words" => visual_wake_words(dtype),
         "mobilenet-v2" => mobilenet_v2(dtype),
         "resnet18" => resnet18(dtype),
@@ -348,7 +400,57 @@ mod tests {
             assert!(!m.layers.is_empty(), "{name}");
             assert!(m.total_macs() > 0, "{name}");
         }
+        assert!(by_name("image-classification-im2col", DType::I8).is_some());
         assert!(by_name("nonexistent", DType::I8).is_none());
+    }
+
+    /// The conv-heavy models now emit real Conv2d ops.
+    #[test]
+    fn migrated_models_emit_first_class_convs() {
+        for name in ["image-classification", "visual-wake-words", "mobilenet-v2", "resnet18"] {
+            let m = by_name(name, DType::I8).unwrap();
+            assert!(
+                m.layers.iter().any(|l| matches!(l, Op::Conv2d { .. })),
+                "{name} must contain Conv2d layers"
+            );
+        }
+        // The im2col variant keeps the old flattened view.
+        let shim = by_name("image-classification-im2col", DType::I8).unwrap();
+        assert!(shim.layers.iter().all(|l| !matches!(l, Op::Conv2d { .. })));
+    }
+
+    /// Same math, new IR: the im2col→Conv2d migration must leave every
+    /// model's MAC total unchanged — each Conv2d's macs equal those of the
+    /// im2col GEMM it used to flatten to.
+    #[test]
+    fn conv2d_migration_preserves_total_macs() {
+        for name in ["image-classification", "visual-wake-words", "mobilenet-v2", "resnet18"] {
+            let m = by_name(name, DType::I8).unwrap();
+            let im2col_view: u64 = m
+                .layers
+                .iter()
+                .map(|l| match l {
+                    Op::Conv2d { dtype, requant, .. } => {
+                        let d = l.conv_dims().unwrap();
+                        Op::Matmul {
+                            m: d.pixels(),
+                            n: d.cout,
+                            k: d.k_col(),
+                            dtype: *dtype,
+                            requant: *requant,
+                        }
+                        .macs()
+                    }
+                    other => other.macs(),
+                })
+                .sum();
+            assert_eq!(m.total_macs(), im2col_view, "{name}");
+        }
+        // And the kept shim is the literal pre-migration model.
+        assert_eq!(
+            image_classification(DType::I8).total_macs(),
+            image_classification_im2col(DType::I8).total_macs()
+        );
     }
 
     #[test]
@@ -391,14 +493,20 @@ mod tests {
         for name in SATURN_MODELS {
             let m = by_name(name, DType::I8).unwrap();
             for l in &m.layers {
-                if let Op::Matmul { requant, .. } = l {
-                    assert!(requant.is_some(), "{name}: {l}");
+                match l {
+                    Op::Matmul { requant, .. } | Op::Conv2d { requant, .. } => {
+                        assert!(requant.is_some(), "{name}: {l}")
+                    }
+                    _ => {}
                 }
             }
             let f = by_name(name, DType::F32).unwrap();
             for l in &f.layers {
-                if let Op::Matmul { requant, .. } = l {
-                    assert!(requant.is_none());
+                match l {
+                    Op::Matmul { requant, .. } | Op::Conv2d { requant, .. } => {
+                        assert!(requant.is_none())
+                    }
+                    _ => {}
                 }
             }
         }

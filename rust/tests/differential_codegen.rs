@@ -1,0 +1,264 @@
+//! Differential codegen harness: for a seeded corpus of random operators
+//! (all four kinds — Matmul, DwConv, Eltwise, Conv2d) and random valid
+//! decision traces, every backend (scalar, autovec GCC/LLVM, muRISCV-NN,
+//! packed-SIMD, ours) is run through functional-mode `sim::execute` and
+//! must produce bit-identical int8 outputs against a plain-rust scalar
+//! reference — including the requant epilogue path.
+//!
+//! int8 only: integer semantics are exact, so any divergence is a codegen
+//! bug, never a rounding difference.
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::intrinsics::Registry;
+use rvv_tune::sim::{execute, requant_i64, BufStore, Mode, SocConfig};
+use rvv_tune::tir::{ref_conv2d_acc, DType, Op, Requant};
+use rvv_tune::tune::space::{self, ids};
+use rvv_tune::tune::program_for;
+use rvv_tune::util::Pcg;
+
+/// Everything one case needs: the op, its random inputs, and the expected
+/// outputs (ACC after accumulation, OUT after requant when applicable).
+struct Case {
+    op: Op,
+    a: Vec<i8>,
+    b: Vec<i8>,
+    bias: Vec<i32>,
+    /// For eltwise: the initial y (i8); unused otherwise.
+    y0: Vec<i8>,
+}
+
+fn rand_requant(rng: &mut Pcg) -> Requant {
+    Requant {
+        mult: (1 << 14) + rng.below(1 << 14) as i32,
+        shift: 18 + rng.below(6) as u32,
+        zp: rng.range_inclusive(-20, 20) as i32,
+    }
+}
+
+fn rand_i8s(rng: &mut Pcg, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range_inclusive(-128, 127) as i8).collect()
+}
+
+fn make_case(rng: &mut Pcg, kind: usize) -> Case {
+    let op = match kind {
+        0 => {
+            let m = rng.range_inclusive(1, 12) as usize;
+            let n = rng.range_inclusive(1, 12) as usize;
+            let k = rng.range_inclusive(4, 40) as usize;
+            Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rand_requant(rng)) }
+        }
+        1 => {
+            let spatial = rng.range_inclusive(1, 6) as usize;
+            let channels = rng.range_inclusive(2, 24) as usize;
+            let taps = *rng.choose(&[4usize, 9]);
+            let requant = rng.chance(0.5).then(|| rand_requant(rng));
+            Op::DwConv { spatial, channels, taps, dtype: DType::I8, requant }
+        }
+        2 => {
+            let len = rng.range_inclusive(8, 100) as usize;
+            Op::Eltwise { len, dtype: DType::I8 }
+        }
+        _ => {
+            let kh = rng.range_inclusive(1, 3) as usize;
+            let kw = rng.range_inclusive(1, 3) as usize;
+            let stride = rng.range_inclusive(1, 2) as usize;
+            let h = (rng.range_inclusive(1, 4) as usize - 1) * stride + kh;
+            let w = (rng.range_inclusive(1, 4) as usize - 1) * stride + kw;
+            let cin = rng.range_inclusive(1, 8) as usize;
+            let cout = rng.range_inclusive(1, 6) as usize;
+            Op::Conv2d {
+                h,
+                w,
+                cin,
+                cout,
+                kh,
+                kw,
+                stride,
+                dtype: DType::I8,
+                requant: Some(rand_requant(rng)),
+            }
+        }
+    };
+    let (a_len, b_len, acc_len) = match &op {
+        Op::Matmul { m, n, k, .. } => (m * k, n * k, m * n),
+        Op::DwConv { spatial, channels, taps, .. } => {
+            (spatial * taps * channels, taps * channels, spatial * channels)
+        }
+        Op::Eltwise { len, .. } => (*len, *len, *len),
+        Op::Conv2d { h, w, cin, cout, kh, kw, .. } => {
+            let d = op.conv_dims().unwrap();
+            (h * w * cin, cout * kh * kw * cin, d.pixels() * cout)
+        }
+    };
+    Case {
+        a: rand_i8s(rng, a_len),
+        b: rand_i8s(rng, b_len),
+        bias: (0..acc_len).map(|_| rng.range_inclusive(-2000, 2000) as i32).collect(),
+        y0: rand_i8s(rng, acc_len),
+        op,
+    }
+}
+
+/// Plain-rust reference ACC (pre-requant accumulator values).
+fn reference_acc(c: &Case) -> Vec<i64> {
+    match &c.op {
+        Op::Matmul { m, n, k, .. } => {
+            let mut acc = vec![0i64; m * n];
+            for i in 0..*m {
+                for j in 0..*n {
+                    acc[i * n + j] = c.bias[i * n + j] as i64
+                        + (0..*k)
+                            .map(|kk| c.a[i * k + kk] as i64 * c.b[j * k + kk] as i64)
+                            .sum::<i64>();
+                }
+            }
+            acc
+        }
+        Op::DwConv { spatial, channels, taps, .. } => {
+            let (s, ch, t) = (*spatial, *channels, *taps);
+            let mut acc = vec![0i64; s * ch];
+            for si in 0..s {
+                for ci in 0..ch {
+                    acc[si * ch + ci] = c.bias[si * ch + ci] as i64
+                        + (0..t)
+                            .map(|ti| {
+                                c.a[si * t * ch + ti * ch + ci] as i64
+                                    * c.b[ti * ch + ci] as i64
+                            })
+                            .sum::<i64>();
+                }
+            }
+            acc
+        }
+        Op::Eltwise { len, .. } => (0..*len)
+            .map(|i| {
+                (c.y0[i] as i64 + c.a[i] as i64 * c.b[i] as i64).clamp(-128, 127)
+            })
+            .collect(),
+        // The one shared reference with the in-crate backend unit tests
+        // (doc-hidden pub precisely so this harness cannot drift from it).
+        Op::Conv2d { .. } => {
+            ref_conv2d_acc(c.op.conv_dims().unwrap(), &c.a, &c.b, &c.bias)
+        }
+    }
+}
+
+/// Expected final output: requantized i8 when the op carries requant,
+/// raw accumulator otherwise.
+enum Expected {
+    OutI8(Vec<i8>),
+    AccI32(Vec<i32>),
+    AccI8(Vec<i8>),
+}
+
+fn expected(c: &Case) -> Expected {
+    let acc = reference_acc(c);
+    let requant = match &c.op {
+        Op::Matmul { requant, .. }
+        | Op::DwConv { requant, .. }
+        | Op::Conv2d { requant, .. } => *requant,
+        Op::Eltwise { .. } => None,
+    };
+    match (&c.op, requant) {
+        (_, Some(rq)) => Expected::OutI8(
+            acc.iter().map(|&x| requant_i64(x, rq.mult, rq.shift, rq.zp) as i8).collect(),
+        ),
+        (Op::Eltwise { .. }, None) => {
+            Expected::AccI8(acc.iter().map(|&x| x as i8).collect())
+        }
+        (_, None) => Expected::AccI32(acc.iter().map(|&x| x as i32).collect()),
+    }
+}
+
+/// Run one backend program over the case's inputs and check its output.
+fn check_backend(c: &Case, program: &rvv_tune::sim::VProgram, soc: &SocConfig, label: &str) {
+    let mut bufs = BufStore::functional(program);
+    match &c.op {
+        Op::Eltwise { .. } => {
+            bufs.set_i8(0, &c.a);
+            bufs.set_i8(1, &c.b);
+            bufs.set_i8(2, &c.y0);
+        }
+        _ => {
+            bufs.set_i8(0, &c.a);
+            bufs.set_i8(1, &c.b);
+            bufs.set_i32(2, &c.bias);
+        }
+    }
+    execute(soc, program, &mut bufs, Mode::Functional, true);
+    match expected(c) {
+        Expected::OutI8(want) => {
+            assert_eq!(bufs.get_i8(3), &want[..], "{label}: OUT mismatch for {}", c.op.key())
+        }
+        Expected::AccI32(want) => {
+            assert_eq!(bufs.get_i32(2), &want[..], "{label}: ACC mismatch for {}", c.op.key())
+        }
+        Expected::AccI8(want) => {
+            assert_eq!(bufs.get_i8(2), &want[..], "{label}: y mismatch for {}", c.op.key())
+        }
+    }
+}
+
+#[test]
+fn all_backends_bit_identical_on_all_op_kinds() {
+    let mut rng = Pcg::seeded(0xD1FF);
+    let mut ours_checked = 0usize;
+    let mut conv_direct = 0usize;
+    let mut conv_im2col = 0usize;
+    for case_idx in 0..48 {
+        let kind = case_idx % 4;
+        let c = make_case(&mut rng, kind);
+        let vlen = *rng.choose(&[256u32, 512, 1024]);
+        let soc = SocConfig::saturn(vlen);
+
+        // Fixed-schedule backends. muRISCV-NN's matmul/conv kernels are
+        // s8 -> s8 (they always requantize), so they only run on
+        // requant-carrying ops; the others run everywhere.
+        let mut scenarios = vec![Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm];
+        let has_requant = matches!(
+            &c.op,
+            Op::Matmul { requant: Some(_), .. }
+                | Op::DwConv { requant: Some(_), .. }
+                | Op::Conv2d { requant: Some(_), .. }
+        );
+        if has_requant || matches!(&c.op, Op::DwConv { .. } | Op::Eltwise { .. }) {
+            scenarios.push(Scenario::MuRiscvNn);
+        }
+        scenarios.push(Scenario::PackedSimd);
+        for sc in &scenarios {
+            let Some(program) = codegen::generate(&c.op, sc, vlen) else {
+                continue; // backend does not support this op
+            };
+            check_backend(&c, &program, &soc, sc.name());
+        }
+
+        // Ours: random valid traces from the op's space program.
+        let registry = Registry::build(vlen);
+        let space = program_for(&c.op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        for _ in 0..3 {
+            let trace = space.sample(&mut rng);
+            assert!(space.validates(&trace));
+            let sched = space::lower(&trace).expect("sampled trace lowers");
+            if trace.kind() == space::KIND_CONV2D {
+                if trace.value_of(&ids::STRATEGY) == Some(1) {
+                    conv_direct += 1;
+                } else {
+                    conv_im2col += 1;
+                }
+            }
+            let program = codegen::generate(&c.op, &Scenario::Ours(sched), vlen)
+                .expect("ours supports every tunable op");
+            check_backend(&c, &program, &soc, "ours");
+            ours_checked += 1;
+        }
+    }
+    assert!(ours_checked > 20, "too few tuned-backend checks: {ours_checked}");
+    assert!(
+        conv_direct > 0 && conv_im2col > 0,
+        "the corpus must exercise both conv lowering strategies \
+         (direct {conv_direct}, im2col {conv_im2col})"
+    );
+}

@@ -8,7 +8,7 @@ use rvv_tune::coordinator::{
     TunedWithFallback,
 };
 use rvv_tune::sim::SocConfig;
-use rvv_tune::tir::{DType, Op};
+use rvv_tune::tir::{DType, Op, Requant};
 use rvv_tune::tune::Database;
 use rvv_tune::workloads::{matmul, models};
 
@@ -335,6 +335,79 @@ fn gradient_scheduler_matches_or_beats_static_on_equal_budget() {
         assert!(grad_trials <= 200, "{name}: gradient spent {grad_trials}");
         assert!(stat_trials <= 200, "{name}: static spent {stat_trials}");
     }
+}
+
+/// The Conv2d acceptance bar: tuning a VLEN-512 Conv2d over the full
+/// space must find a *direct-lowering* trace at least as good as the best
+/// trace of a forced-im2col tuner given the same trial budget and seed.
+/// The shape is chosen so the direct path's per-ky reduction segment
+/// (kw*cin = 512) equals the im2col GEMM's ladder-top chunk: the two
+/// instruction streams match chunk for chunk, and im2col additionally
+/// pays its scalar patch-packing pass — the structural win the space
+/// program is there to discover.
+#[test]
+fn conv2d_tuning_finds_direct_lowering_at_equal_budget() {
+    use rvv_tune::intrinsics::Registry;
+    use rvv_tune::tune::space::{self, ids};
+    use rvv_tune::tune::{
+        HeuristicCostModel, OpTuner, RoundOutcome, SearchConfig, SerialMeasurer, SpaceProgram,
+    };
+    let op = Op::Conv2d {
+        h: 5,
+        w: 5,
+        cin: 128,
+        cout: 16,
+        kh: 4,
+        kw: 4,
+        stride: 1,
+        dtype: DType::I8,
+        requant: Some(Requant::default_for_tests()),
+    };
+    let soc = SocConfig::saturn(512);
+    let registry = Registry::build(512);
+    let config = SearchConfig { trials: 96, seed: 17, ..Default::default() };
+    let run = |space: SpaceProgram| -> Database {
+        let mut db = Database::new();
+        let mut model = HeuristicCostModel;
+        let mut tuner =
+            OpTuner::with_space(&op, &soc, space, &SerialMeasurer, &db, config.clone())
+                .expect("conv space is tunable");
+        while tuner.step_round(&mut model, &mut db) == RoundOutcome::Progressed {}
+        tuner.finish(&mut model, &mut db).expect("tuning produced a best");
+        db
+    };
+    let full_space = space::program_for(&op, &registry);
+    let full_db = run(full_space.clone());
+    let im2col_db = run(full_space.without(&ids::STRATEGY));
+    // Equal budgets actually spent.
+    assert!(full_db.len() <= 96 && im2col_db.len() <= 96);
+
+    let best_forced_im2col = im2col_db.best(&op.key(), &soc.name).expect("im2col best").cycles;
+    // Every forced trace really is im2col (strategy ablated away).
+    assert!(im2col_db.records().iter().all(|r| r.trace.get(&ids::STRATEGY).is_none()));
+
+    let best_direct = full_db
+        .records()
+        .iter()
+        .filter(|r| r.trace.value_of(&ids::STRATEGY) == Some(1))
+        .map(|r| r.cycles)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        best_direct.is_finite(),
+        "the full-space tuner must measure at least one direct-lowering trace"
+    );
+    assert!(
+        best_direct <= best_forced_im2col,
+        "best direct {best_direct} must be <= best forced-im2col {best_forced_im2col}"
+    );
+    // And the full space's overall winner is the direct lowering here.
+    let overall = full_db.best(&op.key(), &soc.name).unwrap();
+    assert_eq!(
+        overall.trace.value_of(&ids::STRATEGY),
+        Some(1),
+        "at this packing-dominated shape the tuned best must be direct: {}",
+        overall.schedule.describe()
+    );
 }
 
 #[test]

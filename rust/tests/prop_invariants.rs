@@ -5,7 +5,7 @@
 use rvv_tune::codegen::{self, Scenario};
 use rvv_tune::intrinsics::Registry;
 use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
-use rvv_tune::tir::{DType, Op, Requant, Schedule};
+use rvv_tune::tir::{Conv2dSchedule, DType, Op, Requant, Schedule};
 use rvv_tune::tune::{analysis, lower, program_for, Trace};
 use rvv_tune::util::Pcg;
 
@@ -343,6 +343,111 @@ fn prop_ksplit_space_contains_the_ablated_space() {
     assert!(
         best_full <= best_ablated,
         "full-space best {best_full} must be <= ablated best {best_ablated}"
+    );
+}
+
+/// A small Conv2d whose space is exhaustively enumerable: 5x5x4 input
+/// (pre-padded), 3x3 kernel, stride 2 -> 2x2 output, 4 output channels.
+fn small_conv2d() -> Op {
+    Op::Conv2d {
+        h: 5,
+        w: 5,
+        cin: 4,
+        cout: 4,
+        kh: 3,
+        kw: 3,
+        stride: 2,
+        dtype: DType::I8,
+        requant: None,
+    }
+}
+
+/// P12: the Conv2d strategy decision *partitions* the space — every
+/// enumerated trace carries the decision, lowers to the matching
+/// `Conv2dSchedule` arm (no dead traces: `lower` never returns `None` for
+/// a validated trace), and both strategies are populated.
+#[test]
+fn prop_conv2d_strategy_partitions_the_space() {
+    use rvv_tune::tune::space::{ids, KIND_CONV2D};
+    let op = small_conv2d();
+    let registry = Registry::build(256);
+    let full = program_for(&op, &registry);
+    assert!(full.is_tunable());
+    let cap = 1 << 14;
+    let traces = full.enumerate(cap);
+    assert!(traces.len() < cap, "enumeration must be exhaustive for this op");
+    let (mut direct, mut im2col) = (0usize, 0usize);
+    for (i, t) in traces.iter().enumerate() {
+        assert_eq!(t.kind(), KIND_CONV2D);
+        assert!(full.validates(t));
+        let s = lower(t);
+        match t.value_of(&ids::STRATEGY) {
+            Some(1) => {
+                direct += 1;
+                assert!(
+                    matches!(&s, Some(Schedule::Conv2d(Conv2dSchedule::Direct(_)))),
+                    "direct trace must lower direct: {}",
+                    t.describe()
+                );
+            }
+            Some(0) => {
+                im2col += 1;
+                assert!(
+                    matches!(&s, Some(Schedule::Conv2d(Conv2dSchedule::Im2col(_)))),
+                    "im2col trace must lower im2col: {}",
+                    t.describe()
+                );
+            }
+            other => panic!("strategy decision missing: {other:?}"),
+        }
+        // Spot-check emission: every few traces, the lowered schedule must
+        // emit and run in timing mode (the full set is covered by the
+        // containment test below anyway).
+        if i % 7 == 0 {
+            let p = codegen::ours::emit(&op, &s.unwrap(), 256);
+            let mut bufs = BufStore::timing(&p);
+            let r = execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Timing, true);
+            assert!(r.cycles > 0.0);
+        }
+    }
+    assert_eq!(direct + im2col, traces.len(), "strategy must partition the space");
+    assert!(direct > 0 && im2col > 0, "both strategies must be populated");
+}
+
+/// P13: space containment of the strategy ablation — the conv analog of
+/// the P11 k-split test. Every trace of `without(STRATEGY)` (forced
+/// im2col, the pre-Conv2d behaviour) corresponds to a full-space trace
+/// with strategy = im2col, so at exhaustive coverage the full space's
+/// best cycles can only be at least as good.
+#[test]
+fn prop_conv2d_space_contains_the_forced_im2col_space() {
+    use rvv_tune::tune::space::ids;
+    let op = small_conv2d();
+    let registry = Registry::build(256);
+    let soc = SocConfig::saturn(256);
+    let full = program_for(&op, &registry);
+    let ablated = full.without(&ids::STRATEGY);
+    let measure = |t: &Trace| {
+        let s = lower(t).expect("lowers");
+        let p = codegen::ours::emit(&op, &s, soc.vlen);
+        let mut bufs = BufStore::timing(&p);
+        execute(&soc, &p, &mut bufs, Mode::Timing, true).cycles
+    };
+    let best =
+        |traces: &[Trace]| traces.iter().map(|t| measure(t)).fold(f64::INFINITY, f64::min);
+    let cap = 1 << 14;
+    let full_traces = full.enumerate(cap);
+    let ablated_traces = ablated.enumerate(cap);
+    assert!(full_traces.len() < cap, "enumeration must be exhaustive for this op");
+    assert!(
+        full_traces.len() > ablated_traces.len(),
+        "the strategy decision must enlarge the space"
+    );
+    let best_full = best(&full_traces);
+    let best_ablated = best(&ablated_traces);
+    assert!(
+        best_full <= best_ablated,
+        "full-space best {best_full} must be <= forced-im2col best {best_ablated}"
     );
 }
 
