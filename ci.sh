@@ -20,6 +20,20 @@ cargo test -q --test differential_codegen
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== robustness tier: deterministic fault injection =="
+# The seeded fault harness: injected worker panics, simulator-budget
+# timeouts, torn/failed persistence writes — plus the keystone check
+# that an EMPTY fault plan is bit-identical to a service with no fault
+# machinery engaged. Run explicitly (and therefore redundantly with
+# tier-1) so a robustness regression is named in the CI log, not buried
+# in the full-suite wall.
+cargo test -q --test fault_injection
+
+echo "== robustness tier: crash-safe journal + kill-resume =="
+# Journal recovery at every byte-truncation point, kill-resume
+# bit-identity, and the atomic-snapshot contract.
+cargo test -q --test crash_resume
+
 echo "== lint: cargo fmt --check (strict) =="
 if cargo fmt --version >/dev/null 2>&1; then
   cargo fmt --check
@@ -56,6 +70,23 @@ conv_trace="$(cargo run --release --quiet -- trace --workload conv2d:8:16:16:3:1
 echo "$conv_trace"
 grep -q "strategy" <<<"$conv_trace" \
   || { echo "conv trace dump is missing the strategy decision"; exit 1; }
+
+echo "== crash-resume smoke: SIGKILL a journaled tune, then --resume =="
+# The real thing, not a simulation: start a journaled tuning run, SIGKILL
+# it mid-campaign, then resume from snapshot + journal. The resumed run
+# must recover without error and leave a database the trace replay
+# accepts. (If the run finishes before the kill lands, the resume simply
+# replays everything — the smoke still exercises recover + resume.)
+cargo run --release --quiet -- tune --workload matmul:64:int8 --soc saturn-256 \
+  --trials 4000 --no-mlp --db "$smoke_dir/crash.json" >/dev/null 2>&1 &
+tune_pid=$!
+sleep 2
+kill -KILL "$tune_pid" 2>/dev/null || true
+wait "$tune_pid" 2>/dev/null || true
+cargo run --release --quiet -- tune --workload matmul:64:int8 --soc saturn-256 \
+  --trials 60 --no-mlp --db "$smoke_dir/crash.json" --resume
+cargo run --release --quiet -- trace --workload matmul:64:int8 --soc saturn-256 \
+  --db "$smoke_dir/crash.json"
 
 echo "== perf smoke: BENCH_QUICK=1 perf_hotpath =="
 BENCH_QUICK=1 cargo bench --bench perf_hotpath

@@ -17,16 +17,26 @@
 //! (`wait_collect`), so a waiting leader contributes a worker's worth of
 //! throughput instead of idling — and the pool makes progress even if all
 //! workers are busy with another batch.
+//!
+//! **Fault containment:** a job never unwinds out of a worker. A panic in
+//! one candidate's prepare or measure chain (and any injected fault from
+//! a [`FaultPlan`]) degrades to a per-slot failure outcome at the
+//! rendezvous; the rest of the batch and the pool itself are unaffected.
+//! All mutexes are poison-tolerant for the same reason.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::sim::{ExecResult, SocConfig, VProgram};
+use crate::sim::{ExecLimits, ExecResult, SocConfig, VProgram};
 use crate::tir::Op;
-use crate::tune::search::measure_one;
-use crate::tune::{MeasureTicket, Measurer, Prepared, PrepareTicket, Trace};
+use crate::tune::search::measure_one_checked;
+use crate::tune::{
+    FaultInjector, MeasureFault, MeasureOutcome, MeasureTicket, Measurer, PrepareOutcome,
+    Prepared, PrepareTicket, Trace,
+};
 
 /// Context shared by every prepare job of one batch.
 struct PrepareCtx {
@@ -37,43 +47,59 @@ struct PrepareCtx {
 /// One unit of worker work.
 enum Job {
     /// Replay + emit + feature-extract one candidate trace.
-    Prepare { idx: usize, trace: Trace, ctx: Arc<PrepareCtx>, out: Arc<BatchSink<Prepared>> },
-    /// Timing-mode measure one emitted program.
+    Prepare {
+        idx: usize,
+        trace: Trace,
+        ctx: Arc<PrepareCtx>,
+        out: Arc<BatchSink<PrepareOutcome>>,
+    },
+    /// Timing-mode measure one emitted program. `seq` is the pool-global
+    /// job sequence number, assigned by the leader at submission time so
+    /// fault injection is deterministic no matter which worker runs the
+    /// job.
     Measure {
         idx: usize,
+        seq: u64,
         program: Arc<VProgram>,
         soc: Arc<SocConfig>,
-        out: Arc<BatchSink<ExecResult>>,
+        out: Arc<BatchSink<MeasureOutcome>>,
     },
 }
 
 impl Job {
-    /// Execute the job. A panic inside the payload (e.g. a simulator
-    /// bounds assert on a malformed candidate) poisons the batch sink
-    /// instead of killing the worker, and is re-raised on the leader at
-    /// the rendezvous — matching the old scoped-thread pool, where a
-    /// worker panic propagated on scope join.
-    fn run(self) {
-        use std::panic::{catch_unwind, AssertUnwindSafe};
+    /// Execute the job. Faults — a panic inside the payload (e.g. a
+    /// simulator bounds assert on a malformed candidate), a blown step
+    /// budget, or an injected fault — are contained to this job's slot:
+    /// the slot gets a failure outcome and every other candidate in the
+    /// batch proceeds normally.
+    fn run(self, faults: &FaultInjector) {
         match self {
             Job::Prepare { idx, trace, ctx, out } => {
-                let r = catch_unwind(AssertUnwindSafe(|| {
-                    Prepared::build(&ctx.op, &trace, &ctx.soc)
-                }));
-                match r {
-                    Ok(v) => out.put(idx, v),
-                    Err(payload) => out.poison(payload),
-                }
+                out.put(idx, Prepared::try_build(&ctx.op, &trace, &ctx.soc));
             }
-            Job::Measure { idx, program, soc, out } => {
-                let r = catch_unwind(AssertUnwindSafe(|| measure_one(&soc, &program)));
-                match r {
-                    Ok(v) => out.put(idx, v),
-                    Err(payload) => out.poison(payload),
-                }
+            Job::Measure { idx, seq, program, soc, out } => {
+                let outcome = match faults.measure_fault(seq) {
+                    Some(MeasureFault::Panic) => MeasureOutcome::Failed {
+                        reason: format!("injected fault: worker panic at measure job {seq}"),
+                    },
+                    Some(MeasureFault::SimTimeout) => {
+                        // A one-step budget models a wedged/runaway
+                        // simulation deterministically.
+                        measure_one_checked(&soc, &program, &ExecLimits { max_steps: 1 })
+                    }
+                    None => measure_one_checked(&soc, &program, &ExecLimits::DEFAULT_MEASURE),
+                };
+                out.put(idx, outcome);
             }
         }
     }
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked (the
+/// protected state is index-addressed slots and a queue — both remain
+/// consistent across an unwind, so poisoning must not cascade).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Index-addressed result collector for one batch.
@@ -85,39 +111,24 @@ struct BatchSink<T> {
 struct SinkState<T> {
     slots: Vec<Option<T>>,
     filled: usize,
-    /// Payload of the first job panic of this batch, re-raised on the
-    /// leader at the rendezvous.
-    panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
 impl<T> BatchSink<T> {
     fn new(n: usize) -> Arc<BatchSink<T>> {
         Arc::new(BatchSink {
-            state: Mutex::new(SinkState {
-                slots: (0..n).map(|_| None).collect(),
-                filled: 0,
-                panic: None,
-            }),
+            state: Mutex::new(SinkState { slots: (0..n).map(|_| None).collect(), filled: 0 }),
             done: Condvar::new(),
         })
     }
 
     fn put(&self, idx: usize, value: T) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         debug_assert!(st.slots[idx].is_none(), "slot {idx} filled twice");
         st.slots[idx] = Some(value);
         st.filled += 1;
         if st.filled == st.slots.len() {
             self.done.notify_all();
         }
-    }
-
-    fn poison(&self, payload: Box<dyn std::any::Any + Send>) {
-        let mut st = self.state.lock().unwrap();
-        if st.panic.is_none() {
-            st.panic = Some(payload);
-        }
-        self.done.notify_all();
     }
 }
 
@@ -129,12 +140,17 @@ struct PoolState {
 struct PoolShared {
     state: Mutex<PoolState>,
     ready: Condvar,
+    faults: Arc<FaultInjector>,
+    /// Monotonic measure-job sequence, assigned at submission (leader
+    /// side) so injected faults hit the same logical job regardless of
+    /// scheduling.
+    seq: AtomicU64,
 }
 
 fn worker_loop(shared: Arc<PoolShared>) {
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock(&shared.state);
             loop {
                 if let Some(j) = st.queue.pop_front() {
                     break Some(j);
@@ -142,11 +158,11 @@ fn worker_loop(shared: Arc<PoolShared>) {
                 if st.shutdown {
                     break None;
                 }
-                st = shared.ready.wait(st).unwrap();
+                st = shared.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         };
         match job {
-            Some(j) => j.run(),
+            Some(j) => j.run(&shared.faults),
             // The queue is drained before shutdown is honoured, so no
             // submitted batch is ever abandoned.
             None => return,
@@ -154,27 +170,29 @@ fn worker_loop(shared: Arc<PoolShared>) {
     }
 }
 
-/// Block until `sink` is complete, stealing queued jobs meanwhile.
-/// Re-raises the first panic of any job in the batch.
-fn wait_collect<T>(shared: &PoolShared, sink: &BatchSink<T>) -> Vec<T> {
+/// Block until `sink` is complete, stealing queued jobs meanwhile. A slot
+/// that somehow never received a result (defensive: job payloads are
+/// fault-contained and always report) degrades to `orphan()` instead of
+/// panicking the leader.
+fn wait_collect<T>(shared: &PoolShared, sink: &BatchSink<T>, orphan: impl Fn() -> T) -> Vec<T> {
     loop {
-        let job = shared.state.lock().unwrap().queue.pop_front();
+        let job = lock(&shared.state).queue.pop_front();
         if let Some(j) = job {
-            j.run();
+            j.run(&shared.faults);
             continue;
         }
-        let mut st = sink.state.lock().unwrap();
-        if let Some(payload) = st.panic.take() {
-            drop(st);
-            std::panic::resume_unwind(payload);
-        }
+        let mut st = lock(&sink.state);
         if st.filled == st.slots.len() {
-            return st.slots.iter_mut().map(|s| s.take().expect("incomplete batch")).collect();
+            return st.slots.iter_mut().map(|s| s.take().unwrap_or_else(&orphan)).collect();
         }
         // Workers are finishing the last in-flight jobs. The short timeout
         // re-polls the queue in case another leader submitted more work
         // between our pop and this wait.
-        let _ = sink.done.wait_timeout(st, Duration::from_millis(1)).unwrap();
+        let (guard, _) = sink
+            .done
+            .wait_timeout(st, Duration::from_millis(1))
+            .unwrap_or_else(PoisonError::into_inner);
+        drop(guard);
     }
 }
 
@@ -187,10 +205,19 @@ pub struct MeasurePool {
 
 impl MeasurePool {
     pub fn new(workers: usize) -> MeasurePool {
+        MeasurePool::with_faults(workers, FaultInjector::disabled())
+    }
+
+    /// A pool whose jobs consult `faults` — the deterministic
+    /// fault-injection hook. A disabled injector (the default) is checked
+    /// once per job against `None` plans and never perturbs results.
+    pub fn with_faults(workers: usize, faults: Arc<FaultInjector>) -> MeasurePool {
         let workers = workers.max(1);
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
             ready: Condvar::new(),
+            faults,
+            seq: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|_| {
@@ -218,7 +245,7 @@ impl MeasurePool {
     }
 
     fn submit(&self, jobs: Vec<Job>) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         st.queue.extend(jobs);
         drop(st);
         self.shared.ready.notify_all();
@@ -227,7 +254,7 @@ impl MeasurePool {
 
 impl Drop for MeasurePool {
     fn drop(&mut self) {
-        self.shared.state.lock().unwrap().shutdown = true;
+        lock(&self.shared.state).shutdown = true;
         self.shared.ready.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -236,12 +263,21 @@ impl Drop for MeasurePool {
 }
 
 impl Measurer for MeasurePool {
+    /// Synchronous compatibility API: like [`crate::tune::SerialMeasurer`]
+    /// (and `measure_one`) it panics if any candidate fails — callers that
+    /// want per-candidate degradation use `begin_measure`.
     fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
         if programs.len() <= 1 {
             return crate::tune::SerialMeasurer.measure(soc, programs);
         }
         self.begin_measure(soc, programs.iter().map(|p| Arc::new(p.clone())).collect())
             .wait()
+            .into_iter()
+            .map(|o| match o.into_result() {
+                Ok(res) => res,
+                Err(reason) => panic!("measurement failed: {reason}"),
+            })
+            .collect()
     }
 
     fn begin_prepare(&self, op: &Op, soc: &SocConfig, candidates: &[Trace]) -> PrepareTicket {
@@ -259,17 +295,23 @@ impl Measurer for MeasurePool {
             .collect();
         self.submit(jobs);
         let shared = Arc::clone(&self.shared);
-        PrepareTicket::Pending(Box::new(move || wait_collect(&shared, &sink)))
+        PrepareTicket::Pending(Box::new(move || {
+            wait_collect(&shared, &sink, || {
+                Err("batch slot lost: a worker died without reporting".to_string())
+            })
+        }))
     }
 
     fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
         let sink = BatchSink::new(programs.len());
         let soc = Arc::new(soc.clone());
+        let base = self.shared.seq.fetch_add(programs.len() as u64, Ordering::Relaxed);
         let jobs = programs
             .into_iter()
             .enumerate()
             .map(|(idx, program)| Job::Measure {
                 idx,
+                seq: base + idx as u64,
                 program,
                 soc: Arc::clone(&soc),
                 out: Arc::clone(&sink),
@@ -277,7 +319,11 @@ impl Measurer for MeasurePool {
             .collect();
         self.submit(jobs);
         let shared = Arc::clone(&self.shared);
-        MeasureTicket::Pending(Box::new(move || wait_collect(&shared, &sink)))
+        MeasureTicket::Pending(Box::new(move || {
+            wait_collect(&shared, &sink, || MeasureOutcome::Failed {
+                reason: "batch slot lost: a worker died without reporting".to_string(),
+            })
+        }))
     }
 }
 
@@ -347,6 +393,8 @@ mod tests {
         let serial = SerialMeasurer.begin_prepare(&op, &soc, &candidates).wait();
         assert_eq!(pooled.len(), serial.len());
         for (a, b) in pooled.iter().zip(&serial) {
+            let a = a.as_ref().expect("pooled prepare succeeded");
+            let b = b.as_ref().expect("serial prepare succeeded");
             assert_eq!(a.features, b.features);
             assert_eq!(a.program.code_size_bytes(), b.program.code_size_bytes());
         }
@@ -376,13 +424,14 @@ mod tests {
             .begin_measure(&soc, to_measure)
             .wait();
         for (a, b) in results.iter().zip(&serial) {
-            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.ok().unwrap().cycles, b.ok().unwrap().cycles);
         }
     }
 
     /// A panic inside a worker job (malformed candidate tripping a
-    /// simulator assert) must propagate to the leader at the rendezvous,
-    /// not deadlock the batch.
+    /// simulator assert) must propagate to the leader through the
+    /// synchronous compatibility API — `measure` promises all-or-panic,
+    /// and the failure reason carries the original assert message.
     #[test]
     #[should_panic(expected = "out of bounds")]
     fn worker_panic_propagates_to_leader() {
@@ -427,6 +476,44 @@ mod tests {
             assert_eq!(serial.1, pooled.1, "{workers} workers: best schedule");
             assert_eq!(serial.2, pooled.2, "{workers} workers: history");
             assert_eq!(serial.3, pooled.3, "{workers} workers: full record stream");
+        }
+    }
+
+    /// An injected worker fault is contained to its slot: the other
+    /// candidates of the batch still match serial measurement bit for
+    /// bit, and the same plan fails the same slot on every run.
+    #[test]
+    fn injected_fault_is_contained_to_its_slot() {
+        use crate::tune::FaultPlan;
+        let soc = SocConfig::saturn(256);
+        let progs: Vec<Arc<VProgram>> =
+            programs(&[16usize, 24, 32, 48]).into_iter().map(Arc::new).collect();
+        let serial = SerialMeasurer.begin_measure(&soc, progs.clone()).wait();
+        let run = |plan: FaultPlan| {
+            let pool = MeasurePool::with_faults(3, FaultInjector::new(plan));
+            pool.begin_measure(&soc, progs.clone()).wait()
+        };
+        for plan in [
+            FaultPlan { panic_at_measure_job: Some(1), ..FaultPlan::none() },
+            FaultPlan { sim_timeout_at_job: Some(1), ..FaultPlan::none() },
+        ] {
+            for _ in 0..2 {
+                let outcomes = run(plan.clone());
+                assert_eq!(outcomes.len(), 4);
+                for (i, (o, s)) in outcomes.iter().zip(&serial).enumerate() {
+                    if i == 1 {
+                        let MeasureOutcome::Failed { reason } = o else {
+                            panic!("slot 1 should fail under {plan:?}")
+                        };
+                        assert!(
+                            reason.contains("injected fault") || reason.contains("step budget"),
+                            "{reason}"
+                        );
+                    } else {
+                        assert_eq!(o.ok().unwrap().cycles, s.ok().unwrap().cycles, "slot {i}");
+                    }
+                }
+            }
         }
     }
 

@@ -18,6 +18,7 @@
 //!   the operator key).
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::codegen::{self, CodeSizeModel, Scenario};
@@ -25,11 +26,12 @@ use crate::intrinsics::Registry;
 use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, TraceCounts};
 use crate::tir::Op;
 use crate::tune::{
-    extract_tasks, tune_op, CostModel, Database, HeuristicCostModel, MlpCostModel, OpTuner,
-    RoundOutcome, SchedulerKind, SearchConfig, SharedDatabase, TaskScheduler, TaskView,
-    TuneOutcome, TuneRecord, TuneTask,
+    extract_tasks, journal_path, tune_op, Checkpoint, CostModel, Database, FaultInjector,
+    FaultPlan, HeuristicCostModel, JournalEntry, JournalWriter, MlpCostModel, OpTuner,
+    ReplayCache, RoundOutcome, SchedulerKind, SearchConfig, SharedDatabase, TaskScheduler,
+    TaskView, TuneOutcome, TuneRecord, TuneTask,
 };
-use crate::util::fnv1a_str;
+use crate::util::{fnv1a_str, Json};
 
 use super::policy::ScenarioPolicy;
 use super::pool::MeasurePool;
@@ -82,6 +84,12 @@ pub struct ServiceOptions {
     /// [`SchedulerKind::Static`] is the up-front proportional split kept
     /// as the ablation baseline.
     pub scheduler: SchedulerKind,
+    /// Deterministic fault-injection plan, threaded through the worker
+    /// pool and the persistence paths. The default (empty) plan injects
+    /// nothing and leaves every result bit-identical to a faultless build
+    /// — it exists so robustness tests can reproduce worker crashes, torn
+    /// writes, and runaway candidates on demand.
+    pub faults: FaultPlan,
 }
 
 impl Default for ServiceOptions {
@@ -92,6 +100,7 @@ impl Default for ServiceOptions {
             workers: MeasurePool::default_workers(),
             db_shards: SharedDatabase::DEFAULT_SHARDS,
             scheduler: SchedulerKind::Gradient,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -176,6 +185,12 @@ pub struct NetworkTuneReport {
     pub convergence: Vec<f64>,
     /// Total candidates measured across all tasks.
     pub trials_measured: usize,
+    /// Of `trials_measured`, how many were satisfied from a recovery
+    /// cache (`--resume`) instead of the simulator.
+    pub replayed_trials: usize,
+    /// Candidates that failed to prepare or measure across all tasks
+    /// (quarantined; not part of `trials_measured`).
+    pub failed_trials: usize,
 }
 
 impl NetworkTuneReport {
@@ -236,6 +251,10 @@ pub struct TuneService {
     target: Target,
     db: SharedDatabase,
     pool: MeasurePool,
+    /// The service-wide fault injector (disabled unless
+    /// [`ServiceOptions::faults`] named a plan). Shared with the pool and
+    /// the persistence paths.
+    faults: Arc<FaultInjector>,
     opts: ServiceOptions,
     model_factory: ModelFactory,
     model_kind: &'static str,
@@ -284,9 +303,11 @@ impl TuneService {
         } else {
             ("heuristic", Box::new(|_seed: u64| Box::new(HeuristicCostModel) as Box<dyn CostModel>))
         };
+        let faults = FaultInjector::new(opts.faults.clone());
         TuneService {
             db: SharedDatabase::new(opts.db_shards),
-            pool: MeasurePool::new(opts.workers),
+            pool: MeasurePool::with_faults(opts.workers, Arc::clone(&faults)),
+            faults,
             model_factory,
             model_kind,
             target,
@@ -317,6 +338,25 @@ impl TuneService {
     /// The service's record store (snapshot it for persistence/reports).
     pub fn db(&self) -> &SharedDatabase {
         &self.db
+    }
+
+    /// Attach a crash journal paired with the snapshot at `path`: from now
+    /// on every record added to the service database is also appended (and
+    /// fsynced) to `<path>.journal.jsonl`, so a killed process loses at
+    /// most the in-flight line. Truncates any stale journal — call after
+    /// `Database::recover` has consumed it, never before.
+    pub fn attach_journal(&self, path: &Path) -> anyhow::Result<()> {
+        let writer = JournalWriter::create_truncate(&journal_path(path))?
+            .with_faults(Arc::clone(&self.faults));
+        self.db.attach_journal(writer);
+        Ok(())
+    }
+
+    /// Persist the database to `path`. With a journal attached this is
+    /// `save_and_compact`: snapshot atomically, then reset the journal
+    /// (its records are now folded into the snapshot).
+    pub fn save_db(&self, path: &Path) -> anyhow::Result<()> {
+        self.db.save_and_compact(path, Some(&self.faults))
     }
 
     /// Serve one tuning request. The search seed is derived from the
@@ -429,6 +469,25 @@ impl TuneService {
         self.tune_network_with(layers, total_trials, min_per_task, sched.as_mut())
     }
 
+    /// Resume a killed `tune_network` run: the campaign replays from
+    /// scratch (same seeds, same scheduler decisions), but candidates
+    /// whose measurements were recovered — from the snapshot plus the
+    /// crash journal, see `Database::recover` — are satisfied from
+    /// `cache` instead of the simulator. The report is bit-identical to
+    /// an uninterrupted run; `replayed_trials` says how much measurement
+    /// work the journal saved. The service database must start empty
+    /// (resumption rebuilds the record stream; attach a fresh journal).
+    pub fn tune_network_resumed(
+        &self,
+        layers: &[Op],
+        total_trials: usize,
+        min_per_task: usize,
+        cache: &ReplayCache,
+    ) -> NetworkTuneReport {
+        let mut sched = self.opts.scheduler.make();
+        self.tune_network_impl(layers, total_trials, min_per_task, sched.as_mut(), Some(cache))
+    }
+
     /// [`TuneService::tune_network`] with an explicit scheduler (the
     /// static-vs-gradient ablation drives both through here).
     ///
@@ -447,6 +506,17 @@ impl TuneService {
         total_trials: usize,
         min_per_task: usize,
         sched: &mut dyn TaskScheduler,
+    ) -> NetworkTuneReport {
+        self.tune_network_impl(layers, total_trials, min_per_task, sched, None)
+    }
+
+    fn tune_network_impl(
+        &self,
+        layers: &[Op],
+        total_trials: usize,
+        min_per_task: usize,
+        sched: &mut dyn TaskScheduler,
+        cache: Option<&ReplayCache>,
     ) -> NetworkTuneReport {
         let soc_name = self.target.soc.name.clone();
         let tasks = extract_tasks(layers);
@@ -485,7 +555,7 @@ impl TuneService {
                 let model = (self.model_factory)(config.seed);
                 let local = self.db.checkout(&key, &soc_name);
                 let committed = local.len();
-                let tuner = OpTuner::new(
+                let mut tuner = OpTuner::new(
                     &t.op,
                     &self.target.soc,
                     &self.target.registry,
@@ -493,6 +563,11 @@ impl TuneService {
                     &local,
                     config,
                 );
+                if let (Some(tu), Some(c)) =
+                    (tuner.as_mut(), cache.and_then(|c| c.for_op(&key, &soc_name)))
+                {
+                    tu.set_replay(c.clone());
+                }
                 let tunable = tuner.is_some();
                 TaskRun {
                     task: t,
@@ -507,6 +582,22 @@ impl TuneService {
                 }
             })
             .collect();
+
+        // Stamp the journal with what this campaign is, so a recovery can
+        // sanity-check it resumes the same network/seed/scheduler.
+        if self.db.journal_attached() {
+            self.db.journal_note(&JournalEntry::Meta(Json::obj(vec![
+                ("campaign", Json::str("tune_network")),
+                ("scheduler", Json::str(sched.name())),
+                ("seed", Json::Num(self.opts.seed as f64)),
+                ("total_trials", Json::Num(total_trials as f64)),
+                ("min_per_task", Json::Num(min_per_task as f64)),
+                (
+                    "tasks",
+                    Json::Arr(runs.iter().map(|r| Json::str(r.key.clone())).collect()),
+                ),
+            ])));
+        }
 
         let mut remaining = plan.total;
         let mut convergence: Vec<f64> = Vec::new();
@@ -548,9 +639,25 @@ impl TuneService {
             if outcome == RoundOutcome::Done {
                 r.done = true;
             }
+            if outcome == RoundOutcome::Aborted {
+                // The tuner hit its consecutive-failure cap; it already
+                // reported why. The task keeps whatever it measured and
+                // the rest of the network continues on its budget.
+                r.done = true;
+            }
+            let checkpoint = JournalEntry::Checkpoint(Checkpoint {
+                task: r.key.clone(),
+                queued: tuner.queued(),
+                measured: tuner.measured(),
+                best_cycles: tuner.best_cycles(),
+            });
             // Publish this round's drained measurements right away.
             self.db.commit(&r.local, r.committed);
             r.committed = r.local.len();
+            // Progress marker after the records it summarizes (recovery
+            // reads it for reporting only; records are the source of
+            // truth).
+            self.db.journal_note(&checkpoint);
             push_convergence(&mut convergence, &runs, &soc_name);
         }
 
@@ -558,6 +665,8 @@ impl TuneService {
         // round, commit the tails, and collect the outcomes.
         let mut outcomes = Vec::with_capacity(runs.len());
         let mut trials_measured = 0usize;
+        let mut replayed_trials = 0usize;
+        let mut failed_trials = 0usize;
         for r in &mut runs {
             let outcome = match r.tuner.take() {
                 Some(tuner) => tuner.finish(r.model.as_mut(), &mut r.local),
@@ -567,12 +676,21 @@ impl TuneService {
             r.committed = r.local.len();
             if let Some(o) = &outcome {
                 trials_measured += o.trials_measured;
+                replayed_trials += o.replayed_trials;
+                failed_trials += o.failed_trials;
             }
             outcomes.push((r.key.clone(), outcome));
         }
         push_convergence(&mut convergence, &runs, &soc_name);
 
-        NetworkTuneReport { scheduler: sched.name(), outcomes, convergence, trials_measured }
+        NetworkTuneReport {
+            scheduler: sched.name(),
+            outcomes,
+            convergence,
+            trials_measured,
+            replayed_trials,
+            failed_trials,
+        }
     }
 
     /// End-to-end network latency + aggregate trace under the scenarios a

@@ -26,7 +26,7 @@ use crate::workloads::{matmul, models};
 use super::figures::{self, FigOpts};
 use super::table::{fnum, pct, Table};
 
-const FLAGS: [&str; 4] = ["quick", "trace", "no-mlp", "help"];
+const FLAGS: [&str; 5] = ["quick", "trace", "no-mlp", "resume", "help"];
 
 /// Entry point; returns the process exit code.
 pub fn run(argv: Vec<String>) -> i32 {
@@ -73,6 +73,10 @@ USAGE: rvv-tune <subcommand> [options]
   ablation  design-choice ablations: --id vl-ladder | j-variant | cost-model
   tune      tune one workload: --workload matmul:SIZE:DTYPE |
             conv2d:OUT:CIN:COUT:K:STRIDE:DTYPE | model:NAME:DTYPE
+            with --db PATH every measurement is also journaled to
+            PATH.journal.jsonl (crash-safe); --resume recovers the
+            snapshot + journal of a killed run and replays it without
+            re-measuring recovered candidates
   trace     dump the decision trace of the best record per op (for a
             Conv2d this shows the strategy decision first — im2col vs
             direct — then the branch's decisions):
@@ -86,7 +90,9 @@ COMMON OPTIONS
   --trials N        tuning budget        --quick     reduced sweep
   --seed N          PRNG seed            --no-mlp    heuristic cost model
   --out DIR         report directory     --workers N measurement threads
-  --scheduler gradient|static   network trial scheduler (default gradient)"
+  --scheduler gradient|static   network trial scheduler (default gradient)
+  --db PATH         tune: save + journal the database; trace: read it
+  --resume          tune: recover --db (snapshot + crash journal) first"
     );
 }
 
@@ -238,6 +244,44 @@ fn cmd_tune(args: &Args) -> i32 {
         }
     };
     let trials = args.get_usize("trials", default_trials);
+    let db_path = args.get("db").map(PathBuf::from);
+    let resume = args.flag("resume");
+    if resume && db_path.is_none() {
+        eprintln!("--resume requires --db PATH (the snapshot + journal to recover)");
+        return 2;
+    }
+    // Recover BEFORE attaching a fresh journal: attaching truncates the
+    // journal file, so the old one must be consumed first.
+    let replay = if resume {
+        let path = db_path.as_ref().expect("checked above");
+        match crate::tune::Database::recover(path) {
+            Ok((db, stats)) => {
+                println!(
+                    "recovered {} records ({} snapshot + {} journal, {} duplicate, \
+                     {} corrupt record(s) dropped{})",
+                    db.len(),
+                    stats.snapshot_records,
+                    stats.journal_records,
+                    stats.duplicate_records,
+                    stats.dropped_records,
+                    if stats.torn_journal { "; journal tail was torn" } else { "" },
+                );
+                Some(crate::tune::ReplayCache::from_database(&db))
+            }
+            Err(e) => {
+                eprintln!("recover failed: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    if let Some(path) = &db_path {
+        if let Err(e) = service.attach_journal(path) {
+            eprintln!("journal attach failed: {e:#}");
+            return 1;
+        }
+    }
     println!(
         "tuning {name} on {} ({} layers, cost model: {}, {} trials)",
         service.soc().name,
@@ -246,7 +290,10 @@ fn cmd_tune(args: &Args) -> i32 {
         trials
     );
     let t0 = std::time::Instant::now();
-    let report = service.tune_network(&layers, trials, 10.min(trials));
+    let report = match &replay {
+        Some(cache) => service.tune_network_resumed(&layers, trials, 10.min(trials), cache),
+        None => service.tune_network(&layers, trials, 10.min(trials)),
+    };
     let mut t = Table::new(
         format!(
             "tuning results: {name} on {} ({} scheduler)",
@@ -295,12 +342,23 @@ fn cmd_tune(args: &Args) -> i32 {
         "measured {measured} candidates in {dt:.1}s ({:.1} candidates/s; the paper's testbed: ~0.1/s)",
         measured as f64 / dt.max(1e-9)
     );
-    if let Some(db_path) = args.get("db") {
-        if let Err(e) = service.db().save(&PathBuf::from(db_path)) {
-            eprintln!("db save failed: {e}");
+    if report.replayed_trials > 0 {
+        println!(
+            "  of those, {} were replayed from the recovered journal (not re-simulated)",
+            report.replayed_trials
+        );
+    }
+    if report.failed_trials > 0 {
+        println!("  {} candidate(s) failed and were quarantined", report.failed_trials);
+    }
+    if let Some(path) = &db_path {
+        // save_db compacts: the snapshot absorbs the journal, which is
+        // then reset (a later crash-free rerun starts from a clean pair).
+        if let Err(e) = service.save_db(path) {
+            eprintln!("db save failed: {e:#}");
             return 1;
         }
-        println!("database saved to {db_path}");
+        println!("database saved to {}", path.display());
     }
     0
 }

@@ -347,6 +347,46 @@ impl Compiler<'_> {
     }
 }
 
+/// Execution budget for one timing run. One "step" is one compiled-node
+/// execution (loop iterations re-count their body nodes), so the budget
+/// bounds wall-clock work, not simulated cycles — a runaway candidate
+/// (e.g. a degenerate schedule exploding the loop nest) hits the cap and
+/// fails instead of hanging a measurement worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecLimits {
+    pub max_steps: u64,
+}
+
+impl ExecLimits {
+    /// No budget: the interpreter-compat path (`sim::execute`).
+    pub const UNBOUNDED: ExecLimits = ExecLimits { max_steps: u64::MAX };
+    /// Default measurement budget. Orders of magnitude above any real
+    /// candidate in the tuning spaces (the largest benched op, 256³,
+    /// executes well under 2^30 nodes), so it never perturbs legitimate
+    /// measurements — results stay bit-identical to an unbounded run.
+    pub const DEFAULT_MEASURE: ExecLimits = ExecLimits { max_steps: 1 << 34 };
+}
+
+impl Default for ExecLimits {
+    fn default() -> ExecLimits {
+        ExecLimits::DEFAULT_MEASURE
+    }
+}
+
+/// A timing run exceeded its step budget (see [`ExecLimits`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimBudgetExceeded {
+    pub max_steps: u64,
+}
+
+impl std::fmt::Display for SimBudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "simulator step budget exceeded: more than {} steps", self.max_steps)
+    }
+}
+
+impl std::error::Error for SimBudgetExceeded {}
+
 /// Execute a compiled program. Returns (cycles, trace).
 pub fn run(
     prog: &CompiledProgram,
@@ -355,15 +395,44 @@ pub fn run(
     bases: &[u64],
     buf_lens: &[usize],
 ) -> (f64, TraceCounts) {
+    run_limited(prog, soc, cache, bases, buf_lens, ExecLimits::UNBOUNDED)
+        .expect("unbounded run cannot exceed its budget")
+}
+
+/// Execute a compiled program under a step budget. The budget check is
+/// one counter increment + compare per node and never alters cycles or
+/// trace accounting, so within-budget results are bit-identical to
+/// [`run`].
+pub fn run_limited(
+    prog: &CompiledProgram,
+    soc: &SocConfig,
+    cache: &mut Cache,
+    bases: &[u64],
+    buf_lens: &[usize],
+    limits: ExecLimits,
+) -> Result<(f64, TraceCounts), SimBudgetExceeded> {
     let mut vars = vec![0i64; prog.n_vars];
     let mut cycles = 0.0;
     let mut trace = [0u64; 8];
-    run_block(&prog.root, prog, soc, cache, bases, buf_lens, &mut vars, &mut cycles, &mut trace);
+    let mut steps = 0u64;
+    run_block(
+        &prog.root,
+        prog,
+        soc,
+        cache,
+        bases,
+        buf_lens,
+        &mut vars,
+        &mut cycles,
+        &mut trace,
+        &mut steps,
+        limits.max_steps,
+    )?;
     let mut tc = TraceCounts::default();
     for (i, g) in InstrGroup::ALL.iter().enumerate() {
         tc.add(*g, trace[i]);
     }
-    (cycles, tc)
+    Ok((cycles, tc))
 }
 
 #[inline]
@@ -409,8 +478,14 @@ fn run_block(
     vars: &mut [i64],
     cycles: &mut f64,
     trace: &mut [u64; 8],
-) {
+    steps: &mut u64,
+    max_steps: u64,
+) -> Result<(), SimBudgetExceeded> {
     for node in &block.nodes {
+        *steps += 1;
+        if *steps > max_steps {
+            return Err(SimBudgetExceeded { max_steps });
+        }
         match node {
             CNode::Static { cycles: c, trace: t } => {
                 *cycles += c;
@@ -436,21 +511,28 @@ fn run_block(
                 trace[InstrGroup::Scalar as usize] += book_instrs;
                 *cycles += book_cycles;
                 vars[*var] = 0;
-                run_block(iter0, prog, soc, cache, bases, buf_lens, vars, cycles, trace);
+                run_block(
+                    iter0, prog, soc, cache, bases, buf_lens, vars, cycles, trace, steps,
+                    max_steps,
+                )?;
                 let body = steady.as_ref().unwrap_or(iter0);
                 for i in 1..*extent {
                     vars[*var] = i as i64;
-                    run_block(body, prog, soc, cache, bases, buf_lens, vars, cycles, trace);
+                    run_block(
+                        body, prog, soc, cache, bases, buf_lens, vars, cycles, trace, steps,
+                        max_steps,
+                    )?;
                 }
             }
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use crate::codegen::{self, Scenario};
-    use crate::sim::{execute, BufStore, Mode, SocConfig};
+    use crate::sim::{execute, execute_limited, BufStore, ExecLimits, Mode, SocConfig};
     use crate::tir::{DType, Op};
 
     /// The compiled timing path must agree with the interpreter exactly
@@ -471,5 +553,29 @@ mod tests {
             assert_eq!(rf.trace, rt.trace, "{}", scenario.name());
             assert_eq!(rf.cache, rt.cache, "{}", scenario.name());
         }
+    }
+
+    /// The step budget: within budget the result is bit-identical to the
+    /// unbounded run; a tiny budget fails with the recognizable error
+    /// instead of running on.
+    #[test]
+    fn step_budget_fails_runaways_without_perturbing_results() {
+        let soc = SocConfig::saturn(256);
+        let op = Op::square_matmul(32, DType::I8);
+        let p = codegen::generate(&op, &Scenario::AutovecGcc, soc.vlen).unwrap();
+        let mut b1 = BufStore::timing(&p);
+        let unbounded = execute(&soc, &p, &mut b1, Mode::Timing, true);
+        let mut b2 = BufStore::timing(&p);
+        let budgeted =
+            execute_limited(&soc, &p, &mut b2, Mode::Timing, true, ExecLimits::DEFAULT_MEASURE)
+                .unwrap();
+        assert_eq!(unbounded.cycles, budgeted.cycles);
+        assert_eq!(unbounded.trace, budgeted.trace);
+        assert_eq!(unbounded.cache, budgeted.cache);
+        let mut b3 = BufStore::timing(&p);
+        let err =
+            execute_limited(&soc, &p, &mut b3, Mode::Timing, true, ExecLimits { max_steps: 4 })
+                .unwrap_err();
+        assert!(err.to_string().contains("step budget exceeded"), "{err}");
     }
 }

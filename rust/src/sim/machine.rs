@@ -253,6 +253,24 @@ pub fn execute(
     mode: Mode,
     warm: bool,
 ) -> ExecResult {
+    execute_limited(soc, program, bufs, mode, warm, super::compiled::ExecLimits::UNBOUNDED)
+        .expect("unbounded execution cannot exceed its budget")
+}
+
+/// [`execute`] under a step budget: a runaway program returns
+/// `Err(SimBudgetExceeded)` instead of running forever, so a measurement
+/// worker can fail one candidate gracefully. The budget applies to the
+/// timing path (the only one the tuner measures through); the functional
+/// interpreter path, used for correctness checks on trusted generators,
+/// ignores it. Within budget, results are bit-identical to [`execute`].
+pub fn execute_limited(
+    soc: &SocConfig,
+    program: &VProgram,
+    bufs: &mut BufStore,
+    mode: Mode,
+    warm: bool,
+    limits: super::compiled::ExecLimits,
+) -> Result<ExecResult, super::compiled::SimBudgetExceeded> {
     assert_eq!(bufs.bufs.len(), program.buffers.len(), "buffer store mismatch");
     for (decl, data) in program.buffers.iter().zip(&bufs.bufs) {
         assert_eq!(decl.len, data.len(), "buffer {} length mismatch", decl.name);
@@ -280,8 +298,8 @@ pub fn execute(
         let buf_lens: Vec<usize> = program.buffers.iter().map(|b| b.len).collect();
         let compiled = super::compiled::compile(program, soc);
         let (cycles, trace) =
-            super::compiled::run(&compiled, soc, &mut cache, &bases, &buf_lens);
-        return ExecResult { cycles, trace, cache: cache.stats };
+            super::compiled::run_limited(&compiled, soc, &mut cache, &bases, &buf_lens, limits)?;
+        return Ok(ExecResult { cycles, trace, cache: cache.stats });
     }
 
     let mut m = Machine {
@@ -300,7 +318,7 @@ pub fn execute(
     };
     m.run_nodes(&program.body, bufs);
 
-    ExecResult { cycles: m.cycles, trace: m.trace, cache: m.cache.stats }
+    Ok(ExecResult { cycles: m.cycles, trace: m.trace, cache: m.cache.stats })
 }
 
 impl<'a> Machine<'a> {

@@ -13,7 +13,8 @@ pub mod vecunit;
 pub mod vprogram;
 
 pub use cache::{Cache, CacheParams, CacheStats};
-pub use machine::{execute, requant_i64, BufData, BufStore, ExecResult, Mode};
+pub use compiled::{ExecLimits, SimBudgetExceeded};
+pub use machine::{execute, execute_limited, requant_i64, BufData, BufStore, ExecResult, Mode};
 pub use soc::SocConfig;
 pub use trace::TraceCounts;
 pub use vprogram::{AddrExpr, BufId, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram, VarId};

@@ -5,8 +5,16 @@
 //! replayable probabilistic-program execution), plus the schedule the
 //! trace lowers to, cached for codegen and reports. The on-disk format is
 //! version-tagged ([`DB_FORMAT_VERSION`]): pre-trace files (format v1, a
-//! bare record array whose records carry raw schedules) are rejected with
-//! a clear versioned error instead of deserializing silently wrong.
+//! bare record array whose records carry raw schedules) and v2 files
+//! (trace records without the crash journal) are rejected with a clear
+//! versioned error instead of deserializing silently wrong.
+//!
+//! Persistence is crash-safe: [`Database::save`] writes atomically
+//! (temp file + fsync + rename), [`SharedDatabase`] can journal every
+//! committed record to an append-only sibling `.journal.jsonl`
+//! (see [`crate::tune::journal`]), and [`Database::recover`] rebuilds the
+//! state a killed process left behind — last snapshot plus the journal's
+//! valid prefix, with structural damage salvaged instead of fatal.
 //!
 //! Two flavours:
 //!
@@ -19,23 +27,30 @@
 //!   `Database` and commit their delta back, keeping shard critical
 //!   sections short.
 
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashSet};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::tir::Schedule;
+use crate::tune::fault::{FaultInjector, FsFault};
+use crate::tune::journal::{self, JournalEntry, JournalWriter};
 use crate::tune::space;
 use crate::tune::trace::Trace;
 use crate::util::{fnv1a_str, Json};
 
 /// On-disk database format. v1 (pre-trace) stored raw schedules in an
-/// untagged array; v2 stores decision traces under a version tag.
-pub const DB_FORMAT_VERSION: u64 = 2;
+/// untagged array; v2 stored decision traces under a version tag; v3
+/// (current) keeps the v2 record schema byte-for-byte but pairs the
+/// snapshot with an append-only crash journal, so a v3 reader must not
+/// silently accept files whose durability story it cannot vouch for.
+pub const DB_FORMAT_VERSION: u64 = 3;
 
 /// One measured candidate.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TuneRecord {
     pub op_key: String,
     pub soc: String,
@@ -71,7 +86,7 @@ impl TuneRecord {
         self.macs as f64 / self.cycles.max(1.0)
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         Json::obj(vec![
             ("op", Json::str(&self.op_key)),
             ("soc", Json::str(&self.soc)),
@@ -82,7 +97,7 @@ impl TuneRecord {
         ])
     }
 
-    fn from_json(j: &Json) -> Option<TuneRecord> {
+    pub(crate) fn from_json(j: &Json) -> Option<TuneRecord> {
         let trace = Trace::from_json(j.get("trace")?)?;
         let schedule = space::lower(&trace)?;
         Some(TuneRecord {
@@ -95,6 +110,41 @@ impl TuneRecord {
             trial: j.get("trial")?.as_usize()?,
         })
     }
+
+    /// Identity used to dedup a record stream during recovery (a resumed
+    /// campaign may have re-journaled records the snapshot already holds).
+    fn recover_key(&self) -> (String, String, u64, usize) {
+        (self.op_key.clone(), self.soc.clone(), self.trace.fnv_hash(), self.trial)
+    }
+}
+
+/// Outcome of a best-effort [`Database::load_salvage`].
+pub struct Salvage {
+    pub db: Database,
+    /// Structurally corrupt records that were skipped.
+    pub dropped: usize,
+    /// Human-readable note when the whole file had to be written off.
+    pub note: Option<String>,
+}
+
+/// What [`Database::recover`] found and discarded.
+#[derive(Debug, Default)]
+pub struct RecoverStats {
+    pub snapshot_records: usize,
+    /// Journal records replayed on top of the snapshot (after dedup).
+    pub journal_records: usize,
+    /// Journal records already present in the snapshot (an interrupted
+    /// resume re-journals its replayed prefix; harmless, value-identical).
+    pub duplicate_records: usize,
+    /// Corrupt snapshot records skipped by salvage.
+    pub dropped_records: usize,
+    /// Journal lines discarded as a torn tail.
+    pub dropped_journal_lines: usize,
+    pub torn_journal: bool,
+    pub salvage_note: Option<String>,
+    pub checkpoints: usize,
+    /// Campaign identity line, if the journal holds one.
+    pub meta: Option<Json>,
 }
 
 /// In-memory database with (op, soc)-keyed best lookup.
@@ -155,10 +205,21 @@ impl Database {
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_with(path, None)
+    }
+
+    /// Atomic save: serialize, write a sibling temp file, fsync, rename
+    /// over the target. A crash at any point leaves either the previous
+    /// snapshot or the new one on disk — never a torn mix. `faults` lets
+    /// tests inject deterministic write failures and torn writes (the
+    /// torn path writes directly to the final file, modelling the
+    /// pre-atomic writer this replaced).
+    pub fn save_with(&self, path: &Path, faults: Option<&FaultInjector>) -> Result<()> {
         let file = Json::obj(vec![
             ("version", Json::num(DB_FORMAT_VERSION as f64)),
             ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
         ]);
+        let text = file.to_pretty();
         // `parent()` yields Some("") for bare file names — nothing to
         // create there, but a real parent that cannot be created must
         // fail loudly (the silent `.ok()` here used to turn a bad
@@ -169,12 +230,132 @@ impl Database {
                     .with_context(|| format!("creating {parent:?}"))?;
             }
         }
-        std::fs::write(path, file.to_pretty()).with_context(|| format!("writing {path:?}"))
+        if let Some(f) = faults {
+            match f.fs_fault(f.next_fs_op()) {
+                Some(FsFault::Fail) => {
+                    bail!("injected fault: fs write failure saving {path:?}")
+                }
+                Some(FsFault::Torn { at_byte }) => {
+                    let k = at_byte.min(text.len());
+                    std::fs::write(path, &text.as_bytes()[..k])
+                        .with_context(|| format!("writing {path:?}"))?;
+                    bail!("injected fault: torn save at byte {k} writing {path:?}");
+                }
+                None => {}
+            }
+        }
+        let tmp = tmp_sibling(path);
+        let written = (|| -> Result<()> {
+            let mut f =
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(text.as_bytes()).with_context(|| format!("writing {tmp:?}"))?;
+            f.sync_all().with_context(|| format!("syncing {tmp:?}"))
+        })();
+        if let Err(e) = written {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+        // Best-effort directory fsync so the rename itself is durable.
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(parent) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Database> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("db parse: {e}"))?;
+        let mut db = Database::new();
+        for (i, item) in Database::checked_records(&j, path)?.iter().enumerate() {
+            let rec = TuneRecord::from_json(item).ok_or_else(|| {
+                anyhow!("db record {i}: bad record (corrupt trace or unknown lowering)")
+            })?;
+            db.add(rec);
+        }
+        Ok(db)
+    }
+
+    /// Best-effort load for crash recovery: structural damage degrades
+    /// instead of failing. An unparseable file (torn by a pre-atomic
+    /// writer or external corruption) yields an empty database plus a
+    /// note — recovery then proceeds from the journal alone — and each
+    /// corrupt record is skipped with a warning and counted. A missing
+    /// file is an empty database. Version mismatches stay hard errors:
+    /// wrong-version data is not damage and must not be silently dropped.
+    pub fn load_salvage(path: &Path) -> Result<Salvage> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Salvage { db: Database::new(), dropped: 0, note: None })
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading {path:?}")),
+        };
+        let j = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                let note = format!(
+                    "snapshot {path:?} is unparseable ({e}); recovering from the journal alone"
+                );
+                eprintln!("warning: {note}");
+                return Ok(Salvage { db: Database::new(), dropped: 0, note: Some(note) });
+            }
+        };
+        let mut db = Database::new();
+        let mut dropped = 0usize;
+        for (i, item) in Database::checked_records(&j, path)?.iter().enumerate() {
+            match TuneRecord::from_json(item) {
+                Some(rec) => db.add(rec),
+                None => {
+                    dropped += 1;
+                    eprintln!(
+                        "warning: db {path:?} record {i}: skipping corrupt record \
+                         (bad trace or unknown lowering)"
+                    );
+                }
+            }
+        }
+        Ok(Salvage { db, dropped, note: None })
+    }
+
+    /// Rebuild the state a killed process left behind: the last snapshot
+    /// (salvaged, see [`Database::load_salvage`]) plus the valid prefix of
+    /// the sibling journal, deduplicated — a resumed campaign re-journals
+    /// its replayed prefix, so snapshot and journal may overlap with
+    /// value-identical records. Never fails on torn tails; fails only on
+    /// I/O errors and version mismatches.
+    pub fn recover(path: &Path) -> Result<(Database, RecoverStats)> {
+        let Salvage { db: mut merged, dropped, note } = Database::load_salvage(path)?;
+        let replay = journal::read_journal(&journal::journal_path(path))?;
+        let mut stats = RecoverStats {
+            snapshot_records: merged.len(),
+            dropped_records: dropped,
+            dropped_journal_lines: replay.dropped_lines,
+            torn_journal: replay.torn,
+            salvage_note: note,
+            checkpoints: replay.checkpoints().count(),
+            meta: replay.meta().cloned(),
+            ..RecoverStats::default()
+        };
+        let mut seen: HashSet<_> = merged.records().iter().map(|r| r.recover_key()).collect();
+        for rec in replay.records() {
+            if seen.insert(rec.recover_key()) {
+                stats.journal_records += 1;
+                merged.add(rec.clone());
+            } else {
+                stats.duplicate_records += 1;
+            }
+        }
+        Ok((merged, stats))
+    }
+
+    /// Version-check a parsed snapshot and return its record array.
+    fn checked_records<'a>(j: &'a Json, path: &Path) -> Result<&'a [Json]> {
         if j.as_arr().is_some() {
             bail!(
                 "database {path:?} is in the pre-trace v1 format (an untagged record array \
@@ -187,27 +368,38 @@ impl Database {
             .get("version")
             .and_then(|v| v.as_u64())
             .ok_or_else(|| anyhow!("database {path:?} has no format version tag"))?;
+        if version == 2 {
+            bail!(
+                "database {path:?} is format v2 (trace records without a crash journal); \
+                 this build reads v{DB_FORMAT_VERSION}. The record schema is unchanged — \
+                 load it with a v2 build, or re-tune to regenerate under v3's journaled \
+                 persistence."
+            );
+        }
         if version != DB_FORMAT_VERSION {
             bail!(
                 "database {path:?} is format v{version}; this build reads \
                  v{DB_FORMAT_VERSION}"
             );
         }
-        let mut db = Database::new();
-        for (i, item) in j
-            .get("records")
+        j.get("records")
             .and_then(|r| r.as_arr())
-            .ok_or_else(|| anyhow!("db: missing records array"))?
-            .iter()
-            .enumerate()
-        {
-            let rec = TuneRecord::from_json(item).ok_or_else(|| {
-                anyhow!("db record {i}: bad record (corrupt trace or unknown lowering)")
-            })?;
-            db.add(rec);
-        }
-        Ok(db)
+            .ok_or_else(|| anyhow!("db: missing records array"))
     }
+}
+
+/// Sibling temp-file path used by the atomic save.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(".tmp.{}", std::process::id()));
+    PathBuf::from(os)
+}
+
+/// Poison-safe lock: a panicking candidate is contained by the pool, but
+/// even if a thread ever dies while holding a shard, the data (append-only
+/// records) stays consistent — inherit it instead of cascading the panic.
+fn lock(m: &Mutex<Database>) -> MutexGuard<'_, Database> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Thread-safe record store for the service layer: records are sharded by
@@ -215,8 +407,18 @@ impl Database {
 /// different operators proceed in parallel; a tuning run checks out the
 /// relevant records, tunes against a private [`Database`], and commits the
 /// delta — so no shard lock is held across a measurement.
+///
+/// With a journal attached ([`SharedDatabase::attach_journal`]), every
+/// committed record is additionally appended to the crash journal and
+/// synced per commit; append failures degrade gracefully (tuning
+/// continues, [`SharedDatabase::journal_error_count`] records the loss).
 pub struct SharedDatabase {
     shards: Vec<Mutex<Database>>,
+    /// Crash journal; `None` = journaling off. Never locked while a shard
+    /// lock is held (commit releases shards before appending), so the
+    /// journal → shards nesting in `save_and_compact` cannot deadlock.
+    journal: Mutex<Option<JournalWriter>>,
+    journal_errors: AtomicU64,
 }
 
 impl SharedDatabase {
@@ -226,7 +428,11 @@ impl SharedDatabase {
 
     pub fn new(shards: usize) -> SharedDatabase {
         let shards = shards.max(1);
-        SharedDatabase { shards: (0..shards).map(|_| Mutex::new(Database::new())).collect() }
+        SharedDatabase {
+            shards: (0..shards).map(|_| Mutex::new(Database::new())).collect(),
+            journal: Mutex::new(None),
+            journal_errors: AtomicU64::new(0),
+        }
     }
 
     /// Wrap an existing (e.g. loaded) database, distributing its records.
@@ -247,29 +453,82 @@ impl SharedDatabase {
         self.shards.len()
     }
 
+    /// Attach a crash journal; subsequent `add`/`commit` calls append
+    /// their records to it.
+    pub fn attach_journal(&self, writer: JournalWriter) {
+        *self.journal.lock().unwrap_or_else(PoisonError::into_inner) = Some(writer);
+    }
+
+    pub fn journal_attached(&self) -> bool {
+        self.journal.lock().unwrap_or_else(PoisonError::into_inner).is_some()
+    }
+
+    /// Journal appends that failed (and were survived) so far.
+    pub fn journal_error_count(&self) -> u64 {
+        self.journal_errors.load(Ordering::Relaxed)
+    }
+
+    /// Append a non-record line (campaign meta, round checkpoint) to the
+    /// attached journal. No-op when journaling is off; append failures
+    /// degrade gracefully like record appends.
+    pub fn journal_note(&self, entry: &JournalEntry) {
+        let mut guard = self.journal.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(w) = guard.as_mut() else { return };
+        if let Err(e) = w.append(entry).and_then(|()| w.sync()) {
+            eprintln!("warning: journal note failed ({e:#}); tuning continues");
+            self.journal_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Append a batch of records to the attached journal, syncing once.
+    fn journal_records<'a>(&self, recs: impl Iterator<Item = &'a TuneRecord>) {
+        let mut guard = self.journal.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(w) = guard.as_mut() else { return };
+        let mut wrote = false;
+        for rec in recs {
+            match w.append(&JournalEntry::Record(rec.clone())) {
+                Ok(()) => wrote = true,
+                Err(e) => {
+                    eprintln!(
+                        "warning: journal append failed ({e:#}); this record stays \
+                         in memory but will not survive a crash"
+                    );
+                    self.journal_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if wrote {
+            if let Err(e) = w.sync() {
+                eprintln!("warning: journal sync failed ({e:#})");
+                self.journal_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// Insert one record (takes the owning shard's lock briefly).
     pub fn add(&self, rec: TuneRecord) {
-        self.shard(&rec.op_key).lock().unwrap().add(rec);
+        self.journal_records(std::iter::once(&rec));
+        lock(self.shard(&rec.op_key)).add(rec);
     }
 
     /// Cloned best record for an (op, soc) pair.
     pub fn best(&self, op_key: &str, soc: &str) -> Option<TuneRecord> {
-        self.shard(op_key).lock().unwrap().best(op_key, soc).cloned()
+        lock(self.shard(op_key)).best(op_key, soc).cloned()
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+        self.shards.iter().all(|s| lock(s).is_empty())
     }
 
     /// Check out a private database seeded with every record already
     /// measured for `(op_key, soc)` — the search loop dedups against these
     /// — releasing the shard lock before any tuning work starts.
     pub fn checkout(&self, op_key: &str, soc: &str) -> Database {
-        let shard = self.shard(op_key).lock().unwrap();
+        let shard = lock(self.shard(op_key));
         let mut local = Database::new();
         for rec in shard.records().iter().filter(|r| r.op_key == op_key && r.soc == soc) {
             local.add(rec.clone());
@@ -290,6 +549,10 @@ impl SharedDatabase {
     /// consecutive runs instead would split an interleaved delta like
     /// [A, B, A] — the normal shape once network tuning interleaves
     /// rounds from different ops — into multiple lock sections per op.
+    ///
+    /// With a journal attached the delta is appended (in delta order)
+    /// and synced after the in-memory insert: a crash between the two
+    /// loses the commit from both, same as crashing a moment earlier.
     pub fn commit(&self, local: &Database, seeded: usize) {
         let delta = &local.records()[seeded..];
         let mut by_key: BTreeMap<&str, Vec<&TuneRecord>> = BTreeMap::new();
@@ -297,11 +560,12 @@ impl SharedDatabase {
             by_key.entry(&rec.op_key).or_default().push(rec);
         }
         for (key, recs) in by_key {
-            let mut shard = self.shard(key).lock().unwrap();
+            let mut shard = lock(self.shard(key));
             for rec in recs {
                 shard.add(rec.clone());
             }
         }
+        self.journal_records(delta.iter());
     }
 
     /// Merged copy of every shard (shard-major, insertion order within a
@@ -312,7 +576,7 @@ impl SharedDatabase {
     pub fn snapshot(&self) -> Database {
         let mut merged = Database::new();
         for shard in &self.shards {
-            for rec in shard.lock().unwrap().records() {
+            for rec in lock(shard).records() {
                 merged.add(rec.clone());
             }
         }
@@ -321,6 +585,21 @@ impl SharedDatabase {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         self.snapshot().save(path)
+    }
+
+    /// Compacting save: write an atomic snapshot holding every record,
+    /// then truncate the attached journal (its entries are now folded
+    /// into the snapshot). If the snapshot fails, the journal is left
+    /// untouched so no durable state is lost. The journal lock is held
+    /// across both steps so no commit can append between snapshot and
+    /// truncate and have its journal line silently discarded.
+    pub fn save_and_compact(&self, path: &Path, faults: Option<&FaultInjector>) -> Result<()> {
+        let mut guard = self.journal.lock().unwrap_or_else(PoisonError::into_inner);
+        self.snapshot().save_with(path, faults)?;
+        if let Some(w) = guard.as_mut() {
+            w.reset()?;
+        }
+        Ok(())
     }
 }
 
@@ -340,6 +619,13 @@ mod tests {
             1,
         );
         TuneRecord::new(op.to_string(), "saturn-256".to_string(), trace, cycles, 1000, trial)
+    }
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rvv-tune-test-{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
     }
 
     #[test]
@@ -365,7 +651,7 @@ mod tests {
         let mut db = Database::new();
         db.add(rec("x", 123.5, 0));
         db.add(rec("x", 99.0, 1));
-        let dir = std::env::temp_dir().join("rvv-tune-test-db");
+        let dir = temp_dir("db");
         let path = dir.join("db.json");
         db.save(&path).unwrap();
         let back = Database::load(&path).unwrap();
@@ -380,12 +666,36 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    /// Migration compatibility: a v2 database holding records keyed by
+    /// The atomic save leaves no temp droppings and replaces snapshots
+    /// in place: after any successful save the file is a complete,
+    /// loadable snapshot of the latest state.
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_files() {
+        let dir = temp_dir("db-atomic");
+        let path = dir.join("db.json");
+        let mut db = Database::new();
+        db.add(rec("x", 100.0, 0));
+        db.save(&path).unwrap();
+        db.add(rec("x", 50.0, 1));
+        db.save(&path).unwrap();
+        let back = Database::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.best("x", "saturn-256").unwrap().cycles, 50.0);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n != "db.json")
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Migration compatibility: a database holding records keyed by
     /// old-style `matmul-…` im2col conv keys stays loadable alongside new
     /// `conv2d-…` records — the two are simply separate tasks, so tuning
     /// state from before the Conv2d migration is never invalidated.
     #[test]
-    fn v2_db_mixes_legacy_im2col_keys_with_conv2d_keys() {
+    fn v3_db_mixes_legacy_im2col_keys_with_conv2d_keys() {
         use crate::tir::{IntrinChoice as IC, LoopOrder as LO};
         use crate::tune::space::test_conv2d_trace;
         let mut db = Database::new();
@@ -412,7 +722,7 @@ mod tests {
             0,
         );
         db.add(conv);
-        let dir = std::env::temp_dir().join("rvv-tune-test-db-mixed");
+        let dir = temp_dir("db-mixed");
         let path = dir.join("mixed.json");
         db.save(&path).unwrap();
         let back = Database::load(&path).unwrap();
@@ -429,8 +739,7 @@ mod tests {
 
     #[test]
     fn load_rejects_pre_trace_v1_files() {
-        let dir = std::env::temp_dir().join("rvv-tune-test-db-v1");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = temp_dir("db-v1");
         let path = dir.join("v1.json");
         // The exact shape PR-3-era builds wrote: a bare array of records
         // carrying raw schedule objects.
@@ -445,18 +754,103 @@ mod tests {
         let err = Database::load(&path).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("v1"), "error must name the legacy version: {msg}");
-        assert!(msg.contains("v2"), "error must name the expected version: {msg}");
+        assert!(msg.contains("v3"), "error must name the expected version: {msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_v2_files_with_migration_note() {
+        let dir = temp_dir("db-v2");
+        let path = dir.join("v2.json");
+        std::fs::write(&path, r#"{"version": 2, "records": []}"#).unwrap();
+        let err = Database::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("v2") && msg.contains("v3"), "{msg}");
+        // Salvage applies the same version discipline.
+        assert!(Database::load_salvage(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn load_rejects_unknown_future_versions() {
-        let dir = std::env::temp_dir().join("rvv-tune-test-db-v99");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = temp_dir("db-v99");
         let path = dir.join("v99.json");
         std::fs::write(&path, r#"{"version": 99, "records": []}"#).unwrap();
         let err = Database::load(&path).unwrap_err();
         assert!(format!("{err:#}").contains("v99"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite: a single corrupt record no longer discards the whole
+    /// file in salvage mode — it is skipped, counted, and everything else
+    /// loads. Strict `load` still rejects the file.
+    #[test]
+    fn load_salvage_skips_corrupt_records_and_counts_them() {
+        let dir = temp_dir("db-salvage");
+        let path = dir.join("salvage.json");
+        let good0 = rec("a", 10.0, 0);
+        let good1 = rec("a", 20.0, 1);
+        let bad = Json::obj(vec![("op", Json::str("a"))]); // missing everything else
+        let file = Json::obj(vec![
+            ("version", Json::num(DB_FORMAT_VERSION as f64)),
+            ("records", Json::Arr(vec![good0.to_json(), bad, good1.to_json()])),
+        ]);
+        std::fs::write(&path, file.to_pretty()).unwrap();
+        assert!(Database::load(&path).is_err(), "strict load must reject corrupt records");
+        let s = Database::load_salvage(&path).unwrap();
+        assert_eq!(s.db.len(), 2);
+        assert_eq!(s.dropped, 1);
+        assert!(s.note.is_none());
+        assert_eq!(s.db.best("a", "saturn-256").unwrap().cycles, 10.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_replays_journal_over_snapshot_and_dedups() {
+        use crate::tune::journal::{JournalEntry, JournalWriter};
+        let dir = temp_dir("db-recover");
+        let path = dir.join("db.json");
+        let mut snap = Database::new();
+        snap.add(rec("a", 100.0, 0));
+        snap.save(&path).unwrap();
+        let mut w = JournalWriter::create_truncate(&journal::journal_path(&path)).unwrap();
+        // The journal re-holds the snapshot's record (as after an
+        // interrupted resume) plus one newer record.
+        w.append(&JournalEntry::Record(rec("a", 100.0, 0))).unwrap();
+        w.append(&JournalEntry::Record(rec("a", 80.0, 1))).unwrap();
+        drop(w);
+        let (db, stats) = Database::recover(&path).unwrap();
+        assert_eq!(db.len(), 2);
+        assert_eq!(stats.snapshot_records, 1);
+        assert_eq!(stats.journal_records, 1);
+        assert_eq!(stats.duplicate_records, 1);
+        assert!(!stats.torn_journal);
+        assert_eq!(db.best("a", "saturn-256").unwrap().cycles, 80.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_survives_a_torn_snapshot_via_the_journal() {
+        use crate::tune::journal::{JournalEntry, JournalWriter};
+        let dir = temp_dir("db-torn-snap");
+        let path = dir.join("db.json");
+        std::fs::write(&path, "{\"version\": 3, \"records\": [{\"op\"").unwrap();
+        let mut w = JournalWriter::create_truncate(&journal::journal_path(&path)).unwrap();
+        w.append(&JournalEntry::Record(rec("a", 42.0, 0))).unwrap();
+        drop(w);
+        let (db, stats) = Database::recover(&path).unwrap();
+        assert_eq!(db.len(), 1);
+        assert!(stats.salvage_note.is_some());
+        assert_eq!(db.best("a", "saturn-256").unwrap().cycles, 42.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_of_missing_files_is_empty() {
+        let dir = temp_dir("db-recover-missing");
+        let (db, stats) = Database::recover(&dir.join("nope.json")).unwrap();
+        assert!(db.is_empty());
+        assert_eq!(stats.snapshot_records + stats.journal_records, 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -488,6 +882,39 @@ mod tests {
         assert_eq!(shared.len(), 4);
         assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 300.0);
         assert_eq!(shared.best("b", "saturn-256").unwrap().cycles, 50.0);
+    }
+
+    /// Tentpole roundtrip: journaled commits are recoverable without any
+    /// snapshot ever being written, and a compacting save folds the
+    /// journal into the snapshot and truncates it.
+    #[test]
+    fn journaled_commits_recover_and_compact() {
+        let dir = temp_dir("db-journaled");
+        let path = dir.join("db.json");
+        let shared = SharedDatabase::new(4);
+        shared
+            .attach_journal(JournalWriter::create_truncate(&journal::journal_path(&path)).unwrap());
+        let mut local = Database::new();
+        local.add(rec("a", 10.0, 0));
+        local.add(rec("b", 20.0, 0));
+        shared.commit(&local, 0);
+        shared.add(rec("a", 5.0, 1));
+        assert_eq!(shared.journal_error_count(), 0);
+        // Crash now (no snapshot was ever saved): the journal alone
+        // rebuilds the store.
+        let (recovered, stats) = Database::recover(&path).unwrap();
+        assert_eq!(recovered.len(), 3);
+        assert_eq!(stats.journal_records, 3);
+        assert_eq!(recovered.best("a", "saturn-256").unwrap().cycles, 5.0);
+        // Compaction folds the journal into an atomic snapshot.
+        shared.save_and_compact(&path, None).unwrap();
+        let replay = journal::read_journal(&journal::journal_path(&path)).unwrap();
+        assert!(replay.entries.is_empty(), "journal must be truncated after compaction");
+        let (recovered, stats) = Database::recover(&path).unwrap();
+        assert_eq!(recovered.len(), 3);
+        assert_eq!(stats.snapshot_records, 3);
+        assert_eq!(stats.journal_records, 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -554,8 +981,7 @@ mod tests {
         // A parent that exists as a *file* cannot be created as a
         // directory: the old `.ok()` swallowed this and failed later with
         // a misleading write error.
-        let dir = std::env::temp_dir().join("rvv-tune-save-err");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = temp_dir("save-err");
         let blocker = dir.join("not-a-dir");
         std::fs::write(&blocker, b"x").unwrap();
         let err = db.save(&blocker.join("sub").join("db.json")).unwrap_err();

@@ -1,0 +1,192 @@
+//! Deterministic fault injection for the tuning stack.
+//!
+//! Long tuning campaigns on real RVV boards fail in mundane ways — a
+//! measurement process dies, a disk write is interrupted mid-byte, a
+//! candidate locks up the target. The fault-tolerance layer (journaled
+//! persistence, per-candidate failure containment, simulator step
+//! budgets) exists to survive exactly those events, and this module makes
+//! every one of them reproducible in tests: a [`FaultPlan`] names *which*
+//! operation fails and *how*, and a [`FaultInjector`] threads that plan
+//! through the measurement pool and the persistence paths.
+//!
+//! Determinism contract: measurement faults are keyed on the leader-
+//! assigned measure-job sequence number (assigned at submission, before
+//! any worker races), and filesystem faults are keyed on a persistence-
+//! operation counter advanced by the (serial) save/append call sites. An
+//! empty plan injects nothing and leaves every code path byte-identical
+//! to a build without the harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Declarative description of which faults to inject. The default (empty)
+/// plan injects nothing.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic inside the worker running measure job `N` (leader-assigned
+    /// sequence number). Exercises per-candidate panic containment.
+    pub panic_at_measure_job: Option<u64>,
+    /// Panic inside the worker for *every* measure job with sequence
+    /// number `>= N`. Exercises the consecutive-failure abort cap.
+    pub panic_measure_jobs_from: Option<u64>,
+    /// Run measure job `N` under a one-step simulator budget, forcing a
+    /// deterministic "runaway candidate" timeout.
+    pub sim_timeout_at_job: Option<u64>,
+    /// Fail persistence operation `N` (snapshot save or journal append)
+    /// with an I/O error before any bytes reach the target file.
+    pub fail_fs_write_at: Option<u64>,
+    /// Tear persistence operation `N`: write only the first `K` bytes of
+    /// the payload to the *final* path (bypassing the atomic temp-file
+    /// dance, like a pre-atomic writer killed mid-write), then fail.
+    pub torn_save: Option<(u64, usize)>,
+}
+
+impl FaultPlan {
+    /// The production plan: inject nothing.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+/// How a measure job should fail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeasureFault {
+    /// Worker panics mid-candidate.
+    Panic,
+    /// Candidate runs under a one-step simulator budget and times out.
+    SimTimeout,
+}
+
+/// How a persistence operation should fail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsFault {
+    /// The write fails before touching the file.
+    Fail,
+    /// Only the first `at_byte` bytes land, then the write fails.
+    Torn { at_byte: usize },
+}
+
+/// A [`FaultPlan`] plus the counters that map runtime events onto it.
+/// Shared (`Arc`) between the service, the measurement pool, and the
+/// persistence layer.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Persistence operations performed so far (snapshot saves + journal
+    /// appends). Advanced by [`FaultInjector::next_fs_op`].
+    fs_ops: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector { plan, fs_ops: AtomicU64::new(0) })
+    }
+
+    /// An injector with the empty plan — the production configuration.
+    pub fn disabled() -> Arc<FaultInjector> {
+        FaultInjector::new(FaultPlan::none())
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn is_disabled(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Fault (if any) for the measure job with leader-assigned sequence
+    /// number `seq`. Pure function of the plan — no counter involved, so
+    /// the decision is independent of worker scheduling.
+    pub fn measure_fault(&self, seq: u64) -> Option<MeasureFault> {
+        if self.plan.panic_at_measure_job == Some(seq) {
+            return Some(MeasureFault::Panic);
+        }
+        if let Some(from) = self.plan.panic_measure_jobs_from {
+            if seq >= from {
+                return Some(MeasureFault::Panic);
+            }
+        }
+        if self.plan.sim_timeout_at_job == Some(seq) {
+            return Some(MeasureFault::SimTimeout);
+        }
+        None
+    }
+
+    /// Claim the next persistence-operation index. Call sites are serial
+    /// (saves and journal appends happen under the journal/caller lock),
+    /// so the sequence is deterministic for a given campaign.
+    pub fn next_fs_op(&self) -> u64 {
+        self.fs_ops.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Fault (if any) for persistence operation `op`.
+    pub fn fs_fault(&self, op: u64) -> Option<FsFault> {
+        if self.plan.fail_fs_write_at == Some(op) {
+            return Some(FsFault::Fail);
+        }
+        if let Some((at_op, at_byte)) = self.plan.torn_save {
+            if at_op == op {
+                return Some(FsFault::Torn { at_byte });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let inj = FaultInjector::disabled();
+        assert!(inj.is_disabled());
+        for seq in 0..64 {
+            assert_eq!(inj.measure_fault(seq), None);
+            assert_eq!(inj.fs_fault(seq), None);
+        }
+    }
+
+    #[test]
+    fn measure_faults_key_on_job_sequence() {
+        let inj = FaultInjector::new(FaultPlan {
+            panic_at_measure_job: Some(3),
+            sim_timeout_at_job: Some(5),
+            ..FaultPlan::default()
+        });
+        assert_eq!(inj.measure_fault(2), None);
+        assert_eq!(inj.measure_fault(3), Some(MeasureFault::Panic));
+        assert_eq!(inj.measure_fault(4), None);
+        assert_eq!(inj.measure_fault(5), Some(MeasureFault::SimTimeout));
+    }
+
+    #[test]
+    fn panic_from_marks_every_later_job() {
+        let inj = FaultInjector::new(FaultPlan {
+            panic_measure_jobs_from: Some(10),
+            ..FaultPlan::default()
+        });
+        assert_eq!(inj.measure_fault(9), None);
+        assert_eq!(inj.measure_fault(10), Some(MeasureFault::Panic));
+        assert_eq!(inj.measure_fault(999), Some(MeasureFault::Panic));
+    }
+
+    #[test]
+    fn fs_ops_count_monotonically() {
+        let inj = FaultInjector::new(FaultPlan {
+            fail_fs_write_at: Some(1),
+            torn_save: Some((2, 7)),
+            ..FaultPlan::default()
+        });
+        assert_eq!(inj.next_fs_op(), 0);
+        assert_eq!(inj.next_fs_op(), 1);
+        assert_eq!(inj.fs_fault(0), None);
+        assert_eq!(inj.fs_fault(1), Some(FsFault::Fail));
+        assert_eq!(inj.fs_fault(2), Some(FsFault::Torn { at_byte: 7 }));
+    }
+}

@@ -1,0 +1,405 @@
+//! Append-only tuning journal: the crash-safe half of persistence.
+//!
+//! The snapshot (`Database::save`) is atomic but infrequent; between
+//! snapshots every committed record is appended to a sibling
+//! `<db>.journal.jsonl` — one self-contained, version-tagged JSON object
+//! per line, flushed per commit. Recovery
+//! ([`crate::tune::Database::recover`]) loads the last snapshot and
+//! replays the journal's *valid prefix*: a process killed mid-append
+//! leaves at most one torn line at the tail, which is discarded instead
+//! of failing the load. Snapshot compaction
+//! ([`crate::tune::SharedDatabase::save_and_compact`]) folds the journal
+//! back into the snapshot and truncates it.
+//!
+//! Besides records, the journal carries `meta` lines (campaign identity:
+//! seed, scheduler, tasks) and `checkpoint` lines (per-task round
+//! progress) so an interrupted `tune_network` campaign can be inspected
+//! and resumed; see EXPERIMENTS.md §Robustness for the replay-based
+//! resume design.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tune::database::{TuneRecord, DB_FORMAT_VERSION};
+use crate::tune::fault::{FaultInjector, FsFault};
+use crate::util::Json;
+
+/// Sibling journal path for a snapshot path: `db.json` →
+/// `db.json.journal.jsonl`.
+pub fn journal_path(snapshot: &Path) -> PathBuf {
+    let mut os = snapshot.as_os_str().to_os_string();
+    os.push(".journal.jsonl");
+    PathBuf::from(os)
+}
+
+/// Per-task progress marker written after each committed tuning round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Operator key of the task the round belonged to.
+    pub task: String,
+    /// Candidates submitted / measured so far for that task.
+    pub queued: usize,
+    pub measured: usize,
+    /// Best cycles seen so far for the task, if any candidate succeeded.
+    pub best_cycles: Option<f64>,
+}
+
+/// One journal line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalEntry {
+    /// A committed measurement record.
+    Record(TuneRecord),
+    /// Round-granular campaign progress (observability + resume sanity).
+    Checkpoint(Checkpoint),
+    /// Campaign identity, written once when a campaign starts.
+    Meta(Json),
+}
+
+impl JournalEntry {
+    fn to_json(&self) -> Json {
+        let v = ("v", Json::num(DB_FORMAT_VERSION as f64));
+        match self {
+            JournalEntry::Record(rec) => {
+                Json::obj(vec![v, ("kind", Json::str("record")), ("record", rec.to_json())])
+            }
+            JournalEntry::Checkpoint(cp) => Json::obj(vec![
+                v,
+                ("kind", Json::str("checkpoint")),
+                ("task", Json::str(&cp.task)),
+                ("queued", Json::num(cp.queued as f64)),
+                ("measured", Json::num(cp.measured as f64)),
+                ("best", cp.best_cycles.map(Json::Num).unwrap_or(Json::Null)),
+            ]),
+            JournalEntry::Meta(m) => {
+                Json::obj(vec![v, ("kind", Json::str("meta")), ("campaign", m.clone())])
+            }
+        }
+    }
+
+    /// `None` means the line is structurally corrupt (torn tail);
+    /// `Some(Err)` means it is well-formed but from another format
+    /// version, which is a hard error rather than salvage.
+    fn from_json(j: &Json) -> Option<Result<JournalEntry>> {
+        let v = j.get("v").and_then(|v| v.as_u64())?;
+        if v != DB_FORMAT_VERSION {
+            return Some(Err(anyhow::anyhow!(
+                "journal line is format v{v}; this build reads v{DB_FORMAT_VERSION}"
+            )));
+        }
+        let entry = match j.get("kind")?.as_str()? {
+            "record" => JournalEntry::Record(TuneRecord::from_json(j.get("record")?)?),
+            "checkpoint" => JournalEntry::Checkpoint(Checkpoint {
+                task: j.get("task")?.as_str()?.to_string(),
+                queued: j.get("queued")?.as_usize()?,
+                measured: j.get("measured")?.as_usize()?,
+                best_cycles: match j.get("best")? {
+                    Json::Null => None,
+                    other => Some(other.as_f64()?),
+                },
+            }),
+            "meta" => JournalEntry::Meta(j.get("campaign")?.clone()),
+            _ => return None,
+        };
+        Some(Ok(entry))
+    }
+}
+
+/// Appends version-tagged JSONL entries, one line per entry, flushed on
+/// every append so a crash loses at most the line being written.
+#[derive(Debug)]
+pub struct JournalWriter {
+    file: File,
+    path: PathBuf,
+    faults: Option<Arc<FaultInjector>>,
+}
+
+impl JournalWriter {
+    /// Open for appending, creating the file (and parent directories) if
+    /// needed. Existing entries are preserved.
+    pub fn open_append(path: &Path) -> Result<JournalWriter> {
+        JournalWriter::open(path, false)
+    }
+
+    /// Open truncated: any existing journal content is discarded. Used
+    /// when a (re)started campaign rewrites history from its own replay.
+    pub fn create_truncate(path: &Path) -> Result<JournalWriter> {
+        JournalWriter::open(path, true)
+    }
+
+    fn open(path: &Path, truncate: bool) -> Result<JournalWriter> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| format!("creating {parent:?}"))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(!truncate)
+            .write(true)
+            .truncate(truncate)
+            .open(path)
+            .with_context(|| format!("opening journal {path:?}"))?;
+        Ok(JournalWriter { file, path: path.to_path_buf(), faults: None })
+    }
+
+    /// Attach a fault injector; persistence faults from its plan apply to
+    /// subsequent appends.
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> JournalWriter {
+        self.faults = Some(faults);
+        self
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one entry as a single line and flush it to the OS.
+    pub fn append(&mut self, entry: &JournalEntry) -> Result<()> {
+        let mut line = entry.to_json().to_string();
+        line.push('\n');
+        if let Some(f) = &self.faults {
+            match f.fs_fault(f.next_fs_op()) {
+                Some(FsFault::Fail) => {
+                    bail!("injected fault: fs write failure on journal {:?}", self.path)
+                }
+                Some(FsFault::Torn { at_byte }) => {
+                    let k = at_byte.min(line.len());
+                    self.file
+                        .write_all(&line.as_bytes()[..k])
+                        .and_then(|()| self.file.flush())
+                        .with_context(|| format!("appending to journal {:?}", self.path))?;
+                    bail!(
+                        "injected fault: torn journal append at byte {k} on {:?}",
+                        self.path
+                    );
+                }
+                None => {}
+            }
+        }
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.flush())
+            .with_context(|| format!("appending to journal {:?}", self.path))
+    }
+
+    /// Force appended entries to stable storage (once per commit batch,
+    /// not per line).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().with_context(|| format!("syncing journal {:?}", self.path))
+    }
+
+    /// Truncate to empty (after a compacting snapshot folded the entries
+    /// into the main database file).
+    pub fn reset(&mut self) -> Result<()> {
+        self.file.set_len(0).with_context(|| format!("truncating journal {:?}", self.path))?;
+        self.file
+            .seek(SeekFrom::Start(0))
+            .with_context(|| format!("rewinding journal {:?}", self.path))?;
+        self.file.sync_data().with_context(|| format!("syncing journal {:?}", self.path))
+    }
+}
+
+/// Result of reading a journal: the valid prefix plus what was discarded.
+#[derive(Debug, Default)]
+pub struct JournalReplay {
+    pub entries: Vec<JournalEntry>,
+    /// Lines dropped after the first corrupt one (inclusive).
+    pub dropped_lines: usize,
+    /// True when a torn/corrupt tail was discarded.
+    pub torn: bool,
+}
+
+impl JournalReplay {
+    pub fn records(&self) -> impl Iterator<Item = &TuneRecord> {
+        self.entries.iter().filter_map(|e| match e {
+            JournalEntry::Record(r) => Some(r),
+            _ => None,
+        })
+    }
+
+    pub fn checkpoints(&self) -> impl Iterator<Item = &Checkpoint> {
+        self.entries.iter().filter_map(|e| match e {
+            JournalEntry::Checkpoint(c) => Some(c),
+            _ => None,
+        })
+    }
+
+    pub fn meta(&self) -> Option<&Json> {
+        self.entries.iter().find_map(|e| match e {
+            JournalEntry::Meta(m) => Some(m),
+            _ => None,
+        })
+    }
+}
+
+/// Read a journal's valid prefix. A missing file is an empty journal.
+/// Appends are sequential, so corruption can only occur at the tail: the
+/// first structurally invalid line ends the prefix and it plus everything
+/// after it is dropped (counted in `dropped_lines`). A well-formed line
+/// from a different format version is a hard error — that is a version
+/// mismatch, not a torn write.
+pub fn read_journal(path: &Path) -> Result<JournalReplay> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(JournalReplay::default())
+        }
+        Err(e) => return Err(e).with_context(|| format!("reading journal {path:?}")),
+    };
+    let mut replay = JournalReplay::default();
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line).ok().and_then(|j| JournalEntry::from_json(&j));
+        match parsed {
+            Some(Ok(entry)) => replay.entries.push(entry),
+            Some(Err(e)) => return Err(e.context(format!("journal {path:?} line {}", i + 1))),
+            None => {
+                replay.torn = true;
+                replay.dropped_lines = lines.len() - i;
+                eprintln!(
+                    "warning: journal {path:?}: discarding torn tail at line {} \
+                     ({} line(s) dropped)",
+                    i + 1,
+                    replay.dropped_lines
+                );
+                break;
+            }
+        }
+    }
+    Ok(replay)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{IntrinChoice, LoopOrder};
+    use crate::tune::space::test_matmul_trace;
+
+    fn rec(op: &str, cycles: f64, trial: usize) -> TuneRecord {
+        let trace = test_matmul_trace(
+            IntrinChoice { vl: 64, j: 8, lmul: 8 },
+            trial as u64 % 4 + 1,
+            LoopOrder::NMK,
+            1,
+            false,
+            1,
+        );
+        TuneRecord::new(op.to_string(), "saturn-256".to_string(), trace, cycles, 1000, trial)
+    }
+
+    fn temp_journal(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rvv-tune-journal-{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("db.json.journal.jsonl")
+    }
+
+    #[test]
+    fn journal_roundtrips_all_entry_kinds() {
+        let path = temp_journal("roundtrip");
+        let mut w = JournalWriter::create_truncate(&path).unwrap();
+        let meta = Json::obj(vec![("seed", Json::num(42.0))]);
+        w.append(&JournalEntry::Meta(meta.clone())).unwrap();
+        w.append(&JournalEntry::Record(rec("a", 120.0, 0))).unwrap();
+        w.append(&JournalEntry::Checkpoint(Checkpoint {
+            task: "a".into(),
+            queued: 16,
+            measured: 16,
+            best_cycles: Some(120.0),
+        }))
+        .unwrap();
+        w.append(&JournalEntry::Record(rec("a", 90.0, 1))).unwrap();
+        w.sync().unwrap();
+        let replay = read_journal(&path).unwrap();
+        assert!(!replay.torn);
+        assert_eq!(replay.entries.len(), 4);
+        assert_eq!(replay.meta(), Some(&meta));
+        let recs: Vec<_> = replay.records().collect();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].cycles, 90.0);
+        assert_eq!(recs[1].trace, rec("a", 90.0, 1).trace);
+        let cps: Vec<_> = replay.checkpoints().collect();
+        assert_eq!(cps[0].best_cycles, Some(120.0));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn missing_journal_is_empty() {
+        let path = temp_journal("missing");
+        let replay = read_journal(&path).unwrap();
+        assert!(replay.entries.is_empty() && !replay.torn);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// The crash contract: truncating the journal at *every* byte
+    /// boundary (what a kill mid-append leaves behind) must never error
+    /// and must always yield a prefix of the full entry stream.
+    #[test]
+    fn truncation_at_every_byte_yields_valid_prefix() {
+        let path = temp_journal("trunc");
+        let mut w = JournalWriter::create_truncate(&path).unwrap();
+        for t in 0..3 {
+            w.append(&JournalEntry::Record(rec("a", 100.0 + t as f64, t))).unwrap();
+        }
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        let full_entries = read_journal(&path).unwrap().entries;
+        assert_eq!(full_entries.len(), 3);
+        let cut_path = path.parent().unwrap().join("cut.journal.jsonl");
+        for cut in 0..=full.len() {
+            std::fs::write(&cut_path, &full[..cut]).unwrap();
+            let replay = read_journal(&cut_path).unwrap();
+            assert!(replay.entries.len() <= full_entries.len(), "cut at {cut}");
+            assert_eq!(
+                replay.entries[..],
+                full_entries[..replay.entries.len()],
+                "cut at {cut}: replay must be a prefix"
+            );
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn reset_empties_the_journal() {
+        let path = temp_journal("reset");
+        let mut w = JournalWriter::create_truncate(&path).unwrap();
+        w.append(&JournalEntry::Record(rec("a", 1.0, 0))).unwrap();
+        w.reset().unwrap();
+        w.append(&JournalEntry::Record(rec("a", 2.0, 1))).unwrap();
+        drop(w);
+        let replay = read_journal(&path).unwrap();
+        assert_eq!(replay.entries.len(), 1);
+        assert_eq!(replay.records().next().unwrap().cycles, 2.0);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn version_mismatch_is_a_hard_error_not_salvage() {
+        let path = temp_journal("version");
+        std::fs::write(&path, "{\"v\":2,\"kind\":\"record\",\"record\":{}}\n").unwrap();
+        let err = read_journal(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("v2") && msg.contains("v3"), "{msg}");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn open_append_preserves_existing_entries() {
+        let path = temp_journal("append");
+        let mut w = JournalWriter::create_truncate(&path).unwrap();
+        w.append(&JournalEntry::Record(rec("a", 1.0, 0))).unwrap();
+        drop(w);
+        let mut w = JournalWriter::open_append(&path).unwrap();
+        w.append(&JournalEntry::Record(rec("a", 2.0, 1))).unwrap();
+        drop(w);
+        assert_eq!(read_journal(&path).unwrap().entries.len(), 2);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

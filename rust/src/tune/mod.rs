@@ -17,7 +17,9 @@
 pub mod analysis;
 pub mod costmodel;
 pub mod database;
+pub mod fault;
 pub mod features;
+pub mod journal;
 pub mod scheduler;
 pub mod search;
 pub mod space;
@@ -25,14 +27,21 @@ pub mod task;
 pub mod trace;
 
 pub use costmodel::{CostModel, HeuristicCostModel, MlpCostModel, RandomCostModel};
-pub use database::{Database, SharedDatabase, TuneRecord, DB_FORMAT_VERSION};
+pub use database::{
+    Database, RecoverStats, Salvage, SharedDatabase, TuneRecord, DB_FORMAT_VERSION,
+};
+pub use fault::{FaultInjector, FaultPlan, FsFault, MeasureFault};
 pub use features::FEATURE_DIM;
+pub use journal::{
+    journal_path, read_journal, Checkpoint, JournalEntry, JournalReplay, JournalWriter,
+};
 pub use scheduler::{
     GradientScheduler, Pick, Plan, SchedulerKind, StaticAllocation, TaskScheduler, TaskView,
 };
 pub use search::{
-    tune_op, MeasureTicket, Measurer, OpTuner, Prepared, PrepareTicket, RoundOutcome,
-    SearchConfig, SerialMeasurer, TuneOutcome,
+    measure_one_checked, panic_reason, tune_op, MeasureOutcome, MeasureTicket, Measurer, OpTuner,
+    PrepareOutcome, Prepared, PrepareTicket, ReplayCache, RoundOutcome, SearchConfig,
+    SerialMeasurer, TuneOutcome,
 };
 pub use space::{lower, program_for};
 pub use task::{allocate_trials, extract_tasks, floor_budget, TuneTask};

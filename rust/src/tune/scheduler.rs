@@ -101,7 +101,10 @@ pub struct TaskView<'a> {
     pub cap: usize,
     /// The per-layer floor ("at least 10 candidates per layer").
     pub min_trials: usize,
-    /// Budget or schedule space exhausted — never pick this task again.
+    /// Budget or schedule space exhausted, or the task aborted on its
+    /// consecutive-failure cap — never pick this task again. An aborted
+    /// task keeps what it measured; its remaining budget flows to the
+    /// live tasks.
     pub done: bool,
 }
 

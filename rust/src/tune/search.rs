@@ -18,11 +18,12 @@
 //! in flight when N+1 is generated) — standard asynchronous evolutionary
 //! search.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use crate::codegen;
-use crate::sim::{ExecResult, SocConfig, VProgram};
+use crate::sim::{ExecLimits, ExecResult, SocConfig, VProgram};
 use crate::tir::Op;
 use crate::util::Pcg;
 
@@ -51,25 +52,101 @@ impl Prepared {
         let features = features::extract(op, trace, &program, soc);
         Prepared { program: Arc::new(program), features }
     }
+
+    /// Fault-contained [`Prepared::build`]: a panic anywhere in the prepare
+    /// chain (a trace that fails to lower, a codegen assertion) becomes an
+    /// `Err` carrying the panic message instead of unwinding into the
+    /// search loop. On the happy path this is `build` exactly.
+    pub fn try_build(op: &Op, trace: &Trace, soc: &SocConfig) -> PrepareOutcome {
+        catch_unwind(AssertUnwindSafe(|| Prepared::build(op, trace, soc)))
+            .map_err(panic_reason)
+    }
+}
+
+/// Per-candidate prepare result: the prepared program, or the reason the
+/// prepare chain failed for this candidate alone.
+pub type PrepareOutcome = Result<Prepared, String>;
+
+/// Per-candidate measurement result. A fault in one candidate — a
+/// simulator panic, an injected fault, a blown step budget — degrades to
+/// `Failed` for that slot; the rest of the batch is unaffected.
+#[derive(Debug)]
+pub enum MeasureOutcome {
+    Measured(ExecResult),
+    Failed { reason: String },
+}
+
+impl MeasureOutcome {
+    pub fn is_failed(&self) -> bool {
+        matches!(self, MeasureOutcome::Failed { .. })
+    }
+
+    pub fn ok(&self) -> Option<&ExecResult> {
+        match self {
+            MeasureOutcome::Measured(res) => Some(res),
+            MeasureOutcome::Failed { .. } => None,
+        }
+    }
+
+    pub fn into_result(self) -> Result<ExecResult, String> {
+        match self {
+            MeasureOutcome::Measured(res) => Ok(res),
+            MeasureOutcome::Failed { reason } => Err(reason),
+        }
+    }
+}
+
+/// Render a panic payload (from [`catch_unwind`]) as a one-line reason.
+pub fn panic_reason(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// The canonical single-candidate timing measurement (same contract as
-/// [`Prepared::build`]: all backends share this definition).
+/// [`Prepared::build`]: all backends share this definition). Panics on a
+/// simulator fault — the fault-contained path is [`measure_one_checked`].
 pub fn measure_one(soc: &SocConfig, program: &VProgram) -> ExecResult {
     let mut bufs = crate::sim::BufStore::timing(program);
     crate::sim::execute(soc, program, &mut bufs, crate::sim::Mode::Timing, true)
 }
 
+/// Fault-contained [`measure_one`]: runs under `limits` (a runaway program
+/// that blows the step budget fails cleanly) and converts a simulator
+/// panic into `Failed` instead of unwinding. All backends — the serial
+/// default and the pool's workers — share this definition; the default
+/// budget is [`ExecLimits::DEFAULT_MEASURE`], chosen far above any real
+/// candidate so results stay bit-identical to the unbounded path.
+pub fn measure_one_checked(
+    soc: &SocConfig,
+    program: &VProgram,
+    limits: &ExecLimits,
+) -> MeasureOutcome {
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        let mut bufs = crate::sim::BufStore::timing(program);
+        crate::sim::execute_limited(soc, program, &mut bufs, crate::sim::Mode::Timing, true, *limits)
+    }));
+    match run {
+        Ok(Ok(res)) => MeasureOutcome::Measured(res),
+        Ok(Err(budget)) => MeasureOutcome::Failed { reason: budget.to_string() },
+        Err(payload) => MeasureOutcome::Failed { reason: panic_reason(payload) },
+    }
+}
+
 /// Handle for an in-flight prepare batch. `Ready` is the synchronous
 /// backend; `Pending` joins a parallel backend at the rendezvous.
 pub enum PrepareTicket {
-    Ready(Vec<Prepared>),
-    Pending(Box<dyn FnOnce() -> Vec<Prepared> + Send>),
+    Ready(Vec<PrepareOutcome>),
+    Pending(Box<dyn FnOnce() -> Vec<PrepareOutcome> + Send>),
 }
 
 impl PrepareTicket {
     /// Block until the batch is complete (index order preserved).
-    pub fn wait(self) -> Vec<Prepared> {
+    pub fn wait(self) -> Vec<PrepareOutcome> {
         match self {
             PrepareTicket::Ready(v) => v,
             PrepareTicket::Pending(join) => join(),
@@ -79,13 +156,13 @@ impl PrepareTicket {
 
 /// Handle for an in-flight measurement batch.
 pub enum MeasureTicket {
-    Ready(Vec<ExecResult>),
-    Pending(Box<dyn FnOnce() -> Vec<ExecResult> + Send>),
+    Ready(Vec<MeasureOutcome>),
+    Pending(Box<dyn FnOnce() -> Vec<MeasureOutcome> + Send>),
 }
 
 impl MeasureTicket {
     /// Block until the batch is complete (index order preserved).
-    pub fn wait(self) -> Vec<ExecResult> {
+    pub fn wait(self) -> Vec<MeasureOutcome> {
         match self {
             MeasureTicket::Ready(v) => v,
             MeasureTicket::Pending(join) => join(),
@@ -100,18 +177,27 @@ impl MeasureTicket {
 /// to long-lived workers and returns `Pending` tickets.
 pub trait Measurer {
     /// Batch-measure programs in timing mode (synchronous compatibility
-    /// API, used by the figure harnesses and benches).
+    /// API, used by the figure harnesses and benches). Panics if any
+    /// candidate fails; the fault-tolerant path is `begin_measure`.
     fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult>;
 
     /// Start replay + codegen + feature extraction for a batch of
-    /// candidate traces.
+    /// candidate traces. A candidate whose prepare chain panics yields an
+    /// `Err` outcome in its slot; the rest of the batch is unaffected.
     fn begin_prepare(&self, op: &Op, soc: &SocConfig, candidates: &[Trace]) -> PrepareTicket {
-        PrepareTicket::Ready(candidates.iter().map(|t| Prepared::build(op, t, soc)).collect())
+        PrepareTicket::Ready(candidates.iter().map(|t| Prepared::try_build(op, t, soc)).collect())
     }
 
-    /// Start timing-mode measurement of already-emitted programs.
+    /// Start timing-mode measurement of already-emitted programs. A
+    /// candidate that faults yields `Failed` in its slot; the rest of the
+    /// batch is unaffected.
     fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
-        MeasureTicket::Ready(programs.iter().map(|p| measure_one(soc, p)).collect())
+        MeasureTicket::Ready(
+            programs
+                .iter()
+                .map(|p| measure_one_checked(soc, p, &ExecLimits::DEFAULT_MEASURE))
+                .collect(),
+        )
     }
 }
 
@@ -143,6 +229,12 @@ pub struct SearchConfig {
     /// a mislearned model).
     pub epsilon: f64,
     pub seed: u64,
+    /// Abort the run after this many candidate failures in a row (a
+    /// wedged simulator or a systematically broken space should stop the
+    /// search with context, not burn the whole budget). `usize::MAX`
+    /// disables the cap. Isolated failures never trip it: any successful
+    /// measurement resets the streak.
+    pub max_consecutive_failures: usize,
 }
 
 impl Default for SearchConfig {
@@ -155,6 +247,7 @@ impl Default for SearchConfig {
             elites: 8,
             epsilon: 0.25,
             seed: 42,
+            max_consecutive_failures: 16,
         }
     }
 }
@@ -164,8 +257,61 @@ impl Default for SearchConfig {
 pub struct TuneOutcome {
     pub best: TuneRecord,
     pub trials_measured: usize,
+    /// Candidates that failed to prepare or measure (quarantined, never
+    /// re-sampled; they do not count toward `trials_measured`).
+    pub failed_trials: usize,
+    /// Candidates whose cycles came from a recovery [`ReplayCache`]
+    /// instead of the simulator (they DO count toward `trials_measured`).
+    pub replayed_trials: usize,
     /// Best cycles after each round (convergence curve).
     pub history: Vec<f64>,
+}
+
+/// Measured cycles recovered from a previous (possibly killed) run, keyed
+/// by `(op_key, soc)` then by [`Trace::fnv_hash`]. A resumed campaign
+/// replays its deterministic search and satisfies already-measured
+/// candidates from this cache instead of the simulator, so resuming is
+/// bit-identical to an uninterrupted run but skips the re-measurement
+/// cost (see [`OpTuner::set_replay`]).
+#[derive(Clone, Debug, Default)]
+pub struct ReplayCache {
+    by_op: HashMap<(String, String), HashMap<u64, f64>>,
+}
+
+impl ReplayCache {
+    pub fn new() -> ReplayCache {
+        ReplayCache::default()
+    }
+
+    /// Build the cache from recovered records (snapshot + journal replay;
+    /// see `Database::recover`). Later records win on a duplicate hash,
+    /// but duplicates are value-identical by construction — the search
+    /// never measures one trace twice.
+    pub fn from_database(db: &Database) -> ReplayCache {
+        let mut cache = ReplayCache::default();
+        for r in db.records() {
+            cache
+                .by_op
+                .entry((r.op_key.clone(), r.soc.clone()))
+                .or_default()
+                .insert(r.trace.fnv_hash(), r.cycles);
+        }
+        cache
+    }
+
+    /// The per-trace cycle cache for one `(op, soc)` task, if any.
+    pub fn for_op(&self, op_key: &str, soc: &str) -> Option<&HashMap<u64, f64>> {
+        self.by_op.get(&(op_key.to_string(), soc.to_string()))
+    }
+
+    /// Total cached measurements across all tasks.
+    pub fn len(&self) -> usize {
+        self.by_op.values().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_op.values().all(|m| m.is_empty())
+    }
 }
 
 /// One measured round still in flight while the next round is generated.
@@ -173,6 +319,10 @@ struct InFlight {
     ticket: MeasureTicket,
     traces: Vec<Trace>,
     feats: Vec<Vec<f32>>,
+    /// Per-candidate replay slot: `Some(cycles)` came from the recovery
+    /// cache and was never submitted to the measurer; `None` candidates
+    /// rendezvous with the ticket's outcomes in submission order.
+    cached: Vec<Option<f64>>,
 }
 
 /// What one [`OpTuner::step_round`] call did.
@@ -184,6 +334,10 @@ pub enum RoundOutcome {
     /// Budget or space exhausted. The final in-flight round has been
     /// drained; further calls are no-ops that return `Done` again.
     Done,
+    /// The consecutive-failure cap tripped: the run stopped early with
+    /// context in [`OpTuner::abort_reason`]. Further calls return
+    /// `Aborted` again.
+    Aborted,
 }
 
 /// A resumable per-operator tuning run — the state machine behind
@@ -217,6 +371,18 @@ pub struct OpTuner<'a> {
     history: Vec<f64>,
     taken: HashSet<u64>,
     inflight: Option<InFlight>,
+    /// Candidates that failed to prepare or measure. Their hashes live in
+    /// `taken` (quarantined — visible to dedup, never re-sampled) but they
+    /// do not count toward `measured`.
+    failed: usize,
+    /// Failures since the last successful measurement; drives the
+    /// `max_consecutive_failures` abort.
+    failed_streak: usize,
+    last_failure: Option<String>,
+    abort_reason: Option<String>,
+    /// Recovery cache for this `(op, soc)` task (see [`ReplayCache`]).
+    replay: HashMap<u64, f64>,
+    replayed: usize,
 }
 
 impl<'a> OpTuner<'a> {
@@ -278,6 +444,12 @@ impl<'a> OpTuner<'a> {
             history: Vec::new(),
             taken,
             inflight: None,
+            failed: 0,
+            failed_streak: 0,
+            last_failure: None,
+            abort_reason: None,
+            replay: HashMap::new(),
+            replayed: 0,
         })
     }
 
@@ -294,6 +466,32 @@ impl<'a> OpTuner<'a> {
     /// Trials measured and recorded so far (excludes the in-flight round).
     pub fn measured(&self) -> usize {
         self.measured
+    }
+
+    /// Candidates that failed to prepare or measure so far (quarantined,
+    /// not counted in `measured`).
+    pub fn failed(&self) -> usize {
+        self.failed
+    }
+
+    /// Trials satisfied from the recovery cache instead of the simulator
+    /// (a subset of `measured`).
+    pub fn replayed(&self) -> usize {
+        self.replayed
+    }
+
+    /// Why the run aborted, if the consecutive-failure cap tripped.
+    pub fn abort_reason(&self) -> Option<&str> {
+        self.abort_reason.as_deref()
+    }
+
+    /// Attach a recovery cache for this task: candidates whose trace hash
+    /// is cached skip the simulator and take their recorded cycles. The
+    /// search itself (PRNG draws, ranking, elites, record stream) is
+    /// unchanged — this is how `--resume` replays a killed run without
+    /// re-measuring. Must be called before the first `step_round`.
+    pub fn set_replay(&mut self, cache: HashMap<u64, f64>) {
+        self.replay = cache;
     }
 
     /// Best cycles after each drained round (the convergence curve so far).
@@ -321,6 +519,23 @@ impl<'a> OpTuner<'a> {
         self.round_cap = trials.max(1);
     }
 
+    /// Abort the run: record the reason and warn once. The budget already
+    /// spent stays in the database; `finish` still reports the best found.
+    fn abort(&mut self) {
+        let reason = format!(
+            "aborting after {} consecutive failed candidates (cap {}): {}",
+            self.failed_streak,
+            self.config.max_consecutive_failures,
+            self.last_failure.as_deref().unwrap_or("unknown failure"),
+        );
+        eprintln!("warning: tuning {} on {}: {reason}", self.op_key, self.soc.name);
+        self.abort_reason = Some(reason);
+    }
+
+    fn failure_cap_hit(&self) -> bool {
+        self.failed_streak >= self.config.max_consecutive_failures
+    }
+
     /// Advance the pipeline by one round:
     /// 1. generate round N's candidate traces (dedup on
     ///    [`Trace::fnv_hash`]) and submit their prepare jobs — these
@@ -328,7 +543,15 @@ impl<'a> OpTuner<'a> {
     /// 2. drain round N-1's measurements into `db`, refit `model`;
     /// 3. rendezvous on round N's prepared features, `score()` the batch
     ///    once, pick the epsilon-greedy top-k, submit their measurements.
+    ///
+    /// Failed candidates are quarantined (their hashes enter the dedup
+    /// set, so they are never re-sampled) and the round carries on with
+    /// the survivors; `max_consecutive_failures` failures in a row abort
+    /// the run with [`RoundOutcome::Aborted`].
     pub fn step_round(&mut self, model: &mut dyn CostModel, db: &mut Database) -> RoundOutcome {
+        if self.abort_reason.is_some() {
+            return RoundOutcome::Aborted;
+        }
         // --- stage 1: generate candidates, kick off prepare (overlaps the
         // in-flight measurements of the previous round)
         let round = if self.queued < self.config.trials {
@@ -378,10 +601,48 @@ impl<'a> OpTuner<'a> {
 
         // --- stage 2: drain the previous round's measurements; learn
         self.drain(model, db);
+        if self.failure_cap_hit() {
+            // Discard the just-generated round: a `Pending` prepare ticket
+            // completes harmlessly on its backend when dropped unjoined.
+            self.abort();
+            return RoundOutcome::Aborted;
+        }
 
         // --- stage 3: score rendezvous, choose top-k, kick off measurement
-        let Some((cands, pticket)) = round else { return RoundOutcome::Done };
-        let mut prepared = pticket.wait();
+        let Some((gen_cands, pticket)) = round else { return RoundOutcome::Done };
+        let outcomes = pticket.wait();
+        // Quarantine candidates whose prepare chain failed: their hashes
+        // enter `taken` so they are never drawn again, and the survivors
+        // stay in generation order so the no-fault path is untouched.
+        let mut cands: Vec<Trace> = Vec::with_capacity(gen_cands.len());
+        let mut prepared: Vec<Prepared> = Vec::with_capacity(gen_cands.len());
+        for (trace, outcome) in gen_cands.into_iter().zip(outcomes) {
+            match outcome {
+                Ok(p) => {
+                    cands.push(trace);
+                    prepared.push(p);
+                }
+                Err(reason) => {
+                    self.taken.insert(trace.fnv_hash());
+                    self.failed += 1;
+                    self.failed_streak += 1;
+                    eprintln!(
+                        "warning: candidate prepare failed for {} on {}: {reason}",
+                        self.op_key, self.soc.name
+                    );
+                    self.last_failure = Some(reason);
+                }
+            }
+        }
+        if self.failure_cap_hit() {
+            self.abort();
+            return RoundOutcome::Aborted;
+        }
+        if cands.is_empty() {
+            // Every candidate of this round failed to prepare; the budget
+            // is untouched, so let the caller try another round.
+            return RoundOutcome::Progressed;
+        }
         let mut feats: Vec<Vec<f32>> =
             prepared.iter_mut().map(|p| std::mem::take(&mut p.features)).collect();
         let scores = model.score(&feats);
@@ -402,12 +663,28 @@ impl<'a> OpTuner<'a> {
         self.rng.shuffle(&mut rest);
         chosen.extend(rest.into_iter().take(k - k_greedy));
 
+        // Partition the chosen batch against the recovery cache: cache
+        // hits carry their recorded cycles and are never submitted; only
+        // the misses go to the measurer (in chosen order, so the ticket's
+        // outcomes rendezvous with the `None` slots).
+        let mut cached: Vec<Option<f64>> = Vec::with_capacity(chosen.len());
+        let mut programs: Vec<Arc<VProgram>> = Vec::new();
         for &i in &chosen {
-            self.taken.insert(cands[i].fnv_hash());
+            let h = cands[i].fnv_hash();
+            self.taken.insert(h);
+            match self.replay.get(&h) {
+                Some(&cycles) => cached.push(Some(cycles)),
+                None => {
+                    cached.push(None);
+                    programs.push(Arc::clone(&prepared[i].program));
+                }
+            }
         }
-        let programs: Vec<Arc<VProgram>> =
-            chosen.iter().map(|&i| Arc::clone(&prepared[i].program)).collect();
-        let ticket = self.measurer.begin_measure(self.soc, programs);
+        let ticket = if programs.is_empty() {
+            MeasureTicket::Ready(Vec::new())
+        } else {
+            self.measurer.begin_measure(self.soc, programs)
+        };
         self.queued += chosen.len();
         self.inflight = Some(InFlight {
             ticket,
@@ -415,45 +692,81 @@ impl<'a> OpTuner<'a> {
             // `feats` is dead after this point; move the chosen vectors out
             // (indices in `chosen` are distinct).
             feats: chosen.iter().map(|&i| std::mem::take(&mut feats[i])).collect(),
+            cached,
         });
         RoundOutcome::Progressed
     }
 
     /// Drain the in-flight round (if any): record its measurements, update
-    /// the elites, refit the model, extend the convergence history.
+    /// the elites, refit the model, extend the convergence history. A
+    /// `Failed` outcome in one slot is counted and skipped (its hash was
+    /// quarantined at submission); the rest of the batch is recorded
+    /// normally. Replay-cache hits are recorded as if measured.
     fn drain(&mut self, model: &mut dyn CostModel, db: &mut Database) {
         let Some(fl) = self.inflight.take() else { return };
         let results = fl.ticket.wait();
-        let mut upd_feats = Vec::with_capacity(results.len());
-        let mut upd_labels = Vec::with_capacity(results.len());
-        for ((trace, feat), res) in fl.traces.into_iter().zip(fl.feats).zip(&results) {
+        let mut mi = 0;
+        let mut upd_feats = Vec::with_capacity(fl.traces.len());
+        let mut upd_labels = Vec::with_capacity(fl.traces.len());
+        for ((trace, feat), slot) in fl.traces.into_iter().zip(fl.feats).zip(fl.cached) {
+            let cycles = match slot {
+                Some(cycles) => {
+                    self.replayed += 1;
+                    cycles
+                }
+                None => {
+                    let outcome = &results[mi];
+                    mi += 1;
+                    match outcome {
+                        MeasureOutcome::Measured(res) => res.cycles,
+                        MeasureOutcome::Failed { reason } => {
+                            self.failed += 1;
+                            self.failed_streak += 1;
+                            eprintln!(
+                                "warning: candidate measurement failed for {} on {}: {reason}",
+                                self.op_key, self.soc.name
+                            );
+                            self.last_failure = Some(reason.clone());
+                            continue;
+                        }
+                    }
+                }
+            };
+            self.failed_streak = 0;
             db.add(TuneRecord::new(
                 self.op_key.clone(),
                 self.soc.name.clone(),
                 trace.clone(),
-                res.cycles,
+                cycles,
                 self.op.macs(),
                 self.measured,
             ));
             self.measured += 1;
             upd_feats.push(feat);
-            upd_labels.push((self.op.macs() as f64 / res.cycles.max(1.0)).ln());
-            self.elites.push((trace, res.cycles));
+            upd_labels.push((self.op.macs() as f64 / cycles.max(1.0)).ln());
+            self.elites.push((trace, cycles));
         }
         self.elites.sort_by(|a, b| a.1.total_cmp(&b.1));
         self.elites.truncate(self.config.elites);
-        model.update(&upd_feats, &upd_labels);
-        self.history.push(self.elites[0].1);
+        if !upd_feats.is_empty() {
+            model.update(&upd_feats, &upd_labels);
+        }
+        if let Some(e) = self.elites.first() {
+            self.history.push(e.1);
+        }
     }
 
     /// Drain any still in-flight round (a scheduler may stop a tuner
     /// mid-budget) and produce the final outcome from the database this
-    /// run wrote into.
+    /// run wrote into. Returns None when nothing was measured (e.g. every
+    /// candidate failed before the abort cap tripped).
     pub fn finish(mut self, model: &mut dyn CostModel, db: &mut Database) -> Option<TuneOutcome> {
         self.drain(model, db);
         db.best(&self.op_key, &self.soc.name).map(|best| TuneOutcome {
             best: best.clone(),
             trials_measured: self.measured,
+            failed_trials: self.failed,
+            replayed_trials: self.replayed,
             history: self.history,
         })
     }
@@ -724,6 +1037,172 @@ mod tests {
         assert_eq!(tuner.step_round(&mut model, &mut db), RoundOutcome::Progressed);
         assert_eq!(tuner.queued(), 4 + 16);
         tuner.finish(&mut model, &mut db).unwrap();
+    }
+
+    /// Measurer whose every outcome is `Failed` — a permanently wedged
+    /// measurement target.
+    struct FailingMeasurer;
+
+    impl Measurer for FailingMeasurer {
+        fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
+            SerialMeasurer.measure(soc, programs)
+        }
+
+        fn begin_measure(&self, _soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
+            MeasureTicket::Ready(
+                programs
+                    .iter()
+                    .map(|_| MeasureOutcome::Failed { reason: "board fell over".into() })
+                    .collect(),
+            )
+        }
+    }
+
+    #[test]
+    fn consecutive_failure_cap_aborts_with_context() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        let config = SearchConfig {
+            trials: 64,
+            seed: 3,
+            max_consecutive_failures: 8,
+            ..Default::default()
+        };
+        let mut tuner =
+            OpTuner::new(&op, &soc, &registry, &FailingMeasurer, &db, config).unwrap();
+        let mut rounds = 0;
+        let outcome = loop {
+            let o = tuner.step_round(&mut model, &mut db);
+            rounds += 1;
+            assert!(rounds < 100, "failure cap never tripped");
+            if o != RoundOutcome::Progressed {
+                break o;
+            }
+        };
+        assert_eq!(outcome, RoundOutcome::Aborted);
+        let reason = tuner.abort_reason().expect("abort reason recorded").to_string();
+        assert!(reason.contains("board fell over"), "{reason}");
+        assert!(reason.contains("consecutive failed candidates"), "{reason}");
+        assert_eq!(tuner.measured(), 0);
+        assert!(tuner.failed() >= 8);
+        // Repeated calls stay aborted.
+        assert_eq!(tuner.step_round(&mut model, &mut db), RoundOutcome::Aborted);
+        assert!(tuner.finish(&mut model, &mut db).is_none());
+        assert!(db.is_empty());
+    }
+
+    /// Measurer that fails the first slot of the first `fails` batches and
+    /// measures everything else normally.
+    struct FlakyMeasurer {
+        fails: std::cell::Cell<usize>,
+    }
+
+    impl Measurer for FlakyMeasurer {
+        fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
+            SerialMeasurer.measure(soc, programs)
+        }
+
+        fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
+            let flake = self.fails.get() > 0;
+            if flake {
+                self.fails.set(self.fails.get() - 1);
+            }
+            MeasureTicket::Ready(
+                programs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        if flake && i == 0 {
+                            MeasureOutcome::Failed { reason: "flaky".into() }
+                        } else {
+                            measure_one_checked(soc, p, &crate::sim::ExecLimits::DEFAULT_MEASURE)
+                        }
+                    })
+                    .collect(),
+            )
+        }
+    }
+
+    /// An isolated measurement failure is quarantined: the search finishes
+    /// its budget, the failed candidate is never recorded or re-measured,
+    /// and the outcome reports the failure.
+    #[test]
+    fn failed_candidates_are_quarantined_and_search_continues() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let mut model = HeuristicCostModel;
+        let mut db = Database::new();
+        let config = SearchConfig { trials: 32, seed: 9, ..Default::default() };
+        let m = FlakyMeasurer { fails: std::cell::Cell::new(1) };
+        let out = tune_op(&op, &soc, &registry, &mut model, &m, &mut db, &config).unwrap();
+        assert_eq!(out.failed_trials, 1);
+        assert_eq!(out.trials_measured, 31, "one of 32 queued trials failed");
+        assert_eq!(db.len(), 31);
+        let mut hashes: Vec<u64> = db.records().iter().map(|r| r.trace.fnv_hash()).collect();
+        let n = hashes.len();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), n, "failure quarantine broke dedup");
+    }
+
+    /// Measurer that counts how many programs are actually submitted for
+    /// measurement (the replay cache must drive this to zero).
+    struct CountingMeasureBackend {
+        submitted: std::cell::Cell<usize>,
+    }
+
+    impl Measurer for CountingMeasureBackend {
+        fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
+            SerialMeasurer.measure(soc, programs)
+        }
+
+        fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
+            self.submitted.set(self.submitted.get() + programs.len());
+            SerialMeasurer.begin_measure(soc, programs)
+        }
+    }
+
+    /// Replaying a finished run through its own database: bit-identical
+    /// outcome, zero simulator invocations.
+    #[test]
+    fn replay_cache_skips_measurement_bit_identically() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        let config = SearchConfig { trials: 32, seed: 17, ..Default::default() };
+
+        let mut model_a = HeuristicCostModel;
+        let mut db_a = Database::new();
+        let a = tune_op(&op, &soc, &registry, &mut model_a, &SerialMeasurer, &mut db_a, &config)
+            .unwrap();
+
+        let cache = ReplayCache::from_database(&db_a);
+        assert_eq!(cache.len(), db_a.len());
+        let m = CountingMeasureBackend { submitted: std::cell::Cell::new(0) };
+        let mut model_b = HeuristicCostModel;
+        let mut db_b = Database::new();
+        let mut tuner = OpTuner::new(&op, &soc, &registry, &m, &db_b, config.clone()).unwrap();
+        tuner.set_replay(cache.for_op(&op.key(), &soc.name).unwrap().clone());
+        while tuner.step_round(&mut model_b, &mut db_b) == RoundOutcome::Progressed {}
+        let b = tuner.finish(&mut model_b, &mut db_b).unwrap();
+
+        assert_eq!(m.submitted.get(), 0, "replay run re-measured candidates");
+        assert_eq!(b.replayed_trials, a.trials_measured);
+        assert_eq!(a.best.cycles, b.best.cycles);
+        assert_eq!(a.best.schedule, b.best.schedule);
+        assert_eq!(a.history, b.history);
+        let hashes = |db: &Database| -> Vec<u64> {
+            db.records().iter().map(|r| r.trace.fnv_hash()).collect()
+        };
+        assert_eq!(hashes(&db_a), hashes(&db_b));
+        let trials = |db: &Database| -> Vec<usize> {
+            db.records().iter().map(|r| r.trial).collect()
+        };
+        assert_eq!(trials(&db_a), trials(&db_b));
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Integration: crash-safe persistence and kill-resume for network
+//! tuning campaigns.
+//!
+//! The durability model under test: a journaled campaign appends every
+//! committed record to `<db>.journal.jsonl` (plus campaign meta and
+//! round checkpoints), so a SIGKILL at ANY byte loses at most the line
+//! being written. `Database::recover` rebuilds snapshot + journal valid
+//! prefix, and `TuneService::tune_network_resumed` replays the campaign
+//! deterministically — recovered measurements are satisfied from the
+//! [`ReplayCache`] instead of the simulator, and the final report is
+//! bit-identical to the uninterrupted run.
+//!
+//! Kills are simulated by truncating the journal file at byte
+//! boundaries: that is exactly the on-disk state a killed process leaves
+//! behind (appends are sequential and flushed per commit).
+
+use std::path::PathBuf;
+
+use rvv_tune::coordinator::{NetworkTuneReport, ServiceOptions, Target, TuneService};
+use rvv_tune::sim::SocConfig;
+use rvv_tune::tir::{DType, Op};
+use rvv_tune::tune::{journal_path, Database, ReplayCache};
+
+fn service(workers: usize) -> TuneService {
+    TuneService::new(
+        Target::new(SocConfig::saturn(256)),
+        ServiceOptions { use_mlp: false, workers, ..Default::default() },
+    )
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rvv-tune-resume-{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn layers() -> Vec<Op> {
+    vec![Op::square_matmul(32, DType::I8), Op::square_matmul(48, DType::I8)]
+}
+
+fn canonical(db: &Database) -> Vec<(String, usize, u64, f64)> {
+    let mut v: Vec<(String, usize, u64, f64)> = db
+        .records()
+        .iter()
+        .map(|r| (r.op_key.clone(), r.trial, r.trace.fnv_hash(), r.cycles))
+        .collect();
+    v.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+    v
+}
+
+fn assert_reports_identical(a: &NetworkTuneReport, b: &NetworkTuneReport) {
+    assert_eq!(a.scheduler, b.scheduler);
+    assert_eq!(a.convergence, b.convergence, "convergence curve");
+    assert_eq!(a.trials_measured, b.trials_measured, "trials");
+    assert_eq!(a.failed_trials, b.failed_trials, "failed");
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for ((ka, oa), (kb, ob)) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(ka, kb, "task order");
+        let (oa, ob) = (oa.as_ref().unwrap(), ob.as_ref().unwrap());
+        assert_eq!(oa.best.cycles, ob.best.cycles, "{ka}: best cycles");
+        assert_eq!(oa.best.schedule, ob.best.schedule, "{ka}: best schedule");
+        assert_eq!(oa.best.trace, ob.best.trace, "{ka}: best trace");
+        assert_eq!(oa.history, ob.history, "{ka}: history");
+        assert_eq!(oa.trials_measured, ob.trials_measured, "{ka}: trials");
+    }
+}
+
+/// With no snapshot ever written, the journal alone reconstructs the
+/// complete record stream of a finished campaign, plus its identity
+/// (meta line) and progress markers (round checkpoints).
+#[test]
+fn journal_alone_recovers_a_full_campaign() {
+    let dir = temp_dir("journal-only");
+    let path = dir.join("db.json");
+    let s = service(2);
+    s.attach_journal(&path).unwrap();
+    let report = s.tune_network(&layers(), 40, 5);
+    assert!(report.trials_measured > 0);
+
+    let (recovered, stats) = Database::recover(&path).unwrap();
+    assert_eq!(stats.snapshot_records, 0, "no snapshot was ever saved");
+    assert_eq!(stats.journal_records, recovered.len());
+    assert!(!stats.torn_journal);
+    assert!(stats.meta.is_some(), "campaign identity line");
+    assert!(stats.checkpoints > 0, "one checkpoint per committed round");
+    assert_eq!(
+        canonical(&recovered),
+        canonical(&s.db().snapshot()),
+        "journal replay must equal the in-memory state"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The tentpole: kill a journaled campaign mid-write (truncate its
+/// journal mid-line), recover, and resume. The resumed run replays the
+/// campaign deterministically — every recovered measurement is served
+/// from the cache, nothing recovered is re-measured — and the final
+/// report, record stream, and persisted snapshot are bit-identical to
+/// the uninterrupted run.
+#[test]
+fn kill_mid_campaign_then_resume_is_bit_identical() {
+    let dir = temp_dir("kill-resume");
+    let path = dir.join("db.json");
+
+    // Uninterrupted reference run, fully journaled.
+    let full = service(2);
+    full.attach_journal(&path).unwrap();
+    let full_report = full.tune_network(&layers(), 40, 5);
+    let full_records = canonical(&full.db().snapshot());
+
+    // SIGKILL simulation: chop the journal to 60% of its bytes, almost
+    // certainly mid-line — the torn tail a killed append leaves behind.
+    let jpath = journal_path(&path);
+    let bytes = std::fs::read(&jpath).unwrap();
+    let cut = bytes.len() * 6 / 10;
+    std::fs::write(&jpath, &bytes[..cut]).unwrap();
+
+    // Recover the valid prefix (recover BEFORE attaching a new journal:
+    // attaching truncates).
+    let (partial, stats) = Database::recover(&path).unwrap();
+    assert!(!partial.is_empty(), "a 60% journal holds records");
+    assert!(
+        partial.len() < full_records.len(),
+        "the kill must actually have lost records for this test to mean anything"
+    );
+    assert_eq!(stats.journal_records, partial.len());
+    let cache = ReplayCache::from_database(&partial);
+
+    // Resume: fresh service, same options, same campaign arguments.
+    let resumed = service(2);
+    resumed.attach_journal(&path).unwrap();
+    let resumed_report = resumed.tune_network_resumed(&layers(), 40, 5, &cache);
+
+    assert_reports_identical(&full_report, &resumed_report);
+    assert_eq!(
+        resumed_report.replayed_trials,
+        partial.len(),
+        "every recovered record must be served from the cache, not the simulator"
+    );
+    assert_eq!(resumed_report.failed_trials, 0);
+    assert_eq!(
+        canonical(&resumed.db().snapshot()),
+        full_records,
+        "the resumed record stream must be bit-identical (same trial ids, same cycles)"
+    );
+
+    // The resumed run re-journaled everything: a second kill+recover now
+    // sees the complete stream again.
+    let (after, _) = Database::recover(&path).unwrap();
+    assert_eq!(canonical(&after), full_records);
+
+    // And the compacting save persists it atomically.
+    resumed.save_db(&path).unwrap();
+    let loaded = Database::load(&path).unwrap();
+    assert_eq!(canonical(&loaded), full_records);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume also works from a compacted snapshot (journal already folded
+/// in and reset): the cache comes entirely from the snapshot and the
+/// replay skips every measurement.
+#[test]
+fn resume_from_compacted_snapshot_replays_everything() {
+    let dir = temp_dir("compacted");
+    let path = dir.join("db.json");
+    let full = service(2);
+    full.attach_journal(&path).unwrap();
+    let full_report = full.tune_network(&layers(), 30, 5);
+    full.save_db(&path).unwrap();
+
+    let (recovered, stats) = Database::recover(&path).unwrap();
+    assert_eq!(stats.snapshot_records, recovered.len());
+    assert_eq!(stats.journal_records, 0, "compaction reset the journal");
+
+    let cache = ReplayCache::from_database(&recovered);
+    let resumed = service(2);
+    resumed.attach_journal(&path).unwrap();
+    let resumed_report = resumed.tune_network_resumed(&layers(), 30, 5, &cache);
+    assert_reports_identical(&full_report, &resumed_report);
+    assert_eq!(resumed_report.replayed_trials, full_report.trials_measured);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The recovery-never-panics property, end-to-end: truncate the journal
+/// of a real campaign at EVERY byte boundary; `Database::recover` must
+/// always succeed and always yield an in-order prefix of the full
+/// record stream.
+#[test]
+fn recovery_survives_truncation_at_every_byte() {
+    let dir = temp_dir("every-byte");
+    let path = dir.join("db.json");
+    let s = service(1);
+    s.attach_journal(&path).unwrap();
+    // Small campaign: one op, small budget — the journal stays a few KB
+    // so the every-byte sweep is cheap.
+    s.tune_network(&layers()[..1], 8, 4);
+
+    let bytes = std::fs::read(&journal_path(&path)).unwrap();
+    let (full, _) = Database::recover(&path).unwrap();
+    let full_stream: Vec<(usize, u64, f64)> =
+        full.records().iter().map(|r| (r.trial, r.trace.fnv_hash(), r.cycles)).collect();
+    assert!(!full_stream.is_empty());
+
+    let scratch = dir.join("cut.json");
+    let scratch_journal = journal_path(&scratch);
+    for cut in 0..=bytes.len() {
+        std::fs::write(&scratch_journal, &bytes[..cut]).unwrap();
+        let (db, stats) = Database::recover(&scratch)
+            .unwrap_or_else(|e| panic!("recover must never fail (cut at {cut}): {e:#}"));
+        let stream: Vec<(usize, u64, f64)> =
+            db.records().iter().map(|r| (r.trial, r.trace.fnv_hash(), r.cycles)).collect();
+        assert!(
+            stream.len() <= full_stream.len(),
+            "cut at {cut}: recovered more than was ever written"
+        );
+        assert_eq!(
+            stream[..],
+            full_stream[..stream.len()],
+            "cut at {cut}: recovery must yield an in-order prefix"
+        );
+        if cut == bytes.len() {
+            assert_eq!(stream.len(), full_stream.len());
+            assert!(!stats.torn_journal, "an untruncated journal is not torn");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The atomic snapshot contract: saving over an existing snapshot
+/// replaces it in place (readers see the old file or the new one, never
+/// a mix) and leaves no temp files behind.
+#[test]
+fn atomic_save_replaces_in_place_and_leaves_no_temp_files() {
+    let dir = temp_dir("atomic");
+    let path = dir.join("db.json");
+
+    let small = service(1);
+    small.tune_network(&layers()[..1], 8, 4);
+    small.db().save(&path).unwrap();
+    let len_small = Database::load(&path).unwrap().len();
+    assert!(len_small > 0);
+
+    let big = service(1);
+    big.tune_network(&layers(), 24, 5);
+    big.db().save(&path).unwrap();
+    let len_big = Database::load(&path).unwrap().len();
+    assert!(len_big > len_small, "the save must have replaced the smaller snapshot");
+    assert_eq!(len_big, big.db().len());
+
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains(".tmp."))
+        .collect();
+    assert!(leftovers.is_empty(), "atomic save leaked temp files: {leftovers:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,265 @@
+//! Integration: the deterministic fault-injection harness end-to-end.
+//!
+//! Every fault here is injected from a seeded [`FaultPlan`] threaded
+//! through [`ServiceOptions`], so each scenario is reproducible: the same
+//! plan against the same service options produces bit-identical reports,
+//! no matter how many pool workers race. The suite covers the three
+//! degradation stories of the robustness work:
+//!
+//! * measurement faults (worker panic, simulator-budget timeout) are
+//!   contained to their candidate — quarantined, never re-sampled, and
+//!   the rest of the campaign proceeds;
+//! * a permanently wedged measurement path aborts the task at the
+//!   consecutive-failure cap instead of spinning the budget away;
+//! * persistence faults (failed/torn writes) error loudly without
+//!   corrupting the durable state the crash journal protects.
+//!
+//! The first test is the keystone: an *empty* fault plan must be
+//! bit-identical to a service with no fault machinery engaged at all.
+
+use std::path::PathBuf;
+
+use rvv_tune::coordinator::{NetworkTuneReport, ServiceOptions, Target, TuneService};
+use rvv_tune::intrinsics::Registry;
+use rvv_tune::sim::SocConfig;
+use rvv_tune::tir::{DType, Op};
+use rvv_tune::tune::{
+    journal_path, tune_op, Database, FaultInjector, FaultPlan, HeuristicCostModel, JournalWriter,
+    SearchConfig, SerialMeasurer, SharedDatabase,
+};
+
+fn service_with(faults: FaultPlan, workers: usize) -> TuneService {
+    TuneService::new(
+        Target::new(SocConfig::saturn(256)),
+        ServiceOptions { use_mlp: false, workers, faults, ..Default::default() },
+    )
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rvv-tune-fault-{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn canonical(db: &Database) -> Vec<(String, usize, u64, f64)> {
+    let mut v: Vec<(String, usize, u64, f64)> = db
+        .records()
+        .iter()
+        .map(|r| (r.op_key.clone(), r.trial, r.trace.fnv_hash(), r.cycles))
+        .collect();
+    v.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+    v
+}
+
+fn assert_reports_identical(a: &NetworkTuneReport, b: &NetworkTuneReport, what: &str) {
+    assert_eq!(a.scheduler, b.scheduler, "{what}: scheduler");
+    assert_eq!(a.convergence, b.convergence, "{what}: convergence curve");
+    assert_eq!(a.trials_measured, b.trials_measured, "{what}: trials");
+    assert_eq!(a.replayed_trials, b.replayed_trials, "{what}: replayed");
+    assert_eq!(a.failed_trials, b.failed_trials, "{what}: failed");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{what}: task count");
+    for ((ka, oa), (kb, ob)) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(ka, kb, "{what}: task order");
+        match (oa, ob) {
+            (None, None) => {}
+            (Some(oa), Some(ob)) => {
+                assert_eq!(oa.best.cycles, ob.best.cycles, "{what}/{ka}: best cycles");
+                assert_eq!(oa.best.schedule, ob.best.schedule, "{what}/{ka}: best schedule");
+                assert_eq!(oa.best.trace, ob.best.trace, "{what}/{ka}: best trace");
+                assert_eq!(oa.history, ob.history, "{what}/{ka}: history");
+                assert_eq!(oa.trials_measured, ob.trials_measured, "{what}/{ka}: trials");
+            }
+            _ => panic!("{what}/{ka}: one run tuned the task, the other did not"),
+        }
+    }
+}
+
+/// The keystone guarantee: threading the fault machinery through the
+/// whole stack (injector in the pool, sequence numbers on measure jobs,
+/// step budgets in the simulator, fault hooks in the journal) changes
+/// NOTHING when the plan is empty — a journaled 3-worker service with an
+/// explicit empty plan is bit-identical to the plain default service.
+#[test]
+fn empty_fault_plan_is_bit_identical_to_default_service() {
+    let layers = [Op::square_matmul(32, DType::I8), Op::square_matmul(48, DType::I8)];
+
+    let plain = TuneService::new(
+        Target::new(SocConfig::saturn(256)),
+        ServiceOptions { use_mlp: false, workers: 1, ..Default::default() },
+    );
+    let plain_report = plain.tune_network(&layers, 48, 5);
+
+    let dir = temp_dir("empty-plan");
+    let armed = service_with(FaultPlan::none(), 3);
+    armed.attach_journal(&dir.join("db.json")).unwrap();
+    let armed_report = armed.tune_network(&layers, 48, 5);
+
+    assert_reports_identical(&plain_report, &armed_report, "empty plan");
+    assert_eq!(armed_report.failed_trials, 0);
+    assert_eq!(armed_report.replayed_trials, 0);
+    assert_eq!(
+        canonical(&plain.db().snapshot()),
+        canonical(&armed.db().snapshot()),
+        "databases must hold identical records"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A single injected measurement fault — a worker panic or a runaway
+/// candidate hitting the simulator step budget — fails exactly its own
+/// candidate. The campaign completes on the remaining budget, and the
+/// whole scenario is deterministic: two runs under the same plan are
+/// bit-identical.
+#[test]
+fn injected_measure_faults_are_contained_and_deterministic() {
+    let trials = 32usize;
+    let run = |plan: &FaultPlan| {
+        let s = service_with(plan.clone(), 2);
+        let layers = [Op::square_matmul(32, DType::I8)];
+        let report = s.tune_network(&layers, trials, 5);
+        let db = canonical(&s.db().snapshot());
+        (report, db)
+    };
+
+    let plans = [
+        FaultPlan { panic_at_measure_job: Some(5), ..FaultPlan::none() },
+        FaultPlan { sim_timeout_at_job: Some(5), ..FaultPlan::none() },
+    ];
+    for plan in &plans {
+        let (a, db_a) = run(plan);
+        let (b, db_b) = run(plan);
+        assert_eq!(a.failed_trials, 1, "{plan:?}: exactly one candidate fails");
+        assert_eq!(
+            a.trials_measured,
+            trials - 1,
+            "{plan:?}: the failed trial spends budget but records nothing"
+        );
+        let (_, outcome) = &a.outcomes[0];
+        let outcome = outcome.as_ref().expect("task still tunes");
+        assert_eq!(outcome.failed_trials, 1);
+        assert!(outcome.best.cycles > 0.0);
+        assert_reports_identical(&a, &b, &format!("{plan:?}"));
+        assert_eq!(db_a, db_b, "{plan:?}: record streams must be bit-identical");
+        // The quarantine keeps failed candidates out of the record stream
+        // and out of re-sampling: no trace hash appears twice.
+        let mut hashes: Vec<u64> = db_a.iter().map(|r| r.2).collect();
+        let n = hashes.len();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), n, "{plan:?}: a quarantined candidate was re-measured");
+    }
+}
+
+/// A permanently wedged measurement path (every job fails from the
+/// start) must not spin the whole network budget away: the task aborts
+/// at the consecutive-failure cap, keeps nothing, and the campaign
+/// terminates cleanly — deterministically.
+#[test]
+fn permanently_failing_measurement_aborts_task() {
+    let run = || {
+        let s = service_with(
+            FaultPlan { panic_measure_jobs_from: Some(0), ..FaultPlan::none() },
+            2,
+        );
+        let layers = [Op::square_matmul(32, DType::I8)];
+        let report = s.tune_network(&layers, 64, 5);
+        assert_eq!(s.db().len(), 0, "no measurement succeeded, nothing to record");
+        report
+    };
+    let a = run();
+    assert_eq!(a.trials_measured, 0);
+    // A task that never measured anything has no best → reported as
+    // untuned rather than a fabricated outcome.
+    assert_eq!(a.outcomes.len(), 1);
+    assert!(a.outcomes[0].1.is_none(), "aborted task must not fabricate an outcome");
+    let b = run();
+    assert_reports_identical(&a, &b, "wedged measurement path");
+}
+
+/// An injected journal-append failure degrades gracefully: the campaign
+/// completes, the loss is counted, and recovery still sees every entry
+/// that *was* appended. Fs op 0 is the campaign meta line (the first
+/// journal append), so exactly that line is lost.
+#[test]
+fn journal_append_failure_degrades_gracefully() {
+    let dir = temp_dir("journal-fail");
+    let path = dir.join("db.json");
+    let s = service_with(FaultPlan { fail_fs_write_at: Some(0), ..FaultPlan::none() }, 2);
+    s.attach_journal(&path).unwrap();
+    let report = s.tune_network(&[Op::square_matmul(32, DType::I8)], 16, 5);
+    assert!(report.trials_measured > 0, "tuning must continue past a journal failure");
+    assert_eq!(s.db().journal_error_count(), 1, "exactly one append was injected to fail");
+    let (recovered, stats) = Database::recover(&path).unwrap();
+    assert!(stats.meta.is_none(), "the meta line was the failed append");
+    assert_eq!(recovered.len(), s.db().len(), "every record append after the fault survived");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A torn snapshot write (the failure mode the atomic temp+fsync+rename
+/// writer exists to prevent, modelled by writing a prefix straight to
+/// the final path) fails the save loudly, leaves the journal untouched,
+/// and recovery rebuilds every record from the journal. A clean retry
+/// then compacts normally.
+#[test]
+fn torn_snapshot_save_keeps_journal_recoverable() {
+    // Real records from a real (serial) tuning run.
+    let op = Op::square_matmul(32, DType::I8);
+    let soc = SocConfig::saturn(256);
+    let registry = Registry::build(256);
+    let mut db = Database::new();
+    let mut model = HeuristicCostModel;
+    let config = SearchConfig { trials: 12, seed: 3, ..Default::default() };
+    tune_op(&op, &soc, &registry, &mut model, &SerialMeasurer, &mut db, &config).unwrap();
+    let n = db.len();
+    assert!(n > 0);
+
+    let dir = temp_dir("torn-save");
+    let path = dir.join("db.json");
+    let shared = SharedDatabase::new(4);
+    shared.attach_journal(JournalWriter::create_truncate(&journal_path(&path)).unwrap());
+    for rec in db.records() {
+        shared.add(rec.clone());
+    }
+
+    // Fs op 0 of a fresh injector is this save's snapshot write.
+    let torn = FaultInjector::new(FaultPlan { torn_save: Some((0, 40)), ..FaultPlan::none() });
+    let err = shared.save_and_compact(&path, Some(torn.as_ref())).unwrap_err();
+    assert!(format!("{err:#}").contains("torn save"), "{err:#}");
+
+    // The torn snapshot alone is unreadable...
+    assert!(Database::load(&path).is_err());
+    // ...but recovery falls back to the journal and loses nothing.
+    let (recovered, stats) = Database::recover(&path).unwrap();
+    assert_eq!(recovered.len(), n);
+    assert!(stats.salvage_note.is_some(), "the torn snapshot must be written off, noted");
+    assert_eq!(stats.journal_records, n);
+    assert_eq!(canonical(&recovered), canonical(&db));
+
+    // A clean retry compacts: snapshot holds everything, journal resets.
+    shared.save_and_compact(&path, None).unwrap();
+    let (again, stats) = Database::recover(&path).unwrap();
+    assert_eq!(again.len(), n);
+    assert_eq!(stats.snapshot_records, n);
+    assert_eq!(stats.journal_records, 0, "compaction folded the journal into the snapshot");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// An injected hard write failure on the snapshot surfaces as an error
+/// (not silent data loss), deterministically on the same fs-op index.
+#[test]
+fn fs_write_failure_is_deterministic_and_loud() {
+    let dir = temp_dir("fs-fail");
+    let path = dir.join("db.json");
+    let shared = SharedDatabase::new(4);
+    for _ in 0..2 {
+        let f = FaultInjector::new(FaultPlan { fail_fs_write_at: Some(0), ..FaultPlan::none() });
+        let err = shared.save_and_compact(&path, Some(f.as_ref())).unwrap_err();
+        assert!(format!("{err:#}").contains("fs write failure"), "{err:#}");
+        assert!(!path.exists(), "a failed save must not leave a file behind");
+    }
+    // Without the fault the same save succeeds.
+    shared.save_and_compact(&path, None).unwrap();
+    assert!(path.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
