@@ -17,6 +17,14 @@ echo "== quick tier: differential codegen harness =="
 # test binary is compiled once either way.
 cargo test -q --test differential_codegen
 
+echo "== quick tier: static verifier corpus sweep =="
+# The seeded random-op corpus (all four op kinds, every backend, random
+# sampled schedules) must verify error-free on every paper SoC config,
+# each negative program must be rejected with its documented code, and
+# the injected im2col off-by-one must be caught statically. See
+# EXPERIMENTS.md §Verify.
+cargo test -q --test verifier
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
@@ -58,6 +66,12 @@ trap 'rm -rf "$smoke_dir"' EXIT
 cargo run --release --quiet -- tune --workload matmul:16:int8 --soc saturn-256 \
   --trials 8 --no-mlp --db "$smoke_dir/db.json" >/dev/null
 cargo run --release --quiet -- trace --workload matmul:16:int8 --soc saturn-256 \
+  --db "$smoke_dir/db.json"
+
+echo "== verify smoke: statically verify the saved best kernels =="
+# The persisted database's best records must re-lower to kernels the
+# static verifier accepts (`verify --db` exits nonzero on any error).
+cargo run --release --quiet -- verify --workload matmul:16:int8 --soc saturn-256 \
   --db "$smoke_dir/db.json"
 
 echo "== conv smoke: tune Conv2d -> save -> load -> replay -> strategy =="

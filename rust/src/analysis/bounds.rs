@@ -1,0 +1,55 @@
+//! Static memory-safety: prove every access of every `VLoad`/`VStore`/
+//! `S*Run`/`P*Run` lies inside its declared buffer, by abstract
+//! evaluation of the affine `AddrExpr` over the enclosing loop intervals
+//! (`var ∈ [0, extent)`) plus the access width — the active `vl` for
+//! vector memory ops (tracked flow-sensitively by the shared walker),
+//! the explicit element count for macro runs. Mirrors the interpreter's
+//! dynamic assert (`first..first + (n-1)*stride` within `0..len`), so a
+//! program this pass accepts cannot trip the simulator's OOB check.
+
+use crate::isa::{vlmax, Lmul, Sew};
+use crate::sim::{Inst, SocConfig};
+
+use super::walk::{Config, Ctx};
+use super::{codes, VerifyReport};
+
+pub(crate) fn check_inst(
+    inst: &Inst,
+    ctx: &Ctx,
+    idx: usize,
+    soc: &SocConfig,
+    rep: &mut VerifyReport,
+) {
+    for (mem, width) in inst.mem_refs() {
+        let n_elems = match width {
+            Some(n) => n as i64,
+            None => match ctx.cfg {
+                Config::Known { vl, .. } => vl as i64,
+                // Joined configs: assume the machine-wide element maximum.
+                Config::Unknown => vlmax(soc.vlen, Sew::E8, Lmul::M8) as i64,
+                // vl = 0: no access — and the vconfig pass has already
+                // reported the use-before-vsetvli error.
+                Config::Unset => continue,
+            },
+        };
+        if n_elems == 0 {
+            continue;
+        }
+        let (addr_lo, addr_hi) = mem.addr.range(&ctx.var_max);
+        let span = (n_elems - 1) * mem.stride;
+        let (lo, hi) = (addr_lo + span.min(0), addr_hi + span.max(0));
+        let len = ctx.prog.buffers[mem.buf].len as i64;
+        if lo < 0 || hi >= len {
+            let b = &ctx.prog.buffers[mem.buf];
+            rep.error(
+                codes::BOUNDS,
+                ctx.loc(idx, inst),
+                format!(
+                    "worst-case access [{lo}, {hi}] escapes {}[{}] \
+                     ({n_elems} elems, stride {})",
+                    b.name, b.len, mem.stride
+                ),
+            );
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Per-register def/use over the loop tree: reading a vector register no
+//! instruction has written is an error (the simulated machine zero-fills,
+//! real silicon holds garbage); a register that is written but never read
+//! anywhere — a store the program never observes — is a warning.
+//!
+//! Loop-carried values are treated conservatively, as the tentpole spec
+//! requires: on entering a loop, every register defined *anywhere* in its
+//! body is marked defined before the body is walked, so an accumulator
+//! written at the bottom of the body and read at the top (iteration 2's
+//! view) is not a false positive. Straight-line code keeps strict
+//! program-order checking.
+
+use crate::sim::{Inst, Node, VProgram};
+
+use super::walk::inst_name;
+use super::{codes, VerifyReport};
+
+/// Registers an instruction reads.
+pub(crate) fn reg_uses(inst: &Inst) -> Vec<u8> {
+    match inst {
+        Inst::VStore { vs, .. } => vec![*vs],
+        Inst::VBin { vs1, vs2, .. } => vec![*vs1, *vs2],
+        Inst::VBinScalar { vs1, .. } => vec![*vs1],
+        Inst::VMacc { vd, vs1, vs2, .. } => vec![*vd, *vs1, *vs2],
+        Inst::VRedSum { vs, acc, .. } => vec![*vs, *acc],
+        Inst::VSlideInsert { vd, vs, .. } => vec![*vd, *vs],
+        Inst::VMv { vs, .. } => vec![*vs],
+        Inst::VRequant { vs, .. } => vec![*vs],
+        _ => vec![],
+    }
+}
+
+/// Registers an instruction writes.
+pub(crate) fn reg_defs(inst: &Inst) -> Vec<u8> {
+    match inst {
+        Inst::VLoad { vd, .. }
+        | Inst::VBin { vd, .. }
+        | Inst::VBinScalar { vd, .. }
+        | Inst::VMacc { vd, .. }
+        | Inst::VRedSum { vd, .. }
+        | Inst::VSlideInsert { vd, .. }
+        | Inst::VSplat { vd, .. }
+        | Inst::VMv { vd, .. }
+        | Inst::VRequant { vd, .. } => vec![*vd],
+        _ => vec![],
+    }
+}
+
+/// Registers outside v0..v31 are the vconfig pass's problem (group-fit
+/// errors); indexing here must not panic on them.
+fn mark(flags: &mut [bool; 32], reg: u8) {
+    if let Some(f) = flags.get_mut(reg as usize) {
+        *f = true;
+    }
+}
+
+fn collect_defs(nodes: &[Node], defined: &mut [bool; 32]) {
+    for n in nodes {
+        match n {
+            Node::Inst(i) => {
+                for d in reg_defs(i) {
+                    mark(defined, d);
+                }
+            }
+            Node::Loop(l) => collect_defs(&l.body, defined),
+        }
+    }
+}
+
+fn walk(
+    nodes: &[Node],
+    defined: &mut [bool; 32],
+    used: &mut [bool; 32],
+    path: &mut Vec<String>,
+    rep: &mut VerifyReport,
+) {
+    for (idx, n) in nodes.iter().enumerate() {
+        match n {
+            Node::Loop(l) => {
+                collect_defs(&l.body, defined);
+                path.push(format!("i{}<{}", l.var, l.extent));
+                walk(&l.body, defined, used, path, rep);
+                path.pop();
+            }
+            Node::Inst(i) => {
+                for u in reg_uses(i) {
+                    mark(used, u);
+                    if !defined.get(u as usize).copied().unwrap_or(true) {
+                        let mut loc = path.join("/");
+                        if !loc.is_empty() {
+                            loc.push('/');
+                        }
+                        rep.error(
+                            codes::USE_BEFORE_DEF,
+                            format!("{loc}#{idx} {}", inst_name(i)),
+                            format!("v{u} is read before any instruction writes it"),
+                        );
+                    }
+                }
+                for d in reg_defs(i) {
+                    mark(defined, d);
+                }
+            }
+        }
+    }
+}
+
+pub(crate) fn check(p: &VProgram, rep: &mut VerifyReport) {
+    let mut defined = [false; 32];
+    let mut used = [false; 32];
+    let mut path = Vec::new();
+    walk(&p.body, &mut defined, &mut used, &mut path, rep);
+    for r in 0..32 {
+        if defined[r] && !used[r] {
+            rep.warn(
+                codes::DEAD_STORE,
+                String::new(),
+                format!("v{r} is written but never read or stored"),
+            );
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Static verification of [`VProgram`]s: prove an emitted kernel legal
+//! *before* it runs.
+//!
+//! The dynamic differential harness (PR 5) only catches an out-of-bounds
+//! load, an illegal `vsetvli`, or a read of a never-written register if
+//! some random input trips it. This module is the static complement: a
+//! pass pipeline that abstractly interprets the loop tree and returns a
+//! structured [`VerifyReport`] — errors, warnings, and derived facts —
+//! without executing anything. Passes:
+//!
+//! 1. **structure** — [`VProgram::validate_buffers`]: indices are sane
+//!    before the deeper passes dereference them.
+//! 2. **bounds** ([`bounds`]) — every memory access proven inside its
+//!    `BufferDecl.len` by interval evaluation of the affine address over
+//!    the enclosing loop extents and the active vector length.
+//! 3. **vconfig** ([`vconfig`]) — `vsetvli` legality for the target SoC,
+//!    no configuration-dependent op before the first `vsetvli`, widening
+//!    SEW/overlap rules, LMUL group alignment. Flow-sensitive: the shared
+//!    walker ([`walk`]) iterates loop bodies to a configuration fixpoint.
+//! 4. **def/use** ([`defuse`]) — reads of never-written registers error;
+//!    never-observed writes warn. Loop-carried defs are conservative.
+//! 5. **pressure** ([`pressure`]) — max live vector register groups,
+//!    exposed as a fact and as cost-model feature slot 30.
+//!
+//! Wired in three places: [`verify_gate`] runs inside the measurement
+//! prepare chain (`tune::search::Prepared::build` — a failing candidate
+//! becomes `MeasureOutcome::Failed` through the quarantine path instead
+//! of being simulated) and inside the differential harness; `rvv-tune
+//! verify` checks every best record of a database; and ci.sh sweeps the
+//! seeded random-op corpus across all five backends (see EXPERIMENTS.md
+//! §Verify for the error-code table).
+
+mod bounds;
+mod defuse;
+mod pressure;
+mod vconfig;
+mod walk;
+
+pub use pressure::register_pressure;
+
+use std::fmt;
+
+use crate::sim::{SocConfig, VProgram};
+
+/// Stable machine-readable diagnostic codes (`E-*` = error, `W-*` =
+/// warning). Documented in EXPERIMENTS.md §Verify; tests match on them.
+pub mod codes {
+    /// Memory access can escape its buffer.
+    pub const BOUNDS: &str = "E-BOUNDS";
+    /// `vl` exceeds VLMAX for the SoC's VLEN at the requested SEW/LMUL.
+    pub const VLMAX: &str = "E-VLMAX";
+    /// Configuration-dependent vector op before any `vsetvli`.
+    pub const NO_CFG: &str = "E-NOCFG";
+    /// Widening op at SEW=64 (no doubled element type exists).
+    pub const WIDEN_SEW: &str = "E-WIDEN-SEW";
+    /// Widening destination group overlaps a source group.
+    pub const WIDEN_OVERLAP: &str = "E-WIDEN-OVERLAP";
+    /// Register number breaks LMUL group alignment, or a group runs past
+    /// v31.
+    pub const ALIGN: &str = "E-ALIGN";
+    /// Read of a vector register no instruction writes.
+    pub const USE_BEFORE_DEF: &str = "E-USE-BEFORE-DEF";
+    /// Structural damage (`VProgram::validate_buffers`).
+    pub const STRUCT: &str = "E-STRUCT";
+    /// Register written but never read or stored.
+    pub const DEAD_STORE: &str = "W-DEAD-STORE";
+}
+
+/// One diagnostic: stable code, loop-path location, human message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diag {
+    pub code: &'static str,
+    /// Where, as enclosing loops + instruction index + mnemonic, e.g.
+    /// `i0<8/i2<3/#1 vload`. Empty for whole-program diagnostics.
+    pub path: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.path.is_empty() {
+            write!(f, "{}: {}", self.code, self.message)
+        } else {
+            write!(f, "{} at {}: {}", self.code, self.path, self.message)
+        }
+    }
+}
+
+/// Derived facts — outputs of the analysis that are useful beyond
+/// pass/fail, independent of whether the program verifies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Facts {
+    /// Max simultaneously live vector register groups ([`register_pressure`]).
+    pub reg_pressure: u32,
+    /// Static vector / scalar instruction counts (code-size model inputs).
+    pub vector_static_instrs: u64,
+    pub scalar_static_instrs: u64,
+}
+
+/// Result of [`verify`]: structured errors, warnings, and facts.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub errors: Vec<Diag>,
+    pub warnings: Vec<Diag>,
+    pub facts: Facts,
+}
+
+impl VerifyReport {
+    /// No errors (warnings allowed).
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    pub fn error(&mut self, code: &'static str, path: String, message: String) {
+        self.errors.push(Diag { code, path, message });
+    }
+
+    pub fn warn(&mut self, code: &'static str, path: String, message: String) {
+        self.warnings.push(Diag { code, path, message });
+    }
+
+    pub fn has_code(&self, code: &str) -> bool {
+        self.errors.iter().chain(&self.warnings).any(|d| d.code == code)
+    }
+
+    /// Checkpoint for the walker's loop-fixpoint rollback.
+    pub(crate) fn mark(&self) -> (usize, usize) {
+        (self.errors.len(), self.warnings.len())
+    }
+
+    pub(crate) fn rollback(&mut self, mark: (usize, usize)) {
+        self.errors.truncate(mark.0);
+        self.warnings.truncate(mark.1);
+    }
+
+    /// One-line summary for CLI output next to a trace dump.
+    pub fn summary(&self) -> String {
+        if self.ok() {
+            format!(
+                "verify OK: pressure {}, {} warning{}",
+                self.facts.reg_pressure,
+                self.warnings.len(),
+                if self.warnings.len() == 1 { "" } else { "s" }
+            )
+        } else {
+            let mut seen = Vec::new();
+            for d in &self.errors {
+                if !seen.contains(&d.code) {
+                    seen.push(d.code);
+                }
+            }
+            format!("verify FAILED: {} error(s) [{}]", self.errors.len(), seen.join(", "))
+        }
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.summary())?;
+        for d in &self.errors {
+            writeln!(f, "  {d}")?;
+        }
+        for d in &self.warnings {
+            writeln!(f, "  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Run the full pass pipeline. Never executes the program; cost is one
+/// walk per pass over the loop *tree* (not the iteration space), so this
+/// is cheap enough to gate every measurement candidate.
+pub fn verify(p: &VProgram, soc: &SocConfig) -> VerifyReport {
+    let mut rep = VerifyReport::default();
+    if let Err(msg) = p.validate_buffers() {
+        // Downstream passes index buffers and variables unchecked; a
+        // structurally damaged program gets the one error it can trust.
+        rep.error(codes::STRUCT, String::new(), msg);
+        return rep;
+    }
+    walk::walk_flow(p, &mut rep, &mut |inst, ctx, idx, rep| {
+        vconfig::check_inst(inst, ctx, idx, soc, rep);
+        bounds::check_inst(inst, ctx, idx, soc, rep);
+    });
+    defuse::check(p, &mut rep);
+    let (v, s) = p.static_instrs();
+    rep.facts = Facts {
+        reg_pressure: register_pressure(p),
+        vector_static_instrs: v,
+        scalar_static_instrs: s,
+    };
+    rep
+}
+
+/// The gate the measurement pipeline and the differential harness call
+/// before simulating a candidate: `Err` carries a compact one-line reason
+/// (suitable for `MeasureOutcome::Failed` and panic payloads).
+pub fn verify_gate(p: &VProgram, soc: &SocConfig) -> Result<VerifyReport, String> {
+    let rep = verify(p, soc);
+    if rep.ok() {
+        Ok(rep)
+    } else {
+        let first = &rep.errors[0];
+        Err(format!(
+            "static verify rejected '{}': {} (+{} more)",
+            p.name,
+            first,
+            rep.errors.len() - 1
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Lmul, Sew};
+    use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, ScalarSrc};
+    use crate::tir::DType;
+
+    fn soc() -> SocConfig {
+        SocConfig::saturn(256)
+    }
+
+    fn setvl(vl: u32, sew: Sew, lmul: Lmul) -> Node {
+        Node::Inst(Inst::VSetVl { vl, sew, lmul, float: false })
+    }
+
+    fn load(vd: u8, buf: usize, addr: AddrExpr) -> Node {
+        Node::Inst(Inst::VLoad { vd, mem: MemRef::unit(buf, addr) })
+    }
+
+    #[test]
+    fn clean_straight_line_program_verifies() {
+        let mut p = VProgram::new("ok");
+        let b = p.add_buffer("X", DType::I8, 64);
+        p.body.push(setvl(16, Sew::E8, Lmul::M1));
+        p.body.push(load(1, b, AddrExpr::constant(0)));
+        p.body.push(Node::Inst(Inst::VStore {
+            vs: 1,
+            mem: MemRef::unit(b, AddrExpr::constant(32)),
+        }));
+        let rep = verify(&p, &soc());
+        assert!(rep.ok(), "{rep}");
+        assert!(rep.warnings.is_empty(), "{rep}");
+        assert!(rep.facts.reg_pressure >= 1);
+    }
+
+    #[test]
+    fn loop_interval_bounds_are_exact() {
+        // 4 iterations of vl=16 at i*16 exactly fill a 64-element buffer;
+        // a 63-element buffer must be rejected.
+        for (len, ok) in [(64usize, true), (63, false)] {
+            let mut p = VProgram::new("loop");
+            let b = p.add_buffer("X", DType::I8, len);
+            let v = p.fresh_var();
+            p.body.push(setvl(16, Sew::E8, Lmul::M1));
+            p.body.push(Node::Loop(LoopNode {
+                var: v,
+                extent: 4,
+                unroll: 1,
+                body: vec![load(0, b, AddrExpr::var(v, 16))],
+            }));
+            p.body.push(Node::Inst(Inst::VStore {
+                vs: 0,
+                mem: MemRef::unit(b, AddrExpr::constant(0)),
+            }));
+            let rep = verify(&p, &soc());
+            assert_eq!(rep.ok(), ok, "len {len}: {rep}");
+            if !ok {
+                assert!(rep.has_code(codes::BOUNDS), "{rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn config_inside_loop_reaches_code_after_it() {
+        // The vsetvli inside the loop body governs the store after the
+        // loop (the loop runs at least once) — no E-NOCFG.
+        let mut p = VProgram::new("carry");
+        let b = p.add_buffer("X", DType::I8, 64);
+        let v = p.fresh_var();
+        p.body.push(Node::Loop(LoopNode {
+            var: v,
+            extent: 2,
+            unroll: 1,
+            body: vec![setvl(8, Sew::E8, Lmul::M1), load(2, b, AddrExpr::var(v, 8))],
+        }));
+        p.body.push(Node::Inst(Inst::VStore {
+            vs: 2,
+            mem: MemRef::unit(b, AddrExpr::constant(0)),
+        }));
+        let rep = verify(&p, &soc());
+        assert!(rep.ok(), "{rep}");
+    }
+
+    #[test]
+    fn dead_store_warns_but_passes() {
+        let mut p = VProgram::new("dead");
+        let b = p.add_buffer("X", DType::I8, 64);
+        p.body.push(setvl(8, Sew::E8, Lmul::M1));
+        p.body.push(load(3, b, AddrExpr::constant(0)));
+        let rep = verify(&p, &soc());
+        assert!(rep.ok(), "{rep}");
+        assert!(rep.has_code(codes::DEAD_STORE), "{rep}");
+    }
+
+    #[test]
+    fn splat_with_override_is_legal_before_vsetvl() {
+        // Algorithm 1 seeds its accumulator tile with vmv.s.x-style writes
+        // before the first vsetvli — must not trip E-NOCFG.
+        let mut p = VProgram::new("seed");
+        let b = p.add_buffer("X", DType::I8, 64);
+        p.body.push(Node::Inst(Inst::VSplat {
+            vd: 25,
+            value: ScalarSrc::I(0),
+            vl_override: Some(4),
+        }));
+        p.body.push(setvl(8, Sew::E8, Lmul::M1));
+        p.body.push(load(0, b, AddrExpr::constant(0)));
+        p.body.push(Node::Inst(Inst::VSlideInsert {
+            vd: 25,
+            vs: 0,
+            pos: AddrExpr::constant(1),
+        }));
+        p.body.push(Node::Inst(Inst::VStore {
+            vs: 25,
+            mem: MemRef::unit(b, AddrExpr::constant(0)),
+        }));
+        let rep = verify(&p, &soc());
+        assert!(rep.ok(), "{rep}");
+    }
+
+    #[test]
+    fn structural_damage_short_circuits() {
+        let mut p = VProgram::new("broken");
+        p.body.push(load(0, 3, AddrExpr::constant(0))); // buf3 undeclared
+        let rep = verify(&p, &soc());
+        assert!(!rep.ok());
+        assert_eq!(rep.errors.len(), 1);
+        assert!(rep.has_code(codes::STRUCT));
+    }
+}

@@ -1,0 +1,52 @@
+//! Register pressure: the maximum number of simultaneously live vector
+//! register groups, reported as a [`VerifyReport`](super::VerifyReport)
+//! fact and fed to the cost model through the `decision_slot` table
+//! (`tune::features`, slot 30) — high-pressure schedules spill on narrow
+//! implementations, and the MLP gets to learn that.
+//!
+//! "Live" is approximated as the span between a register's first and last
+//! mention (def or use) in a linearized walk of the loop tree, each body
+//! visited once. A value carried across a loop is mentioned on both sides
+//! of the back edge, so its range covers the loop; every operand names
+//! the base register of its LMUL group, so counting distinct register
+//! names counts groups.
+
+use crate::sim::{Node, VProgram};
+
+use super::defuse::{reg_defs, reg_uses};
+
+pub fn register_pressure(p: &VProgram) -> u32 {
+    let mut first = [usize::MAX; 32];
+    let mut last = [0usize; 32];
+    fn touch(first: &mut [usize; 32], last: &mut [usize; 32], reg: u8, pos: usize) {
+        let r = reg as usize & 31;
+        first[r] = first[r].min(pos);
+        last[r] = last[r].max(pos);
+    }
+    fn walk(
+        nodes: &[Node],
+        pos: &mut usize,
+        first: &mut [usize; 32],
+        last: &mut [usize; 32],
+    ) {
+        for n in nodes {
+            match n {
+                Node::Loop(l) => walk(&l.body, pos, first, last),
+                Node::Inst(i) => {
+                    for r in reg_uses(i).into_iter().chain(reg_defs(i)) {
+                        touch(first, last, r, *pos);
+                    }
+                    *pos += 1;
+                }
+            }
+        }
+    }
+    let mut pos = 0usize;
+    walk(&p.body, &mut pos, &mut first, &mut last);
+    let mut peak = 0u32;
+    for t in 0..pos {
+        let live = (0..32).filter(|&r| first[r] <= t && t <= last[r]).count();
+        peak = peak.max(live as u32);
+    }
+    peak
+}

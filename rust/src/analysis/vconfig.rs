@@ -1,0 +1,163 @@
+//! Vector-configuration legality: every `vsetvli` fits the target SoC,
+//! no configuration-dependent vector instruction runs before the first
+//! `vsetvli`, widening ops have a representable doubled SEW and
+//! non-overlapping source/destination register groups, and register
+//! numbers respect the active LMUL group alignment.
+//!
+//! Calibration notes (what the rules deliberately do NOT require, because
+//! the simulated machine and every in-tree generator are looser than raw
+//! RVV 1.0): widening destinations are checked for group *fit* and
+//! overlap but not for doubled-EMUL alignment (the muRISCV-NN rowpair
+//! kernel accumulates into v20 at LMUL=4, which real vwmacc would reject
+//! but the idealized machine executes exactly); and instructions that
+//! carry their own element count (`VSplat` with `vl_override`,
+//! `VSlideInsert`) are legal before any `vsetvli` — they model
+//! `vmv.s.x`/`vslideup` register surgery, which is how Algorithm 1's
+//! accumulator tile is seeded.
+
+use crate::isa::{vlmax, Sew};
+use crate::sim::{Inst, InstKind, SocConfig};
+
+use super::walk::{Config, Ctx};
+use super::{codes, VerifyReport};
+
+/// Full-width register operands of an instruction — the ones a real
+/// machine decodes as an LMUL-sized group under the *current*
+/// configuration. Single-element operands (`VRedSum`'s destination and
+/// accumulator, overridden splats, slide targets) are exempt.
+fn full_width_regs(inst: &Inst) -> Vec<u8> {
+    match inst {
+        Inst::VLoad { vd, .. } => vec![*vd],
+        Inst::VStore { vs, .. } => vec![*vs],
+        Inst::VBin { vd, vs1, vs2, .. } => vec![*vd, *vs1, *vs2],
+        Inst::VBinScalar { vd, vs1, .. } => vec![*vd, *vs1],
+        Inst::VMacc { vd, vs1, vs2, .. } => vec![*vd, *vs1, *vs2],
+        Inst::VRedSum { vs, .. } => vec![*vs],
+        Inst::VSplat { vd, vl_override: None, .. } => vec![*vd],
+        Inst::VMv { vd, vs } => vec![*vd, *vs],
+        Inst::VRequant { vd, vs, .. } => vec![*vd, *vs],
+        _ => vec![],
+    }
+}
+
+/// `(vd, sources)` of a widening op, when `inst` widens.
+fn widen_operands(inst: &Inst) -> Option<(u8, [u8; 2])> {
+    match inst {
+        Inst::VBin { vd, vs1, vs2, widen: true, .. }
+        | Inst::VMacc { vd, vs1, vs2, widen: true } => Some((*vd, [*vs1, *vs2])),
+        _ => None,
+    }
+}
+
+/// Is `inst` legal before any `vsetvli`? Only register writes that carry
+/// their own element count.
+fn self_configured(inst: &Inst) -> bool {
+    matches!(inst, Inst::VSplat { vl_override: Some(_), .. } | Inst::VSlideInsert { .. })
+}
+
+pub(crate) fn check_inst(
+    inst: &Inst,
+    ctx: &Ctx,
+    idx: usize,
+    soc: &SocConfig,
+    rep: &mut VerifyReport,
+) {
+    if let Inst::VSetVl { vl, sew, lmul, .. } = inst {
+        let max = vlmax(soc.vlen, *sew, *lmul);
+        if *vl > max {
+            rep.error(
+                codes::VLMAX,
+                ctx.loc(idx, inst),
+                format!(
+                    "vl {} exceeds VLMAX {} (VLEN {}, e{}, m{})",
+                    vl,
+                    max,
+                    soc.vlen,
+                    sew.bits(),
+                    lmul.factor()
+                ),
+            );
+        }
+        return;
+    }
+    if inst.kind() != InstKind::Vector {
+        return;
+    }
+    // An overridden splat still writes a bounded element count: cap it at
+    // the machine-wide element maximum (e8/m8).
+    if let Inst::VSplat { vl_override: Some(ovr), .. } = inst {
+        let abs_max = vlmax(soc.vlen, Sew::E8, crate::isa::Lmul::M8);
+        if *ovr > abs_max {
+            rep.error(
+                codes::VLMAX,
+                ctx.loc(idx, inst),
+                format!("vl override {ovr} exceeds the machine element maximum {abs_max}"),
+            );
+        }
+    }
+    if ctx.cfg == Config::Unset && !self_configured(inst) {
+        rep.error(
+            codes::NO_CFG,
+            ctx.loc(idx, inst),
+            "vector instruction before any vsetvli (vl = 0)".to_string(),
+        );
+        return;
+    }
+    let Config::Known { sew, lmul, .. } = ctx.cfg else {
+        // Unknown: joined configs across a back edge — SEW/LMUL-dependent
+        // checks are skipped (sound in the accept direction).
+        return;
+    };
+    let group = lmul.factor() as u8;
+    for reg in full_width_regs(inst) {
+        if group > 1 && reg % group != 0 {
+            rep.error(
+                codes::ALIGN,
+                ctx.loc(idx, inst),
+                format!("v{reg} is not aligned to the LMUL={group} register group"),
+            );
+        }
+        if reg as u32 + group as u32 > 32 {
+            rep.error(
+                codes::ALIGN,
+                ctx.loc(idx, inst),
+                format!("register group v{reg}..v{} exceeds v31", reg as u32 + group as u32 - 1),
+            );
+        }
+    }
+    if let Some((vd, srcs)) = widen_operands(inst) {
+        if sew == Sew::E64 {
+            rep.error(
+                codes::WIDEN_SEW,
+                ctx.loc(idx, inst),
+                "widening op at SEW=64 has no doubled element type".to_string(),
+            );
+            return;
+        }
+        // Destination spans a doubled (2*LMUL) group.
+        let dlo = vd as u32;
+        let dhi = dlo + 2 * group as u32;
+        if dhi > 32 {
+            rep.error(
+                codes::ALIGN,
+                ctx.loc(idx, inst),
+                format!("widened destination group v{vd}..v{} exceeds v31", dhi - 1),
+            );
+        }
+        for s in srcs {
+            let slo = s as u32;
+            let shi = slo + group as u32;
+            if slo < dhi && dlo < shi {
+                rep.error(
+                    codes::WIDEN_OVERLAP,
+                    ctx.loc(idx, inst),
+                    format!(
+                        "widened destination v{vd}..v{} overlaps source group v{s}..v{}",
+                        dhi - 1,
+                        shi - 1
+                    ),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! The shared abstract interpreter the flow-sensitive passes run on: one
+//! walk of the loop tree carrying the vector-configuration lattice, the
+//! per-variable iteration intervals, and the instruction path used in
+//! diagnostics. The vconfig-legality and bounds passes are visitors over
+//! this walker so they can never disagree about what configuration an
+//! instruction executes under.
+
+use crate::isa::{Lmul, Sew};
+use crate::sim::{Inst, Node, VProgram};
+
+use super::VerifyReport;
+
+/// Flow-sensitive `vsetvli` state. The join of two differing known
+/// configurations is `Unknown` (top): checks that need a concrete
+/// SEW/LMUL are skipped there, and memory widths fall back to the
+/// machine-wide worst case — sound in the accept direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Config {
+    /// Before the first `vsetvli`: vl = 0. The only legal vector
+    /// instructions here are register writes that carry their own
+    /// element count (`VSplat` with `vl_override`, `VSlideInsert`).
+    Unset,
+    Known { vl: u32, sew: Sew, lmul: Lmul },
+    /// Differing configurations met across a loop back edge.
+    Unknown,
+}
+
+impl Config {
+    fn join(self, other: Config) -> Config {
+        if self == other {
+            self
+        } else {
+            Config::Unknown
+        }
+    }
+}
+
+/// Walk state handed to visitors alongside each instruction.
+pub struct Ctx<'a> {
+    pub prog: &'a VProgram,
+    /// Inclusive max of each loop variable on the current path; variables
+    /// not bound by an enclosing loop sit at 0 (the interpreter's value
+    /// for them).
+    pub var_max: Vec<i64>,
+    pub cfg: Config,
+    /// Enclosing loops, e.g. `["i0<8", "i2<3"]`.
+    path: Vec<String>,
+}
+
+impl Ctx<'_> {
+    /// Render a diagnostic location: enclosing loops + position + mnemonic,
+    /// e.g. `i0<8/i2<3/#1 vload`.
+    pub fn loc(&self, idx: usize, inst: &Inst) -> String {
+        let mut s = self.path.join("/");
+        if !s.is_empty() {
+            s.push('/');
+        }
+        s.push_str(&format!("#{idx} {}", inst_name(inst)));
+        s
+    }
+}
+
+/// Short mnemonic for diagnostics.
+pub fn inst_name(inst: &Inst) -> &'static str {
+    match inst {
+        Inst::VSetVl { .. } => "vsetvl",
+        Inst::VLoad { .. } => "vload",
+        Inst::VStore { .. } => "vstore",
+        Inst::VBin { .. } => "vbin",
+        Inst::VBinScalar { .. } => "vbin.vx",
+        Inst::VMacc { .. } => "vmacc",
+        Inst::VRedSum { .. } => "vredsum",
+        Inst::VSlideInsert { .. } => "vslide",
+        Inst::VSplat { .. } => "vsplat",
+        Inst::VMv { .. } => "vmv",
+        Inst::VRequant { .. } => "vrequant",
+        Inst::SOps { .. } => "sops",
+        Inst::SDotRun { .. } => "sdot",
+        Inst::SAxpyRun { .. } => "saxpy",
+        Inst::SRequantRun { .. } => "srequant",
+        Inst::SCopyRun { .. } => "scopy",
+        Inst::SAddRun { .. } => "sadd",
+        Inst::PDotRun { .. } => "pdot",
+        Inst::PAxpyRun { .. } => "paxpy",
+    }
+}
+
+/// Drive `visit` over every instruction with sound flow state. Loop bodies
+/// are re-walked to a configuration fixpoint: if a body's exit state is
+/// not covered by its entry state (a `vsetvli` inside the loop changes
+/// what iteration 2+ sees), the findings of the provisional walk are
+/// rolled back and the body is walked again under the joined state. The
+/// lattice has three levels, so this terminates after at most two
+/// re-walks per loop. Extents are ≥ 1 (`validate_buffers` runs first), so
+/// the state after a loop is the body's exit state.
+pub fn walk_flow(
+    prog: &VProgram,
+    rep: &mut VerifyReport,
+    visit: &mut impl FnMut(&Inst, &Ctx, usize, &mut VerifyReport),
+) {
+    let mut ctx =
+        Ctx { prog, var_max: vec![0; prog.n_vars], cfg: Config::Unset, path: vec![] };
+    walk_nodes(&prog.body, &mut ctx, rep, visit);
+}
+
+fn walk_nodes(
+    nodes: &[Node],
+    ctx: &mut Ctx,
+    rep: &mut VerifyReport,
+    visit: &mut impl FnMut(&Inst, &Ctx, usize, &mut VerifyReport),
+) {
+    for (idx, n) in nodes.iter().enumerate() {
+        match n {
+            Node::Inst(inst) => {
+                visit(inst, ctx, idx, rep);
+                if let Inst::VSetVl { vl, sew, lmul, .. } = inst {
+                    ctx.cfg = Config::Known { vl: *vl, sew: *sew, lmul: *lmul };
+                }
+            }
+            Node::Loop(l) => {
+                let saved_max = ctx.var_max[l.var];
+                ctx.var_max[l.var] = l.extent as i64 - 1;
+                ctx.path.push(format!("i{}<{}", l.var, l.extent));
+                loop {
+                    let entry = ctx.cfg;
+                    let mark = rep.mark();
+                    walk_nodes(&l.body, ctx, rep, visit);
+                    let joined = entry.join(ctx.cfg);
+                    if joined == entry {
+                        break; // entry covered the back edge: findings stand
+                    }
+                    rep.rollback(mark);
+                    ctx.cfg = joined;
+                }
+                ctx.path.pop();
+                ctx.var_max[l.var] = saved_max;
+            }
+        }
+    }
+}

@@ -121,6 +121,26 @@ pub fn declare_buffers(p: &mut VProgram, op: &Op) -> ProgramBufs {
 /// Shared by every backend that takes the im2col route, so the packing
 /// cost the tuner weighs against the direct lowering is scenario-neutral.
 pub fn emit_im2col(p: &mut VProgram, x: BufId, col: BufId, dtype: DType, d: ConvDims) {
+    emit_im2col_inner(p, x, col, dtype, d, 0);
+}
+
+/// `emit_im2col` with the classic off-by-one in the `ox` loop extent
+/// (`w_out + 1` columns packed per row). Exists only so the verifier test
+/// suite can prove the bounds pass catches a realistic codegen bug before
+/// any simulation runs; never called by a generator.
+#[doc(hidden)]
+pub fn emit_im2col_off_by_one(p: &mut VProgram, x: BufId, col: BufId, dtype: DType, d: ConvDims) {
+    emit_im2col_inner(p, x, col, dtype, d, 1);
+}
+
+fn emit_im2col_inner(
+    p: &mut VProgram,
+    x: BufId,
+    col: BufId,
+    dtype: DType,
+    d: ConvDims,
+    ox_extra: u32,
+) {
     let (h_out, w_out) = (d.h_out(), d.w_out());
     let seg = d.k_row();
     let oy = p.fresh_var();
@@ -139,8 +159,12 @@ pub fn emit_im2col(p: &mut VProgram, x: BufId, col: BufId, dtype: DType, d: Conv
         dtype,
     });
     let ky_loop = Node::Loop(LoopNode { var: ky, extent: d.kh as u32, unroll: 1, body: vec![copy] });
-    let ox_loop =
-        Node::Loop(LoopNode { var: ox, extent: w_out as u32, unroll: 1, body: vec![ky_loop] });
+    let ox_loop = Node::Loop(LoopNode {
+        var: ox,
+        extent: w_out as u32 + ox_extra,
+        unroll: 1,
+        body: vec![ky_loop],
+    });
     p.body
         .push(Node::Loop(LoopNode { var: oy, extent: h_out as u32, unroll: 1, body: vec![ox_loop] }));
 }
@@ -149,7 +173,7 @@ pub fn emit_im2col(p: &mut VProgram, x: BufId, col: BufId, dtype: DType, d: Conv
 /// Returns `None` when the scenario does not support the operator
 /// (muRISCV-NN has no float kernels).
 pub fn generate(op: &Op, scenario: &Scenario, vlen: u32) -> Option<VProgram> {
-    match scenario {
+    let program = match scenario {
         Scenario::ScalarOs => Some(baselines::scalar::emit(op)),
         Scenario::AutovecGcc => {
             Some(baselines::autovec::emit(op, vlen, baselines::autovec::Flavor::Gcc))
@@ -160,7 +184,16 @@ pub fn generate(op: &Op, scenario: &Scenario, vlen: u32) -> Option<VProgram> {
         Scenario::MuRiscvNn => baselines::muriscvnn::emit(op, vlen),
         Scenario::PackedSimd => baselines::pext::emit(op),
         Scenario::Ours(schedule) => Some(ours::emit(op, schedule, vlen)),
+    };
+    if let Some(p) = &program {
+        debug_assert!(
+            p.validate_buffers().is_ok(),
+            "{} emitted a structurally broken program: {}",
+            scenario.name(),
+            p.validate_buffers().unwrap_err()
+        );
     }
+    program
 }
 
 #[cfg(test)]

@@ -61,7 +61,7 @@ pub fn variant_key(op: &Op, schedule: &Schedule) -> String {
 /// Emit the program for `op` under `schedule` (panics on a kind mismatch —
 /// the sampler always produces matching schedules).
 pub fn emit(op: &Op, schedule: &Schedule, vlen: u32) -> VProgram {
-    match (op, schedule) {
+    let p = match (op, schedule) {
         (Op::Matmul { m, n, k, dtype, requant }, Schedule::Matmul(s)) => {
             emit_matmul(*m, *n, *k, *dtype, *requant, s, vlen)
         }
@@ -73,7 +73,15 @@ pub fn emit(op: &Op, schedule: &Schedule, vlen: u32) -> VProgram {
             emit_conv2d(op.conv_dims().expect("conv dims"), *dtype, *requant, s, vlen)
         }
         (op, s) => panic!("schedule kind mismatch: {op} vs {}", s.describe()),
-    }
+    };
+    // Tuner-facing entry point (Prepared::build calls emit directly, not
+    // codegen::generate), so the structural check hooks in here too.
+    debug_assert!(
+        p.validate_buffers().is_ok(),
+        "ours emitted a structurally broken program: {}",
+        p.validate_buffers().unwrap_err()
+    );
+    p
 }
 
 /// Largest divisor of `extent` not exceeding `cap`. Tiling factors must

@@ -6,7 +6,8 @@
 //!
 //! * **L3 (this crate)** — the MetaSchedule-style probabilistic schedule
 //!   tuner ([`tune`]), the simulated RVV SoC measurement substrate
-//!   ([`sim`]), the tensor-program IR and code generators including all
+//!   ([`sim`]) and the static kernel verifier that gates it
+//!   ([`analysis`]), the tensor-program IR and code generators including all
 //!   paper baselines ([`tir`], [`codegen`], [`intrinsics`]), workloads
 //!   ([`workloads`]), trace analysis and figure harnesses ([`report`]),
 //!   and the leader/worker measurement coordinator ([`coordinator`]).
@@ -17,6 +18,7 @@
 //!
 //! See DESIGN.md for the substitution table and the experiment index.
 
+pub mod analysis;
 pub mod codegen;
 pub mod coordinator;
 pub mod intrinsics;

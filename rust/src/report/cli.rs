@@ -7,6 +7,7 @@
 //! rvv-tune tune     --workload matmul:128:int8 | model:bert-tiny:int8
 //!                   [--soc saturn-1024] [--trials 100] [--db db.json] [--no-mlp]
 //! rvv-tune trace    --workload matmul:64:int8 [--db db.json] [--trials 32]
+//! rvv-tune verify   --db db.json --workload matmul:64:int8 [--soc saturn-256]
 //! rvv-tune simulate --workload matmul:64:int8 --scenario muriscv-nn
 //!                   [--soc saturn-1024] [--trace]
 //! rvv-tune models   [--dtype int8]
@@ -49,6 +50,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "ablation" => cmd_ablation(&args),
         "tune" => cmd_tune(&args),
         "trace" => cmd_trace(&args),
+        "verify" => cmd_verify(&args),
         "simulate" => cmd_simulate(&args),
         "models" => cmd_models(&args),
         "info" => cmd_info(),
@@ -79,8 +81,13 @@ USAGE: rvv-tune <subcommand> [options]
             re-measuring recovered candidates
   trace     dump the decision trace of the best record per op (for a
             Conv2d this shows the strategy decision first — im2col vs
-            direct — then the branch's decisions):
+            direct — then the branch's decisions), with the static
+            verifier's summary (register pressure, warnings) per kernel:
             --workload ... [--db db.json to read a saved database]
+  verify    statically verify the best saved kernel of every (op, soc)
+            pair in a database — bounds, vsetvl legality, def/use —
+            without simulating: --db PATH --workload ... [--soc NAME]
+            (recovers PATH.journal.jsonl first, like tune --resume)
   simulate  measure one scenario: --scenario non-tuned|non-tuned-O3|non-tuned-v|muriscv-nn|packed-simd
   models    list the network zoo
   info      artifact/runtime status
@@ -410,6 +417,12 @@ fn cmd_trace(args: &Args) -> i32 {
             best.trial,
             best.schedule.describe()
         );
+        // Re-emit the kernel this record lowers to and show the static
+        // verifier's one-line verdict next to its trace.
+        if let Some(soc) = SocConfig::by_name(&soc_name) {
+            let program = crate::codegen::ours::emit(&task.op, &best.schedule, soc.vlen);
+            println!("  {}", crate::analysis::verify(&program, &soc).summary());
+        }
         let mut t = Table::new(
             format!("decision trace ({})", best.trace.kind()),
             &["decision", "value", "choice", "domain"],
@@ -428,6 +441,95 @@ fn cmd_trace(args: &Args) -> i32 {
         eprintln!("no records found for {name} on {soc_name}");
         return 1;
     }
+    0
+}
+
+/// Statically verify the best saved kernel of every (op, soc) pair in a
+/// database. Goes through `Database::recover` (snapshot + crash journal),
+/// so a kernel that only survived in the journal of a killed run is
+/// checked too. The op key alone cannot rebuild an `Op`, so `--workload`
+/// names the operators to look up, exactly as `trace` does.
+fn cmd_verify(args: &Args) -> i32 {
+    let Some(path) = args.get("db") else {
+        eprintln!("--db PATH required");
+        return 2;
+    };
+    let spec = args.get_or("workload", "matmul:64:int8");
+    let (name, layers, _) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let (db, stats) = match crate::tune::Database::recover(&PathBuf::from(path)) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("recover failed: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "recovered {} record(s) from {path} ({} snapshot + {} journal)",
+        db.len(),
+        stats.snapshot_records,
+        stats.journal_records
+    );
+    let soc_filter = args.get("soc");
+    let mut checked = 0usize;
+    let mut failed = 0usize;
+    for task in crate::tune::extract_tasks(&layers) {
+        let key = task.op.key();
+        // Every SoC this op has a best record for (or just --soc).
+        let mut socs: Vec<&str> =
+            db.records().iter().filter(|r| r.op_key == key).map(|r| r.soc.as_str()).collect();
+        socs.sort_unstable();
+        socs.dedup();
+        if let Some(f) = soc_filter {
+            socs.retain(|s| *s == f);
+        }
+        if socs.is_empty() {
+            println!("{key}: no record");
+            continue;
+        }
+        for soc_name in socs {
+            let Some(soc) = SocConfig::by_name(soc_name) else {
+                eprintln!("{key} @ {soc_name}: unknown soc in database");
+                failed += 1;
+                continue;
+            };
+            let best = db.best(&key, soc_name).expect("soc taken from this op's records");
+            let program = crate::codegen::ours::emit(&task.op, &best.schedule, soc.vlen);
+            checked += 1;
+            if let Err(e) = program.validate_buffers() {
+                println!("{key} @ {soc_name}: E-STRUCT {e}");
+                failed += 1;
+                continue;
+            }
+            let report = crate::analysis::verify(&program, &soc);
+            println!(
+                "{key} @ {soc_name} (trial {}, {} cycles): {}",
+                best.trial,
+                fnum(best.cycles),
+                report.summary()
+            );
+            for d in report.errors.iter().chain(report.warnings.iter()) {
+                println!("  {d}");
+            }
+            if !report.ok() {
+                failed += 1;
+            }
+        }
+    }
+    if checked == 0 {
+        eprintln!("no records found for {name}");
+        return 1;
+    }
+    if failed > 0 {
+        eprintln!("{failed} of {checked} best kernel(s) FAILED static verification");
+        return 1;
+    }
+    println!("all {checked} best kernel(s) verified clean");
     0
 }
 

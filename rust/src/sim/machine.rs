@@ -13,7 +13,19 @@ use super::cache::{Cache, CacheStats};
 use super::soc::SocConfig;
 use super::trace::TraceCounts;
 use super::vecunit;
-use super::vprogram::{BufId, Inst, MemRef, Node, ScalarSrc, VProgram};
+use super::vprogram::{BufId, Inst, InstKind, MemRef, Node, ScalarSrc, VProgram};
+
+/// Trace bucket of a macro/bookkeeping instruction, derived from the
+/// shared [`Inst::kind`] classifier: Packed-SIMD macros are scalar-ISA
+/// encodings, so both non-vector kinds land in the Scalar group — the
+/// bucketing a QEMU instruction trace would produce. Vector instructions
+/// never come here (each vector op records its own per-op group).
+fn macro_group(inst: &Inst) -> InstrGroup {
+    match inst.kind() {
+        InstKind::Scalar | InstKind::Packed => InstrGroup::Scalar,
+        InstKind::Vector => unreachable!("vector instructions carry per-op trace groups"),
+    }
+}
 
 /// Execution mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -600,10 +612,10 @@ impl<'a> Machine<'a> {
             }
             Inst::SOps { count } => {
                 self.cycles += vecunit::scalar_cost(self.soc, *count);
-                self.trace.add(InstrGroup::Scalar, *count as u64);
+                self.trace.add(macro_group(inst), *count as u64);
             }
             Inst::SDotRun { acc, a, b, len, dtype } => {
-                self.scalar_run_cost(*len, 6);
+                self.scalar_run_cost(macro_group(inst), *len, 6);
                 self.stream_touch(a, *len);
                 self.stream_touch(b, *len);
                 self.touch_one(acc);
@@ -634,7 +646,7 @@ impl<'a> Machine<'a> {
                 }
             }
             Inst::SAxpyRun { y, a, b, len, dtype } => {
-                self.scalar_run_cost(*len, 7);
+                self.scalar_run_cost(macro_group(inst), *len, 7);
                 self.stream_touch(a, *len);
                 self.stream_touch(b, *len);
                 self.stream_touch(y, *len);
@@ -658,7 +670,7 @@ impl<'a> Machine<'a> {
                 }
             }
             Inst::SRequantRun { dst, src, len, mult, shift, zp } => {
-                self.scalar_run_cost(*len, 7);
+                self.scalar_run_cost(macro_group(inst), *len, 7);
                 self.stream_touch(src, *len);
                 self.stream_touch(dst, *len);
                 if self.mode == Mode::Functional {
@@ -670,7 +682,7 @@ impl<'a> Machine<'a> {
                 }
             }
             Inst::SCopyRun { dst, src, len, dtype } => {
-                self.scalar_run_cost(*len, 4);
+                self.scalar_run_cost(macro_group(inst), *len, 4);
                 self.stream_touch(src, *len);
                 self.stream_touch(dst, *len);
                 if self.mode == Mode::Functional {
@@ -690,7 +702,7 @@ impl<'a> Machine<'a> {
                 // groups of `lanes` int8 elements: 2 packed loads + smaqa
                 // + address bookkeeping per group.
                 let groups = (*len as u64).div_ceil(*lanes as u64);
-                self.trace.add(InstrGroup::Scalar, groups * 4);
+                self.trace.add(macro_group(inst), groups * 4);
                 self.cycles += groups as f64 * 4.0 / self.soc.scalar_ipc;
                 self.stream_touch(a, *len);
                 self.stream_touch(b, *len);
@@ -709,7 +721,7 @@ impl<'a> Machine<'a> {
             }
             Inst::PAxpyRun { y, a, b, len, lanes } => {
                 let groups = (*len as u64).div_ceil(*lanes as u64);
-                self.trace.add(InstrGroup::Scalar, groups * 7);
+                self.trace.add(macro_group(inst), groups * 7);
                 self.cycles += groups as f64 * 7.0 / self.soc.scalar_ipc;
                 self.stream_touch(a, *len);
                 self.stream_touch(b, *len);
@@ -725,7 +737,7 @@ impl<'a> Machine<'a> {
                 }
             }
             Inst::SAddRun { dst, src, len, dtype } => {
-                self.scalar_run_cost(*len, 5);
+                self.scalar_run_cost(macro_group(inst), *len, 5);
                 self.stream_touch(src, *len);
                 self.stream_touch(dst, *len);
                 if self.mode == Mode::Functional {
@@ -748,9 +760,9 @@ impl<'a> Machine<'a> {
 
     /// Cycle + trace cost of a scalar macro loop (`instrs_per_elem`
     /// instructions per element).
-    fn scalar_run_cost(&mut self, len: u32, instrs_per_elem: u32) {
+    fn scalar_run_cost(&mut self, group: InstrGroup, len: u32, instrs_per_elem: u32) {
         let n = len as u64 * instrs_per_elem as u64;
-        self.trace.add(InstrGroup::Scalar, n);
+        self.trace.add(group, n);
         self.cycles += n as f64 / self.soc.scalar_ipc;
     }
 

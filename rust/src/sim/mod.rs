@@ -17,4 +17,6 @@ pub use compiled::{ExecLimits, SimBudgetExceeded};
 pub use machine::{execute, execute_limited, requant_i64, BufData, BufStore, ExecResult, Mode};
 pub use soc::SocConfig;
 pub use trace::TraceCounts;
-pub use vprogram::{AddrExpr, BufId, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram, VarId};
+pub use vprogram::{
+    AddrExpr, BufId, Inst, InstKind, LoopNode, MemRef, Node, ScalarSrc, VProgram, VarId,
+};

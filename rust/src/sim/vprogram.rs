@@ -75,6 +75,26 @@ impl AddrExpr {
         }
         x
     }
+
+    /// Inclusive `[lo, hi]` interval of this expression when variable `v`
+    /// ranges over `[0, var_max[v]]` (variables beyond the slice are fixed
+    /// at 0, matching the interpreter's treatment of unbound variables).
+    /// Each term contributes its extreme to one endpoint by sign, so the
+    /// result is exact for affine expressions in independent variables and
+    /// a sound over-approximation when one variable appears with mixed-sign
+    /// coefficients. This is the static bounds pass's abstract evaluation.
+    pub fn range(&self, var_max: &[i64]) -> (i64, i64) {
+        let (mut lo, mut hi) = (self.base, self.base);
+        for &(v, c) in &self.coeffs {
+            let extreme = c * var_max.get(v).copied().unwrap_or(0);
+            if extreme >= 0 {
+                hi += extreme;
+            } else {
+                lo += extreme;
+            }
+        }
+        (lo, hi)
+    }
 }
 
 /// A memory operand: element offset into a buffer, with an element stride
@@ -164,7 +184,49 @@ pub enum Inst {
     PAxpyRun { y: MemRef, a: MemRef, b: MemRef, len: u32, lanes: u32 },
 }
 
+/// Coarse ISA class of an instruction. The one classifier shared by
+/// [`VProgram::static_instrs`], the static verifier (`crate::analysis`),
+/// and the interpreter's trace grouping — so a future instruction cannot
+/// be vector for code-size purposes but scalar for trace purposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstKind {
+    /// RVV vector instruction: vector code size, vector trace groups,
+    /// subject to the active `vsetvli` configuration.
+    Vector,
+    /// Plain scalar-ISA instruction or scalar macro loop.
+    Scalar,
+    /// Packed-SIMD (P extension) macro. These are *scalar-ISA* encodings —
+    /// they count in the Scalar trace group exactly as a QEMU trace would
+    /// classify them — but analyses that care about lane width can tell
+    /// them apart.
+    Packed,
+}
+
 impl Inst {
+    /// The instruction's ISA class (see [`InstKind`]).
+    pub fn kind(&self) -> InstKind {
+        match self {
+            Inst::VSetVl { .. }
+            | Inst::VLoad { .. }
+            | Inst::VStore { .. }
+            | Inst::VBin { .. }
+            | Inst::VBinScalar { .. }
+            | Inst::VMacc { .. }
+            | Inst::VRedSum { .. }
+            | Inst::VSlideInsert { .. }
+            | Inst::VSplat { .. }
+            | Inst::VMv { .. }
+            | Inst::VRequant { .. } => InstKind::Vector,
+            Inst::PDotRun { .. } | Inst::PAxpyRun { .. } => InstKind::Packed,
+            Inst::SOps { .. }
+            | Inst::SDotRun { .. }
+            | Inst::SAxpyRun { .. }
+            | Inst::SRequantRun { .. }
+            | Inst::SCopyRun { .. }
+            | Inst::SAddRun { .. } => InstKind::Scalar,
+        }
+    }
+
     /// Dynamic instruction count this node contributes per execution.
     pub fn dyn_instrs(&self) -> u64 {
         match self {
@@ -202,20 +264,31 @@ impl Inst {
     }
 
     pub fn is_vector(&self) -> bool {
-        matches!(
-            self,
-            Inst::VSetVl { .. }
-                | Inst::VLoad { .. }
-                | Inst::VStore { .. }
-                | Inst::VBin { .. }
-                | Inst::VBinScalar { .. }
-                | Inst::VMacc { .. }
-                | Inst::VRedSum { .. }
-                | Inst::VSlideInsert { .. }
-                | Inst::VSplat { .. }
-                | Inst::VMv { .. }
-                | Inst::VRequant { .. }
-        )
+        self.kind() == InstKind::Vector
+    }
+
+    /// Memory operands of this instruction, each paired with the number of
+    /// elements accessed per execution (spaced `MemRef::stride` apart, as
+    /// the interpreter addresses them): `None` = the active vector length
+    /// decided by the last `vsetvli`, `Some(n)` = exactly `n` elements.
+    /// The dot-product accumulators touch only element 0 — mirroring
+    /// `machine.rs`, which this accessor must stay in lockstep with.
+    pub fn mem_refs(&self) -> Vec<(&MemRef, Option<u32>)> {
+        match self {
+            Inst::VLoad { mem, .. } | Inst::VStore { mem, .. } => vec![(mem, None)],
+            Inst::SDotRun { acc, a, b, len, .. } | Inst::PDotRun { acc, a, b, len, .. } => {
+                vec![(acc, Some(1)), (a, Some(*len)), (b, Some(*len))]
+            }
+            Inst::SAxpyRun { y, a, b, len, .. } | Inst::PAxpyRun { y, a, b, len, .. } => {
+                vec![(y, Some(*len)), (a, Some(*len)), (b, Some(*len))]
+            }
+            Inst::SRequantRun { dst, src, len, .. }
+            | Inst::SCopyRun { dst, src, len, .. }
+            | Inst::SAddRun { dst, src, len, .. } => {
+                vec![(dst, Some(*len)), (src, Some(*len))]
+            }
+            _ => vec![],
+        }
     }
 }
 
@@ -269,6 +342,60 @@ impl VProgram {
         self.n_vars - 1
     }
 
+    /// Cheap structural sanity check: every memory operand names a declared
+    /// buffer, every loop has a positive extent, and every variable — loop
+    /// counters and address-expression terms alike — is below `n_vars`.
+    /// Returns the first violation. Code generators assert this in debug
+    /// builds; [`Database::recover`](crate::tune::Database::recover)
+    /// consumers and `rvv-tune verify` run it when re-lowering journaled
+    /// traces back into programs, and the static verifier runs it before
+    /// its deeper passes (which index buffers and variables unchecked).
+    pub fn validate_buffers(&self) -> Result<(), String> {
+        fn check_expr(e: &AddrExpr, n_vars: usize, what: &str) -> Result<(), String> {
+            for &(v, _) in &e.coeffs {
+                if v >= n_vars {
+                    return Err(format!("{what} references undeclared variable i{v} (n_vars {n_vars})"));
+                }
+            }
+            Ok(())
+        }
+        fn check_nodes(nodes: &[Node], p: &VProgram) -> Result<(), String> {
+            for n in nodes {
+                match n {
+                    Node::Loop(l) => {
+                        if l.var >= p.n_vars {
+                            return Err(format!(
+                                "loop counter i{} is undeclared (n_vars {})",
+                                l.var, p.n_vars
+                            ));
+                        }
+                        if l.extent == 0 {
+                            return Err(format!("loop over i{} has extent 0", l.var));
+                        }
+                        check_nodes(&l.body, p)?;
+                    }
+                    Node::Inst(i) => {
+                        for (mem, _) in i.mem_refs() {
+                            if mem.buf >= p.buffers.len() {
+                                return Err(format!(
+                                    "memory operand names undeclared buf{} ({} declared)",
+                                    mem.buf,
+                                    p.buffers.len()
+                                ));
+                            }
+                            check_expr(&mem.addr, p.n_vars, "address")?;
+                        }
+                        if let Inst::VSlideInsert { pos, .. } = i {
+                            check_expr(pos, p.n_vars, "vslide position")?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }
+        check_nodes(&self.body, self)
+    }
+
     /// Static instruction count of the generated kernel body
     /// (code-size model input).
     pub fn static_instrs(&self) -> (u64, u64) {
@@ -276,13 +403,12 @@ impl VProgram {
             let (mut vec_i, mut scalar_i) = (0u64, 0u64);
             for n in nodes {
                 match n {
-                    Node::Inst(i) => {
-                        if i.is_vector() {
-                            vec_i += i.static_instrs();
-                        } else {
-                            scalar_i += i.static_instrs();
-                        }
-                    }
+                    Node::Inst(i) => match i.kind() {
+                        InstKind::Vector => vec_i += i.static_instrs(),
+                        // Packed-SIMD macros are scalar-ISA encodings:
+                        // scalar instruction widths apply.
+                        InstKind::Scalar | InstKind::Packed => scalar_i += i.static_instrs(),
+                    },
                     Node::Loop(l) => {
                         let (v, s) = walk(&l.body);
                         vec_i += v * l.unroll as u64;
@@ -485,5 +611,60 @@ mod tests {
         let i = Inst::VRequant { vd: 0, vs: 1, mult: 1, shift: 1, zp: 0 };
         assert_eq!(i.dyn_instrs(), 4);
         assert!(i.is_vector());
+    }
+
+    #[test]
+    fn addr_expr_range_is_exact_for_affine() {
+        // i0 in [0,3], i1 in [0,7]: 100 + 8*i0 - 2*i1 in [100-14, 100+24].
+        let e = AddrExpr::var(0, 8).plus(1, -2).offset(100);
+        assert_eq!(e.range(&[3, 7]), (86, 124));
+        assert_eq!(AddrExpr::constant(5).range(&[]), (5, 5));
+        // Unbound variable (beyond the slice) is pinned at 0.
+        assert_eq!(AddrExpr::var(2, 100).range(&[3, 7]), (0, 0));
+    }
+
+    #[test]
+    fn kind_partitions_all_instructions() {
+        let m = MemRef::unit(0, AddrExpr::constant(0));
+        assert_eq!(Inst::VLoad { vd: 0, mem: m.clone() }.kind(), InstKind::Vector);
+        assert_eq!(Inst::SOps { count: 1 }.kind(), InstKind::Scalar);
+        let p = Inst::PDotRun { acc: m.clone(), a: m.clone(), b: m.clone(), len: 8, lanes: 8 };
+        assert_eq!(p.kind(), InstKind::Packed);
+        assert!(!p.is_vector());
+        // The dot accumulator is a single-element access, the streams len-wide.
+        let widths: Vec<_> = p.mem_refs().iter().map(|&(_, w)| w).collect();
+        assert_eq!(widths, vec![Some(1), Some(8), Some(8)]);
+    }
+
+    #[test]
+    fn validate_buffers_catches_structural_damage() {
+        let mut p = VProgram::new("t");
+        let b = p.add_buffer("X", DType::I8, 16);
+        let v = p.fresh_var();
+        p.body.push(Node::Loop(LoopNode {
+            var: v,
+            extent: 4,
+            unroll: 1,
+            body: vec![Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(b, AddrExpr::var(v, 4)) })],
+        }));
+        assert!(p.validate_buffers().is_ok());
+
+        let mut bad_buf = p.clone();
+        if let Node::Loop(l) = &mut bad_buf.body[0] {
+            if let Node::Inst(Inst::VLoad { mem, .. }) = &mut l.body[0] {
+                mem.buf = 7;
+            }
+        }
+        assert!(bad_buf.validate_buffers().unwrap_err().contains("buf7"));
+
+        let mut bad_extent = p.clone();
+        if let Node::Loop(l) = &mut bad_extent.body[0] {
+            l.extent = 0;
+        }
+        assert!(bad_extent.validate_buffers().unwrap_err().contains("extent 0"));
+
+        let mut bad_var = p.clone();
+        bad_var.n_vars = 0;
+        assert!(bad_var.validate_buffers().unwrap_err().contains("undeclared"));
     }
 }

@@ -56,6 +56,13 @@ fn decision_slot(id: &str) -> Option<(usize, fn(u64) -> f32)> {
         Some((13, |v| 2.0 * v as f32))
     } else if id == ids::VL.name() {
         Some((8, |v| log2p(v as f64)))
+    } else if id == "reg_pressure" {
+        // Not a sampled decision: the static verifier's register-pressure
+        // fact (`analysis::register_pressure`), routed through the same
+        // slot table so it stays in lockstep with the manifest. Shares the
+        // config-churn slot additively — both measure "schedule overhead
+        // that scales with narrower implementations".
+        Some((30, |v| log2p(v as f64)))
     } else {
         None
     }
@@ -178,6 +185,9 @@ pub fn extract(op: &Op, trace: &Trace, program: &VProgram, soc: &SocConfig) -> V
     f[28] = (footprint / l2_bytes).min(16.0) as f32;
     f[29] = log2p(footprint);
     f[30] = (sp.config_switches / sp.vector_total().max(1.0)) as f32;
+    if let Some((slot, transform)) = decision_slot("reg_pressure") {
+        f[slot] += transform(crate::analysis::register_pressure(program) as u64);
+    }
     f[31] = log2p(program.code_size_bytes() as f64);
     // Scale to roughly unit magnitude — keeps the MLP's SGD stable
     // (log2-based features reach ~30 for billion-MAC layers).
@@ -257,6 +267,24 @@ mod tests {
         assert_eq!((fi[0], fi[1]), (0.125, 0.125));
         assert_ne!(fi[12], fd[12], "strategy must move the packed order slot");
         assert_ne!(fd[13], fh[13], "ky_hoist must move the unroll slot");
+    }
+
+    #[test]
+    fn register_pressure_has_a_feature_slot() {
+        // The verifier's pressure fact must reach the model through the
+        // decision_slot table, additively on top of the config-churn term.
+        let op = Op::square_matmul(64, DType::I8);
+        let t = trace(64, 32);
+        let p = emit(&op, &t);
+        let f = extract(&op, &t, &p, &SocConfig::saturn(1024));
+        let (slot, transform) = decision_slot("reg_pressure").expect("reg_pressure slot");
+        let pressure = crate::analysis::register_pressure(&p);
+        assert!(pressure > 0, "matmul kernel must use vector registers");
+        assert!(
+            f[slot] >= transform(pressure as u64) * 0.125,
+            "slot {slot} = {} must include the pressure term",
+            f[slot]
+        );
     }
 
     #[test]

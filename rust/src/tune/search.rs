@@ -49,6 +49,13 @@ impl Prepared {
     pub fn build(op: &Op, trace: &Trace, soc: &SocConfig) -> Prepared {
         let schedule = space::lower(trace).expect("candidate trace lowers to a schedule");
         let program = codegen::ours::emit(op, &schedule, soc.vlen);
+        // Static gate: a candidate that cannot be *proven* legal is never
+        // simulated. The panic unwinds into `try_build`'s catch and
+        // becomes `MeasureOutcome::Failed { reason }` through the
+        // quarantine path — one rejected candidate, not a dead campaign.
+        if let Err(reason) = crate::analysis::verify_gate(&program, soc) {
+            panic!("{reason}");
+        }
         let features = features::extract(op, trace, &program, soc);
         Prepared { program: Arc::new(program), features }
     }

@@ -171,7 +171,13 @@ fn expected(c: &Case) -> Expected {
 }
 
 /// Run one backend program over the case's inputs and check its output.
+/// The static verifier gates every program first: a kernel that fails
+/// verification must never reach the simulator, and a kernel that runs
+/// here must verify clean (the harness doubles as the verifier's
+/// false-positive corpus).
 fn check_backend(c: &Case, program: &rvv_tune::sim::VProgram, soc: &SocConfig, label: &str) {
+    let report = rvv_tune::analysis::verify(program, soc);
+    assert!(report.ok(), "{label}: static verifier rejected {}:\n{report}", c.op.key());
     let mut bufs = BufStore::functional(program);
     match &c.op {
         Op::Eltwise { .. } => {
