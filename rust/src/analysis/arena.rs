@@ -1,0 +1,325 @@
+//! Network-level verification: prove a [`NetProgram`]'s kernels legal
+//! *and* its [`ArenaPlan`] sound before anything runs.
+//!
+//! The per-kernel pipeline ([`super::verify`]) proves every memory
+//! access inside its `BufferDecl.len`. This pass closes the remaining
+//! gap to the arena: it maps each command's conventional buffers onto
+//! the plan's slots and checks the chain
+//!
+//! ```text
+//! access < buffer.len            (bounds pass, per kernel)
+//! buffer bytes <= slot.size      (E-ARENA, here)
+//! slot fits the arena            (E-ARENA, here)
+//! co-live slots never overlap    (E-ARENA, here)
+//! ```
+//!
+//! which together prove every arena-relative access of every emitted
+//! kernel — fused epilogues included — in range.
+
+use crate::codegen::{self, Scenario};
+use crate::net::{ArenaPlan, NetCmd, NetProgram, VarClass, ARENA_ALIGN};
+use crate::sim::SocConfig;
+
+use super::{codes, verify, VerifyReport};
+
+/// Result of [`verify_net`]: arena-level diagnostics plus the kernel
+/// report of every command (named by the generated program).
+#[derive(Clone, Debug, Default)]
+pub struct NetVerifyReport {
+    pub arena: VerifyReport,
+    pub kernels: Vec<(String, VerifyReport)>,
+}
+
+impl NetVerifyReport {
+    /// No errors anywhere (warnings allowed).
+    pub fn ok(&self) -> bool {
+        self.arena.ok() && self.kernels.iter().all(|(_, r)| r.ok())
+    }
+
+    /// One-line summary for CLI/CI output.
+    pub fn summary(&self) -> String {
+        let kernel_errors: usize = self.kernels.iter().map(|(_, r)| r.errors.len()).sum();
+        if self.ok() {
+            format!("net verify OK: {} kernels, arena sound", self.kernels.len())
+        } else {
+            format!(
+                "net verify FAILED: {} arena error(s), {} kernel error(s) over {} kernels",
+                self.arena.errors.len(),
+                kernel_errors,
+                self.kernels.len()
+            )
+        }
+    }
+}
+
+/// Verify `net` against its `plan` on `soc`, generating each command's
+/// kernel under the scenario `scenario_for` picks (the network driver
+/// passes its policy; CI passes the compiler fallback). Checks, per
+/// command: the kernel verifies under the full static pipeline, every
+/// conventional buffer fits its variable's slot, and private scratch
+/// buffers (COL/TMP) fit the command's scratch slot. Globally: slots
+/// are aligned, inside the arena, and never overlap while co-live.
+pub fn verify_net(
+    net: &NetProgram,
+    plan: &ArenaPlan,
+    soc: &SocConfig,
+    scenario_for: &dyn Fn(usize, &NetCmd) -> Scenario,
+) -> NetVerifyReport {
+    let mut rep = NetVerifyReport::default();
+    check_plan(net, plan, &mut rep.arena);
+    for (i, cmd) in net.cmds.iter().enumerate() {
+        let scenario = scenario_for(i, cmd);
+        let program = match &cmd.epilogue {
+            Some(epi) => codegen::generate_fused(&cmd.op, epi, &scenario, soc.vlen),
+            None => codegen::generate(&cmd.op, &scenario, soc.vlen),
+        };
+        let Some(p) = program else {
+            rep.arena.error(
+                codes::ARENA,
+                format!("#{i}"),
+                format!(
+                    "scenario {} cannot emit {}{}",
+                    scenario.name(),
+                    cmd.op.key(),
+                    if cmd.epilogue.is_some() { " (fused)" } else { "" }
+                ),
+            );
+            continue;
+        };
+        check_cmd_buffers(net, plan, i, cmd, &p, &mut rep.arena);
+        rep.kernels.push((p.name.clone(), verify(&p, soc)));
+    }
+    rep
+}
+
+/// Plan-global soundness: alignment, containment, sizing, liveness
+/// disjointness, and coverage of every used non-weight variable.
+fn check_plan(net: &NetProgram, plan: &ArenaPlan, rep: &mut VerifyReport) {
+    for slot in &plan.slots {
+        let var = &net.vars[slot.var];
+        if slot.offset % ARENA_ALIGN != 0 {
+            rep.error(
+                codes::ARENA,
+                var.name.clone(),
+                format!("slot offset {} breaks {ARENA_ALIGN}-byte alignment", slot.offset),
+            );
+        }
+        if slot.size < var.bytes() {
+            rep.error(
+                codes::ARENA,
+                var.name.clone(),
+                format!("slot size {} < variable bytes {}", slot.size, var.bytes()),
+            );
+        }
+        if slot.offset + slot.size > plan.total {
+            rep.error(
+                codes::ARENA,
+                var.name.clone(),
+                format!(
+                    "slot [{}, {}) escapes the {}-byte arena",
+                    slot.offset,
+                    slot.offset + slot.size,
+                    plan.total
+                ),
+            );
+        }
+    }
+    for (ai, a) in plan.slots.iter().enumerate() {
+        for b in &plan.slots[ai + 1..] {
+            let colive = a.first <= b.last && b.first <= a.last;
+            let disjoint = a.offset + a.size <= b.offset || b.offset + b.size <= a.offset;
+            if colive && !disjoint {
+                rep.error(
+                    codes::ARENA,
+                    String::new(),
+                    format!(
+                        "co-live slots {} and {} overlap",
+                        net.vars[a.var].name, net.vars[b.var].name
+                    ),
+                );
+            }
+        }
+    }
+    for (v, li) in net.live_intervals().iter().enumerate() {
+        if li.is_some() && plan.slot_for(v).is_none() {
+            rep.error(
+                codes::ARENA,
+                net.vars[v].name.clone(),
+                "live variable has no arena slot".to_string(),
+            );
+        }
+    }
+}
+
+/// Map the emitted program's buffers back onto `cmd`'s variables (the
+/// conventional prefix of `declare_buffers` / `declare_fused_buffers`,
+/// appended scratch after) and prove each fits where the plan puts it.
+fn check_cmd_buffers(
+    net: &NetProgram,
+    plan: &ArenaPlan,
+    i: usize,
+    cmd: &NetCmd,
+    p: &crate::sim::VProgram,
+    rep: &mut VerifyReport,
+) {
+    let mapped: Vec<usize> = match cmd.epilogue {
+        Some(_) => vec![
+            cmd.a,
+            cmd.b,
+            cmd.acc,
+            cmd.res.expect("fused cmd has res"),
+            cmd.y.expect("fused cmd has y"),
+        ],
+        None => {
+            let mut m = vec![cmd.a, cmd.b, cmd.acc];
+            m.extend(cmd.out);
+            m
+        }
+    };
+    for (bi, &var) in mapped.iter().enumerate() {
+        let buf = &p.buffers[bi];
+        let need = buf.len * buf.dtype.bytes();
+        let v = &net.vars[var];
+        if v.class == VarClass::Weight {
+            continue; // flash-resident, arena-exempt
+        }
+        match plan.slot_for(var) {
+            Some(slot) if slot.size >= need => {}
+            Some(slot) => rep.error(
+                codes::ARENA,
+                format!("#{i} {}", buf.name),
+                format!(
+                    "kernel buffer needs {need} bytes but slot for {} holds {}",
+                    v.name, slot.size
+                ),
+            ),
+            None => rep.error(
+                codes::ARENA,
+                format!("#{i} {}", buf.name),
+                format!("kernel buffer maps to unplanned variable {}", v.name),
+            ),
+        }
+    }
+    // Everything past the conventional prefix is backend-private scratch
+    // (COL patches, TMP staging); it must fit — summed, they coexist —
+    // inside the command's scratch slot.
+    let extra: usize =
+        p.buffers[mapped.len()..].iter().map(|b| b.len * b.dtype.bytes()).sum();
+    if extra > 0 {
+        match cmd.scratch.and_then(|s| plan.slot_for(s)) {
+            Some(slot) if slot.size >= extra => {}
+            Some(slot) => rep.error(
+                codes::ARENA,
+                format!("#{i}"),
+                format!(
+                    "private scratch needs {extra} bytes but the scratch slot holds {}",
+                    slot.size
+                ),
+            ),
+            None => rep.error(
+                codes::ARENA,
+                format!("#{i}"),
+                format!("{extra} bytes of private scratch but no scratch slot"),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::ArenaSlot;
+    use crate::tir::{DType, Op, Requant};
+
+    fn chain() -> NetProgram {
+        let rq = Some(Requant::default_for_tests());
+        let layers = [
+            Op::Matmul { m: 4, n: 8, k: 8, dtype: DType::I8, requant: rq },
+            Op::Eltwise { len: 32, dtype: DType::I8 },
+            Op::Conv2d {
+                h: 4,
+                w: 8,
+                cin: 1,
+                cout: 4,
+                kh: 2,
+                kw: 2,
+                stride: 1,
+                dtype: DType::I8,
+                requant: rq,
+            },
+        ];
+        let mut net = NetProgram::lower(&layers);
+        assert_eq!(net.fuse_epilogues(), 1);
+        net
+    }
+
+    #[test]
+    fn sound_plan_and_kernels_verify_for_every_scenario() {
+        let soc = crate::sim::SocConfig::saturn(256);
+        let net = chain();
+        let plan = net.plan_arena();
+        for scenario in
+            [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm, Scenario::MuRiscvNn]
+        {
+            let rep = verify_net(&net, &plan, &soc, &|_, _| scenario.clone());
+            assert!(rep.ok(), "{}: {}", scenario.name(), rep.summary());
+            // One kernel per command, fused ones flagged in the name.
+            assert_eq!(rep.kernels.len(), net.cmds.len());
+            assert!(rep.kernels[0].0.contains("fused"));
+        }
+    }
+
+    #[test]
+    fn corrupted_plan_is_caught() {
+        let soc = crate::sim::SocConfig::saturn(256);
+        let net = chain();
+        let base = net.plan_arena();
+
+        // Shrink a slot below its variable's bytes.
+        let mut small = base.clone();
+        small.slots[0].size = 0;
+        let rep = verify_net(&net, &small, &soc, &|_, _| Scenario::ScalarOs);
+        assert!(!rep.ok());
+        assert!(rep.arena.has_code(codes::ARENA));
+
+        // Overlap two co-live slots: move every slot to offset 0.
+        let mut clash = base.clone();
+        for s in &mut clash.slots {
+            s.offset = 0;
+        }
+        let rep = verify_net(&net, &clash, &soc, &|_, _| Scenario::ScalarOs);
+        assert!(rep.arena.errors.iter().any(|d| d.message.contains("co-live")));
+
+        // Drop a slot entirely.
+        let mut missing = base.clone();
+        missing.slots.pop();
+        let rep = verify_net(&net, &missing, &soc, &|_, _| Scenario::ScalarOs);
+        assert!(!rep.ok());
+
+        // Break alignment.
+        let mut skewed = ArenaPlan { slots: base.slots.clone(), total: base.total + 1 };
+        let s: &mut ArenaSlot = &mut skewed.slots[0];
+        s.offset += 1;
+        let rep = verify_net(&net, &skewed, &soc, &|_, _| Scenario::ScalarOs);
+        assert!(rep
+            .arena
+            .errors
+            .iter()
+            .any(|d| d.message.contains("alignment")));
+    }
+
+    /// The whole zoo, fused, verifies against its own plan under the
+    /// scalar fallback (the CI quick-tier sweep in miniature).
+    #[test]
+    fn every_zoo_model_verifies_fused() {
+        let soc = crate::sim::SocConfig::saturn(128);
+        for name in crate::workloads::models::BPI_MODELS {
+            let model = crate::workloads::models::by_name(name, DType::I8).unwrap();
+            let mut net = model.net();
+            net.fuse_epilogues();
+            let plan = net.plan_arena();
+            let rep = verify_net(&net, &plan, &soc, &|_, _| Scenario::ScalarOs);
+            assert!(rep.ok(), "{name}: {}", rep.summary());
+        }
+    }
+}

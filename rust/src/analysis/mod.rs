@@ -30,12 +30,14 @@
 //! seeded random-op corpus across all five backends (see EXPERIMENTS.md
 //! §Verify for the error-code table).
 
+mod arena;
 mod bounds;
 mod defuse;
 mod pressure;
 mod vconfig;
 mod walk;
 
+pub use arena::{verify_net, NetVerifyReport};
 pub use pressure::register_pressure;
 
 use std::fmt;
@@ -62,6 +64,10 @@ pub mod codes {
     pub const USE_BEFORE_DEF: &str = "E-USE-BEFORE-DEF";
     /// Structural damage (`VProgram::validate_buffers`).
     pub const STRUCT: &str = "E-STRUCT";
+    /// Network arena-plan violation: a kernel buffer outgrows its slot,
+    /// a slot escapes the arena or breaks alignment, two co-live slots
+    /// overlap, or a live variable has no slot ([`verify_net`]).
+    pub const ARENA: &str = "E-ARENA";
     /// Register written but never read or stored.
     pub const DEAD_STORE: &str = "W-DEAD-STORE";
 }

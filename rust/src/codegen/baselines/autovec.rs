@@ -13,9 +13,9 @@
 
 use crate::isa::{Lmul, VBinOp};
 use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram};
-use crate::tir::{DType, Op};
+use crate::tir::{DType, Op, Requant};
 
-use super::super::{declare_buffers, ours};
+use super::super::{declare_buffers, ours, FusedBufs};
 
 /// Which compiler's vectorizer to model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -297,6 +297,93 @@ pub fn emit(op: &Op, vlen: u32, flavor: Flavor) -> VProgram {
         }
     }
     p
+}
+
+/// Emit the autovectorized program for `op` with a fused eltwise
+/// epilogue `y[i] = clamp_i8(y[i] + requant(acc[i]) * res[i])`. The GEMM
+/// is the same reuse-blind nest; the epilogue mirrors each flavor's
+/// requant split — GCC requants with the scalar chain into a temporary
+/// and vectorizes only the multiply-accumulate, LLVM fuses requant and
+/// accumulate in one vector pass. Both are clamp-once equivalent to the
+/// composed requant-then-eltwise reference.
+pub fn emit_fused(
+    p: &mut VProgram,
+    flavor: Flavor,
+    op: &Op,
+    bufs: FusedBufs,
+    rq: Requant,
+    vlen: u32,
+) {
+    let (m, n, k, a_buf) = match *op {
+        Op::Matmul { m, n, k, .. } => (m, n, k, bufs.a),
+        Op::Conv2d { dtype, .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            let (m, k) = (d.pixels(), d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(p, bufs.a, col, dtype, d);
+            (m, d.cout, k, col)
+        }
+        ref op => panic!("unfusable producer kind: {op}"),
+    };
+    emit_gemm(p, flavor, a_buf, bufs.b, bufs.acc, m, n, k, DType::I8, vlen);
+    match flavor {
+        Flavor::Gcc => {
+            // The saturating requant chain defeats GCC's vectorizer, but
+            // the plain i8 multiply-accumulate over the requanted
+            // temporary does vectorize.
+            let tmp = p.add_buffer("TMP", DType::I8, m * n);
+            p.body.push(Node::Inst(Inst::SRequantRun {
+                dst: MemRef::unit(tmp, AddrExpr::constant(0)),
+                src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+                len: (m * n) as u32,
+                mult: rq.mult,
+                shift: rq.shift,
+                zp: rq.zp,
+            }));
+            let len = m * n;
+            let sew = DType::I8.sew();
+            let vlmax = vlen * flavor.lmul().factor() / sew.bits();
+            let vl = vlmax.min(len as u32);
+            let full = len / vl as usize;
+            let tail = (len % vl as usize) as u32;
+            let chunk = |base: AddrExpr, vl_cur: u32| -> Vec<Node> {
+                vec![
+                    Node::Inst(Inst::VSetVl { vl: vl_cur, sew, lmul: flavor.lmul(), float: false }),
+                    Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(tmp, base.clone()) }),
+                    Node::Inst(Inst::VLoad { vd: 4, mem: MemRef::unit(bufs.res, base.clone()) }),
+                    Node::Inst(Inst::VLoad { vd: 8, mem: MemRef::unit(bufs.y, base.clone()) }),
+                    Node::Inst(Inst::VMacc { vd: 8, vs1: 0, vs2: 4, widen: false }),
+                    Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(bufs.y, base) }),
+                ]
+            };
+            if full > 0 {
+                let cv = p.fresh_var();
+                p.body.push(Node::Loop(LoopNode {
+                    var: cv,
+                    extent: full as u32,
+                    unroll: flavor.interleave(),
+                    body: chunk(AddrExpr::var(cv, vl as i64), vl),
+                }));
+            }
+            if tail > 0 {
+                let nodes = chunk(AddrExpr::constant(full as i64 * vl as i64), tail);
+                p.body.extend(nodes);
+            }
+        }
+        Flavor::Llvm => {
+            let nodes = ours::epilogue_rows(
+                p,
+                bufs.acc,
+                ours::EpilogueKind::FusedEltwise { res: bufs.res, y: bufs.y },
+                rq,
+                AddrExpr::constant(0),
+                m as u32,
+                n,
+                vlen,
+            );
+            p.body.extend(nodes);
+        }
+    }
 }
 
 #[cfg(test)]

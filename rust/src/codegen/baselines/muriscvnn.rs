@@ -18,7 +18,7 @@ use crate::isa::{Lmul, Sew, VBinOp};
 use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, ScalarSrc, VProgram};
 use crate::tir::{DType, Op, Requant};
 
-use super::super::declare_buffers;
+use super::super::{declare_buffers, FusedBufs};
 
 /// Static code size of the shared library functions, per kernel kind.
 /// The convolution path (im2col + mat-mult core + tail variants) is by far
@@ -59,6 +59,16 @@ pub fn library_fn_kind(op: &Op) -> &'static str {
 /// Per-call-site glue (argument setup + call) in the generated C.
 pub const CALL_GLUE_BYTES: u64 = 96;
 
+/// Where the row-pair core's per-output requanted value goes: stored to
+/// the output buffer (the plain library kernel), or multiplied with a
+/// residual operand and accumulated into `y` in-register (the fused
+/// eltwise variant — still one single-element store per output).
+#[derive(Clone, Copy)]
+enum RowpairOut {
+    Store(crate::sim::BufId),
+    Fused { res: crate::sim::BufId, y: crate::sim::BufId },
+}
+
 /// The library's `nt_t` row-pair GEMM core: fixed VLMAX chunks, two rows
 /// per pass with a vector accumulator each, per-output in-register
 /// requant + single-element store. `a_buf` is parametric because
@@ -69,7 +79,7 @@ fn emit_gemm_rowpair(
     a_buf: crate::sim::BufId,
     b_buf: crate::sim::BufId,
     acc_buf: crate::sim::BufId,
-    out_buf: crate::sim::BufId,
+    out: RowpairOut,
     m: usize,
     n: usize,
     k: usize,
@@ -172,10 +182,37 @@ fn emit_gemm_rowpair(
                 shift: rq.shift,
                 zp: rq.zp,
             }));
-            body.push(Node::Inst(Inst::VStore {
-                vs: 26,
-                mem: MemRef::unit(out_buf, c_addr),
-            }));
+            match out {
+                RowpairOut::Store(out_buf) => {
+                    body.push(Node::Inst(Inst::VStore {
+                        vs: 26,
+                        mem: MemRef::unit(out_buf, c_addr),
+                    }));
+                }
+                RowpairOut::Fused { res, y } => {
+                    // y += requant(acc) * res, exact in the i64 lane,
+                    // clamped once by the single-element i8 store —
+                    // identical to the unfused requant-then-eltwise pair.
+                    body.push(Node::Inst(Inst::VLoad {
+                        vd: 27,
+                        mem: MemRef::unit(y, c_addr.clone()),
+                    }));
+                    body.push(Node::Inst(Inst::VLoad {
+                        vd: 28,
+                        mem: MemRef::unit(res, c_addr.clone()),
+                    }));
+                    body.push(Node::Inst(Inst::VMacc {
+                        vd: 27,
+                        vs1: 26,
+                        vs2: 28,
+                        widen: false,
+                    }));
+                    body.push(Node::Inst(Inst::VStore {
+                        vs: 27,
+                        mem: MemRef::unit(y, c_addr),
+                    }));
+                }
+            }
             // back to element config for the next column's k loop
             body.push(Node::Inst(Inst::VSetVl { vl: chunk, sew, lmul, float: false }));
         }
@@ -211,7 +248,7 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
     match *op {
         Op::Matmul { m, n, k, requant, .. } => {
             let rq = requant.unwrap_or(Requant { mult: 1 << 14, shift: 15, zp: 0 });
-            let out = bufs.out.unwrap();
+            let out = RowpairOut::Store(bufs.out.unwrap());
             emit_gemm_rowpair(&mut p, bufs.a, bufs.b, bufs.acc, out, m, n, k, rq, vlmax);
         }
         Op::Conv2d { dtype, requant, .. } => {
@@ -224,7 +261,7 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
             let (m, n, k) = (d.pixels(), d.cout, d.k_col());
             let col = p.add_buffer("COL", dtype, m * k);
             super::super::emit_im2col(&mut p, bufs.a, col, dtype, d);
-            let out = bufs.out.unwrap();
+            let out = RowpairOut::Store(bufs.out.unwrap());
             emit_gemm_rowpair(&mut p, col, bufs.b, bufs.acc, out, m, n, k, rq, vlmax);
         }
         Op::DwConv { spatial, channels, taps, requant, .. } => {
@@ -326,6 +363,29 @@ pub fn emit(op: &Op, vlen: u32) -> Option<VProgram> {
         }
     }
     Some(p)
+}
+
+/// Emit the library-kernel program for `op` with a fused eltwise
+/// epilogue `y[i] = clamp_i8(y[i] + requant(acc[i]) * res[i])`. The
+/// row-pair core is unchanged; only its per-output tail switches from a
+/// plain store to the in-register residual multiply-accumulate
+/// ([`RowpairOut::Fused`]).
+pub fn emit_fused(p: &mut VProgram, op: &Op, bufs: FusedBufs, rq: Requant, vlen: u32) {
+    let vlmax = vlen * Lmul::M4.factor() / 8;
+    let out = RowpairOut::Fused { res: bufs.res, y: bufs.y };
+    match *op {
+        Op::Matmul { m, n, k, .. } => {
+            emit_gemm_rowpair(p, bufs.a, bufs.b, bufs.acc, out, m, n, k, rq, vlmax);
+        }
+        Op::Conv2d { dtype, .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            let (m, n, k) = (d.pixels(), d.cout, d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(p, bufs.a, col, dtype, d);
+            emit_gemm_rowpair(p, col, bufs.b, bufs.acc, out, m, n, k, rq, vlmax);
+        }
+        ref op => panic!("unfusable producer kind: {op}"),
+    }
 }
 
 #[cfg(test)]

@@ -11,9 +11,9 @@
 //! zero configuration overhead.
 
 use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, VProgram};
-use crate::tir::{DType, Op};
+use crate::tir::{DType, Op, Requant};
 
-use super::super::declare_buffers;
+use super::super::{declare_buffers, FusedBufs};
 
 /// int8 lanes per 64-bit GPR.
 pub const LANES: u32 = 8;
@@ -136,6 +136,53 @@ pub fn emit(op: &Op) -> Option<VProgram> {
     Some(p)
 }
 
+/// Emit the P-extension program for `op` with a fused eltwise epilogue:
+/// `y[i] = clamp_i8(y[i] + requant(acc[i]) * res[i])`. The dot-product
+/// GEMM stays packed, the requant chain stays scalar (as in `emit`), and
+/// the residual multiply-accumulate uses the packed `smul8`/add path —
+/// clamp-once equivalent to the in-nest form because the requant already
+/// saturates to the i8 range.
+pub fn emit_fused(p: &mut VProgram, op: &Op, bufs: FusedBufs, rq: Requant) {
+    let (m, n, k, a_buf) = match *op {
+        Op::Matmul { m, n, k, .. } => (m, n, k, bufs.a),
+        Op::Conv2d { dtype, .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            let (m, k) = (d.pixels(), d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(p, bufs.a, col, dtype, d);
+            (m, d.cout, k, col)
+        }
+        ref op => panic!("unfusable producer kind: {op}"),
+    };
+    let mv = p.fresh_var();
+    let nv = p.fresh_var();
+    let inner = vec![Node::Inst(Inst::PDotRun {
+        acc: MemRef::unit(bufs.acc, AddrExpr::var(mv, n as i64).plus(nv, 1)),
+        a: MemRef::unit(a_buf, AddrExpr::var(mv, k as i64)),
+        b: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64)),
+        len: k as u32,
+        lanes: LANES,
+    })];
+    let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body: inner });
+    p.body.push(Node::Loop(LoopNode { var: mv, extent: m as u32, unroll: 1, body: vec![n_loop] }));
+    let tmp = p.add_buffer("TMP", DType::I8, m * n);
+    p.body.push(Node::Inst(Inst::SRequantRun {
+        dst: MemRef::unit(tmp, AddrExpr::constant(0)),
+        src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+        len: (m * n) as u32,
+        mult: rq.mult,
+        shift: rq.shift,
+        zp: rq.zp,
+    }));
+    p.body.push(Node::Inst(Inst::PAxpyRun {
+        y: MemRef::unit(bufs.y, AddrExpr::constant(0)),
+        a: MemRef::unit(tmp, AddrExpr::constant(0)),
+        b: MemRef::unit(bufs.res, AddrExpr::constant(0)),
+        len: (m * n) as u32,
+        lanes: LANES,
+    }));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +246,7 @@ mod tests {
             unroll: 8,
             transpose: false,
             ks: 1,
+            fuse: false,
         }));
         let rvv = cycles(&codegen::generate(&op, &tuned, 1024).unwrap());
         assert!(pext < scalar / 2.0, "packed SIMD beats scalar: {pext} vs {scalar}");

@@ -2,9 +2,9 @@
 //! plain scalar loops, no vector instructions (paper §IV).
 
 use crate::sim::{AddrExpr, Inst, LoopNode, MemRef, Node, VProgram};
-use crate::tir::Op;
+use crate::tir::{DType, Op, Requant};
 
-use super::super::declare_buffers;
+use super::super::{declare_buffers, FusedBufs};
 
 /// Emit the scalar program for `op`.
 pub fn emit(op: &Op) -> VProgram {
@@ -117,6 +117,53 @@ pub fn emit(op: &Op) -> VProgram {
         }
     }
     p
+}
+
+/// Emit the scalar program for `op` with a fused eltwise epilogue:
+/// `y[i] = clamp_i8(y[i] + requant(acc[i]) * res[i])`. The library keeps
+/// its separate-pass structure — GEMM, requant into a temporary, then the
+/// residual multiply-accumulate — which is clamp-once equivalent to the
+/// in-nest form because the requant already saturates each value to the
+/// i8 range before the final accumulate.
+pub fn emit_fused(p: &mut VProgram, op: &Op, bufs: FusedBufs, rq: Requant) {
+    let (m, n, k, a_buf) = match *op {
+        Op::Matmul { m, n, k, .. } => (m, n, k, bufs.a),
+        Op::Conv2d { dtype, .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            let (m, k) = (d.pixels(), d.k_col());
+            let col = p.add_buffer("COL", dtype, m * k);
+            super::super::emit_im2col(p, bufs.a, col, dtype, d);
+            (m, d.cout, k, col)
+        }
+        ref op => panic!("unfusable producer kind: {op}"),
+    };
+    let mv = p.fresh_var();
+    let nv = p.fresh_var();
+    let inner = vec![Node::Inst(Inst::SDotRun {
+        acc: MemRef::unit(bufs.acc, AddrExpr::var(mv, n as i64).plus(nv, 1)),
+        a: MemRef::unit(a_buf, AddrExpr::var(mv, k as i64)),
+        b: MemRef::unit(bufs.b, AddrExpr::var(nv, k as i64)),
+        len: k as u32,
+        dtype: DType::I8,
+    })];
+    let n_loop = Node::Loop(LoopNode { var: nv, extent: n as u32, unroll: 1, body: inner });
+    p.body.push(Node::Loop(LoopNode { var: mv, extent: m as u32, unroll: 1, body: vec![n_loop] }));
+    let tmp = p.add_buffer("TMP", DType::I8, m * n);
+    p.body.push(Node::Inst(Inst::SRequantRun {
+        dst: MemRef::unit(tmp, AddrExpr::constant(0)),
+        src: MemRef::unit(bufs.acc, AddrExpr::constant(0)),
+        len: (m * n) as u32,
+        mult: rq.mult,
+        shift: rq.shift,
+        zp: rq.zp,
+    }));
+    p.body.push(Node::Inst(Inst::SAxpyRun {
+        y: MemRef::unit(bufs.y, AddrExpr::constant(0)),
+        a: MemRef::unit(tmp, AddrExpr::constant(0)),
+        b: MemRef::unit(bufs.res, AddrExpr::constant(0)),
+        len: (m * n) as u32,
+        dtype: DType::I8,
+    }));
 }
 
 #[cfg(test)]

@@ -37,7 +37,7 @@ pub mod size;
 pub use size::CodeSizeModel;
 
 use crate::sim::{AddrExpr, BufId, Inst, LoopNode, MemRef, Node, VProgram};
-use crate::tir::{ConvDims, DType, Op, Schedule};
+use crate::tir::{ConvDims, DType, EltwiseEpilogue, Op, Schedule};
 
 /// A measurement scenario of the paper's evaluation section.
 #[derive(Clone, Debug, PartialEq)]
@@ -111,6 +111,109 @@ pub fn declare_buffers(p: &mut VProgram, op: &Op) -> ProgramBufs {
             ProgramBufs { a, b, acc, out }
         }
     }
+}
+
+/// Buffer ids of a fused producer+eltwise program (`generate_fused`).
+#[derive(Clone, Copy, Debug)]
+pub struct FusedBufs {
+    pub a: BufId,
+    pub b: BufId,
+    pub acc: BufId,
+    pub res: BufId,
+    pub y: BufId,
+}
+
+/// Declare the fused-kernel buffer convention for producer `op`:
+///
+/// ```text
+/// buf0 A / X     producer's first operand (layout as in `declare_buffers`)
+/// buf1 B / W     producer's weights
+/// buf2 ACC i32   bias-prefilled accumulator
+/// buf3 RES i8    the folded eltwise's multiplier operand
+/// buf4 Y   i8    the folded eltwise's in-out accumulator
+/// ```
+///
+/// The producer's OUT tensor never materializes — its requantized value
+/// flows straight into `Y[i] = clamp_i8(Y[i] + requant(ACC[i]) * RES[i])`.
+/// Backends append private scratch buffers (TMP, COL) after these, so the
+/// conventional indices stay comparable across scenarios. Returns `None`
+/// for producers the fusion pass never emits (non-int8, no requant, or a
+/// kind other than Matmul/Conv2d).
+pub fn declare_fused_buffers(p: &mut VProgram, op: &Op) -> Option<FusedBufs> {
+    let (a_len, b_len, out_len) = match *op {
+        Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(_) } => (m * k, n * k, m * n),
+        Op::Conv2d { dtype: DType::I8, requant: Some(_), .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            (d.h * d.w * d.cin, d.cout * d.k_col(), d.pixels() * d.cout)
+        }
+        _ => return None,
+    };
+    let a = p.add_buffer("A", DType::I8, a_len);
+    let b = p.add_buffer("B", DType::I8, b_len);
+    let acc = p.add_buffer("ACC", DType::I32, out_len);
+    let res = p.add_buffer("RES", DType::I8, out_len);
+    let y = p.add_buffer("Y", DType::I8, out_len);
+    Some(FusedBufs { a, b, acc, res, y })
+}
+
+/// Generate the fused producer+eltwise kernel for `op` with epilogue
+/// `epi` under `scenario`: one program computing
+/// `Y = clamp_i8(Y + requant(producer(A, B) + bias) * RES)` over the
+/// [`declare_fused_buffers`] convention. Returns `None` when the producer
+/// is not fusable (not int8 with requant, not a Matmul/Conv2d, or the
+/// epilogue length does not match the producer's output).
+pub fn generate_fused(
+    op: &Op,
+    epi: &EltwiseEpilogue,
+    scenario: &Scenario,
+    vlen: u32,
+) -> Option<VProgram> {
+    let (rq, out_len) = match *op {
+        Op::Matmul { m, n, dtype: DType::I8, requant: Some(rq), .. } => (rq, m * n),
+        Op::Conv2d { dtype: DType::I8, requant: Some(rq), .. } => {
+            let d = op.conv_dims().expect("conv dims");
+            (rq, d.pixels() * d.cout)
+        }
+        _ => return None,
+    };
+    if out_len != epi.len {
+        return None;
+    }
+    let mut p = VProgram::new(format!("{}-fused-{}", scenario.name(), op.key()));
+    let bufs = declare_fused_buffers(&mut p, op)?;
+    match scenario {
+        Scenario::ScalarOs => baselines::scalar::emit_fused(&mut p, op, bufs, rq),
+        Scenario::AutovecGcc => {
+            baselines::autovec::emit_fused(
+                &mut p,
+                baselines::autovec::Flavor::Gcc,
+                op,
+                bufs,
+                rq,
+                vlen,
+            );
+        }
+        Scenario::AutovecLlvm => {
+            baselines::autovec::emit_fused(
+                &mut p,
+                baselines::autovec::Flavor::Llvm,
+                op,
+                bufs,
+                rq,
+                vlen,
+            );
+        }
+        Scenario::MuRiscvNn => baselines::muriscvnn::emit_fused(&mut p, op, bufs, rq, vlen),
+        Scenario::PackedSimd => baselines::pext::emit_fused(&mut p, op, bufs, rq),
+        Scenario::Ours(schedule) => ours::emit_fused(&mut p, op, schedule, bufs, rq, vlen),
+    }
+    debug_assert!(
+        p.validate_buffers().is_ok(),
+        "{} emitted a structurally broken fused program: {}",
+        scenario.name(),
+        p.validate_buffers().unwrap_err()
+    );
+    Some(p)
 }
 
 /// Append the im2col packing loops to `p`: for every output pixel
@@ -237,6 +340,118 @@ mod tests {
         assert_eq!(p.buffers[bufs.acc].len, 16 * 3);
         assert_eq!(p.buffers[bufs.acc].dtype, DType::I32);
         assert_eq!(p.buffers[bufs.out.unwrap()].dtype, DType::I8);
+    }
+
+    /// Every backend's fused producer+eltwise kernel must agree bit-for-bit
+    /// with the composed reference `y = clamp_i8(y0 + requant(acc) * res)`
+    /// — the same cross-scenario contract the unfused differential harness
+    /// enforces, extended to fused emission.
+    #[test]
+    fn generate_fused_matches_composed_reference_for_every_scenario() {
+        use crate::sim::{execute, BufStore, Mode, SocConfig};
+        use crate::tir::{
+            Conv2dSchedule, DirectConvSchedule, IntrinChoice, LoopOrder, MatmulSchedule,
+            Schedule,
+        };
+        let rq = Requant { mult: 1 << 16, shift: 18, zp: -1 };
+        let mm = Op::Matmul { m: 5, n: 9, k: 33, dtype: DType::I8, requant: Some(rq) };
+        let conv = Op::Conv2d {
+            h: 7,
+            w: 6,
+            cin: 3,
+            cout: 4,
+            kh: 3,
+            kw: 2,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(rq),
+        };
+        let ours_mm = Scenario::Ours(Schedule::Matmul(MatmulSchedule {
+            intrin: IntrinChoice { vl: 16, j: 4, lmul: 8 },
+            mi: 1,
+            order: LoopOrder::MNK,
+            unroll: 1,
+            transpose: false,
+            ks: 1,
+            fuse: true,
+        }));
+        let ours_conv = Scenario::Ours(Schedule::Conv2d(Conv2dSchedule::Direct(
+            DirectConvSchedule {
+                intrin: IntrinChoice { vl: 6, j: 2, lmul: 8 },
+                wi: 1,
+                unroll: 1,
+                ky_hoist: true,
+                fuse: true,
+            },
+        )));
+        for (op, ours) in [(&mm, ours_mm), (&conv, ours_conv)] {
+            let (out_len, a_len, b_len, acc64): (usize, usize, usize, Vec<i64>);
+            let av: Vec<i8>;
+            let bv: Vec<i8>;
+            let dv: Vec<i32>;
+            match *op {
+                Op::Matmul { m, n, k, .. } => {
+                    out_len = m * n;
+                    a_len = m * k;
+                    b_len = n * k;
+                    av = (0..a_len).map(|i| ((i * 31) % 255) as i8).collect();
+                    bv = (0..b_len).map(|i| ((i * 17) % 249) as i8).collect();
+                    dv = (0..out_len).map(|i| (i as i32 * 13) % 101 - 50).collect();
+                    acc64 = (0..out_len)
+                        .map(|idx| {
+                            let (i, j) = (idx / n, idx % n);
+                            dv[idx] as i64
+                                + (0..k)
+                                    .map(|kk| av[i * k + kk] as i64 * bv[j * k + kk] as i64)
+                                    .sum::<i64>()
+                        })
+                        .collect();
+                }
+                Op::Conv2d { .. } => {
+                    let d = op.conv_dims().unwrap();
+                    out_len = d.pixels() * d.cout;
+                    a_len = d.h * d.w * d.cin;
+                    b_len = d.cout * d.k_col();
+                    av = (0..a_len).map(|i| ((i * 31) % 255) as i8).collect();
+                    bv = (0..b_len).map(|i| ((i * 17) % 249) as i8).collect();
+                    dv = (0..out_len).map(|i| (i as i32 * 13) % 101 - 50).collect();
+                    acc64 = crate::tir::ref_conv2d_acc(d, &av, &bv, &dv);
+                }
+                _ => unreachable!(),
+            }
+            let rv: Vec<i8> = (0..out_len).map(|i| ((i * 7 + 3) % 251) as i8).collect();
+            let yv: Vec<i8> = (0..out_len).map(|i| ((i * 11 + 6) % 245) as i8).collect();
+            let want: Vec<i8> = acc64
+                .iter()
+                .zip(&rv)
+                .zip(&yv)
+                .map(|((&a, &r), &y)| {
+                    let q = crate::sim::requant_i64(a, rq.mult, rq.shift, rq.zp) as i8;
+                    (y as i64 + q as i64 * r as i64).clamp(-128, 127) as i8
+                })
+                .collect();
+            let epi = EltwiseEpilogue { len: out_len };
+            let scenarios = [
+                Scenario::ScalarOs,
+                Scenario::AutovecGcc,
+                Scenario::AutovecLlvm,
+                Scenario::MuRiscvNn,
+                Scenario::PackedSimd,
+                ours.clone(),
+            ];
+            for scenario in &scenarios {
+                let p = generate_fused(op, &epi, scenario, 256)
+                    .unwrap_or_else(|| panic!("{} must fuse {op}", scenario.name()));
+                let mut bufs = BufStore::functional(&p);
+                bufs.set_i8(0, &av);
+                bufs.set_i8(1, &bv);
+                bufs.set_i32(2, &dv);
+                bufs.set_i8(3, &rv);
+                bufs.set_i8(4, &yv);
+                execute(&SocConfig::saturn(256), &p, &mut bufs, Mode::Functional, true);
+                assert_eq!(bufs.get_i8(4), &want[..], "{} {op}", scenario.name());
+            }
+        }
     }
 
     /// The packing loops materialize exactly the patch matrix the im2col

@@ -84,6 +84,49 @@ pub fn emit(op: &Op, schedule: &Schedule, vlen: u32) -> VProgram {
     p
 }
 
+/// Emit the fused producer+eltwise kernel for a Matmul or Conv2d with a
+/// folded [`crate::tir::EltwiseEpilogue`] consumer: instead of storing the
+/// requantized OUT tensor, every element runs
+/// `Y[i] = clamp_i8(Y[i] + requant(ACC[i]) * RES[i])`. Buffers are
+/// declared by the caller (the fused convention of
+/// `codegen::generate_fused`); `bufs.a`/`bufs.b`/`bufs.acc` follow the
+/// producer's layout, `bufs.res`/`bufs.y` are the eltwise operands. The
+/// schedule's `fuse` bit picks in-nest vs separate-pass placement of the
+/// fused epilogue, exactly as it does for the plain requant epilogue.
+pub fn emit_fused(
+    p: &mut VProgram,
+    op: &Op,
+    schedule: &Schedule,
+    bufs: super::FusedBufs,
+    rq: Requant,
+    vlen: u32,
+) {
+    let kind = EpilogueKind::FusedEltwise { res: bufs.res, y: bufs.y };
+    match (op, schedule) {
+        (Op::Matmul { m, n, k, dtype, .. }, Schedule::Matmul(s)) => {
+            emit_matmul_with_epilogue(
+                p, bufs.a, bufs.b, bufs.acc, *m, *n, *k, *dtype, s, vlen, Some((kind, rq)),
+            );
+        }
+        (Op::Conv2d { dtype, .. }, Schedule::Conv2d(Conv2dSchedule::Im2col(ms))) => {
+            let d = op.conv_dims().expect("conv dims");
+            let (m, k) = (d.pixels(), d.k_col());
+            let col = p.add_buffer("COL", *dtype, m * k);
+            super::emit_im2col(p, bufs.a, col, *dtype, d);
+            emit_matmul_with_epilogue(
+                p, col, bufs.b, bufs.acc, m, d.cout, k, *dtype, ms, vlen, Some((kind, rq)),
+            );
+        }
+        (Op::Conv2d { dtype, .. }, Schedule::Conv2d(Conv2dSchedule::Direct(ds))) => {
+            let d = op.conv_dims().expect("conv dims");
+            emit_conv2d_direct_nest(
+                p, bufs.a, bufs.b, bufs.acc, d, *dtype, ds, vlen, Some((kind, rq)),
+            );
+        }
+        (op, s) => panic!("unfusable producer kind: {op} vs {}", s.describe()),
+    }
+}
+
 /// Largest divisor of `extent` not exceeding `cap`. Tiling factors must
 /// divide their extents or chunks get dropped: the space programs only
 /// produce divisors, but a hand-edited schedule (or a tampered database
@@ -93,6 +136,27 @@ fn largest_divisor(extent: usize, cap: u32) -> u32 {
         .rev()
         .find(|&c| extent % c as usize == 0)
         .unwrap_or(1)
+}
+
+/// What the per-row vector epilogue writes after requantizing an ACC row.
+#[derive(Clone, Copy)]
+pub enum EpilogueKind {
+    /// Plain requantization: `OUT[i] = requant(ACC[i])`.
+    Requant { out: BufId },
+    /// Fused eltwise consumer (`tir::EltwiseEpilogue`):
+    /// `Y[i] = clamp_i8(Y[i] + requant(ACC[i]) * RES[i])` — the producer's
+    /// OUT buffer never materializes.
+    FusedEltwise { res: BufId, y: BufId },
+}
+
+/// An epilogue placed *inside* the producer loop nest (schedule `fuse`
+/// bit): each finished row block is requantized right after its reduction
+/// completes instead of in a separate whole-tensor pass.
+#[derive(Clone, Copy)]
+struct FusedEpilogue {
+    kind: EpilogueKind,
+    rq: Requant,
+    vlen: u32,
 }
 
 struct MatmulCtx<'a> {
@@ -109,6 +173,8 @@ struct MatmulCtx<'a> {
     c_stride: i64,
     dtype: DType,
     sched: &'a MatmulSchedule,
+    /// In-nest epilogue emitted per finished row block (`sched.fuse`).
+    fused: Option<FusedEpilogue>,
 }
 
 impl MatmulCtx<'_> {
@@ -280,11 +346,53 @@ fn emit_matmul(
 ) -> VProgram {
     let mut p = VProgram::new(format!("ours-matmul-{m}x{n}x{k}-{}", dtype.name()));
     let bufs = declare_buffers(&mut p, &Op::Matmul { m, n, k, dtype, requant });
-    emit_matmul_nest(&mut p, bufs.a, bufs.b, bufs.acc, m, n, k, dtype, sched);
-    if let Some(rq) = requant {
-        emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), m, n, rq, vlen);
-    }
+    let epi = requant.map(|rq| (EpilogueKind::Requant { out: bufs.out.unwrap() }, rq));
+    emit_matmul_with_epilogue(&mut p, bufs.a, bufs.b, bufs.acc, m, n, k, dtype, sched, vlen, epi);
     p
+}
+
+/// In-nest epilogue placement is only sound when a row block's reduction
+/// is complete before the nest leaves it: M outermost (MNK order), the
+/// natural (non-transposed) mapping so C rows are contiguous, and no
+/// k-split revisiting every row once per block. The space program derives
+/// an inert FUSE domain outside this region; a hand-edited schedule that
+/// sets `fuse` anyway silently falls back to the separate pass.
+fn fuse_in_nest(sched: &MatmulSchedule) -> bool {
+    sched.fuse && sched.order == LoopOrder::MNK && !sched.transpose && sched.ks <= 1
+}
+
+/// Algorithm-1 GEMM nest plus its requant-style epilogue, with the
+/// schedule's `fuse` bit choosing between in-nest placement (per finished
+/// row block, inside the m loop) and the separate whole-tensor pass.
+#[allow(clippy::too_many_arguments)]
+fn emit_matmul_with_epilogue(
+    p: &mut VProgram,
+    a: BufId,
+    b: BufId,
+    acc: BufId,
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype: DType,
+    sched: &MatmulSchedule,
+    vlen: u32,
+    epi: Option<(EpilogueKind, Requant)>,
+) {
+    let in_nest = epi.is_some() && fuse_in_nest(sched);
+    let fused = if in_nest {
+        let (kind, rq) = epi.unwrap();
+        Some(FusedEpilogue { kind, rq, vlen })
+    } else {
+        None
+    };
+    emit_matmul_nest(p, a, b, acc, m, n, k, dtype, sched, fused);
+    if let Some((kind, rq)) = epi {
+        if !in_nest {
+            let nodes =
+                epilogue_rows(p, acc, kind, rq, AddrExpr::constant(0), m as u32, n, vlen);
+            p.body.extend(nodes);
+        }
+    }
 }
 
 /// Append the Algorithm-1 GEMM loop nest `ACC[m,n] += A[m,k] x B[n,k]` to
@@ -302,7 +410,12 @@ fn emit_matmul_nest(
     k: usize,
     dtype: DType,
     sched: &MatmulSchedule,
+    fused: Option<FusedEpilogue>,
 ) {
+    debug_assert!(
+        fused.is_none() || fuse_in_nest(sched),
+        "in-nest epilogue requires the fuse-legal schedule region"
+    );
     // Transposed tensorization swaps the roles of m and n (and of A and B).
     let (m_e, n_e) = if sched.transpose { (n, m) } else { (m, n) };
     let ctx = MatmulCtx {
@@ -314,6 +427,7 @@ fn emit_matmul_nest(
         c_stride: if sched.transpose { n as i64 } else { 1 },
         dtype,
         sched,
+        fused,
     };
 
     let vl = sched.intrin.vl.min(k as u32);
@@ -360,11 +474,27 @@ fn emit_matmul_nest(
                     unroll: ctx.sched.unroll.max(1).min(mi.max(1)),
                     body: inner,
                 });
+                let mut mo_body = vec![mi_loop];
+                if let Some(f) = ctx.fused {
+                    // Fused placement: with M outermost (the only legal
+                    // region) this row block's whole reduction is done, so
+                    // requantize its `mi` rows before moving to the next.
+                    mo_body.extend(epilogue_rows(
+                        p,
+                        ctx.acc,
+                        f.kind,
+                        f.rq,
+                        AddrExpr::var(mo, mi as i64),
+                        mi,
+                        ctx.n_cols,
+                        f.vlen,
+                    ));
+                }
                 vec![Node::Loop(LoopNode {
                     var: mo,
                     extent: m_outer as u32,
                     unroll: 1,
-                    body: vec![mi_loop],
+                    body: mo_body,
                 })]
             }
             Some((Axis::N, rest)) => {
@@ -494,14 +624,46 @@ pub fn emit_requant_epilogue(
     rq: Requant,
     vlen: u32,
 ) {
+    let nodes = epilogue_rows(
+        p,
+        acc,
+        EpilogueKind::Requant { out },
+        rq,
+        AddrExpr::constant(0),
+        rows as u32,
+        cols,
+        vlen,
+    );
+    p.body.extend(nodes);
+}
+
+/// Requantize `rows` consecutive ACC rows of `cols` i32 elements starting
+/// at row index `row0` (an expression over enclosing loop variables), and
+/// apply `kind`'s write-back per element. Returns the nodes instead of
+/// pushing them so callers can splice the epilogue inside their own loop
+/// nest (the fused placement) or at top level (the separate pass).
+///
+/// Registers at LMUL=8/E32: v0 ACC chunk, v8 requant result, v16 Y, v24
+/// RES — four disjoint 8-register groups covering the whole file.
+#[allow(clippy::too_many_arguments)]
+pub fn epilogue_rows(
+    p: &mut VProgram,
+    acc: BufId,
+    kind: EpilogueKind,
+    rq: Requant,
+    row0: AddrExpr,
+    rows: u32,
+    cols: usize,
+    vlen: u32,
+) -> Vec<Node> {
     let vlmax32 = vlen * 8 / 32;
     let chunk = vlmax32.min(cols as u32);
     let full = cols / chunk as usize;
     let tail = (cols % chunk as usize) as u32;
     let rv = p.fresh_var();
+    let row_base = row0.plus(rv, 1).scaled(cols as i64);
     let mut body = Vec::new();
-    let emit_chunk = |p: &mut VProgram, body: &mut Vec<Node>, base: AddrExpr, vl: u32| {
-        let _ = p;
+    let emit_chunk = |body: &mut Vec<Node>, base: AddrExpr, vl: u32| {
         body.push(Node::Inst(Inst::VSetVl { vl, sew: Sew::E32, lmul: Lmul::M8, float: false }));
         body.push(Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(acc, base.clone()) }));
         body.push(Node::Inst(Inst::VRequant {
@@ -511,21 +673,34 @@ pub fn emit_requant_epilogue(
             shift: rq.shift,
             zp: rq.zp,
         }));
-        body.push(Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(out, base) }));
+        match kind {
+            EpilogueKind::Requant { out } => {
+                body.push(Node::Inst(Inst::VStore { vs: 8, mem: MemRef::unit(out, base) }));
+            }
+            EpilogueKind::FusedEltwise { res, y } => {
+                // y += requant(acc) * res, exact in i64 lanes; the i8
+                // store clamps once — identical to the unfused
+                // requant-then-eltwise reference composition.
+                body.push(Node::Inst(Inst::VLoad { vd: 16, mem: MemRef::unit(y, base.clone()) }));
+                body.push(Node::Inst(Inst::VLoad {
+                    vd: 24,
+                    mem: MemRef::unit(res, base.clone()),
+                }));
+                body.push(Node::Inst(Inst::VMacc { vd: 16, vs1: 8, vs2: 24, widen: false }));
+                body.push(Node::Inst(Inst::VStore { vs: 16, mem: MemRef::unit(y, base) }));
+            }
+        }
     };
     if full > 0 {
         let cv = p.fresh_var();
-        let base = AddrExpr::var(rv, cols as i64).plus(cv, chunk as i64);
         let mut inner = Vec::new();
-        emit_chunk(p, &mut inner, base, chunk);
+        emit_chunk(&mut inner, row_base.clone().plus(cv, chunk as i64), chunk);
         body.push(Node::Loop(LoopNode { var: cv, extent: full as u32, unroll: 1, body: inner }));
     }
     if tail > 0 {
-        let base = AddrExpr::var(rv, cols as i64).offset(full as i64 * chunk as i64);
-        emit_chunk(p, &mut body, base, tail);
+        emit_chunk(&mut body, row_base.offset(full as i64 * chunk as i64), tail);
     }
-    p.body
-        .push(Node::Loop(LoopNode { var: rv, extent: rows as u32, unroll: 1, body }));
+    vec![Node::Loop(LoopNode { var: rv, extent: rows, unroll: 1, body })]
 }
 
 /// Emit the program for a first-class Conv2d under the chosen lowering
@@ -554,10 +729,11 @@ fn emit_conv2d(
             let (m, k) = (dims.pixels(), dims.k_col());
             let col = p.add_buffer("COL", dtype, m * k);
             super::emit_im2col(&mut p, bufs.a, col, dtype, dims);
-            emit_matmul_nest(&mut p, col, bufs.b, bufs.acc, m, cout, k, dtype, ms);
-            if let Some(rq) = requant {
-                emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), m, cout, rq, vlen);
-            }
+            let epi =
+                requant.map(|rq| (EpilogueKind::Requant { out: bufs.out.unwrap() }, rq));
+            emit_matmul_with_epilogue(
+                &mut p, col, bufs.b, bufs.acc, m, cout, k, dtype, ms, vlen, epi,
+            );
             p
         }
         Conv2dSchedule::Direct(ds) => emit_conv2d_direct(dims, dtype, requant, ds, vlen),
@@ -865,6 +1041,29 @@ fn emit_conv2d_direct(
         &mut p,
         &Op::Conv2d { h, w, cin, cout, kh, kw, stride, dtype, requant },
     );
+    let epi = requant.map(|rq| (EpilogueKind::Requant { out: bufs.out.unwrap() }, rq));
+    emit_conv2d_direct_nest(&mut p, bufs.a, bufs.b, bufs.acc, dims, dtype, sched, vlen, epi);
+    p
+}
+
+/// Direct-conv loop nest plus epilogue; the schedule's `fuse` bit moves
+/// the per-pixel requant (or fused-eltwise) epilogue into the
+/// output-column loop, right after that pixel's tile reductions complete.
+/// Always sound for the direct lowering: every cout tile of a pixel
+/// finishes its full `kh*kw*cin` reduction before the nest moves on.
+#[allow(clippy::too_many_arguments)]
+fn emit_conv2d_direct_nest(
+    p: &mut VProgram,
+    x: BufId,
+    wgt: BufId,
+    acc: BufId,
+    dims: ConvDims,
+    dtype: DType,
+    sched: &DirectConvSchedule,
+    vlen: u32,
+    epi: Option<(EpilogueKind, Requant)>,
+) {
+    let cout = dims.cout;
     let k_row = dims.k_row();
     let vl = sched.intrin.vl.min(k_row as u32).max(1);
     let j = sched.intrin.j.min(cout as u32).max(1);
@@ -878,9 +1077,9 @@ fn emit_conv2d_direct(
     let wo = p.fresh_var();
     let wiv = p.fresh_var();
     let ctx = DirectCtx {
-        x: bufs.a,
-        wgt: bufs.b,
-        acc: bufs.acc,
+        x,
+        wgt,
+        acc,
         dims,
         dtype,
         sched,
@@ -896,18 +1095,26 @@ fn emit_conv2d_direct(
         let nv = p.fresh_var();
         let n_base = AddrExpr::var(nv, j as i64);
         let body = if sched.ky_hoist {
-            direct_tile_hoisted(&mut p, &ctx, &n_base, j)
+            direct_tile_hoisted(p, &ctx, &n_base, j)
         } else {
-            direct_tile_mem(&mut p, &ctx, &n_base, j)
+            direct_tile_mem(p, &ctx, &n_base, j)
         };
         tiles.push(Node::Loop(LoopNode { var: nv, extent: n_full as u32, unroll: 1, body }));
     }
     if n_tail > 0 {
         let n_base = AddrExpr::constant(n_full as i64 * j as i64);
         if sched.ky_hoist {
-            tiles.extend(direct_tile_hoisted(&mut p, &ctx, &n_base, n_tail));
+            tiles.extend(direct_tile_hoisted(p, &ctx, &n_base, n_tail));
         } else {
-            tiles.extend(direct_tile_mem(&mut p, &ctx, &n_base, n_tail));
+            tiles.extend(direct_tile_mem(p, &ctx, &n_base, n_tail));
+        }
+    }
+    if sched.fuse {
+        if let Some((kind, rq)) = epi {
+            // Fused placement: requantize this pixel's cout row right
+            // after all its tiles finished their reduction.
+            let pixel = AddrExpr::var(oy, w_out as i64).plus(wo, wi as i64).plus(wiv, 1);
+            tiles.extend(epilogue_rows(p, acc, kind, rq, pixel, 1, cout, vlen));
         }
     }
     let wi_loop = Node::Loop(LoopNode {
@@ -925,10 +1132,21 @@ fn emit_conv2d_direct(
         body: vec![wo_loop],
     }));
 
-    if let Some(rq) = requant {
-        emit_requant_epilogue(&mut p, bufs.acc, bufs.out.unwrap(), h_out * w_out, cout, rq, vlen);
+    if !sched.fuse {
+        if let Some((kind, rq)) = epi {
+            let nodes = epilogue_rows(
+                p,
+                acc,
+                kind,
+                rq,
+                AddrExpr::constant(0),
+                (h_out * w_out) as u32,
+                cout,
+                vlen,
+            );
+            p.body.extend(nodes);
+        }
     }
-    p
 }
 
 fn emit_dwconv(
@@ -1072,6 +1290,7 @@ mod tests {
             unroll: 1,
             transpose: false,
             ks: 1,
+            fuse: false,
         })
     }
 
@@ -1143,6 +1362,7 @@ mod tests {
                 unroll: 1,
                 transpose: true,
                 ks: 1,
+                fuse: false,
             });
             let (got, want) = run_i8_matmul(24, 6, 32, &sched, 256);
             assert_eq!(got, want, "order {}", order.name());
@@ -1171,6 +1391,7 @@ mod tests {
             unroll: 2,
             transpose: false,
             ks: 1,
+            fuse: false,
         });
         let transposed = Schedule::Matmul(MatmulSchedule {
             intrin: IntrinChoice { vl: 144, j: 32, lmul: 8 },
@@ -1179,6 +1400,7 @@ mod tests {
             unroll: 2,
             transpose: true,
             ks: 1,
+            fuse: false,
         });
         assert!(run(&transposed) < run(&j1), "transposed must win on narrow n");
     }
@@ -1198,6 +1420,7 @@ mod tests {
                     unroll: 1,
                     transpose: false,
                     ks,
+                    fuse: false,
                 });
                 let (got, want) = run_i8_matmul(6, 12, k, &sched, 256);
                 assert_eq!(got, want, "order {} k {k} ks {ks}", order.name());
@@ -1398,6 +1621,7 @@ mod tests {
                     unroll: 2,
                     transpose,
                     ks: 1,
+                    fuse: false,
                 }));
                 let (got, want) = run_i8_conv2d(&op, &sched, 256);
                 assert_eq!(got, want, "order {} transpose {transpose}", order.name());
@@ -1428,6 +1652,7 @@ mod tests {
                     wi,
                     unroll: 2,
                     ky_hoist: hoist,
+                    fuse: false,
                 }));
                 let (got, want) = run_i8_conv2d(&op, &sched, 256);
                 assert_eq!(got, want, "hoist {hoist} vl {vl} j {j} wi {wi}");
@@ -1454,6 +1679,7 @@ mod tests {
             wi: 2,
             unroll: 1,
             ky_hoist: true,
+            fuse: false,
         }));
         let p = emit(&op, &sched, 256);
         let mut bufs = BufStore::functional(&p);
@@ -1513,12 +1739,14 @@ mod tests {
             unroll: 1,
             transpose: false,
             ks: 1,
+            fuse: false,
         }));
         let direct = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
             intrin: IntrinChoice { vl: 512, j: 16, lmul: 8 },
             wi: 1,
             unroll: 1,
             ky_hoist: false,
+            fuse: false,
         }));
         let run = |sched: &Schedule| {
             let p = emit(&op, sched, 512);
@@ -1551,6 +1779,7 @@ mod tests {
             unroll: 2,
             transpose: false,
             ks: 1,
+            fuse: false,
         };
         let conv = Op::square_conv2d(4, 8, 8, 3, 1, DType::I8);
         let mm = Op::Matmul { m: 16, n: 8, k: 72, dtype: DType::I8, requant: None };
@@ -1564,8 +1793,153 @@ mod tests {
             wi: 1,
             unroll: 1,
             ky_hoist: true,
+            fuse: false,
         }));
         assert!(variant_key(&conv, &direct).contains("vconv-direct"));
+    }
+
+    /// Reference for the fused producer+eltwise kernel: requantize the
+    /// composed accumulator, then `y = clamp_i8(y0 + r * res)`.
+    fn ref_fused_eltwise(acc: &[i64], res: &[i8], y0: &[i8], rq: Requant) -> Vec<i8> {
+        acc.iter()
+            .zip(res)
+            .zip(y0)
+            .map(|((&a, &r), &y)| {
+                let q = crate::sim::requant_i64(a, rq.mult, rq.shift, rq.zp) as i8;
+                (y as i64 + q as i64 * r as i64).clamp(-128, 127) as i8
+            })
+            .collect()
+    }
+
+    fn run_fused(op: &Op, sched: Schedule, vlen: u32) -> (VProgram, Vec<i8>, Vec<i8>) {
+        use crate::tir::EltwiseEpilogue;
+        let (rq, out_len, acc64): (Requant, usize, Box<dyn Fn(&[i8], &[i8], &[i32]) -> Vec<i64>>) =
+            match *op {
+                Op::Matmul { m, n, k, requant: Some(rq), .. } => (
+                    rq,
+                    m * n,
+                    Box::new(move |a: &[i8], b: &[i8], d: &[i32]| {
+                        let mut acc = vec![0i64; m * n];
+                        for i in 0..m {
+                            for jj in 0..n {
+                                acc[i * n + jj] = d[i * n + jj] as i64
+                                    + (0..k)
+                                        .map(|kk| a[i * k + kk] as i64 * b[jj * k + kk] as i64)
+                                        .sum::<i64>();
+                            }
+                        }
+                        acc
+                    }),
+                ),
+                Op::Conv2d { requant: Some(rq), .. } => {
+                    let d = op.conv_dims().unwrap();
+                    (
+                        rq,
+                        d.pixels() * d.cout,
+                        Box::new(move |x: &[i8], w: &[i8], bias: &[i32]| {
+                            ref_conv2d_acc(d, x, w, bias)
+                        }),
+                    )
+                }
+                _ => panic!("fused test needs an i8 requant producer"),
+            };
+        let (a_len, b_len) = match *op {
+            Op::Matmul { m, n, k, .. } => (m * k, n * k),
+            Op::Conv2d { .. } => {
+                let d = op.conv_dims().unwrap();
+                (d.h * d.w * d.cin, d.cout * d.k_col())
+            }
+            _ => unreachable!(),
+        };
+        let epi = EltwiseEpilogue { len: out_len };
+        let p = super::super::generate_fused(op, &epi, &super::super::Scenario::Ours(sched), vlen)
+            .expect("fusable producer");
+        let mut bufs = BufStore::functional(&p);
+        let av: Vec<i8> = (0..a_len).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+        let bv: Vec<i8> = (0..b_len).map(|i| ((i * 23 + 5) % 253) as i8).collect();
+        let dv: Vec<i32> = (0..out_len).map(|i| (i as i32 % 97) - 48).collect();
+        let rv: Vec<i8> = (0..out_len).map(|i| ((i * 19 + 2) % 249) as i8).collect();
+        let yv: Vec<i8> = (0..out_len).map(|i| ((i * 41 + 13) % 247) as i8).collect();
+        bufs.set_i8(0, &av);
+        bufs.set_i8(1, &bv);
+        bufs.set_i32(2, &dv);
+        bufs.set_i8(3, &rv);
+        bufs.set_i8(4, &yv);
+        execute(&SocConfig::saturn(vlen), &p, &mut bufs, Mode::Functional, true);
+        let got = bufs.get_i8(4).to_vec();
+        let want = ref_fused_eltwise(&acc64(&av, &bv, &dv), &rv, &yv, rq);
+        (p, got, want)
+    }
+
+    /// The fused matmul+eltwise kernel is bit-identical to the composed
+    /// requant-then-eltwise reference, for both epilogue placements; the
+    /// fuse-legal schedule actually moves the epilogue inside the nest
+    /// (one top-level loop) while `fuse: false` keeps the separate pass.
+    #[test]
+    fn fused_eltwise_matmul_is_exact_and_in_nest() {
+        let op = Op::Matmul {
+            m: 6,
+            n: 10,
+            k: 40,
+            dtype: DType::I8,
+            requant: Some(Requant { mult: 1 << 18, shift: 20, zp: 3 }),
+        };
+        let mk = |fuse: bool| {
+            Schedule::Matmul(MatmulSchedule {
+                intrin: IntrinChoice { vl: 16, j: 4, lmul: 8 },
+                mi: 2,
+                order: LoopOrder::MNK,
+                unroll: 2,
+                transpose: false,
+                ks: 1,
+                fuse,
+            })
+        };
+        let (fused_p, got_f, want_f) = run_fused(&op, mk(true), 256);
+        assert_eq!(got_f, want_f, "in-nest fused");
+        assert_eq!(fused_p.body.len(), 1, "fused epilogue must live inside the nest");
+        let (sep_p, got_s, want_s) = run_fused(&op, mk(false), 256);
+        assert_eq!(got_s, want_s, "separate-pass fused");
+        assert_eq!(sep_p.body.len(), 2, "fuse: false keeps the separate epilogue pass");
+    }
+
+    /// Conv2d fused kernels are exact for both lowering strategies (and
+    /// both direct tile variants), epilogue in-nest.
+    #[test]
+    fn fused_eltwise_conv2d_both_strategies_exact() {
+        let op = Op::Conv2d {
+            h: 9,
+            w: 7,
+            cin: 5,
+            cout: 6,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            dtype: DType::I8,
+            requant: Some(Requant { mult: 1 << 17, shift: 19, zp: 2 }),
+        };
+        let im2col = Schedule::Conv2d(Conv2dSchedule::Im2col(MatmulSchedule {
+            intrin: IntrinChoice { vl: 16, j: 2, lmul: 8 },
+            mi: 3,
+            order: LoopOrder::MNK,
+            unroll: 2,
+            transpose: false,
+            ks: 1,
+            fuse: true,
+        }));
+        let (_, got, want) = run_fused(&op, im2col, 256);
+        assert_eq!(got, want, "im2col fused");
+        for hoist in [false, true] {
+            let direct = Schedule::Conv2d(Conv2dSchedule::Direct(DirectConvSchedule {
+                intrin: IntrinChoice { vl: 8, j: 3, lmul: 8 },
+                wi: 3,
+                unroll: 2,
+                ky_hoist: hoist,
+                fuse: true,
+            }));
+            let (_, got, want) = run_fused(&op, direct, 256);
+            assert_eq!(got, want, "direct fused hoist={hoist}");
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::codegen::{self, CodeSizeModel, Scenario};
 use crate::intrinsics::Registry;
+use crate::net::NetProgram;
 use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, TraceCounts};
 use crate::tir::Op;
 use crate::tune::{
@@ -166,6 +167,10 @@ pub struct NetworkMeasurement {
     pub cycles: f64,
     pub trace: TraceCounts,
     pub code_size_bytes: u64,
+    /// Planned scratch-arena footprint of the measured [`NetProgram`]
+    /// (`net::NetProgram::total_memory_req`): activations, accumulators,
+    /// and COL/TMP scratch packed by liveness, weights excluded.
+    pub total_memory_req: u64,
 }
 
 /// Result of a whole-network tuning run ([`TuneService::tune_network`]).
@@ -191,6 +196,9 @@ pub struct NetworkTuneReport {
     /// Candidates that failed to prepare or measure across all tasks
     /// (quarantined; not part of `trials_measured`).
     pub failed_trials: usize,
+    /// Planned scratch-arena footprint of the tuned network with
+    /// epilogue fusion applied — what deployment will actually reserve.
+    pub total_memory_req: u64,
 }
 
 impl NetworkTuneReport {
@@ -465,8 +473,23 @@ impl TuneService {
         total_trials: usize,
         min_per_task: usize,
     ) -> NetworkTuneReport {
+        self.tune_net(&NetProgram::lower(layers), total_trials, min_per_task)
+    }
+
+    /// [`TuneService::tune_network`] over an already-lowered
+    /// [`NetProgram`] — the form that carries per-command im2col pins
+    /// (zoo `*-im2col` variants lower with `Model::net`). Tuning runs
+    /// over the *unfused* command stream, so the task set is exactly the
+    /// layer list; the reported arena footprint is the fused plan's (the
+    /// `fuse` decision in each winning trace is what deployment emits).
+    pub fn tune_net(
+        &self,
+        net: &NetProgram,
+        total_trials: usize,
+        min_per_task: usize,
+    ) -> NetworkTuneReport {
         let mut sched = self.opts.scheduler.make();
-        self.tune_network_with(layers, total_trials, min_per_task, sched.as_mut())
+        self.tune_network_impl(net, total_trials, min_per_task, sched.as_mut(), None)
     }
 
     /// Resume a killed `tune_network` run: the campaign replays from
@@ -484,8 +507,21 @@ impl TuneService {
         min_per_task: usize,
         cache: &ReplayCache,
     ) -> NetworkTuneReport {
+        self.tune_net_resumed(&NetProgram::lower(layers), total_trials, min_per_task, cache)
+    }
+
+    /// [`TuneService::tune_network_resumed`] over an already-lowered
+    /// [`NetProgram`] — a pinned campaign must resume in the same pinned
+    /// space or the replayed traces would not line up.
+    pub fn tune_net_resumed(
+        &self,
+        net: &NetProgram,
+        total_trials: usize,
+        min_per_task: usize,
+        cache: &ReplayCache,
+    ) -> NetworkTuneReport {
         let mut sched = self.opts.scheduler.make();
-        self.tune_network_impl(layers, total_trials, min_per_task, sched.as_mut(), Some(cache))
+        self.tune_network_impl(net, total_trials, min_per_task, sched.as_mut(), Some(cache))
     }
 
     /// [`TuneService::tune_network`] with an explicit scheduler (the
@@ -507,19 +543,20 @@ impl TuneService {
         min_per_task: usize,
         sched: &mut dyn TaskScheduler,
     ) -> NetworkTuneReport {
-        self.tune_network_impl(layers, total_trials, min_per_task, sched, None)
+        self.tune_network_impl(&NetProgram::lower(layers), total_trials, min_per_task, sched, None)
     }
 
     fn tune_network_impl(
         &self,
-        layers: &[Op],
+        net: &NetProgram,
         total_trials: usize,
         min_per_task: usize,
         sched: &mut dyn TaskScheduler,
         cache: Option<&ReplayCache>,
     ) -> NetworkTuneReport {
         let soc_name = self.target.soc.name.clone();
-        let tasks = extract_tasks(layers);
+        let ops = net.task_ops();
+        let tasks = extract_tasks(&ops);
         let plan = sched.plan(&tasks, total_trials, min_per_task);
         // Hard contract check (zip below would silently drop trailing
         // tasks): a plan must cap every task exactly once.
@@ -555,14 +592,30 @@ impl TuneService {
                 let model = (self.model_factory)(config.seed);
                 let local = self.db.checkout(&key, &soc_name);
                 let committed = local.len();
-                let mut tuner = OpTuner::new(
-                    &t.op,
-                    &self.target.soc,
-                    &self.target.registry,
-                    &self.pool,
-                    &local,
-                    config,
-                );
+                // An im2col-pinned conv tunes over the sub-space with the
+                // strategy decision dropped (`space::lower` defaults the
+                // absent decision to im2col) — same op key, same database
+                // schema, smaller space.
+                let mut tuner = if net.pins_im2col(&key) {
+                    OpTuner::with_space(
+                        &t.op,
+                        &self.target.soc,
+                        crate::tune::space::program_for(&t.op, &self.target.registry)
+                            .without(&crate::tune::space::ids::STRATEGY),
+                        &self.pool,
+                        &local,
+                        config,
+                    )
+                } else {
+                    OpTuner::new(
+                        &t.op,
+                        &self.target.soc,
+                        &self.target.registry,
+                        &self.pool,
+                        &local,
+                        config,
+                    )
+                };
                 if let (Some(tu), Some(c)) =
                     (tuner.as_mut(), cache.and_then(|c| c.for_op(&key, &soc_name)))
                 {
@@ -683,6 +736,11 @@ impl TuneService {
         }
         push_convergence(&mut convergence, &runs, &soc_name);
 
+        let total_memory_req = {
+            let mut fused = net.clone();
+            fused.fuse_epilogues();
+            fused.total_memory_req()
+        };
         NetworkTuneReport {
             scheduler: sched.name(),
             outcomes,
@@ -690,6 +748,7 @@ impl TuneService {
             trials_measured,
             replayed_trials,
             failed_trials,
+            total_memory_req,
         }
     }
 
@@ -704,17 +763,42 @@ impl TuneService {
         layers: &[Op],
         policy: &dyn ScenarioPolicy,
     ) -> Option<NetworkMeasurement> {
+        self.measure_net(&NetProgram::lower(layers), policy)
+    }
+
+    /// [`TuneService::measure_network`] over an already-lowered (and
+    /// possibly fused) [`NetProgram`]: fused commands emit through
+    /// `codegen::generate_fused` — one kernel, one code-size layer for
+    /// the producer, the folded eltwise gone — and the measurement
+    /// reports the program's planned arena footprint.
+    pub fn measure_net(
+        &self,
+        net: &NetProgram,
+        policy: &dyn ScenarioPolicy,
+    ) -> Option<NetworkMeasurement> {
         let mut cycles = 0.0;
         let mut trace = TraceCounts::default();
         let mut size = CodeSizeModel::new();
-        for op in layers {
-            let scenario = policy.scenario_for(self, op);
-            let (r, program_bytes) = self.execute_scenario(op, &scenario)?;
+        for cmd in &net.cmds {
+            let scenario = policy.scenario_for(self, &cmd.op);
+            let program = match &cmd.epilogue {
+                Some(epi) => {
+                    codegen::generate_fused(&cmd.op, epi, &scenario, self.target.soc.vlen)?
+                }
+                None => codegen::generate(&cmd.op, &scenario, self.target.soc.vlen)?,
+            };
+            let mut bufs = BufStore::timing(&program);
+            let r = execute(&self.target.soc, &program, &mut bufs, Mode::Timing, true);
             cycles += r.cycles;
             trace.merge(&r.trace);
-            size.add_layer(op, &scenario, program_bytes);
+            size.add_layer(&cmd.op, &scenario, program.code_size_bytes());
         }
-        Some(NetworkMeasurement { cycles, trace, code_size_bytes: size.total() })
+        Some(NetworkMeasurement {
+            cycles,
+            trace,
+            code_size_bytes: size.total(),
+            total_memory_req: net.total_memory_req(),
+        })
     }
 }
 
@@ -858,6 +942,64 @@ mod tests {
         assert!(r.cycles > 0.0);
         // The policy must have used the stored best, not re-tuned.
         assert_eq!(s.db().len(), after_tuning);
+    }
+
+    #[test]
+    fn fused_measure_net_folds_the_eltwise() {
+        let s = heuristic_service(256);
+        let layers =
+            vec![Op::square_matmul(16, DType::I8), Op::Eltwise { len: 256, dtype: DType::I8 }];
+        let unfused = s.measure_network(&layers, &Fixed(Scenario::ScalarOs)).unwrap();
+        let mut net = NetProgram::lower(&layers);
+        assert_eq!(net.fuse_epilogues(), 1);
+        let fused = s.measure_net(&net, &Fixed(Scenario::ScalarOs)).unwrap();
+        assert!(fused.cycles > 0.0);
+        // Each measurement reports its own net's liveness-packed plan
+        // (fusion trades the OUT materialization for TMP headroom that
+        // is co-live with ACC, so the two plans differ but both must
+        // beat per-layer allocation).
+        assert_eq!(fused.total_memory_req, net.total_memory_req());
+        assert_eq!(
+            unfused.total_memory_req,
+            NetProgram::lower(&layers).total_memory_req()
+        );
+        assert!(unfused.total_memory_req > 0);
+        assert!(fused.total_memory_req < net.sum_buffer_bytes());
+    }
+
+    #[test]
+    fn network_tune_reports_fused_arena_footprint() {
+        let s = heuristic_service(256);
+        let layers =
+            vec![Op::square_matmul(32, DType::I8), Op::Eltwise { len: 1024, dtype: DType::I8 }];
+        let report = s.tune_network(&layers, 8, 4);
+        let mut fused = NetProgram::lower(&layers);
+        fused.fuse_epilogues();
+        assert_eq!(report.total_memory_req, fused.total_memory_req());
+        assert!(report.total_memory_req > 0);
+    }
+
+    /// The `*-im2col` zoo pin: tuning a pinned NetProgram must only ever
+    /// produce im2col conv schedules, while the unpinned space on the
+    /// same op keeps the strategy decision.
+    #[test]
+    fn pinned_net_tunes_conv_in_im2col_subspace() {
+        use crate::tir::{Conv2dSchedule, Schedule};
+        let s = heuristic_service(256);
+        let conv = Op::square_conv2d(8, 16, 16, 3, 1, DType::I8);
+        let net = NetProgram::lower_pinned(std::slice::from_ref(&conv), true);
+        let report = s.tune_net(&net, 10, 4);
+        let outcome = report.outcomes[0].1.as_ref().expect("pinned conv is tunable");
+        assert!(matches!(
+            outcome.best.schedule,
+            Schedule::Conv2d(Conv2dSchedule::Im2col(_))
+        ));
+        // Every measured record stays in the sub-space.
+        let local = s.db().checkout(&conv.key(), "saturn-256");
+        assert!(!local.records().is_empty());
+        for r in local.records() {
+            assert!(r.trace.value_of(&crate::tune::space::ids::STRATEGY).is_none());
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod intrinsics;
 pub mod isa;
+pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod sim;

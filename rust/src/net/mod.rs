@@ -1,0 +1,580 @@
+//! NetProgram: the graph-level network IR.
+//!
+//! The zoo (`workloads::models`) describes a network as a flat `Vec<Op>`
+//! — fine for *task extraction*, but blind to everything that lives
+//! between layers: which tensor feeds which consumer, when an activation
+//! dies, and whether an `Eltwise` consumer can be folded into its
+//! producer's kernel. `NetProgram` is the explicit form: a command
+//! stream of typed layer invocations over a flat tensor-variable table,
+//! produced by [`NetProgram::lower`] and refined by a small pass
+//! pipeline:
+//!
+//! * [`NetProgram::fuse_epilogues`] — rewrite adjacent int8
+//!   `Matmul`/`Conv2d` + requant followed by a matching `Eltwise` into
+//!   one fused command carrying an [`EltwiseEpilogue`]. The producer's
+//!   OUT tensor is never materialized; codegen emits the epilogue via
+//!   `codegen::generate_fused` (and, for the tuned scenario, the
+//!   `fuse` trace decision places it inside the producer's inner loop).
+//! * [`NetProgram::plan_arena`] — liveness-based scratch-arena planning:
+//!   first/last-use intervals for every activation, accumulator, and
+//!   COL/TMP scratch variable, then size-descending first-fit packing
+//!   into one arena whose byte size is the network's
+//!   [`NetProgram::total_memory_req`] — the report metric the embedded
+//!   deployment story is judged on.
+//!
+//! Weights are excluded from the arena (they live in flash/rodata, as
+//! muRISCV-NN assumes). The static complement lives in
+//! `analysis::verify_net`, which proves every kernel's arena-relative
+//! accesses in range against the plan.
+
+use crate::tir::{DType, EltwiseEpilogue, Op};
+
+/// Storage class of a [`TensorVar`] — decides arena participation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VarClass {
+    /// Constant parameters; live in flash, never in the arena.
+    Weight,
+    /// Layer inputs/outputs (and `Eltwise` operands).
+    Activation,
+    /// Bias-prefilled int32/float accumulator of one producer.
+    Acc,
+    /// Per-command private scratch: im2col COL patches and the TMP
+    /// staging a fused backend may need. Live only at its command.
+    Scratch,
+}
+
+/// One tensor in the flat variable table.
+#[derive(Clone, Debug)]
+pub struct TensorVar {
+    pub name: String,
+    pub dtype: DType,
+    pub len: usize,
+    pub class: VarClass,
+}
+
+impl TensorVar {
+    pub fn bytes(&self) -> usize {
+        self.len * self.dtype.bytes()
+    }
+}
+
+/// One layer invocation: an [`Op`] plus the variable-table indices of
+/// its operands under the conventional buffer layout of
+/// `codegen::declare_buffers` / `codegen::declare_fused_buffers`.
+#[derive(Clone, Debug)]
+pub struct NetCmd {
+    pub op: Op,
+    /// `Some` after [`NetProgram::fuse_epilogues`] folded the following
+    /// `Eltwise` into this producer.
+    pub epilogue: Option<EltwiseEpilogue>,
+    /// First operand (A / X / eltwise `a`).
+    pub a: usize,
+    /// Weights (B / W / eltwise `b` — for `Eltwise` this is the
+    /// residual operand, an Activation, not a Weight).
+    pub b: usize,
+    /// Accumulator (ACC / eltwise in-out `y`).
+    pub acc: usize,
+    /// Requantized int8 output; `None` for float ops, plain `Eltwise`
+    /// commands, and fused producers (OUT never materializes).
+    pub out: Option<usize>,
+    /// Fused epilogue multiplier operand (the folded eltwise's `b`).
+    pub res: Option<usize>,
+    /// Fused epilogue in-out accumulator (the folded eltwise's `y`).
+    pub y: Option<usize>,
+    /// Private scratch: COL patch matrix for `Conv2d` (the im2col
+    /// route), grown by TMP headroom when an epilogue is fused.
+    pub scratch: Option<usize>,
+    /// Pin this conv's tuning space to the im2col sub-space (the zoo's
+    /// `*-im2col` ablation variants; `space::program_for(..).without
+    /// (&ids::STRATEGY)`).
+    pub pin_im2col: bool,
+}
+
+impl NetCmd {
+    /// Every variable this command touches.
+    pub fn vars(&self) -> impl Iterator<Item = usize> {
+        [Some(self.a), Some(self.b), Some(self.acc), self.out, self.res, self.y, self.scratch]
+            .into_iter()
+            .flatten()
+    }
+}
+
+/// One arena slot: `var` occupies `[offset, offset + size)` while any
+/// command in `[first, last]` runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ArenaSlot {
+    pub var: usize,
+    pub offset: usize,
+    /// 16-byte-aligned byte size (≥ the variable's raw bytes).
+    pub size: usize,
+    pub first: usize,
+    pub last: usize,
+}
+
+/// Result of [`NetProgram::plan_arena`].
+#[derive(Clone, Debug)]
+pub struct ArenaPlan {
+    /// One slot per live non-weight variable, sorted by variable index.
+    pub slots: Vec<ArenaSlot>,
+    /// Total arena bytes — `max(offset + size)` over the slots.
+    pub total: usize,
+}
+
+impl ArenaPlan {
+    pub fn slot_for(&self, var: usize) -> Option<&ArenaSlot> {
+        self.slots.iter().find(|s| s.var == var)
+    }
+}
+
+/// Arena slot alignment: the cache-line/vector-friendly granularity the
+/// embedded runtimes this models allocate at.
+pub const ARENA_ALIGN: usize = 16;
+
+/// The graph-level network program.
+#[derive(Clone, Debug, Default)]
+pub struct NetProgram {
+    pub vars: Vec<TensorVar>,
+    pub cmds: Vec<NetCmd>,
+}
+
+impl NetProgram {
+    /// Lower a zoo layer list into the command-stream form. Layers chain:
+    /// each producer's output variable becomes the next layer's first
+    /// operand when length and dtype line up; otherwise the layer reads a
+    /// fresh external-input activation (the flat zoo form carries no
+    /// explicit edges, so shape-compatible adjacency *is* the graph, as
+    /// in the paper's sequential int8 deployments).
+    pub fn lower(layers: &[Op]) -> NetProgram {
+        Self::lower_pinned(layers, false)
+    }
+
+    /// [`NetProgram::lower`] with every `Conv2d` command pinned to the
+    /// im2col tuning sub-space (zoo `*-im2col` ablation variants).
+    pub fn lower_pinned(layers: &[Op], pin_im2col: bool) -> NetProgram {
+        let mut net = NetProgram::default();
+        // Last produced (var, len) — the chain cursor.
+        let mut cursor: Option<(usize, usize)> = None;
+        for (i, op) in layers.iter().enumerate() {
+            let cmd = match *op {
+                Op::Matmul { m, n, k, dtype, requant } => {
+                    let a = net.chain_or_input(&cursor, format!("in{i}"), dtype, m * k);
+                    let b = net.add(format!("w{i}"), dtype, n * k, VarClass::Weight);
+                    let acc =
+                        net.add(format!("acc{i}"), dtype.accumulator(), m * n, VarClass::Acc);
+                    let out = requant
+                        .map(|_| net.add(format!("out{i}"), DType::I8, m * n, VarClass::Activation));
+                    cursor = Some((out.unwrap_or(acc), m * n));
+                    NetCmd {
+                        op: op.clone(),
+                        epilogue: None,
+                        a,
+                        b,
+                        acc,
+                        out,
+                        res: None,
+                        y: None,
+                        scratch: None,
+                        pin_im2col: false,
+                    }
+                }
+                Op::DwConv { spatial, channels, taps, dtype, requant } => {
+                    let a = net.chain_or_input(
+                        &cursor,
+                        format!("in{i}"),
+                        dtype,
+                        spatial * taps * channels,
+                    );
+                    let b = net.add(format!("w{i}"), dtype, taps * channels, VarClass::Weight);
+                    let acc = net.add(
+                        format!("acc{i}"),
+                        dtype.accumulator(),
+                        spatial * channels,
+                        VarClass::Acc,
+                    );
+                    let out = requant.map(|_| {
+                        net.add(format!("out{i}"), DType::I8, spatial * channels, VarClass::Activation)
+                    });
+                    cursor = Some((out.unwrap_or(acc), spatial * channels));
+                    NetCmd {
+                        op: op.clone(),
+                        epilogue: None,
+                        a,
+                        b,
+                        acc,
+                        out,
+                        res: None,
+                        y: None,
+                        scratch: None,
+                        pin_im2col: false,
+                    }
+                }
+                Op::Eltwise { len, dtype } => {
+                    let a = net.chain_or_input(&cursor, format!("in{i}"), dtype, len);
+                    let b = net.add(format!("res{i}"), dtype, len, VarClass::Activation);
+                    let y = net.add(format!("y{i}"), dtype, len, VarClass::Activation);
+                    cursor = Some((y, len));
+                    NetCmd {
+                        op: op.clone(),
+                        epilogue: None,
+                        a,
+                        b,
+                        acc: y,
+                        out: None,
+                        res: None,
+                        y: None,
+                        scratch: None,
+                        pin_im2col: false,
+                    }
+                }
+                Op::Conv2d { h, w, cin, cout, dtype, requant, .. } => {
+                    let d = op.conv_dims().expect("conv dims");
+                    let a = net.chain_or_input(&cursor, format!("in{i}"), dtype, h * w * cin);
+                    let b =
+                        net.add(format!("w{i}"), dtype, cout * d.k_col(), VarClass::Weight);
+                    let acc = net.add(
+                        format!("acc{i}"),
+                        dtype.accumulator(),
+                        d.pixels() * cout,
+                        VarClass::Acc,
+                    );
+                    let out = requant.map(|_| {
+                        net.add(format!("out{i}"), DType::I8, d.pixels() * cout, VarClass::Activation)
+                    });
+                    // COL patch scratch the im2col route would need; the
+                    // arena reserves it whichever strategy tuning picks.
+                    let scratch = Some(net.add(
+                        format!("col{i}"),
+                        DType::I8,
+                        d.pixels() * d.k_col(),
+                        VarClass::Scratch,
+                    ));
+                    cursor = Some((out.unwrap_or(acc), d.pixels() * cout));
+                    NetCmd {
+                        op: op.clone(),
+                        epilogue: None,
+                        a,
+                        b,
+                        acc,
+                        out,
+                        res: None,
+                        y: None,
+                        scratch,
+                        pin_im2col,
+                    }
+                }
+            };
+            net.cmds.push(cmd);
+        }
+        net
+    }
+
+    fn add(&mut self, name: String, dtype: DType, len: usize, class: VarClass) -> usize {
+        self.vars.push(TensorVar { name, dtype, len, class });
+        self.vars.len() - 1
+    }
+
+    fn chain_or_input(
+        &mut self,
+        cursor: &Option<(usize, usize)>,
+        name: String,
+        dtype: DType,
+        len: usize,
+    ) -> usize {
+        if let Some((v, l)) = cursor {
+            if *l == len && self.vars[*v].dtype == dtype {
+                return *v;
+            }
+        }
+        self.add(name, dtype, len, VarClass::Activation)
+    }
+
+    /// Whether the `Eltwise` at `i + 1` can fold into the producer at
+    /// `i`: int8 Matmul/Conv2d with requant, lengths match, and the
+    /// eltwise actually consumes the producer's output.
+    fn can_fuse(&self, i: usize) -> bool {
+        let p = &self.cmds[i];
+        let c = &self.cmds[i + 1];
+        if p.epilogue.is_some() {
+            return false;
+        }
+        let Some(out) = p.out else { return false };
+        let producer_ok = matches!(
+            p.op,
+            Op::Matmul { dtype: DType::I8, requant: Some(_), .. }
+                | Op::Conv2d { dtype: DType::I8, requant: Some(_), .. }
+        );
+        let Op::Eltwise { len, dtype: DType::I8 } = c.op else { return false };
+        producer_ok && len == self.vars[out].len && c.a == out
+    }
+
+    /// The fusion pass: fold every fusable producer + `Eltwise` pair
+    /// into one fused command. The producer's OUT variable is dropped
+    /// from the command (leaving it dead — the arena planner allocates
+    /// nothing for unused variables), the eltwise command disappears,
+    /// and the producer gains the epilogue plus the eltwise's RES/Y
+    /// operands. Scratch grows by TMP headroom — the staging buffer the
+    /// scalar-flavored backends use between requant and the eltwise.
+    /// Returns the number of pairs fused.
+    pub fn fuse_epilogues(&mut self) -> usize {
+        let mut fused = 0;
+        let mut i = 0;
+        while i + 1 < self.cmds.len() {
+            if self.can_fuse(i) {
+                let consumer = self.cmds.remove(i + 1);
+                let out_var = self.cmds[i].out.take().expect("can_fuse checked out");
+                let out_len = self.vars[out_var].len;
+                match self.cmds[i].scratch {
+                    Some(s) => self.vars[s].len += out_len,
+                    None => {
+                        let s = self.add(
+                            format!("tmp{i}"),
+                            DType::I8,
+                            out_len,
+                            VarClass::Scratch,
+                        );
+                        self.cmds[i].scratch = Some(s);
+                    }
+                }
+                self.cmds[i].epilogue = Some(EltwiseEpilogue { len: out_len });
+                self.cmds[i].res = Some(consumer.b);
+                self.cmds[i].y = Some(consumer.acc);
+                fused += 1;
+            }
+            i += 1;
+        }
+        fused
+    }
+
+    /// First/last-use command interval per variable; `None` for weights
+    /// (arena-exempt) and variables no command references (e.g. an OUT
+    /// the fusion pass killed).
+    pub fn live_intervals(&self) -> Vec<Option<(usize, usize)>> {
+        let mut live: Vec<Option<(usize, usize)>> = vec![None; self.vars.len()];
+        for (i, cmd) in self.cmds.iter().enumerate() {
+            for v in cmd.vars() {
+                if self.vars[v].class == VarClass::Weight {
+                    continue;
+                }
+                live[v] = Some(match live[v] {
+                    Some((f, _)) => (f, i),
+                    None => (i, i),
+                });
+            }
+        }
+        live
+    }
+
+    /// Liveness-based arena packing: size-descending first-fit, the
+    /// classic tensor-arena heuristic (TFLite-Micro's planner). Two
+    /// variables share bytes only if their live intervals are disjoint;
+    /// offsets are [`ARENA_ALIGN`]-aligned.
+    pub fn plan_arena(&self) -> ArenaPlan {
+        let live = self.live_intervals();
+        let mut order: Vec<usize> = (0..self.vars.len()).filter(|&v| live[v].is_some()).collect();
+        // Largest first; index tie-break keeps the plan deterministic.
+        order.sort_by_key(|&v| (std::cmp::Reverse(self.vars[v].bytes()), v));
+        let mut slots: Vec<ArenaSlot> = Vec::new();
+        for v in order {
+            let (first, last) = live[v].expect("filtered to live vars");
+            let size = self.vars[v].bytes().div_ceil(ARENA_ALIGN) * ARENA_ALIGN;
+            let mut conflicts: Vec<(usize, usize)> = slots
+                .iter()
+                .filter(|s| s.first <= last && first <= s.last)
+                .map(|s| (s.offset, s.offset + s.size))
+                .collect();
+            conflicts.sort_unstable();
+            // Scan the gaps between co-live slots for the lowest fit.
+            let mut offset = 0;
+            for (lo, hi) in conflicts {
+                if offset + size <= lo {
+                    break;
+                }
+                offset = offset.max(hi);
+            }
+            slots.push(ArenaSlot { var: v, offset, size, first, last });
+        }
+        let total = slots.iter().map(|s| s.offset + s.size).max().unwrap_or(0);
+        slots.sort_by_key(|s| s.var);
+        ArenaPlan { slots, total }
+    }
+
+    /// The planned arena footprint in bytes — the report metric.
+    pub fn total_memory_req(&self) -> u64 {
+        self.plan_arena().total as u64
+    }
+
+    /// Sum of all non-weight variable bytes with no lifetime sharing —
+    /// what a per-layer allocator would need; the baseline
+    /// [`NetProgram::total_memory_req`] is judged against.
+    pub fn sum_buffer_bytes(&self) -> u64 {
+        self.vars
+            .iter()
+            .filter(|v| v.class != VarClass::Weight)
+            .map(|v| v.bytes() as u64)
+            .sum()
+    }
+
+    /// The ops to tune — one per command. On an unfused program this is
+    /// exactly the zoo layer list (task extraction unchanged); after
+    /// fusion the folded `Eltwise` commands are gone and the producers
+    /// remain the tuning tasks (the epilogue rides on the producer's
+    /// schedule via the `fuse` decision).
+    pub fn task_ops(&self) -> Vec<Op> {
+        self.cmds.iter().map(|c| c.op.clone()).collect()
+    }
+
+    /// Any `Conv2d` command pinned to the im2col sub-space?
+    pub fn pins_im2col(&self, op_key: &str) -> bool {
+        self.cmds.iter().any(|c| c.pin_im2col && c.op.key() == op_key)
+    }
+}
+
+impl std::fmt::Display for NetProgram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, c) in self.cmds.iter().enumerate() {
+            let fused = if c.epilogue.is_some() { " +eltwise" } else { "" };
+            writeln!(f, "#{i} {}{fused}", c.op.key())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::Requant;
+
+    fn rq() -> Option<Requant> {
+        Some(Requant::default_for_tests())
+    }
+
+    fn mm(m: usize, n: usize, k: usize) -> Op {
+        Op::Matmul { m, n, k, dtype: DType::I8, requant: rq() }
+    }
+
+    #[test]
+    fn lowering_chains_matching_activations() {
+        // 4x8x8 matmul -> out 4x8 feeds 4x6x8 matmul (len 32 == 4*8).
+        let layers = [mm(4, 8, 8), mm(4, 6, 8)];
+        let net = NetProgram::lower(&layers);
+        assert_eq!(net.cmds.len(), 2);
+        assert_eq!(net.cmds[1].a, net.cmds[0].out.unwrap());
+        // First input is external, weights are Weight-class.
+        assert_eq!(net.vars[net.cmds[0].a].class, VarClass::Activation);
+        assert_eq!(net.vars[net.cmds[0].b].class, VarClass::Weight);
+        assert_eq!(net.vars[net.cmds[1].b].class, VarClass::Weight);
+        assert_eq!(net.vars[net.cmds[0].acc].class, VarClass::Acc);
+        assert_eq!(net.vars[net.cmds[0].acc].dtype, DType::I32);
+    }
+
+    #[test]
+    fn lowering_gives_conv_col_scratch_live_one_command() {
+        let conv = Op::square_conv2d(4, 2, 3, 3, 1, DType::I8);
+        let net = NetProgram::lower(&[conv.clone(), mm(48, 5, 1)]);
+        let col = net.cmds[0].scratch.unwrap();
+        assert_eq!(net.vars[col].class, VarClass::Scratch);
+        let d = conv.conv_dims().unwrap();
+        assert_eq!(net.vars[col].len, d.pixels() * d.k_col());
+        assert_eq!(net.live_intervals()[col], Some((0, 0)));
+    }
+
+    #[test]
+    fn fusion_folds_matching_eltwise_and_kills_out() {
+        let layers = [mm(4, 8, 8), Op::Eltwise { len: 32, dtype: DType::I8 }];
+        let mut net = NetProgram::lower(&layers);
+        let out = net.cmds[0].out.unwrap();
+        assert_eq!(net.fuse_epilogues(), 1);
+        assert_eq!(net.cmds.len(), 1);
+        let c = &net.cmds[0];
+        assert_eq!(c.epilogue, Some(EltwiseEpilogue { len: 32 }));
+        assert!(c.out.is_none());
+        assert!(c.res.is_some() && c.y.is_some());
+        // The dead OUT gets no arena slot; RES/Y keep the epilogue live.
+        assert!(net.plan_arena().slot_for(out).is_none());
+        assert!(net.plan_arena().slot_for(c.res.unwrap()).is_some());
+        // TMP headroom for backends that stage the requant result.
+        assert_eq!(net.vars[c.scratch.unwrap()].len, 32);
+    }
+
+    #[test]
+    fn fusion_refuses_len_mismatch_and_float() {
+        // Eltwise len 33 != 32: no fuse.
+        let mut a =
+            NetProgram::lower(&[mm(4, 8, 8), Op::Eltwise { len: 33, dtype: DType::I8 }]);
+        assert_eq!(a.fuse_epilogues(), 0);
+        assert_eq!(a.cmds.len(), 2);
+        // Float producer carries no requant: no fuse.
+        let fm = Op::Matmul { m: 4, n: 8, k: 8, dtype: DType::F32, requant: None };
+        let mut b = NetProgram::lower(&[fm, Op::Eltwise { len: 32, dtype: DType::F32 }]);
+        assert_eq!(b.fuse_epilogues(), 0);
+    }
+
+    /// The arena-planner safety property: no two slots whose live
+    /// intervals overlap may share bytes — checked over every zoo
+    /// model, fused and unfused.
+    #[test]
+    fn arena_never_overlaps_live_intervals_across_zoo() {
+        for name in crate::workloads::models::BPI_MODELS {
+            let model = crate::workloads::models::by_name(name, DType::I8).unwrap();
+            for fuse in [false, true] {
+                let mut net = NetProgram::lower(&model.layers);
+                if fuse {
+                    net.fuse_epilogues();
+                }
+                let plan = net.plan_arena();
+                for (ai, a) in plan.slots.iter().enumerate() {
+                    assert_eq!(a.offset % ARENA_ALIGN, 0);
+                    assert!(a.size >= net.vars[a.var].bytes());
+                    assert!(a.offset + a.size <= plan.total);
+                    for b in &plan.slots[ai + 1..] {
+                        let colive = a.first <= b.last && b.first <= a.last;
+                        let disjoint =
+                            a.offset + a.size <= b.offset || b.offset + b.size <= a.offset;
+                        assert!(
+                            !colive || disjoint,
+                            "{name} fuse={fuse}: slots {} and {} overlap while co-live",
+                            net.vars[a.var].name,
+                            net.vars[b.var].name
+                        );
+                    }
+                }
+                // Every used non-weight var has a slot.
+                for (v, li) in net.live_intervals().iter().enumerate() {
+                    assert_eq!(li.is_some(), plan.slot_for(v).is_some());
+                }
+            }
+        }
+    }
+
+    /// Lifetime sharing must beat per-layer allocation, fused or not.
+    /// (Fusion itself is not a guaranteed arena win: it trades the OUT
+    /// materialization for TMP headroom and pulls RES/Y's first use into
+    /// the producer's command, co-live with the wide ACC — the planner's
+    /// job is only to pack whichever form it is given tightly.)
+    #[test]
+    fn arena_reuses_memory_across_layer_lifetimes() {
+        let layers = [
+            mm(32, 64, 64),
+            mm(32, 64, 64),
+            Op::Eltwise { len: 32 * 64, dtype: DType::I8 },
+            mm(32, 32, 64),
+        ];
+        let net = NetProgram::lower(&layers);
+        assert!(net.total_memory_req() < net.sum_buffer_bytes());
+        let mut fused = net.clone();
+        assert_eq!(fused.fuse_epilogues(), 1);
+        assert!(fused.total_memory_req() < fused.sum_buffer_bytes());
+        // Task list shrinks by exactly the folded eltwise.
+        assert_eq!(fused.task_ops().len(), net.task_ops().len() - 1);
+    }
+
+    #[test]
+    fn pinned_lowering_marks_only_convs() {
+        let conv = Op::square_conv2d(4, 2, 3, 3, 1, DType::I8);
+        let net = NetProgram::lower_pinned(&[conv.clone(), mm(48, 5, 1)], true);
+        assert!(net.cmds[0].pin_im2col);
+        assert!(!net.cmds[1].pin_im2col);
+        assert!(net.pins_im2col(&conv.key()));
+        assert!(!net.pins_im2col(&mm(48, 5, 1).key()));
+    }
+}

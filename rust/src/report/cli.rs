@@ -9,7 +9,7 @@
 //! rvv-tune trace    --workload matmul:64:int8 [--db db.json] [--trials 32]
 //! rvv-tune verify   --db db.json --workload matmul:64:int8 [--soc saturn-256]
 //! rvv-tune simulate --workload matmul:64:int8 --scenario muriscv-nn
-//!                   [--soc saturn-1024] [--trace]
+//!                   [--soc saturn-1024] [--trace] [--fuse]
 //! rvv-tune models   [--dtype int8]
 //! rvv-tune info
 //! ```
@@ -27,7 +27,7 @@ use crate::workloads::{matmul, models};
 use super::figures::{self, FigOpts};
 use super::table::{fnum, pct, Table};
 
-const FLAGS: [&str; 5] = ["quick", "trace", "no-mlp", "resume", "help"];
+const FLAGS: [&str; 6] = ["quick", "trace", "no-mlp", "resume", "fuse", "help"];
 
 /// Entry point; returns the process exit code.
 pub fn run(argv: Vec<String>) -> i32 {
@@ -89,7 +89,9 @@ USAGE: rvv-tune <subcommand> [options]
             without simulating: --db PATH --workload ... [--soc NAME]
             (recovers PATH.journal.jsonl first, like tune --resume)
   simulate  measure one scenario: --scenario non-tuned|non-tuned-O3|non-tuned-v|muriscv-nn|packed-simd
-  models    list the network zoo
+            --fuse runs the NetProgram epilogue-fusion pass first (fused
+            producer+eltwise kernels; reports the planned arena footprint)
+  models    list the network zoo (incl. per-model planned arena bytes)
   info      artifact/runtime status
 
 COMMON OPTIONS
@@ -149,6 +151,18 @@ fn parse_workload(spec: &str) -> Result<(String, Vec<Op>, usize), String> {
              conv2d:OUT:CIN:COUT:K:STRIDE:DTYPE, or model:NAME:DTYPE)"
         )),
     }
+}
+
+/// Lower a parsed workload to its [`crate::net::NetProgram`], honoring
+/// the zoo's im2col pins (`Model::force_im2col` — the `*-im2col`
+/// ablation variants are the only pinned entries).
+fn workload_net(spec: &str, layers: &[Op]) -> crate::net::NetProgram {
+    let pin = matches!(spec.split(':').collect::<Vec<_>>()[..],
+        ["model", name, dtype]
+            if DType::parse(dtype)
+                .and_then(|d| models::by_name(name, d))
+                .is_some_and(|m| m.force_im2col));
+    crate::net::NetProgram::lower_pinned(layers, pin)
 }
 
 fn parse_scenario(name: &str) -> Option<Scenario> {
@@ -297,9 +311,10 @@ fn cmd_tune(args: &Args) -> i32 {
         trials
     );
     let t0 = std::time::Instant::now();
+    let net = workload_net(spec, &layers);
     let report = match &replay {
-        Some(cache) => service.tune_network_resumed(&layers, trials, 10.min(trials), cache),
-        None => service.tune_network(&layers, trials, 10.min(trials)),
+        Some(cache) => service.tune_net_resumed(&net, trials, 10.min(trials), cache),
+        None => service.tune_net(&net, trials, 10.min(trials)),
     };
     let mut t = Table::new(
         format!(
@@ -358,6 +373,10 @@ fn cmd_tune(args: &Args) -> i32 {
     if report.failed_trials > 0 {
         println!("  {} candidate(s) failed and were quarantined", report.failed_trials);
     }
+    println!(
+        "planned arena footprint (fused, liveness-packed): {} B",
+        report.total_memory_req
+    );
     if let Some(path) = &db_path {
         // save_db compacts: the snapshot absorbs the journal, which is
         // then reset (a later crash-free rerun starts from a clean pair).
@@ -557,17 +576,21 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 2;
         }
     };
-    let Some(r) = service.measure_network(&layers, &Fixed(scenario)) else {
+    let mut net = workload_net(spec, &layers);
+    let fused = if args.flag("fuse") { net.fuse_epilogues() } else { 0 };
+    let Some(r) = service.measure_net(&net, &Fixed(scenario)) else {
         eprintln!("scenario {sc_name} does not support this workload (float + muriscv-nn?)");
         return 1;
     };
     println!(
-        "{name} under {sc_name} on {}: {} cycles = {} us @ {} MHz, code {} B",
+        "{name} under {sc_name} on {}: {} cycles = {} us @ {} MHz, code {} B, arena {} B{}",
         service.soc().name,
         fnum(r.cycles),
         fnum(service.soc().cycles_to_us(r.cycles)),
         service.soc().clock_mhz,
-        r.code_size_bytes
+        r.code_size_bytes,
+        r.total_memory_req,
+        if fused > 0 { format!(" ({fused} epilogue(s) fused)") } else { String::new() }
     );
     if args.flag("trace") {
         let mut t = Table::new("instruction trace", &["group", "count", "vector_share"]);
@@ -660,7 +683,7 @@ fn cmd_models(args: &Args) -> i32 {
     let dtype = DType::parse(args.get_or("dtype", "int8")).unwrap_or(DType::I8);
     let mut t = Table::new(
         format!("model zoo ({dtype})"),
-        &["model", "layers", "distinct_tasks", "MACs", "default_trials"],
+        &["model", "layers", "distinct_tasks", "MACs", "arena_bytes", "default_trials"],
     );
     let mut missing = 0;
     for name in models::BPI_MODELS {
@@ -677,6 +700,9 @@ fn cmd_models(args: &Args) -> i32 {
             m.layers.len().to_string(),
             m.distinct_tasks().to_string(),
             format!("{:.2e}", m.total_macs() as f64),
+            // Planned scratch-arena footprint (fused, liveness-packed) —
+            // net::NetProgram::total_memory_req.
+            m.total_memory_req().to_string(),
             m.default_trials.to_string(),
         ]);
     }

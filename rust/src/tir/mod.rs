@@ -5,7 +5,7 @@ mod op;
 mod schedule;
 
 pub use dtype::DType;
-pub use op::{conv_out_extent, ConvDims, Op, Requant};
+pub use op::{conv_out_extent, ConvDims, EltwiseEpilogue, Op, Requant};
 #[doc(hidden)]
 pub use op::ref_conv2d_acc;
 pub use schedule::{

@@ -108,6 +108,24 @@ impl Requant {
     }
 }
 
+/// An `Eltwise` consumer folded into its producer's kernel by the
+/// NetProgram fusion pass (`net::NetProgram::fuse_epilogues`). Instead of
+/// storing the producer's requantized output tensor and re-reading it in
+/// a separate eltwise kernel, the fused kernel computes
+///
+/// ```text
+/// Y[i] = clamp_i8(Y[i] + requant(ACC[i]) * RES[i])
+/// ```
+///
+/// in one pass — the intermediate OUT tensor is never materialized, which
+/// is exactly the arena-footprint payoff the fusion pass exists for. The
+/// producer must carry a `Requant` (int8 path); `len` is the producer's
+/// output element count and must equal the eltwise operand length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EltwiseEpilogue {
+    pub len: usize,
+}
+
 /// One tunable tensor operation.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {

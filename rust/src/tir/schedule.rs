@@ -75,6 +75,13 @@ pub struct MatmulSchedule {
     /// across the whole m/n sweep at the cost of revisiting C per block).
     /// 1 = no blocking.
     pub ks: u32,
+    /// Fuse the requant epilogue into the producer nest: requantize each
+    /// finished row block right after its reduction completes (inside the
+    /// m loop) instead of in a separate whole-tensor epilogue pass. Only
+    /// legal when the reduction for a row is complete before the nest
+    /// leaves it — MNK order, no transpose, no k-split; the lowering
+    /// derives an inert single-`false` domain otherwise.
+    pub fuse: bool,
 }
 
 /// Schedule for the *direct* (no im2col materialization) Conv2d lowering:
@@ -97,6 +104,12 @@ pub struct DirectConvSchedule {
     /// re-loaded per output channel) instead of accumulating partial
     /// J-wide tiles through ACC per `(ky, chunk)`.
     pub ky_hoist: bool,
+    /// Fuse the requant epilogue into the pixel loop: each output pixel's
+    /// cout-wide row is requantized right after its tile reduction
+    /// completes, instead of in a separate whole-tensor pass. Always
+    /// legal for the direct lowering (every tile finishes its full
+    /// reduction before the nest moves on).
+    pub fuse: bool,
 }
 
 /// How a Conv2d lowers — the first decision of its space program.
@@ -138,7 +151,7 @@ impl Schedule {
     pub fn describe(&self) -> String {
         match self {
             Schedule::Matmul(s) => format!(
-                "mm[vl={} j={} lmul={} mi={} order={} unroll={} ks={}{}]",
+                "mm[vl={} j={} lmul={} mi={} order={} unroll={} ks={}{}{}]",
                 s.intrin.vl,
                 s.intrin.j,
                 s.intrin.lmul,
@@ -146,7 +159,8 @@ impl Schedule {
                 s.order.name(),
                 s.unroll,
                 s.ks,
-                if s.transpose { " T" } else { "" }
+                if s.transpose { " T" } else { "" },
+                if s.fuse { " F" } else { "" }
             ),
             Schedule::DwConv(s) => format!("dw[vl={} unroll_taps={}]", s.vl, s.unroll_taps),
             Schedule::Eltwise(s) => format!("ew[vl={} unroll={}]", s.vl, s.unroll),
@@ -154,8 +168,14 @@ impl Schedule {
                 format!("conv-im2col{{{}}}", Schedule::Matmul(s.clone()).describe())
             }
             Schedule::Conv2d(Conv2dSchedule::Direct(s)) => format!(
-                "conv-direct[vl={} j={} lmul={} wi={} unroll={} hoist={}]",
-                s.intrin.vl, s.intrin.j, s.intrin.lmul, s.wi, s.unroll, s.ky_hoist
+                "conv-direct[vl={} j={} lmul={} wi={} unroll={} hoist={}{}]",
+                s.intrin.vl,
+                s.intrin.j,
+                s.intrin.lmul,
+                s.wi,
+                s.unroll,
+                s.ky_hoist,
+                if s.fuse { " F" } else { "" }
             ),
         }
     }
@@ -173,6 +193,7 @@ mod tests {
             unroll: 2,
             transpose: true,
             ks: 2,
+            fuse: false,
         })
     }
 
@@ -201,6 +222,7 @@ mod tests {
             wi: 2,
             unroll: 4,
             ky_hoist: true,
+            fuse: false,
         }));
         let d = direct.describe();
         assert!(d.contains("conv-direct") && d.contains("hoist=true"), "{d}");

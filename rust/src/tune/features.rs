@@ -33,6 +33,11 @@ fn log2p(x: f64) -> f32 {
 fn decision_slot(id: &str) -> Option<(usize, fn(u64) -> f32)> {
     if id == ids::KSPLIT.name() {
         Some((10, |v| log2p(v as f64)))
+    } else if id == ids::FUSE.name() {
+        // Epilogue-fusion flag. Shares the k-split slot additively: fusion
+        // is only explorable at ks = 1 (slot contribution log2p(1) = 1),
+        // so +16 keeps every (ksplit, fuse) combination a distinct level.
+        Some((10, |v| 16.0 * v as f32))
     } else if id == ids::MI.name() {
         Some((11, |v| log2p(v as f64)))
     } else if id == ids::ORDER.name() {
@@ -310,5 +315,33 @@ mod tests {
         let f1 = extract(&op, &t1, &p1, &soc);
         let f2 = extract(&op, &t2, &p2, &soc);
         assert_ne!(f1[10], f2[10], "ksplit slot must move with the decision");
+    }
+
+    #[test]
+    fn fuse_has_a_feature_slot() {
+        // The epilogue-fusion decision must be visible to the cost model,
+        // and distinguishable from the k-split levels sharing its slot.
+        use crate::tune::trace::{Decision, Domain};
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(1024);
+        let base = test_matmul_trace(
+            IntrinChoice { vl: 16, j: 8, lmul: 8 },
+            1,
+            LoopOrder::MNK,
+            1,
+            false,
+            1,
+        );
+        let mut fused = base.clone();
+        fused.push(Decision {
+            id: space::ids::FUSE,
+            domain: Domain::Bools(vec![false, true]),
+            choice: 1,
+        });
+        let p1 = emit(&op, &base);
+        let p2 = emit(&op, &fused);
+        let f1 = extract(&op, &base, &p1, &soc);
+        let f2 = extract(&op, &fused, &p2, &soc);
+        assert_ne!(f1[10], f2[10], "fuse slot must move with the decision");
     }
 }

@@ -52,6 +52,17 @@ pub mod ids {
     /// instead of accumulating partial tiles through memory per (ky,
     /// chunk). Inert (single-option) on the im2col branch.
     pub const KY_HOIST: DecisionId = DecisionId::new("ky_hoist");
+    /// Matmul/Conv2d with a requant epilogue: emit the epilogue *inside*
+    /// the producer nest (requantize each finished row/pixel block right
+    /// after its reduction completes) instead of as a separate
+    /// whole-tensor pass — the NetProgram fusion decision, explored per
+    /// layer. Only explorable where the fused placement is legal: the
+    /// GEMM paths require MNK order, the direct mapping, and no k-split
+    /// (a row's reduction must be complete before the nest leaves it);
+    /// the direct conv path is always eligible. Inert (single-`false`)
+    /// everywhere else, and absent traces lower unfused — the pre-fusion
+    /// behaviour.
+    pub const FUSE: DecisionId = DecisionId::new("fuse");
 }
 
 /// Trace-kind tags (one per lowering arm).
@@ -69,17 +80,29 @@ fn divisors_up_to(n: usize, cap: u64) -> Vec<u64> {
     (1..=cap.min(n as u64)).filter(|d| n as u64 % d == 0).collect()
 }
 
+/// Whether a GEMM-path requant epilogue may legally be fused into the
+/// nest at this trace prefix: MNK order (a row block's reduction is
+/// complete before the nest leaves it), the direct mapping (the fused
+/// epilogue stores unit-stride OUT rows), and no k-split (k-blocking
+/// revisits every row per block, so no row is final until the whole nest
+/// ends). `ORDER` encodes as the index into [`LoopOrder::ALL`]; MNK is 0.
+fn gemm_fuse_eligible(t: &Trace) -> bool {
+    t.value_of(&ids::ORDER) == Some(0)
+        && t.value_of(&ids::TRANSPOSE) == Some(0)
+        && t.value_of(&ids::KSPLIT) == Some(1)
+}
+
 /// Build the space program for `op` on `registry`'s target. An operator
 /// no registered intrinsic matches gets an empty (untunable) program —
 /// the caller falls back to the compiler's vectorization.
 pub fn program_for(op: &Op, registry: &Registry) -> SpaceProgram {
     match op {
-        Op::Matmul { m, n, k, dtype, .. } => {
+        Op::Matmul { m, n, k, dtype, requant } => {
             let direct: Vec<IntrinChoice> =
                 registry.matmul_candidates_for(*n, *k, *dtype).iter().map(|i| i.choice()).collect();
             let transposed: Vec<IntrinChoice> =
                 registry.matmul_candidates_for(*m, *k, *dtype).iter().map(|i| i.choice()).collect();
-            matmul_program(*m, *n, *k, direct, transposed)
+            matmul_program(*m, *n, *k, direct, transposed, requant.is_some())
         }
         Op::DwConv { channels, dtype, .. } => {
             let vls: Vec<u64> =
@@ -101,7 +124,7 @@ pub fn program_for(op: &Op, registry: &Registry) -> SpaceProgram {
                 .decision(ids::VL, move |_| Domain::Ints(vls.clone()))
                 .decision(ids::UNROLL, |_| Domain::Ints(UNROLLS.to_vec()))
         }
-        Op::Conv2d { dtype, .. } => {
+        Op::Conv2d { dtype, requant, .. } => {
             let d = op.conv_dims().expect("conv dims");
             // im2col GEMM view: C[pixels, cout] = COL[pixels, k_col] x W.
             let im2col_direct: Vec<IntrinChoice> = registry
@@ -120,7 +143,7 @@ pub fn program_for(op: &Op, registry: &Registry) -> SpaceProgram {
                 .iter()
                 .map(|i| i.choice())
                 .collect();
-            conv2d_program(d, im2col_direct, im2col_transposed, direct)
+            conv2d_program(d, im2col_direct, im2col_transposed, direct, requant.is_some())
         }
     }
 }
@@ -136,6 +159,7 @@ fn conv2d_program(
     im2col_direct: Vec<IntrinChoice>,
     im2col_transposed: Vec<IntrinChoice>,
     direct: Vec<IntrinChoice>,
+    has_requant: bool,
 ) -> SpaceProgram {
     let im2col_ok = !im2col_direct.is_empty() || !im2col_transposed.is_empty();
     let direct_ok = !direct.is_empty();
@@ -209,6 +233,16 @@ fn conv2d_program(
                 Domain::Bools(vec![false]) // inert on the im2col branch
             }
         })
+        .decision(ids::FUSE, move |t| {
+            // Direct conv completes every tile's full reduction in place,
+            // so the fused epilogue is always legal there; the im2col GEMM
+            // suffix inherits the matmul eligibility rule.
+            if has_requant && (is_direct(t) || gemm_fuse_eligible(t)) {
+                Domain::Bools(vec![false, true])
+            } else {
+                Domain::Bools(vec![false]) // inert: fused placement illegal
+            }
+        })
 }
 
 /// The matmul program. The decision chain showcases dependent domains:
@@ -221,6 +255,7 @@ fn matmul_program(
     k: usize,
     direct: Vec<IntrinChoice>,
     transposed: Vec<IntrinChoice>,
+    has_requant: bool,
 ) -> SpaceProgram {
     let mappings: Vec<bool> = match (direct.is_empty(), transposed.is_empty()) {
         (true, true) => return SpaceProgram::new(KIND_MATMUL), // untunable
@@ -249,6 +284,13 @@ fn matmul_program(
             let vl = intrin.vl.min(k as u32).max(1) as usize;
             Domain::Ints(divisors_up_to(k / vl, KSPLIT_CAP))
         })
+        .decision(ids::FUSE, move |t| {
+            if has_requant && gemm_fuse_eligible(t) {
+                Domain::Bools(vec![false, true])
+            } else {
+                Domain::Bools(vec![false]) // inert: fused placement illegal
+            }
+        })
 }
 
 /// Pure lowering: derive the concrete [`Schedule`] the codegen layer
@@ -265,6 +307,7 @@ pub fn lower(trace: &Trace) -> Option<Schedule> {
             unroll: trace.value_of(&ids::UNROLL)? as u32,
             transpose: trace.value_of(&ids::TRANSPOSE)? == 1,
             ks: trace.value_of(&ids::KSPLIT).unwrap_or(1) as u32,
+            fuse: trace.value_of(&ids::FUSE).unwrap_or(0) == 1,
         })),
         KIND_DWCONV => Some(Schedule::DwConv(DwConvSchedule {
             vl: trace.value_of(&ids::VL)? as u32,
@@ -283,6 +326,7 @@ pub fn lower(trace: &Trace) -> Option<Schedule> {
                     wi: trace.value_of(&ids::MI)? as u32,
                     unroll: trace.value_of(&ids::UNROLL)? as u32,
                     ky_hoist: trace.value_of(&ids::KY_HOIST).unwrap_or(0) == 1,
+                    fuse: trace.value_of(&ids::FUSE).unwrap_or(0) == 1,
                 })))
             } else {
                 Some(Schedule::Conv2d(Conv2dSchedule::Im2col(MatmulSchedule {
@@ -292,6 +336,7 @@ pub fn lower(trace: &Trace) -> Option<Schedule> {
                     unroll: trace.value_of(&ids::UNROLL)? as u32,
                     transpose: trace.value_of(&ids::TRANSPOSE).unwrap_or(0) == 1,
                     ks: trace.value_of(&ids::KSPLIT).unwrap_or(1) as u32,
+                    fuse: trace.value_of(&ids::FUSE).unwrap_or(0) == 1,
                 })))
             }
         }
@@ -552,6 +597,79 @@ mod tests {
                 other => panic!("ablated program must lower as im2col, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn fuse_decision_gated_by_placement_legality() {
+        // int8 matmul: FUSE explorable exactly on MNK / no-transpose /
+        // ks=1 prefixes, inert single-`false` everywhere else.
+        let op = Op::square_matmul(128, DType::I8);
+        let reg = Registry::build(1024);
+        let program = program_for(&op, &reg);
+        let mut rng = Pcg::seeded(17);
+        let (mut saw_fused, mut saw_gated) = (false, false);
+        for _ in 0..256 {
+            let t = program.sample(&mut rng);
+            assert!(program.validates(&t));
+            let d = t.get(&ids::FUSE).expect("matmul program carries the fuse decision");
+            let eligible = t.value_of(&ids::ORDER) == Some(0)
+                && t.value_of(&ids::TRANSPOSE) == Some(0)
+                && t.value_of(&ids::KSPLIT) == Some(1);
+            assert_eq!(d.domain.len() == 2, eligible, "fuse domain mismatch: {}", t.describe());
+            let Some(Schedule::Matmul(m)) = lower(&t) else { panic!("wrong kind") };
+            assert_eq!(m.fuse, t.value_of(&ids::FUSE) == Some(1));
+            if m.fuse {
+                saw_fused = true;
+                assert!(matches!(m.order, LoopOrder::MNK) && !m.transpose && m.ks == 1);
+            }
+            if !eligible {
+                saw_gated = true;
+                assert!(!m.fuse, "ineligible prefix must lower unfused");
+            }
+        }
+        assert!(saw_fused && saw_gated, "corpus must hit both sides of the gate");
+
+        // Float matmul (no requant): never explorable.
+        let f = Op::square_matmul(64, DType::F32);
+        let fp = program_for(&f, &Registry::build(256));
+        for _ in 0..32 {
+            let t = fp.sample(&mut rng);
+            assert_eq!(t.get(&ids::FUSE).unwrap().domain.len(), 1);
+            assert_eq!(t.value_of(&ids::FUSE), Some(0));
+        }
+
+        // Conv2d: the direct branch is always eligible (requant present).
+        let c = Op::square_conv2d(8, 16, 16, 3, 1, DType::I8);
+        let cp = program_for(&c, &Registry::build(512));
+        let mut saw_direct_fused = false;
+        for _ in 0..128 {
+            let t = cp.sample(&mut rng);
+            assert!(cp.validates(&t));
+            if t.value_of(&ids::STRATEGY) == Some(1) {
+                assert_eq!(t.get(&ids::FUSE).unwrap().domain.len(), 2);
+                if t.value_of(&ids::FUSE) == Some(1) {
+                    saw_direct_fused = true;
+                    let Some(Schedule::Conv2d(Conv2dSchedule::Direct(ds))) = lower(&t) else {
+                        panic!("wrong lowering")
+                    };
+                    assert!(ds.fuse);
+                }
+            }
+        }
+        assert!(saw_direct_fused, "direct conv must be able to fuse");
+    }
+
+    #[test]
+    fn lowering_defaults_fuse_when_absent() {
+        // Ablated (and every pre-fusion) trace lowers unfused.
+        let op = Op::square_matmul(64, DType::I8);
+        let reg = Registry::build(256);
+        let program = program_for(&op, &reg).without(&ids::FUSE);
+        let mut rng = Pcg::seeded(19);
+        let t = program.sample(&mut rng);
+        assert!(t.get(&ids::FUSE).is_none());
+        let Some(Schedule::Matmul(m)) = lower(&t) else { panic!("wrong kind") };
+        assert!(!m.fuse);
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct Model {
     pub layers: Vec<Op>,
     /// MetaSchedule trial budget the paper assigns (200; 400 for the LLM).
     pub default_trials: usize,
+    /// Pin every `Conv2d` to the im2col tuning sub-space (the `*-im2col`
+    /// ablation variants — the strategy decision is forced instead of the
+    /// old layer-level GEMM flattening shim).
+    pub force_im2col: bool,
 }
 
 impl Model {
@@ -29,6 +33,19 @@ impl Model {
 
     pub fn distinct_tasks(&self) -> usize {
         crate::tune::extract_tasks(&self.layers).len()
+    }
+
+    /// Lower to the graph-level IR, honoring the model's im2col pin.
+    pub fn net(&self) -> crate::net::NetProgram {
+        crate::net::NetProgram::lower_pinned(&self.layers, self.force_im2col)
+    }
+
+    /// Planned scratch-arena footprint in bytes with epilogue fusion
+    /// applied — the `rvv-tune models` report metric.
+    pub fn total_memory_req(&self) -> u64 {
+        let mut net = self.net();
+        net.fuse_epilogues();
+        net.total_memory_req()
     }
 }
 
@@ -50,22 +67,6 @@ impl B {
     fn fc(&mut self, out: usize, inp: usize) {
         let requant = self.rq();
         self.layers.push(Op::Matmul { m: 1, n: out, k: inp, dtype: self.dtype, requant });
-    }
-
-    /// Deprecated im2col shim: flatten a conv to its GEMM view up front
-    /// (m = output spatial, k = cin*kh*kw, n = cout), hiding the lowering
-    /// choice from the tuner. Kept only for comparison benches and the
-    /// `*-im2col` zoo variants — new layers go through [`B::conv2d`],
-    /// which leaves the im2col-vs-direct decision to the space program.
-    fn conv(&mut self, spatial_out: usize, cin: usize, ksize: usize, cout: usize) {
-        let requant = self.rq();
-        self.layers.push(Op::Matmul {
-            m: spatial_out,
-            n: cout,
-            k: cin * ksize * ksize,
-            dtype: self.dtype,
-            requant,
-        });
     }
 
     /// First-class k×k Conv2d producing an `out × out` map at `stride`
@@ -111,7 +112,12 @@ impl B {
     }
 
     fn build(self, name: &str, trials: usize) -> Model {
-        Model { name: name.to_string(), layers: self.layers, default_trials: trials }
+        Model {
+            name: name.to_string(),
+            layers: self.layers,
+            default_trials: trials,
+            force_im2col: false,
+        }
     }
 }
 
@@ -167,30 +173,19 @@ pub fn image_classification(dtype: DType) -> Model {
     b.build("image-classification", 200)
 }
 
-/// The pre-migration im2col view of ResNet8: every conv flattened to its
-/// GEMM up front via the deprecated [`B::conv`] shim. Kept as a zoo
-/// variant so the im2col-vs-first-class ablation is one bench away (and
-/// as the compatibility anchor: old databases key these layers as
-/// `matmul-…` tasks).
+/// The im2col ablation view of ResNet8: the same first-class `Conv2d`
+/// layers as [`image_classification`], but with every conv's tuning
+/// space pinned to the im2col sub-space (the `strategy` decision is
+/// dropped from the space program; `space::lower` defaults the absent
+/// decision to im2col). This replaces the deleted layer-level GEMM
+/// flattening shim: same ablation, but the pin is a property of the
+/// *search space*, so task keys stay `conv2d-…` and schedules remain
+/// comparable against the unpinned variant.
 pub fn image_classification_im2col(dtype: DType) -> Model {
-    let mut b = B::new(dtype);
-    b.conv(1024, 3, 3, 16); // 32x32
-    // stack 1 (16ch, 32x32)
-    b.conv(1024, 16, 3, 16);
-    b.conv(1024, 16, 3, 16);
-    b.add(1024 * 16);
-    // stack 2 (32ch, 16x16)
-    b.conv(256, 16, 3, 32);
-    b.conv(256, 32, 3, 32);
-    b.conv(256, 16, 1, 32); // 1x1 shortcut
-    b.add(256 * 32);
-    // stack 3 (64ch, 8x8)
-    b.conv(64, 32, 3, 64);
-    b.conv(64, 64, 3, 64);
-    b.conv(64, 32, 1, 64);
-    b.add(64 * 64);
-    b.fc(10, 64);
-    b.build("image-classification-im2col", 200)
+    let mut m = image_classification(dtype);
+    m.name = "image-classification-im2col".to_string();
+    m.force_im2col = true;
+    m
 }
 
 /// MLPerf-Tiny visual wake words: MobileNetV1 alpha=0.25 (96x96x3).
@@ -414,9 +409,17 @@ mod tests {
                 "{name} must contain Conv2d layers"
             );
         }
-        // The im2col variant keeps the old flattened view.
-        let shim = by_name("image-classification-im2col", DType::I8).unwrap();
-        assert!(shim.layers.iter().all(|l| !matches!(l, Op::Conv2d { .. })));
+        // The im2col ablation variant carries the SAME first-class convs —
+        // only the tuning space is pinned (the flattening shim is gone).
+        let pinned = by_name("image-classification-im2col", DType::I8).unwrap();
+        assert!(pinned.force_im2col);
+        assert!(pinned.layers.iter().any(|l| matches!(l, Op::Conv2d { .. })));
+        assert_eq!(pinned.layers, image_classification(DType::I8).layers);
+        assert!(pinned.net().cmds.iter().any(|c| c.pin_im2col));
+        // No other zoo model pins.
+        for name in BPI_MODELS {
+            assert!(!by_name(name, DType::I8).unwrap().force_im2col, "{name}");
+        }
     }
 
     /// Same math, new IR: the im2col→Conv2d migration must leave every
@@ -446,11 +449,27 @@ mod tests {
                 .sum();
             assert_eq!(m.total_macs(), im2col_view, "{name}");
         }
-        // And the kept shim is the literal pre-migration model.
+        // And the im2col ablation variant is MAC-identical by construction.
         assert_eq!(
             image_classification(DType::I8).total_macs(),
             image_classification_im2col(DType::I8).total_macs()
         );
+    }
+
+    /// The arena planner must beat per-layer allocation on every model —
+    /// the headline deployment metric `rvv-tune models` prints.
+    #[test]
+    fn arena_footprint_beats_per_layer_allocation() {
+        for name in BPI_MODELS {
+            let m = by_name(name, DType::I8).unwrap();
+            let req = m.total_memory_req();
+            assert!(req > 0, "{name}");
+            assert!(
+                req < m.net().sum_buffer_bytes(),
+                "{name}: arena {req} >= naive {}",
+                m.net().sum_buffer_bytes()
+            );
+        }
     }
 
     #[test]

@@ -268,3 +268,78 @@ fn all_backends_bit_identical_on_all_op_kinds() {
          (direct {conv_direct}, im2col {conv_im2col})"
     );
 }
+
+/// Fused-epilogue corpus: random int8+requant Matmul/Conv2d producers
+/// with a fused eltwise consumer, `Y = clamp(Y + requant(ACC) * RES)`,
+/// checked bit-identical across every backend — including ours under
+/// random traces with the FUSE decision forced on, so both the in-nest
+/// and the staged (TMP) fusion paths get exercised.
+#[test]
+fn fused_epilogues_bit_identical_across_backends() {
+    use rvv_tune::tir::EltwiseEpilogue;
+    let mut rng = Pcg::seeded(0xF0_5ED);
+    let mut ours_checked = 0usize;
+    for case_idx in 0..24 {
+        // Kinds 0 (matmul) and 3 (conv2d) always carry requant.
+        let c = make_case(&mut rng, if case_idx % 2 == 0 { 0 } else { 3 });
+        let out_len = c.bias.len();
+        let epi = EltwiseEpilogue { len: out_len };
+        let res = rand_i8s(&mut rng, out_len);
+        let y0 = rand_i8s(&mut rng, out_len);
+        let rq = match &c.op {
+            Op::Matmul { requant: Some(rq), .. } | Op::Conv2d { requant: Some(rq), .. } => *rq,
+            _ => unreachable!("fused corpus only emits requant producers"),
+        };
+        let want: Vec<i8> = reference_acc(&c)
+            .iter()
+            .zip(&res)
+            .zip(&y0)
+            .map(|((&acc, &r), &y)| {
+                let q = requant_i64(acc, rq.mult, rq.shift, rq.zp) as i8;
+                (y as i64 + q as i64 * r as i64).clamp(-128, 127) as i8
+            })
+            .collect();
+
+        let vlen = *rng.choose(&[256u32, 512, 1024]);
+        let soc = SocConfig::saturn(vlen);
+        let check = |program: &rvv_tune::sim::VProgram, label: &str| {
+            let report = rvv_tune::analysis::verify(program, &soc);
+            assert!(report.ok(), "{label}: verifier rejected fused {}:\n{report}", c.op.key());
+            let mut bufs = BufStore::functional(program);
+            bufs.set_i8(0, &c.a);
+            bufs.set_i8(1, &c.b);
+            bufs.set_i32(2, &c.bias);
+            bufs.set_i8(3, &res);
+            bufs.set_i8(4, &y0);
+            execute(&soc, program, &mut bufs, Mode::Functional, true);
+            assert_eq!(bufs.get_i8(4), &want[..], "{label}: fused Y mismatch for {}", c.op.key());
+        };
+
+        for sc in [
+            Scenario::ScalarOs,
+            Scenario::AutovecGcc,
+            Scenario::AutovecLlvm,
+            Scenario::MuRiscvNn,
+            Scenario::PackedSimd,
+        ] {
+            let program = codegen::generate_fused(&c.op, &epi, &sc, vlen)
+                .unwrap_or_else(|| panic!("{} must fuse {}", sc.name(), c.op.key()));
+            check(&program, sc.name());
+        }
+
+        let registry = Registry::build(vlen);
+        let space = program_for(&c.op, &registry);
+        if !space.is_tunable() {
+            continue;
+        }
+        for _ in 0..3 {
+            let trace = space.sample(&mut rng);
+            let sched = space::lower(&trace).expect("sampled trace lowers");
+            let program = codegen::generate_fused(&c.op, &epi, &Scenario::Ours(sched), vlen)
+                .expect("ours fuses every tunable int8+requant producer");
+            check(&program, "ours");
+            ours_checked += 1;
+        }
+    }
+    assert!(ours_checked > 10, "too few fused tuned-backend checks: {ours_checked}");
+}

@@ -103,6 +103,7 @@ fn simulator_int8_matches_jax_oracle_via_pjrt() {
         unroll: 2,
         transpose: false,
         ks: 1,
+        fuse: false,
     });
     for scenario in [
         Scenario::ScalarOs,
@@ -154,6 +155,7 @@ fn simulator_f32_matches_jax_oracle_via_pjrt() {
         unroll: 1,
         transpose: false,
         ks: 1,
+        fuse: false,
     });
     let p = codegen::generate(&op, &Scenario::Ours(sched), 256).unwrap();
     let mut bufs = BufStore::functional(&p);

@@ -1,0 +1,253 @@
+//! Integration: the NetProgram graph IR end-to-end — arena-planner
+//! safety on random networks, functional bit-identity of fused versus
+//! unfused network execution, and the old-vs-new network tuning APIs
+//! producing identical databases with the per-layer fuse decision
+//! recorded in every winning trace.
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::coordinator::{ServiceOptions, Target, TuneService};
+use rvv_tune::net::{NetProgram, ARENA_ALIGN};
+use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+use rvv_tune::tir::{DType, Op};
+use rvv_tune::tune::space::ids;
+use rvv_tune::util::Pcg;
+use rvv_tune::workloads::models;
+
+fn rand_i8s(rng: &mut Pcg, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range_inclusive(-128, 127) as i8).collect()
+}
+
+/// Random layer chains (with deliberate fusable producer→eltwise pairs):
+/// the arena plan must be aligned, contained, and free of overlaps
+/// between co-live slots — fused and unfused.
+#[test]
+fn arena_plan_is_sound_on_random_networks() {
+    let mut rng = Pcg::seeded(0xA4E4A);
+    for _ in 0..40 {
+        let mut layers: Vec<Op> = Vec::new();
+        let mut out_len = 0usize;
+        for _ in 0..rng.range_inclusive(2, 6) {
+            match rng.below(3) {
+                0 => {
+                    let m = rng.range_inclusive(1, 8) as usize;
+                    let n = rng.range_inclusive(1, 8) as usize;
+                    let k = rng.range_inclusive(4, 24) as usize;
+                    let rq = Some(rvv_tune::tir::Requant::default_for_tests());
+                    layers.push(Op::Matmul { m, n, k, dtype: DType::I8, requant: rq });
+                    out_len = m * n;
+                }
+                1 => {
+                    let conv = Op::square_conv2d(
+                        rng.range_inclusive(2, 5) as usize,
+                        rng.range_inclusive(1, 4) as usize,
+                        rng.range_inclusive(1, 4) as usize,
+                        rng.range_inclusive(1, 3) as usize,
+                        1,
+                        DType::I8,
+                    );
+                    let d = conv.conv_dims().unwrap();
+                    out_len = d.pixels() * d.cout;
+                    layers.push(conv);
+                }
+                _ => {
+                    // Half the time a fusable match, half a mismatch.
+                    let len = if out_len > 0 && rng.chance(0.5) { out_len } else { 17 };
+                    layers.push(Op::Eltwise { len, dtype: DType::I8 });
+                    out_len = len;
+                }
+            }
+        }
+        for fuse in [false, true] {
+            let mut net = NetProgram::lower(&layers);
+            if fuse {
+                net.fuse_epilogues();
+            }
+            let plan = net.plan_arena();
+            for (ai, a) in plan.slots.iter().enumerate() {
+                assert_eq!(a.offset % ARENA_ALIGN, 0, "misaligned slot");
+                assert!(a.size >= net.vars[a.var].bytes(), "undersized slot");
+                assert!(a.offset + a.size <= plan.total, "slot escapes arena");
+                for b in &plan.slots[ai + 1..] {
+                    let colive = a.first <= b.last && b.first <= a.last;
+                    let disjoint =
+                        a.offset + a.size <= b.offset || b.offset + b.size <= a.offset;
+                    assert!(
+                        !colive || disjoint,
+                        "co-live slots {} and {} overlap (fuse={fuse})",
+                        net.vars[a.var].name,
+                        net.vars[b.var].name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Execute every command of `net` functionally, threading values
+/// through the variable table exactly as the arena would at runtime.
+fn run_net(
+    net: &NetProgram,
+    scenario: &Scenario,
+    soc: &SocConfig,
+    i8s: &mut [Vec<i8>],
+    i32s: &mut [Vec<i32>],
+) {
+    for cmd in &net.cmds {
+        let p = match &cmd.epilogue {
+            Some(epi) => codegen::generate_fused(&cmd.op, epi, scenario, soc.vlen)
+                .expect("fused cmd generates"),
+            None => codegen::generate(&cmd.op, scenario, soc.vlen).expect("cmd generates"),
+        };
+        let mut bufs = BufStore::functional(&p);
+        match (&cmd.op, &cmd.epilogue) {
+            (Op::Eltwise { .. }, None) => {
+                bufs.set_i8(0, &i8s[cmd.a]);
+                bufs.set_i8(1, &i8s[cmd.b]);
+                bufs.set_i8(2, &i8s[cmd.acc]);
+                execute(soc, &p, &mut bufs, Mode::Functional, true);
+                i8s[cmd.acc] = bufs.get_i8(2).to_vec();
+            }
+            (_, Some(_)) => {
+                bufs.set_i8(0, &i8s[cmd.a]);
+                bufs.set_i8(1, &i8s[cmd.b]);
+                bufs.set_i32(2, &i32s[cmd.acc]);
+                bufs.set_i8(3, &i8s[cmd.res.unwrap()]);
+                bufs.set_i8(4, &i8s[cmd.y.unwrap()]);
+                execute(soc, &p, &mut bufs, Mode::Functional, true);
+                i8s[cmd.y.unwrap()] = bufs.get_i8(4).to_vec();
+            }
+            (_, None) => {
+                bufs.set_i8(0, &i8s[cmd.a]);
+                bufs.set_i8(1, &i8s[cmd.b]);
+                bufs.set_i32(2, &i32s[cmd.acc]);
+                execute(soc, &p, &mut bufs, Mode::Functional, true);
+                match cmd.out {
+                    Some(o) => i8s[o] = bufs.get_i8(3).to_vec(),
+                    None => i32s[cmd.acc] = bufs.get_i32(2).to_vec(),
+                }
+            }
+        }
+    }
+}
+
+/// The fusion-pass correctness property: running the fused command
+/// stream over the same inputs produces bit-identical eltwise outputs
+/// to the unfused stream — under every backend that emits both forms.
+#[test]
+fn fused_network_execution_is_bit_identical_to_unfused() {
+    // matmul -> eltwise -> conv -> eltwise: both pairs fuse.
+    let rq = Some(rvv_tune::tir::Requant::default_for_tests());
+    let mm = Op::Matmul { m: 4, n: 8, k: 8, dtype: DType::I8, requant: rq };
+    // Conv input 4*8*1 = 32 chains off the fused matmul's eltwise output.
+    let conv = Op::Conv2d {
+        h: 4,
+        w: 8,
+        cin: 1,
+        cout: 4,
+        kh: 2,
+        kw: 2,
+        stride: 1,
+        dtype: DType::I8,
+        requant: rq,
+    };
+    let d = conv.conv_dims().unwrap();
+    let conv_out = d.pixels() * d.cout;
+    let chain = [
+        mm,
+        Op::Eltwise { len: 32, dtype: DType::I8 },
+        conv,
+        Op::Eltwise { len: conv_out, dtype: DType::I8 },
+    ];
+
+    let unfused = NetProgram::lower(&chain);
+    let mut fused = unfused.clone();
+    assert_eq!(fused.fuse_epilogues(), 2);
+    assert_eq!(fused.cmds.len(), 2);
+
+    let soc = SocConfig::saturn(256);
+    for scenario in [Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::MuRiscvNn] {
+        // Identical initial variable values for both runs.
+        let mut rng = Pcg::seeded(0xB17);
+        let mut i8s: Vec<Vec<i8>> = vec![Vec::new(); unfused.vars.len()];
+        let mut i32s: Vec<Vec<i32>> = vec![Vec::new(); unfused.vars.len()];
+        for (v, var) in unfused.vars.iter().enumerate() {
+            match var.dtype {
+                DType::I32 => {
+                    i32s[v] =
+                        (0..var.len).map(|_| rng.range_inclusive(-2000, 2000) as i32).collect()
+                }
+                _ => i8s[v] = rand_i8s(&mut rng, var.len),
+            }
+        }
+        let (mut i8s_f, mut i32s_f) = (i8s.clone(), i32s.clone());
+
+        run_net(&unfused, &scenario, &soc, &mut i8s, &mut i32s);
+        run_net(&fused, &scenario, &soc, &mut i8s_f, &mut i32s_f);
+
+        // Every eltwise in-out variable must match bit for bit.
+        for cmd in &unfused.cmds {
+            if matches!(cmd.op, Op::Eltwise { .. }) {
+                assert_eq!(
+                    i8s[cmd.acc], i8s_f[cmd.acc],
+                    "{}: fused eltwise output diverges from unfused",
+                    scenario.name()
+                );
+            }
+        }
+    }
+}
+
+/// The network tuning refactor must be invisible to the database: the
+/// legacy layer-list entry point and the NetProgram entry point produce
+/// identical records at the same seed, the report carries the fused
+/// arena footprint, and every eligible layer's winning trace records
+/// the fuse decision.
+#[test]
+fn tune_net_matches_tune_network_and_records_fuse_decisions() {
+    let model = models::by_name("keyword-spotting", DType::I8).unwrap();
+    let opts = ServiceOptions { use_mlp: false, workers: 2, ..Default::default() };
+
+    let legacy = TuneService::new(Target::new(SocConfig::saturn(256)), opts.clone());
+    let legacy_report = legacy.tune_network(&model.layers, 48, 4);
+
+    let through_net = TuneService::new(Target::new(SocConfig::saturn(256)), opts);
+    let net_report = through_net.tune_net(&model.net(), 48, 4);
+
+    // Identical databases at the same seed: traces AND cycles.
+    let canonical = |s: &TuneService| {
+        let mut v: Vec<(String, usize, u64, f64)> = s
+            .db()
+            .snapshot()
+            .records()
+            .iter()
+            .map(|r| (r.op_key.clone(), r.trial, r.trace.fnv_hash(), r.cycles))
+            .collect();
+        v.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        v
+    };
+    assert_eq!(canonical(&legacy), canonical(&through_net));
+    assert_eq!(legacy_report.total_memory_req, net_report.total_memory_req);
+
+    // The reported footprint is the fused liveness-packed plan: positive
+    // and strictly below what per-layer allocation would need.
+    assert!(net_report.total_memory_req > 0);
+    assert!(net_report.total_memory_req < model.net().sum_buffer_bytes());
+
+    // Per-layer fuse decision in the winning traces of every eligible op.
+    for (key, outcome) in &net_report.outcomes {
+        let op = model.layers.iter().find(|l| &l.key() == key).unwrap();
+        let eligible = matches!(
+            op,
+            Op::Matmul { dtype: DType::I8, requant: Some(_), .. }
+                | Op::Conv2d { dtype: DType::I8, requant: Some(_), .. }
+        );
+        if !eligible || outcome.is_none() {
+            continue;
+        }
+        let best = through_net.db().best(key, "saturn-256").expect("tuned op has a best");
+        assert!(
+            best.trace.value_of(&ids::FUSE).is_some(),
+            "{key}: winning trace carries no fuse decision"
+        );
+    }
+}
