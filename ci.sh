@@ -17,6 +17,13 @@ echo "== quick tier: differential codegen harness =="
 # test binary is compiled once either way.
 cargo test -q --test differential_codegen
 
+echo "== quick tier: simulator tier bit-identity =="
+# The threaded-code tier (and the compiled tier, and the transcript
+# record/replay paths) must be bit-identical to the reference interpreter
+# — cycles, CacheStats, functional outputs — across the seeded
+# differential corpus on all four paper SoCs. See EXPERIMENTS.md §Perf.
+cargo test -q --test sim_tier_bit_identity
+
 echo "== quick tier: static verifier corpus sweep =="
 # The seeded random-op corpus (all four op kinds, every backend, random
 # sampled schedules) must verify error-free on every paper SoC config,
@@ -130,7 +137,11 @@ cargo run --release --quiet -- tune --workload matmul:64:int8 --soc saturn-256 \
 cargo run --release --quiet -- trace --workload matmul:64:int8 --soc saturn-256 \
   --db "$smoke_dir/crash.json"
 
-echo "== perf smoke: BENCH_QUICK=1 perf_hotpath =="
+echo "== perf smoke: BENCH_QUICK=1 perf_hotpath (threaded-tier throughput gate) =="
+# Besides recording candidates_per_sec per simulator tier, the quick
+# bench asserts the threaded tier is measurably faster than the
+# interpreter (>1.2x on one k=16 measure round) and that all tiers agree
+# bit for bit — so a tier performance or identity regression fails CI.
 BENCH_QUICK=1 cargo bench --bench perf_hotpath
 
 echo "CI OK — perf record: $(pwd)/BENCH_perf_hotpath.json"

@@ -14,7 +14,10 @@
 use rvv_tune::codegen::{self, Scenario};
 use rvv_tune::coordinator::MeasurePool;
 use rvv_tune::intrinsics::Registry;
-use rvv_tune::sim::{execute, BufStore, Mode, SocConfig};
+use rvv_tune::sim::{
+    execute, execute_threaded, execute_tiered, threaded, BufStore, ExecLimits, Mode, SimTier,
+    SocConfig, ThreadedProgram, TranscriptCache,
+};
 use rvv_tune::tir::DType;
 use rvv_tune::tune::{
     self, Database, HeuristicCostModel, Measurer, SearchConfig, SerialMeasurer,
@@ -110,6 +113,104 @@ fn main() {
     );
     report.add(&r_pool);
     report.metric("measure_round_pool_speedup", r_serial.mean_ns / r_pool.mean_ns);
+
+    section("L3: simulator tiers (candidates/s over the same k=16 round)");
+    // Sanity first: every tier must agree bit for bit on this round.
+    {
+        let mut results = SimTier::ALL.iter().map(|&tier| {
+            let mut bufs = BufStore::timing(&programs[0]);
+            execute_tiered(
+                &soc,
+                &programs[0],
+                &mut bufs,
+                Mode::Timing,
+                true,
+                ExecLimits::UNBOUNDED,
+                tier,
+                None,
+            )
+            .unwrap()
+        });
+        let first = results.next().unwrap();
+        for r in results {
+            assert_eq!(first.cycles, r.cycles, "tiers must be bit-identical");
+            assert_eq!(first.cache, r.cache, "tiers must be bit-identical");
+        }
+    }
+    let mut tier_ns = Vec::new();
+    for tier in SimTier::ALL {
+        let r = bench(&format!("tier {:<8} 16 candidates 128^3", tier.name()), quick_opts(), || {
+            for p in &programs {
+                let mut bufs = BufStore::timing(p);
+                black_box(
+                    execute_tiered(
+                        &soc,
+                        p,
+                        &mut bufs,
+                        Mode::Timing,
+                        true,
+                        ExecLimits::UNBOUNDED,
+                        tier,
+                        None,
+                    )
+                    .unwrap()
+                    .cycles,
+                );
+            }
+        });
+        report.metric(
+            format!("candidates_per_sec_{}", tier.name()),
+            programs.len() as f64 / (r.mean_ns / 1e9),
+        );
+        tier_ns.push(r.mean_ns);
+        report.add(&r);
+    }
+    // The tune_op shape: lower once on the prepare path, execute the flat
+    // stream per measurement — this is the per-tier headline number.
+    let lowered: Vec<ThreadedProgram> =
+        programs.iter().map(|p| threaded::compile(p, &soc)).collect();
+    let r_prep = bench("tier threaded (pre-lowered, as tune_op measures)", quick_opts(), || {
+        for tp in &lowered {
+            black_box(
+                execute_threaded(&soc, tp, true, ExecLimits::UNBOUNDED, None).unwrap().cycles,
+            );
+        }
+    });
+    report.metric(
+        "candidates_per_sec_threaded_prepared",
+        programs.len() as f64 / (r_prep.mean_ns / 1e9),
+    );
+    report.add(&r_prep);
+    // Round-scoped transcript sharing (the MeasurePool batch path):
+    // candidates with identical address streams replay one probe walk.
+    let r_memo = bench("tier threaded + shared transcript cache", quick_opts(), || {
+        let transcripts = TranscriptCache::new();
+        for tp in &lowered {
+            black_box(
+                execute_threaded(&soc, tp, true, ExecLimits::UNBOUNDED, Some(&transcripts))
+                    .unwrap()
+                    .cycles,
+            );
+        }
+    });
+    report.metric(
+        "candidates_per_sec_threaded_memoized",
+        programs.len() as f64 / (r_memo.mean_ns / 1e9),
+    );
+    report.add(&r_memo);
+    report.metric("tier_speedup_threaded_vs_interp", tier_ns[0] / r_prep.mean_ns);
+    report.metric("tier_speedup_threaded_vs_compiled", tier_ns[1] / r_prep.mean_ns);
+    if quick_mode() {
+        // CI throughput smoke (ci.sh runs BENCH_QUICK=1): the threaded
+        // tier must be measurably faster than the interpreter.
+        assert!(
+            tier_ns[0] / r_prep.mean_ns > 1.2,
+            "threaded tier is not measurably faster than the interpreter \
+             ({:.0} ns vs {:.0} ns per round)",
+            r_prep.mean_ns,
+            tier_ns[0],
+        );
+    }
 
     section("L2/L1: PJRT cost model (requires `make artifacts`)");
     match rvv_tune::tune::MlpCostModel::from_artifacts(7) {

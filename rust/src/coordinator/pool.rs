@@ -30,12 +30,12 @@ use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::sim::{ExecLimits, ExecResult, SocConfig, VProgram};
+use crate::sim::{ExecLimits, ExecResult, SocConfig, TranscriptCache, VProgram};
 use crate::tir::Op;
-use crate::tune::search::measure_one_checked;
+use crate::tune::search::measure_spec_checked;
 use crate::tune::{
-    FaultInjector, MeasureFault, MeasureOutcome, MeasureTicket, Measurer, PrepareOutcome,
-    Prepared, PrepareTicket, Trace,
+    FaultInjector, MeasureFault, MeasureOutcome, MeasureSpec, MeasureTicket, Measurer,
+    PrepareOutcome, Prepared, PrepareTicket, Trace,
 };
 
 /// Context shared by every prepare job of one batch.
@@ -56,12 +56,15 @@ enum Job {
     /// Timing-mode measure one emitted program. `seq` is the pool-global
     /// job sequence number, assigned by the leader at submission time so
     /// fault injection is deterministic no matter which worker runs the
-    /// job.
+    /// job. `transcripts` is the batch-scoped cache-transcript memo:
+    /// candidates with identical address streams replay one recorded
+    /// probe walk (bit-identical by the threaded tier's invariant).
     Measure {
         idx: usize,
         seq: u64,
-        program: Arc<VProgram>,
+        spec: MeasureSpec,
         soc: Arc<SocConfig>,
+        transcripts: Arc<TranscriptCache>,
         out: Arc<BatchSink<MeasureOutcome>>,
     },
 }
@@ -77,7 +80,7 @@ impl Job {
             Job::Prepare { idx, trace, ctx, out } => {
                 out.put(idx, Prepared::try_build(&ctx.op, &trace, &ctx.soc));
             }
-            Job::Measure { idx, seq, program, soc, out } => {
+            Job::Measure { idx, seq, spec, soc, transcripts, out } => {
                 let outcome = match faults.measure_fault(seq) {
                     Some(MeasureFault::Panic) => MeasureOutcome::Failed {
                         reason: format!("injected fault: worker panic at measure job {seq}"),
@@ -85,9 +88,19 @@ impl Job {
                     Some(MeasureFault::SimTimeout) => {
                         // A one-step budget models a wedged/runaway
                         // simulation deterministically.
-                        measure_one_checked(&soc, &program, &ExecLimits { max_steps: 1 })
+                        measure_spec_checked(
+                            &soc,
+                            &spec,
+                            &ExecLimits { max_steps: 1 },
+                            Some(&transcripts),
+                        )
                     }
-                    None => measure_one_checked(&soc, &program, &ExecLimits::DEFAULT_MEASURE),
+                    None => measure_spec_checked(
+                        &soc,
+                        &spec,
+                        &ExecLimits::DEFAULT_MEASURE,
+                        Some(&transcripts),
+                    ),
                 };
                 out.put(idx, outcome);
             }
@@ -250,6 +263,35 @@ impl MeasurePool {
         drop(st);
         self.shared.ready.notify_all();
     }
+
+    /// Shared submission path for both measurement APIs: one batch-scoped
+    /// [`TranscriptCache`], pool-global `seq` assignment at submission
+    /// time (fault-injection determinism), indexed rendezvous.
+    fn submit_measure(&self, soc: &SocConfig, specs: Vec<MeasureSpec>) -> MeasureTicket {
+        let sink = BatchSink::new(specs.len());
+        let soc = Arc::new(soc.clone());
+        let transcripts = Arc::new(TranscriptCache::new());
+        let base = self.shared.seq.fetch_add(specs.len() as u64, Ordering::Relaxed);
+        let jobs = specs
+            .into_iter()
+            .enumerate()
+            .map(|(idx, spec)| Job::Measure {
+                idx,
+                seq: base + idx as u64,
+                spec,
+                soc: Arc::clone(&soc),
+                transcripts: Arc::clone(&transcripts),
+                out: Arc::clone(&sink),
+            })
+            .collect();
+        self.submit(jobs);
+        let shared = Arc::clone(&self.shared);
+        MeasureTicket::Pending(Box::new(move || {
+            wait_collect(&shared, &sink, || MeasureOutcome::Failed {
+                reason: "batch slot lost: a worker died without reporting".to_string(),
+            })
+        }))
+    }
 }
 
 impl Drop for MeasurePool {
@@ -303,27 +345,11 @@ impl Measurer for MeasurePool {
     }
 
     fn begin_measure(&self, soc: &SocConfig, programs: Vec<Arc<VProgram>>) -> MeasureTicket {
-        let sink = BatchSink::new(programs.len());
-        let soc = Arc::new(soc.clone());
-        let base = self.shared.seq.fetch_add(programs.len() as u64, Ordering::Relaxed);
-        let jobs = programs
-            .into_iter()
-            .enumerate()
-            .map(|(idx, program)| Job::Measure {
-                idx,
-                seq: base + idx as u64,
-                program,
-                soc: Arc::clone(&soc),
-                out: Arc::clone(&sink),
-            })
-            .collect();
-        self.submit(jobs);
-        let shared = Arc::clone(&self.shared);
-        MeasureTicket::Pending(Box::new(move || {
-            wait_collect(&shared, &sink, || MeasureOutcome::Failed {
-                reason: "batch slot lost: a worker died without reporting".to_string(),
-            })
-        }))
+        self.submit_measure(soc, programs.into_iter().map(MeasureSpec::bare).collect())
+    }
+
+    fn begin_measure_specs(&self, soc: &SocConfig, specs: Vec<MeasureSpec>) -> MeasureTicket {
+        self.submit_measure(soc, specs)
     }
 }
 

@@ -24,7 +24,9 @@ use std::sync::{Arc, Mutex};
 use crate::codegen::{self, CodeSizeModel, Scenario};
 use crate::intrinsics::Registry;
 use crate::net::NetProgram;
-use crate::sim::{execute, BufStore, ExecResult, Mode, SocConfig, TraceCounts};
+use crate::sim::{
+    execute, execute_tiered, BufStore, ExecResult, Mode, SimTier, SocConfig, TraceCounts,
+};
 use crate::tir::Op;
 use crate::tune::{
     extract_tasks, journal_path, tune_op, Checkpoint, CostModel, Database, FaultInjector,
@@ -776,6 +778,18 @@ impl TuneService {
         net: &NetProgram,
         policy: &dyn ScenarioPolicy,
     ) -> Option<NetworkMeasurement> {
+        self.measure_net_tiered(net, policy, SimTier::default())
+    }
+
+    /// [`TuneService::measure_net`] on an explicit simulator tier
+    /// (`rvv-tune simulate --tier ...`). All tiers are bit-identical;
+    /// the flag exists so a tier regression is one-command reproducible.
+    pub fn measure_net_tiered(
+        &self,
+        net: &NetProgram,
+        policy: &dyn ScenarioPolicy,
+        tier: SimTier,
+    ) -> Option<NetworkMeasurement> {
         let mut cycles = 0.0;
         let mut trace = TraceCounts::default();
         let mut size = CodeSizeModel::new();
@@ -788,7 +802,17 @@ impl TuneService {
                 None => codegen::generate(&cmd.op, &scenario, self.target.soc.vlen)?,
             };
             let mut bufs = BufStore::timing(&program);
-            let r = execute(&self.target.soc, &program, &mut bufs, Mode::Timing, true);
+            let r = execute_tiered(
+                &self.target.soc,
+                &program,
+                &mut bufs,
+                Mode::Timing,
+                true,
+                crate::sim::ExecLimits::UNBOUNDED,
+                tier,
+                None,
+            )
+            .expect("unbounded simulation cannot blow the step budget");
             cycles += r.cycles;
             trace.merge(&r.trace);
             size.add_layer(&cmd.op, &scenario, program.code_size_bytes());

@@ -10,6 +10,7 @@
 //! rvv-tune verify   --db db.json --workload matmul:64:int8 [--soc saturn-256]
 //! rvv-tune simulate --workload matmul:64:int8 --scenario muriscv-nn
 //!                   [--soc saturn-1024] [--trace] [--fuse]
+//!                   [--tier interp|compiled|threaded]
 //! rvv-tune models   [--dtype int8]
 //! rvv-tune info
 //! ```
@@ -91,6 +92,8 @@ USAGE: rvv-tune <subcommand> [options]
   simulate  measure one scenario: --scenario non-tuned|non-tuned-O3|non-tuned-v|muriscv-nn|packed-simd
             --fuse runs the NetProgram epilogue-fusion pass first (fused
             producer+eltwise kernels; reports the planned arena footprint)
+            --tier interp|compiled|threaded picks the simulator tier
+            (default threaded; all tiers are bit-identical)
   models    list the network zoo (incl. per-model planned arena bytes)
   info      artifact/runtime status
 
@@ -576,15 +579,21 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 2;
         }
     };
+    let tier_name = args.get_or("tier", "threaded");
+    let Some(tier) = crate::sim::SimTier::parse(tier_name) else {
+        eprintln!("unknown tier `{tier_name}` (expected interp|compiled|threaded)");
+        return 2;
+    };
     let mut net = workload_net(spec, &layers);
     let fused = if args.flag("fuse") { net.fuse_epilogues() } else { 0 };
-    let Some(r) = service.measure_net(&net, &Fixed(scenario)) else {
+    let Some(r) = service.measure_net_tiered(&net, &Fixed(scenario), tier) else {
         eprintln!("scenario {sc_name} does not support this workload (float + muriscv-nn?)");
         return 1;
     };
     println!(
-        "{name} under {sc_name} on {}: {} cycles = {} us @ {} MHz, code {} B, arena {} B{}",
+        "{name} under {sc_name} on {} [{} tier]: {} cycles = {} us @ {} MHz, code {} B, arena {} B{}",
         service.soc().name,
+        tier.name(),
         fnum(r.cycles),
         fnum(service.soc().cycles_to_us(r.cycles)),
         service.soc().clock_mhz,

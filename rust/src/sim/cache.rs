@@ -343,11 +343,41 @@ mod tests {
         assert_eq!(c.stats.accesses, 0);
     }
 
+    /// The historical double-count bug: a line-aligned `addr` with
+    /// `bytes == 0` must not probe the first line at all (the naive
+    /// `first..=last` walk would touch it once). Pin it on an aligned
+    /// and an unaligned address, and pin that the cache state is
+    /// untouched (a following real access still misses).
+    #[test]
+    fn zero_byte_range_at_line_boundary_is_free_and_stateless() {
+        let mut c = Cache::new(small_params());
+        let line = c.params.line_bytes;
+        assert_eq!(c.access_range(line * 2, 0), 0.0); // line-aligned
+        assert_eq!(c.access_range(line * 2 + 1, 0), 0.0); // unaligned
+        assert_eq!(c.stats, CacheStats::default());
+        assert!(c.access_range(line * 2, 1) > 0.0, "line must still be cold");
+    }
+
     #[test]
     fn probe_run_empty_is_free() {
         let mut c = Cache::new(small_params());
         assert_eq!(c.probe_run(128, 1, 0), 0.0);
         assert_eq!(c.stats.accesses, 0);
+    }
+
+    /// `probe_run` len-0 edges: line-aligned start, zero stride, and
+    /// negative stride are all free and leave the cache untouched.
+    #[test]
+    fn probe_run_empty_edge_cases_are_free() {
+        let mut c = Cache::new(small_params());
+        let line = c.params.line_bytes;
+        assert_eq!(c.probe_run(line * 3, 1, 0), 0.0);
+        assert_eq!(c.probe_run(line * 3, 0, 0), 0.0);
+        assert_eq!(c.probe_run(line * 3, -(line as i64), 0), 0.0);
+        assert_eq!(c.stats, CacheStats::default());
+        // warm_l2 with zero bytes is also a no-op, even line-aligned.
+        c.warm_l2(line * 3, 0);
+        assert!(c.probe_run(line * 3, 1, 1) > 0.0, "line must still be cold");
     }
 
     #[test]

@@ -24,16 +24,16 @@ use super::vprogram::{AddrExpr, BufId, Inst, LoopNode, Node, VProgram};
 
 /// A memory-touching stream of a compiled node.
 #[derive(Clone, Debug)]
-struct Stream {
-    buf: BufId,
-    addr: AddrExpr,
+pub(crate) struct Stream {
+    pub(crate) buf: BufId,
+    pub(crate) addr: AddrExpr,
     /// Element stride; 1 = unit (line-level probing).
-    stride: i64,
-    len: u32,
+    pub(crate) stride: i64,
+    pub(crate) len: u32,
 }
 
 #[derive(Clone, Debug)]
-enum CNode {
+pub(crate) enum CNode {
     /// A fused run of data-independent instructions.
     Static { cycles: f64, trace: [u64; 8] },
     /// One vector memory op: static cost precomputed, cache evaluated live.
@@ -54,7 +54,7 @@ enum CNode {
 /// A compiled sequence.
 #[derive(Clone, Debug, Default)]
 pub struct CBlock {
-    nodes: Vec<CNode>,
+    pub(crate) nodes: Vec<CNode>,
 }
 
 /// Compile-time machine state.
@@ -70,9 +70,9 @@ struct Compiler<'a> {
 
 /// Compiled program + element sizes for address scaling.
 pub struct CompiledProgram {
-    root: CBlock,
-    esize: Vec<u32>,
-    n_vars: usize,
+    pub(crate) root: CBlock,
+    pub(crate) esize: Vec<u32>,
+    pub(crate) n_vars: usize,
 }
 
 /// Compile `program` for timing execution on `soc`.
@@ -445,6 +445,12 @@ fn touch_stream(
     buf_lens: &[usize],
     vars: &[i64],
 ) -> f64 {
+    // A zero-length stream touches nothing: free, and exempt from the
+    // bounds proof (its start address may legally sit one past the end,
+    // e.g. the empty tail of a split loop).
+    if s.len == 0 {
+        return 0.0;
+    }
     let esize = prog.esize[s.buf] as u64;
     let first = s.addr.eval(vars);
     let last = first + (s.len as i64 - 1).max(0) * s.stride;
@@ -553,6 +559,73 @@ mod tests {
             assert_eq!(rf.trace, rt.trace, "{}", scenario.name());
             assert_eq!(rf.cache, rt.cache, "{}", scenario.name());
         }
+    }
+
+    /// Zero-length streams are free and exempt from bounds checking:
+    /// a `len == 0` macro run whose start address sits one past the end
+    /// of its buffer (the empty tail of a split loop) must neither panic
+    /// nor perturb cycles, trace, or cache stats.
+    #[test]
+    fn zero_length_streams_are_free_and_unchecked() {
+        use crate::isa::{Lmul, Sew};
+        use crate::sim::vprogram::{AddrExpr, Inst, MemRef, Node, VProgram};
+        let soc = SocConfig::saturn(256);
+        let build = |with_empty: bool| {
+            let mut p = VProgram::new("empty-tail");
+            let a = p.add_buffer("a", DType::I8, 8);
+            let b = p.add_buffer("b", DType::I8, 8);
+            let c = p.add_buffer("c", DType::I32, 1);
+            p.body.push(Node::Inst(Inst::SDotRun {
+                acc: MemRef::unit(c, AddrExpr::constant(0)),
+                a: MemRef::unit(a, AddrExpr::constant(0)),
+                b: MemRef::unit(b, AddrExpr::constant(0)),
+                len: 8,
+                dtype: DType::I8,
+            }));
+            if with_empty {
+                // Start addresses one past the end: legal only because
+                // the run is empty.
+                p.body.push(Node::Inst(Inst::SDotRun {
+                    acc: MemRef::unit(c, AddrExpr::constant(0)),
+                    a: MemRef::unit(a, AddrExpr::constant(8)),
+                    b: MemRef::unit(b, AddrExpr::constant(8)),
+                    len: 0,
+                    dtype: DType::I8,
+                }));
+                // Zero-vl vector access at one past the end: same rule.
+                p.body.push(Node::Inst(Inst::VSetVl {
+                    vl: 0,
+                    sew: Sew::E8,
+                    lmul: Lmul::M1,
+                    float: false,
+                }));
+                p.body.push(Node::Inst(Inst::VLoad {
+                    vd: 0,
+                    mem: MemRef::unit(a, AddrExpr::constant(8)),
+                }));
+            }
+            p
+        };
+        let run = |p: &VProgram| {
+            let mut bufs = BufStore::timing(p);
+            execute(&soc, p, &mut bufs, Mode::Timing, true)
+        };
+        let base = run(&build(false));
+        let with_empty = run(&build(true));
+        // The empty tail costs its static issue cycles and its len-1 acc
+        // probe (an L1 hit), but the zero-length streams are free: no
+        // extra misses, no bounds panic, and the zero-vl load probes
+        // nothing at all.
+        assert_eq!(with_empty.cache.l1_misses, base.cache.l1_misses);
+        assert_eq!(with_empty.cache.l2_misses, base.cache.l2_misses);
+        assert_eq!(with_empty.cache.accesses, base.cache.accesses + 1);
+        assert!(with_empty.cycles > base.cycles);
+        // And the functional interpreter agrees (same guards).
+        let p = build(true);
+        let mut fb = BufStore::functional(&p);
+        let rf = execute(&soc, &p, &mut fb, Mode::Functional, true);
+        assert_eq!(rf.cycles, with_empty.cycles);
+        assert_eq!(rf.cache, with_empty.cache);
     }
 
     /// The step budget: within budget the result is bit-identical to the

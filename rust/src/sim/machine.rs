@@ -36,6 +36,45 @@ pub enum Mode {
     Timing,
 }
 
+/// Which engine executes a `Mode::Timing` run. All tiers are
+/// bit-identical in cycles, trace, and `CacheStats`
+/// (`tests/sim_tier_bit_identity.rs` pins this on the differential
+/// corpus); they differ only in throughput. `Mode::Functional` always
+/// uses the interpreter regardless of tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SimTier {
+    /// The reference tree-walking interpreter. Ignores `ExecLimits`
+    /// (no step accounting), so only suitable for trusted programs.
+    Interp,
+    /// Per-candidate compiled `CBlock` tree (`sim::compiled`).
+    Compiled,
+    /// Flat threaded-code command stream (`sim::threaded`): decode once,
+    /// execute with no per-instruction dispatch. The default.
+    #[default]
+    Threaded,
+}
+
+impl SimTier {
+    pub const ALL: [SimTier; 3] = [SimTier::Interp, SimTier::Compiled, SimTier::Threaded];
+
+    pub fn parse(s: &str) -> Option<SimTier> {
+        match s {
+            "interp" => Some(SimTier::Interp),
+            "compiled" => Some(SimTier::Compiled),
+            "threaded" => Some(SimTier::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimTier::Interp => "interp",
+            SimTier::Compiled => "compiled",
+            SimTier::Threaded => "threaded",
+        }
+    }
+}
+
 /// Typed buffer contents for functional execution.
 #[derive(Clone, Debug)]
 pub enum BufData {
@@ -283,12 +322,13 @@ pub fn execute_limited(
     warm: bool,
     limits: super::compiled::ExecLimits,
 ) -> Result<ExecResult, super::compiled::SimBudgetExceeded> {
-    assert_eq!(bufs.bufs.len(), program.buffers.len(), "buffer store mismatch");
-    for (decl, data) in program.buffers.iter().zip(&bufs.bufs) {
-        assert_eq!(decl.len, data.len(), "buffer {} length mismatch", decl.name);
-    }
+    execute_tiered(soc, program, bufs, mode, warm, limits, SimTier::default(), None)
+}
 
-    // Assign flat addresses (64-byte aligned, contiguous).
+/// Flat simulated byte address of each buffer (64-byte aligned,
+/// contiguous). Shared by every tier so cache behaviour is
+/// layout-identical across them.
+pub(crate) fn buffer_bases(program: &VProgram) -> Vec<u64> {
     let mut bases = Vec::with_capacity(program.buffers.len());
     let mut next: u64 = 0x1000;
     for decl in &program.buffers {
@@ -296,7 +336,36 @@ pub fn execute_limited(
         let bytes = (decl.len * decl.dtype.bytes()) as u64;
         next = (next + bytes + 63) & !63;
     }
+    bases
+}
 
+/// [`execute_limited`] with an explicit timing tier and optional
+/// transcript memo (threaded tier only; see
+/// [`super::threaded::TranscriptCache`]).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_tiered(
+    soc: &SocConfig,
+    program: &VProgram,
+    bufs: &mut BufStore,
+    mode: Mode,
+    warm: bool,
+    limits: super::compiled::ExecLimits,
+    tier: SimTier,
+    transcripts: Option<&super::threaded::TranscriptCache>,
+) -> Result<ExecResult, super::compiled::SimBudgetExceeded> {
+    assert_eq!(bufs.bufs.len(), program.buffers.len(), "buffer store mismatch");
+    for (decl, data) in program.buffers.iter().zip(&bufs.bufs) {
+        assert_eq!(decl.len, data.len(), "buffer {} length mismatch", decl.name);
+    }
+
+    // Timing default: the threaded tier needs no cache/base setup here —
+    // the layout and warm ranges are baked in at compile time.
+    if mode == Mode::Timing && tier == SimTier::Threaded {
+        let prog = super::threaded::compile(program, soc);
+        return super::threaded::execute_threaded(soc, &prog, warm, limits, transcripts);
+    }
+
+    let bases = buffer_bases(program);
     let mut cache = Cache::new(soc.cache);
     if warm {
         for (decl, &base) in program.buffers.iter().zip(&bases) {
@@ -304,9 +373,7 @@ pub fn execute_limited(
         }
     }
 
-    // Timing-only runs go through the compiled fast path (bit-identical to
-    // the interpreter; see sim::compiled).
-    if mode == Mode::Timing {
+    if mode == Mode::Timing && tier == SimTier::Compiled {
         let buf_lens: Vec<usize> = program.buffers.iter().map(|b| b.len).collect();
         let compiled = super::compiled::compile(program, soc);
         let (cycles, trace) =
@@ -314,6 +381,7 @@ pub fn execute_limited(
         return Ok(ExecResult { cycles, trace, cache: cache.stats });
     }
 
+    // Functional mode, or the reference interpreter tier for timing.
     let mut m = Machine {
         soc,
         mode,
@@ -365,6 +433,11 @@ impl<'a> Machine<'a> {
     /// Charge cache penalties for a vector memory access of `vl` elements,
     /// with a fused bounds check (first + last lane inside the buffer).
     fn mem_penalty(&mut self, mem: &MemRef, vl: u32) -> f64 {
+        // Zero-length accesses are free and exempt from the bounds proof
+        // (their start address may legally sit one past the end).
+        if vl == 0 {
+            return 0.0;
+        }
         let esize = self.dtypes[mem.buf].bytes() as u64;
         let first = mem.addr.eval(&self.vars);
         let last = first + (vl as i64 - 1).max(0) * mem.stride;
@@ -405,18 +478,16 @@ impl<'a> Machine<'a> {
                 self.trace.add(InstrGroup::Load, 1);
                 if self.mode == Mode::Functional {
                     let data = &bufs.bufs[mem.buf];
+                    let m0 = mem.addr.eval(&self.vars);
+                    let idx = |i: i64| {
+                        let e = m0 + i * mem.stride;
+                        debug_assert!(e >= 0, "negative element index");
+                        e as usize
+                    };
                     let val = if data.is_float() {
-                        VecVal::F(
-                            (0..vl as i64)
-                                .map(|i| data.read_f(self.elem_addr(mem, i).0))
-                                .collect(),
-                        )
+                        VecVal::F((0..vl as i64).map(|i| data.read_f(idx(i))).collect())
                     } else {
-                        VecVal::I(
-                            (0..vl as i64)
-                                .map(|i| data.read_i(self.elem_addr(mem, i).0))
-                                .collect(),
-                        )
+                        VecVal::I((0..vl as i64).map(|i| data.read_i(idx(i))).collect())
                     };
                     self.regs[*vd as usize] = val;
                 }
@@ -434,20 +505,17 @@ impl<'a> Machine<'a> {
                     let val = std::mem::replace(&mut self.regs[*vs as usize], VecVal::Empty);
                     {
                         let data = &mut bufs.bufs[mem.buf];
+                        let m0 = mem.addr.eval(&self.vars);
                         match &val {
                             VecVal::F(v) => {
                                 for (i, &x) in v.iter().take(vl as usize).enumerate() {
-                                    let idx = (mem.addr.eval(&self.vars)
-                                        + i as i64 * mem.stride)
-                                        as usize;
+                                    let idx = (m0 + i as i64 * mem.stride) as usize;
                                     data.write_f(idx, x);
                                 }
                             }
                             VecVal::I(v) => {
                                 for (i, &x) in v.iter().take(vl as usize).enumerate() {
-                                    let idx = (mem.addr.eval(&self.vars)
-                                        + i as i64 * mem.stride)
-                                        as usize;
+                                    let idx = (m0 + i as i64 * mem.stride) as usize;
                                     data.write_i(idx, x);
                                 }
                             }
@@ -621,11 +689,12 @@ impl<'a> Machine<'a> {
                 self.touch_one(acc);
                 if self.mode == Mode::Functional {
                     let n = *len as i64;
+                    let (a0, b0) = (a.addr.eval(&self.vars), b.addr.eval(&self.vars));
                     if dtype.is_float() {
                         let mut s = 0f32;
                         for i in 0..n {
-                            let av = bufs.bufs[a.buf].read_f(self.elem_addr(a, i).0) as f32;
-                            let bv = bufs.bufs[b.buf].read_f(self.elem_addr(b, i).0) as f32;
+                            let av = bufs.bufs[a.buf].read_f((a0 + i * a.stride) as usize) as f32;
+                            let bv = bufs.bufs[b.buf].read_f((b0 + i * b.stride) as usize) as f32;
                             s = self.round_f((s + av * bv) as f64) as f32;
                         }
                         let (idx, _) = self.elem_addr(acc, 0);
@@ -633,12 +702,7 @@ impl<'a> Machine<'a> {
                         let v = self.round_f(cur + s as f64);
                         bufs.bufs[acc.buf].write_f(idx, v);
                     } else {
-                        let mut s = 0i64;
-                        for i in 0..n {
-                            let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
-                            let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
-                            s += av * bv;
-                        }
+                        let s = int_dot(&bufs.bufs, a, b, a0, b0, n);
                         let (idx, _) = self.elem_addr(acc, 0);
                         let cur = bufs.bufs[acc.buf].read_i(idx);
                         bufs.bufs[acc.buf].write_i(idx, cur + s);
@@ -651,21 +715,20 @@ impl<'a> Machine<'a> {
                 self.stream_touch(b, *len);
                 self.stream_touch(y, *len);
                 if self.mode == Mode::Functional {
-                    for i in 0..*len as i64 {
-                        if dtype.is_float() {
-                            let av = bufs.bufs[a.buf].read_f(self.elem_addr(a, i).0);
-                            let bv = bufs.bufs[b.buf].read_f(self.elem_addr(b, i).0);
-                            let (yi, _) = self.elem_addr(y, i);
+                    let n = *len as i64;
+                    let (a0, b0, y0) =
+                        (a.addr.eval(&self.vars), b.addr.eval(&self.vars), y.addr.eval(&self.vars));
+                    if dtype.is_float() {
+                        for i in 0..n {
+                            let av = bufs.bufs[a.buf].read_f((a0 + i * a.stride) as usize);
+                            let bv = bufs.bufs[b.buf].read_f((b0 + i * b.stride) as usize);
+                            let yi = (y0 + i * y.stride) as usize;
                             let cur = bufs.bufs[y.buf].read_f(yi);
                             let v = self.round_f(cur + self.round_f(av * bv));
                             bufs.bufs[y.buf].write_f(yi, v);
-                        } else {
-                            let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
-                            let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
-                            let (yi, _) = self.elem_addr(y, i);
-                            let cur = bufs.bufs[y.buf].read_i(yi);
-                            bufs.bufs[y.buf].write_i(yi, cur + av * bv);
                         }
+                    } else {
+                        int_axpy(&mut bufs.bufs, y, a, b, y0, a0, b0, n);
                     }
                 }
             }
@@ -674,10 +737,29 @@ impl<'a> Machine<'a> {
                 self.stream_touch(src, *len);
                 self.stream_touch(dst, *len);
                 if self.mode == Mode::Functional {
-                    for i in 0..*len as i64 {
-                        let x = bufs.bufs[src.buf].read_i(self.elem_addr(src, i).0);
-                        let (di, _) = self.elem_addr(dst, i);
-                        bufs.bufs[dst.buf].write_i(di, requant_i64(x, *mult, *shift, *zp));
+                    let n = *len as i64;
+                    let (s0, d0) = (src.addr.eval(&self.vars), dst.addr.eval(&self.vars));
+                    debug_assert!(n == 0 || (s0 >= 0 && d0 >= 0), "negative element index");
+                    let mut done = false;
+                    if src.stride == 1 && dst.stride == 1 && src.buf != dst.buf {
+                        let (sdata, ddata) = borrow_two(&mut bufs.bufs, src.buf, dst.buf);
+                        if let (BufData::I32(sv), BufData::I8(dv)) = (sdata, ddata) {
+                            let (n, si, di) = (n as usize, s0 as usize, d0 as usize);
+                            for i in 0..n {
+                                // requant_i64 already saturates to i8
+                                // range, so the write_i clamp is a no-op.
+                                dv[di + i] =
+                                    requant_i64(sv[si + i] as i64, *mult, *shift, *zp) as i8;
+                            }
+                            done = true;
+                        }
+                    }
+                    if !done {
+                        for i in 0..n {
+                            let x = bufs.bufs[src.buf].read_i((s0 + i * src.stride) as usize);
+                            let di = (d0 + i * dst.stride) as usize;
+                            bufs.bufs[dst.buf].write_i(di, requant_i64(x, *mult, *shift, *zp));
+                        }
                     }
                 }
             }
@@ -686,14 +768,36 @@ impl<'a> Machine<'a> {
                 self.stream_touch(src, *len);
                 self.stream_touch(dst, *len);
                 if self.mode == Mode::Functional {
-                    for i in 0..*len as i64 {
-                        let (di, _) = self.elem_addr(dst, i);
-                        if dtype.is_float() {
-                            let x = bufs.bufs[src.buf].read_f(self.elem_addr(src, i).0);
-                            bufs.bufs[dst.buf].write_f(di, x);
-                        } else {
-                            let x = bufs.bufs[src.buf].read_i(self.elem_addr(src, i).0);
-                            bufs.bufs[dst.buf].write_i(di, x);
+                    let n = *len as i64;
+                    let (s0, d0) = (src.addr.eval(&self.vars), dst.addr.eval(&self.vars));
+                    debug_assert!(n == 0 || (s0 >= 0 && d0 >= 0), "negative element index");
+                    let mut done = false;
+                    if src.stride == 1 && dst.stride == 1 && src.buf != dst.buf && !dtype.is_float()
+                    {
+                        let (sdata, ddata) = borrow_two(&mut bufs.bufs, src.buf, dst.buf);
+                        let (nn, si, di) = (n as usize, s0 as usize, d0 as usize);
+                        match (sdata, ddata) {
+                            (BufData::I8(sv), BufData::I8(dv)) => {
+                                dv[di..di + nn].copy_from_slice(&sv[si..si + nn]);
+                                done = true;
+                            }
+                            (BufData::I32(sv), BufData::I32(dv)) => {
+                                dv[di..di + nn].copy_from_slice(&sv[si..si + nn]);
+                                done = true;
+                            }
+                            _ => {}
+                        }
+                    }
+                    if !done {
+                        for i in 0..n {
+                            let di = (d0 + i * dst.stride) as usize;
+                            if dtype.is_float() {
+                                let x = bufs.bufs[src.buf].read_f((s0 + i * src.stride) as usize);
+                                bufs.bufs[dst.buf].write_f(di, x);
+                            } else {
+                                let x = bufs.bufs[src.buf].read_i((s0 + i * src.stride) as usize);
+                                bufs.bufs[dst.buf].write_i(di, x);
+                            }
                         }
                     }
                 }
@@ -708,12 +812,9 @@ impl<'a> Machine<'a> {
                 self.stream_touch(b, *len);
                 self.touch_one(acc);
                 if self.mode == Mode::Functional {
-                    let mut s = 0i64;
-                    for i in 0..*len as i64 {
-                        let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
-                        let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
-                        s += av * bv;
-                    }
+                    let n = *len as i64;
+                    let (a0, b0) = (a.addr.eval(&self.vars), b.addr.eval(&self.vars));
+                    let s = int_dot(&bufs.bufs, a, b, a0, b0, n);
                     let (idx, _) = self.elem_addr(acc, 0);
                     let cur = bufs.bufs[acc.buf].read_i(idx);
                     bufs.bufs[acc.buf].write_i(idx, cur + s);
@@ -727,13 +828,10 @@ impl<'a> Machine<'a> {
                 self.stream_touch(b, *len);
                 self.stream_touch(y, *len);
                 if self.mode == Mode::Functional {
-                    for i in 0..*len as i64 {
-                        let av = bufs.bufs[a.buf].read_i(self.elem_addr(a, i).0);
-                        let bv = bufs.bufs[b.buf].read_i(self.elem_addr(b, i).0);
-                        let (yi, _) = self.elem_addr(y, i);
-                        let cur = bufs.bufs[y.buf].read_i(yi);
-                        bufs.bufs[y.buf].write_i(yi, cur + av * bv);
-                    }
+                    let n = *len as i64;
+                    let (a0, b0, y0) =
+                        (a.addr.eval(&self.vars), b.addr.eval(&self.vars), y.addr.eval(&self.vars));
+                    int_axpy(&mut bufs.bufs, y, a, b, y0, a0, b0, n);
                 }
             }
             Inst::SAddRun { dst, src, len, dtype } => {
@@ -741,16 +839,45 @@ impl<'a> Machine<'a> {
                 self.stream_touch(src, *len);
                 self.stream_touch(dst, *len);
                 if self.mode == Mode::Functional {
-                    for i in 0..*len as i64 {
-                        let (di, _) = self.elem_addr(dst, i);
-                        if dtype.is_float() {
-                            let x = bufs.bufs[src.buf].read_f(self.elem_addr(src, i).0);
-                            let cur = bufs.bufs[dst.buf].read_f(di);
-                            bufs.bufs[dst.buf].write_f(di, self.round_f(cur + x));
-                        } else {
-                            let x = bufs.bufs[src.buf].read_i(self.elem_addr(src, i).0);
-                            let cur = bufs.bufs[dst.buf].read_i(di);
-                            bufs.bufs[dst.buf].write_i(di, cur + x);
+                    let n = *len as i64;
+                    let (s0, d0) = (src.addr.eval(&self.vars), dst.addr.eval(&self.vars));
+                    debug_assert!(n == 0 || (s0 >= 0 && d0 >= 0), "negative element index");
+                    let mut done = false;
+                    if src.stride == 1 && dst.stride == 1 && src.buf != dst.buf && !dtype.is_float()
+                    {
+                        let (sdata, ddata) = borrow_two(&mut bufs.bufs, src.buf, dst.buf);
+                        let (nn, si, di) = (n as usize, s0 as usize, d0 as usize);
+                        match (sdata, ddata) {
+                            (BufData::I32(sv), BufData::I32(dv)) => {
+                                for i in 0..nn {
+                                    let v = dv[di + i] as i64 + sv[si + i] as i64;
+                                    dv[di + i] =
+                                        v.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+                                }
+                                done = true;
+                            }
+                            (BufData::I8(sv), BufData::I8(dv)) => {
+                                for i in 0..nn {
+                                    let v = dv[di + i] as i64 + sv[si + i] as i64;
+                                    dv[di + i] = v.clamp(i8::MIN as i64, i8::MAX as i64) as i8;
+                                }
+                                done = true;
+                            }
+                            _ => {}
+                        }
+                    }
+                    if !done {
+                        for i in 0..n {
+                            let di = (d0 + i * dst.stride) as usize;
+                            if dtype.is_float() {
+                                let x = bufs.bufs[src.buf].read_f((s0 + i * src.stride) as usize);
+                                let cur = bufs.bufs[dst.buf].read_f(di);
+                                bufs.bufs[dst.buf].write_f(di, self.round_f(cur + x));
+                            } else {
+                                let x = bufs.bufs[src.buf].read_i((s0 + i * src.stride) as usize);
+                                let cur = bufs.bufs[dst.buf].read_i(di);
+                                bufs.bufs[dst.buf].write_i(di, cur + x);
+                            }
                         }
                     }
                 }
@@ -823,6 +950,92 @@ fn apply_f(op: VBinOp, a: f64, b: f64) -> f64 {
         VBinOp::Sub => a - b,
         VBinOp::Max => a.max(b),
         VBinOp::Min => a.min(b),
+    }
+}
+
+/// Split-borrow two *distinct* buffers: `src` immutably, `dst` mutably.
+fn borrow_two(bufs: &mut [BufData], src: usize, dst: usize) -> (&BufData, &mut BufData) {
+    debug_assert_ne!(src, dst, "split borrow of one buffer");
+    if src < dst {
+        let (lo, hi) = bufs.split_at_mut(dst);
+        (&lo[src], &mut hi[0])
+    } else {
+        let (lo, hi) = bufs.split_at_mut(src);
+        (&hi[0], &mut lo[dst])
+    }
+}
+
+/// Integer dot product over two element streams, with typed-slice fast
+/// paths for the unit-stride cases the differential harness spends its
+/// time in. Bit-identical to the per-element interpreter loop: i64
+/// accumulation in the same order, no rounding anywhere.
+fn int_dot(bufs: &[BufData], a: &MemRef, b: &MemRef, a0: i64, b0: i64, n: i64) -> i64 {
+    debug_assert!(n == 0 || (a0 >= 0 && b0 >= 0), "negative element index");
+    let mut s = 0i64;
+    if a.stride == 1 && b.stride == 1 {
+        let (n, ai, bi) = (n as usize, a0 as usize, b0 as usize);
+        match (&bufs[a.buf], &bufs[b.buf]) {
+            (BufData::I8(av), BufData::I8(bv)) => {
+                for (&x, &y) in av[ai..ai + n].iter().zip(&bv[bi..bi + n]) {
+                    s += x as i64 * y as i64;
+                }
+                return s;
+            }
+            (BufData::I32(av), BufData::I32(bv)) => {
+                for (&x, &y) in av[ai..ai + n].iter().zip(&bv[bi..bi + n]) {
+                    s += x as i64 * y as i64;
+                }
+                return s;
+            }
+            _ => {}
+        }
+    }
+    for i in 0..n {
+        s += bufs[a.buf].read_i((a0 + i * a.stride) as usize)
+            * bufs[b.buf].read_i((b0 + i * b.stride) as usize);
+    }
+    s
+}
+
+/// `y[i] += a[i] * b[i]` over integer streams, saturating at the y dtype
+/// exactly as `write_i` does, with an all-unit-stride i8×i8→i32 fast
+/// path (the quantized-matmul accumulate).
+#[allow(clippy::too_many_arguments)]
+fn int_axpy(
+    bufs: &mut [BufData],
+    y: &MemRef,
+    a: &MemRef,
+    b: &MemRef,
+    y0: i64,
+    a0: i64,
+    b0: i64,
+    n: i64,
+) {
+    debug_assert!(n == 0 || (y0 >= 0 && a0 >= 0 && b0 >= 0), "negative element index");
+    if y.stride == 1 && a.stride == 1 && b.stride == 1 && y.buf != a.buf && y.buf != b.buf {
+        let mut ydata = std::mem::replace(&mut bufs[y.buf], BufData::Absent(0));
+        let done = match (&mut ydata, &bufs[a.buf], &bufs[b.buf]) {
+            (BufData::I32(yv), BufData::I8(av), BufData::I8(bv)) => {
+                let (n, yi, ai, bi) = (n as usize, y0 as usize, a0 as usize, b0 as usize);
+                for i in 0..n {
+                    let v = yv[yi + i] as i64 + av[ai + i] as i64 * bv[bi + i] as i64;
+                    yv[yi + i] = v.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+                }
+                true
+            }
+            _ => false,
+        };
+        bufs[y.buf] = ydata;
+        if done {
+            return;
+        }
+    }
+    for i in 0..n {
+        let av = bufs[a.buf].read_i((a0 + i * a.stride) as usize);
+        let bv = bufs[b.buf].read_i((b0 + i * b.stride) as usize);
+        let yi = (y0 + i * y.stride) as usize;
+        let cur = bufs[y.buf].read_i(yi);
+        bufs[y.buf].write_i(yi, cur + av * bv);
     }
 }
 

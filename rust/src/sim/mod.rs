@@ -8,13 +8,18 @@ pub mod cache;
 pub mod compiled;
 pub mod machine;
 pub mod soc;
+pub mod threaded;
 pub mod trace;
 pub mod vecunit;
 pub mod vprogram;
 
 pub use cache::{Cache, CacheParams, CacheStats};
 pub use compiled::{ExecLimits, SimBudgetExceeded};
-pub use machine::{execute, execute_limited, requant_i64, BufData, BufStore, ExecResult, Mode};
+pub use machine::{
+    execute, execute_limited, execute_tiered, requant_i64, BufData, BufStore, ExecResult, Mode,
+    SimTier,
+};
+pub use threaded::{execute_threaded, ThreadedProgram, TranscriptCache};
 pub use soc::SocConfig;
 pub use trace::TraceCounts;
 pub use vprogram::{

@@ -1,0 +1,837 @@
+//! Threaded-code timing tier: decode once, execute a flat command stream.
+//!
+//! [`super::compiled`] already folds instruction *costs* at compile time
+//! but still walks a `CBlock` tree per execution: every node pays a match
+//! dispatch, loop recursion re-enters `run_block`, every memory stream
+//! re-evaluates its `AddrExpr` against the live loop variables, and the
+//! step budget is checked per node. This tier removes all of that.
+//!
+//! `compile()` lowers the `CBlock` tree into a flat `Vec<TCmd>`:
+//!
+//! * Loop nests are unrolled structurally — the first iteration is
+//!   specialized inline (loop variable folded to a constant) and the
+//!   steady iterations become an `Enter`/`Back` counter region. No
+//!   recursion, no per-iteration variable writes at run time.
+//! * Every memory stream becomes a pre-bound [`Probe`] descriptor: its
+//!   byte address for the *first* execution is computed at compile time,
+//!   and each enclosing loop's `Back` command carries the exact byte
+//!   delta that advances the probe to its next iteration's address. The
+//!   run-time address computation is one `u64` add per enclosing loop
+//!   per iteration instead of an `AddrExpr` walk per execution.
+//! * Bounds are proven at compile time: a probe's element-index range
+//!   over the whole (rectangular) iteration domain is an interval whose
+//!   corners are attained, so the one compile-time assert is exactly as
+//!   strong as the interpreter's per-execution assert.
+//! * The step budget collapses to a single compare: the dynamic node
+//!   count of the equivalent `CBlock` walk is a compile-time constant
+//!   (`total_steps`), so `ExecLimits` produces the same verdict as
+//!   [`super::compiled::run_limited`] without any hot-loop counter.
+//!
+//! **Transcript memoization:** the cycle cost of a candidate splits into
+//! static compute cost (baked into the command stream) and cache-probe
+//! penalties (a pure function of the address stream and the cache
+//! configuration). Candidates in one measurement round that share a
+//! buffer layout + stride pattern — same op shape, different compute
+//! decisions — therefore share their probe penalties exactly. A
+//! [`TranscriptCache`] memoizes the raw penalty sequence plus the final
+//! [`CacheStats`] under a signature of (cache params, warm ranges, probe
+//! table, delta table, probe-relevant command skeleton); a hit replays
+//! the recorded penalties instead of re-walking the cache model, which is
+//! bit-identical by construction because the replayed values are the
+//! recorded `f64`s themselves.
+//!
+//! Everything here is bit-identical to the interpreter: same f64
+//! accumulation order as `run_block`, same `CacheStats`, same budget
+//! verdict. `tests/sim_tier_bit_identity.rs` pins this across the full
+//! differential corpus on all four paper SoCs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::isa::InstrGroup;
+
+use super::cache::{Cache, CacheStats};
+use super::compiled::{self, CBlock, CNode, ExecLimits, SimBudgetExceeded, Stream};
+use super::machine::{buffer_bases, ExecResult};
+use super::soc::SocConfig;
+use super::trace::TraceCounts;
+use super::vecunit;
+use super::vprogram::VProgram;
+
+/// Above this many dynamic probe executions a transcript is not worth
+/// holding in memory (and the candidate is far past the regime where
+/// sharing wins); such programs always run the cache model live.
+const MAX_MEMO_PROBES: u64 = 1 << 20;
+
+/// A pre-bound cache-probe site: everything `Cache` needs except the
+/// current address, which lives in the executor's address table and is
+/// advanced by `Back` deltas.
+#[derive(Clone, Debug)]
+pub(crate) struct Probe {
+    /// Byte address of this site's first execution.
+    init_addr: u64,
+    /// Element stride in bytes (probe-run path).
+    stride_bytes: i64,
+    /// Element count.
+    len: u64,
+    /// Total bytes (unit-stride range path).
+    bytes: u64,
+    /// Unit stride: probe via `access_range`, else `probe_run` —
+    /// mirroring `compiled::touch_stream` exactly.
+    unit: bool,
+}
+
+/// One flat command. `Static`/`Mem`/`Run` mirror the `CNode` cost model
+/// one-to-one (same f64 accumulation order); `Enter`/`Back` encode loop
+/// steady-state regions as counted backward jumps.
+#[derive(Clone, Debug)]
+pub(crate) enum TCmd {
+    /// Fixed cost: cycles + trace deltas (never merged across `CNode`
+    /// boundaries — f64 addition is not associative).
+    Static { cycles: f64, trace: u32 },
+    /// One vector memory op: `cycles += base_cost + penalty` in a single
+    /// add, as the interpreter does.
+    Mem { base_cost: f64, group: InstrGroup, probe: u32 },
+    /// Scalar macro: fixed cost, then one penalty add per probe site in
+    /// `[probes.0, probes.1)`.
+    Run { cycles: f64, trace: u32, probes: (u32, u32) },
+    /// Arm counter `ctr` with `count` remaining steady iterations.
+    Enter { ctr: u32, count: u32 },
+    /// Decrement `ctr`; while nonzero, advance the probe addresses in
+    /// delta range `[deltas.0, deltas.1)` and jump to `back`.
+    Back { ctr: u32, back: u32, deltas: (u32, u32) },
+}
+
+/// A `VProgram` lowered to the threaded tier for one SoC: flat command
+/// stream, pre-bound probes, per-loop address deltas, warm ranges, and
+/// the compile-time step/probe counts and memo signature.
+pub struct ThreadedProgram {
+    cmds: Vec<TCmd>,
+    probes: Vec<Probe>,
+    /// Deduplicated trace-delta rows referenced by `Static`/`Run`.
+    traces: Vec<[u64; 8]>,
+    /// Flat (probe, byte-delta) table referenced by `Back` commands.
+    deltas: Vec<(u32, i64)>,
+    n_ctrs: usize,
+    /// (base, bytes) per buffer, for `warm_l2` — baked so execution
+    /// needs no `VProgram`.
+    warm: Vec<(u64, u64)>,
+    /// Dynamic node count of the equivalent `CBlock` walk (saturating),
+    /// compared against `ExecLimits` once per run.
+    total_steps: u64,
+    /// Dynamic probe executions per run (saturating); gates memoization.
+    n_probe_calls: u64,
+    /// Transcript-sharing signature (see module docs) and its hash key.
+    sig: Vec<u64>,
+    key: u64,
+}
+
+impl ThreadedProgram {
+    /// Dynamic step count of one run (the `ExecLimits` unit).
+    pub fn total_steps(&self) -> u64 {
+        self.total_steps
+    }
+
+    /// Flat command count (decode-once size).
+    pub fn cmd_count(&self) -> usize {
+        self.cmds.len()
+    }
+
+    /// Distinct probe sites.
+    pub fn probe_count(&self) -> usize {
+        self.probes.len()
+    }
+
+    /// Transcript-sharing key (candidates with equal keys and equal
+    /// signatures share cache transcripts).
+    pub fn transcript_key(&self) -> u64 {
+        self.key
+    }
+}
+
+/// Lower `program` to the threaded tier for `soc`. Panics with the same
+/// "out of bounds" class of message as the interpreter if any probe can
+/// leave its buffer on any iteration (the compile-time interval is exact,
+/// so this fires iff some execution of the interpreter would assert).
+pub fn compile(program: &VProgram, soc: &SocConfig) -> ThreadedProgram {
+    let cp = compiled::compile(program, soc);
+    let bases = buffer_bases(program);
+    let buf_lens: Vec<usize> = program.buffers.iter().map(|b| b.len).collect();
+    let warm: Vec<(u64, u64)> = program
+        .buffers
+        .iter()
+        .zip(&bases)
+        .map(|(b, &base)| (base, (b.len * b.dtype.bytes()) as u64))
+        .collect();
+    let mut fl = Flattener {
+        esize: &cp.esize,
+        bases: &bases,
+        buf_lens: &buf_lens,
+        vals: vec![0i64; cp.n_vars],
+        stack: Vec::new(),
+        out: ThreadedProgram {
+            cmds: Vec::new(),
+            probes: Vec::new(),
+            traces: Vec::new(),
+            deltas: Vec::new(),
+            n_ctrs: 0,
+            warm,
+            total_steps: block_steps(&cp.root),
+            n_probe_calls: 0,
+            sig: Vec::new(),
+            key: 0,
+        },
+    };
+    fl.flatten_block(&cp.root);
+    let mut prog = fl.out;
+    prog.sig = signature(&prog, soc);
+    prog.key = fnv_words(&prog.sig);
+    prog
+}
+
+/// Dynamic node count of a `CBlock` walk — exactly what
+/// `compiled::run_block` charges against the step budget.
+fn block_steps(block: &CBlock) -> u64 {
+    let mut steps = 0u64;
+    for node in &block.nodes {
+        steps = steps.saturating_add(1);
+        if let CNode::Loop { extent, iter0, steady, .. } = node {
+            let first = block_steps(iter0);
+            let rest = match steady {
+                Some(s) => block_steps(s),
+                None => first,
+            };
+            steps = steps
+                .saturating_add(first)
+                .saturating_add(rest.saturating_mul(*extent as u64 - 1));
+        }
+    }
+    steps
+}
+
+/// A loop whose steady-state region is currently being flattened: the
+/// variable iterates `first..=last` at run time, `ctr` is its counter,
+/// and `pending` collects the probe deltas its `Back` will apply.
+struct Seg {
+    var: usize,
+    first: i64,
+    last: i64,
+    ctr: u32,
+    pending: Vec<(u32, i64)>,
+}
+
+struct Flattener<'a> {
+    esize: &'a [u32],
+    bases: &'a [u64],
+    buf_lens: &'a [usize],
+    /// Static value of every loop variable not currently iterating
+    /// (before its loop: 0, matching the interpreter's init; after: its
+    /// final value `extent - 1`).
+    vals: Vec<i64>,
+    stack: Vec<Seg>,
+    out: ThreadedProgram,
+}
+
+impl Flattener<'_> {
+    fn flatten_block(&mut self, block: &CBlock) {
+        for node in &block.nodes {
+            match node {
+                CNode::Static { cycles, trace } => {
+                    let t = self.trace_idx(*trace);
+                    self.out.cmds.push(TCmd::Static { cycles: *cycles, trace: t });
+                }
+                CNode::Mem { base_cost, group, stream } => {
+                    if stream.len == 0 {
+                        // Zero-length access: base cost + trace count only
+                        // — free at the cache, no bounds obligation.
+                        let mut tr = [0u64; 8];
+                        tr[*group as usize] = 1;
+                        let t = self.trace_idx(tr);
+                        self.out.cmds.push(TCmd::Static { cycles: *base_cost, trace: t });
+                    } else {
+                        let p = self.emit_probe(stream);
+                        self.out.cmds.push(TCmd::Mem {
+                            base_cost: *base_cost,
+                            group: *group,
+                            probe: p,
+                        });
+                    }
+                }
+                CNode::Run { cycles, trace, streams } => {
+                    let lo = self.out.probes.len() as u32;
+                    for s in streams {
+                        // Zero-length streams are free (+= 0.0 on a
+                        // non-negative accumulator is the identity).
+                        if s.len > 0 {
+                            self.emit_probe(s);
+                        }
+                    }
+                    let hi = self.out.probes.len() as u32;
+                    let t = self.trace_idx(*trace);
+                    self.out.cmds.push(TCmd::Run { cycles: *cycles, trace: t, probes: (lo, hi) });
+                }
+                CNode::Loop { var, extent, book_instrs, book_cycles, iter0, steady } => {
+                    let mut tr = [0u64; 8];
+                    tr[InstrGroup::Scalar as usize] = *book_instrs;
+                    let t = self.trace_idx(tr);
+                    self.out.cmds.push(TCmd::Static { cycles: *book_cycles, trace: t });
+                    debug_assert!(
+                        !self.stack.iter().any(|s| s.var == *var),
+                        "loop variable {var} reused in an enclosing loop"
+                    );
+                    // Iteration 0 specialized inline with var = 0.
+                    self.vals[*var] = 0;
+                    self.flatten_block(iter0);
+                    if *extent >= 2 {
+                        let ctr = self.out.n_ctrs as u32;
+                        self.out.n_ctrs += 1;
+                        let enter_at = self.out.cmds.len() as u32;
+                        self.out.cmds.push(TCmd::Enter { ctr, count: *extent - 1 });
+                        self.stack.push(Seg {
+                            var: *var,
+                            first: 1,
+                            last: *extent as i64 - 1,
+                            ctr,
+                            pending: Vec::new(),
+                        });
+                        self.flatten_block(steady.as_ref().unwrap_or(iter0));
+                        let seg = self.stack.pop().expect("segment stack underflow");
+                        let dlo = self.out.deltas.len() as u32;
+                        self.out.deltas.extend(seg.pending);
+                        let dhi = self.out.deltas.len() as u32;
+                        self.out.cmds.push(TCmd::Back {
+                            ctr: seg.ctr,
+                            back: enter_at + 1,
+                            deltas: (dlo, dhi),
+                        });
+                    }
+                    // After the loop the variable holds its final value,
+                    // exactly as the interpreter leaves `vars[var]`.
+                    self.vals[*var] = *extent as i64 - 1;
+                }
+            }
+        }
+    }
+
+    /// Bind one memory stream as a probe site: fold its address into a
+    /// compile-time first-execution address plus one coefficient per
+    /// live loop segment, prove bounds over the whole iteration domain,
+    /// and register the per-segment advance deltas.
+    fn emit_probe(&mut self, s: &Stream) -> u32 {
+        let esize = self.esize[s.buf] as i64;
+        let mut b0 = s.addr.base;
+        let mut seg_coeff = vec![0i64; self.stack.len()];
+        for &(var, coeff) in &s.addr.coeffs {
+            if let Some(k) = self.stack.iter().rposition(|seg| seg.var == var) {
+                seg_coeff[k] += coeff;
+            } else {
+                b0 += coeff * self.vals[var];
+            }
+        }
+        // First-execution element index, and the exact index interval of
+        // the stream start over the whole rectangular domain.
+        let mut first0 = b0;
+        let (mut lo, mut hi) = (b0, b0);
+        for (k, seg) in self.stack.iter().enumerate() {
+            let c = seg_coeff[k];
+            first0 += c * seg.first;
+            if c >= 0 {
+                lo += c * seg.first;
+                hi += c * seg.last;
+            } else {
+                lo += c * seg.last;
+                hi += c * seg.first;
+            }
+        }
+        let span = (s.len as i64 - 1) * s.stride;
+        let (plo, phi) = (lo + span.min(0), hi + span.max(0));
+        assert!(
+            plo >= 0 && phi < self.buf_lens[s.buf] as i64,
+            "access out of bounds: buf={} first={plo} last={phi} len={}",
+            s.buf,
+            self.buf_lens[s.buf]
+        );
+        let idx = self.out.probes.len() as u32;
+        self.out.probes.push(Probe {
+            init_addr: self.bases[s.buf] + first0 as u64 * esize as u64,
+            stride_bytes: s.stride * esize,
+            len: s.len as u64,
+            bytes: s.len as u64 * esize as u64,
+            unit: s.stride == 1,
+        });
+        // Dynamic executions of this site = product of live trip counts.
+        let mut mult = 1u64;
+        for seg in &self.stack {
+            mult = mult.saturating_mul((seg.last - seg.first + 1) as u64);
+        }
+        self.out.n_probe_calls = self.out.n_probe_calls.saturating_add(mult);
+        // Advance delta for segment k: its own step, minus the travel the
+        // deeper segments accumulated over their full runs (their `Back`s
+        // never rewind — the outer `Back` undoes and re-advances in one
+        // add).
+        for k in 0..self.stack.len() {
+            let mut d = seg_coeff[k];
+            for j in k + 1..self.stack.len() {
+                d -= seg_coeff[j] * (self.stack[j].last - self.stack[j].first);
+            }
+            let d_bytes = d * esize;
+            if d_bytes != 0 {
+                self.stack[k].pending.push((idx, d_bytes));
+            }
+        }
+        idx
+    }
+
+    fn trace_idx(&mut self, tr: [u64; 8]) -> u32 {
+        if let Some(i) = self.out.traces.iter().position(|t| *t == tr) {
+            return i as u32;
+        }
+        self.out.traces.push(tr);
+        (self.out.traces.len() - 1) as u32
+    }
+}
+
+/// Transcript-sharing signature: everything that determines the probe
+/// penalty sequence and final cache stats — cache geometry, warm ranges,
+/// the probe and delta tables, and the command skeleton with
+/// compute-only commands erased (so candidates differing only in static
+/// compute cost share).
+fn signature(prog: &ThreadedProgram, soc: &SocConfig) -> Vec<u64> {
+    let c = &soc.cache;
+    let mut sig = vec![
+        c.line_bytes,
+        c.l1_kb,
+        c.l1_ways as u64,
+        c.l2_kb,
+        c.l2_ways as u64,
+        c.l2_penalty.to_bits(),
+        c.mem_penalty.to_bits(),
+        prog.warm.len() as u64,
+    ];
+    for &(base, bytes) in &prog.warm {
+        sig.push(base);
+        sig.push(bytes);
+    }
+    sig.push(prog.probes.len() as u64);
+    for p in &prog.probes {
+        sig.push(p.init_addr);
+        sig.push(p.stride_bytes as u64);
+        sig.push(p.len);
+        sig.push(p.bytes);
+        sig.push(p.unit as u64);
+    }
+    sig.push(prog.deltas.len() as u64);
+    for &(p, d) in &prog.deltas {
+        sig.push(p as u64);
+        sig.push(d as u64);
+    }
+    for cmd in &prog.cmds {
+        match cmd {
+            TCmd::Static { .. } => {}
+            TCmd::Mem { probe, .. } => {
+                sig.push(1);
+                sig.push(*probe as u64);
+            }
+            TCmd::Run { probes, .. } => {
+                sig.push(2);
+                sig.push(probes.0 as u64);
+                sig.push(probes.1 as u64);
+            }
+            TCmd::Enter { count, .. } => {
+                sig.push(3);
+                sig.push(*count as u64);
+            }
+            TCmd::Back { deltas, .. } => {
+                sig.push(4);
+                sig.push(deltas.0 as u64);
+                sig.push(deltas.1 as u64);
+            }
+        }
+    }
+    sig
+}
+
+fn fnv_words(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Supplies the raw miss penalty of each probe execution: the live cache
+/// model, or a recorded transcript.
+trait ProbeSink {
+    fn probe(&mut self, probe: &Probe, addr: u64) -> f64;
+}
+
+struct LiveSink<'a> {
+    cache: &'a mut Cache,
+    rec: Option<&'a mut Vec<f64>>,
+}
+
+impl ProbeSink for LiveSink<'_> {
+    #[inline]
+    fn probe(&mut self, p: &Probe, addr: u64) -> f64 {
+        let raw = if p.unit {
+            self.cache.access_range(addr, p.bytes)
+        } else {
+            self.cache.probe_run(addr, p.stride_bytes, p.len)
+        };
+        if let Some(rec) = self.rec.as_deref_mut() {
+            rec.push(raw);
+        }
+        raw
+    }
+}
+
+struct ReplaySink<'a> {
+    raws: &'a [f64],
+    k: usize,
+}
+
+impl ProbeSink for ReplaySink<'_> {
+    #[inline]
+    fn probe(&mut self, _p: &Probe, _addr: u64) -> f64 {
+        let raw = self.raws[self.k];
+        self.k += 1;
+        raw
+    }
+}
+
+/// The threaded executor: one flat pc loop, no per-instruction dispatch
+/// beyond the five-way command match, no address-expression evaluation,
+/// no budget checks.
+fn run_cmds<S: ProbeSink>(
+    prog: &ThreadedProgram,
+    soc: &SocConfig,
+    sink: &mut S,
+) -> (f64, [u64; 8]) {
+    let mut addrs: Vec<u64> = prog.probes.iter().map(|p| p.init_addr).collect();
+    let mut ctrs = vec![0u32; prog.n_ctrs];
+    let mut cycles = 0.0f64;
+    let mut trace = [0u64; 8];
+    let mut pc = 0usize;
+    while pc < prog.cmds.len() {
+        match &prog.cmds[pc] {
+            TCmd::Static { cycles: c, trace: t } => {
+                cycles += *c;
+                let tr = &prog.traces[*t as usize];
+                for i in 0..8 {
+                    trace[i] += tr[i];
+                }
+            }
+            TCmd::Mem { base_cost, group, probe } => {
+                let i = *probe as usize;
+                let raw = sink.probe(&prog.probes[i], addrs[i]);
+                cycles += *base_cost + vecunit::miss_cost(soc, raw);
+                trace[*group as usize] += 1;
+            }
+            TCmd::Run { cycles: c, trace: t, probes } => {
+                cycles += *c;
+                let tr = &prog.traces[*t as usize];
+                for i in 0..8 {
+                    trace[i] += tr[i];
+                }
+                for i in probes.0 as usize..probes.1 as usize {
+                    let raw = sink.probe(&prog.probes[i], addrs[i]);
+                    cycles += vecunit::miss_cost(soc, raw);
+                }
+            }
+            TCmd::Enter { ctr, count } => {
+                ctrs[*ctr as usize] = *count;
+            }
+            TCmd::Back { ctr, back, deltas } => {
+                let c = &mut ctrs[*ctr as usize];
+                *c -= 1;
+                if *c > 0 {
+                    for &(p, d) in &prog.deltas[deltas.0 as usize..deltas.1 as usize] {
+                        addrs[p as usize] = addrs[p as usize].wrapping_add_signed(d);
+                    }
+                    pc = *back as usize;
+                    continue;
+                }
+            }
+        }
+        pc += 1;
+    }
+    (cycles, trace)
+}
+
+fn to_counts(trace: [u64; 8]) -> TraceCounts {
+    let mut tc = TraceCounts::default();
+    for (i, g) in InstrGroup::ALL.iter().enumerate() {
+        tc.add(*g, trace[i]);
+    }
+    tc
+}
+
+/// One recorded cache playback: the raw miss penalty of every probe
+/// execution in order, plus the final cache statistics.
+pub struct Transcript {
+    sig: Vec<u64>,
+    warm: bool,
+    raws: Vec<f64>,
+    stats: CacheStats,
+}
+
+/// Round-scoped memo of cache transcripts, shared by candidates whose
+/// address streams are identical (same buffer layout + stride pattern,
+/// possibly different compute decisions). Poison-tolerant like the
+/// measurement pool: the protected state is append-only.
+#[derive(Default)]
+pub struct TranscriptCache {
+    map: Mutex<HashMap<u64, Vec<Arc<Transcript>>>>,
+}
+
+impl TranscriptCache {
+    pub fn new() -> TranscriptCache {
+        TranscriptCache::default()
+    }
+
+    /// Number of recorded transcripts (diagnostics/tests).
+    pub fn entries(&self) -> usize {
+        let map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
+        map.values().map(|v| v.len()).sum()
+    }
+
+    fn lookup(&self, key: u64, sig: &[u64], warm: bool) -> Option<Arc<Transcript>> {
+        let map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
+        map.get(&key)?.iter().find(|t| t.warm == warm && t.sig == sig).cloned()
+    }
+
+    fn insert(&self, key: u64, t: Transcript) {
+        let mut map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
+        let slot = map.entry(key).or_default();
+        // A racing worker may have recorded the same stream; keep one.
+        if !slot.iter().any(|e| e.warm == t.warm && e.sig == t.sig) {
+            slot.push(Arc::new(t));
+        }
+    }
+}
+
+/// Execute a threaded program. Bit-identical to
+/// [`compiled::run_limited`] over the same program and SoC (which must
+/// be the SoC it was compiled for): same cycles, trace, `CacheStats`,
+/// and budget verdict. With `transcripts`, probe penalties are replayed
+/// from a prior identical-stream run when available, or recorded for
+/// the next candidate.
+pub fn execute_threaded(
+    soc: &SocConfig,
+    prog: &ThreadedProgram,
+    warm: bool,
+    limits: ExecLimits,
+    transcripts: Option<&TranscriptCache>,
+) -> Result<ExecResult, SimBudgetExceeded> {
+    if prog.total_steps > limits.max_steps {
+        return Err(SimBudgetExceeded { max_steps: limits.max_steps });
+    }
+    let memo = transcripts.filter(|_| prog.n_probe_calls <= MAX_MEMO_PROBES);
+    if let Some(tc) = memo {
+        if let Some(t) = tc.lookup(prog.key, &prog.sig, warm) {
+            let mut sink = ReplaySink { raws: &t.raws, k: 0 };
+            let (cycles, trace) = run_cmds(prog, soc, &mut sink);
+            debug_assert_eq!(sink.k, t.raws.len(), "transcript length mismatch");
+            return Ok(ExecResult { cycles, trace: to_counts(trace), cache: t.stats });
+        }
+    }
+    let mut cache = Cache::new(soc.cache);
+    if warm {
+        for &(base, bytes) in &prog.warm {
+            cache.warm_l2(base, bytes);
+        }
+    }
+    let mut rec = memo.map(|_| Vec::with_capacity(prog.n_probe_calls as usize));
+    let (cycles, trace) = {
+        let mut sink = LiveSink { cache: &mut cache, rec: rec.as_mut() };
+        run_cmds(prog, soc, &mut sink)
+    };
+    let stats = cache.stats;
+    if let (Some(tc), Some(raws)) = (memo, rec) {
+        tc.insert(prog.key, Transcript { sig: prog.sig.clone(), warm, raws, stats });
+    }
+    Ok(ExecResult { cycles, trace: to_counts(trace), cache: stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Lmul, Sew};
+    use crate::sim::vprogram::{AddrExpr, Inst, LoopNode, MemRef, Node};
+    use crate::tir::DType;
+
+    fn soc() -> SocConfig {
+        SocConfig::saturn(256)
+    }
+
+    /// Reference result: the compiled-tree tier over the same warm cache
+    /// setup `execute` would use.
+    fn run_compiled(
+        p: &VProgram,
+        soc: &SocConfig,
+        limits: ExecLimits,
+    ) -> Result<ExecResult, SimBudgetExceeded> {
+        let cp = compiled::compile(p, soc);
+        let bases = buffer_bases(p);
+        let buf_lens: Vec<usize> = p.buffers.iter().map(|b| b.len).collect();
+        let mut cache = Cache::new(soc.cache);
+        for (decl, &base) in p.buffers.iter().zip(&bases) {
+            cache.warm_l2(base, (decl.len * decl.dtype.bytes()) as u64);
+        }
+        let (cycles, trace) =
+            compiled::run_limited(&cp, soc, &mut cache, &bases, &buf_lens, limits)?;
+        Ok(ExecResult { cycles, trace, cache: cache.stats })
+    }
+
+    /// A 2-deep loop nest with a strided inner load and an outer-indexed
+    /// store: exercises iter0 specialization, steady regions, and the
+    /// cross-level delta formula.
+    fn nested_program() -> VProgram {
+        let mut p = VProgram::new("nested");
+        let a = p.add_buffer("a", DType::I8, 4096);
+        let c = p.add_buffer("c", DType::I32, 64);
+        let i = p.fresh_var();
+        let j = p.fresh_var();
+        let inner = vec![
+            Node::Inst(Inst::VSetVl { vl: 16, sew: Sew::E8, lmul: Lmul::M1, float: false }),
+            Node::Inst(Inst::VLoad {
+                vd: 0,
+                mem: MemRef::strided(
+                    a,
+                    AddrExpr::var(i, 512).plus_expr(&AddrExpr::var(j, 32)),
+                    2,
+                ),
+            }),
+        ];
+        let body = vec![
+            Node::Loop(LoopNode { var: j, extent: 5, unroll: 1, body: inner }),
+            Node::Inst(Inst::VSetVl { vl: 8, sew: Sew::E32, lmul: Lmul::M1, float: false }),
+            Node::Inst(Inst::VStore { vs: 0, mem: MemRef::unit(c, AddrExpr::var(i, 8)) }),
+        ];
+        p.body.push(Node::Loop(LoopNode { var: i, extent: 7, unroll: 2, body }));
+        p
+    }
+
+    #[test]
+    fn nested_loops_match_compiled_tier() {
+        let soc = soc();
+        let p = nested_program();
+        let want = run_compiled(&p, &soc, ExecLimits::UNBOUNDED).unwrap();
+        let tp = compile(&p, &soc);
+        let got = execute_threaded(&soc, &tp, true, ExecLimits::UNBOUNDED, None).unwrap();
+        assert_eq!(want.cycles, got.cycles);
+        assert_eq!(want.trace, got.trace);
+        assert_eq!(want.cache, got.cache);
+        assert!(got.cache.accesses > 0, "probes must actually run");
+    }
+
+    #[test]
+    fn budget_verdict_matches_compiled_for_every_cutoff() {
+        let soc = soc();
+        let p = nested_program();
+        let tp = compile(&p, &soc);
+        // total_steps is exact, so verdicts flip at the same budget.
+        for ms in 0..tp.total_steps() + 2 {
+            let limits = ExecLimits { max_steps: ms };
+            let want = run_compiled(&p, &soc, limits);
+            let got = execute_threaded(&soc, &tp, true, limits, None);
+            assert_eq!(want.is_err(), got.is_err(), "budget {ms}");
+            if let (Ok(w), Ok(g)) = (want, got) {
+                assert_eq!(w.cycles, g.cycles, "budget {ms}");
+            }
+        }
+    }
+
+    #[test]
+    fn transcript_replay_is_bit_identical() {
+        let soc = soc();
+        let p = nested_program();
+        let tp = compile(&p, &soc);
+        let tc = TranscriptCache::new();
+        let live =
+            execute_threaded(&soc, &tp, true, ExecLimits::DEFAULT_MEASURE, Some(&tc)).unwrap();
+        assert_eq!(tc.entries(), 1);
+        let replayed =
+            execute_threaded(&soc, &tp, true, ExecLimits::DEFAULT_MEASURE, Some(&tc)).unwrap();
+        assert_eq!(tc.entries(), 1, "replay must not re-record");
+        assert_eq!(live.cycles, replayed.cycles);
+        assert_eq!(live.trace, replayed.trace);
+        assert_eq!(live.cache, replayed.cache);
+        // Cold and warm transcripts are distinct entries.
+        let cold =
+            execute_threaded(&soc, &tp, false, ExecLimits::DEFAULT_MEASURE, Some(&tc)).unwrap();
+        assert_eq!(tc.entries(), 2);
+        assert!(cold.cycles > live.cycles, "cold run must pay more misses");
+    }
+
+    /// Candidates that differ only in static compute cost share one
+    /// transcript: that is the round-level win the pool exploits.
+    #[test]
+    fn compute_only_differences_share_a_transcript() {
+        let soc = soc();
+        let mut p1 = nested_program();
+        let mut p2 = nested_program();
+        p1.body.insert(0, Node::Inst(Inst::SOps { count: 3 }));
+        p2.body.insert(0, Node::Inst(Inst::SOps { count: 200 }));
+        let t1 = compile(&p1, &soc);
+        let t2 = compile(&p2, &soc);
+        assert_eq!(t1.transcript_key(), t2.transcript_key());
+        assert_eq!(t1.sig, t2.sig);
+        let tc = TranscriptCache::new();
+        let r1 = execute_threaded(&soc, &t1, true, ExecLimits::DEFAULT_MEASURE, Some(&tc)).unwrap();
+        let r2 = execute_threaded(&soc, &t2, true, ExecLimits::DEFAULT_MEASURE, Some(&tc)).unwrap();
+        assert_eq!(tc.entries(), 1, "second candidate must replay, not record");
+        assert_eq!(r1.cache, r2.cache);
+        assert!(r2.cycles > r1.cycles, "compute delta must still show up");
+        // And the replayed result matches a transcript-free live run.
+        let fresh = execute_threaded(&soc, &t2, true, ExecLimits::DEFAULT_MEASURE, None).unwrap();
+        assert_eq!(fresh.cycles, r2.cycles);
+        assert_eq!(fresh.trace, r2.trace);
+        assert_eq!(fresh.cache, r2.cache);
+    }
+
+    /// Different stride patterns must not collide in the memo.
+    #[test]
+    fn stride_differences_do_not_share() {
+        let soc = soc();
+        let p1 = nested_program();
+        let mut p2 = nested_program();
+        // change the inner stride 2 -> 4
+        fn set_stride(nodes: &mut [Node], s: i64) {
+            for n in nodes {
+                match n {
+                    Node::Loop(l) => set_stride(&mut l.body, s),
+                    Node::Inst(Inst::VLoad { mem, .. }) => mem.stride = s,
+                    _ => {}
+                }
+            }
+        }
+        set_stride(&mut p2.body, 4);
+        let t1 = compile(&p1, &soc);
+        let t2 = compile(&p2, &soc);
+        assert_ne!(t1.sig, t2.sig);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn compile_time_bounds_cover_every_iteration() {
+        let soc = soc();
+        // In bounds on iteration 0, out of bounds on the last iteration.
+        let mut p = VProgram::new("oob-late");
+        let a = p.add_buffer("a", DType::I8, 64);
+        let i = p.fresh_var();
+        p.body.push(Node::Loop(LoopNode {
+            var: i,
+            extent: 8,
+            unroll: 1,
+            body: vec![
+                Node::Inst(Inst::VSetVl { vl: 16, sew: Sew::E8, lmul: Lmul::M1, float: false }),
+                Node::Inst(Inst::VLoad { vd: 0, mem: MemRef::unit(a, AddrExpr::var(i, 8)) }),
+            ],
+        }));
+        let _ = compile(&p, &soc);
+    }
+}

@@ -30,10 +30,12 @@ pub struct AddrExpr {
 }
 
 impl AddrExpr {
+    #[inline]
     pub fn constant(base: i64) -> AddrExpr {
         AddrExpr { base, coeffs: vec![] }
     }
 
+    #[inline]
     pub fn var(v: VarId, scale: i64) -> AddrExpr {
         AddrExpr { base: 0, coeffs: vec![(v, scale)] }
     }
@@ -82,7 +84,9 @@ impl AddrExpr {
     /// Each term contributes its extreme to one endpoint by sign, so the
     /// result is exact for affine expressions in independent variables and
     /// a sound over-approximation when one variable appears with mixed-sign
-    /// coefficients. This is the static bounds pass's abstract evaluation.
+    /// coefficients. This is the static bounds pass's abstract evaluation;
+    /// the threaded tier's flattener (`sim::threaded`) performs the same
+    /// fold per loop segment to prove probe bounds at compile time.
     pub fn range(&self, var_max: &[i64]) -> (i64, i64) {
         let (mut lo, mut hi) = (self.base, self.base);
         for &(v, c) in &self.coeffs {

@@ -39,9 +39,9 @@ pub use scheduler::{
     GradientScheduler, Pick, Plan, SchedulerKind, StaticAllocation, TaskScheduler, TaskView,
 };
 pub use search::{
-    measure_one_checked, panic_reason, tune_op, MeasureOutcome, MeasureTicket, Measurer, OpTuner,
-    PrepareOutcome, Prepared, PrepareTicket, ReplayCache, RoundOutcome, SearchConfig,
-    SerialMeasurer, TuneOutcome,
+    measure_one_checked, measure_spec_checked, panic_reason, tune_op, MeasureOutcome, MeasureSpec,
+    MeasureTicket, Measurer, OpTuner, PrepareOutcome, Prepared, PrepareTicket, ReplayCache,
+    RoundOutcome, SearchConfig, SerialMeasurer, TuneOutcome,
 };
 pub use space::{lower, program_for};
 pub use task::{allocate_trials, extract_tasks, floor_budget, TuneTask};

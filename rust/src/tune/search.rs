@@ -23,7 +23,9 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use crate::codegen;
-use crate::sim::{ExecLimits, ExecResult, SocConfig, VProgram};
+use crate::sim::{
+    ExecLimits, ExecResult, SocConfig, ThreadedProgram, TranscriptCache, VProgram,
+};
 use crate::tir::Op;
 use crate::util::Pcg;
 
@@ -38,6 +40,10 @@ use super::trace::{SpaceProgram, Trace};
 /// program bodies (they are moved to workers by reference count).
 pub struct Prepared {
     pub program: Arc<VProgram>,
+    /// The program lowered once to the threaded-code tier: the measure
+    /// stage replays this flat command stream instead of re-walking the
+    /// `CBlock` tree per measurement.
+    pub threaded: Arc<ThreadedProgram>,
     pub features: Vec<f32>,
 }
 
@@ -57,7 +63,12 @@ impl Prepared {
             panic!("{reason}");
         }
         let features = features::extract(op, trace, &program, soc);
-        Prepared { program: Arc::new(program), features }
+        // Lower to the threaded tier while we are still on the prepare
+        // path: its compile-time bounds proof panics into `try_build`'s
+        // quarantine exactly like the verify gate above, and the measure
+        // stage gets a decode-free command stream.
+        let threaded = Arc::new(crate::sim::threaded::compile(&program, soc));
+        Prepared { program: Arc::new(program), threaded, features }
     }
 
     /// Fault-contained [`Prepared::build`]: a panic anywhere in the prepare
@@ -144,6 +155,58 @@ pub fn measure_one_checked(
     }
 }
 
+/// One unit of measurement work: the program plus (when it came through
+/// [`Prepared::build`]) its pre-lowered threaded form, so workers never
+/// re-compile on the hot path. `bare` specs (no threaded form) lower on
+/// the worker — same result, one extra compile.
+#[derive(Clone)]
+pub struct MeasureSpec {
+    pub program: Arc<VProgram>,
+    pub threaded: Option<Arc<ThreadedProgram>>,
+}
+
+impl MeasureSpec {
+    pub fn bare(program: Arc<VProgram>) -> MeasureSpec {
+        MeasureSpec { program, threaded: None }
+    }
+
+    pub fn of(prepared: &Prepared) -> MeasureSpec {
+        MeasureSpec {
+            program: Arc::clone(&prepared.program),
+            threaded: Some(Arc::clone(&prepared.threaded)),
+        }
+    }
+}
+
+/// [`measure_one_checked`] over a [`MeasureSpec`]: executes the threaded
+/// form (lowering it first if the spec is bare), optionally sharing a
+/// round-scoped [`TranscriptCache`] so candidates with identical address
+/// streams replay one memoized cache transcript. Bit-identical to
+/// `measure_one_checked` by the threaded tier's invariant.
+pub fn measure_spec_checked(
+    soc: &SocConfig,
+    spec: &MeasureSpec,
+    limits: &ExecLimits,
+    transcripts: Option<&TranscriptCache>,
+) -> MeasureOutcome {
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        let lowered;
+        let threaded = match &spec.threaded {
+            Some(t) => t.as_ref(),
+            None => {
+                lowered = crate::sim::threaded::compile(&spec.program, soc);
+                &lowered
+            }
+        };
+        crate::sim::execute_threaded(soc, threaded, true, *limits, transcripts)
+    }));
+    match run {
+        Ok(Ok(res)) => MeasureOutcome::Measured(res),
+        Ok(Err(budget)) => MeasureOutcome::Failed { reason: budget.to_string() },
+        Err(payload) => MeasureOutcome::Failed { reason: panic_reason(payload) },
+    }
+}
+
 /// Handle for an in-flight prepare batch. `Ready` is the synchronous
 /// backend; `Pending` joins a parallel backend at the rendezvous.
 pub enum PrepareTicket {
@@ -206,6 +269,17 @@ pub trait Measurer {
                 .collect(),
         )
     }
+
+    /// Start measurement of a batch of [`MeasureSpec`]s (the pipelined
+    /// path used by [`tune_op`]). The default delegates to
+    /// `begin_measure` so backends that only override the program-level
+    /// API (including the fault-injection test measurers) keep
+    /// intercepting every candidate; the serial and pool backends
+    /// override this to execute the pre-lowered threaded form with a
+    /// round-scoped transcript cache.
+    fn begin_measure_specs(&self, soc: &SocConfig, specs: Vec<MeasureSpec>) -> MeasureTicket {
+        self.begin_measure(soc, specs.into_iter().map(|s| s.program).collect())
+    }
 }
 
 /// Single-threaded measurer (the default `begin_*` path).
@@ -214,6 +288,20 @@ pub struct SerialMeasurer;
 impl Measurer for SerialMeasurer {
     fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
         programs.iter().map(|p| measure_one(soc, p)).collect()
+    }
+
+    fn begin_measure_specs(&self, soc: &SocConfig, specs: Vec<MeasureSpec>) -> MeasureTicket {
+        // One transcript cache per batch: the same round-scoped sharing
+        // the pool does, so serial and pooled runs stay bit-identical.
+        let transcripts = TranscriptCache::new();
+        MeasureTicket::Ready(
+            specs
+                .iter()
+                .map(|s| {
+                    measure_spec_checked(soc, s, &ExecLimits::DEFAULT_MEASURE, Some(&transcripts))
+                })
+                .collect(),
+        )
     }
 }
 
@@ -675,7 +763,7 @@ impl<'a> OpTuner<'a> {
         // the misses go to the measurer (in chosen order, so the ticket's
         // outcomes rendezvous with the `None` slots).
         let mut cached: Vec<Option<f64>> = Vec::with_capacity(chosen.len());
-        let mut programs: Vec<Arc<VProgram>> = Vec::new();
+        let mut specs: Vec<MeasureSpec> = Vec::new();
         for &i in &chosen {
             let h = cands[i].fnv_hash();
             self.taken.insert(h);
@@ -683,14 +771,14 @@ impl<'a> OpTuner<'a> {
                 Some(&cycles) => cached.push(Some(cycles)),
                 None => {
                     cached.push(None);
-                    programs.push(Arc::clone(&prepared[i].program));
+                    specs.push(MeasureSpec::of(&prepared[i]));
                 }
             }
         }
-        let ticket = if programs.is_empty() {
+        let ticket = if specs.is_empty() {
             MeasureTicket::Ready(Vec::new())
         } else {
-            self.measurer.begin_measure(self.soc, programs)
+            self.measurer.begin_measure_specs(self.soc, specs)
         };
         self.queued += chosen.len();
         self.inflight = Some(InFlight {

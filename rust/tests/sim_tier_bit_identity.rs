@@ -1,0 +1,410 @@
+//! Tier bit-identity harness: the non-negotiable invariant of the
+//! threaded-code simulator tier is that cycles, `CacheStats`, and
+//! functional outputs are **bit-identical** to the reference interpreter.
+//! This suite drives a seeded differential corpus (all four op kinds ×
+//! every backend × sampled tuned traces, fused and unfused) through all
+//! three tiers on all four paper SoCs (saturn-256/512/1024, bpi-f3) and
+//! asserts:
+//!
+//! 1. interpreter == compiled == threaded on cycles, trace, CacheStats;
+//! 2. the threaded transcript record/replay paths equal the plain run
+//!    (so `MeasurePool` round-level memoization cannot perturb results);
+//! 3. functional-mode outputs still match a plain-rust reference (the
+//!    vectorized functional inner loops changed with this tier), and
+//!    functional-mode cycle/cache accounting equals the timing tiers.
+//!
+//! int8 only, like `differential_codegen`: integer semantics are exact,
+//! so any divergence is a simulator bug, never rounding.
+
+use rvv_tune::codegen::{self, Scenario};
+use rvv_tune::intrinsics::Registry;
+use rvv_tune::sim::{
+    execute, execute_tiered, requant_i64, BufStore, ExecLimits, ExecResult, Mode, SimTier,
+    SocConfig, TranscriptCache, VProgram,
+};
+use rvv_tune::tir::{ref_conv2d_acc, DType, EltwiseEpilogue, Op, Requant};
+use rvv_tune::tune::program_for;
+use rvv_tune::tune::space::{self};
+use rvv_tune::util::Pcg;
+
+/// The four SoCs of the paper's evaluation (§IV).
+fn paper_socs() -> Vec<SocConfig> {
+    vec![
+        SocConfig::saturn(256),
+        SocConfig::saturn(512),
+        SocConfig::saturn(1024),
+        SocConfig::bpi_f3(),
+    ]
+}
+
+struct Case {
+    op: Op,
+    a: Vec<i8>,
+    b: Vec<i8>,
+    bias: Vec<i32>,
+    y0: Vec<i8>,
+}
+
+fn rand_requant(rng: &mut Pcg) -> Requant {
+    Requant {
+        mult: (1 << 14) + rng.below(1 << 14) as i32,
+        shift: 18 + rng.below(6) as u32,
+        zp: rng.range_inclusive(-20, 20) as i32,
+    }
+}
+
+fn rand_i8s(rng: &mut Pcg, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range_inclusive(-128, 127) as i8).collect()
+}
+
+fn make_case(rng: &mut Pcg, kind: usize) -> Case {
+    let op = match kind {
+        0 => {
+            let m = rng.range_inclusive(1, 12) as usize;
+            let n = rng.range_inclusive(1, 12) as usize;
+            let k = rng.range_inclusive(4, 40) as usize;
+            Op::Matmul { m, n, k, dtype: DType::I8, requant: Some(rand_requant(rng)) }
+        }
+        1 => {
+            let spatial = rng.range_inclusive(1, 6) as usize;
+            let channels = rng.range_inclusive(2, 24) as usize;
+            let taps = *rng.choose(&[4usize, 9]);
+            let requant = rng.chance(0.5).then(|| rand_requant(rng));
+            Op::DwConv { spatial, channels, taps, dtype: DType::I8, requant }
+        }
+        2 => {
+            let len = rng.range_inclusive(8, 100) as usize;
+            Op::Eltwise { len, dtype: DType::I8 }
+        }
+        _ => {
+            let kh = rng.range_inclusive(1, 3) as usize;
+            let kw = rng.range_inclusive(1, 3) as usize;
+            let stride = rng.range_inclusive(1, 2) as usize;
+            let h = (rng.range_inclusive(1, 4) as usize - 1) * stride + kh;
+            let w = (rng.range_inclusive(1, 4) as usize - 1) * stride + kw;
+            let cin = rng.range_inclusive(1, 8) as usize;
+            let cout = rng.range_inclusive(1, 6) as usize;
+            Op::Conv2d {
+                h,
+                w,
+                cin,
+                cout,
+                kh,
+                kw,
+                stride,
+                dtype: DType::I8,
+                requant: Some(rand_requant(rng)),
+            }
+        }
+    };
+    let (a_len, b_len, acc_len) = match &op {
+        Op::Matmul { m, n, k, .. } => (m * k, n * k, m * n),
+        Op::DwConv { spatial, channels, taps, .. } => {
+            (spatial * taps * channels, taps * channels, spatial * channels)
+        }
+        Op::Eltwise { len, .. } => (*len, *len, *len),
+        Op::Conv2d { h, w, cin, cout, kh, kw, .. } => {
+            let d = op.conv_dims().unwrap();
+            (h * w * cin, cout * kh * kw * cin, d.pixels() * cout)
+        }
+    };
+    Case {
+        a: rand_i8s(rng, a_len),
+        b: rand_i8s(rng, b_len),
+        bias: (0..acc_len).map(|_| rng.range_inclusive(-2000, 2000) as i32).collect(),
+        y0: rand_i8s(rng, acc_len),
+        op,
+    }
+}
+
+fn reference_acc(c: &Case) -> Vec<i64> {
+    match &c.op {
+        Op::Matmul { m, n, k, .. } => {
+            let mut acc = vec![0i64; m * n];
+            for i in 0..*m {
+                for j in 0..*n {
+                    acc[i * n + j] = c.bias[i * n + j] as i64
+                        + (0..*k)
+                            .map(|kk| c.a[i * k + kk] as i64 * c.b[j * k + kk] as i64)
+                            .sum::<i64>();
+                }
+            }
+            acc
+        }
+        Op::DwConv { spatial, channels, taps, .. } => {
+            let (s, ch, t) = (*spatial, *channels, *taps);
+            let mut acc = vec![0i64; s * ch];
+            for si in 0..s {
+                for ci in 0..ch {
+                    acc[si * ch + ci] = c.bias[si * ch + ci] as i64
+                        + (0..t)
+                            .map(|ti| {
+                                c.a[si * t * ch + ti * ch + ci] as i64
+                                    * c.b[ti * ch + ci] as i64
+                            })
+                            .sum::<i64>();
+                }
+            }
+            acc
+        }
+        Op::Eltwise { len, .. } => (0..*len)
+            .map(|i| (c.y0[i] as i64 + c.a[i] as i64 * c.b[i] as i64).clamp(-128, 127))
+            .collect(),
+        Op::Conv2d { .. } => ref_conv2d_acc(c.op.conv_dims().unwrap(), &c.a, &c.b, &c.bias),
+    }
+}
+
+enum Expected {
+    OutI8(Vec<i8>),
+    AccI32(Vec<i32>),
+    AccI8(Vec<i8>),
+}
+
+fn expected(c: &Case) -> Expected {
+    let acc = reference_acc(c);
+    let requant = match &c.op {
+        Op::Matmul { requant, .. } | Op::DwConv { requant, .. } | Op::Conv2d { requant, .. } => {
+            *requant
+        }
+        Op::Eltwise { .. } => None,
+    };
+    match (&c.op, requant) {
+        (_, Some(rq)) => Expected::OutI8(
+            acc.iter().map(|&x| requant_i64(x, rq.mult, rq.shift, rq.zp) as i8).collect(),
+        ),
+        (Op::Eltwise { .. }, None) => Expected::AccI8(acc.iter().map(|&x| x as i8).collect()),
+        (_, None) => Expected::AccI32(acc.iter().map(|&x| x as i32).collect()),
+    }
+}
+
+/// One timing-mode run at an explicit tier.
+fn timing(soc: &SocConfig, program: &VProgram, tier: SimTier) -> ExecResult {
+    let mut bufs = BufStore::timing(program);
+    execute_tiered(soc, program, &mut bufs, Mode::Timing, true, ExecLimits::UNBOUNDED, tier, None)
+        .expect("unbounded run cannot blow the budget")
+}
+
+/// The core invariant: all tiers agree bit for bit, and the threaded
+/// transcript record/replay paths change nothing. Returns the reference
+/// result for further checks.
+fn assert_tiers_agree(soc: &SocConfig, program: &VProgram, label: &str) -> ExecResult {
+    let interp = timing(soc, program, SimTier::Interp);
+    for tier in [SimTier::Compiled, SimTier::Threaded] {
+        let r = timing(soc, program, tier);
+        let t = tier.name();
+        assert_eq!(interp.cycles, r.cycles, "{label}@{}: {t} cycles diverge", soc.name);
+        assert_eq!(interp.trace, r.trace, "{label}@{}: {t} trace diverges", soc.name);
+        assert_eq!(interp.cache, r.cache, "{label}@{}: {t} CacheStats diverge", soc.name);
+    }
+    // Record into a fresh transcript cache, then replay from it: both
+    // must equal the plain threaded run bit for bit.
+    let transcripts = TranscriptCache::new();
+    for pass in ["record", "replay"] {
+        let mut bufs = BufStore::timing(program);
+        let r = execute_tiered(
+            soc,
+            program,
+            &mut bufs,
+            Mode::Timing,
+            true,
+            ExecLimits::UNBOUNDED,
+            SimTier::Threaded,
+            Some(&transcripts),
+        )
+        .expect("unbounded run cannot blow the budget");
+        assert_eq!(interp.cycles, r.cycles, "{label}@{}: {pass} cycles diverge", soc.name);
+        assert_eq!(interp.trace, r.trace, "{label}@{}: {pass} trace diverges", soc.name);
+        assert_eq!(interp.cache, r.cache, "{label}@{}: {pass} CacheStats diverge", soc.name);
+    }
+    interp
+}
+
+/// Functional-mode run with real inputs: outputs must match the
+/// plain-rust reference, and the cycle/cache accounting (which functional
+/// mode shares with timing mode) must equal the timing tiers'.
+fn assert_functional_matches(soc: &SocConfig, program: &VProgram, c: &Case, label: &str) {
+    let timing_ref = assert_tiers_agree(soc, program, label);
+    let mut bufs = BufStore::functional(program);
+    match &c.op {
+        Op::Eltwise { .. } => {
+            bufs.set_i8(0, &c.a);
+            bufs.set_i8(1, &c.b);
+            bufs.set_i8(2, &c.y0);
+        }
+        _ => {
+            bufs.set_i8(0, &c.a);
+            bufs.set_i8(1, &c.b);
+            bufs.set_i32(2, &c.bias);
+        }
+    }
+    let rf = execute(soc, program, &mut bufs, Mode::Functional, true);
+    assert_eq!(timing_ref.cycles, rf.cycles, "{label}@{}: functional cycles", soc.name);
+    assert_eq!(timing_ref.cache, rf.cache, "{label}@{}: functional CacheStats", soc.name);
+    match expected(c) {
+        Expected::OutI8(want) => {
+            assert_eq!(bufs.get_i8(3), &want[..], "{label}@{}: OUT mismatch", soc.name)
+        }
+        Expected::AccI32(want) => {
+            assert_eq!(bufs.get_i32(2), &want[..], "{label}@{}: ACC mismatch", soc.name)
+        }
+        Expected::AccI8(want) => {
+            assert_eq!(bufs.get_i8(2), &want[..], "{label}@{}: y mismatch", soc.name)
+        }
+    }
+}
+
+#[test]
+fn tiers_bit_identical_on_differential_corpus() {
+    let mut rng = Pcg::seeded(0x71E5);
+    let mut checked = 0usize;
+    for case_idx in 0..16 {
+        let c = make_case(&mut rng, case_idx % 4);
+        let has_requant = matches!(
+            &c.op,
+            Op::Matmul { requant: Some(_), .. }
+                | Op::DwConv { requant: Some(_), .. }
+                | Op::Conv2d { requant: Some(_), .. }
+        );
+        for soc in paper_socs() {
+            let mut scenarios =
+                vec![Scenario::ScalarOs, Scenario::AutovecGcc, Scenario::AutovecLlvm];
+            if has_requant || matches!(&c.op, Op::DwConv { .. } | Op::Eltwise { .. }) {
+                scenarios.push(Scenario::MuRiscvNn);
+            }
+            scenarios.push(Scenario::PackedSimd);
+            for sc in &scenarios {
+                let Some(program) = codegen::generate(&c.op, sc, soc.vlen) else {
+                    continue;
+                };
+                assert_functional_matches(&soc, &program, &c, sc.name());
+                checked += 1;
+            }
+
+            let registry = Registry::build(soc.vlen);
+            let spacep = program_for(&c.op, &registry);
+            if !spacep.is_tunable() {
+                continue;
+            }
+            for _ in 0..2 {
+                let trace = spacep.sample(&mut rng);
+                let sched = space::lower(&trace).expect("sampled trace lowers");
+                let program = codegen::generate(&c.op, &Scenario::Ours(sched), soc.vlen)
+                    .expect("ours supports every tunable op");
+                assert_functional_matches(&soc, &program, &c, "ours");
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 150, "corpus too small: {checked} programs checked");
+}
+
+#[test]
+fn tiers_bit_identical_on_fused_corpus() {
+    let mut rng = Pcg::seeded(0x71E5F);
+    let mut checked = 0usize;
+    for case_idx in 0..8 {
+        // Kinds 0 (matmul) and 3 (conv2d) always carry requant.
+        let c = make_case(&mut rng, if case_idx % 2 == 0 { 0 } else { 3 });
+        let out_len = c.bias.len();
+        let epi = EltwiseEpilogue { len: out_len };
+        let res = rand_i8s(&mut rng, out_len);
+        let y0 = rand_i8s(&mut rng, out_len);
+        let rq = match &c.op {
+            Op::Matmul { requant: Some(rq), .. } | Op::Conv2d { requant: Some(rq), .. } => *rq,
+            _ => unreachable!("fused corpus only emits requant producers"),
+        };
+        let want: Vec<i8> = reference_acc(&c)
+            .iter()
+            .zip(&res)
+            .zip(&y0)
+            .map(|((&acc, &r), &y)| {
+                let q = requant_i64(acc, rq.mult, rq.shift, rq.zp) as i8;
+                (y as i64 + q as i64 * r as i64).clamp(-128, 127) as i8
+            })
+            .collect();
+
+        for soc in paper_socs() {
+            let check = |program: &VProgram, label: &str| {
+                let timing_ref = assert_tiers_agree(&soc, program, label);
+                let mut bufs = BufStore::functional(program);
+                bufs.set_i8(0, &c.a);
+                bufs.set_i8(1, &c.b);
+                bufs.set_i32(2, &c.bias);
+                bufs.set_i8(3, &res);
+                bufs.set_i8(4, &y0);
+                let rf = execute(&soc, program, &mut bufs, Mode::Functional, true);
+                assert_eq!(timing_ref.cycles, rf.cycles, "{label}@{}: cycles", soc.name);
+                assert_eq!(timing_ref.cache, rf.cache, "{label}@{}: CacheStats", soc.name);
+                assert_eq!(bufs.get_i8(4), &want[..], "{label}@{}: fused Y mismatch", soc.name);
+            };
+            for sc in [
+                Scenario::ScalarOs,
+                Scenario::AutovecGcc,
+                Scenario::AutovecLlvm,
+                Scenario::MuRiscvNn,
+                Scenario::PackedSimd,
+            ] {
+                let program = codegen::generate_fused(&c.op, &epi, &sc, soc.vlen)
+                    .unwrap_or_else(|| panic!("{} must fuse {}", sc.name(), c.op.key()));
+                check(&program, sc.name());
+                checked += 1;
+            }
+
+            let registry = Registry::build(soc.vlen);
+            let spacep = program_for(&c.op, &registry);
+            if !spacep.is_tunable() {
+                continue;
+            }
+            for _ in 0..2 {
+                let trace = spacep.sample(&mut rng);
+                let sched = space::lower(&trace).expect("sampled trace lowers");
+                let program =
+                    codegen::generate_fused(&c.op, &epi, &Scenario::Ours(sched), soc.vlen)
+                        .expect("ours fuses every tunable int8+requant producer");
+                check(&program, "ours");
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "fused corpus too small: {checked} programs checked");
+}
+
+/// Candidates in one batch that differ only in compute decisions share a
+/// transcript — and sharing must not perturb a third candidate with a
+/// *different* address stream measured through the same cache.
+#[test]
+fn shared_transcripts_do_not_leak_across_programs() {
+    let soc = SocConfig::saturn(512);
+    let mut rng = Pcg::seeded(0x5AFE);
+    let rq = Some(rand_requant(&mut rng));
+    let op = Op::Matmul { m: 8, n: 8, k: 32, dtype: DType::I8, requant: rq };
+    let registry = Registry::build(soc.vlen);
+    let spacep = program_for(&op, &registry);
+    let programs: Vec<VProgram> = (0..6)
+        .map(|_| {
+            let sched = space::lower(&spacep.sample(&mut rng)).expect("lowers");
+            codegen::generate(&op, &Scenario::Ours(sched), soc.vlen).expect("tunable")
+        })
+        .collect();
+    let solo: Vec<ExecResult> =
+        programs.iter().map(|p| timing(&soc, p, SimTier::Threaded)).collect();
+    let transcripts = TranscriptCache::new();
+    for round in 0..2 {
+        for (p, want) in programs.iter().zip(&solo) {
+            let mut bufs = BufStore::timing(p);
+            let r = execute_tiered(
+                &soc,
+                p,
+                &mut bufs,
+                Mode::Timing,
+                true,
+                ExecLimits::UNBOUNDED,
+                SimTier::Threaded,
+                Some(&transcripts),
+            )
+            .expect("unbounded");
+            assert_eq!(want.cycles, r.cycles, "round {round}: shared memo changed cycles");
+            assert_eq!(want.cache, r.cache, "round {round}: shared memo changed CacheStats");
+        }
+    }
+}
