@@ -120,6 +120,19 @@ net_tune_out="$(cargo run --release --quiet -- tune --workload model:anomaly-det
 grep -q "arena footprint" <<<"$net_tune_out" \
   || { echo "network tune output is missing the planned arena footprint"; exit 1; }
 
+echo "== front-door smoke: duplicate tenants coalesce onto one search =="
+# Four tenants submit the identical tune request through the serve front
+# door; the in-flight coalescer must fold them onto ONE search (the burst
+# is enqueued before the workers start, so the stats are deterministic),
+# and the warm lookups must hit via the lock-free snapshot path.
+serve_out="$(cargo run --release --quiet -- serve --workload matmul:64:int8 \
+  --soc saturn-256 --tenants 4 --trials 8 --no-mlp)"
+echo "$serve_out"
+grep -q "coalesce: callers=4 searches=1 coalesced=3" <<<"$serve_out" \
+  || { echo "front door did not coalesce 4 duplicate tenants onto 1 search"; exit 1; }
+grep -q "lookup: total=2 hits=1" <<<"$serve_out" \
+  || { echo "serve lookups did not go cold-miss then warm-hit"; exit 1; }
+
 echo "== crash-resume smoke: SIGKILL a journaled tune, then --resume =="
 # The real thing, not a simulation: start a journaled tuning run, SIGKILL
 # it mid-campaign, then resume from snapshot + journal. The resumed run

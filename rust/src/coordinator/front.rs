@@ -1,0 +1,418 @@
+//! The fleet front door: a bounded multi-tenant request layer over one
+//! [`TuneService`].
+//!
+//! Many concurrent tenants submit [`TuneRequest`]s / [`MeasureRequest`]s
+//! and receive tickets they can block on; a fixed worker crew drains a
+//! bounded queue behind them (back-pressure: submission blocks once
+//! `queue_capacity` jobs are pending, instead of letting a traffic spike
+//! buffer unboundedly). Three request classes, three disciplines:
+//!
+//! * **Tune** — expensive, so identical in-flight work is *coalesced*:
+//!   concurrent tune requests with the same `(Op::key, SoC)` attach to
+//!   the one running search and all receive the identical report. One
+//!   search's cost, N answers — and bit-identical to N serial calls,
+//!   because the service's per-op search seed depends only on the service
+//!   seed and the op key (tests prove byte-equality).
+//! * **Measure** — cheap and stateless; queued but never coalesced.
+//! * **Lookup** — served inline on the caller's thread from the
+//!   database's lock-free best-schedule snapshot
+//!   ([`SharedDatabase::best`]): a lookup never waits behind tuning
+//!   traffic and never touches a mutex, so the read path stays flat at
+//!   high QPS.
+//!
+//! [`SharedDatabase::best`]: crate::tune::SharedDatabase::best
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::tune::TuneRecord;
+
+use super::service::{MeasureRequest, Measurement, TuneReport, TuneRequest, TuneService};
+
+/// Poison-tolerant lock (the service-wide discipline): one panicking
+/// request must not wedge the front door for every other tenant.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Front-door construction options.
+#[derive(Clone, Debug)]
+pub struct FrontOptions {
+    /// Pending-job bound; submission blocks (back-pressure) beyond it.
+    pub queue_capacity: usize,
+    /// Worker threads draining the queue. Tuning itself already fans out
+    /// on the service's measure pool, so a handful of request workers
+    /// saturate it.
+    pub workers: usize,
+    /// Spawn the workers in [`FrontDoor::new`]. `false` + an explicit
+    /// [`FrontDoor::start`] lets a test (or the CLI demo) enqueue a whole
+    /// burst before any job runs — making coalescing deterministic.
+    pub autostart: bool,
+}
+
+impl Default for FrontOptions {
+    fn default() -> Self {
+        FrontOptions { queue_capacity: 64, workers: 4, autostart: true }
+    }
+}
+
+/// Front-door traffic counters (monotone; read via [`FrontDoor::stats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FrontStats {
+    /// Tune requests accepted (coalesced ones included).
+    pub tunes_submitted: u64,
+    /// Underlying searches actually run (`tunes_submitted - coalesced`).
+    pub searches_run: u64,
+    /// Tune requests that attached to an in-flight identical search.
+    pub coalesced: u64,
+    /// Measure requests accepted.
+    pub measures_submitted: u64,
+    /// Lookups served (inline, lock-free).
+    pub lookups: u64,
+    /// Of `lookups`, how many found a tuned best.
+    pub lookup_hits: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    tunes: AtomicU64,
+    searches: AtomicU64,
+    coalesced: AtomicU64,
+    measures: AtomicU64,
+    lookups: AtomicU64,
+    lookup_hits: AtomicU64,
+}
+
+/// One tuning job: the request, its coalescing key, and the slot its
+/// report lands in. Every coalesced ticket holds the same `Arc`.
+struct TuneJob {
+    key: String,
+    req: TuneRequest,
+    done: Mutex<Option<TuneReport>>,
+    cv: Condvar,
+}
+
+/// One measurement job (never coalesced).
+struct MeasureJob {
+    req: MeasureRequest,
+    done: Mutex<Option<Option<Measurement>>>,
+    cv: Condvar,
+}
+
+enum Job {
+    Tune(Arc<TuneJob>),
+    Measure(Arc<MeasureJob>),
+}
+
+/// Blockable handle for a submitted tune request.
+pub struct TuneTicket {
+    job: Arc<TuneJob>,
+}
+
+impl TuneTicket {
+    /// Block until the (possibly shared) search completes; every ticket
+    /// coalesced onto one job receives a clone of the identical report.
+    pub fn wait(self) -> TuneReport {
+        let mut slot = lock(&self.job.done);
+        while slot.is_none() {
+            slot = self.job.cv.wait(slot).unwrap_or_else(PoisonError::into_inner);
+        }
+        slot.clone().expect("loop exits only with a report")
+    }
+}
+
+/// Blockable handle for a submitted measure request.
+pub struct MeasureTicket {
+    job: Arc<MeasureJob>,
+}
+
+impl MeasureTicket {
+    /// Block until measured. `None` = the scenario does not support the
+    /// op (same contract as [`TuneService::measure`]).
+    pub fn wait(self) -> Option<Measurement> {
+        let mut slot = lock(&self.job.done);
+        while slot.is_none() {
+            slot = self.job.cv.wait(slot).unwrap_or_else(PoisonError::into_inner);
+        }
+        slot.clone().expect("loop exits only with a result")
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// State shared between submitters and workers.
+struct Shared {
+    service: Arc<TuneService>,
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    /// In-flight tune searches by coalescing key. An entry lives from
+    /// submission until its worker *finishes the search* (removed before
+    /// the report is published, so late arrivals during the search attach
+    /// and arrivals after it start a fresh — dedup-aware — search).
+    inflight: Mutex<HashMap<String, Arc<TuneJob>>>,
+    counters: Counters,
+}
+
+impl Shared {
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut q = lock(&self.queue);
+                loop {
+                    if let Some(job) = q.jobs.pop_front() {
+                        self.not_full.notify_one();
+                        break job;
+                    }
+                    if q.closed {
+                        return;
+                    }
+                    q = self.not_empty.wait(q).unwrap_or_else(PoisonError::into_inner);
+                }
+            };
+            match job {
+                Job::Tune(job) => {
+                    self.counters.searches.fetch_add(1, Ordering::Relaxed);
+                    let report = self.service.tune(&job.req);
+                    // Retire the coalescing entry *before* publishing: a
+                    // tenant that raced past this point starts a fresh
+                    // search (which dedups against the committed records)
+                    // instead of silently receiving a stale report.
+                    {
+                        let mut inflight = lock(&self.inflight);
+                        if inflight.get(&job.key).is_some_and(|j| Arc::ptr_eq(j, &job)) {
+                            inflight.remove(&job.key);
+                        }
+                    }
+                    *lock(&job.done) = Some(report);
+                    job.cv.notify_all();
+                }
+                Job::Measure(job) => {
+                    let result = self.service.measure(&job.req);
+                    *lock(&job.done) = Some(result);
+                    job.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    fn enqueue(&self, job: Job) {
+        let mut q = lock(&self.queue);
+        while q.jobs.len() >= self.capacity && !q.closed {
+            q = self.not_full.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+        q.jobs.push_back(job);
+        self.not_empty.notify_one();
+    }
+}
+
+/// The multi-tenant front door. Shareable by `&self` like the service it
+/// wraps; dropping it drains the queue (pending jobs complete) and joins
+/// the workers.
+pub struct FrontDoor {
+    shared: Arc<Shared>,
+    opts: FrontOptions,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl FrontDoor {
+    pub fn new(service: Arc<TuneService>, opts: FrontOptions) -> FrontDoor {
+        let shared = Arc::new(Shared {
+            service,
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: opts.queue_capacity.max(1),
+            inflight: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        });
+        let front = FrontDoor { shared, opts, workers: Mutex::new(Vec::new()) };
+        if front.opts.autostart {
+            front.start();
+        }
+        front
+    }
+
+    /// Spawn the worker crew (idempotent). Only needed with
+    /// `autostart: false`.
+    pub fn start(&self) {
+        let mut workers = lock(&self.workers);
+        if !workers.is_empty() {
+            return;
+        }
+        for i in 0..self.opts.workers.max(1) {
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("front-{i}"))
+                .spawn(move || shared.worker_loop())
+                .expect("spawning front-door worker");
+            workers.push(handle);
+        }
+    }
+
+    /// The service behind this front door.
+    pub fn service(&self) -> &TuneService {
+        &self.shared.service
+    }
+
+    /// Submit a tune request. If an identical search — same `(Op::key,
+    /// SoC)` — is already in flight, this request *coalesces onto it*: no
+    /// queue slot, no second search, and the returned ticket yields the
+    /// identical report (the first submission's trial budget governs).
+    /// Otherwise the request takes a queue slot, blocking for one when
+    /// the queue is full.
+    pub fn submit_tune(&self, req: TuneRequest) -> TuneTicket {
+        self.shared.counters.tunes.fetch_add(1, Ordering::Relaxed);
+        let key = format!("{}|{}", req.op.key(), self.shared.service.soc().name);
+        let (job, fresh) = {
+            let mut inflight = lock(&self.shared.inflight);
+            match inflight.get(&key) {
+                Some(job) => {
+                    self.shared.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                    (Arc::clone(job), false)
+                }
+                None => {
+                    let job = Arc::new(TuneJob {
+                        key: key.clone(),
+                        req,
+                        done: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    inflight.insert(key, Arc::clone(&job));
+                    (job, true)
+                }
+            }
+        };
+        // Enqueue outside the coalescing lock: a full queue blocks this
+        // submitter, and workers must still reach `inflight` to retire
+        // finished searches.
+        if fresh {
+            self.shared.enqueue(Job::Tune(Arc::clone(&job)));
+        }
+        TuneTicket { job }
+    }
+
+    /// Submit a measure request (queued, never coalesced).
+    pub fn submit_measure(&self, req: MeasureRequest) -> MeasureTicket {
+        self.shared.counters.measures.fetch_add(1, Ordering::Relaxed);
+        let job = Arc::new(MeasureJob { req, done: Mutex::new(None), cv: Condvar::new() });
+        self.shared.enqueue(Job::Measure(Arc::clone(&job)));
+        MeasureTicket { job }
+    }
+
+    /// Best-schedule lookup for an op on this service's target — served
+    /// inline on the caller's thread from the database's lock-free
+    /// snapshot; never queued, never behind a mutex.
+    pub fn lookup(&self, op_key: &str) -> Option<TuneRecord> {
+        self.shared.counters.lookups.fetch_add(1, Ordering::Relaxed);
+        let best = self.shared.service.db().best(op_key, &self.shared.service.soc().name);
+        if best.is_some() {
+            self.shared.counters.lookup_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        best
+    }
+
+    pub fn stats(&self) -> FrontStats {
+        let c = &self.shared.counters;
+        FrontStats {
+            tunes_submitted: c.tunes.load(Ordering::Relaxed),
+            searches_run: c.searches.load(Ordering::Relaxed),
+            coalesced: c.coalesced.load(Ordering::Relaxed),
+            measures_submitted: c.measures.load(Ordering::Relaxed),
+            lookups: c.lookups.load(Ordering::Relaxed),
+            lookup_hits: c.lookup_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for FrontDoor {
+    /// Graceful drain: close the queue (pending jobs still complete — a
+    /// worker exits only once the queue is empty) and join the crew.
+    fn drop(&mut self) {
+        lock(&self.shared.queue).closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for handle in lock(&self.workers).drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::Scenario;
+    use crate::coordinator::service::ServiceOptions;
+    use crate::coordinator::Target;
+    use crate::sim::SocConfig;
+    use crate::tir::{DType, Op};
+
+    fn front(vlen: u32, opts: FrontOptions) -> FrontDoor {
+        let service = Arc::new(TuneService::new(
+            Target::new(SocConfig::saturn(vlen)),
+            ServiceOptions { use_mlp: false, workers: 2, ..Default::default() },
+        ));
+        FrontDoor::new(service, opts)
+    }
+
+    #[test]
+    fn duplicate_burst_coalesces_to_one_search() {
+        let f = front(256, FrontOptions { autostart: false, ..Default::default() });
+        let op = Op::square_matmul(64, DType::I8);
+        // The whole burst lands before any worker runs, so every duplicate
+        // must attach to the first submission's job.
+        let tickets: Vec<TuneTicket> =
+            (0..4).map(|_| f.submit_tune(TuneRequest::new(op.clone(), 8))).collect();
+        let s = f.stats();
+        assert_eq!(s.tunes_submitted, 4);
+        assert_eq!(s.coalesced, 3);
+        f.start();
+        let reports: Vec<TuneReport> = tickets.into_iter().map(|t| t.wait()).collect();
+        assert_eq!(f.stats().searches_run, 1, "one search served the whole burst");
+        let h0 = reports[0].best().expect("matmul is tunable").trace.fnv_hash();
+        for r in &reports {
+            assert_eq!(r.best().unwrap().trace.fnv_hash(), h0);
+            assert_eq!(r.best().unwrap().cycles, reports[0].best().unwrap().cycles);
+        }
+    }
+
+    #[test]
+    fn lookup_is_inline_and_counts_hits() {
+        let f = front(256, FrontOptions::default());
+        let op = Op::square_matmul(64, DType::I8);
+        assert!(f.lookup(&op.key()).is_none());
+        f.submit_tune(TuneRequest::new(op.clone(), 8)).wait();
+        assert!(f.lookup(&op.key()).is_some());
+        let s = f.stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.lookup_hits, 1);
+    }
+
+    #[test]
+    fn measure_requests_flow_through_the_queue() {
+        let f = front(256, FrontOptions::default());
+        let op = Op::square_matmul(32, DType::I8);
+        let m = f
+            .submit_measure(MeasureRequest::new(op, Scenario::AutovecGcc))
+            .wait()
+            .expect("gcc autovec supports int matmul");
+        assert!(m.result.cycles > 0.0);
+        assert_eq!(f.stats().measures_submitted, 1);
+    }
+
+    #[test]
+    fn drop_drains_pending_jobs() {
+        let f = front(256, FrontOptions { autostart: false, workers: 1, ..Default::default() });
+        let op = Op::square_matmul(64, DType::I8);
+        let ticket = f.submit_tune(TuneRequest::new(op, 4));
+        f.start();
+        drop(f); // close + join: the pending search must still complete
+        assert!(ticket.wait().best().is_some());
+    }
+}

@@ -35,10 +35,12 @@
 //!   result collection, centralized learning) is the same as
 //!   MetaSchedule's.
 
+mod front;
 mod policy;
 mod pool;
 mod service;
 
+pub use front::{FrontDoor, FrontOptions, FrontStats, MeasureTicket, TuneTicket};
 pub use policy::{Fixed, ScenarioPolicy, TunedWithFallback};
 pub use pool::MeasurePool;
 pub use service::{

@@ -19,7 +19,8 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::codegen::{self, CodeSizeModel, Scenario};
 use crate::intrinsics::Registry;
@@ -31,8 +32,8 @@ use crate::tir::Op;
 use crate::tune::{
     extract_tasks, journal_path, tune_op, Checkpoint, CostModel, Database, FaultInjector,
     FaultPlan, HeuristicCostModel, JournalEntry, JournalWriter, MlpCostModel, OpTuner,
-    ReplayCache, RoundOutcome, SchedulerKind, SearchConfig, SharedDatabase, TaskScheduler,
-    TaskView, TuneOutcome, TuneRecord, TuneTask,
+    Prepared, ReplayCache, RoundOutcome, SchedulerKind, SearchConfig, SharedDatabase,
+    TaskScheduler, TaskView, TuneOutcome, TuneRecord, TuneTask,
 };
 use crate::util::{fnv1a_str, Json};
 
@@ -251,6 +252,17 @@ fn push_convergence(curve: &mut Vec<f64>, runs: &[TaskRun<'_>], soc: &str) {
     }
 }
 
+/// Poison-tolerant lock, applied at every service lock site: a panicking
+/// request (contained by `catch_unwind` further up, or crashing its own
+/// thread) may poison a mutex it held, but must not take down every other
+/// tenant's requests. The guarded state stays consistent under poisoning
+/// — per-op locks guard `()` and the lock registry is append-only — so
+/// inheriting the guard is always safe (the discipline PR 6 established
+/// for the pool and database, unified service-wide).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// Per-request cost-model constructor: called with the request's search
 /// seed. Requests get private model state, so concurrent tuning needs no
 /// lock around learning and stays deterministic.
@@ -274,6 +286,9 @@ pub struct TuneService {
     /// duplicate records, no interleaving-dependent results. Requests for
     /// different operators never touch each other's lock.
     tune_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    /// Tuning requests that warm-started from a neighbor SoC's records
+    /// (see [`TuneService::warm_start_from_neighbor`]).
+    warm_starts: AtomicU64,
 }
 
 impl TuneService {
@@ -323,6 +338,7 @@ impl TuneService {
             target,
             opts,
             tune_locks: Mutex::new(HashMap::new()),
+            warm_starts: AtomicU64::new(0),
         }
     }
 
@@ -383,7 +399,7 @@ impl TuneService {
 
     /// The per-operator in-flight lock (created on first use).
     fn op_lock(&self, op_key: &str) -> Arc<Mutex<()>> {
-        let mut locks = self.tune_locks.lock().unwrap();
+        let mut locks = lock(&self.tune_locks);
         locks.entry(op_key.to_string()).or_default().clone()
     }
 
@@ -392,15 +408,15 @@ impl TuneService {
     /// checkout and commit duplicate records. Different operators use
     /// different locks and proceed fully in parallel.
     fn tune_with_budget(&self, op: &Op, trials: usize) -> Option<TuneOutcome> {
-        let lock = self.op_lock(&op.key());
-        let _in_flight = lock.lock().unwrap();
+        let op_lock = self.op_lock(&op.key());
+        let _in_flight = lock(&op_lock);
         self.tune_locked(op, trials)
     }
 
     /// The tuning run proper; the caller must hold the op's in-flight lock.
     fn tune_locked(&self, op: &Op, trials: usize) -> Option<TuneOutcome> {
         let op_key = op.key();
-        let config = SearchConfig {
+        let mut config = SearchConfig {
             trials,
             seed: self.opts.seed ^ fnv1a_str(&op_key),
             ..Default::default()
@@ -410,6 +426,11 @@ impl TuneService {
         // measurement.
         let mut local: Database = self.db.checkout(&op_key, &self.target.soc.name);
         let seeded = local.len();
+        if seeded == 0 {
+            // Cold target: transfer from the nearest SoC neighbor that has
+            // already tuned this op, instead of starting from scratch.
+            self.warm_start_from_neighbor(op, &op_key, &mut config, model.as_mut());
+        }
         let outcome = tune_op(
             op,
             &self.target.soc,
@@ -423,6 +444,71 @@ impl TuneService {
         outcome
     }
 
+    /// Transfer warm-start for a SoC whose database has nothing for `op`:
+    /// walk the SoC zoo by ascending [`SocConfig::transfer_distance`]
+    /// (VLEN-dominant — "Closer the Gap" shows best schedules flip
+    /// primarily along that axis) and, from the nearest neighbor that has
+    /// records for this op, (a) seed the cost model with the donor's
+    /// measured (features, log-throughput) pairs *re-featurized under this
+    /// target*, and (b) inject the donor's best traces as the search's
+    /// first measured candidates ([`SearchConfig::seed_traces`]). Donor
+    /// traces the target cannot lower (VLEN-specific intrinsic shapes) are
+    /// skipped; if no donor has usable records the search starts cold,
+    /// unchanged.
+    fn warm_start_from_neighbor(
+        &self,
+        op: &Op,
+        op_key: &str,
+        config: &mut SearchConfig,
+        model: &mut dyn CostModel,
+    ) {
+        /// Donor records to transfer: enough to seed a first measured
+        /// batch without displacing most of the cold search's own picks.
+        const MAX_SEEDS: usize = 8;
+        let me = &self.target.soc;
+        let mut zoo: Vec<SocConfig> =
+            SocConfig::zoo().into_iter().filter(|s| s.name != me.name).collect();
+        zoo.sort_by(|a, b| {
+            me.transfer_distance(a)
+                .total_cmp(&me.transfer_distance(b))
+                .then_with(|| a.name.cmp(&b.name))
+        });
+        for donor in &zoo {
+            let donor_db = self.db.checkout(op_key, &donor.name);
+            if donor_db.is_empty() {
+                continue;
+            }
+            let mut recs: Vec<&TuneRecord> = donor_db.records().iter().collect();
+            recs.sort_by(|a, b| a.cycles.total_cmp(&b.cycles).then(a.trial.cmp(&b.trial)));
+            recs.truncate(MAX_SEEDS);
+            let mut feats = Vec::new();
+            let mut labels = Vec::new();
+            let mut seeds = Vec::new();
+            for r in &recs {
+                // Features must describe the candidate *on this target*
+                // (VLEN changes the emitted program); the donor's label is
+                // the transfer assumption — relative throughput carries.
+                let Ok(p) = Prepared::try_build(op, &r.trace, me) else { continue };
+                feats.push(p.features);
+                labels.push((r.macs as f64 / r.cycles.max(1.0)).ln());
+                seeds.push(r.trace.clone());
+            }
+            if seeds.is_empty() {
+                continue; // nothing from this donor lowers here; try the next
+            }
+            model.warm_start(&feats, &labels);
+            config.seed_traces = seeds;
+            self.warm_starts.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    }
+
+    /// Tuning requests so far that transfer-seeded from a neighbor SoC's
+    /// records instead of starting cold.
+    pub fn warm_start_count(&self) -> u64 {
+        self.warm_starts.load(Ordering::Relaxed)
+    }
+
     /// The scenario "ours" resolves to for `op`: the best already-tuned
     /// schedule if the database has one, otherwise tune now with `trials`
     /// as the budget, otherwise the compiler fallback.
@@ -434,8 +520,8 @@ impl TuneService {
         // Untuned so far: take the op's in-flight lock and re-check, so a
         // request that raced with another tuner of the same op reuses its
         // result (as a serial second call would) instead of re-tuning.
-        let lock = self.op_lock(&op_key);
-        let _in_flight = lock.lock().unwrap();
+        let op_lock = self.op_lock(&op_key);
+        let _in_flight = lock(&op_lock);
         if let Some(best) = self.db.best(&op_key, &self.target.soc.name) {
             return Scenario::Ours(best.schedule);
         }
@@ -573,13 +659,18 @@ impl TuneService {
 
         // Hold every task's in-flight lock for the whole run: rounds of
         // all tasks interleave, so same-op requests must serialize against
-        // the full network run, not one task's slice. `extract_tasks`
-        // returns tasks sorted by op key, so any two network runs acquire
-        // in the same global order (no deadlock), and single-op requests
-        // take exactly one of these locks.
-        let locks: Vec<Arc<Mutex<()>>> =
-            tasks.iter().map(|t| self.op_lock(&t.op.key())).collect();
-        let _guards: Vec<_> = locks.iter().map(|l| l.lock().unwrap()).collect();
+        // the full network run, not one task's slice. The key set is
+        // sorted and *deduped* before locking: two tasks sharing an op key
+        // (repeated identical layers) map to the same `Arc<Mutex>`, and
+        // locking it twice from one thread self-deadlocks. Sorted order
+        // means any two network runs acquire in the same global order (no
+        // cross-run deadlock), and single-op requests take exactly one of
+        // these locks.
+        let mut lock_keys: Vec<String> = tasks.iter().map(|t| t.op.key()).collect();
+        lock_keys.sort();
+        lock_keys.dedup();
+        let locks: Vec<Arc<Mutex<()>>> = lock_keys.iter().map(|k| self.op_lock(k)).collect();
+        let _guards: Vec<_> = locks.iter().map(|l| lock(l)).collect();
 
         let mut runs: Vec<TaskRun<'_>> = tasks
             .iter()
@@ -1040,5 +1131,110 @@ mod tests {
         // scoped threads by `&self`.
         fn assert_sync<T: Sync>() {}
         assert_sync::<TuneService>();
+    }
+
+    /// Regression for the acquire-all-locks self-deadlock: a network whose
+    /// layers all share one `Op::key` must lock that op's mutex exactly
+    /// once. Before the dedup, a duplicate key in the lock set put the
+    /// same `Arc<Mutex>` in the vec twice and hung on the second `lock()`.
+    #[test]
+    fn repeated_layer_network_does_not_self_deadlock() {
+        let s = heuristic_service(256);
+        let op = Op::square_matmul(32, DType::I8);
+        let layers = vec![op.clone(), op.clone(), op.clone()];
+        let report = s.tune_network(&layers, 12, 4);
+        assert_eq!(report.outcomes.len(), 1, "three identical layers, one task");
+        assert!(report.outcomes[0].1.is_some());
+        // And the op's lock is free again afterwards.
+        assert!(s.tune(&TuneRequest::new(op, 4)).outcome.is_some());
+    }
+
+    /// Scheduler that panics on its first pick — while `tune_network`
+    /// holds every task's in-flight lock, poisoning them as the panic
+    /// unwinds out of the service.
+    struct PanicScheduler;
+
+    impl TaskScheduler for PanicScheduler {
+        fn name(&self) -> &'static str {
+            "panic"
+        }
+
+        fn plan(
+            &mut self,
+            tasks: &[TuneTask],
+            total_trials: usize,
+            min_per_task: usize,
+        ) -> crate::tune::Plan {
+            SchedulerKind::Static.make().plan(tasks, total_trials, min_per_task)
+        }
+
+        fn next_task(&mut self, _views: &[TaskView<'_>]) -> Option<crate::tune::Pick> {
+            panic!("injected scheduler panic");
+        }
+    }
+
+    /// One panicking request must not take the service down for every
+    /// other tenant: the per-op locks it poisoned are inherited by the
+    /// poison-tolerant `lock()` helper, so follow-up requests still serve.
+    #[test]
+    fn poisoned_request_leaves_service_serving() {
+        let s = heuristic_service(256);
+        let op = Op::square_matmul(32, DType::I8);
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.tune_network_with(std::slice::from_ref(&op), 8, 4, &mut PanicScheduler)
+        }));
+        assert!(panicked.is_err(), "the injected panic must propagate to its caller");
+        // The panic unwound while holding the op's in-flight lock; a bare
+        // `.lock().unwrap()` here would cascade the poison and kill this
+        // (innocent) request.
+        let report = s.tune(&TuneRequest::new(op.clone(), 8));
+        assert!(report.outcome.is_some(), "service must keep serving after a poisoned request");
+        assert!(s.db().best(&op.key(), "saturn-256").is_some());
+    }
+
+    /// Warm-start transfer: a fresh SoC with an empty database seeds its
+    /// search from the nearest zoo neighbor's records and must match or
+    /// beat the cold start at the same trial budget.
+    #[test]
+    fn warm_start_from_neighbor_matches_or_beats_cold() {
+        let op = Op::square_matmul(64, DType::I8);
+        let budget = 16;
+
+        // Cold baseline: nothing to transfer from.
+        let cold = heuristic_service(256);
+        let cold_best =
+            cold.tune(&TuneRequest::new(op.clone(), budget)).best().unwrap().cycles;
+        assert_eq!(cold.warm_start_count(), 0, "no donor records, no warm start");
+
+        // Donor: the bpi-f3 (saturn-256's nearest neighbor — same VLEN,
+        // so every donor trace validates on the target) tunes the op
+        // with a bigger budget.
+        let donor = TuneService::new(
+            Target::new(SocConfig::bpi_f3()),
+            ServiceOptions { use_mlp: false, workers: 2, ..Default::default() },
+        );
+        let donor_report = donor.tune(&TuneRequest::new(op.clone(), 64));
+        let donor_best = donor_report.best().unwrap().trace.fnv_hash();
+
+        // Warm service: same target and options as `cold`, but its shared
+        // database holds the donor SoC's records (a fleet database serves
+        // many SoCs).
+        let warm = heuristic_service(256);
+        for rec in donor.db().snapshot().records() {
+            warm.db().add(rec.clone());
+        }
+        let warm_best =
+            warm.tune(&TuneRequest::new(op.clone(), budget)).best().unwrap().cycles;
+        assert_eq!(warm.warm_start_count(), 1);
+        // The donor's best schedule was actually measured on the target.
+        let local = warm.db().checkout(&op.key(), "saturn-256");
+        assert!(
+            local.records().iter().any(|r| r.trace.fnv_hash() == donor_best),
+            "donor's best trace must be in the warm run's measured set"
+        );
+        assert!(
+            warm_best <= cold_best,
+            "warm start ({warm_best}) must match or beat cold start ({cold_best}) at equal budget"
+        );
     }
 }

@@ -6,6 +6,7 @@
 //! rvv-tune ablation --id vl-ladder|j-variant|cost-model [--quick]
 //! rvv-tune tune     --workload matmul:128:int8 | model:bert-tiny:int8
 //!                   [--soc saturn-1024] [--trials 100] [--db db.json] [--no-mlp]
+//! rvv-tune serve    --workload matmul:64:int8 [--tenants 4] [--trials 16]
 //! rvv-tune trace    --workload matmul:64:int8 [--db db.json] [--trials 32]
 //! rvv-tune verify   --db db.json --workload matmul:64:int8 [--soc saturn-256]
 //! rvv-tune simulate --workload matmul:64:int8 --scenario muriscv-nn
@@ -17,8 +18,13 @@
 
 use std::path::PathBuf;
 
+use std::sync::Arc;
+
 use crate::codegen::Scenario;
-use crate::coordinator::{Fixed, SchedulerKind, ServiceOptions, Target, TuneRequest, TuneService};
+use crate::coordinator::{
+    Fixed, FrontDoor, FrontOptions, SchedulerKind, ServiceOptions, Target, TuneRequest,
+    TuneService,
+};
 use crate::isa::InstrGroup;
 use crate::sim::SocConfig;
 use crate::tir::{DType, Op};
@@ -50,6 +56,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "converge" => cmd_converge(&args),
         "ablation" => cmd_ablation(&args),
         "tune" => cmd_tune(&args),
+        "serve" => cmd_serve(&args),
         "trace" => cmd_trace(&args),
         "verify" => cmd_verify(&args),
         "simulate" => cmd_simulate(&args),
@@ -80,6 +87,10 @@ USAGE: rvv-tune <subcommand> [options]
             PATH.journal.jsonl (crash-safe); --resume recovers the
             snapshot + journal of a killed run and replays it without
             re-measuring recovered candidates
+  serve     front-door demo: --tenants N concurrent duplicate tune
+            requests per op coalesce onto one search (reports the
+            coalescing stats), plus lock-free best-schedule lookups
+            before and after
   trace     dump the decision trace of the best record per op (for a
             Conv2d this shows the strategy decision first — im2col vs
             direct — then the branch's decisions), with the static
@@ -388,6 +399,77 @@ fn cmd_tune(args: &Args) -> i32 {
             return 1;
         }
         println!("database saved to {}", path.display());
+    }
+    0
+}
+
+/// Front-door demo: N tenants submit identical tune requests per op, the
+/// coalescer folds them onto one search each, and lookups before/after
+/// show the lock-free snapshot path. The burst is enqueued before the
+/// workers start, so the reported coalescing stats are deterministic —
+/// `ci.sh` greps them.
+fn cmd_serve(args: &Args) -> i32 {
+    let spec = args.get_or("workload", "matmul:64:int8");
+    let (name, layers, _) = match parse_workload(spec) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let service = match service_from(args) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let tenants = args.get_usize("tenants", 4).max(1);
+    let trials = args.get_usize("trials", 16);
+    let front = FrontDoor::new(service, FrontOptions { autostart: false, ..Default::default() });
+    println!(
+        "serve demo: {name} on {} — {tenants} tenant(s) per op, {trials} trials",
+        front.service().soc().name
+    );
+    // Cold lookups first: every op misses (nothing tuned yet).
+    for op in &layers {
+        front.lookup(&op.key());
+    }
+    // The whole burst lands before any worker runs, so duplicates
+    // provably coalesce instead of racing the first search's completion.
+    let tickets: Vec<_> = layers
+        .iter()
+        .flat_map(|op| {
+            (0..tenants).map(|_| front.submit_tune(TuneRequest::new(op.clone(), trials)))
+        })
+        .collect();
+    front.start();
+    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    // Warm lookups: every tunable op now hits, lock-free.
+    for op in &layers {
+        front.lookup(&op.key());
+    }
+    let s = front.stats();
+    println!(
+        "coalesce: callers={} searches={} coalesced={}",
+        s.tunes_submitted, s.searches_run, s.coalesced
+    );
+    println!("lookup: total={} hits={} (lock-free snapshot reads)", s.lookups, s.lookup_hits);
+    println!("warm-start: {} request(s) transfer-seeded", front.service().warm_start_count());
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &reports {
+        if !seen.insert(r.op_key.clone()) {
+            continue;
+        }
+        match r.best() {
+            Some(b) => println!(
+                "  {}: best {} cycles ({})",
+                r.op_key,
+                fnum(b.cycles),
+                b.schedule.describe()
+            ),
+            None => println!("  {}: fallback (no matching intrinsic)", r.op_key),
+        }
     }
     0
 }

@@ -123,6 +123,45 @@ impl SocConfig {
     pub fn cycles_to_us(&self, cycles: f64) -> f64 {
         cycles / self.clock_mhz
     }
+
+    /// Every preset the service knows about — the SoC zoo a multi-tenant
+    /// deployment can warm-start transfers across.
+    pub fn zoo() -> Vec<SocConfig> {
+        let mut socs: Vec<SocConfig> =
+            [128u32, 256, 512, 1024, 2048].iter().map(|&v| SocConfig::saturn(v)).collect();
+        socs.push(SocConfig::bpi_f3());
+        socs
+    }
+
+    /// Tuning-transfer distance to another SoC: how differently should we
+    /// expect best schedules to look? Dominated by the VLEN ratio (it
+    /// decides which intrinsic shapes exist at all and how chunked loops
+    /// chime — "Closer the Gap" shows best schedules flip across RVV
+    /// processors primarily along this axis), with pipeline terms
+    /// (miss-hiding, datapath width, scalar issue) as tie-breakers.
+    /// Symmetric; 0 against an identically parameterized SoC.
+    pub fn transfer_distance(&self, other: &SocConfig) -> f64 {
+        let vlen = (self.vlen as f64).log2() - (other.vlen as f64).log2();
+        let dlen = (self.dlen as f64).log2() - (other.dlen as f64).log2();
+        let overlap = self.mem_overlap - other.mem_overlap;
+        let ipc = self.scalar_ipc - other.scalar_ipc;
+        4.0 * vlen.abs() + 1.0 * dlen.abs() + 2.0 * overlap.abs() + 0.5 * ipc.abs()
+    }
+
+    /// The zoo member closest to `self` by [`SocConfig::transfer_distance`],
+    /// excluding any SoC with `self`'s own name. Deterministic: distance
+    /// ties break toward the lexicographically smaller name. `None` only
+    /// if the zoo holds nothing but `self`.
+    pub fn nearest_neighbor(&self) -> Option<SocConfig> {
+        SocConfig::zoo()
+            .into_iter()
+            .filter(|s| s.name != self.name)
+            .min_by(|a, b| {
+                let da = self.transfer_distance(a);
+                let db = self.transfer_distance(b);
+                da.total_cmp(&db).then_with(|| a.name.cmp(&b.name))
+            })
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +182,42 @@ mod tests {
         let s1024 = SocConfig::saturn(1024);
         assert!(s1024.issue_overhead > s256.issue_overhead);
         assert_eq!(s256.dlen, s1024.dlen); // fixed datapath across the sweep
+    }
+
+    #[test]
+    fn transfer_distance_is_symmetric_and_vlen_dominant() {
+        let s256 = SocConfig::saturn(256);
+        let s512 = SocConfig::saturn(512);
+        let s2048 = SocConfig::saturn(2048);
+        assert_eq!(s256.transfer_distance(&s256), 0.0);
+        assert_eq!(s256.transfer_distance(&s512), s512.transfer_distance(&s256));
+        // One VLEN doubling is closer than three.
+        assert!(s256.transfer_distance(&s512) < s256.transfer_distance(&s2048));
+        // Same VLEN but a different pipeline beats any VLEN doubling.
+        let bpi = SocConfig::bpi_f3();
+        assert!(s256.transfer_distance(&bpi) < s256.transfer_distance(&s512));
+    }
+
+    #[test]
+    fn nearest_neighbor_is_deterministic_and_excludes_self() {
+        let s512 = SocConfig::saturn(512);
+        let n = s512.nearest_neighbor().unwrap();
+        assert_ne!(n.name, s512.name);
+        // Distance-1-doubling tie between saturn-256 and saturn-1024
+        // breaks to the lexicographically smaller name.
+        assert_eq!(n.name, "saturn-1024");
+        assert_eq!(s512.nearest_neighbor().unwrap().name, n.name);
+        // Same-VLEN pipeline variation dominates the metric.
+        assert_eq!(SocConfig::bpi_f3().nearest_neighbor().unwrap().name, "saturn-256");
+    }
+
+    #[test]
+    fn zoo_members_resolve_by_name() {
+        let zoo = SocConfig::zoo();
+        assert!(zoo.len() >= 6);
+        for soc in &zoo {
+            assert_eq!(SocConfig::by_name(&soc.name).unwrap().name, soc.name);
+        }
     }
 
     #[test]

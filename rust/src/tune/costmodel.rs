@@ -20,6 +20,17 @@ pub trait CostModel {
     fn score(&mut self, feats: &[Vec<f32>]) -> Vec<f64>;
     /// Feed measured (features, log-throughput) pairs and refit.
     fn update(&mut self, feats: &[Vec<f32>], log_throughput: &[f64]);
+    /// Transfer-seed the model before the first round from records
+    /// measured on a *neighboring* SoC (the service's warm-start path for
+    /// a target with an empty database). Default: treat the donor pairs
+    /// as one ordinary training batch — learned models fit them, analytic
+    /// models (whose `update` is a no-op) ignore them. Implementations
+    /// may override to, e.g., down-weight foreign-SoC labels.
+    fn warm_start(&mut self, feats: &[Vec<f32>], log_throughput: &[f64]) {
+        if !feats.is_empty() {
+            self.update(feats, log_throughput);
+        }
+    }
     fn name(&self) -> &'static str;
 }
 

@@ -31,7 +31,7 @@ use std::collections::{BTreeMap, HashSet};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -40,7 +40,7 @@ use crate::tune::fault::{FaultInjector, FsFault};
 use crate::tune::journal::{self, JournalEntry, JournalWriter};
 use crate::tune::space;
 use crate::tune::trace::Trace;
-use crate::util::{fnv1a_str, Json};
+use crate::util::{fnv1a_str, Json, SnapshotCell};
 
 /// On-disk database format. v1 (pre-trace) stored raw schedules in an
 /// untagged array; v2 stored decision traces under a version tag; v3
@@ -189,6 +189,25 @@ impl Database {
     /// Best record for an (op, soc) pair. Allocation-free lookup.
     pub fn best(&self, op_key: &str, soc: &str) -> Option<&TuneRecord> {
         self.best.get(op_key)?.get(soc).map(|&i| &self.records[i])
+    }
+
+    /// Owned copy of the best-record index: op key -> soc -> best record.
+    /// This is what [`SharedDatabase`] publishes as an immutable snapshot
+    /// for lock-free lookups; small (one record per tuned (op, soc) pair,
+    /// not per trial), so rebuilding it per commit is cheap.
+    pub(crate) fn best_map(&self) -> BestMap {
+        self.best
+            .iter()
+            .map(|(op, by_soc)| {
+                (
+                    op.clone(),
+                    by_soc
+                        .iter()
+                        .map(|(soc, &i)| (soc.clone(), self.records[i].clone()))
+                        .collect(),
+                )
+            })
+            .collect()
     }
 
     /// Has this exact trace (by decision values) already been measured for
@@ -402,11 +421,24 @@ fn lock(m: &Mutex<Database>) -> MutexGuard<'_, Database> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// The immutable best-schedule snapshot one shard publishes for
+/// lock-free [`SharedDatabase::best`] lookups: op key -> soc -> best
+/// record.
+pub type BestMap = BTreeMap<String, BTreeMap<String, TuneRecord>>;
+
 /// Thread-safe record store for the service layer: records are sharded by
 /// operator key, each shard behind its own lock. Requests touching
 /// different operators proceed in parallel; a tuning run checks out the
 /// relevant records, tunes against a private [`Database`], and commits the
 /// delta — so no shard lock is held across a measurement.
+///
+/// Best-schedule lookups take **no lock at all**: every write path
+/// rebuilds the touched shard's [`BestMap`] while still holding that
+/// shard's lock and publishes it through a [`SnapshotCell`] (an `Arc`
+/// swap), so [`SharedDatabase::best`] reads an immutable snapshot and
+/// high-QPS lookup traffic never contends with commits. Because the
+/// publish happens inside each per-op commit section, a reader sees an
+/// operator's committed records all-or-nothing, never a torn prefix.
 ///
 /// With a journal attached ([`SharedDatabase::attach_journal`]), every
 /// committed record is additionally appended to the crash journal and
@@ -414,6 +446,10 @@ fn lock(m: &Mutex<Database>) -> MutexGuard<'_, Database> {
 /// continues, [`SharedDatabase::journal_error_count`] records the loss).
 pub struct SharedDatabase {
     shards: Vec<Mutex<Database>>,
+    /// Per-shard immutable best-schedule snapshots, republished on every
+    /// mutation of the owning shard. The read side of the service's
+    /// lookup traffic; see [`SharedDatabase::best`].
+    bests: Vec<SnapshotCell<BestMap>>,
     /// Crash journal; `None` = journaling off. Never locked while a shard
     /// lock is held (commit releases shards before appending), so the
     /// journal → shards nesting in `save_and_compact` cannot deadlock.
@@ -430,6 +466,7 @@ impl SharedDatabase {
         let shards = shards.max(1);
         SharedDatabase {
             shards: (0..shards).map(|_| Mutex::new(Database::new())).collect(),
+            bests: (0..shards).map(|_| SnapshotCell::new(Arc::new(BestMap::new()))).collect(),
             journal: Mutex::new(None),
             journal_errors: AtomicU64::new(0),
         }
@@ -444,9 +481,20 @@ impl SharedDatabase {
         shared
     }
 
+    fn shard_index(&self, op_key: &str) -> usize {
+        (fnv1a_str(op_key) as usize) % self.shards.len()
+    }
+
     fn shard(&self, op_key: &str) -> &Mutex<Database> {
-        let i = (fnv1a_str(op_key) as usize) % self.shards.len();
-        &self.shards[i]
+        &self.shards[self.shard_index(op_key)]
+    }
+
+    /// Rebuild and publish shard `i`'s best-schedule snapshot. Must be
+    /// called with the shard's guard in hand: the guard both proves the
+    /// map is current and serializes publishers, so snapshot versions
+    /// can never be published out of order.
+    fn publish_best(&self, i: usize, shard: &Database) {
+        self.bests[i].store(Arc::new(shard.best_map()));
     }
 
     pub fn shard_count(&self) -> usize {
@@ -508,12 +556,36 @@ impl SharedDatabase {
     /// Insert one record (takes the owning shard's lock briefly).
     pub fn add(&self, rec: TuneRecord) {
         self.journal_records(std::iter::once(&rec));
-        lock(self.shard(&rec.op_key)).add(rec);
+        let i = self.shard_index(&rec.op_key);
+        let mut shard = lock(&self.shards[i]);
+        shard.add(rec);
+        self.publish_best(i, &shard);
     }
 
     /// Cloned best record for an (op, soc) pair.
+    ///
+    /// **Lock-free:** reads the shard's immutable [`BestMap`] snapshot
+    /// via [`SnapshotCell::load`] — no mutex is acquired, so lookups
+    /// never contend with `add`/`commit` or with each other. The
+    /// snapshot is republished inside every shard-mutating section, so
+    /// a lookup racing a commit sees the pre- or post-commit best,
+    /// never a torn intermediate.
     pub fn best(&self, op_key: &str, soc: &str) -> Option<TuneRecord> {
-        lock(self.shard(op_key)).best(op_key, soc).cloned()
+        self.bests[self.shard_index(op_key)]
+            .load()
+            .get(op_key)
+            .and_then(|by_soc| by_soc.get(soc))
+            .cloned()
+    }
+
+    /// Test hook: run `f` while `op_key`'s shard mutex is deliberately
+    /// held. Used to prove the lookup hot path takes no shard lock — a
+    /// `best()` call inside `f` deadlocks under a mutex-guarded read
+    /// path and returns instantly under the snapshot read path.
+    #[doc(hidden)]
+    pub fn while_shard_locked<R>(&self, op_key: &str, f: impl FnOnce() -> R) -> R {
+        let _guard = lock(self.shard(op_key));
+        f()
     }
 
     pub fn len(&self) -> usize {
@@ -560,10 +632,12 @@ impl SharedDatabase {
             by_key.entry(&rec.op_key).or_default().push(rec);
         }
         for (key, recs) in by_key {
-            let mut shard = lock(self.shard(key));
+            let i = self.shard_index(key);
+            let mut shard = lock(&self.shards[i]);
             for rec in recs {
                 shard.add(rec.clone());
             }
+            self.publish_best(i, &shard);
         }
         self.journal_records(delta.iter());
     }
@@ -1013,5 +1087,35 @@ mod tests {
         let shared = SharedDatabase::from_database(db, 8);
         assert_eq!(shared.len(), 2);
         assert_eq!(shared.best("y", "saturn-256").unwrap().cycles, 20.0);
+    }
+
+    /// The lookup hot path must not acquire any shard mutex: calling
+    /// `best()` while the owning shard's lock is deliberately held would
+    /// deadlock under the old mutex-guarded read path, and completes
+    /// instantly under the snapshot read path.
+    #[test]
+    fn best_takes_no_shard_lock() {
+        let shared = SharedDatabase::new(1); // one shard: every key collides
+        shared.add(rec("a", 42.0, 0));
+        let got = shared.while_shard_locked("a", || shared.best("a", "saturn-256"));
+        assert_eq!(got.unwrap().cycles, 42.0);
+        // And a key that was never tuned reads (lock-free) as absent.
+        let miss = shared.while_shard_locked("a", || shared.best("nope", "saturn-256"));
+        assert!(miss.is_none());
+    }
+
+    /// Each write publishes a fresh best snapshot; lookups track it.
+    #[test]
+    fn best_snapshot_tracks_commits() {
+        let shared = SharedDatabase::new(2);
+        assert!(shared.best("a", "saturn-256").is_none());
+        shared.add(rec("a", 500.0, 0));
+        assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 500.0);
+        let mut local = shared.checkout("a", "saturn-256");
+        let seeded = local.len();
+        local.add(rec("a", 250.0, 1));
+        local.add(rec("a", 900.0, 2)); // worse: must not displace the best
+        shared.commit(&local, seeded);
+        assert_eq!(shared.best("a", "saturn-256").unwrap().cycles, 250.0);
     }
 }

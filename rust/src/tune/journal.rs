@@ -143,6 +143,19 @@ impl JournalWriter {
             .truncate(truncate)
             .open(path)
             .with_context(|| format!("opening journal {path:?}"))?;
+        // Durability of the *file's existence*: per-line fsyncs persist the
+        // journal's contents, but the directory entry naming the freshly
+        // created file is metadata of the parent dir — without syncing it, a
+        // crash after the first commit can lose the whole journal file,
+        // breaking the "at most one line lost" guarantee. Best-effort,
+        // mirroring the rename path in `Database::save_with`.
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Ok(d) = File::open(parent) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
         Ok(JournalWriter { file, path: path.to_path_buf(), faults: None })
     }
 

@@ -330,6 +330,13 @@ pub struct SearchConfig {
     /// disables the cap. Isolated failures never trip it: any successful
     /// measurement resets the streak.
     pub max_consecutive_failures: usize,
+    /// Warm-start traces (typically a neighboring SoC's best records, see
+    /// the service's transfer path): validated against this op's space,
+    /// injected ahead of the first round's sampled population, and
+    /// force-included in its measured batch. They consume trial budget
+    /// like any measured candidate but no PRNG draws, and when empty the
+    /// search is bit-identical to a run without this field.
+    pub seed_traces: Vec<Trace>,
 }
 
 impl Default for SearchConfig {
@@ -343,6 +350,7 @@ impl Default for SearchConfig {
             epsilon: 0.25,
             seed: 42,
             max_consecutive_failures: 16,
+            seed_traces: Vec::new(),
         }
     }
 }
@@ -478,6 +486,10 @@ pub struct OpTuner<'a> {
     /// Recovery cache for this `(op, soc)` task (see [`ReplayCache`]).
     replay: HashMap<u64, f64>,
     replayed: usize,
+    /// Validated warm-start traces awaiting injection into the first
+    /// generated round (drained by `step_round`; see
+    /// [`SearchConfig::seed_traces`]).
+    seeds: Vec<Trace>,
 }
 
 impl<'a> OpTuner<'a> {
@@ -524,6 +536,17 @@ impl<'a> OpTuner<'a> {
             .filter(|r| r.op_key == op_key && r.soc == soc.name)
             .map(|r| r.trace.fnv_hash())
             .collect();
+        // Warm-start traces come from a *different* SoC's records, so a
+        // trace may be invalid here (e.g. an intrinsic shape this VLEN
+        // does not offer); keep only the ones this op's space can replay,
+        // and only those not already measured for this (op, soc).
+        let mut seed_seen = taken.clone();
+        let seeds: Vec<Trace> = config
+            .seed_traces
+            .iter()
+            .filter(|t| space.validates(t) && seed_seen.insert(t.fnv_hash()))
+            .cloned()
+            .collect();
         Some(OpTuner {
             op,
             soc,
@@ -545,7 +568,14 @@ impl<'a> OpTuner<'a> {
             abort_reason: None,
             replay: HashMap::new(),
             replayed: 0,
+            seeds,
         })
+    }
+
+    /// Validated warm-start traces still awaiting injection (empty after
+    /// the first generated round, or when none were configured).
+    pub fn pending_seeds(&self) -> usize {
+        self.seeds.len()
     }
 
     pub fn op_key(&self) -> &str {
@@ -668,8 +698,19 @@ impl<'a> OpTuner<'a> {
             };
             let mut cands: Vec<Trace> = Vec::new();
             let mut round_seen: HashSet<u64> = HashSet::new();
+            // Inject pending warm-start seeds ahead of the sampled
+            // population (first generated round only — `seeds` drains
+            // here). They are *extra* candidates: the sampling loop below
+            // still draws from the tuner's own PRNG exactly as it would
+            // without them, so a seedless config is bit-identical to the
+            // pre-warm-start search.
+            for t in std::mem::take(&mut self.seeds) {
+                round_seen.insert(t.fnv_hash());
+                cands.push(t);
+            }
+            let n_seeds = cands.len();
             let mut attempts = 0;
-            while cands.len() < gen_target && attempts < gen_target * 8 {
+            while cands.len() < gen_target + n_seeds && attempts < gen_target * 8 {
                 attempts += 1;
                 let t = if !self.elites.is_empty() && self.rng.chance(self.config.mutation_prob) {
                     let parent =
@@ -688,7 +729,7 @@ impl<'a> OpTuner<'a> {
                 None // space exhausted
             } else {
                 let ticket = self.measurer.begin_prepare(self.op, self.soc, &cands);
-                Some((cands, ticket))
+                Some((cands, ticket, n_seeds))
             }
         } else {
             None // budget spent
@@ -704,18 +745,22 @@ impl<'a> OpTuner<'a> {
         }
 
         // --- stage 3: score rendezvous, choose top-k, kick off measurement
-        let Some((gen_cands, pticket)) = round else { return RoundOutcome::Done };
+        let Some((gen_cands, pticket, n_seeds)) = round else { return RoundOutcome::Done };
         let outcomes = pticket.wait();
         // Quarantine candidates whose prepare chain failed: their hashes
         // enter `taken` so they are never drawn again, and the survivors
         // stay in generation order so the no-fault path is untouched.
+        // Seeds occupy the first `n_seeds` generation slots; `seed_flags`
+        // tracks which survivors are seeds through the compaction.
         let mut cands: Vec<Trace> = Vec::with_capacity(gen_cands.len());
         let mut prepared: Vec<Prepared> = Vec::with_capacity(gen_cands.len());
-        for (trace, outcome) in gen_cands.into_iter().zip(outcomes) {
+        let mut seed_flags: Vec<bool> = Vec::with_capacity(gen_cands.len());
+        for (gi, (trace, outcome)) in gen_cands.into_iter().zip(outcomes).enumerate() {
             match outcome {
                 Ok(p) => {
                     cands.push(trace);
                     prepared.push(p);
+                    seed_flags.push(gi < n_seeds);
                 }
                 Err(reason) => {
                     self.taken.insert(trace.fnv_hash());
@@ -749,14 +794,25 @@ impl<'a> OpTuner<'a> {
             .min(self.config.trials - self.queued)
             .min(self.round_cap)
             .min(order.len());
+        // Warm-start seeds are force-included ahead of the ranked picks —
+        // the whole point of transfer is measuring the neighbor's best
+        // schedules, not hoping a cold model ranks them up. The remaining
+        // slots run the normal epsilon-greedy selection over the non-seed
+        // candidates; with zero seeds every expression below degenerates
+        // to the plain `order`-based batch (and the same PRNG draws), so
+        // the seedless path is bit-identical to the pre-seed search.
+        let mut chosen: Vec<usize> =
+            (0..cands.len()).filter(|&i| seed_flags[i]).take(k).collect();
+        let slots = k - chosen.len();
+        let order: Vec<usize> = order.into_iter().filter(|&i| !seed_flags[i]).collect();
         // Epsilon-greedy batch: mostly the model's top ranks, plus a few
         // random picks from the remainder so a mislearned model cannot
         // starve good regions of the space.
-        let k_greedy = k - ((k as f64 * self.config.epsilon).round() as usize).min(k);
-        let mut chosen: Vec<usize> = order[..k_greedy].to_vec();
+        let k_greedy = slots - ((slots as f64 * self.config.epsilon).round() as usize).min(slots);
+        chosen.extend_from_slice(&order[..k_greedy]);
         let mut rest: Vec<usize> = order[k_greedy..].to_vec();
         self.rng.shuffle(&mut rest);
-        chosen.extend(rest.into_iter().take(k - k_greedy));
+        chosen.extend(rest.into_iter().take(slots - k_greedy));
 
         // Partition the chosen batch against the recovery cache: cache
         // hits carry their recorded cycles and are never submitted; only
@@ -1086,6 +1142,80 @@ mod tests {
             db.records().iter().map(|r| r.trace.fnv_hash()).collect()
         };
         assert_eq!(hashes(&db_a), hashes(&db_b));
+    }
+
+    /// Serial measurer that records the trace hashes of every prepare
+    /// batch (for asserting what a round generated, in order).
+    struct HashRecordingMeasurer(std::cell::RefCell<Vec<Vec<u64>>>);
+
+    impl Measurer for HashRecordingMeasurer {
+        fn measure(&self, soc: &SocConfig, programs: &[VProgram]) -> Vec<ExecResult> {
+            SerialMeasurer.measure(soc, programs)
+        }
+
+        fn begin_prepare(
+            &self,
+            op: &Op,
+            soc: &SocConfig,
+            candidates: &[Trace],
+        ) -> PrepareTicket {
+            self.0.borrow_mut().push(candidates.iter().map(|t| t.fnv_hash()).collect());
+            SerialMeasurer.begin_prepare(op, soc, candidates)
+        }
+    }
+
+    /// Warm-start seeds are measured in the first round, consume trial
+    /// budget (not extra trials), and leave the sampled population's PRNG
+    /// stream untouched: round 1 of the seeded run is exactly
+    /// `[seed] ++ round 1 of the seedless run`.
+    #[test]
+    fn seed_traces_are_measured_first_and_do_not_shift_sampling() {
+        let op = Op::square_matmul(64, DType::I8);
+        let soc = SocConfig::saturn(256);
+        let registry = Registry::build(256);
+        // Donor schedule: the best trace of an independent run.
+        let mut db_d = Database::new();
+        let mut m_d = HeuristicCostModel;
+        let donor = tune_op(
+            &op, &soc, &registry, &mut m_d, &SerialMeasurer, &mut db_d,
+            &SearchConfig { trials: 16, seed: 7, ..Default::default() },
+        )
+        .unwrap()
+        .best
+        .trace;
+        let budget = 16;
+        let cold_cfg = SearchConfig { trials: budget, seed: 9, ..Default::default() };
+        let warm_cfg = SearchConfig {
+            // A duplicate seed dedups away instead of burning two trials.
+            seed_traces: vec![donor.clone(), donor.clone()],
+            ..cold_cfg.clone()
+        };
+
+        let cold_m = HashRecordingMeasurer(Default::default());
+        let mut cold_model = HeuristicCostModel;
+        let mut cold_db = Database::new();
+        tune_op(&op, &soc, &registry, &mut cold_model, &cold_m, &mut cold_db, &cold_cfg)
+            .unwrap();
+
+        let warm_m = HashRecordingMeasurer(Default::default());
+        let mut warm_model = HeuristicCostModel;
+        let mut warm_db = Database::new();
+        let mut tuner =
+            OpTuner::new(&op, &soc, &registry, &warm_m, &warm_db, warm_cfg).unwrap();
+        assert_eq!(tuner.pending_seeds(), 1, "duplicate seed must dedup");
+        assert_eq!(tuner.step_round(&mut warm_model, &mut warm_db), RoundOutcome::Progressed);
+        assert_eq!(tuner.pending_seeds(), 0, "seeds drain into the first round");
+        let out = tuner.finish(&mut warm_model, &mut warm_db).unwrap();
+
+        let h = donor.fnv_hash();
+        assert_eq!(warm_db.records()[0].trace.fnv_hash(), h, "seed measured first");
+        assert_eq!(out.trials_measured, budget, "seeds consume budget, not extra trials");
+        // PRNG invariance: the seeded round generated [seed] ++ the
+        // seedless round's exact sample sequence.
+        let cold_round1 = &cold_m.0.borrow()[0];
+        let warm_round1 = &warm_m.0.borrow()[0];
+        assert_eq!(warm_round1[0], h);
+        assert_eq!(&warm_round1[1..], &cold_round1[..]);
     }
 
     /// A tuner stopped mid-budget drains its in-flight round in `finish`.

@@ -12,9 +12,11 @@ pub mod f16;
 pub mod hash;
 pub mod json;
 pub mod prng;
+pub mod snapshot;
 pub mod stats;
 
 pub use f16::{f16_bits_to_f32, f32_to_f16_bits, f16_round};
 pub use hash::{fnv1a_mix, fnv1a_str};
 pub use json::Json;
 pub use prng::Pcg;
+pub use snapshot::SnapshotCell;

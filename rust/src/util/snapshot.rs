@@ -1,0 +1,216 @@
+//! A lock-free snapshot cell: readers clone an `Arc` to an immutable
+//! value without ever touching a mutex; writers swap in a new snapshot
+//! and reclaim the old one after a bounded grace period.
+//!
+//! This is the primitive behind the service database's high-QPS `best`
+//! lookups: commits build a fresh immutable best-schedule map and
+//! [`SnapshotCell::store`] it, while lookup traffic runs
+//! [`SnapshotCell::load`] concurrently at any rate without contending
+//! with the commit path.
+//!
+//! ## Algorithm
+//!
+//! A two-slot userspace RCU. `slots[current]` holds the live snapshot
+//! (as a raw pointer owned by an `Arc` count); the other slot holds the
+//! snapshot from two stores ago, awaiting reclamation. Readers:
+//!
+//! 1. read `current`, increment `readers[current]` (the per-slot pin),
+//! 2. re-check `current` — if it moved, unpin and retry (never having
+//!    dereferenced anything),
+//! 3. clone the `Arc` out of the pinned slot, unpin.
+//!
+//! Writers (serialized by an internal mutex that readers never touch):
+//!
+//! 1. target the *non*-current slot, spin until its pin count drains —
+//!    `current` has pointed away from it since the previous store, so
+//!    any remaining pin is a reader mid-clone, gone in a few
+//!    instructions,
+//! 2. swap the new snapshot in and drop the old `Arc`,
+//! 3. flip `current`.
+//!
+//! The pin-then-recheck order is what makes step 3 of the reader safe: a
+//! stale reader that pinned the slot being reclaimed fails the re-check
+//! (or, if the flip already happened, observes the *new* pointer — the
+//! swap strictly precedes the flip) and never dereferences freed memory.
+//! All atomics are `SeqCst`; this cell swaps once per commit, not per
+//! lookup, so ordering simplicity wins over fence micro-optimization.
+
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Shared cell holding an `Arc<T>` snapshot. `load` is wait-free apart
+/// from retries during a concurrent flip (bounded in practice: a retry
+/// requires a whole `store` to complete inside the reader's two-
+/// instruction window).
+pub struct SnapshotCell<T> {
+    /// Index (0/1) of the slot holding the live snapshot.
+    current: AtomicUsize,
+    /// Per-slot reader pins.
+    readers: [AtomicUsize; 2],
+    /// Raw pointers owned by an `Arc` strong count each; the non-current
+    /// slot may be null before the second store.
+    slots: [AtomicPtr<T>; 2],
+    /// Serializes writers only. Readers never acquire any mutex.
+    writer: Mutex<()>,
+}
+
+// The cell hands out `Arc<T>` clones across threads; `T` must therefore
+// be shareable exactly as `Arc<T>` requires.
+unsafe impl<T: Send + Sync> Send for SnapshotCell<T> {}
+unsafe impl<T: Send + Sync> Sync for SnapshotCell<T> {}
+
+impl<T> SnapshotCell<T> {
+    pub fn new(initial: Arc<T>) -> SnapshotCell<T> {
+        SnapshotCell {
+            current: AtomicUsize::new(0),
+            readers: [AtomicUsize::new(0), AtomicUsize::new(0)],
+            slots: [
+                AtomicPtr::new(Arc::into_raw(initial) as *mut T),
+                AtomicPtr::new(std::ptr::null_mut()),
+            ],
+            writer: Mutex::new(()),
+        }
+    }
+
+    /// Clone the current snapshot. Never blocks on a mutex; safe to call
+    /// from any number of threads concurrently with `store`.
+    pub fn load(&self) -> Arc<T> {
+        loop {
+            let c = self.current.load(SeqCst) & 1;
+            self.readers[c].fetch_add(1, SeqCst);
+            if self.current.load(SeqCst) & 1 != c {
+                // A store flipped under us; we pinned a slot that may be
+                // mid-reclamation. Unpin without dereferencing and retry.
+                self.readers[c].fetch_sub(1, SeqCst);
+                std::hint::spin_loop();
+                continue;
+            }
+            // The pin plus the passed re-check guarantee the slot's Arc
+            // stays alive (the next writer to target this slot waits for
+            // the pin to drain) and that the pointer we read is either
+            // the snapshot `current` named or a newer one (the swap
+            // precedes the flip) — never a freed one.
+            let ptr = self.slots[c].load(SeqCst);
+            debug_assert!(!ptr.is_null(), "current slot is never null");
+            let arc = unsafe {
+                Arc::increment_strong_count(ptr);
+                Arc::from_raw(ptr)
+            };
+            self.readers[c].fetch_sub(1, SeqCst);
+            return arc;
+        }
+    }
+
+    /// Publish a new snapshot. Readers see the old or the new value,
+    /// never a mix; concurrent writers serialize.
+    pub fn store(&self, value: Arc<T>) {
+        let _w = self.writer.lock().unwrap_or_else(PoisonError::into_inner);
+        let c = self.current.load(SeqCst) & 1;
+        let n = 1 - c;
+        // Grace period: slot `n` last served readers before the previous
+        // store flipped `current` away from it; any pin still counted is
+        // a reader between its fetch_add and fetch_sub — a few
+        // instructions with no syscalls — so this spin is bounded.
+        while self.readers[n].load(SeqCst) != 0 {
+            std::hint::spin_loop();
+        }
+        let fresh = Arc::into_raw(value) as *mut T;
+        let old = self.slots[n].swap(fresh, SeqCst);
+        self.current.store(n, SeqCst);
+        if !old.is_null() {
+            // Drop our ownership of the two-stores-ago snapshot; readers
+            // that cloned it still hold their own strong counts.
+            unsafe { drop(Arc::from_raw(old)) };
+        }
+    }
+}
+
+impl<T> Drop for SnapshotCell<T> {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let p = slot.load(SeqCst);
+            if !p.is_null() {
+                unsafe { drop(Arc::from_raw(p)) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn load_returns_latest_store() {
+        let cell = SnapshotCell::new(Arc::new(1u64));
+        assert_eq!(*cell.load(), 1);
+        cell.store(Arc::new(2));
+        assert_eq!(*cell.load(), 2);
+        cell.store(Arc::new(3));
+        cell.store(Arc::new(4)); // exercises reclamation of both slots
+        assert_eq!(*cell.load(), 4);
+    }
+
+    #[test]
+    fn drop_releases_both_slots() {
+        let a = Arc::new(vec![1, 2, 3]);
+        let b = Arc::new(vec![4, 5, 6]);
+        let cell = SnapshotCell::new(Arc::clone(&a));
+        cell.store(Arc::clone(&b));
+        assert_eq!(Arc::strong_count(&a), 2); // cell still owns the old slot
+        drop(cell);
+        assert_eq!(Arc::strong_count(&a), 1);
+        assert_eq!(Arc::strong_count(&b), 1);
+    }
+
+    #[test]
+    fn held_loads_survive_later_stores() {
+        let cell = SnapshotCell::new(Arc::new(String::from("v0")));
+        let pinned = cell.load();
+        for i in 1..10 {
+            cell.store(Arc::new(format!("v{i}")));
+        }
+        assert_eq!(*pinned, "v0"); // the clone outlives any number of swaps
+        assert_eq!(*cell.load(), "v9");
+    }
+
+    /// Readers hammer `load` while a writer publishes monotonically
+    /// increasing versions: every observed value must be a version the
+    /// writer actually published, observed non-decreasing per thread
+    /// (a torn or stale-after-new read would regress).
+    #[test]
+    fn concurrent_loads_see_monotone_published_versions() {
+        const STORES: u64 = 2_000;
+        let cell = SnapshotCell::new(Arc::new(0u64));
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let cell = &cell;
+            let done = &done;
+            let readers: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut last = 0u64;
+                        let mut reads = 0u64;
+                        while !done.load(SeqCst) {
+                            let v = *cell.load();
+                            assert!(v >= last, "snapshot regressed: {v} after {last}");
+                            assert!(v <= STORES, "never-published version {v}");
+                            last = v;
+                            reads += 1;
+                        }
+                        reads
+                    })
+                })
+                .collect();
+            for v in 1..=STORES {
+                cell.store(Arc::new(v));
+            }
+            done.store(true, SeqCst);
+            for r in readers {
+                assert!(r.join().unwrap() > 0);
+            }
+        });
+        assert_eq!(*cell.load(), STORES);
+    }
+}
